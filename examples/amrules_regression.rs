@@ -1,0 +1,73 @@
+//! Regression scenario (paper §7): sequential AMRules (MAMR) vs the
+//! distributed VAMR and HAMR topologies on the electricity and airlines
+//! twins, reporting rules/features (Table 5 shape) and normalized errors
+//! (Figs 14-16 shape).
+
+use std::sync::Arc;
+
+use samoa::core::model::Regressor;
+use samoa::engine::LocalEngine;
+use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use samoa::regressors::amrules::{AMRules, AMRulesConfig};
+use samoa::regressors::{hamr, vamr};
+use samoa::streams::StreamSource;
+use samoa::topology::Event;
+
+fn main() {
+    let n = 60_000u64;
+    for ds in ["electricity", "airlines", "waveform"] {
+        println!("--- {ds} ({n} instances) ---");
+
+        // MAMR
+        let mut stream = samoa::experiments::regression_stream(ds, 3, n);
+        let range = stream.schema().label_range();
+        let mut model = AMRules::new(stream.schema().clone(), AMRulesConfig::default());
+        let mut measure = samoa::evaluation::measures::RegressionMeasure::new(range, n);
+        // cap explicitly: the waveform generator is unbounded
+        for _ in 0..n {
+            let Some(inst) = stream.next_instance() else { break };
+            if let Some(y) = inst.numeric_label() {
+                measure.add(y, model.predict(&inst));
+            }
+            model.train(&inst);
+        }
+        println!(
+            "MAMR   : nMAE={:.4} nRMSE={:.4} rules(created/removed/live)={}/{}/{} features={} mem={:.2}MB",
+            measure.nmae(),
+            measure.nrmse(),
+            model.stats.rules_created,
+            model.stats.rules_removed,
+            model.n_rules(),
+            model.stats.features_created,
+            model.model_bytes() as f64 / 1e6,
+        );
+
+        // VAMR p=4
+        let mut stream = samoa::experiments::regression_stream(ds, 3, n);
+        let sink = EvalSink::new(0, range, n);
+        let sink2 = Arc::clone(&sink);
+        let (topo, handles) =
+            vamr::build_topology(stream.schema(), &AMRulesConfig::default(), 4, move |_| {
+                Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+            });
+        let source =
+            (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+        LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+        let m = sink.regression.lock().unwrap().clone();
+        println!("VAMR p4: nMAE={:.4} nRMSE={:.4}", m.nmae(), m.nrmse());
+
+        // HAMR r=2 MAs, 2 learners
+        let mut stream = samoa::experiments::regression_stream(ds, 3, n);
+        let sink = EvalSink::new(0, range, n);
+        let sink2 = Arc::clone(&sink);
+        let (topo, handles) =
+            hamr::build_topology(stream.schema(), &AMRulesConfig::default(), 2, 2, move |_| {
+                Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+            });
+        let source =
+            (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+        LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+        let m = sink.regression.lock().unwrap().clone();
+        println!("HAMR r2: nMAE={:.4} nRMSE={:.4}", m.nmae(), m.nrmse());
+    }
+}

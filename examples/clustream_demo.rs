@@ -1,0 +1,46 @@
+//! CluStream (paper §5): online micro-clusters + periodic macro k-means
+//! over an evolving stream of Gaussian blobs, with the nearest-centroid
+//! assignment running through the XLA `cluster` artifact (MXU-mapped
+//! distance matmul) when artifacts are built.
+
+use samoa::clustering::clustream::{CluStream, CluStreamConfig};
+use samoa::common::Rng;
+use samoa::core::instance::{Instance, Label};
+use samoa::core::Schema;
+
+fn main() {
+    println!("backend: {:?}", samoa::runtime::backend_in_use());
+    let d = 16usize;
+    let schema = Schema::classification("blobs", Schema::all_numeric(d), 2);
+    let config = CluStreamConfig { max_micro: 60, k: 4, macro_period: 20_000, ..Default::default() };
+    let mut cs = CluStream::new(&schema, config, 99);
+    let mut rng = Rng::new(7);
+
+    // four blobs; one drifts after half the stream
+    let centers = [0.0f32, 8.0, 16.0, 24.0];
+    let n = 120_000;
+    for i in 0..n {
+        let b = i % 4;
+        let drift = if b == 3 && i > n / 2 { 10.0 } else { 0.0 };
+        let vals: Vec<f32> =
+            (0..d).map(|_| centers[b] + drift + 0.5 * rng.gaussian() as f32).collect();
+        cs.add(&Instance::dense(vals, Label::None));
+    }
+    cs.flush();
+    cs.run_macro();
+
+    println!(
+        "instances={n} micro-clusters={} macro-runs={} memory={:.2}MB",
+        cs.n_micro(),
+        cs.macro_runs,
+        cs.mem_bytes() as f64 / 1e6
+    );
+    println!("macro centroids (mean of coords):");
+    for (i, c) in cs.macro_centers.chunks(d).enumerate() {
+        let m: f32 = c.iter().sum::<f32>() / d as f32;
+        println!("  k{i}: {m:.2}");
+    }
+    let radii: Vec<String> =
+        cs.micro_clusters().iter().take(8).map(|m| format!("{:.2}", m.radius())).collect();
+    println!("first micro-cluster radii: {radii:?}");
+}

@@ -1,0 +1,112 @@
+//! END-TO-END driver: the full three-layer system on a real small
+//! workload, proving all layers compose (EXPERIMENTS.md §E2E).
+//!
+//! Pipeline: covtype twin (581k × 54, 7 classes; or the real
+//! `data/covtype.arff` if present) → VHT topology (1 MA + 4 LS + evaluator)
+//! on the **threaded engine** with real queues/backpressure; the LS split
+//! criterion runs through the **AOT XLA artifact** compiled from the
+//! Pallas kernel (or the native twin if artifacts are absent). Reports the
+//! paper's headline metrics: accuracy, throughput, per-stream traffic,
+//! model memory.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_prequential [-- n]
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree, LeafPrediction};
+use samoa::classifiers::vht::{build_topology, SplitBuffering, VhtConfig};
+use samoa::core::model::Classifier;
+use samoa::engine::ThreadedEngine;
+use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use samoa::experiments::dataset_stream;
+use samoa::streams::StreamSource;
+use samoa::topology::Event;
+
+fn main() {
+    let n: u64 = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(150_000);
+    println!("=== samoa-rs end-to-end prequential run ===");
+    println!("backend: {:?} (artifacts: {:?})", samoa::runtime::backend_in_use(),
+        samoa::runtime::registry::artifacts_dir());
+
+    // --- baseline: sequential tree ("moa" row)
+    let mut stream = dataset_stream("covtype", 42);
+    let mut tree = HoeffdingTree::new(
+        stream.schema().clone(),
+        HTConfig { leaf_prediction: LeafPrediction::MajorityClass, ..Default::default() },
+    );
+    let started = Instant::now();
+    let mut correct = 0u64;
+    for _ in 0..n {
+        let Some(inst) = stream.next_instance() else { break };
+        if tree.predict(&inst) == inst.class() {
+            correct += 1;
+        }
+        tree.train(&inst);
+    }
+    let moa_wall = started.elapsed().as_secs_f64();
+    println!(
+        "moa      : acc={:.3} wall={:.2}s throughput={:.0}/s model={:.2}MB",
+        correct as f64 / n as f64,
+        moa_wall,
+        n as f64 / moa_wall,
+        tree.model_bytes() as f64 / 1e6
+    );
+
+    // --- distributed VHT wok p=4, threaded engine
+    for (label, buffering) in [
+        ("VHT wok  (p=4)", SplitBuffering::Discard),
+        ("VHT wk(10k) p=4", SplitBuffering::Buffer(10_000)),
+    ] {
+        let mut stream = dataset_stream("covtype", 42);
+        let config = VhtConfig { parallelism: 4, buffering, ..Default::default() };
+        let sink = EvalSink::new(stream.schema().n_classes(), 1.0, n / 5);
+        let sink2 = Arc::clone(&sink);
+        let (topo, handles) = build_topology(stream.schema(), &config, move |_| {
+            Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+        });
+        let source =
+            (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+        let started = Instant::now();
+        let mut ls_bytes = 0usize;
+        let mut ma_bytes = 0usize;
+        let metrics = ThreadedEngine::default().run(&topo, handles.entry, source, |pid, _, p| {
+            if pid == handles.ma.0 {
+                ma_bytes += p.mem_bytes();
+            } else if pid == handles.ls.0 {
+                ls_bytes += p.mem_bytes();
+            }
+        });
+        let wall = started.elapsed().as_secs_f64();
+        println!(
+            "{label}: acc={:.3} wall={:.2}s throughput={:.0}/s ma={:.2}MB ls(total)={:.2}MB",
+            sink.accuracy(),
+            wall,
+            metrics.source_instances as f64 / wall,
+            ma_bytes as f64 / 1e6,
+            ls_bytes as f64 / 1e6,
+        );
+        println!(
+            "          accuracy curve: {:?}",
+            sink.classification
+                .lock()
+                .unwrap()
+                .curve
+                .iter()
+                .map(|(at, a)| format!("{}k:{:.3}", at / 1000, a))
+                .collect::<Vec<_>>()
+        );
+        println!(
+            "          traffic: instances={} attributes={} ({} KB) compute={} local-result={} drop={}",
+            metrics.streams[0].events,
+            metrics.streams[handles.streams.attribute.0].events,
+            metrics.streams[handles.streams.attribute.0].bytes / 1024,
+            metrics.streams[handles.streams.compute.0].events,
+            metrics.streams[handles.streams.local_result.0].events,
+            metrics.streams[handles.streams.drop_leaf.0].events,
+        );
+    }
+    println!("=== done ===");
+}

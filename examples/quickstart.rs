@@ -1,0 +1,57 @@
+//! Quickstart: train a Hoeffding tree and a (local-mode) VHT on a dense
+//! synthetic stream — the README's 30-second tour.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+use samoa::classifiers::vht::{build_topology, VhtConfig};
+use samoa::engine::LocalEngine;
+use samoa::evaluation::prequential::{
+    prequential_run, EvalSink, EvaluatorProcessor, PrequentialConfig,
+};
+use samoa::streams::random_tree::RandomTreeGenerator;
+use samoa::streams::StreamSource;
+use samoa::topology::Event;
+
+fn main() {
+    println!("criterion backend: {:?}", samoa::runtime::backend_in_use());
+
+    // 1. sequential Hoeffding tree (the paper's "moa" baseline)
+    let mut stream = RandomTreeGenerator::new(10, 10, 2, 42);
+    let mut tree = HoeffdingTree::new(stream.schema().clone(), HTConfig::default());
+    let result = prequential_run(
+        &mut tree,
+        &mut stream,
+        &PrequentialConfig { max_instances: 100_000, report_every: 20_000 },
+    );
+    println!(
+        "hoeffding tree : accuracy={:.3} kappa={:.3} throughput={:.0}/s leaves={}",
+        result.final_accuracy(),
+        result.measure.kappa(),
+        result.throughput(),
+        tree.n_leaves(),
+    );
+
+    // 2. the same stream through the distributed VHT topology (p = 4 local
+    //    statistics processors) on the deterministic local engine
+    let mut stream = RandomTreeGenerator::new(10, 10, 2, 42);
+    let config = VhtConfig { parallelism: 4, ..Default::default() };
+    let sink = EvalSink::new(stream.schema().n_classes(), 1.0, 20_000);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = build_topology(stream.schema(), &config, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+    let source =
+        (0..100_000u64).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let metrics = LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+    println!(
+        "VHT (p=4)      : accuracy={:.3} events={} attribute-bytes={}",
+        sink.accuracy(),
+        metrics.total_events(),
+        metrics.streams[handles.streams.attribute.0].bytes,
+    );
+}

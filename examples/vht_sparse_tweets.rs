@@ -1,0 +1,64 @@
+//! Sparse scenario (paper §6.3, Figs 5/7/9): VHT over the random-tweet
+//! bag-of-words stream — vertical parallelism only ships the ~15 non-zero
+//! attributes per instance, which is what makes high-dimensional sparse
+//! streams cheap for VHT and fatal for sharding's per-shard full models.
+
+use std::sync::Arc;
+
+use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree, LeafPrediction};
+use samoa::classifiers::sharding::Sharding;
+use samoa::classifiers::vht::{build_topology, VhtConfig};
+use samoa::core::model::Classifier;
+use samoa::engine::LocalEngine;
+use samoa::evaluation::prequential::{
+    prequential_run, EvalSink, EvaluatorProcessor, PrequentialConfig,
+};
+use samoa::streams::random_tweet::RandomTweetGenerator;
+use samoa::streams::StreamSource;
+use samoa::topology::Event;
+
+fn main() {
+    let dims = [100u32, 1000, 10_000];
+    let n = 100_000u64;
+    println!("| dim | algorithm | accuracy | model MB |");
+    println!("|---|---|---|---|");
+    for dim in dims {
+        // VHT sparse, p=4
+        let mut stream = RandomTweetGenerator::new(dim, 7);
+        let config = VhtConfig { parallelism: 4, sparse: true, ..Default::default() };
+        let sink = EvalSink::new(2, 1.0, n);
+        let sink2 = Arc::clone(&sink);
+        let (topo, handles) = build_topology(stream.schema(), &config, move |_| {
+            Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+        });
+        let source =
+            (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+        let mut ls_bytes = 0;
+        LocalEngine::new().run(&topo, handles.entry, source, |inst| {
+            ls_bytes = inst[handles.ls.0].iter().map(|p| p.mem_bytes()).sum::<usize>();
+        });
+        println!("| {dim} | VHT wok p=4 | {:.3} | {:.2} |", sink.accuracy(), ls_bytes as f64 / 1e6);
+
+        // sharding baseline: p full models
+        let mut stream = RandomTweetGenerator::new(dim, 7);
+        let mut sharding = Sharding::new(
+            stream.schema().clone(),
+            HTConfig {
+                sparse: true,
+                leaf_prediction: LeafPrediction::MajorityClass,
+                ..Default::default()
+            },
+            4,
+        );
+        let r = prequential_run(
+            &mut sharding,
+            &mut stream,
+            &PrequentialConfig { max_instances: n, report_every: n },
+        );
+        println!(
+            "| {dim} | sharding p=4 | {:.3} | {:.2} |",
+            r.final_accuracy(),
+            r.model_bytes as f64 / 1e6
+        );
+    }
+}

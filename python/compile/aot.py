@@ -1,0 +1,67 @@
+"""AOT: lower each L2 entrypoint to HLO *text* for the rust PJRT runtime.
+
+HLO text (not serialized HloModuleProto, not jax.export): jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects with `proto.id() <= INT_MAX`.
+The HLO text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Produces one `<name>.hlo.txt` per entry in model.ENTRYPOINTS plus a
+`manifest.txt` recording shapes, for the rust artifact registry to sanity-
+check against rust/src/runtime/shapes.rs.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text, with return_tuple=True.
+
+    return_tuple=True means the rust side always unwraps a tuple literal
+    (Literal::to_tuple), uniformly for single- and multi-output fns.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    args = model.example_args()
+    written = {}
+    for name, fn in model.ENTRYPOINTS.items():
+        lowered = jax.jit(fn).lower(*args[name])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written[name] = (path, len(text))
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(f"ig_shape {model.IG_A} {model.IG_V} {model.IG_C}\n")
+        f.write(f"sdr_shape {model.SDR_A} {model.SDR_B}\n")
+        f.write(f"cluster_shape {model.CL_N} {model.CL_K} {model.CL_D}\n")
+        for name, (path, size) in written.items():
+            f.write(f"artifact {name} {os.path.basename(path)} {size}\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    a = ap.parse_args()
+    for name, (path, size) in lower_all(a.out_dir).items():
+        print(f"wrote {name}: {size} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: nearest micro-cluster assignment for CluStream.
+
+The CluStream processor keeps K micro-clusters and must, for every incoming
+instance, find the closest centroid (then absorb-or-spawn). Batched over N
+instances this is a [N, D] × [D, K] distance computation — the one kernel in
+this system with a matmul at its core, expressed so the x·cᵀ term hits the
+MXU on a real TPU (bfloat16-friendly tile shapes, f32 accumulation).
+
+Dead micro-cluster slots (weight 0, used for padding K up to the compile-
+time shape) are masked to +inf before the argmin. interpret=True (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One tile: N=128 points × K=128 clusters × D≤128 dims → all operands
+# comfortably in VMEM; the matmul is a single 128×128×128 MXU pass.
+BLOCK_N = 128
+
+
+def _assign_kernel(x_ref, c_ref, w_ref, idx_ref, d2_ref):
+    x = x_ref[...].astype(jnp.float32)          # [BN, D]
+    c = c_ref[...].astype(jnp.float32)          # [K, D]
+    w = w_ref[...].astype(jnp.float32)          # [K]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # [BN, 1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]        # [1, K]
+    # MXU: [BN, D] @ [D, K]
+    d2 = x2 - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32) + c2
+    d2 = jnp.maximum(d2, 0.0)
+    big = jnp.float32(3.4e38)
+    d2 = jnp.where(w[None, :] > 0, d2, big)
+    idx_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    d2_ref[...] = jnp.min(d2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def cluster_assign(points, centers, weights, block_n=BLOCK_N):
+    """points f32[N,D], centers f32[K,D], weights f32[K] → (i32[N], f32[N])."""
+    n, d = points.shape
+    k, d2 = centers.shape
+    assert d == d2 and weights.shape == (k,)
+    assert n % block_n == 0, f"N={n} not a multiple of block {block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centers, weights)

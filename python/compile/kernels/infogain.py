@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: information gain over a local-statistics counter table.
+
+The VHT local-statistics processor stores counters n_ijk as a dense block
+``n[A, V, C]`` (attribute × value-bin × class). On a ``compute`` content
+event it must produce the split-criterion value G_l(X_a) for every attribute
+it tracks. That reduction is the numeric hot-spot of the whole SAMOA
+pipeline and is what we express as a Pallas kernel.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the attribute axis is the
+grid; each grid step processes a ``[BA, V, C]`` tile streamed HBM→VMEM by
+the BlockSpec — the on-chip analogue of SAMOA sharding attributes across
+local-statistics processors. V and C are compile-time constants (histogram
+bins / class count after padding), so every reduction below is over VMEM-
+resident lanes. interpret=True everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so the kernel is lowered through the interpreter to
+plain HLO (same numerics, same blocking structure).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+# Attribute-axis tile. [64, 16, 8] f32 = 32 KiB per tile — far inside a
+# TPU core's ~16 MiB VMEM even with double buffering; chosen to keep the
+# lane dimension (C=8 padded) dense and the sublane dim (V=16) aligned.
+BLOCK_A = 64
+
+
+def _entropy_sum(counts, axis):
+    """-sum p log2 p with empty distributions contributing exactly 0."""
+    total = jnp.sum(counts, axis=axis, keepdims=True)
+    p = counts / jnp.maximum(total, _EPS)
+    logp = jnp.log2(jnp.maximum(p, _EPS))
+    return -jnp.sum(jnp.where(counts > 0, p * logp, 0.0), axis=axis)
+
+
+def _infogain_kernel(n_ref, gain_ref, split_ref):
+    """One grid step: [BA, V, C] counter tile → [BA] gain + split entropy."""
+    n = n_ref[...].astype(jnp.float32)
+    class_counts = jnp.sum(n, axis=1)            # [BA, C]
+    value_counts = jnp.sum(n, axis=2)            # [BA, V]
+    total = jnp.sum(class_counts, axis=1)        # [BA]
+
+    h_before = _entropy_sum(class_counts, axis=1)
+    h_per_value = _entropy_sum(n, axis=2)        # [BA, V]
+    w = value_counts / jnp.maximum(total[:, None], _EPS)
+    h_after = jnp.sum(w * h_per_value, axis=1)
+
+    gain_ref[...] = jnp.where(total > 0, h_before - h_after, 0.0)
+    split_ref[...] = _entropy_sum(value_counts, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_a",))
+def infogain(n, block_a=BLOCK_A):
+    """Per-attribute information gain. n: f32[A, V, C], A % block_a == 0.
+
+    Returns (gain: f32[A], split_entropy: f32[A]).
+    """
+    a, v, c = n.shape
+    assert a % block_a == 0, f"A={a} not a multiple of block {block_a}"
+    grid = (a // block_a,)
+    return pl.pallas_call(
+        _infogain_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_a, v, c), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((block_a,), lambda i: (i,)),
+            pl.BlockSpec((block_a,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((a,), jnp.float32),
+            jax.ShapeDtypeStruct((a,), jnp.float32),
+        ],
+        interpret=True,
+    )(n)

@@ -1,0 +1,111 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth for the L1 kernels (pytest compares
+kernel output against these) and the semantic contract for the native rust
+implementations in ``rust/src/core/criterion.rs`` (cross-checked by the
+rust integration test ``runtime_matches_native``).
+
+All functions operate on padded, fixed-shape tensors — padding rows/columns
+are all-zero and must contribute exactly zero to every output (0·log 0 = 0).
+"""
+
+import jax.numpy as jnp
+
+# Guard for log(0)/div-by-0; mirrors core::criterion::EPS on the rust side.
+# We clamp denominators rather than add eps, so exact zeros stay exact.
+_EPS = 1e-12
+
+
+def _entropy(counts, axis=-1):
+    """Shannon entropy (bits) of unnormalized count vectors along ``axis``.
+
+    Empty distributions (all-zero counts, i.e. padding) yield entropy 0.
+    """
+    total = jnp.sum(counts, axis=axis, keepdims=True)
+    p = counts / jnp.maximum(total, _EPS)
+    logp = jnp.log2(jnp.maximum(p, _EPS))
+    return -jnp.sum(jnp.where(counts > 0, p * logp, 0.0), axis=axis)
+
+
+def infogain_ref(n):
+    """Information gain per attribute.
+
+    n: f32[A, V, C] — counters n_ijk for attribute a, value v, class c
+       (one leaf's local-statistics table, padded with zeros).
+
+    Returns (gain: f32[A], split_entropy: f32[A]):
+      gain[a] = H(class) - sum_v (N_v/N) H(class | X_a = v)
+      split_entropy[a] = entropy of the value marginals (gain-ratio
+        diagnostics; 0 for padding attributes).
+
+    Padding attributes (all-zero [V,C] blocks) get gain 0.
+    """
+    n = n.astype(jnp.float32)
+    class_counts = jnp.sum(n, axis=1)          # [A, C]
+    value_counts = jnp.sum(n, axis=2)          # [A, V]
+    total = jnp.sum(class_counts, axis=1)      # [A]
+
+    h_before = _entropy(class_counts, axis=1)  # [A]
+    h_per_value = _entropy(n, axis=2)          # [A, V]
+    w = value_counts / jnp.maximum(total[:, None], _EPS)
+    h_after = jnp.sum(w * h_per_value, axis=1)  # [A]
+
+    gain = jnp.where(total > 0, h_before - h_after, 0.0)
+    split_h = _entropy(value_counts, axis=1)
+    return gain, split_h
+
+
+def sdr_ref(stats):
+    """Standard-deviation reduction per attribute and candidate threshold.
+
+    stats: f32[A, B, 3] — per attribute a and histogram bin b, the
+      (count, sum, sum-of-squares) of the regression target over instances
+      whose attribute value fell in bin b. Candidate threshold t_b splits
+      bins [0..b] (left) vs (b..B) (right).
+
+    Returns sdr: f32[A, B]:
+        sdr[a,b] = sd(all) - (nL/N)·sd(left) - (nR/N)·sd(right)
+    Thresholds with an empty side get SDR 0 (invalid), as does padding.
+    """
+    stats = stats.astype(jnp.float32)
+    cum = jnp.cumsum(stats, axis=1)            # [A, B, 3] left stats
+    tot = cum[:, -1:, :]                       # [A, 1, 3]
+    left = cum
+    right = tot - cum
+
+    def sd(s):
+        n, sm, sq = s[..., 0], s[..., 1], s[..., 2]
+        mean = sm / jnp.maximum(n, _EPS)
+        var = sq / jnp.maximum(n, _EPS) - mean * mean
+        return jnp.sqrt(jnp.maximum(var, 0.0))
+
+    n_tot = tot[..., 0]                        # [A, 1]
+    n_l, n_r = left[..., 0], right[..., 0]     # [A, B]
+    sdr = sd(tot) - (n_l / jnp.maximum(n_tot, _EPS)) * sd(left) \
+                  - (n_r / jnp.maximum(n_tot, _EPS)) * sd(right)
+    valid = (n_l > 0) & (n_r > 0)
+    return jnp.where(valid, sdr, 0.0)
+
+
+def cluster_assign_ref(points, centers, weights):
+    """Nearest-micro-cluster assignment for CluStream.
+
+    points:  f32[N, D] batch of incoming instances (zero-padded rows ok)
+    centers: f32[K, D] micro-cluster centroids
+    weights: f32[K]    micro-cluster weights; weight 0 marks an empty slot
+                       (padding) which must never win the argmin.
+
+    Returns (idx: i32[N], dist2: f32[N]): nearest live centroid index and
+    its squared distance. Uses |x|^2 - 2 x·c + |c|^2 so the x·c term is a
+    matmul (MXU path on real TPU).
+    """
+    points = points.astype(jnp.float32)
+    centers = centers.astype(jnp.float32)
+    x2 = jnp.sum(points * points, axis=1, keepdims=True)        # [N,1]
+    c2 = jnp.sum(centers * centers, axis=1)[None, :]            # [1,K]
+    d2 = x2 - 2.0 * (points @ centers.T) + c2                   # [N,K]
+    d2 = jnp.maximum(d2, 0.0)
+    big = jnp.float32(3.4e38)
+    d2 = jnp.where(weights[None, :] > 0, d2, big)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return idx, jnp.min(d2, axis=1)

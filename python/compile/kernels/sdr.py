@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: standard-deviation reduction for AMRules expansion.
+
+Each AMRules learner accumulates, per rule, per attribute and histogram bin,
+the (count, sum, sum-of-squares) of the regression target. When a rule has
+seen N_m new instances it evaluates every candidate feature "attribute a,
+threshold after bin b" by the SDR measure (Ikonomovska et al.):
+
+    sdr(a, b) = sd(all) - nL/N * sd(left) - nR/N * sd(right)
+
+The kernel computes the full [A, B] SDR surface in one pass; the rust
+learner then extracts best / second-best and applies the Hoeffding bound.
+
+Grid is over attribute tiles, mirroring infogain.py; the cumulative sum
+along the bin axis is VMEM-resident. interpret=True (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+# [32, 64, 3] f32 tiles = 24 KiB; bins B is the sublane axis.
+BLOCK_A = 32
+
+
+def _sd(n, sm, sq):
+    mean = sm / jnp.maximum(n, _EPS)
+    var = sq / jnp.maximum(n, _EPS) - mean * mean
+    return jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def _sdr_kernel(stats_ref, sdr_ref):
+    """One grid step: [BA, B, 3] bin stats → [BA, B] SDR surface."""
+    s = stats_ref[...].astype(jnp.float32)
+    cum = jnp.cumsum(s, axis=1)                 # left stats  [BA, B, 3]
+    tot = cum[:, -1:, :]                        # [BA, 1, 3]
+    right = tot - cum
+
+    n_l, n_r = cum[..., 0], right[..., 0]
+    n_tot = tot[..., 0]
+    sd_tot = _sd(tot[..., 0], tot[..., 1], tot[..., 2])
+    sd_l = _sd(cum[..., 0], cum[..., 1], cum[..., 2])
+    sd_r = _sd(right[..., 0], right[..., 1], right[..., 2])
+
+    sdr = sd_tot - (n_l / jnp.maximum(n_tot, _EPS)) * sd_l \
+                 - (n_r / jnp.maximum(n_tot, _EPS)) * sd_r
+    valid = (n_l > 0) & (n_r > 0)
+    sdr_ref[...] = jnp.where(valid, sdr, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_a",))
+def sdr(stats, block_a=BLOCK_A):
+    """SDR surface. stats: f32[A, B, 3], A % block_a == 0 → f32[A, B]."""
+    a, b, three = stats.shape
+    assert three == 3
+    assert a % block_a == 0, f"A={a} not a multiple of block {block_a}"
+    grid = (a // block_a,)
+    return pl.pallas_call(
+        _sdr_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_a, b, 3), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_a, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a, b), jnp.float32),
+        interpret=True,
+    )(stats)

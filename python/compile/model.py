@@ -1,0 +1,90 @@
+"""L2: the JAX compute graphs SAMOA's processors call at runtime.
+
+Each public function here is one AOT artifact (see aot.py). They are thin
+compositions over the L1 Pallas kernels plus the pre/post arithmetic that
+belongs on-device (Hoeffding bound, top-2 selection) so that the rust side
+receives decision-ready scalars and never re-enters Python.
+
+Shapes are compile-time constants — the rust local-statistics processors
+pad/chunk their tables to these (runtime::gain / runtime::sdr):
+
+  infogain : n[A=64, V=16, C=8]            → gain[64], split_h[64]
+  sdr      : stats[A=32, B=64, 3]          → sdr[32, 64]
+  cluster  : x[N=128, D=64], c[K=128, D=64], w[K=128] → idx[128], d2[128]
+  top2     : folded into infogain/sdr artifacts (best/second-best + ids)
+"""
+
+import jax.numpy as jnp
+
+from .kernels.cluster import cluster_assign
+from .kernels.infogain import infogain
+from .kernels.sdr import sdr
+
+# Compile-time shapes — keep in sync with rust/src/runtime/shapes.rs.
+IG_A, IG_V, IG_C = 64, 16, 8
+SDR_A, SDR_B = 32, 64
+CL_N, CL_K, CL_D = 128, 128, 64
+
+
+def _top2(values):
+    """(best_idx, best, second_best) over a 1-D vector, on-device."""
+    best_idx = jnp.argmax(values)
+    best = values[best_idx]
+    masked = values.at[best_idx].set(-jnp.inf)
+    second = jnp.max(masked)
+    return best_idx.astype(jnp.int32), best, second
+
+
+def infogain_top2(n):
+    """VHT `compute` event: counter table → per-attribute gains + top-2.
+
+    n: f32[IG_A, IG_V, IG_C]. Returns a 4-tuple
+    (gain[IG_A], best_idx, best_gain, second_gain) — the local-statistics
+    processor forwards (best, second) as its local-result content event and
+    keeps the full gain vector for diagnostics/ablation.
+    """
+    gain, _split_h = infogain(n)
+    best_idx, best, second = _top2(gain)
+    return gain, best_idx, best, second
+
+
+def sdr_best(stats):
+    """AMRules expansion: bin stats → SDR surface + flattened top-2.
+
+    stats: f32[SDR_A, SDR_B, 3]. Returns
+    (sdr[SDR_A, SDR_B], best_flat_idx, best, second) with flat index
+    best_flat_idx = a * SDR_B + b.
+    """
+    surface = sdr(stats)
+    flat = surface.reshape(-1)
+    best_idx, best, second = _top2(flat)
+    return surface, best_idx, best, second
+
+
+def cluster_step(points, centers, weights):
+    """CluStream batch assignment: see kernels/cluster.py."""
+    idx, d2 = cluster_assign(points, centers, weights)
+    return idx, d2
+
+
+def example_args():
+    """Example (ShapeDtypeStruct-able) args for each artifact, for aot.py."""
+    import jax
+
+    f32 = jnp.float32
+    return {
+        "infogain": (jax.ShapeDtypeStruct((IG_A, IG_V, IG_C), f32),),
+        "sdr": (jax.ShapeDtypeStruct((SDR_A, SDR_B, 3), f32),),
+        "cluster": (
+            jax.ShapeDtypeStruct((CL_N, CL_D), f32),
+            jax.ShapeDtypeStruct((CL_K, CL_D), f32),
+            jax.ShapeDtypeStruct((CL_K,), f32),
+        ),
+    }
+
+
+ENTRYPOINTS = {
+    "infogain": infogain_top2,
+    "sdr": sdr_best,
+    "cluster": cluster_step,
+}

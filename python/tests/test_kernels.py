@@ -1,0 +1,229 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the build.
+
+Every Pallas kernel must match its pure-jnp reference (ref.py) to float32
+tolerance on dense random inputs, adversarial inputs (zeros, padding,
+single-class leaves), and hypothesis-generated shape/value sweeps.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import cluster_assign_ref, infogain_ref, sdr_ref
+from compile.kernels.infogain import infogain
+from compile.kernels.sdr import sdr
+from compile.kernels.cluster import cluster_assign
+from compile import model
+
+def counters(a=64, v=16, c=8, scale=50.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.random((a, v, c)).astype(np.float32) * scale).round()
+
+
+# ---------------------------------------------------------------- infogain
+
+class TestInfogain:
+    def test_matches_ref_random(self):
+        n = counters(seed=1)
+        g, s = infogain(n)
+        gr, sr = infogain_ref(n)
+        np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(s, sr, rtol=1e-5, atol=1e-5)
+
+    def test_all_zero_padding_gains_zero(self):
+        n = np.zeros((64, 16, 8), np.float32)
+        g, s = infogain(n)
+        assert np.all(g == 0.0) and np.all(s == 0.0)
+
+    def test_partial_padding(self):
+        n = counters(seed=2)
+        n[40:] = 0.0  # attributes 40.. are padding
+        g, _ = infogain(n)
+        gr, _ = infogain_ref(n)
+        assert np.all(g[40:] == 0.0)
+        np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+
+    def test_pure_leaf_zero_gain(self):
+        # all mass in one class -> H_before = 0 -> gain must be 0
+        n = np.zeros((64, 16, 8), np.float32)
+        n[:, :, 3] = 7.0
+        g, _ = infogain(n)
+        np.testing.assert_allclose(g, 0.0, atol=1e-6)
+
+    def test_perfect_split_gain_equals_class_entropy(self):
+        # attribute 0: value v fully determines class v%2 over 2 classes
+        n = np.zeros((64, 16, 8), np.float32)
+        for v in range(16):
+            n[0, v, v % 2] = 10.0
+        g, _ = infogain(n)
+        # H(class) = 1 bit (balanced 2 classes), H(class|value) = 0
+        np.testing.assert_allclose(g[0], 1.0, rtol=1e-5)
+
+    def test_gain_nonnegative_many_seeds(self):
+        for seed in range(8):
+            g, _ = infogain(counters(seed=seed))
+            assert np.all(np.asarray(g) >= -1e-5)
+
+    def test_multi_block_grid(self):
+        n = counters(a=256, seed=3)
+        g, _ = infogain(n)
+        gr, _ = infogain_ref(n)
+        np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        blocks=st.integers(1, 3),
+        v=st.sampled_from([2, 4, 16]),
+        c=st.sampled_from([2, 8]),
+        scale=st.floats(1.0, 1e4),
+    )
+    def test_hypothesis_sweep(self, seed, blocks, v, c, scale):
+        rng = np.random.default_rng(seed)
+        a = 64 * blocks
+        n = (rng.random((a, v, c)).astype(np.float32) * scale).round()
+        # randomly zero some attribute rows (padding) and value slices
+        mask = rng.random(a) < 0.2
+        n[mask] = 0.0
+        g, s = infogain(n)
+        gr, sr = infogain_ref(n)
+        np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s, sr, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------------- sdr
+
+def bin_stats(a=32, b=64, seed=0, n_scale=20.0):
+    """Random but *consistent* (count, sum, sumsq) triples: generate raw
+    samples per bin so that sumsq >= sum^2/count always holds."""
+    rng = np.random.default_rng(seed)
+    out = np.zeros((a, b, 3), np.float32)
+    counts = rng.integers(0, int(n_scale), size=(a, b))
+    for i in range(a):
+        for j in range(b):
+            k = counts[i, j]
+            if k:
+                ys = rng.normal(loc=rng.normal(), scale=1.0, size=k)
+                out[i, j] = (k, ys.sum(), (ys * ys).sum())
+    return out
+
+
+class TestSdr:
+    def test_matches_ref_random(self):
+        s = bin_stats(seed=1)
+        np.testing.assert_allclose(sdr(s), sdr_ref(s), rtol=1e-4, atol=1e-4)
+
+    def test_zero_padding(self):
+        s = np.zeros((32, 64, 3), np.float32)
+        assert np.all(np.asarray(sdr(s)) == 0.0)
+
+    def test_empty_side_invalid(self):
+        # all mass in bin 0 -> only threshold b=0 has non-empty left,
+        # but its right side is empty -> entire surface must be 0
+        s = np.zeros((32, 64, 3), np.float32)
+        s[:, 0] = (10.0, 5.0, 40.0)
+        assert np.all(np.asarray(sdr(s)) == 0.0)
+
+    def test_perfect_separation_max_at_boundary(self):
+        # bins 0..31 contain target=0, bins 32.. contain target=10:
+        # SDR maximal at threshold 31
+        s = np.zeros((32, 64, 3), np.float32)
+        s[:, :32] = (5.0, 0.0, 0.0)
+        s[:, 32:] = (5.0, 50.0, 500.0)
+        surf = np.asarray(sdr(s))
+        assert np.all(surf.argmax(axis=1) == 31)
+
+    def test_sdr_nonnegative(self):
+        for seed in range(5):
+            surf = np.asarray(sdr(bin_stats(seed=seed)))
+            assert np.all(surf >= -1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_scale=st.floats(1.0, 50.0))
+    def test_hypothesis_sweep(self, seed, n_scale):
+        s = bin_stats(seed=seed, n_scale=n_scale)
+        np.testing.assert_allclose(sdr(s), sdr_ref(s), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------- cluster
+
+class TestCluster:
+    def _case(self, seed=0, n=128, k=128, d=64, live=32):
+        rng = np.random.default_rng(seed)
+        pts = rng.normal(size=(n, d)).astype(np.float32)
+        ctr = rng.normal(size=(k, d)).astype(np.float32)
+        w = np.zeros(k, np.float32)
+        w[:live] = rng.random(live).astype(np.float32) + 0.1
+        return pts, ctr, w
+
+    def test_matches_ref(self):
+        pts, ctr, w = self._case(seed=1)
+        idx, d2 = cluster_assign(pts, ctr, w)
+        idx_r, d2_r = cluster_assign_ref(pts, ctr, w)
+        np.testing.assert_array_equal(idx, idx_r)
+        np.testing.assert_allclose(d2, d2_r, rtol=1e-4, atol=1e-4)
+
+    def test_dead_slots_never_win(self):
+        pts, ctr, w = self._case(seed=2, live=16)
+        # make a dead centroid exactly equal to point 0: must still lose
+        ctr[100] = pts[0]
+        w[100] = 0.0
+        idx, _ = cluster_assign(pts, ctr, w)
+        assert np.asarray(idx)[0] != 100
+        assert np.all(np.asarray(idx) < 16)
+
+    def test_exact_match_distance_zero(self):
+        pts, ctr, w = self._case(seed=3)
+        ctr[5] = pts[7]
+        w[5] = 1.0
+        idx, d2 = cluster_assign(pts, ctr, w)
+        assert np.asarray(idx)[7] == 5
+        assert np.asarray(d2)[7] < 1e-3
+
+    def test_brute_force_small(self):
+        pts, ctr, w = self._case(seed=4, live=128)
+        idx, d2 = cluster_assign(pts, ctr, w)
+        brute = ((pts[:, None, :] - ctr[None, :, :]) ** 2).sum(-1)
+        np.testing.assert_array_equal(idx, brute.argmin(1))
+        np.testing.assert_allclose(d2, brute.min(1), rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), live=st.integers(1, 128))
+    def test_hypothesis_sweep(self, seed, live):
+        pts, ctr, w = self._case(seed=seed, live=live)
+        idx, d2 = cluster_assign(pts, ctr, w)
+        idx_r, d2_r = cluster_assign_ref(pts, ctr, w)
+        # ties can differ in index; distances must agree
+        np.testing.assert_allclose(d2, d2_r, rtol=1e-3, atol=1e-3)
+        assert np.all(np.asarray(idx) < live)
+
+
+# ------------------------------------------------------------- L2 model
+
+class TestModelEntrypoints:
+    def test_infogain_top2(self):
+        n = counters(seed=5)
+        gain, best_idx, best, second = model.infogain_top2(n)
+        g = np.asarray(gain)
+        assert g.shape == (model.IG_A,)
+        assert int(best_idx) == g.argmax()
+        np.testing.assert_allclose(float(best), g.max(), rtol=1e-6)
+        np.testing.assert_allclose(
+            float(second), np.partition(g, -2)[-2], rtol=1e-5, atol=1e-6)
+
+    def test_sdr_best(self):
+        s = bin_stats(seed=6)
+        surf, best_idx, best, second = model.sdr_best(s)
+        f = np.asarray(surf).reshape(-1)
+        assert int(best_idx) == f.argmax()
+        np.testing.assert_allclose(float(best), f.max(), rtol=1e-6)
+
+    def test_cluster_step_shapes(self):
+        rng = np.random.default_rng(7)
+        idx, d2 = model.cluster_step(
+            rng.normal(size=(model.CL_N, model.CL_D)).astype(np.float32),
+            rng.normal(size=(model.CL_K, model.CL_D)).astype(np.float32),
+            np.ones(model.CL_K, np.float32),
+        )
+        assert np.asarray(idx).shape == (model.CL_N,)
+        assert np.asarray(d2).shape == (model.CL_N,)

@@ -1,0 +1,115 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   1. attribute batching on/off (one message per LS vs per attribute)
+//!   2. XLA vs native criterion backend on the same workload
+//!   3. info-gain vs gini split criterion (quality + time)
+//!   4. grace period n_min sensitivity
+
+mod bench_util;
+use bench_util::bench;
+
+use std::sync::Arc;
+
+use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree, LeafPrediction};
+use samoa::classifiers::vht::{build_topology, VhtConfig};
+use samoa::core::criterion;
+use samoa::core::model::Classifier;
+use samoa::core::observers::CounterBlock;
+use samoa::engine::LocalEngine;
+use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use samoa::experiments::dataset_stream;
+use samoa::streams::StreamSource;
+use samoa::topology::Event;
+
+fn vht_run(batch: bool, n: u64) -> f64 {
+    let mut stream = dataset_stream("covtype", 42);
+    let config = VhtConfig { parallelism: 4, batch_attributes: batch, ..Default::default() };
+    let sink = EvalSink::new(stream.schema().n_classes(), 1.0, n);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = build_topology(stream.schema(), &config, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+    let source =
+        (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+    sink.accuracy()
+}
+
+fn main() {
+    let n = 50_000u64;
+
+    // 1. attribute batching
+    let mut accs = (0.0, 0.0);
+    bench("ablation: VHT attribute batching ON", 3, || {
+        accs.0 = vht_run(true, n);
+        n
+    });
+    bench("ablation: VHT attribute batching OFF", 3, || {
+        accs.1 = vht_run(false, n);
+        n
+    });
+    println!(
+        "  -> accuracy identical: batched={:.4} unbatched={:.4}",
+        accs.0, accs.1
+    );
+    assert!((accs.0 - accs.1).abs() < 1e-9, "batching must be semantics-preserving");
+
+    // 2. backend: XLA vs native on the sequential tree's split path
+    for backend in ["xla", "native"] {
+        if backend == "native" {
+            samoa::runtime::registry::force_backend(samoa::runtime::Backend::Native);
+        }
+        bench(&format!("ablation: hoeffding tree, backend={backend}"), 3, || {
+            let mut stream = dataset_stream("covtype", 42);
+            let mut ht = HoeffdingTree::new(
+                stream.schema().clone(),
+                HTConfig { leaf_prediction: LeafPrediction::MajorityClass, ..Default::default() },
+            );
+            for _ in 0..n {
+                let Some(i) = stream.next_instance() else { break };
+                ht.train(&i);
+            }
+            n
+        });
+    }
+
+    // 3. info gain vs gini ordering agreement on random counter tables
+    let mut rng = samoa::common::Rng::new(9);
+    let blocks: Vec<CounterBlock> = (0..200)
+        .map(|_| {
+            let mut b = CounterBlock::new(16, 8);
+            for _ in 0..300 {
+                b.add(rng.below(16) as u32, rng.below(8) as u32, 1.0);
+            }
+            b
+        })
+        .collect();
+    bench("ablation: info-gain criterion x200 blocks", 10, || {
+        std::hint::black_box(blocks.iter().map(criterion::info_gain).sum::<f64>());
+        200
+    });
+    bench("ablation: gini criterion x200 blocks", 10, || {
+        std::hint::black_box(blocks.iter().map(criterion::gini_gain).sum::<f64>());
+        200
+    });
+
+    // 4. grace period sensitivity (splits vs time)
+    for gp in [50u32, 200, 800] {
+        bench(&format!("ablation: grace period n_min={gp}"), 3, || {
+            let mut stream = dataset_stream("covtype", 42);
+            let mut ht = HoeffdingTree::new(
+                stream.schema().clone(),
+                HTConfig { grace_period: gp, ..Default::default() },
+            );
+            let mut correct = 0u64;
+            for _ in 0..n {
+                let Some(i) = stream.next_instance() else { break };
+                if ht.predict(&i) == i.class() {
+                    correct += 1;
+                }
+                ht.train(&i);
+            }
+            std::hint::black_box(correct);
+            n
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! Tiny bench harness (criterion is not available offline): warmup +
+//! repeated timed runs, median/min/max reporting.
+
+use std::time::Instant;
+
+/// Time `f` `reps` times after one warmup; print a stats row.
+pub fn bench<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
+    let _ = f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    let mut items = 0u64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        items = f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let max = times[times.len() - 1];
+    let tput = items as f64 / median.max(1e-12);
+    println!(
+        "{name:<48} median={:>9.3}ms  min={:>9.3}ms  max={:>9.3}ms  items/s={tput:>12.0}",
+        median * 1e3,
+        min * 1e3,
+        max * 1e3,
+    );
+}

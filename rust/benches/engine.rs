@@ -1,0 +1,83 @@
+//! Engine micro-benchmarks (§Perf L3): raw event routing throughput of
+//! the local and threaded engines, with and without attribute batching —
+//! the hot path under every experiment.
+
+mod bench_util;
+use bench_util::bench;
+
+use samoa::core::instance::{Instance, Label};
+use samoa::engine::{LocalEngine, ThreadedEngine};
+use samoa::topology::{Ctx, Event, Grouping, Processor, TopologyBuilder};
+
+struct Nop;
+impl Processor for Nop {
+    fn process(&mut self, _e: Event, _c: &mut Ctx) {}
+}
+
+/// MA-like fan-out: decompose each instance into A attribute events.
+struct FanOut {
+    attrs: usize,
+    out: samoa::topology::StreamId,
+}
+impl Processor for FanOut {
+    fn process(&mut self, e: Event, ctx: &mut Ctx) {
+        if let Event::Instance { id, .. } = e {
+            for a in 0..self.attrs {
+                ctx.emit(
+                    self.out,
+                    samoa::topology::stream::leaf_attr_key(id, a as u32),
+                    Event::Attribute { leaf: 0, attr: a as u32, value: 1.0, class: 0, weight: 1.0 },
+                );
+            }
+        }
+    }
+}
+
+fn inst(id: u64) -> Event {
+    Event::Instance { id, inst: Instance::dense(vec![0.0; 16], Label::Class(0)) }
+}
+
+fn main() {
+    let n = 50_000u64;
+
+    bench("local engine: 1-stage pass-through", 10, || {
+        let mut b = TopologyBuilder::new("t");
+        let p = b.add_processor("w", 1, |_| Box::new(Nop));
+        let entry = b.stream("in", None, p, Grouping::Shuffle);
+        let topo = b.build();
+        LocalEngine::new().run(&topo, entry, (0..n).map(inst), |_| {});
+        n
+    });
+
+    for attrs in [16usize, 64] {
+        bench(&format!("local engine: fan-out x{attrs} key-grouped"), 5, || {
+            let mut b = TopologyBuilder::new("t");
+            let ls = samoa::topology::StreamId(1);
+            let ma = b.add_processor("ma", 1, move |_| Box::new(FanOut { attrs, out: ls }));
+            let l = b.add_processor("ls", 4, |_| Box::new(Nop));
+            let entry = b.stream("in", None, ma, Grouping::Shuffle);
+            b.stream("attr", Some(ma), l, Grouping::Key);
+            let topo = b.build();
+            let m = LocalEngine::new().run(&topo, entry, (0..n / 10).map(inst), |_| {});
+            m.streams[1].events
+        });
+    }
+
+    bench("threaded engine: 4-way shuffle", 5, || {
+        let mut b = TopologyBuilder::new("t");
+        let p = b.add_processor("w", 4, |_| Box::new(Nop));
+        let entry = b.stream("in", None, p, Grouping::Shuffle);
+        let topo = b.build();
+        ThreadedEngine::default().run(&topo, entry, (0..n).map(inst), |_, _, _| {});
+        n
+    });
+
+    bench("threaded engine: tiny queues (backpressure)", 5, || {
+        let mut b = TopologyBuilder::new("t");
+        let p = b.add_processor("w", 2, |_| Box::new(Nop));
+        let entry = b.stream("in", None, p, Grouping::Shuffle);
+        let topo = b.build();
+        ThreadedEngine::new(8).run(&topo, entry, (0..n / 5).map(inst), |_, _, _| {});
+        n / 5
+    });
+}

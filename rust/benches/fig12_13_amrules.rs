@@ -1,0 +1,9 @@
+//! Bench regenerating Figs 12-13 (AMRules throughput / message-size cap).
+
+use samoa::common::cli::Args;
+
+fn main() {
+    let args = Args::parse(["--instances", "10000"].iter().map(|s| s.to_string()));
+    samoa::experiments::run("fig12", &args).unwrap();
+    samoa::experiments::run("fig13", &args).unwrap();
+}

@@ -1,0 +1,31 @@
+//! Bench for Fig 3's time panel: execution time of the sequential tree
+//! vs VHT-local across dense/sparse configurations.
+
+mod bench_util;
+use bench_util::bench;
+
+use samoa::experiments::runner::{run_variant, EngineKind, Variant};
+use samoa::streams::random_tree::RandomTreeGenerator;
+use samoa::streams::random_tweet::RandomTweetGenerator;
+
+fn main() {
+    let n = 30_000u64;
+    for (cat, num) in [(10, 10), (100, 100)] {
+        for v in [Variant::Moa, Variant::Local] {
+            bench(&format!("fig3 dense {cat}-{num} {v}"), 5, || {
+                let mut s = RandomTreeGenerator::new(cat, num, 2, 42);
+                run_variant(&mut s, v, n, EngineKind::LocalDeterministic { feedback_delay: 0 }, false, n);
+                n
+            });
+        }
+    }
+    for dim in [100u32, 1000] {
+        for v in [Variant::Moa, Variant::Local] {
+            bench(&format!("fig3 sparse {dim} {v}"), 5, || {
+                let mut s = RandomTweetGenerator::new(dim, 42);
+                run_variant(&mut s, v, n, EngineKind::LocalDeterministic { feedback_delay: 0 }, true, n);
+                n
+            });
+        }
+    }
+}

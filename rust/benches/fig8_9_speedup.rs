@@ -1,0 +1,11 @@
+//! Bench regenerating Figs 8-9 (VHT wok scaling) at bench scale.
+
+use samoa::common::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        ["--instances", "10000", "--seeds", "1"].iter().map(|s| s.to_string()),
+    );
+    samoa::experiments::run("fig8", &args).unwrap();
+    samoa::experiments::run("fig9", &args).unwrap();
+}

@@ -1,0 +1,83 @@
+//! Kernel micro-benchmarks: native rust vs AOT XLA artifact for the three
+//! criterion kernels (info gain, SDR, cluster assignment) — the §Perf L1
+//! evidence and the native/XLA crossover measurement.
+
+mod bench_util;
+use bench_util::bench;
+
+use samoa::common::Rng;
+use samoa::core::criterion::VarStats;
+use samoa::core::observers::CounterBlock;
+use samoa::runtime::{cluster, gain, registry, sdr};
+
+fn blocks(n: usize, seed: u64) -> Vec<CounterBlock> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut b = CounterBlock::new(16, 8);
+            for _ in 0..200 {
+                b.add(rng.below(16) as u32, rng.below(8) as u32, 1.0);
+            }
+            b
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== kernel benches (backend availability: {:?}) ==", registry::artifacts_dir().is_some());
+
+    for n in [64usize, 256, 1024] {
+        let bs = blocks(n, 1);
+        let refs: Vec<&CounterBlock> = bs.iter().collect();
+        bench(&format!("infogain native   A={n}"), 20, || {
+            std::hint::black_box(gain::gains_native(&refs));
+            n as u64
+        });
+        if registry::artifacts_dir().is_some() {
+            bench(&format!("infogain xla      A={n}"), 20, || {
+                std::hint::black_box(gain::gains_xla(&refs).unwrap());
+                n as u64
+            });
+        }
+    }
+
+    let mut rng = Rng::new(2);
+    let attrs: Vec<Vec<VarStats>> = (0..64)
+        .map(|_| {
+            (0..64)
+                .map(|_| {
+                    let mut s = VarStats::default();
+                    for _ in 0..10 {
+                        s.add(rng.gaussian(), 1.0);
+                    }
+                    s
+                })
+                .collect()
+        })
+        .collect();
+    bench("sdr native        A=64 B=64", 20, || {
+        std::hint::black_box(sdr::sdr_native(&attrs));
+        64
+    });
+    if registry::artifacts_dir().is_some() {
+        bench("sdr xla           A=64 B=64", 20, || {
+            std::hint::black_box(sdr::sdr_xla(&attrs).unwrap());
+            64
+        });
+    }
+
+    let (n, k, d) = (128usize, 128usize, 64usize);
+    let pts: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+    let ctr: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32).collect();
+    let w = vec![1f32; k];
+    bench("cluster native    N=128 K=128 D=64", 20, || {
+        std::hint::black_box(cluster::assign_native(&pts, &ctr, &w, d));
+        n as u64
+    });
+    if registry::artifacts_dir().is_some() {
+        bench("cluster xla       N=128 K=128 D=64", 20, || {
+            std::hint::black_box(cluster::assign_xla(&pts, &ctr, &w, d).unwrap());
+            n as u64
+        });
+    }
+}

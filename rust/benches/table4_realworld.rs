@@ -1,0 +1,10 @@
+//! Bench regenerating Table 4 (execution time on real-world datasets).
+
+use samoa::common::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        ["--instances", "40000", "--seeds", "1"].iter().map(|s| s.to_string()),
+    );
+    samoa::experiments::run("table4", &args).unwrap();
+}

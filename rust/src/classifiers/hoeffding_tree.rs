@@ -1,0 +1,542 @@
+//! Sequential Hoeffding tree (VFDT, Domingos & Hulten 2000) — the paper's
+//! **moa** baseline and the semantic reference for VHT: `VHT local` with
+//! zero feedback delay must learn exactly this tree.
+//!
+//! Leaves hold one [`CounterBlock`] per attribute (the `n_ijk` of §6.1);
+//! every `grace_period` instances a leaf evaluates all attributes' split
+//! criterion — through [`crate::runtime::gain`], i.e. the XLA artifact or
+//! the native twin — applies the Hoeffding bound with tie-break τ
+//! (Alg. 4), and splits pre-pruned against the no-split scenario X∅.
+
+use crate::common::fxhash::FxHashMap;
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::common::MemSize;
+use crate::core::hoeffding::{hoeffding_bound, infogain_range, should_split};
+use crate::core::instance::{Instance, Label, Values};
+use crate::core::model::Classifier;
+use crate::core::observers::{Binner, CounterBlock};
+use crate::core::{AttributeKind, Schema};
+use crate::runtime::gain;
+
+/// Leaf prediction strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeafPrediction {
+    /// Majority class of the leaf.
+    MajorityClass,
+    /// Naive Bayes over the leaf's attribute observers (MOA's `NBAdaptive`
+    /// simplified: NB once the leaf has enough weight, else majority).
+    NaiveBayes,
+}
+
+/// Hoeffding tree hyperparameters (MOA defaults).
+#[derive(Clone, Debug)]
+pub struct HTConfig {
+    /// n_min: instances a leaf accumulates between split attempts.
+    pub grace_period: u32,
+    /// δ: confidence for the Hoeffding bound.
+    pub delta: f64,
+    /// τ: tie-break threshold.
+    pub tau: f64,
+    pub leaf_prediction: LeafPrediction,
+    /// Hard cap on tree depth (0 = unlimited).
+    pub max_depth: u32,
+    /// Sparse mode: binary presence observers materialized on demand
+    /// (absence counts derived from the leaf's class marginals).
+    pub sparse: bool,
+}
+
+impl Default for HTConfig {
+    fn default() -> Self {
+        HTConfig {
+            grace_period: 200,
+            delta: 1e-7,
+            tau: 0.05,
+            leaf_prediction: LeafPrediction::NaiveBayes,
+            max_depth: 0,
+            sparse: false,
+        }
+    }
+}
+
+/// Per-leaf sufficient statistics.
+pub struct LeafStats {
+    /// Class marginals at the leaf.
+    pub class_counts: Vec<f64>,
+    /// Weight seen since the last split attempt.
+    pub weight_since_attempt: f64,
+    /// Dense: one block per attribute.
+    dense: Vec<CounterBlock>,
+    /// Sparse: per-attribute presence blocks, on demand.
+    sparse: FxHashMap<u32, CounterBlock>,
+}
+
+impl LeafStats {
+    fn new(schema: &Schema, sparse: bool) -> Self {
+        let c = schema.n_classes();
+        LeafStats {
+            class_counts: vec![0.0; c as usize],
+            weight_since_attempt: 0.0,
+            dense: if sparse {
+                Vec::new()
+            } else {
+                (0..schema.n_attributes())
+                    .map(|i| CounterBlock::new(schema.arity(i), c))
+                    .collect()
+            },
+            sparse: FxHashMap::default(),
+        }
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.class_counts.iter().sum()
+    }
+
+    fn majority(&self) -> Option<u32> {
+        let (mut best, mut bw) = (None, 0.0);
+        for (c, &w) in self.class_counts.iter().enumerate() {
+            if w > bw {
+                bw = w;
+                best = Some(c as u32);
+            }
+        }
+        best
+    }
+
+    fn is_pure(&self) -> bool {
+        self.class_counts.iter().filter(|&&w| w > 0.0).count() <= 1
+    }
+
+    /// Materialize the binary (absent/present) block of a sparse attribute.
+    fn sparse_block(&self, attr: u32, n_classes: u32) -> CounterBlock {
+        let mut blk = CounterBlock::new(2, n_classes);
+        if let Some(p) = self.sparse.get(&attr) {
+            for c in 0..n_classes {
+                let pr = p.get(1, c);
+                blk.add(0, c, (self.class_counts[c as usize] as f32 - pr).max(0.0));
+                blk.add(1, c, pr);
+            }
+        }
+        blk
+    }
+}
+
+impl MemSize for LeafStats {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + vec_flat_bytes(&self.class_counts)
+            + self.dense.iter().map(|b| b.mem_bytes()).sum::<usize>()
+            + self.sparse.values().map(|b| b.mem_bytes() + 16).sum::<usize>()
+    }
+}
+
+/// Tree node.
+enum Node {
+    Split { attr: u32, children: Vec<u32> },
+    Leaf { stats: LeafStats, depth: u32 },
+}
+
+/// The sequential Hoeffding tree.
+pub struct HoeffdingTree {
+    pub schema: Schema,
+    pub config: HTConfig,
+    nodes: Vec<Node>,
+    /// Shared per-attribute binners for numeric attributes (None for
+    /// categorical) — bin thresholds are global, like a feature transform.
+    binners: Vec<Option<Binner>>,
+    pub n_splits: u64,
+    pub n_split_attempts: u64,
+    trained: u64,
+}
+
+impl HoeffdingTree {
+    pub fn new(schema: Schema, config: HTConfig) -> Self {
+        let binners = schema
+            .attributes
+            .iter()
+            .map(|a| match a {
+                AttributeKind::Numeric => Some(Binner::new(schema.numeric_bins)),
+                AttributeKind::Categorical { .. } => None,
+            })
+            .collect();
+        let root = Node::Leaf { stats: LeafStats::new(&schema, config.sparse), depth: 0 };
+        HoeffdingTree {
+            schema,
+            config,
+            nodes: vec![root],
+            binners,
+            n_splits: 0,
+            n_split_attempts: 0,
+            trained: 0,
+        }
+    }
+
+    /// Bin of attribute `attr`'s value (training path: updates ranges).
+    #[inline]
+    fn bin_observe(&mut self, attr: usize, value: f32) -> u32 {
+        match &mut self.binners[attr] {
+            Some(b) => b.observe(value),
+            None => value as u32,
+        }
+    }
+
+    #[inline]
+    fn bin_of(&self, attr: usize, value: f32) -> u32 {
+        match &self.binners[attr] {
+            Some(b) => b.bin_of(value),
+            None => value as u32,
+        }
+    }
+
+    /// Sort an instance to its leaf (read-only). Sparse mode routes by
+    /// presence (children: 0 = absent, 1 = present).
+    pub fn sort_to_leaf(&self, inst: &Instance) -> u32 {
+        let mut node = 0u32;
+        loop {
+            match &self.nodes[node as usize] {
+                Node::Leaf { .. } => return node,
+                Node::Split { attr, children } => {
+                    let v = inst.value(*attr as usize);
+                    let bin = if self.config.sparse {
+                        (v != 0.0) as usize
+                    } else {
+                        self.bin_of(*attr as usize, v) as usize
+                    };
+                    node = children[bin.min(children.len() - 1)];
+                }
+            }
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Leaf { .. })).count()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn trained_instances(&self) -> u64 {
+        self.trained
+    }
+
+    fn leaf_stats(&self, leaf: u32) -> &LeafStats {
+        match &self.nodes[leaf as usize] {
+            Node::Leaf { stats, .. } => stats,
+            _ => unreachable!("sort_to_leaf returned a split node"),
+        }
+    }
+
+    fn train_inner(&mut self, inst: &Instance) {
+        let Some(class) = inst.class() else { return };
+        self.trained += 1;
+        let leaf = self.sort_to_leaf(inst);
+        let w = inst.weight as f64;
+        let sparse_mode = self.config.sparse;
+        let n_classes = self.schema.n_classes();
+
+        // (attr, bin) updates collected first: binner updates need &mut self
+        let mut updates: Vec<(usize, u32)> = Vec::with_capacity(inst.n_stored());
+        match (&inst.values, sparse_mode) {
+            (Values::Sparse { .. }, true) => {
+                for (a, v) in inst.iter_stored() {
+                    if v != 0.0 {
+                        updates.push((a, 1));
+                    }
+                }
+            }
+            _ => {
+                for (a, v) in inst.iter_stored() {
+                    let bin = self.bin_observe(a, v);
+                    updates.push((a, bin));
+                }
+            }
+        }
+
+        let (depth, should_attempt) = {
+            let Node::Leaf { stats, depth } = &mut self.nodes[leaf as usize] else {
+                unreachable!()
+            };
+            stats.class_counts[class as usize] += w;
+            stats.weight_since_attempt += w;
+            for &(a, bin) in &updates {
+                if sparse_mode {
+                    stats
+                        .sparse
+                        .entry(a as u32)
+                        .or_insert_with(|| CounterBlock::new(2, n_classes))
+                        .add(bin.min(1), class, w as f32);
+                } else {
+                    stats.dense[a].add(bin, class, w as f32);
+                }
+            }
+            let attempt = stats.weight_since_attempt >= self.config.grace_period as f64
+                && !stats.is_pure();
+            if attempt {
+                stats.weight_since_attempt = 0.0;
+            }
+            (*depth, attempt)
+        };
+
+        if should_attempt && (self.config.max_depth == 0 || depth < self.config.max_depth) {
+            self.attempt_split(leaf, depth);
+        }
+    }
+
+    /// Evaluate the split criterion at `leaf` and split if warranted.
+    fn attempt_split(&mut self, leaf: u32, depth: u32) {
+        self.n_split_attempts += 1;
+        let (gains, attrs): (Vec<f64>, Vec<u32>) = {
+            let stats = self.leaf_stats(leaf);
+            if self.config.sparse {
+                let mut blocks = Vec::with_capacity(stats.sparse.len());
+                let mut attrs = Vec::with_capacity(stats.sparse.len());
+                for &a in stats.sparse.keys() {
+                    blocks.push(stats.sparse_block(a, self.schema.n_classes()));
+                    attrs.push(a);
+                }
+                let refs: Vec<&CounterBlock> = blocks.iter().collect();
+                (gain::gains(&refs), attrs)
+            } else {
+                let refs: Vec<&CounterBlock> = stats.dense.iter().collect();
+                (gain::gains(&refs), (0..refs.len() as u32).collect())
+            }
+        };
+        if gains.is_empty() {
+            return;
+        }
+
+        let (bi, best, _si, second) = gain::top2(&gains);
+        // pre-pruning: the no-split scenario X∅ competes with gain 0
+        let second = second.max(0.0);
+        let n = self.leaf_stats(leaf).total_weight();
+        let eps = hoeffding_bound(infogain_range(self.schema.n_classes()), self.config.delta, n);
+        if best > 0.0 && should_split(best, second, eps, self.config.tau) {
+            self.split(leaf, attrs[bi], depth);
+        }
+    }
+
+    /// Replace `leaf` by a split node on `attr` (Alg. 4 lines 6-9).
+    fn split(&mut self, leaf: u32, attr: u32, depth: u32) {
+        self.n_splits += 1;
+        let arity = if self.config.sparse { 2 } else { self.schema.arity(attr as usize) };
+        let child_dists: Vec<Vec<f64>> = {
+            let stats = self.leaf_stats(leaf);
+            let block_owned;
+            let block: &CounterBlock = if self.config.sparse {
+                block_owned = stats.sparse_block(attr, self.schema.n_classes());
+                &block_owned
+            } else {
+                &stats.dense[attr as usize]
+            };
+            (0..arity)
+                .map(|v| {
+                    (0..self.schema.n_classes())
+                        .map(|c| block.get(v, c) as f64)
+                        .collect()
+                })
+                .collect()
+        };
+
+        let mut children = Vec::with_capacity(arity as usize);
+        for dist in child_dists {
+            let mut stats = LeafStats::new(&self.schema, self.config.sparse);
+            stats.class_counts = dist;
+            self.nodes.push(Node::Leaf { stats, depth: depth + 1 });
+            children.push((self.nodes.len() - 1) as u32);
+        }
+        self.nodes[leaf as usize] = Node::Split { attr, children };
+    }
+
+    /// Naive-Bayes prediction at a leaf.
+    fn nb_predict(&self, stats: &LeafStats, inst: &Instance) -> Option<u32> {
+        let total = stats.total_weight();
+        if total < 1.0 {
+            return stats.majority();
+        }
+        let c_n = self.schema.n_classes() as usize;
+        let mut log_post: Vec<f64> = (0..c_n)
+            .map(|c| ((stats.class_counts[c] + 1.0) / (total + c_n as f64)).ln())
+            .collect();
+        let mut add_block = |block: &CounterBlock, bin: u32| {
+            for (c, lp) in log_post.iter_mut().enumerate() {
+                let likelihood = (block.get(bin, c as u32) as f64 + 1.0)
+                    / (stats.class_counts[c] + block.v() as f64);
+                *lp += likelihood.ln();
+            }
+        };
+        if self.config.sparse {
+            for (a, v) in inst.iter_stored() {
+                if let Some(block) = stats.sparse.get(&(a as u32)) {
+                    add_block(block, if v != 0.0 { 1 } else { 0 });
+                }
+            }
+        } else {
+            for a in 0..self.schema.n_attributes() {
+                let bin = self.bin_of(a, inst.value(a));
+                add_block(&stats.dense[a], bin);
+            }
+        }
+        log_post
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, _)| c as u32)
+    }
+}
+
+impl Classifier for HoeffdingTree {
+    fn predict(&self, inst: &Instance) -> Option<u32> {
+        let leaf = self.sort_to_leaf(inst);
+        let stats = self.leaf_stats(leaf);
+        match self.config.leaf_prediction {
+            LeafPrediction::MajorityClass => stats.majority(),
+            LeafPrediction::NaiveBayes => {
+                if stats.total_weight() >= 10.0 {
+                    self.nb_predict(stats, inst)
+                } else {
+                    stats.majority()
+                }
+            }
+        }
+    }
+
+    fn train(&mut self, inst: &Instance) {
+        self.train_inner(inst);
+    }
+
+    fn model_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self
+                .nodes
+                .iter()
+                .map(|n| match n {
+                    Node::Split { children, .. } => 16 + vec_flat_bytes(children),
+                    Node::Leaf { stats, .. } => 8 + stats.mem_bytes(),
+                })
+                .sum::<usize>()
+            + self.binners.iter().map(|b| b.mem_bytes()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    /// Stream where attribute 0 fully determines the class.
+    fn easy_instance(rng: &mut Rng) -> Instance {
+        let a0 = rng.below(2) as f32;
+        let mut vals = vec![a0];
+        vals.extend((0..4).map(|_| rng.f32()));
+        Instance::dense(vals, Label::Class(a0 as u32))
+    }
+
+    fn easy_schema() -> Schema {
+        let mut attrs = vec![AttributeKind::Categorical { n_values: 2 }];
+        attrs.extend(Schema::all_numeric(4));
+        Schema::classification("easy", attrs, 2)
+    }
+
+    #[test]
+    fn learns_simple_concept() {
+        let mut rng = Rng::new(1);
+        let mut ht = HoeffdingTree::new(easy_schema(), HTConfig::default());
+        for _ in 0..2000 {
+            ht.train(&easy_instance(&mut rng));
+        }
+        assert!(ht.n_splits >= 1, "should split on the determining attribute");
+        let mut correct = 0;
+        for _ in 0..500 {
+            let inst = easy_instance(&mut rng);
+            if ht.predict(&inst) == inst.class() {
+                correct += 1;
+            }
+        }
+        assert!(correct > 480, "correct={correct}/500");
+    }
+
+    #[test]
+    fn no_split_on_pure_stream() {
+        let mut rng = Rng::new(2);
+        let mut ht = HoeffdingTree::new(easy_schema(), HTConfig::default());
+        for _ in 0..1500 {
+            let mut inst = easy_instance(&mut rng);
+            inst.label = Label::Class(0);
+            ht.train(&inst);
+        }
+        assert_eq!(ht.n_splits, 0);
+        assert_eq!(ht.n_leaves(), 1);
+    }
+
+    #[test]
+    fn empty_model_predicts_none() {
+        let ht = HoeffdingTree::new(easy_schema(), HTConfig::default());
+        assert_eq!(ht.predict(&Instance::dense(vec![0.0; 5], Label::None)), None);
+    }
+
+    #[test]
+    fn tree_grows_monotonically() {
+        let mut rng = Rng::new(3);
+        let mut ht = HoeffdingTree::new(easy_schema(), HTConfig::default());
+        let mut leaves_prev = ht.n_leaves();
+        for _ in 0..10 {
+            for _ in 0..500 {
+                ht.train(&easy_instance(&mut rng));
+            }
+            let leaves = ht.n_leaves();
+            assert!(leaves >= leaves_prev);
+            leaves_prev = leaves;
+        }
+    }
+
+    #[test]
+    fn max_depth_respected() {
+        let mut rng = Rng::new(4);
+        let cfg = HTConfig { max_depth: 1, ..Default::default() };
+        let mut ht = HoeffdingTree::new(easy_schema(), cfg);
+        for _ in 0..20_000 {
+            let a0 = rng.below(2) as f32;
+            let a1 = rng.below(2) as f32;
+            let cls = (a0 as u32) ^ (a1 as u32);
+            let inst =
+                Instance::dense(vec![a0, a1.into(), rng.f32(), rng.f32(), rng.f32()], Label::Class(cls));
+            ht.train(&inst);
+        }
+        // one split layer max: root + its children (arity <= 16)
+        assert!(ht.n_nodes() <= 1 + 16, "nodes={}", ht.n_nodes());
+    }
+
+    #[test]
+    fn sparse_mode_learns_presence_concept() {
+        let mut rng = Rng::new(5);
+        let schema = Schema::classification("sparse", Schema::all_numeric(100), 2);
+        let cfg = HTConfig { sparse: true, grace_period: 100, ..Default::default() };
+        let mut ht = HoeffdingTree::new(schema, cfg);
+        for _ in 0..3000 {
+            let has = rng.bool(0.5);
+            let mut idx: Vec<u32> = vec![10 + rng.below(50) as u32];
+            if has {
+                idx.push(3);
+            }
+            idx.sort_unstable();
+            idx.dedup();
+            let vals = vec![1.0; idx.len()];
+            ht.train(&Instance::sparse(idx, vals, 100, Label::Class(has as u32)));
+        }
+        assert!(ht.n_splits >= 1);
+        assert_eq!(ht.predict(&Instance::sparse(vec![3], vec![1.0], 100, Label::None)), Some(1));
+        assert_eq!(ht.predict(&Instance::sparse(vec![20], vec![1.0], 100, Label::None)), Some(0));
+    }
+
+    #[test]
+    fn model_bytes_grows_with_training() {
+        let mut rng = Rng::new(6);
+        let mut ht = HoeffdingTree::new(easy_schema(), HTConfig::default());
+        let b0 = ht.model_bytes();
+        for _ in 0..3000 {
+            ht.train(&easy_instance(&mut rng));
+        }
+        assert!(ht.model_bytes() > b0);
+    }
+}

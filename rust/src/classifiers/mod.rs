@@ -1,0 +1,7 @@
+//! Streaming classifiers: sequential Hoeffding tree (the "moa" baseline),
+//! the Vertical Hoeffding Tree (paper §6), the horizontal sharding
+//! baseline, and naive Bayes.
+pub mod hoeffding_tree;
+pub mod naive_bayes;
+pub mod vht;
+pub mod sharding;

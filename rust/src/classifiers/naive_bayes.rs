@@ -1,0 +1,123 @@
+//! Streaming naive Bayes — a cheap single-machine classifier used as an
+//! ensemble base learner and as a sanity baseline.
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::common::MemSize;
+use crate::core::instance::Instance;
+use crate::core::model::Classifier;
+use crate::core::observers::{Binner, CounterBlock};
+use crate::core::{AttributeKind, Schema};
+
+/// Multinomial NB over binned attributes with Laplace smoothing.
+pub struct NaiveBayes {
+    schema: Schema,
+    class_counts: Vec<f64>,
+    blocks: Vec<CounterBlock>,
+    binners: Vec<Option<Binner>>,
+    trained: u64,
+}
+
+impl NaiveBayes {
+    pub fn new(schema: Schema) -> Self {
+        let blocks = (0..schema.n_attributes())
+            .map(|i| CounterBlock::new(schema.arity(i), schema.n_classes()))
+            .collect();
+        let binners = schema
+            .attributes
+            .iter()
+            .map(|a| match a {
+                AttributeKind::Numeric => Some(Binner::new(schema.numeric_bins)),
+                AttributeKind::Categorical { .. } => None,
+            })
+            .collect();
+        NaiveBayes {
+            class_counts: vec![0.0; schema.n_classes() as usize],
+            blocks,
+            binners,
+            schema,
+            trained: 0,
+        }
+    }
+
+    #[inline]
+    fn bin(&self, attr: usize, v: f32) -> u32 {
+        match &self.binners[attr] {
+            Some(b) => b.bin_of(v),
+            None => v as u32,
+        }
+    }
+}
+
+impl Classifier for NaiveBayes {
+    fn predict(&self, inst: &Instance) -> Option<u32> {
+        if self.trained == 0 {
+            return None;
+        }
+        let total: f64 = self.class_counts.iter().sum();
+        let c_n = self.class_counts.len();
+        let mut best = (None, f64::NEG_INFINITY);
+        for c in 0..c_n {
+            let mut lp = ((self.class_counts[c] + 1.0) / (total + c_n as f64)).ln();
+            for a in 0..self.schema.n_attributes() {
+                let bin = self.bin(a, inst.value(a));
+                let block = &self.blocks[a];
+                let like = (block.get(bin.min(block.v() - 1), c as u32) as f64 + 1.0)
+                    / (self.class_counts[c] + block.v() as f64);
+                lp += like.ln();
+            }
+            if lp > best.1 {
+                best = (Some(c as u32), lp);
+            }
+        }
+        best.0
+    }
+
+    fn train(&mut self, inst: &Instance) {
+        let Some(class) = inst.class() else { return };
+        self.trained += 1;
+        self.class_counts[class as usize] += inst.weight as f64;
+        for a in 0..self.schema.n_attributes() {
+            let v = inst.value(a);
+            let bin = match &mut self.binners[a] {
+                Some(b) => b.observe(v),
+                None => v as u32,
+            };
+            let block = &mut self.blocks[a];
+            block.add(bin.min(block.v() - 1), class, inst.weight);
+        }
+    }
+
+    fn model_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + vec_flat_bytes(&self.class_counts)
+            + self.blocks.iter().map(|b| b.mem_bytes()).sum::<usize>()
+            + self.binners.iter().map(|b| b.mem_bytes()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::core::instance::Label;
+
+    #[test]
+    fn learns_conditional_concept() {
+        let schema = Schema::classification("nb", Schema::all_categorical(2, 2), 2);
+        let mut nb = NaiveBayes::new(schema);
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let a = rng.below(2) as f32;
+            nb.train(&Instance::dense(vec![a, rng.below(2) as f32], Label::Class(a as u32)));
+        }
+        assert_eq!(nb.predict(&Instance::dense(vec![1.0, 0.0], Label::None)), Some(1));
+        assert_eq!(nb.predict(&Instance::dense(vec![0.0, 1.0], Label::None)), Some(0));
+    }
+
+    #[test]
+    fn untrained_predicts_none() {
+        let schema = Schema::classification("nb", Schema::all_numeric(3), 2);
+        let nb = NaiveBayes::new(schema);
+        assert_eq!(nb.predict(&Instance::dense(vec![0.0; 3], Label::None)), None);
+    }
+}

@@ -1,0 +1,131 @@
+//! Horizontal-parallelism baseline (paper §6.3, "sharding"): the incoming
+//! stream is shuffle-split across an ensemble of p independent Hoeffding
+//! trees; prediction is majority vote over all shards.
+//!
+//! This is the Jubatus-style "local model" design the paper compares
+//! against: each shard sees 1/p of the instances but tracks *all*
+//! attributes, so memory grows ~p× the sequential tree (which is why
+//! sharding runs out of memory at 20k dense attributes in Fig. 4).
+
+use crate::core::instance::Instance;
+use crate::core::model::Classifier;
+use crate::core::Schema;
+
+use super::hoeffding_tree::{HTConfig, HoeffdingTree};
+
+/// Sharded Hoeffding-tree ensemble (sequential driver form).
+pub struct Sharding {
+    shards: Vec<HoeffdingTree>,
+    next: usize,
+    n_classes: u32,
+}
+
+impl Sharding {
+    pub fn new(schema: Schema, config: HTConfig, p: usize) -> Self {
+        assert!(p >= 1);
+        Sharding {
+            shards: (0..p).map(|_| HoeffdingTree::new(schema.clone(), config.clone())).collect(),
+            next: 0,
+            n_classes: schema.n_classes(),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &HoeffdingTree {
+        &self.shards[i]
+    }
+}
+
+impl Classifier for Sharding {
+    /// Majority vote across shards.
+    fn predict(&self, inst: &Instance) -> Option<u32> {
+        let mut votes = vec![0u32; self.n_classes as usize];
+        for s in &self.shards {
+            if let Some(c) = s.predict(inst) {
+                votes[c as usize] += 1;
+            }
+        }
+        votes
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > 0)
+            .max_by_key(|(_, &v)| v)
+            .map(|(c, _)| c as u32)
+    }
+
+    /// Shuffle grouping: round-robin shard training.
+    fn train(&mut self, inst: &Instance) {
+        let i = self.next;
+        self.next = (self.next + 1) % self.shards.len();
+        self.shards[i].train(inst);
+    }
+
+    fn model_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.model_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::core::instance::Label;
+    use crate::core::AttributeKind;
+
+    fn schema() -> Schema {
+        let mut attrs = vec![AttributeKind::Categorical { n_values: 2 }];
+        attrs.extend(Schema::all_numeric(3));
+        Schema::classification("s", attrs, 2)
+    }
+
+    fn easy(rng: &mut Rng) -> Instance {
+        let a = rng.below(2) as f32;
+        Instance::dense(vec![a, rng.f32(), rng.f32(), rng.f32()], Label::Class(a as u32))
+    }
+
+    #[test]
+    fn ensemble_learns_and_votes() {
+        let mut rng = Rng::new(1);
+        let mut sh = Sharding::new(schema(), HTConfig::default(), 4);
+        for _ in 0..8000 {
+            sh.train(&easy(&mut rng));
+        }
+        let mut correct = 0;
+        for _ in 0..300 {
+            let i = easy(&mut rng);
+            if sh.predict(&i) == i.class() {
+                correct += 1;
+            }
+        }
+        assert!(correct > 280, "correct={correct}");
+    }
+
+    #[test]
+    fn shards_receive_balanced_load() {
+        let mut rng = Rng::new(2);
+        let mut sh = Sharding::new(schema(), HTConfig::default(), 3);
+        for _ in 0..999 {
+            sh.train(&easy(&mut rng));
+        }
+        for i in 0..3 {
+            assert_eq!(sh.shard(i).trained_instances(), 333);
+        }
+    }
+
+    #[test]
+    fn memory_scales_with_p() {
+        let mut rng = Rng::new(3);
+        let mut s1 = Sharding::new(schema(), HTConfig::default(), 1);
+        let mut s4 = Sharding::new(schema(), HTConfig::default(), 4);
+        for _ in 0..4000 {
+            let i = easy(&mut rng);
+            s1.train(&i);
+            s4.train(&i);
+        }
+        // p=4 tracks all attributes in 4 trees: memory strictly larger
+        assert!(s4.model_bytes() > s1.model_bytes());
+    }
+}

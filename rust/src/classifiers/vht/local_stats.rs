@@ -1,0 +1,295 @@
+//! VHT local-statistics processor (paper Alg. 2 + Alg. 3).
+//!
+//! Conceptually a slice of the big distributed table indexed by
+//! (leaf id, attribute id): this instance holds the counter blocks of the
+//! attributes key-routed to it. On `compute` it evaluates the split
+//! criterion of every attribute it tracks for the leaf — through
+//! [`crate::runtime::gain`] (XLA artifact or native twin) — and replies
+//! with its local top-2 plus the winner's class distribution.
+
+use crate::common::fxhash::FxHashMap;
+
+use crate::core::observers::CounterBlock;
+use crate::runtime::gain;
+use crate::topology::{Ctx, Event, Processor};
+
+use super::VhtStreamIds;
+
+/// One leaf's slice: attribute id → counter block.
+type LeafTable = FxHashMap<u32, CounterBlock>;
+
+/// The local-statistics processor.
+pub struct LocalStats {
+    n_classes: u32,
+    /// Sparse mode: presence observers (V=2); absence rows derived from
+    /// the class marginals carried by the `compute` event.
+    sparse: bool,
+    streams: VhtStreamIds,
+    /// leaf id → (attr → counters); blocks created lazily at the max bin
+    /// count seen so far for the attribute (MA sends bins).
+    table: FxHashMap<u64, LeafTable>,
+    pub computes_served: u64,
+    pub attributes_seen: u64,
+}
+
+impl LocalStats {
+    pub fn new(n_classes: u32, streams: VhtStreamIds) -> Self {
+        Self::with_sparse(n_classes, false, streams)
+    }
+
+    pub fn with_sparse(n_classes: u32, sparse: bool, streams: VhtStreamIds) -> Self {
+        LocalStats {
+            n_classes,
+            sparse,
+            streams,
+            table: FxHashMap::default(),
+            computes_served: 0,
+            attributes_seen: 0,
+        }
+    }
+
+    #[inline]
+    fn update(&mut self, leaf: u64, attr: u32, bin: u32, class: u32, weight: f32) {
+        self.attributes_seen += 1;
+        let n_classes = self.n_classes;
+        let init_v = if self.sparse { 2 } else { 16 };
+        let block = self
+            .table
+            .entry(leaf)
+            .or_default()
+            .entry(attr)
+            .or_insert_with(|| CounterBlock::new(init_v.max(bin + 1), n_classes));
+        if bin < block.v() {
+            block.add(bin, class, weight);
+        } else {
+            // rare: categorical arity above initial guess — grow by rebuild
+            let mut bigger = CounterBlock::new(bin + 1, n_classes);
+            for v in 0..block.v() {
+                for c in 0..n_classes {
+                    let w = block.get(v, c);
+                    if w > 0.0 {
+                        bigger.add(v, c, w);
+                    }
+                }
+            }
+            bigger.add(bin, class, weight);
+            *block = bigger;
+        }
+    }
+
+    /// Alg. 3: compute local top-2 for `leaf` and reply.
+    fn compute(&mut self, leaf: u64, seq: u32, class_counts: &[f32], ctx: &mut Ctx) {
+        self.computes_served += 1;
+        let reply = match self.table.get(&leaf) {
+            Some(slice) if !slice.is_empty() => {
+                let mut attrs: Vec<u32> = slice.keys().copied().collect();
+                attrs.sort_unstable(); // determinism
+                // sparse mode: materialize absence rows from the leaf's
+                // class marginals (presence-only counters otherwise have
+                // a single populated value and zero gain)
+                let derived: Vec<CounterBlock>;
+                let blocks: Vec<&CounterBlock> = if self.sparse && !class_counts.is_empty() {
+                    derived = attrs
+                        .iter()
+                        .map(|a| {
+                            let present = &slice[a];
+                            let mut blk = CounterBlock::new(2, self.n_classes);
+                            for c in 0..self.n_classes {
+                                let p = present.get(1.min(present.v() - 1), c);
+                                let absent = (class_counts
+                                    .get(c as usize)
+                                    .copied()
+                                    .unwrap_or(0.0)
+                                    - p)
+                                    .max(0.0);
+                                blk.add(0, c, absent);
+                                blk.add(1, c, p);
+                            }
+                            blk
+                        })
+                        .collect();
+                    derived.iter().collect()
+                } else {
+                    attrs.iter().map(|a| &slice[a]).collect()
+                };
+                let gains = gain::gains(&blocks);
+                let (bi, best, _si, second) = gain::top2(&gains);
+                let best_block = blocks[bi];
+                let mut dist = Vec::with_capacity((best_block.v() * best_block.c()) as usize);
+                for v in 0..best_block.v() {
+                    for c in 0..best_block.c() {
+                        dist.push(best_block.get(v, c));
+                    }
+                }
+                Event::LocalResult {
+                    leaf,
+                    seq,
+                    best_attr: attrs[bi],
+                    best,
+                    second_attr: attrs.get(1).copied().unwrap_or(attrs[bi]),
+                    second: second.max(0.0),
+                    best_dist: dist,
+                }
+            }
+            // no data for this leaf here: report a null result so the MA
+            // doesn't have to wait for the timeout
+            _ => Event::LocalResult {
+                leaf,
+                seq,
+                best_attr: u32::MAX,
+                best: 0.0,
+                second_attr: u32::MAX,
+                second: 0.0,
+                best_dist: Vec::new(),
+            },
+        };
+        ctx.emit_any(self.streams.local_result, reply);
+    }
+}
+
+impl Processor for LocalStats {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        match event {
+            Event::Attribute { leaf, attr, value, class, weight } => {
+                self.update(leaf, attr, value as u32, class, weight);
+            }
+            Event::AttributeBatch { leaf, class, weight, attrs } => {
+                for (attr, bin) in attrs {
+                    self.update(leaf, attr, bin as u32, class, weight);
+                }
+            }
+            Event::Compute { leaf, seq, class_counts, .. } => {
+                self.compute(leaf, seq, &class_counts, ctx)
+            }
+            Event::DropLeaf { leaf } => {
+                self.table.remove(&leaf);
+            }
+            _ => {}
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        use crate::common::MemSize;
+        std::mem::size_of::<Self>()
+            + self
+                .table
+                .values()
+                .map(|slice| {
+                    32 + slice.values().map(|b| b.mem_bytes() + 16).sum::<usize>()
+                })
+                .sum::<usize>()
+    }
+
+    fn name(&self) -> &'static str {
+        "vht-local-statistics"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::StreamId;
+
+    fn ids() -> VhtStreamIds {
+        VhtStreamIds {
+            attribute: StreamId(1),
+            compute: StreamId(2),
+            local_result: StreamId(3),
+            drop_leaf: StreamId(4),
+            prediction: StreamId(5),
+        }
+    }
+
+    fn attr_ev(leaf: u64, attr: u32, bin: u32, class: u32) -> Event {
+        Event::Attribute { leaf, attr, value: bin as f32, class, weight: 1.0 }
+    }
+
+    #[test]
+    fn accumulates_and_computes_top2() {
+        let mut ls = LocalStats::new(2, ids());
+        let mut ctx = Ctx::new(0, 1);
+        // attr 7 perfectly separates classes; attr 3 is pure noise
+        // (consecutive pairs share a value but differ in class)
+        for i in 0..100u32 {
+            ls.process(attr_ev(5, 7, i % 2, i % 2), &mut ctx);
+            ls.process(attr_ev(5, 3, (i / 2) % 4, i % 2), &mut ctx);
+        }
+        ls.process(Event::Compute { leaf: 5, seq: 1, n_l: 200.0, class_counts: vec![] }, &mut ctx);
+        let out = ctx.take();
+        assert_eq!(out.len(), 1);
+        match &out[0].2 {
+            Event::LocalResult { leaf, seq, best_attr, best, second, best_dist, .. } => {
+                assert_eq!((*leaf, *seq), (5, 1));
+                assert_eq!(*best_attr, 7);
+                assert!(*best > 0.9, "best={best}");
+                assert!(*second < *best);
+                assert!(!best_dist.is_empty());
+            }
+            other => panic!("expected LocalResult, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compute_unknown_leaf_replies_null() {
+        let mut ls = LocalStats::new(2, ids());
+        let mut ctx = Ctx::new(0, 1);
+        ls.process(Event::Compute { leaf: 99, seq: 2, n_l: 10.0, class_counts: vec![] }, &mut ctx);
+        let out = ctx.take();
+        match &out[0].2 {
+            Event::LocalResult { best_attr, best, .. } => {
+                assert_eq!(*best_attr, u32::MAX);
+                assert_eq!(*best, 0.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drop_releases_state() {
+        let mut ls = LocalStats::new(2, ids());
+        let mut ctx = Ctx::new(0, 1);
+        for i in 0..50u32 {
+            ls.process(attr_ev(1, 0, i % 2, i % 2), &mut ctx);
+        }
+        let before = ls.mem_bytes();
+        ls.process(Event::DropLeaf { leaf: 1 }, &mut ctx);
+        assert!(ls.mem_bytes() < before);
+        assert!(ls.table.is_empty());
+    }
+
+    #[test]
+    fn batch_equals_singles() {
+        let mut a = LocalStats::new(2, ids());
+        let mut b = LocalStats::new(2, ids());
+        let mut ctx = Ctx::new(0, 1);
+        for i in 0..60u32 {
+            a.process(attr_ev(2, 0, i % 2, i % 2), &mut ctx);
+            a.process(attr_ev(2, 1, i % 3, i % 2), &mut ctx);
+            b.process(
+                Event::AttributeBatch {
+                    leaf: 2,
+                    class: i % 2,
+                    weight: 1.0,
+                    attrs: vec![(0, (i % 2) as u8), (1, (i % 3) as u8)],
+                },
+                &mut ctx,
+            );
+        }
+        ctx.take();
+        let mut ca = Ctx::new(0, 1);
+        let mut cb = Ctx::new(0, 1);
+        a.process(Event::Compute { leaf: 2, seq: 1, n_l: 120.0, class_counts: vec![] }, &mut ca);
+        b.process(Event::Compute { leaf: 2, seq: 1, n_l: 120.0, class_counts: vec![] }, &mut cb);
+        let (ea, eb) = (ca.take(), cb.take());
+        match (&ea[0].2, &eb[0].2) {
+            (
+                Event::LocalResult { best_attr: a1, best: g1, .. },
+                Event::LocalResult { best_attr: a2, best: g2, .. },
+            ) => {
+                assert_eq!(a1, a2);
+                assert!((g1 - g2).abs() < 1e-12);
+            }
+            _ => panic!("expected results"),
+        }
+    }
+}

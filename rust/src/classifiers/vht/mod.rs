@@ -1,0 +1,151 @@
+//! Vertical Hoeffding Tree (paper §6): model-aggregator + local-statistics
+//! processors communicating via the Table-2 content events.
+//!
+//! ```text
+//!            instance                attribute (key: leaf+attr)
+//!   source ───────────► MA ════════════════════════════► LS × p
+//!                        ▲   compute (all) ────────────►
+//!                        ╚══════ local-result ══════════╝
+//!                        │        drop (all) ──────────►
+//!                        └──► prediction ──► evaluator
+//! ```
+//!
+//! Variants (paper §6.3): **wok** discards instances reaching a leaf with
+//! an in-flight split decision; **wk(z)** buffers up to `z` and replays
+//! them through the updated tree once the split resolves.
+
+pub mod tree;
+pub mod model_aggregator;
+pub mod local_stats;
+
+use crate::core::Schema;
+use crate::topology::{Grouping, ProcessorId, StreamId, Topology, TopologyBuilder};
+
+pub use local_stats::LocalStats;
+pub use model_aggregator::ModelAggregator;
+
+/// Buffering policy while a split decision is pending.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitBuffering {
+    /// `wok`: discard (load shedding).
+    Discard,
+    /// `wk(z)`: buffer up to z instances, replay on split.
+    Buffer(usize),
+}
+
+/// VHT hyperparameters.
+#[derive(Clone, Debug)]
+pub struct VhtConfig {
+    /// LS parallelism (the paper's p).
+    pub parallelism: usize,
+    /// n_min grace period.
+    pub grace_period: u32,
+    pub delta: f64,
+    pub tau: f64,
+    pub buffering: SplitBuffering,
+    /// Resolve a split round after this many source instances even if not
+    /// all LS replied (Alg. 4 line 3, "or time out reached").
+    pub timeout_instances: u32,
+    /// Group attribute events per destination LS (one message per LS per
+    /// instance instead of one per attribute). Semantics-preserving.
+    pub batch_attributes: bool,
+    /// Local-engine delivery delay on the local-result stream — models the
+    /// distributed feedback latency deterministically (0 = `local` mode).
+    pub feedback_delay: usize,
+    /// Sparse instances: decompose only stored (non-zero) attributes and
+    /// observe them as binary presence features.
+    pub sparse: bool,
+}
+
+impl Default for VhtConfig {
+    fn default() -> Self {
+        VhtConfig {
+            parallelism: 4,
+            grace_period: 200,
+            delta: 1e-7,
+            tau: 0.05,
+            buffering: SplitBuffering::Discard,
+            timeout_instances: 1000,
+            batch_attributes: true,
+            feedback_delay: 0,
+            sparse: false,
+        }
+    }
+}
+
+/// Compact copy of the stream ids handed to processor factories.
+/// Stream declaration order in [`build_topology`] fixes these values.
+#[derive(Clone, Copy, Debug)]
+pub struct VhtStreamIds {
+    pub attribute: StreamId,
+    pub compute: StreamId,
+    pub local_result: StreamId,
+    pub drop_leaf: StreamId,
+    pub prediction: StreamId,
+}
+
+/// Handles of an assembled VHT topology.
+#[derive(Clone, Copy, Debug)]
+pub struct VhtHandles {
+    pub entry: StreamId,
+    pub streams: VhtStreamIds,
+    pub ma: ProcessorId,
+    pub ls: ProcessorId,
+    pub evaluator: ProcessorId,
+}
+
+/// Assemble the VHT topology (paper Fig. 2). The caller supplies the
+/// evaluator factory (usually
+/// [`crate::evaluation::prequential::EvaluatorProcessor`]) so the same
+/// topology serves accuracy and throughput experiments.
+pub fn build_topology(
+    schema: &Schema,
+    config: &VhtConfig,
+    evaluator: impl Fn(usize) -> Box<dyn crate::topology::Processor> + 'static,
+) -> (Topology, VhtHandles) {
+    let mut b = TopologyBuilder::new("vht");
+    let p = config.parallelism;
+
+    let eval = b.add_processor("evaluator", 1, evaluator);
+    // Stream ids by declaration order below: 0 entry, 1 attribute,
+    // 2 compute, 3 local-result, 4 drop, 5 prediction.
+    let ids = VhtStreamIds {
+        attribute: StreamId(1),
+        compute: StreamId(2),
+        local_result: StreamId(3),
+        drop_leaf: StreamId(4),
+        prediction: StreamId(5),
+    };
+
+    let ma_cfg = config.clone();
+    let schema_ma = schema.clone();
+    let ma = b.add_processor("model-aggregator", 1, move |_| {
+        Box::new(ModelAggregator::new(schema_ma.clone(), ma_cfg.clone(), ids))
+    });
+    let schema_ls = schema.clone();
+    let sparse = config.sparse;
+    let ls = b.add_processor("local-statistics", p, move |_| {
+        Box::new(LocalStats::with_sparse(schema_ls.n_classes(), sparse, ids))
+    });
+
+    let entry = b.stream("instance", None, ma, Grouping::Shuffle);
+    let attribute = if config.batch_attributes {
+        b.stream("attribute", Some(ma), ls, Grouping::Direct)
+    } else {
+        b.stream("attribute", Some(ma), ls, Grouping::Key)
+    };
+    let compute = b.stream("compute", Some(ma), ls, Grouping::All);
+    let local_result =
+        b.stream_delayed("local-result", Some(ls), ma, Grouping::Shuffle, config.feedback_delay);
+    let drop_leaf = b.stream("drop", Some(ma), ls, Grouping::All);
+    let prediction = b.stream("prediction", Some(ma), eval, Grouping::Shuffle);
+
+    debug_assert_eq!(attribute, ids.attribute);
+    debug_assert_eq!(compute, ids.compute);
+    debug_assert_eq!(local_result, ids.local_result);
+    debug_assert_eq!(drop_leaf, ids.drop_leaf);
+    debug_assert_eq!(prediction, ids.prediction);
+
+    let topo = b.build();
+    (topo, VhtHandles { entry, streams: ids, ma, ls, evaluator: eval })
+}

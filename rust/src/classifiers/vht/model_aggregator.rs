@@ -1,0 +1,481 @@
+//! VHT model aggregator (paper Alg. 1 + Alg. 4).
+//!
+//! Receives instances, predicts + trains (prequential), decomposes labeled
+//! instances into attribute events for the local statistics, coordinates
+//! split rounds (compute → local-result → split/drop), and applies the
+//! wok / wk(z) policy to instances that reach a leaf with an in-flight
+//! decision.
+
+use crate::core::hoeffding::{hoeffding_bound, infogain_range, should_split};
+use crate::core::instance::{Instance, Label};
+use crate::core::Schema;
+use crate::topology::stream::{hash64, leaf_attr_key};
+use crate::topology::{Ctx, Event, Output, Processor};
+
+use super::tree::{MaTree, PendingSplit};
+use super::{SplitBuffering, VhtConfig, VhtStreamIds};
+
+/// Statistics the experiments read back from the MA after a run.
+#[derive(Clone, Debug, Default)]
+pub struct MaStats {
+    pub instances: u64,
+    pub shed: u64,
+    pub buffered_replayed: u64,
+    pub splits: u64,
+    pub split_rounds: u64,
+    pub timeouts: u64,
+}
+
+/// The model-aggregator processor (parallelism 1; the paper disables model
+/// replication in its experiments, as do we).
+pub struct ModelAggregator {
+    tree: MaTree,
+    config: VhtConfig,
+    streams: VhtStreamIds,
+    seq: u32,
+    pub stats: MaStats,
+    /// Reusable per-destination batch buffers (perf: no alloc per event).
+    batches: Vec<Vec<(u32, u8)>>,
+}
+
+impl ModelAggregator {
+    pub fn new(schema: Schema, config: VhtConfig, streams: VhtStreamIds) -> Self {
+        let p = config.parallelism;
+        let mut tree = MaTree::new(schema);
+        tree.sparse = config.sparse;
+        ModelAggregator {
+            tree,
+            config,
+            streams,
+            seq: 0,
+            stats: MaStats::default(),
+            batches: vec![Vec::new(); p],
+        }
+    }
+
+    pub fn tree(&self) -> &MaTree {
+        &self.tree
+    }
+
+    /// Predict with the current tree (majority class at the sorted leaf —
+    /// the MA holds no attribute observers, per the vertical design).
+    fn predict(&self, inst: &Instance) -> Output {
+        let node = self.tree.sort(inst);
+        match self.tree.leaf(node).majority() {
+            Some(c) => Output::Class(c),
+            None => Output::None,
+        }
+    }
+
+    /// Decompose a labeled instance into attribute events (Alg. 1 line 2).
+    fn send_attributes(&mut self, leaf_id: u64, inst: &Instance, class: u32, ctx: &mut Ctx) {
+        let w = inst.weight;
+        if self.config.batch_attributes {
+            let p = self.config.parallelism;
+            for b in self.batches.iter_mut() {
+                b.clear();
+            }
+            if self.config.sparse {
+                for (a, v) in inst.iter_stored() {
+                    if v != 0.0 {
+                        let dest = (hash64(leaf_attr_key(leaf_id, a as u32)) as usize) % p;
+                        self.batches[dest].push((a as u32, 1));
+                    }
+                }
+            } else {
+                for (a, v) in inst.iter_stored() {
+                    let bin = self.tree.bin_observe(a, v) as u8;
+                    let dest = (hash64(leaf_attr_key(leaf_id, a as u32)) as usize) % p;
+                    self.batches[dest].push((a as u32, bin));
+                }
+            }
+            for (dest, batch) in self.batches.iter_mut().enumerate() {
+                if !batch.is_empty() {
+                    ctx.emit(
+                        self.streams.attribute,
+                        dest as u64,
+                        Event::AttributeBatch {
+                            leaf: leaf_id,
+                            class,
+                            weight: w,
+                            attrs: std::mem::take(batch),
+                        },
+                    );
+                }
+            }
+        } else if self.config.sparse {
+            for (a, v) in inst.iter_stored() {
+                if v != 0.0 {
+                    ctx.emit(
+                        self.streams.attribute,
+                        leaf_attr_key(leaf_id, a as u32),
+                        Event::Attribute { leaf: leaf_id, attr: a as u32, value: 1.0, class, weight: w },
+                    );
+                }
+            }
+        } else {
+            for (a, v) in inst.iter_stored() {
+                let bin = self.tree.bin_observe(a, v);
+                ctx.emit(
+                    self.streams.attribute,
+                    leaf_attr_key(leaf_id, a as u32),
+                    Event::Attribute {
+                        leaf: leaf_id,
+                        attr: a as u32,
+                        value: bin as f32,
+                        class,
+                        weight: w,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Train on one labeled instance: update the sorted leaf, ship the
+    /// attributes, maybe open a split round (Alg. 1 lines 3-7).
+    fn train(&mut self, inst: &Instance, class: u32, ctx: &mut Ctx) {
+        let node = self.tree.sort(inst);
+        let leaf_id = self.tree.leaf_id(node);
+
+        // wok / wk(z): leaf has an in-flight split decision
+        if self.tree.leaf(node).pending.is_some() {
+            let pending = self.tree.leaf_mut(node).pending.as_mut().unwrap();
+            match self.config.buffering {
+                SplitBuffering::Discard => {
+                    pending.shed += 1;
+                    self.stats.shed += 1;
+                }
+                SplitBuffering::Buffer(z) => {
+                    if pending.buffer.len() < z {
+                        pending.buffer.push(inst.clone());
+                    } else {
+                        pending.shed += 1;
+                        self.stats.shed += 1;
+                    }
+                }
+            }
+            return;
+        }
+
+        let w = inst.weight as f64;
+        {
+            let leaf = self.tree.leaf_mut(node);
+            leaf.class_counts[class as usize] += w;
+            leaf.n_l += w;
+            leaf.weight_since_attempt += w;
+        }
+        self.send_attributes(leaf_id, inst, class, ctx);
+
+        let leaf = self.tree.leaf(node);
+        if leaf.weight_since_attempt >= self.config.grace_period as f64 && !leaf.is_pure() {
+            let n_l = leaf.n_l;
+            let leaf = self.tree.leaf_mut(node);
+            leaf.weight_since_attempt = 0.0;
+            self.seq += 1;
+            leaf.pending = Some(PendingSplit {
+                seq: self.seq,
+                expected: self.config.parallelism as u32,
+                replies: Vec::new(),
+                n_l,
+                age: 0,
+                buffer: Vec::new(),
+                shed: 0,
+            });
+            self.stats.split_rounds += 1;
+            let class_counts: Vec<f32> = if self.config.sparse {
+                self.tree.leaf(node).class_counts.iter().map(|&c| c as f32).collect()
+            } else {
+                Vec::new()
+            };
+            ctx.emit_any(
+                self.streams.compute,
+                Event::Compute { leaf: leaf_id, seq: self.seq, n_l, class_counts },
+            );
+        }
+    }
+
+    /// Resolve the pending split round at `node` (Alg. 4).
+    fn resolve(&mut self, node: u32, ctx: &mut Ctx) {
+        let Some(pending) = self.tree.leaf_mut(node).pending.take() else { return };
+        let leaf_id = self.tree.leaf_id(node);
+
+        // overall top-2 across LS replies (each reply is a local top-2)
+        let mut cands: Vec<(u32, f64, &Vec<f32>)> = Vec::with_capacity(pending.replies.len() * 2);
+        static EMPTY: Vec<f32> = Vec::new();
+        for (attr, best, second, dist) in &pending.replies {
+            cands.push((*attr, *best, dist));
+            cands.push((u32::MAX, *second, &EMPTY)); // runner-up, attr unknown
+        }
+        cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let (best_attr, best, best_dist) = match cands.first() {
+            Some(&(a, g, d)) if a != u32::MAX => (a, g, d.clone()),
+            _ => {
+                // no usable winner: replay buffer as plain training input
+                self.replay(pending.buffer, ctx);
+                return;
+            }
+        };
+        // pre-pruning: X∅ (no split) competes with gain 0
+        let second = cands.get(1).map(|c| c.1).unwrap_or(0.0).max(0.0);
+
+        let eps = hoeffding_bound(
+            infogain_range(self.tree.schema.n_classes()),
+            self.config.delta,
+            pending.n_l,
+        );
+        if best > 0.0 && should_split(best, second, eps, self.config.tau) {
+            self.tree.split(node, best_attr, &best_dist);
+            self.stats.splits += 1;
+            ctx.emit_any(self.streams.drop_leaf, Event::DropLeaf { leaf: leaf_id });
+            self.replay(pending.buffer, ctx);
+        } else {
+            // no split: instances already trained downstream; discard buffer
+            // (their attributes were NOT sent — wk semantics per the paper:
+            // "Otherwise, it discards the buffer, as the instances have
+            // already been incorporated in the statistics downstream."
+            // In our implementation buffered instances were withheld, so we
+            // replay them to keep the statistics consistent.)
+            self.replay(pending.buffer, ctx);
+        }
+    }
+
+    /// Replay buffered instances through the (possibly updated) tree.
+    fn replay(&mut self, buffer: Vec<Instance>, ctx: &mut Ctx) {
+        for inst in buffer {
+            if let Some(class) = inst.class() {
+                self.stats.buffered_replayed += 1;
+                self.train(&inst, class, ctx);
+            }
+        }
+    }
+
+    /// Tick timeout counters on all pending rounds (called per instance).
+    fn tick_timeouts(&mut self, ctx: &mut Ctx) {
+        let timeout = self.config.timeout_instances;
+        let mut expired = Vec::new();
+        for node in self.tree.pending_leaves() {
+            let p = self.tree.leaf_mut(node).pending.as_mut().unwrap();
+            p.age += 1;
+            if p.age >= timeout {
+                expired.push(node);
+            }
+        }
+        for node in expired {
+            self.stats.timeouts += 1;
+            self.resolve(node, ctx);
+        }
+    }
+}
+
+impl Processor for ModelAggregator {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        match event {
+            Event::Instance { id, inst } => {
+                self.stats.instances += 1;
+                // prequential: test ...
+                let output = self.predict(&inst);
+                ctx.emit_any(
+                    self.streams.prediction,
+                    Event::Prediction { id, truth: inst.label, output },
+                );
+                // ... then train
+                if let Some(class) = inst.class() {
+                    self.train(&inst, class, ctx);
+                }
+                self.tick_timeouts(ctx);
+            }
+            Event::LocalResult { leaf, seq, best_attr, best, second_attr: _, second, best_dist } => {
+                // the leaf may have split already — stale results dropped
+                let Some(node) = self.tree.node_of_leaf(leaf) else { return };
+                let Some(pending) = self.tree.leaf_mut(node).pending.as_mut() else { return };
+                if pending.seq != seq {
+                    return; // stale round
+                }
+                pending.replies.push((best_attr, best, second, best_dist));
+                if pending.replies.len() as u32 >= pending.expected {
+                    self.resolve(node, ctx);
+                }
+            }
+            Event::Shutdown => {}
+            _ => {}
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.tree.mem_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "vht-model-aggregator"
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::instance::Instance;
+    use crate::topology::StreamId;
+
+    fn ids() -> VhtStreamIds {
+        VhtStreamIds {
+            attribute: StreamId(1),
+            compute: StreamId(2),
+            local_result: StreamId(3),
+            drop_leaf: StreamId(4),
+            prediction: StreamId(5),
+        }
+    }
+
+    fn schema() -> Schema {
+        Schema::classification("t", Schema::all_categorical(4, 2), 2)
+    }
+
+    fn ma(config: VhtConfig) -> ModelAggregator {
+        ModelAggregator::new(schema(), config, ids())
+    }
+
+    fn inst(bits: [u32; 4], class: u32) -> Instance {
+        Instance::dense(bits.map(|b| b as f32).to_vec(), Label::Class(class))
+    }
+
+    /// Feed instances where attribute 0 determines the class until the MA
+    /// opens a split round; reply as all LS instances; check it splits.
+    #[test]
+    fn full_split_round_via_events() {
+        let config = VhtConfig { parallelism: 2, grace_period: 50, ..Default::default() };
+        let mut m = ma(config);
+        let mut ctx = Ctx::new(0, 1);
+        let mut compute_seen = None;
+        for i in 0..200u32 {
+            let a0 = i % 2;
+            m.process(Event::Instance { id: i as u64, inst: inst([a0, i % 2, 0, 1], a0) }, &mut ctx);
+            for (s, _, e) in ctx.take() {
+                if s == ids().compute {
+                    if let Event::Compute { leaf, seq, .. } = e {
+                        compute_seen = Some((leaf, seq));
+                    }
+                }
+            }
+            if compute_seen.is_some() {
+                break;
+            }
+        }
+        let (leaf, seq) = compute_seen.expect("MA never opened a split round");
+
+        // two LS replies over disjoint attribute sets (key grouping
+        // guarantees disjointness): attr 0 is the clear winner
+        let dist = vec![30.0, 0.0, 0.0, 30.0]; // v0->c0, v1->c1
+        m.process(
+            Event::LocalResult {
+                leaf,
+                seq,
+                best_attr: 0,
+                best: 0.95,
+                second_attr: 2,
+                second: 0.01,
+                best_dist: dist.clone(),
+            },
+            &mut ctx,
+        );
+        m.process(
+            Event::LocalResult {
+                leaf,
+                seq,
+                best_attr: 1,
+                best: 0.02,
+                second_attr: 3,
+                second: 0.0,
+                best_dist: vec![1.0; 4],
+            },
+            &mut ctx,
+        );
+        let drops: Vec<_> = ctx
+            .take()
+            .into_iter()
+            .filter(|(s, _, _)| *s == ids().drop_leaf)
+            .collect();
+        assert_eq!(drops.len(), 1, "split must broadcast exactly one drop");
+        assert_eq!(m.tree().n_splits, 1);
+        // children seeded from dist: majority predictions follow attr 0
+        let p0 = m.predict(&inst([0, 0, 0, 0], 0));
+        let p1 = m.predict(&inst([1, 0, 0, 0], 0));
+        assert_eq!(p0, Output::Class(0));
+        assert_eq!(p1, Output::Class(1));
+    }
+
+    #[test]
+    fn stale_local_result_ignored() {
+        let config = VhtConfig { parallelism: 1, grace_period: 50, ..Default::default() };
+        let mut m = ma(config);
+        let mut ctx = Ctx::new(0, 1);
+        // result for an unknown leaf/seq must be a no-op
+        m.process(
+            Event::LocalResult {
+                leaf: 999,
+                seq: 7,
+                best_attr: 0,
+                best: 1.0,
+                second_attr: 1,
+                second: 0.0,
+                best_dist: vec![],
+            },
+            &mut ctx,
+        );
+        assert_eq!(m.tree().n_splits, 0);
+        assert!(ctx.take().is_empty());
+    }
+
+    #[test]
+    fn wok_sheds_and_wk_buffers_during_round() {
+        for (buffering, expect_shed) in
+            [(SplitBuffering::Discard, true), (SplitBuffering::Buffer(1000), false)]
+        {
+            let config = VhtConfig {
+                parallelism: 1,
+                grace_period: 10,
+                timeout_instances: 10_000,
+                buffering,
+                ..Default::default()
+            };
+            let mut m = ma(config);
+            let mut ctx = Ctx::new(0, 1);
+            // drive until a round opens, then keep sending to the same leaf
+            for i in 0..200u32 {
+                let a0 = i % 2;
+                m.process(
+                    Event::Instance { id: i as u64, inst: inst([a0, 0, 0, 0], a0) },
+                    &mut ctx,
+                );
+                ctx.take();
+            }
+            if expect_shed {
+                assert!(m.stats.shed > 0, "wok should shed during pending round");
+            } else {
+                assert_eq!(m.stats.shed, 0, "wk(1000) should buffer, not shed");
+            }
+        }
+    }
+
+    #[test]
+    fn timeout_resolves_round_without_all_replies() {
+        let config = VhtConfig {
+            parallelism: 4, // 4 replies expected, none will come
+            grace_period: 10,
+            timeout_instances: 20,
+            ..Default::default()
+        };
+        let mut m = ma(config);
+        let mut ctx = Ctx::new(0, 1);
+        for i in 0..200u32 {
+            let a0 = i % 2;
+            m.process(Event::Instance { id: i as u64, inst: inst([a0, 0, 0, 0], a0) }, &mut ctx);
+            ctx.take();
+        }
+        assert!(m.stats.timeouts > 0, "rounds must time out");
+        assert!(
+            m.tree().pending_leaves().len() <= 1,
+            "timed-out rounds must not accumulate"
+        );
+    }
+}

@@ -1,0 +1,299 @@
+//! MA-side tree structure for the Vertical Hoeffding Tree.
+//!
+//! The model aggregator holds the tree *without* attribute observers —
+//! those live in the distributed local-statistics table (the memory
+//! argument of §6.1). Leaves keep only the class marginals (for prediction
+//! and purity checks), the instance count `n_l`, and the in-flight split
+//! state.
+//!
+//! Binning happens at the MA before decomposition (source-side
+//! discretization): attribute events carry the *bin*, so all LS instances
+//! and the tree agree on thresholds by construction.
+
+use crate::common::fxhash::FxHashMap;
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::core::instance::Instance;
+use crate::core::observers::Binner;
+use crate::core::{AttributeKind, Schema};
+
+/// In-flight split-decision state of a leaf (one `compute` round).
+#[derive(Clone, Debug)]
+pub struct PendingSplit {
+    pub seq: u32,
+    /// LS instances expected to reply.
+    pub expected: u32,
+    /// (best_attr, best, second, child-dist of best) per received reply.
+    pub replies: Vec<(u32, f64, f64, Vec<f32>)>,
+    /// n_l when the round started (used in the Hoeffding bound).
+    pub n_l: f64,
+    /// Source instances seen since the round started (timeout ticking).
+    pub age: u32,
+    /// Instances buffered while the decision is pending (wk(z) mode).
+    pub buffer: Vec<Instance>,
+    /// Instances discarded while pending (wok) — load-shedding metric.
+    pub shed: u64,
+}
+
+/// A leaf of the MA tree.
+#[derive(Clone, Debug)]
+pub struct MaLeaf {
+    pub class_counts: Vec<f64>,
+    pub n_l: f64,
+    pub weight_since_attempt: f64,
+    pub depth: u32,
+    pub pending: Option<PendingSplit>,
+}
+
+impl MaLeaf {
+    pub fn new(n_classes: u32, depth: u32) -> Self {
+        MaLeaf {
+            class_counts: vec![0.0; n_classes as usize],
+            n_l: 0.0,
+            weight_since_attempt: 0.0,
+            depth,
+            pending: None,
+        }
+    }
+
+    pub fn majority(&self) -> Option<u32> {
+        let (mut best, mut bw) = (None, 0.0);
+        for (c, &w) in self.class_counts.iter().enumerate() {
+            if w > bw {
+                bw = w;
+                best = Some(c as u32);
+            }
+        }
+        best
+    }
+
+    pub fn is_pure(&self) -> bool {
+        self.class_counts.iter().filter(|&&w| w > 0.0).count() <= 1
+    }
+}
+
+/// MA tree node.
+#[derive(Clone, Debug)]
+pub enum MaNode {
+    Split { attr: u32, children: Vec<u32> },
+    Leaf(MaLeaf),
+}
+
+/// The VHT model as held by the model aggregator.
+pub struct MaTree {
+    pub schema: Schema,
+    /// Sparse mode: presence routing (2-way splits), no binners.
+    pub sparse: bool,
+    nodes: Vec<MaNode>,
+    binners: Vec<Option<Binner>>,
+    /// Monotonic leaf ids: the LS table is keyed by these, never reused, so
+    /// a stale `attribute` event for a dropped leaf cannot corrupt a new
+    /// leaf's statistics.
+    leaf_ids: Vec<u64>,
+    /// Reverse map: live leaf id → node index (split rounds resolve by id).
+    leaf_index: FxHashMap<u64, u32>,
+    next_leaf_id: u64,
+    pub n_splits: u64,
+}
+
+impl MaTree {
+    pub fn new(schema: Schema) -> Self {
+        let binners = schema
+            .attributes
+            .iter()
+            .map(|a| match a {
+                AttributeKind::Numeric => Some(Binner::new(schema.numeric_bins)),
+                AttributeKind::Categorical { .. } => None,
+            })
+            .collect();
+        let root = MaNode::Leaf(MaLeaf::new(schema.n_classes(), 0));
+        MaTree {
+            schema,
+            sparse: false,
+            nodes: vec![root],
+            binners,
+            leaf_ids: vec![0],
+            leaf_index: { let mut m = FxHashMap::default(); m.insert(0u64, 0u32); m },
+            next_leaf_id: 1,
+            n_splits: 0,
+        }
+    }
+
+    /// Observe + bin a value (training path).
+    #[inline]
+    pub fn bin_observe(&mut self, attr: usize, value: f32) -> u32 {
+        match &mut self.binners[attr] {
+            Some(b) => b.observe(value),
+            None => value as u32,
+        }
+    }
+
+    #[inline]
+    pub fn bin_of(&self, attr: usize, value: f32) -> u32 {
+        match &self.binners[attr] {
+            Some(b) => b.bin_of(value),
+            None => value as u32,
+        }
+    }
+
+    /// Sort to a leaf; returns the node index. Sparse mode routes by
+    /// presence (children: 0 = absent, 1 = present).
+    pub fn sort(&self, inst: &Instance) -> u32 {
+        let mut node = 0u32;
+        loop {
+            match &self.nodes[node as usize] {
+                MaNode::Leaf(_) => return node,
+                MaNode::Split { attr, children } => {
+                    let v = inst.value(*attr as usize);
+                    let bin = if self.sparse {
+                        (v != 0.0) as usize
+                    } else {
+                        self.bin_of(*attr as usize, v) as usize
+                    };
+                    node = children[bin.min(children.len() - 1)];
+                }
+            }
+        }
+    }
+
+    /// Stable leaf id of a leaf node index (key of the LS table).
+    pub fn leaf_id(&self, node: u32) -> u64 {
+        self.leaf_ids[node as usize]
+    }
+
+    /// Leaf id if `node` is (still) a leaf.
+    pub fn leaf_id_checked(&self, node: u32) -> Option<u64> {
+        matches!(self.nodes.get(node as usize), Some(MaNode::Leaf(_)))
+            .then(|| self.leaf_ids[node as usize])
+    }
+
+    /// Node index of a live leaf id (None once the leaf was split).
+    pub fn node_of_leaf(&self, leaf_id: u64) -> Option<u32> {
+        self.leaf_index.get(&leaf_id).copied()
+    }
+
+    pub fn leaf(&self, node: u32) -> &MaLeaf {
+        match &self.nodes[node as usize] {
+            MaNode::Leaf(l) => l,
+            _ => unreachable!("not a leaf"),
+        }
+    }
+
+    pub fn leaf_mut(&mut self, node: u32) -> &mut MaLeaf {
+        match &mut self.nodes[node as usize] {
+            MaNode::Leaf(l) => l,
+            _ => unreachable!("not a leaf"),
+        }
+    }
+
+    /// All node indices that are leaves with a pending split.
+    pub fn pending_leaves(&self) -> Vec<u32> {
+        (0..self.nodes.len() as u32)
+            .filter(|&i| matches!(&self.nodes[i as usize], MaNode::Leaf(l) if l.pending.is_some()))
+            .collect()
+    }
+
+    /// Split `node` on `attr`; children seeded from `dist` (flattened
+    /// `[arity, n_classes]` counts observed at the winning LS). Returns the
+    /// dropped leaf id (to broadcast `drop`).
+    pub fn split(&mut self, node: u32, attr: u32, dist: &[f32]) -> u64 {
+        let depth = self.leaf(node).depth;
+        let dropped = self.leaf_ids[node as usize];
+        let arity =
+            if self.sparse { 2 } else { self.schema.arity(attr as usize) as usize };
+        let c = self.schema.n_classes() as usize;
+        let mut children = Vec::with_capacity(arity);
+        for v in 0..arity {
+            let mut leaf = MaLeaf::new(c as u32, depth + 1);
+            for cc in 0..c {
+                let idx = v * c + cc;
+                if idx < dist.len() {
+                    leaf.class_counts[cc] = dist[idx] as f64;
+                }
+            }
+            leaf.n_l = leaf.class_counts.iter().sum();
+            self.nodes.push(MaNode::Leaf(leaf));
+            self.leaf_ids.push(self.next_leaf_id);
+            self.leaf_index.insert(self.next_leaf_id, (self.nodes.len() - 1) as u32);
+            self.next_leaf_id += 1;
+            children.push((self.nodes.len() - 1) as u32);
+        }
+        self.leaf_index.remove(&dropped);
+        self.nodes[node as usize] = MaNode::Split { attr, children };
+        self.n_splits += 1;
+        dropped
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, MaNode::Leaf(_))).count()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self
+                .nodes
+                .iter()
+                .map(|n| match n {
+                    MaNode::Split { children, .. } => 16 + vec_flat_bytes(children),
+                    MaNode::Leaf(l) => {
+                        std::mem::size_of::<MaLeaf>() + vec_flat_bytes(&l.class_counts)
+                    }
+                })
+                .sum::<usize>()
+            + self.leaf_ids.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::instance::Label;
+
+    fn schema() -> Schema {
+        Schema::classification("t", Schema::all_categorical(3, 2), 2)
+    }
+
+    #[test]
+    fn root_is_leaf_zero() {
+        let t = MaTree::new(schema());
+        let inst = Instance::dense(vec![0.0, 1.0, 0.0], Label::None);
+        assert_eq!(t.sort(&inst), 0);
+        assert_eq!(t.leaf_id(0), 0);
+    }
+
+    #[test]
+    fn split_routes_children_and_ids_are_fresh() {
+        let mut t = MaTree::new(schema());
+        // dist: value 0 -> class 0 (10), value 1 -> class 1 (20)
+        let dropped = t.split(0, 1, &[10.0, 0.0, 0.0, 20.0]);
+        assert_eq!(dropped, 0);
+        assert_eq!(t.n_leaves(), 2);
+        let i0 = Instance::dense(vec![0.0, 0.0, 0.0], Label::None);
+        let i1 = Instance::dense(vec![0.0, 1.0, 0.0], Label::None);
+        let l0 = t.sort(&i0);
+        let l1 = t.sort(&i1);
+        assert_ne!(l0, l1);
+        assert_ne!(t.leaf_id(l0), 0, "new leaves must have fresh ids");
+        assert_eq!(t.leaf(l0).majority(), Some(0));
+        assert_eq!(t.leaf(l1).majority(), Some(1));
+        assert_eq!(t.leaf(l1).depth, 1);
+    }
+
+    #[test]
+    fn numeric_binning_routes() {
+        let s = Schema::classification("n", Schema::all_numeric(1), 2);
+        let mut t = MaTree::new(s);
+        for i in 0..200 {
+            t.bin_observe(0, i as f32);
+        }
+        let dist = vec![0.0; 32];
+        t.split(0, 0, &dist);
+        let low = t.sort(&Instance::dense(vec![1.0], Label::None));
+        let high = t.sort(&Instance::dense(vec![199.0], Label::None));
+        assert_ne!(low, high);
+    }
+}

@@ -1,0 +1,458 @@
+//! CluStream (Aggarwal et al. 2003), as distributed in SAMOA (paper §5):
+//! online **micro-clusters** (cluster-feature vectors) absorbing points
+//! within a boundary, periodically compressed into **macro-clusters** by
+//! weighted k-means (triggered every `macro_period` points, e.g. 10 000).
+//!
+//! The batch nearest-centroid assignment is the XLA `cluster` artifact
+//! ([`crate::runtime::cluster`]); the distributed form runs assignment on
+//! worker processors against broadcast centroid snapshots with the
+//! aggregator applying updates.
+
+use std::sync::Arc;
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::common::Rng;
+use crate::core::instance::Instance;
+use crate::core::Schema;
+use crate::runtime::cluster as rt_cluster;
+use crate::topology::{Ctx, Event, Processor, StreamId};
+
+use super::kmeans::kmeans;
+
+/// One micro-cluster: CF vector (n, linear sum, square sum, timestamps).
+#[derive(Clone, Debug)]
+pub struct MicroCluster {
+    pub n: f64,
+    pub ls: Vec<f64>,
+    pub ss: f64,
+    pub t_sum: f64,
+}
+
+impl MicroCluster {
+    fn new(d: usize) -> Self {
+        MicroCluster { n: 0.0, ls: vec![0.0; d], ss: 0.0, t_sum: 0.0 }
+    }
+
+    fn seed(x: &[f32], t: f64) -> Self {
+        let ls: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let ss = ls.iter().map(|v| v * v).sum();
+        MicroCluster { n: 1.0, ls, ss, t_sum: t }
+    }
+
+    #[inline]
+    pub fn center(&self, out: &mut [f32]) {
+        let n = self.n.max(1e-12);
+        for (o, &l) in out.iter_mut().zip(&self.ls) {
+            *o = (l / n) as f32;
+        }
+    }
+
+    /// RMS deviation of members from the center (the absorb boundary).
+    pub fn radius(&self) -> f64 {
+        if self.n < 1.0 {
+            return 0.0;
+        }
+        let mean_sq = self.ss / self.n;
+        let center_sq: f64 = self.ls.iter().map(|l| (l / self.n) * (l / self.n)).sum();
+        (mean_sq - center_sq).max(0.0).sqrt()
+    }
+
+    fn absorb(&mut self, x: &[f32], t: f64) {
+        self.n += 1.0;
+        for (l, &v) in self.ls.iter_mut().zip(x) {
+            *l += v as f64;
+        }
+        self.ss += x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        self.t_sum += t;
+    }
+
+    fn merge(&mut self, other: &MicroCluster) {
+        self.n += other.n;
+        for (l, o) in self.ls.iter_mut().zip(&other.ls) {
+            *l += o;
+        }
+        self.ss += other.ss;
+        self.t_sum += other.t_sum;
+    }
+}
+
+/// CluStream configuration.
+#[derive(Clone, Debug)]
+pub struct CluStreamConfig {
+    /// Maximum number of micro-clusters (q).
+    pub max_micro: usize,
+    /// Macro clusters (k of the k-means phase).
+    pub k: usize,
+    /// Micro-batch period: run macro clustering every this many points.
+    pub macro_period: u64,
+    /// Boundary factor: absorb when dist ≤ factor × radius.
+    pub boundary: f64,
+    /// Batch size for XLA-assisted assignment.
+    pub batch: usize,
+}
+
+impl Default for CluStreamConfig {
+    fn default() -> Self {
+        CluStreamConfig { max_micro: 100, k: 5, macro_period: 10_000, boundary: 2.0, batch: 64 }
+    }
+}
+
+/// Sequential CluStream (also the aggregator state of the distributed form).
+pub struct CluStream {
+    pub config: CluStreamConfig,
+    d: usize,
+    micro: Vec<MicroCluster>,
+    /// flattened centers cache for batch assignment
+    centers: Vec<f32>,
+    weights: Vec<f32>,
+    dirty: bool,
+    t: u64,
+    pending: Vec<Instance>,
+    pub macro_centers: Vec<f32>,
+    pub macro_runs: u64,
+    rng: Rng,
+}
+
+impl CluStream {
+    pub fn new(schema: &Schema, config: CluStreamConfig, seed: u64) -> Self {
+        let d = schema.n_attributes();
+        CluStream {
+            config,
+            d,
+            micro: Vec::new(),
+            centers: Vec::new(),
+            weights: Vec::new(),
+            dirty: true,
+            t: 0,
+            pending: Vec::new(),
+            macro_centers: Vec::new(),
+            macro_runs: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn n_micro(&self) -> usize {
+        self.micro.len()
+    }
+
+    pub fn micro_clusters(&self) -> &[MicroCluster] {
+        &self.micro
+    }
+
+    fn refresh_cache(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        self.centers.resize(self.micro.len() * self.d, 0.0);
+        self.weights.resize(self.micro.len(), 0.0);
+        for (i, m) in self.micro.iter().enumerate() {
+            m.center(&mut self.centers[i * self.d..(i + 1) * self.d]);
+            self.weights[i] = m.n as f32;
+        }
+        self.dirty = false;
+    }
+
+    /// Add one point (buffered; batch-flushed through the XLA kernel).
+    pub fn add(&mut self, inst: &Instance) {
+        self.pending.push(inst.clone());
+        if self.pending.len() >= self.config.batch {
+            self.flush();
+        }
+    }
+
+    /// Process buffered points.
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let batch = std::mem::take(&mut self.pending);
+        // batch nearest-centroid assignment (XLA artifact when available)
+        let assignments: Vec<Option<(usize, f64)>> = if self.micro.is_empty() {
+            vec![None; batch.len()]
+        } else {
+            self.refresh_cache();
+            let mut pts = vec![0f32; batch.len() * self.d];
+            for (i, inst) in batch.iter().enumerate() {
+                for (a, v) in inst.iter_stored() {
+                    if a < self.d {
+                        pts[i * self.d + a] = v;
+                    }
+                }
+            }
+            rt_cluster::assign(&pts, &self.centers, &self.weights, self.d)
+                .into_iter()
+                .map(Some)
+                .collect()
+        };
+
+        let mut point = vec![0f32; self.d];
+        for (inst, assignment) in batch.iter().zip(assignments) {
+            self.t += 1;
+            point.iter_mut().for_each(|p| *p = 0.0);
+            for (a, v) in inst.iter_stored() {
+                if a < self.d {
+                    point[a] = v;
+                }
+            }
+            match assignment {
+                Some((idx, d2)) if idx < self.micro.len() => {
+                    let m = &self.micro[idx];
+                    let r = m.radius();
+                    // singleton clusters have zero radius: use distance to
+                    // nearest other cluster as a proxy boundary
+                    let boundary = if m.n < 2.0 { r.max(d2.sqrt() * 0.5) } else { self.config.boundary * r };
+                    if d2.sqrt() <= boundary.max(1e-9) {
+                        self.micro[idx].absorb(&point, self.t as f64);
+                    } else {
+                        self.create(&point);
+                    }
+                }
+                _ => self.create(&point),
+            }
+            self.dirty = true;
+            if self.t % self.config.macro_period == 0 {
+                self.run_macro();
+            }
+        }
+    }
+
+    fn create(&mut self, point: &[f32]) {
+        if self.micro.len() >= self.config.max_micro {
+            // merge the two closest micro-clusters to make room
+            self.merge_closest();
+        }
+        self.micro.push(MicroCluster::seed(point, self.t as f64));
+        self.dirty = true;
+    }
+
+    fn merge_closest(&mut self) {
+        if self.micro.len() < 2 {
+            return;
+        }
+        self.refresh_cache();
+        let d = self.d;
+        let mut best = (0usize, 1usize, f64::MAX);
+        for i in 0..self.micro.len() {
+            for j in (i + 1)..self.micro.len() {
+                let dist: f64 = (0..d)
+                    .map(|x| {
+                        let e = (self.centers[i * d + x] - self.centers[j * d + x]) as f64;
+                        e * e
+                    })
+                    .sum();
+                if dist < best.2 {
+                    best = (i, j, dist);
+                }
+            }
+        }
+        let (i, j, _) = best;
+        let merged = self.micro[j].clone();
+        self.micro[i].merge(&merged);
+        self.micro.swap_remove(j);
+        self.dirty = true;
+    }
+
+    /// Macro phase: weighted k-means over the micro-cluster centers.
+    pub fn run_macro(&mut self) {
+        if self.micro.is_empty() {
+            return;
+        }
+        self.refresh_cache();
+        let weights: Vec<f64> = self.micro.iter().map(|m| m.n).collect();
+        let (centers, _sse) =
+            kmeans(&self.centers, &weights, self.d, self.config.k, 10, &mut self.rng);
+        self.macro_centers = centers;
+        self.macro_runs += 1;
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self
+                .micro
+                .iter()
+                .map(|m| std::mem::size_of::<MicroCluster>() + vec_flat_bytes(&m.ls))
+                .sum::<usize>()
+            + vec_flat_bytes(&self.centers)
+            + vec_flat_bytes(&self.macro_centers)
+    }
+}
+
+// ------------------------------------------------------ distributed form
+
+/// Worker: assigns points against the latest centroid snapshot and routes
+/// them (with the tentative assignment) to the aggregator.
+pub struct ClustreamWorker {
+    d: usize,
+    snapshot_centers: Arc<Vec<f32>>,
+    snapshot_weights: Arc<Vec<f32>>,
+    out: StreamId,
+}
+
+impl ClustreamWorker {
+    pub fn new(d: usize, out: StreamId) -> Self {
+        ClustreamWorker {
+            d,
+            snapshot_centers: Arc::new(Vec::new()),
+            snapshot_weights: Arc::new(Vec::new()),
+            out,
+        }
+    }
+}
+
+impl Processor for ClustreamWorker {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        match event {
+            Event::Instance { inst, .. } => {
+                let (idx, d2) = if self.snapshot_weights.is_empty() {
+                    (u32::MAX, f64::MAX)
+                } else {
+                    let mut pt = vec![0f32; self.d];
+                    for (a, v) in inst.iter_stored() {
+                        if a < self.d {
+                            pt[a] = v;
+                        }
+                    }
+                    let res = rt_cluster::assign_native(
+                        &pt,
+                        &self.snapshot_centers,
+                        &self.snapshot_weights,
+                        self.d,
+                    );
+                    (res[0].0 as u32, res[0].1)
+                };
+                ctx.emit_any(self.out, Event::ClusterAssign { idx, dist2: d2, inst });
+            }
+            Event::CentroidSnapshot { centers, weights, .. } => {
+                self.snapshot_centers = centers;
+                self.snapshot_weights = weights;
+            }
+            _ => {}
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "clustream-worker"
+    }
+}
+
+/// Aggregator: owns the micro-clusters; applies (re-checked) assignments
+/// and broadcasts fresh snapshots every `snapshot_every` points.
+pub struct ClustreamAggregator {
+    pub model: CluStream,
+    snapshot_stream: StreamId,
+    snapshot_every: u64,
+    seen: u64,
+    version: u64,
+}
+
+impl ClustreamAggregator {
+    pub fn new(model: CluStream, snapshot_stream: StreamId, snapshot_every: u64) -> Self {
+        ClustreamAggregator { model, snapshot_stream, snapshot_every, seen: 0, version: 0 }
+    }
+}
+
+impl Processor for ClustreamAggregator {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        if let Event::ClusterAssign { inst, .. } = event {
+            // worker assignment is advisory (snapshot may be stale);
+            // the aggregator re-assigns within its own batch pipeline
+            self.model.add(&inst);
+            self.seen += 1;
+            if self.seen % self.snapshot_every == 0 {
+                self.model.flush();
+                self.model.refresh_cache();
+                self.version += 1;
+                ctx.emit_any(
+                    self.snapshot_stream,
+                    Event::CentroidSnapshot {
+                        version: self.version,
+                        k: self.model.micro.len() as u32,
+                        d: self.model.d as u32,
+                        centers: Arc::new(self.model.centers.clone()),
+                        weights: Arc::new(self.model.weights.clone()),
+                    },
+                );
+            }
+        }
+    }
+
+    fn on_shutdown(&mut self, _ctx: &mut Ctx) {
+        self.model.flush();
+        self.model.run_macro();
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.model.mem_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "clustream-aggregator"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::instance::Label;
+
+    fn blob_instance(rng: &mut Rng, center: f32, d: usize) -> Instance {
+        let vals: Vec<f32> = (0..d).map(|_| center + 0.2 * rng.gaussian() as f32).collect();
+        Instance::dense(vals, Label::None)
+    }
+
+    fn schema(d: usize) -> Schema {
+        Schema::classification("c", Schema::all_numeric(d), 2)
+    }
+
+    #[test]
+    fn micro_clusters_form_around_blobs() {
+        let mut rng = Rng::new(1);
+        let mut cs = CluStream::new(&schema(4), CluStreamConfig::default(), 7);
+        for i in 0..3000 {
+            let c = [0.0f32, 5.0, 10.0][i % 3];
+            cs.add(&blob_instance(&mut rng, c, 4));
+        }
+        cs.flush();
+        assert!(cs.n_micro() >= 3, "micro={}", cs.n_micro());
+        assert!(cs.n_micro() <= cs.config.max_micro);
+    }
+
+    #[test]
+    fn macro_phase_triggers_periodically() {
+        let mut rng = Rng::new(2);
+        let cfg = CluStreamConfig { macro_period: 500, k: 3, ..Default::default() };
+        let mut cs = CluStream::new(&schema(4), cfg, 8);
+        for i in 0..2100 {
+            let c = [0.0f32, 5.0, 10.0][i % 3];
+            cs.add(&blob_instance(&mut rng, c, 4));
+        }
+        cs.flush();
+        assert!(cs.macro_runs >= 4, "runs={}", cs.macro_runs);
+        assert_eq!(cs.macro_centers.len(), 3 * 4);
+        // macro centers near the blob centers
+        let mut found = [false; 3];
+        for c in cs.macro_centers.chunks(4) {
+            let m = c.iter().sum::<f32>() / 4.0;
+            for (bi, &b) in [0.0f32, 5.0, 10.0].iter().enumerate() {
+                if (m - b).abs() < 1.0 {
+                    found[bi] = true;
+                }
+            }
+        }
+        assert!(found.iter().all(|&f| f), "macro centers {found:?}");
+    }
+
+    #[test]
+    fn micro_count_bounded_by_merging() {
+        let mut rng = Rng::new(3);
+        let cfg = CluStreamConfig { max_micro: 10, ..Default::default() };
+        let mut cs = CluStream::new(&schema(2), cfg, 9);
+        for _ in 0..2000 {
+            // uniformly scattered points force constant creation
+            let vals = vec![rng.f32() * 100.0, rng.f32() * 100.0];
+            cs.add(&Instance::dense(vals, Label::None));
+        }
+        cs.flush();
+        assert!(cs.n_micro() <= 10);
+    }
+}

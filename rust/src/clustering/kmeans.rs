@@ -1,0 +1,118 @@
+//! Weighted k-means — the offline macro-clustering phase of CluStream.
+
+use crate::common::Rng;
+
+/// One k-means run on weighted points. `points` is `n × d` row-major.
+/// Returns centroids (`k × d`) and the final weighted SSE.
+pub fn kmeans(
+    points: &[f32],
+    weights: &[f64],
+    d: usize,
+    k: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> (Vec<f32>, f64) {
+    let n = weights.len();
+    assert_eq!(points.len(), n * d);
+    let k = k.min(n.max(1));
+    if n == 0 {
+        return (vec![0.0; k * d], 0.0);
+    }
+
+    // k-means++ style seeding (weighted)
+    let mut centers = Vec::with_capacity(k * d);
+    let first = rng.choice_weighted(weights);
+    centers.extend_from_slice(&points[first * d..(first + 1) * d]);
+    let mut d2 = vec![f64::MAX; n];
+    while centers.len() < k * d {
+        let c0 = centers.len() / d - 1;
+        for p in 0..n {
+            let dist = sqdist(&points[p * d..(p + 1) * d], &centers[c0 * d..(c0 + 1) * d]);
+            d2[p] = d2[p].min(dist);
+        }
+        let probs: Vec<f64> = d2.iter().zip(weights).map(|(&a, &w)| a * w + 1e-12).collect();
+        let next = rng.choice_weighted(&probs);
+        centers.extend_from_slice(&points[next * d..(next + 1) * d]);
+    }
+
+    let mut assign = vec![0usize; n];
+    let mut sse = 0.0;
+    for _ in 0..iters {
+        // assignment
+        sse = 0.0;
+        for p in 0..n {
+            let pv = &points[p * d..(p + 1) * d];
+            let mut best = (0usize, f64::MAX);
+            for c in 0..k {
+                let dist = sqdist(pv, &centers[c * d..(c + 1) * d]);
+                if dist < best.1 {
+                    best = (c, dist);
+                }
+            }
+            assign[p] = best.0;
+            sse += best.1 * weights[p];
+        }
+        // update
+        let mut acc = vec![0f64; k * d];
+        let mut wsum = vec![0f64; k];
+        for p in 0..n {
+            let c = assign[p];
+            wsum[c] += weights[p];
+            for i in 0..d {
+                acc[c * d + i] += points[p * d + i] as f64 * weights[p];
+            }
+        }
+        for c in 0..k {
+            if wsum[c] > 0.0 {
+                for i in 0..d {
+                    centers[c * d + i] = (acc[c * d + i] / wsum[c]) as f32;
+                }
+            }
+        }
+    }
+    (centers, sse)
+}
+
+#[inline]
+fn sqdist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let e = (x - y) as f64;
+            e * e
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Rng::new(1);
+        let mut points = Vec::new();
+        let mut weights = Vec::new();
+        for i in 0..60 {
+            let off = if i < 30 { 0.0 } else { 10.0 };
+            points.push(off + rng.gaussian() as f32 * 0.3);
+            points.push(off + rng.gaussian() as f32 * 0.3);
+            weights.push(1.0);
+        }
+        let (centers, sse) = kmeans(&points, &weights, 2, 2, 10, &mut rng);
+        let c0 = (centers[0] + centers[1]) / 2.0;
+        let c1 = (centers[2] + centers[3]) / 2.0;
+        assert!((c0 - c1).abs() > 5.0, "centers not separated: {centers:?}");
+        assert!(sse < 60.0, "sse={sse}");
+    }
+
+    #[test]
+    fn weights_pull_centroids() {
+        let mut rng = Rng::new(2);
+        // two points, one heavy: k=1 centroid lands near the heavy one
+        let points = vec![0.0f32, 0.0, 10.0, 10.0];
+        let weights = vec![9.0, 1.0];
+        let (centers, _) = kmeans(&points, &weights, 2, 1, 5, &mut rng);
+        assert!(centers[0] < 3.0, "centroid {centers:?} ignored weights");
+    }
+}

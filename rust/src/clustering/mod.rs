@@ -1,0 +1,4 @@
+//! Stream clustering: CluStream micro/macro clusters (paper §5).
+pub mod clustream;
+pub mod kmeans;
+pub mod topology;

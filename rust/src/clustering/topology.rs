@@ -1,0 +1,87 @@
+//! Distributed CluStream topology (paper §5): shuffle-grouped assignment
+//! workers compute tentative nearest-centroid assignments against
+//! broadcast snapshots; a single aggregator owns the micro-clusters and
+//! periodically re-broadcasts centroids.
+//!
+//! ```text
+//!            instance (shuffle)            cluster-assign
+//!   source ───────────────► workers × p ═══════════════► aggregator
+//!                                ▲    centroid snapshot (all)   │
+//!                                ╚══════════════════════════════╝
+//! ```
+
+use crate::core::Schema;
+use crate::topology::{Grouping, ProcessorId, StreamId, Topology, TopologyBuilder};
+
+use super::clustream::{CluStream, CluStreamConfig, ClustreamAggregator, ClustreamWorker};
+
+/// Handles of an assembled CluStream topology.
+#[derive(Clone, Copy, Debug)]
+pub struct ClustreamHandles {
+    pub entry: StreamId,
+    pub assign: StreamId,
+    pub snapshot: StreamId,
+    pub workers: ProcessorId,
+    pub aggregator: ProcessorId,
+}
+
+/// Build the distributed CluStream topology with `p` assignment workers.
+pub fn build_topology(
+    schema: &Schema,
+    config: CluStreamConfig,
+    p: usize,
+    seed: u64,
+    snapshot_every: u64,
+) -> (Topology, ClustreamHandles) {
+    let mut b = TopologyBuilder::new("clustream");
+    // stream order: 0 entry, 1 assign, 2 snapshot
+    let assign = StreamId(1);
+    let snapshot = StreamId(2);
+    let d = schema.n_attributes();
+    let workers = b.add_processor("assign-worker", p, move |_| {
+        Box::new(ClustreamWorker::new(d, assign))
+    });
+    let schema2 = schema.clone();
+    let aggregator = b.add_processor("aggregator", 1, move |_| {
+        let model = CluStream::new(&schema2, config.clone(), seed);
+        Box::new(ClustreamAggregator::new(model, snapshot, snapshot_every))
+    });
+
+    let entry = b.stream("instance", None, workers, Grouping::Shuffle);
+    let a = b.stream("cluster-assign", Some(workers), aggregator, Grouping::Shuffle);
+    let s = b.stream("centroid-snapshot", Some(aggregator), workers, Grouping::All);
+    debug_assert_eq!((a, s), (assign, snapshot));
+
+    (b.build(), ClustreamHandles { entry, assign, snapshot, workers, aggregator })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::core::instance::{Instance, Label};
+    use crate::engine::LocalEngine;
+    use crate::topology::Event;
+
+    #[test]
+    fn distributed_clustream_finds_blobs() {
+        let schema = Schema::classification("b", Schema::all_numeric(4), 2);
+        let config = CluStreamConfig { max_micro: 30, k: 3, macro_period: 100_000, ..Default::default() };
+        let (topo, handles) = build_topology(&schema, config, 3, 5, 500);
+        let mut rng = Rng::new(1);
+        let source = (0..6000u64).map(move |id| {
+            let c = [0.0f32, 5.0, 10.0][(id % 3) as usize];
+            let vals: Vec<f32> = (0..4).map(|_| c + 0.2 * rng.gaussian() as f32).collect();
+            Event::Instance { id, inst: Instance::dense(vals, Label::None) }
+        });
+        let mut micro = 0usize;
+        let metrics = LocalEngine::new().run(&topo, handles.entry, source, |inst| {
+            micro = inst[handles.aggregator.0][0].mem_bytes(); // proxy: state grows
+        });
+        assert_eq!(metrics.source_instances, 6000);
+        // snapshots were broadcast back to all workers
+        assert!(metrics.streams[handles.snapshot.0].events >= 3 * 3);
+        assert!(metrics.streams[handles.assign.0].events == 6000);
+        assert!(micro > 0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Minimal argument parsing for the `samoa` CLI and experiment harness.
+//!
+//! No external crates are available offline, so this is a tiny typed
+//! key-value parser: `samoa exp fig4 --instances 1000000 --p 2,4,8`.
+
+use std::collections::BTreeMap;
+
+/// Parsed `--key value` / `--flag` arguments plus positional args.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (after the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of usize, e.g. `--p 2,4,8`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("exp fig4 --instances 500 --quiet");
+        assert_eq!(a.positional, vec!["exp", "fig4"]);
+        assert_eq!(a.usize("instances", 0), 500);
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--delta=1e-7 --p=2,4");
+        assert_eq!(a.f64("delta", 0.0), 1e-7);
+        assert_eq!(a.usize_list("p", &[]), vec![2, 4]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.get_or("name", "x"), "x");
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

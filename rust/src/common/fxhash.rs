@@ -1,0 +1,93 @@
+//! Dependency-free FxHash-style hasher for the hot-path tables (the LS
+//! counter table sees one lookup per attribute event; SipHash's keyed
+//! strength is wasted there — keys are internal ids, not attacker input).
+//!
+//! §Perf: switching the LS table and the MA leaf index to this hasher is
+//! one of the recorded optimization steps (EXPERIMENTS.md §Perf).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Firefox-style multiply-rotate hasher (word-at-a-time).
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut word = [0u8; 8];
+            word[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(word));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+/// `HashMap` build-hasher alias.
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// Fast HashMap for internal integer keys.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distributes_sequential_keys() {
+        let mut buckets = [0u32; 16];
+        for k in 0..10_000u64 {
+            let mut h = FxHasher::default();
+            h.write_u64(k);
+            buckets[(h.finish() % 16) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!(b > 400 && b < 900, "skewed bucket: {buckets:?}");
+        }
+    }
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for k in 0..1000 {
+            m.insert(k, k as u32 * 2);
+        }
+        assert_eq!(m.get(&500), Some(&1000));
+        assert_eq!(m.len(), 1000);
+    }
+}

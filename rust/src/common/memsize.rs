@@ -1,0 +1,79 @@
+//! Deep memory-size estimation for model state.
+//!
+//! Reproduces Tables 6–7 of the paper (memory consumption of MAMR/VAMR) as
+//! *model state size*: the bytes held by trees, counter tables and rule
+//! sets. JVM object-header overhead from the original is intentionally not
+//! mimicked; DESIGN.md documents this substitution.
+
+/// Types that can report (an estimate of) their deep heap footprint.
+pub trait MemSize {
+    /// Estimated bytes of owned state, including heap allocations.
+    fn mem_bytes(&self) -> usize;
+}
+
+impl MemSize for f32 {
+    fn mem_bytes(&self) -> usize {
+        4
+    }
+}
+
+impl MemSize for f64 {
+    fn mem_bytes(&self) -> usize {
+        8
+    }
+}
+
+impl MemSize for u32 {
+    fn mem_bytes(&self) -> usize {
+        4
+    }
+}
+
+impl MemSize for usize {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<usize>()
+    }
+}
+
+impl<T: MemSize> MemSize for Vec<T> {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.iter().map(|x| x.mem_bytes()).sum::<usize>()
+            + (self.capacity() - self.len()) * std::mem::size_of::<T>()
+    }
+}
+
+impl<T: MemSize> MemSize for Option<T> {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.as_ref().map_or(0, |x| x.mem_bytes())
+    }
+}
+
+impl<T: MemSize> MemSize for Box<T> {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + (**self).mem_bytes()
+    }
+}
+
+/// Helper: bytes of a flat numeric Vec (no per-element recursion).
+pub fn vec_flat_bytes<T>(v: &Vec<T>) -> usize {
+    std::mem::size_of::<Vec<T>>() + v.capacity() * std::mem::size_of::<T>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_of_f32() {
+        let v = vec![0f32; 100];
+        assert!(v.mem_bytes() >= 400);
+    }
+
+    #[test]
+    fn flat_bytes_counts_capacity() {
+        let mut v = Vec::with_capacity(64);
+        v.push(1u64);
+        assert!(vec_flat_bytes(&v) >= 64 * 8);
+    }
+}

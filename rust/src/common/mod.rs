@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic RNG, samplers, sizing, tiny CLI parsing.
+
+pub mod rng;
+pub mod zipf;
+pub mod cli;
+pub mod memsize;
+pub mod fxhash;
+
+pub use memsize::MemSize;
+pub use rng::Rng;

@@ -1,0 +1,251 @@
+//! Native split criteria — the semantic twin of `python/compile/kernels`.
+//!
+//! These implementations follow `ref.py` exactly (same EPS policy: clamp
+//! denominators, never add eps to counts, 0·log 0 = 0) so that the XLA
+//! path and the native path are interchangeable to float tolerance. The
+//! integration test `tests/runtime_vs_native.rs` enforces this.
+
+use super::observers::CounterBlock;
+
+/// Matches `_EPS` in ref.py.
+pub const EPS: f64 = 1e-12;
+
+/// Shannon entropy (bits) of an unnormalized count slice.
+/// All-zero counts yield 0.
+pub fn entropy(counts: &[f32]) -> f64 {
+    let total: f64 = counts.iter().map(|&c| c as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0.0 {
+            let p = c as f64 / total;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Information gain of splitting on the attribute observed by `block`.
+///
+/// gain = H(class) - Σ_v (N_v / N) · H(class | value = v); 0 if empty.
+pub fn info_gain(block: &CounterBlock) -> f64 {
+    let total = block.total() as f64;
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let h_before = entropy(&block.class_counts());
+    let c = block.c() as usize;
+    let mut h_after = 0.0;
+    for v in 0..block.v() {
+        let row = &block.raw()[(v as usize) * c..(v as usize + 1) * c];
+        let nv: f64 = row.iter().map(|&x| x as f64).sum();
+        if nv > 0.0 {
+            h_after += (nv / total) * entropy(row);
+        }
+    }
+    h_before - h_after
+}
+
+/// Gini impurity reduction — alternative criterion (ablation bench).
+pub fn gini_gain(block: &CounterBlock) -> f64 {
+    fn gini(counts: &[f32]) -> f64 {
+        let total: f64 = counts.iter().map(|&c| c as f64).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        1.0 - counts
+            .iter()
+            .map(|&c| {
+                let p = c as f64 / total;
+                p * p
+            })
+            .sum::<f64>()
+    }
+    let total = block.total() as f64;
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let g_before = gini(&block.class_counts());
+    let c = block.c() as usize;
+    let mut g_after = 0.0;
+    for v in 0..block.v() {
+        let row = &block.raw()[(v as usize) * c..(v as usize + 1) * c];
+        let nv: f64 = row.iter().map(|&x| x as f64).sum();
+        if nv > 0.0 {
+            g_after += (nv / total) * gini(row);
+        }
+    }
+    g_before - g_after
+}
+
+/// (count, sum, sum-of-squares) accumulator for regression targets.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct VarStats {
+    pub n: f64,
+    pub sum: f64,
+    pub sq: f64,
+}
+
+impl VarStats {
+    #[inline]
+    pub fn add(&mut self, y: f64, w: f64) {
+        self.n += w;
+        self.sum += w * y;
+        self.sq += w * y * y;
+    }
+
+    pub fn merge(&self, other: &VarStats) -> VarStats {
+        VarStats { n: self.n + other.n, sum: self.sum + other.sum, sq: self.sq + other.sq }
+    }
+
+    pub fn sub(&self, other: &VarStats) -> VarStats {
+        VarStats { n: self.n - other.n, sum: self.sum - other.sum, sq: self.sq - other.sq }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum / self.n.max(EPS)
+    }
+
+    pub fn variance(&self) -> f64 {
+        (self.sq / self.n.max(EPS) - self.mean() * self.mean()).max(0.0)
+    }
+
+    pub fn sd(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Standard-deviation reduction of splitting `total` into `left`/`right`
+/// (matches `sdr_ref` in ref.py; empty side ⇒ 0).
+pub fn sdr(total: &VarStats, left: &VarStats, right: &VarStats) -> f64 {
+    if left.n <= 0.0 || right.n <= 0.0 {
+        return 0.0;
+    }
+    let n = total.n.max(EPS);
+    total.sd() - (left.n / n) * left.sd() - (right.n / n) * right.sd()
+}
+
+/// Full SDR surface over cumulative per-bin stats, as the XLA kernel
+/// computes it: `bins[b]` holds the VarStats of target values whose
+/// attribute fell in bin b; returns SDR for thresholds after each bin.
+pub fn sdr_surface(bins: &[VarStats]) -> Vec<f64> {
+    let total = bins.iter().fold(VarStats::default(), |a, b| a.merge(b));
+    let mut out = Vec::with_capacity(bins.len());
+    let mut left = VarStats::default();
+    for b in bins {
+        left = left.merge(b);
+        let right = total.sub(&left);
+        out.push(sdr(&total, &left, &right));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_basics() {
+        assert_eq!(entropy(&[]), 0.0);
+        assert_eq!(entropy(&[0.0, 0.0]), 0.0);
+        assert!((entropy(&[1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((entropy(&[1.0, 1.0, 1.0, 1.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(entropy(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn info_gain_perfect_split() {
+        // value v determines class v%2: gain = H(class) = 1 bit
+        let mut b = CounterBlock::new(4, 2);
+        for v in 0..4 {
+            b.add(v, v % 2, 10.0);
+        }
+        assert!((info_gain(&b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn info_gain_useless_attribute() {
+        // class independent of value: gain 0
+        let mut b = CounterBlock::new(4, 2);
+        for v in 0..4 {
+            b.add(v, 0, 5.0);
+            b.add(v, 1, 5.0);
+        }
+        assert!(info_gain(&b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn info_gain_empty_block_zero() {
+        let b = CounterBlock::new(4, 2);
+        assert_eq!(info_gain(&b), 0.0);
+    }
+
+    #[test]
+    fn gini_orders_like_entropy_on_clear_cases() {
+        let mut good = CounterBlock::new(2, 2);
+        good.add(0, 0, 10.0);
+        good.add(1, 1, 10.0);
+        let mut bad = CounterBlock::new(2, 2);
+        for v in 0..2 {
+            bad.add(v, 0, 5.0);
+            bad.add(v, 1, 5.0);
+        }
+        assert!(gini_gain(&good) > gini_gain(&bad));
+    }
+
+    #[test]
+    fn varstats_moments() {
+        let mut s = VarStats::default();
+        for y in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(y, 1.0);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.sd() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sdr_perfect_separation() {
+        let mut l = VarStats::default();
+        let mut r = VarStats::default();
+        for _ in 0..10 {
+            l.add(0.0, 1.0);
+            r.add(10.0, 1.0);
+        }
+        let t = l.merge(&r);
+        // sd(total)=5, children sd=0 → sdr=5
+        assert!((sdr(&t, &l, &r) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sdr_empty_side_invalid() {
+        let mut l = VarStats::default();
+        for y in [1.0, 2.0, 3.0] {
+            l.add(y, 1.0);
+        }
+        let r = VarStats::default();
+        let t = l.merge(&r);
+        assert_eq!(sdr(&t, &l, &r), 0.0);
+    }
+
+    #[test]
+    fn sdr_surface_peak_at_boundary() {
+        // bins 0..4 hold y=0, bins 4..8 hold y=10 → best threshold after bin 3
+        let mut bins = vec![VarStats::default(); 8];
+        for (i, b) in bins.iter_mut().enumerate() {
+            for _ in 0..5 {
+                b.add(if i < 4 { 0.0 } else { 10.0 }, 1.0);
+            }
+        }
+        let surf = sdr_surface(&bins);
+        let best = surf
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 3);
+        assert_eq!(*surf.last().unwrap(), 0.0); // right side empty at last bin
+    }
+}

@@ -1,0 +1,58 @@
+//! The Hoeffding bound — the statistical heart of VFDT/VHT (paper §6):
+//!
+//! ε = sqrt( R² ln(1/δ) / 2n )
+//!
+//! guarantees that when the observed gain difference ΔG between the best
+//! and second-best attribute exceeds ε, the best attribute is truly best
+//! with probability ≥ 1 − δ.
+
+/// Hoeffding bound for criterion range `r`, confidence `delta`, `n` obs.
+#[inline]
+pub fn hoeffding_bound(r: f64, delta: f64, n: f64) -> f64 {
+    ((r * r * (1.0 / delta).ln()) / (2.0 * n.max(1.0))).sqrt()
+}
+
+/// Range R of information gain with `n_classes` (log2 C bits).
+#[inline]
+pub fn infogain_range(n_classes: u32) -> f64 {
+    (n_classes.max(2) as f64).log2()
+}
+
+/// Split decision given the two best scores (paper Alg. 4, line 5):
+/// split if ΔG > ε, or tie-break if ε < τ.
+#[inline]
+pub fn should_split(best: f64, second: f64, epsilon: f64, tau: f64) -> bool {
+    let dg = best - second;
+    dg > epsilon || epsilon < tau
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_shrinks_with_n() {
+        let e1 = hoeffding_bound(1.0, 1e-7, 200.0);
+        let e2 = hoeffding_bound(1.0, 1e-7, 20_000.0);
+        assert!(e2 < e1);
+        assert!((e1 / e2 - 10.0).abs() < 1e-9); // 1/sqrt(n) scaling
+    }
+
+    #[test]
+    fn bound_grows_with_range() {
+        assert!(hoeffding_bound(3.0, 1e-7, 100.0) > hoeffding_bound(1.0, 1e-7, 100.0));
+    }
+
+    #[test]
+    fn range_of_binary_is_one_bit() {
+        assert_eq!(infogain_range(2), 1.0);
+        assert!((infogain_range(8) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_decision_cases() {
+        assert!(should_split(0.5, 0.1, 0.2, 0.05)); // clear winner
+        assert!(!should_split(0.5, 0.45, 0.2, 0.05)); // too close, ε big
+        assert!(should_split(0.5, 0.49, 0.04, 0.05)); // tie-break: ε < τ
+    }
+}

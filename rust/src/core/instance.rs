@@ -1,0 +1,159 @@
+//! Instances: the unit of data flowing through every topology.
+//!
+//! Dense instances store all attribute values; sparse instances (the
+//! random-tweet stream, §6.3) store only the non-zero (attribute, value)
+//! pairs — VHT's vertical parallelism only ships the non-zeros downstream,
+//! which is where the constant-per-instance overhead observed for sparse
+//! data in Fig. 9 comes from.
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::common::MemSize;
+
+/// Attribute values of one instance.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Values {
+    Dense(Vec<f32>),
+    /// Sorted by attribute index; attributes not present are 0.
+    Sparse { indices: Vec<u32>, values: Vec<f32>, n_attributes: u32 },
+}
+
+/// Prediction target of one instance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Label {
+    Class(u32),
+    Numeric(f64),
+    /// Unlabeled (serving-only instance).
+    None,
+}
+
+/// One stream element.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub values: Values,
+    pub label: Label,
+    pub weight: f32,
+}
+
+impl Instance {
+    pub fn dense(values: Vec<f32>, label: Label) -> Self {
+        Instance { values: Values::Dense(values), label, weight: 1.0 }
+    }
+
+    pub fn sparse(indices: Vec<u32>, values: Vec<f32>, n_attributes: u32, label: Label) -> Self {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        debug_assert_eq!(indices.len(), values.len());
+        Instance { values: Values::Sparse { indices, values, n_attributes }, label, weight: 1.0 }
+    }
+
+    /// Value of attribute `i` (0.0 for absent sparse attributes).
+    #[inline]
+    pub fn value(&self, i: usize) -> f32 {
+        match &self.values {
+            Values::Dense(v) => v[i],
+            Values::Sparse { indices, values, .. } => {
+                match indices.binary_search(&(i as u32)) {
+                    Ok(pos) => values[pos],
+                    Err(_) => 0.0,
+                }
+            }
+        }
+    }
+
+    pub fn n_attributes(&self) -> usize {
+        match &self.values {
+            Values::Dense(v) => v.len(),
+            Values::Sparse { n_attributes, .. } => *n_attributes as usize,
+        }
+    }
+
+    /// Number of explicitly stored values (= attribute messages VHT sends).
+    pub fn n_stored(&self) -> usize {
+        match &self.values {
+            Values::Dense(v) => v.len(),
+            Values::Sparse { values, .. } => values.len(),
+        }
+    }
+
+    /// Iterate (attribute index, value) over stored values.
+    pub fn iter_stored(&self) -> Box<dyn Iterator<Item = (usize, f32)> + '_> {
+        match &self.values {
+            Values::Dense(v) => Box::new(v.iter().copied().enumerate()),
+            Values::Sparse { indices, values, .. } => Box::new(
+                indices.iter().zip(values.iter()).map(|(&i, &v)| (i as usize, v)),
+            ),
+        }
+    }
+
+    pub fn class(&self) -> Option<u32> {
+        match self.label {
+            Label::Class(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    pub fn numeric_label(&self) -> Option<f64> {
+        match self.label {
+            Label::Numeric(y) => Some(y),
+            _ => None,
+        }
+    }
+
+    /// Approximate serialized size in bytes — drives the message-size cost
+    /// model of `engine::simtime` and the Fig. 13 message-size sweep.
+    pub fn wire_bytes(&self) -> usize {
+        let payload = match &self.values {
+            Values::Dense(v) => 4 * v.len(),
+            Values::Sparse { values, .. } => 8 * values.len(),
+        };
+        payload + 16 // label + weight + framing
+    }
+}
+
+impl MemSize for Instance {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + match &self.values {
+                Values::Dense(v) => vec_flat_bytes(v),
+                Values::Sparse { indices, values, .. } => {
+                    vec_flat_bytes(indices) + vec_flat_bytes(values)
+                }
+            }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_access() {
+        let i = Instance::dense(vec![1.0, 2.0, 3.0], Label::Class(1));
+        assert_eq!(i.value(1), 2.0);
+        assert_eq!(i.n_attributes(), 3);
+        assert_eq!(i.class(), Some(1));
+    }
+
+    #[test]
+    fn sparse_access_and_default_zero() {
+        let i = Instance::sparse(vec![2, 7], vec![1.5, -3.0], 100, Label::Class(0));
+        assert_eq!(i.value(2), 1.5);
+        assert_eq!(i.value(7), -3.0);
+        assert_eq!(i.value(3), 0.0);
+        assert_eq!(i.n_attributes(), 100);
+        assert_eq!(i.n_stored(), 2);
+    }
+
+    #[test]
+    fn iter_stored_sparse() {
+        let i = Instance::sparse(vec![1, 4], vec![9.0, 8.0], 10, Label::None);
+        let v: Vec<_> = i.iter_stored().collect();
+        assert_eq!(v, vec![(1, 9.0), (4, 8.0)]);
+    }
+
+    #[test]
+    fn wire_bytes_sparse_smaller_than_dense_equivalent() {
+        let s = Instance::sparse(vec![1, 2], vec![1.0, 1.0], 10_000, Label::None);
+        let d = Instance::dense(vec![0.0; 10_000], Label::None);
+        assert!(s.wire_bytes() < d.wire_bytes());
+    }
+}

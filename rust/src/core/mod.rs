@@ -1,0 +1,13 @@
+//! Core ML substrate: instance & schema types, attribute observers
+//! (the `n_ijk` counters of the paper), split criteria and the Hoeffding
+//! bound. Everything above (trees, rules, processors) builds on these.
+
+pub mod schema;
+pub mod instance;
+pub mod observers;
+pub mod criterion;
+pub mod hoeffding;
+pub mod model;
+
+pub use instance::Instance;
+pub use schema::{AttributeKind, Schema, TargetKind};

@@ -1,0 +1,28 @@
+//! Model traits consumed by the prequential evaluator: anything that can
+//! test-then-train sequentially. Distributed algorithms implement these on
+//! their *driver* wrappers (which pump a topology), sequential ones
+//! directly.
+
+use super::instance::Instance;
+
+
+/// Streaming classifier.
+pub trait Classifier: Send {
+    /// Predict the class of `inst` (None if the model is still empty).
+    fn predict(&self, inst: &Instance) -> Option<u32>;
+    /// Train on a labeled instance.
+    fn train(&mut self, inst: &Instance);
+    /// Model-state bytes (Tables 6-7 reporting).
+    fn model_bytes(&self) -> usize;
+}
+
+/// Streaming regressor.
+pub trait Regressor: Send {
+    fn predict(&self, inst: &Instance) -> f64;
+    fn train(&mut self, inst: &Instance);
+    fn model_bytes(&self) -> usize;
+}
+
+// (MemSize is the usual way to implement model_bytes)
+#[allow(unused_imports)]
+use crate::common::memsize as _memsize_doc;

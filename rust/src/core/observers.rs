@@ -1,0 +1,234 @@
+//! Attribute observers: the `n_ijk` sufficient statistics of the paper.
+//!
+//! Every attribute — categorical or numeric — is observed as a `[V, C]`
+//! counter block (`V` = arity or histogram bins, `C` = classes). This
+//! uniformity is what lets one XLA/Pallas kernel evaluate the split
+//! criterion for any attribute mix (DESIGN.md §6), and it mirrors the
+//! "local statistics as a big table indexed by (leaf, attribute)" picture
+//! of the paper.
+//!
+//! Numeric attributes use an equal-width histogram whose range is frozen
+//! after a warm-up sample (values outside are clamped to edge bins) — the
+//! standard discretized-observer substitution for MOA's Gaussian observer,
+//! documented in DESIGN.md §3.
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::common::MemSize;
+
+/// Counter block for one attribute at one leaf/rule: flat `[V, C]` f32.
+#[derive(Clone, Debug)]
+pub struct CounterBlock {
+    counts: Vec<f32>,
+    v: u32,
+    c: u32,
+}
+
+impl CounterBlock {
+    pub fn new(v: u32, c: u32) -> Self {
+        CounterBlock { counts: vec![0.0; (v * c) as usize], v, c }
+    }
+
+    #[inline]
+    pub fn add(&mut self, value_bin: u32, class: u32, weight: f32) {
+        debug_assert!(value_bin < self.v && class < self.c);
+        self.counts[(value_bin * self.c + class) as usize] += weight;
+    }
+
+    #[inline]
+    pub fn get(&self, value_bin: u32, class: u32) -> f32 {
+        self.counts[(value_bin * self.c + class) as usize]
+    }
+
+    pub fn v(&self) -> u32 {
+        self.v
+    }
+
+    pub fn c(&self) -> u32 {
+        self.c
+    }
+
+    pub fn raw(&self) -> &[f32] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> f32 {
+        self.counts.iter().sum()
+    }
+
+    /// Class marginals: sum over values → `[C]`.
+    pub fn class_counts(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.c as usize];
+        for v in 0..self.v as usize {
+            for c in 0..self.c as usize {
+                out[c] += self.counts[v * self.c as usize + c];
+            }
+        }
+        out
+    }
+
+    /// Copy into a padded `[v_pad, c_pad]` destination slice (row-major),
+    /// used when marshalling into the fixed-shape XLA artifact input.
+    pub fn copy_padded(&self, dst: &mut [f32], v_pad: usize, c_pad: usize) {
+        debug_assert!(dst.len() >= v_pad * c_pad);
+        debug_assert!(self.v as usize <= v_pad && self.c as usize <= c_pad);
+        for v in 0..self.v as usize {
+            let src = &self.counts[v * self.c as usize..(v + 1) * self.c as usize];
+            dst[v * c_pad..v * c_pad + self.c as usize].copy_from_slice(src);
+        }
+    }
+}
+
+impl MemSize for CounterBlock {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + vec_flat_bytes(&self.counts)
+    }
+}
+
+/// Maps raw numeric values to histogram bins with a frozen equal-width
+/// range learned from the first `warmup` observations.
+#[derive(Clone, Debug)]
+pub struct Binner {
+    bins: u32,
+    warmup: u32,
+    seen: u32,
+    min: f64,
+    max: f64,
+    frozen: bool,
+    buffer: Vec<f32>,
+}
+
+impl Binner {
+    pub fn new(bins: u32) -> Self {
+        Binner {
+            bins,
+            warmup: 100,
+            seen: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            frozen: false,
+            buffer: Vec::new(),
+        }
+    }
+
+    /// Observe a value and return its bin.
+    #[inline]
+    pub fn observe(&mut self, x: f32) -> u32 {
+        if !self.frozen {
+            self.min = self.min.min(x as f64);
+            self.max = self.max.max(x as f64);
+            self.seen += 1;
+            self.buffer.push(x);
+            if self.seen >= self.warmup {
+                self.freeze();
+            }
+            // during warm-up use the running range
+        }
+        self.bin_of(x)
+    }
+
+    fn freeze(&mut self) {
+        if self.max <= self.min {
+            self.max = self.min + 1.0;
+        }
+        self.frozen = true;
+        self.buffer.clear();
+        self.buffer.shrink_to_fit();
+    }
+
+    /// Bin of a value under the current range (clamped to edge bins).
+    #[inline]
+    pub fn bin_of(&self, x: f32) -> u32 {
+        if !self.min.is_finite() || self.max <= self.min {
+            return 0;
+        }
+        let t = ((x as f64 - self.min) / (self.max - self.min)) * self.bins as f64;
+        (t.floor().max(0.0) as u32).min(self.bins - 1)
+    }
+
+    /// Value threshold at the upper edge of `bin` — used to express a
+    /// learned split/feature in original units.
+    pub fn threshold(&self, bin: u32) -> f64 {
+        self.min + (self.max - self.min) * (bin + 1) as f64 / self.bins as f64
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+}
+
+impl MemSize for Binner {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + vec_flat_bytes(&self.buffer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_block_add_get() {
+        let mut b = CounterBlock::new(4, 3);
+        b.add(2, 1, 1.0);
+        b.add(2, 1, 0.5);
+        assert_eq!(b.get(2, 1), 1.5);
+        assert_eq!(b.total(), 1.5);
+    }
+
+    #[test]
+    fn class_counts_marginal() {
+        let mut b = CounterBlock::new(2, 2);
+        b.add(0, 0, 1.0);
+        b.add(1, 0, 2.0);
+        b.add(1, 1, 3.0);
+        assert_eq!(b.class_counts(), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn copy_padded_layout() {
+        let mut b = CounterBlock::new(2, 2);
+        b.add(0, 1, 5.0);
+        b.add(1, 0, 7.0);
+        let mut dst = vec![0.0; 4 * 3]; // pad to [4,3]
+        b.copy_padded(&mut dst, 4, 3);
+        assert_eq!(dst[1], 5.0); // (v=0,c=1)
+        assert_eq!(dst[3], 7.0); // (v=1,c=0)
+        assert_eq!(dst.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn binner_freezes_and_clamps() {
+        let mut b = Binner::new(16);
+        for i in 0..100 {
+            b.observe(i as f32);
+        }
+        assert!(b.is_frozen());
+        assert_eq!(b.bin_of(-100.0), 0);
+        assert_eq!(b.bin_of(1e9), 15);
+        let mid = b.bin_of(49.5);
+        assert!(mid > 4 && mid < 12, "mid={mid}");
+    }
+
+    #[test]
+    fn binner_monotone() {
+        let mut b = Binner::new(8);
+        for i in 0..200 {
+            b.observe((i % 100) as f32);
+        }
+        let mut last = 0;
+        for x in [0.0f32, 20.0, 40.0, 60.0, 80.0, 99.0] {
+            let bin = b.bin_of(x);
+            assert!(bin >= last);
+            last = bin;
+        }
+    }
+
+    #[test]
+    fn binner_constant_values_single_bin() {
+        let mut b = Binner::new(16);
+        for _ in 0..150 {
+            b.observe(5.0);
+        }
+        assert_eq!(b.bin_of(5.0), 0);
+    }
+}

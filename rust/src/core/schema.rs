@@ -1,0 +1,125 @@
+//! Stream schema: attribute kinds and target description.
+//!
+//! SAMOA follows MOA/Weka's `InstancesHeader`; we keep a lean equivalent.
+//! Numeric attributes are observed through equal-width histograms
+//! (`core::observers`), so the schema also records the global bin count,
+//! which must match the compile-time `V` of the XLA info-gain artifact.
+
+/// Kind of a single attribute.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AttributeKind {
+    /// Categorical with `n_values` distinct values (0..n_values).
+    Categorical { n_values: u32 },
+    /// Real-valued; observed via histogram binning.
+    Numeric,
+}
+
+/// Prediction target.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TargetKind {
+    /// Classification into `n_classes` classes.
+    Class { n_classes: u32 },
+    /// Regression with (approximately) known label range, used for
+    /// normalized MAE/RMSE reporting as in the paper's Figs 14-16.
+    Numeric { min: f64, max: f64 },
+}
+
+/// Schema shared by a stream and the models consuming it.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    pub attributes: Vec<AttributeKind>,
+    pub target: TargetKind,
+    /// Histogram bins used for numeric attributes (must be <= the XLA
+    /// artifact's V dimension; see runtime::shapes).
+    pub numeric_bins: u32,
+    pub name: String,
+}
+
+impl Schema {
+    pub fn classification(
+        name: &str,
+        attributes: Vec<AttributeKind>,
+        n_classes: u32,
+    ) -> Self {
+        Schema {
+            attributes,
+            target: TargetKind::Class { n_classes },
+            numeric_bins: 16,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn regression(name: &str, attributes: Vec<AttributeKind>, min: f64, max: f64) -> Self {
+        Schema {
+            attributes,
+            target: TargetKind::Numeric { min, max },
+            numeric_bins: 16,
+            name: name.to_string(),
+        }
+    }
+
+    /// Convenience: `n` numeric attributes.
+    pub fn all_numeric(n: usize) -> Vec<AttributeKind> {
+        vec![AttributeKind::Numeric; n]
+    }
+
+    /// Convenience: `n` categorical attributes with `v` values each.
+    pub fn all_categorical(n: usize, v: u32) -> Vec<AttributeKind> {
+        vec![AttributeKind::Categorical { n_values: v }; n]
+    }
+
+    pub fn n_attributes(&self) -> usize {
+        self.attributes.len()
+    }
+
+    pub fn n_classes(&self) -> u32 {
+        match self.target {
+            TargetKind::Class { n_classes } => n_classes,
+            TargetKind::Numeric { .. } => 0,
+        }
+    }
+
+    pub fn is_regression(&self) -> bool {
+        matches!(self.target, TargetKind::Numeric { .. })
+    }
+
+    /// Number of observable values for attribute `i` (bins for numeric).
+    pub fn arity(&self, i: usize) -> u32 {
+        match self.attributes[i] {
+            AttributeKind::Categorical { n_values } => n_values,
+            AttributeKind::Numeric => self.numeric_bins,
+        }
+    }
+
+    /// Range of the label values (for normalized regression error).
+    pub fn label_range(&self) -> f64 {
+        match self.target {
+            TargetKind::Numeric { min, max } => (max - min).max(1e-12),
+            TargetKind::Class { .. } => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_of_numeric_is_bins() {
+        let s = Schema::classification("t", Schema::all_numeric(3), 2);
+        assert_eq!(s.arity(0), 16);
+    }
+
+    #[test]
+    fn arity_of_categorical() {
+        let s = Schema::classification("t", Schema::all_categorical(2, 5), 2);
+        assert_eq!(s.arity(1), 5);
+    }
+
+    #[test]
+    fn label_range_regression() {
+        let s = Schema::regression("r", Schema::all_numeric(1), -2.0, 8.0);
+        assert_eq!(s.label_range(), 10.0);
+        assert!(s.is_regression());
+    }
+}

@@ -1,0 +1,208 @@
+//! ADWIN — ADaptive WINdowing (Bifet & Gavaldà 2007): maintains a window
+//! of recent values in an exponential bucket histogram and drops the
+//! oldest buckets whenever two sub-windows have significantly different
+//! means. The workhorse change detector behind the paper's adaptive
+//! bagging/boosting (§5).
+
+use super::ChangeDetector;
+
+const MAX_BUCKETS_PER_ROW: usize = 5;
+
+/// One row of buckets, each summarizing 2^row values.
+#[derive(Clone, Debug, Default)]
+struct Row {
+    /// (sum, count-of-buckets-used); every bucket in row i holds 2^i items
+    sums: Vec<f64>,
+}
+
+/// ADWIN with confidence δ.
+#[derive(Clone, Debug)]
+pub struct Adwin {
+    pub delta: f64,
+    rows: Vec<Row>,
+    total: f64,
+    width: f64,
+    detected: bool,
+    n_since_check: u32,
+    /// check for cuts every this many additions (MOA: 32)
+    check_every: u32,
+}
+
+impl Adwin {
+    pub fn new(delta: f64) -> Self {
+        Adwin {
+            delta,
+            rows: vec![Row::default()],
+            total: 0.0,
+            width: 0.0,
+            detected: false,
+            n_since_check: 0,
+            check_every: 32,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.width == 0.0 {
+            0.0
+        } else {
+            self.total / self.width
+        }
+    }
+
+    pub fn width(&self) -> f64 {
+        self.width
+    }
+
+    fn insert(&mut self, value: f64) {
+        self.rows[0].sums.insert(0, value);
+        self.total += value;
+        self.width += 1.0;
+        // compress: merge oldest pairs upward when a row overflows
+        let mut row = 0;
+        while self.rows[row].sums.len() > MAX_BUCKETS_PER_ROW {
+            if self.rows.len() <= row + 1 {
+                self.rows.push(Row::default());
+            }
+            let b2 = self.rows[row].sums.pop().unwrap();
+            let b1 = self.rows[row].sums.pop().unwrap();
+            self.rows[row + 1].sums.insert(0, b1 + b2);
+            row += 1;
+        }
+    }
+
+    /// ADWIN cut check: compare every prefix/suffix split of the bucket
+    /// sequence (oldest first) with the Hoeffding-style bound.
+    fn detect_and_shrink(&mut self) {
+        self.detected = false;
+        if self.width < 10.0 {
+            return;
+        }
+        loop {
+            let mut cut = false;
+            // walk buckets oldest → newest, accumulating the "old" window
+            let mut w0 = 0.0;
+            let mut s0 = 0.0;
+            'outer: for row in (0..self.rows.len()).rev() {
+                let size = (1u64 << row) as f64;
+                // oldest buckets are at the END of each row's vec
+                for b in (0..self.rows[row].sums.len()).rev() {
+                    w0 += size;
+                    s0 += self.rows[row].sums[b];
+                    let w1 = self.width - w0;
+                    if w0 < 1.0 || w1 < 1.0 {
+                        continue;
+                    }
+                    let s1 = self.total - s0;
+                    let m0 = s0 / w0;
+                    let m1 = s1 / w1;
+                    let m = 1.0 / (1.0 / w0 + 1.0 / w1); // harmonic mean
+                    let dd = (4.0 * self.width / self.delta).ln();
+                    let eps =
+                        (2.0 / m * self.mean_variance() * dd).sqrt() + 2.0 / (3.0 * m) * dd;
+                    if (m0 - m1).abs() > eps {
+                        cut = true;
+                        self.detected = true;
+                        self.drop_oldest();
+                        break 'outer;
+                    }
+                }
+            }
+            if !cut {
+                break;
+            }
+        }
+    }
+
+    fn mean_variance(&self) -> f64 {
+        // variance estimate for bounded [0,1] inputs: p(1-p)
+        let m = self.mean();
+        (m * (1.0 - m)).max(1e-6)
+    }
+
+    fn drop_oldest(&mut self) {
+        for row in (0..self.rows.len()).rev() {
+            if let Some(b) = self.rows[row].sums.pop() {
+                self.total -= b;
+                self.width -= (1u64 << row) as f64;
+                return;
+            }
+        }
+    }
+}
+
+impl Default for Adwin {
+    fn default() -> Self {
+        Adwin::new(0.002)
+    }
+}
+
+impl ChangeDetector for Adwin {
+    fn add(&mut self, value: f64) {
+        self.insert(value);
+        self.n_since_check += 1;
+        if self.n_since_check >= self.check_every {
+            self.n_since_check = 0;
+            self.detect_and_shrink();
+        } else {
+            self.detected = false;
+        }
+    }
+
+    fn detected(&self) -> bool {
+        self.detected
+    }
+
+    fn reset(&mut self) {
+        let delta = self.delta;
+        *self = Adwin::new(delta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    #[test]
+    fn stable_bernoulli_silent() {
+        let mut a = Adwin::default();
+        let mut rng = Rng::new(1);
+        let mut fired = false;
+        for _ in 0..10_000 {
+            a.add(if rng.bool(0.2) { 1.0 } else { 0.0 });
+            fired |= a.detected();
+        }
+        assert!(!fired);
+        assert!((a.mean() - 0.2).abs() < 0.05, "mean={}", a.mean());
+    }
+
+    #[test]
+    fn abrupt_change_detected_and_window_shrinks() {
+        let mut a = Adwin::default();
+        let mut rng = Rng::new(2);
+        for _ in 0..5000 {
+            a.add(if rng.bool(0.1) { 1.0 } else { 0.0 });
+        }
+        let w_before = a.width();
+        let mut fired = false;
+        for _ in 0..3000 {
+            a.add(if rng.bool(0.9) { 1.0 } else { 0.0 });
+            if a.detected() {
+                fired = true;
+            }
+        }
+        assert!(fired, "no detection");
+        assert!(a.width() < w_before + 3000.0, "window did not shrink");
+        // mean tracks the new regime
+        assert!(a.mean() > 0.5, "mean={}", a.mean());
+    }
+
+    #[test]
+    fn width_tracks_insertions() {
+        let mut a = Adwin::default();
+        for i in 0..100 {
+            a.add((i % 2) as f64);
+        }
+        assert_eq!(a.width(), 100.0);
+    }
+}

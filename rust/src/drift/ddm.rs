@@ -1,0 +1,105 @@
+//! DDM — Drift Detection Method (Gama et al. 2004): monitors the error
+//! rate p_t and its std σ_t of a classifier; warns at p+σ > p_min+2σ_min,
+//! detects at p+σ > p_min+3σ_min.
+
+use super::ChangeDetector;
+
+/// DDM detector. Feed 1.0 for a misclassification, 0.0 for a correct one.
+#[derive(Clone, Debug)]
+pub struct Ddm {
+    n: f64,
+    p: f64,
+    s: f64,
+    p_min: f64,
+    s_min: f64,
+    warning: bool,
+    detected: bool,
+    /// Minimum observations before detection can fire.
+    pub min_n: f64,
+}
+
+impl Default for Ddm {
+    fn default() -> Self {
+        Ddm {
+            n: 1.0,
+            p: 1.0,
+            s: 0.0,
+            p_min: f64::MAX,
+            s_min: f64::MAX,
+            warning: false,
+            detected: false,
+            min_n: 30.0,
+        }
+    }
+}
+
+impl Ddm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn warning(&self) -> bool {
+        self.warning
+    }
+}
+
+impl ChangeDetector for Ddm {
+    fn add(&mut self, error: f64) {
+        self.p += (error - self.p) / self.n;
+        self.s = (self.p * (1.0 - self.p) / self.n).sqrt();
+        self.n += 1.0;
+        if self.n < self.min_n {
+            return;
+        }
+        if self.p + self.s <= self.p_min + self.s_min {
+            self.p_min = self.p;
+            self.s_min = self.s;
+        }
+        let level = self.p + self.s;
+        self.detected = level > self.p_min + 3.0 * self.s_min;
+        self.warning = level > self.p_min + 2.0 * self.s_min;
+    }
+
+    fn detected(&self) -> bool {
+        self.detected
+    }
+
+    fn reset(&mut self) {
+        *self = Ddm { min_n: self.min_n, ..Ddm::default() };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    #[test]
+    fn improving_then_degrading_detected() {
+        let mut ddm = Ddm::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            ddm.add(if rng.bool(0.1) { 1.0 } else { 0.0 });
+        }
+        assert!(!ddm.detected());
+        let mut fired = false;
+        for _ in 0..2000 {
+            ddm.add(if rng.bool(0.6) { 1.0 } else { 0.0 });
+            if ddm.detected() {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired);
+    }
+
+    #[test]
+    fn stable_error_rate_silent() {
+        let mut ddm = Ddm::new();
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            ddm.add(if rng.bool(0.2) { 1.0 } else { 0.0 });
+        }
+        assert!(!ddm.detected());
+    }
+}

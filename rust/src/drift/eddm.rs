@@ -1,0 +1,127 @@
+//! EDDM — Early Drift Detection Method (Baena-García et al. 2006):
+//! monitors the *distance between errors* rather than the error rate,
+//! which reacts earlier to gradual drift.
+
+use super::ChangeDetector;
+
+/// EDDM detector. Feed 1.0 for a misclassification, 0.0 otherwise.
+#[derive(Clone, Debug)]
+pub struct Eddm {
+    n: u64,
+    last_error_at: u64,
+    n_errors: u64,
+    mean_dist: f64,
+    var_acc: f64,
+    max_metric: f64,
+    below: u32,
+    detected: bool,
+    warning: bool,
+}
+
+const ALPHA_WARN: f64 = 0.90;
+const ALPHA_DRIFT: f64 = 0.80;
+const MIN_ERRORS: u64 = 30;
+/// consecutive below-threshold error events required (fading statistics
+/// fluctuate; a single dip is noise)
+const PERSISTENCE: u32 = 3;
+
+impl Default for Eddm {
+    fn default() -> Self {
+        Eddm {
+            n: 0,
+            last_error_at: 0,
+            n_errors: 0,
+            mean_dist: 0.0,
+            var_acc: 0.0,
+            max_metric: 0.0,
+            below: 0,
+            detected: false,
+            warning: false,
+        }
+    }
+}
+
+impl Eddm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn warning(&self) -> bool {
+        self.warning
+    }
+}
+
+impl ChangeDetector for Eddm {
+    fn add(&mut self, error: f64) {
+        self.n += 1;
+        if error <= 0.0 {
+            return;
+        }
+        let dist = (self.n - self.last_error_at) as f64;
+        self.last_error_at = self.n;
+        self.n_errors += 1;
+        // fading statistics: react to recent error spacing, not the full
+        // history (a cumulative mean would wash bursts out)
+        const FADE: f64 = 0.05;
+        if self.n_errors == 1 {
+            self.mean_dist = dist;
+        } else {
+            let delta = dist - self.mean_dist;
+            self.mean_dist += FADE * delta;
+            self.var_acc = (1.0 - FADE) * (self.var_acc + FADE * delta * delta);
+        }
+        if self.n_errors < MIN_ERRORS {
+            return;
+        }
+        let sd = self.var_acc.sqrt();
+        let metric = self.mean_dist + 2.0 * sd;
+        // decaying peak: during a stable regime the reference max
+        // re-normalizes toward the current level, so estimator noise can
+        // never hold the ratio down permanently; an actual burst drops
+        // `metric` far faster than the decay
+        self.max_metric *= 0.995;
+        if metric > self.max_metric {
+            self.max_metric = metric;
+            self.below = 0;
+            self.warning = false;
+            self.detected = false;
+        } else {
+            let ratio = metric / self.max_metric;
+            self.below = if ratio < ALPHA_DRIFT { self.below + 1 } else { 0 };
+            self.detected = self.below >= PERSISTENCE;
+            self.warning = ratio < ALPHA_WARN;
+        }
+    }
+
+    fn detected(&self) -> bool {
+        self.detected
+    }
+
+    fn reset(&mut self) {
+        *self = Eddm::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    #[test]
+    fn error_burst_detected() {
+        let mut e = Eddm::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..5000 {
+            e.add(if rng.bool(0.05) { 1.0 } else { 0.0 });
+        }
+        let calm = e.detected();
+        for _ in 0..3000 {
+            e.add(if rng.bool(0.5) { 1.0 } else { 0.0 });
+            if e.detected() {
+                break;
+            }
+        }
+        assert!(!calm);
+        assert!(e.detected());
+    }
+}

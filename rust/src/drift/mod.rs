@@ -1,0 +1,13 @@
+//! Change detectors (paper §5): ADWIN, DDM, EDDM, Page-Hinkley.
+pub mod adwin;
+pub mod ddm;
+pub mod eddm;
+pub mod page_hinkley;
+
+/// Common interface: feed a bounded input (error indicator or value),
+/// learn its mean, and report detected change.
+pub trait ChangeDetector: Send {
+    fn add(&mut self, value: f64);
+    fn detected(&self) -> bool;
+    fn reset(&mut self);
+}

@@ -1,0 +1,96 @@
+//! Page–Hinkley test (Page 1954), as modified for streaming in AMRules
+//! (paper §7): detects an upward change in the mean of a sequence —
+//! here, of a rule's absolute prediction error.
+
+use super::ChangeDetector;
+
+/// Page–Hinkley change detector.
+#[derive(Clone, Debug)]
+pub struct PageHinkley {
+    /// Minimum magnitude of change to care about.
+    pub alpha: f64,
+    /// Detection threshold λ.
+    pub lambda: f64,
+    n: u64,
+    mean: f64,
+    cum: f64,
+    min_cum: f64,
+    detected: bool,
+}
+
+impl PageHinkley {
+    pub fn new(alpha: f64, lambda: f64) -> Self {
+        PageHinkley { alpha, lambda, n: 0, mean: 0.0, cum: 0.0, min_cum: 0.0, detected: false }
+    }
+}
+
+impl Default for PageHinkley {
+    fn default() -> Self {
+        // MOA defaults for AMRules drift detection
+        PageHinkley::new(0.005, 35.0)
+    }
+}
+
+impl ChangeDetector for PageHinkley {
+    fn add(&mut self, value: f64) {
+        self.n += 1;
+        self.mean += (value - self.mean) / self.n as f64;
+        self.cum += value - self.mean - self.alpha;
+        self.min_cum = self.min_cum.min(self.cum);
+        self.detected = self.cum - self.min_cum > self.lambda;
+    }
+
+    fn detected(&self) -> bool {
+        self.detected
+    }
+
+    fn reset(&mut self) {
+        self.n = 0;
+        self.mean = 0.0;
+        self.cum = 0.0;
+        self.min_cum = 0.0;
+        self.detected = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    #[test]
+    fn stable_stream_no_detection() {
+        let mut ph = PageHinkley::new(0.005, 35.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..5000 {
+            ph.add(0.5 + 0.1 * rng.gaussian());
+        }
+        assert!(!ph.detected());
+    }
+
+    #[test]
+    fn mean_shift_detected() {
+        let mut ph = PageHinkley::new(0.005, 35.0);
+        let mut rng = Rng::new(2);
+        for _ in 0..2000 {
+            ph.add(0.5 + 0.1 * rng.gaussian());
+        }
+        for _ in 0..2000 {
+            ph.add(1.5 + 0.1 * rng.gaussian());
+            if ph.detected() {
+                break;
+            }
+        }
+        assert!(ph.detected());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut ph = PageHinkley::new(0.005, 5.0);
+        for _ in 0..100 {
+            ph.add(10.0);
+        }
+        ph.reset();
+        assert!(!ph.detected());
+    }
+}

@@ -1,0 +1,91 @@
+//! Engine-side observability: per-stream and per-processor counters.
+
+/// Per-stream traffic counters.
+#[derive(Clone, Debug, Default)]
+pub struct StreamMetrics {
+    pub events: u64,
+    pub bytes: u64,
+}
+
+/// Per-processor-instance execution counters.
+#[derive(Clone, Debug, Default)]
+pub struct InstanceMetrics {
+    pub events_processed: u64,
+    pub busy_ns: u64,
+}
+
+/// Aggregated engine metrics, returned by every engine run.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    /// Indexed by StreamId.
+    pub streams: Vec<StreamMetrics>,
+    /// `per_instance[processor][instance]`.
+    pub per_instance: Vec<Vec<InstanceMetrics>>,
+    /// Source instances injected.
+    pub source_instances: u64,
+    /// Wall-clock of the whole run.
+    pub wall_ns: u64,
+}
+
+impl EngineMetrics {
+    pub fn new(n_streams: usize, shape: &[usize]) -> Self {
+        EngineMetrics {
+            streams: vec![StreamMetrics::default(); n_streams],
+            per_instance: shape
+                .iter()
+                .map(|&p| vec![InstanceMetrics::default(); p])
+                .collect(),
+            source_instances: 0,
+            wall_ns: 0,
+        }
+    }
+
+    /// Source-instance throughput in instances/second of wall time.
+    pub fn wall_throughput(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.source_instances as f64 / (self.wall_ns as f64 * 1e-9)
+    }
+
+    /// Total events across all streams.
+    pub fn total_events(&self) -> u64 {
+        self.streams.iter().map(|s| s.events).sum()
+    }
+
+    /// Total busy time of a logical processor across instances.
+    pub fn busy_ns(&self, processor: usize) -> u64 {
+        self.per_instance[processor].iter().map(|i| i.busy_ns).sum()
+    }
+
+    /// Busiest instance of a logical processor (load-imbalance probe).
+    pub fn max_busy_ns(&self, processor: usize) -> u64 {
+        self.per_instance[processor]
+            .iter()
+            .map(|i| i.busy_ns)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut m = EngineMetrics::new(1, &[1]);
+        m.source_instances = 1000;
+        m.wall_ns = 1_000_000_000;
+        assert!((m.wall_throughput() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn busy_aggregation() {
+        let mut m = EngineMetrics::new(0, &[2]);
+        m.per_instance[0][0].busy_ns = 10;
+        m.per_instance[0][1].busy_ns = 30;
+        assert_eq!(m.busy_ns(0), 40);
+        assert_eq!(m.max_busy_ns(0), 30);
+    }
+}

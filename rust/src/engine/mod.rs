@@ -1,0 +1,25 @@
+//! Execution engines — the DSPE-adapter layer of the paper (§3).
+//!
+//! Three engines run the same [`crate::topology::Topology`]:
+//!
+//! * [`local`] — sequential, deterministic, in-process; the analogue of
+//!   SAMOA's local execution engine ("VHT local" in the paper). Supports
+//!   per-stream delivery *delay* to model the MA↔LS feedback latency of a
+//!   distributed deployment deterministically.
+//! * [`threaded`] — one OS thread per processor instance, bounded
+//!   channels, real backpressure; the analogue of the Storm/Samza
+//!   adapters.
+//! * [`simtime`] — runs locally while metering per-instance compute cost
+//!   and per-stream message volume, then evaluates an analytic p-worker
+//!   schedule. This is how scaling figures are produced on this 1-core
+//!   testbed (DESIGN.md §3, "substitutions").
+
+pub mod metrics;
+pub mod local;
+pub mod threaded;
+pub mod simtime;
+
+pub use local::LocalEngine;
+pub use metrics::EngineMetrics;
+pub use simtime::{SimCostModel, SimTimeEngine};
+pub use threaded::ThreadedEngine;

@@ -1,0 +1,4 @@
+//! Online ensembles (paper §5): OzaBag, OzaBoost, and ADWIN-adaptive bagging.
+pub mod oza_bag;
+pub mod oza_boost;
+pub mod topology;

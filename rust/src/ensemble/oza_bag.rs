@@ -1,0 +1,155 @@
+//! OzaBag — online bagging (Oza & Russell 2001), plus the ADWIN-adaptive
+//! variant used by SAMOA's adaptive bagging (§5): each base learner sees
+//! each instance Poisson(1) times; the adaptive variant replaces the
+//! worst-performing learner when its ADWIN detects drift.
+
+use crate::common::Rng;
+use crate::core::instance::Instance;
+use crate::core::model::Classifier;
+use crate::core::Schema;
+use crate::drift::adwin::Adwin;
+use crate::drift::ChangeDetector;
+
+/// Factory for base learners.
+pub type BaseFactory = Box<dyn Fn() -> Box<dyn Classifier> + Send>;
+
+/// Online bagging ensemble.
+pub struct OzaBag {
+    members: Vec<Box<dyn Classifier>>,
+    factory: BaseFactory,
+    rng: Rng,
+    n_classes: u32,
+    /// per-member ADWIN on the 0/1 error (None = plain OzaBag)
+    detectors: Option<Vec<Adwin>>,
+    pub replacements: u64,
+}
+
+impl OzaBag {
+    pub fn new(schema: &Schema, size: usize, seed: u64, factory: BaseFactory) -> Self {
+        OzaBag {
+            members: (0..size).map(|_| factory()).collect(),
+            factory,
+            rng: Rng::new(seed),
+            n_classes: schema.n_classes(),
+            detectors: None,
+            replacements: 0,
+        }
+    }
+
+    /// ADWIN-adaptive variant (replaces drifting members).
+    pub fn adaptive(schema: &Schema, size: usize, seed: u64, factory: BaseFactory) -> Self {
+        let mut s = Self::new(schema, size, seed, factory);
+        s.detectors = Some((0..size).map(|_| Adwin::default()).collect());
+        s
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+}
+
+impl Classifier for OzaBag {
+    fn predict(&self, inst: &Instance) -> Option<u32> {
+        let mut votes = vec![0u32; self.n_classes as usize];
+        for m in &self.members {
+            if let Some(c) = m.predict(inst) {
+                votes[c as usize] += 1;
+            }
+        }
+        votes
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > 0)
+            .max_by_key(|(_, &v)| v)
+            .map(|(c, _)| c as u32)
+    }
+
+    fn train(&mut self, inst: &Instance) {
+        let truth = inst.class();
+        for i in 0..self.members.len() {
+            // adaptive: track error before training
+            if let (Some(dets), Some(t)) = (&mut self.detectors, truth) {
+                let err = match self.members[i].predict(inst) {
+                    Some(p) => (p != t) as u32 as f64,
+                    None => 1.0,
+                };
+                dets[i].add(err);
+                if dets[i].detected() {
+                    self.members[i] = (self.factory)();
+                    dets[i].reset();
+                    self.replacements += 1;
+                }
+            }
+            let k = self.rng.poisson(1.0);
+            if k > 0 {
+                let mut weighted = inst.clone();
+                weighted.weight = k as f32;
+                self.members[i].train(&weighted);
+            }
+        }
+    }
+
+    fn model_bytes(&self) -> usize {
+        self.members.iter().map(|m| m.model_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+    use crate::core::instance::Label;
+    use crate::core::AttributeKind;
+
+    fn schema() -> Schema {
+        let mut attrs = vec![AttributeKind::Categorical { n_values: 2 }];
+        attrs.extend(Schema::all_numeric(3));
+        Schema::classification("s", attrs, 2)
+    }
+
+    fn factory(schema: Schema) -> BaseFactory {
+        Box::new(move || {
+            Box::new(HoeffdingTree::new(schema.clone(), HTConfig { grace_period: 100, ..Default::default() }))
+        })
+    }
+
+    fn easy(rng: &mut Rng) -> Instance {
+        let a = rng.below(2) as f32;
+        Instance::dense(vec![a, rng.f32(), rng.f32(), rng.f32()], Label::Class(a as u32))
+    }
+
+    #[test]
+    fn bagging_learns() {
+        let s = schema();
+        let mut bag = OzaBag::new(&s, 5, 1, factory(s.clone()));
+        let mut rng = Rng::new(2);
+        for _ in 0..3000 {
+            bag.train(&easy(&mut rng));
+        }
+        let mut correct = 0;
+        for _ in 0..200 {
+            let i = easy(&mut rng);
+            if bag.predict(&i) == i.class() {
+                correct += 1;
+            }
+        }
+        assert!(correct > 190, "correct={correct}");
+    }
+
+    #[test]
+    fn adaptive_replaces_on_drift() {
+        let s = schema();
+        let mut bag = OzaBag::adaptive(&s, 3, 3, factory(s.clone()));
+        let mut rng = Rng::new(4);
+        for _ in 0..3000 {
+            bag.train(&easy(&mut rng));
+        }
+        // invert the concept: label = 1 - a
+        for _ in 0..4000 {
+            let mut i = easy(&mut rng);
+            i.label = Label::Class(1 - i.class().unwrap());
+            bag.train(&i);
+        }
+        assert!(bag.replacements > 0, "no adaptive replacement happened");
+    }
+}

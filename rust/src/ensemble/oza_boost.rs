@@ -1,0 +1,139 @@
+//! OzaBoost — online boosting (Oza & Russell 2001): sequential members;
+//! the Poisson λ of each instance grows for members that got it wrong
+//! upstream and shrinks for those that got it right, concentrating later
+//! members on the hard instances.
+
+use crate::common::Rng;
+use crate::core::instance::Instance;
+use crate::core::model::Classifier;
+use crate::core::Schema;
+
+use super::oza_bag::BaseFactory;
+
+/// Online boosting ensemble.
+pub struct OzaBoost {
+    members: Vec<Box<dyn Classifier>>,
+    /// λ mass routed to correct/wrong per member (for member weights)
+    lambda_correct: Vec<f64>,
+    lambda_wrong: Vec<f64>,
+    rng: Rng,
+    n_classes: u32,
+}
+
+impl OzaBoost {
+    pub fn new(schema: &Schema, size: usize, seed: u64, factory: BaseFactory) -> Self {
+        OzaBoost {
+            members: (0..size).map(|_| factory()).collect(),
+            lambda_correct: vec![1e-9; size],
+            lambda_wrong: vec![1e-9; size],
+            rng: Rng::new(seed),
+            n_classes: schema.n_classes(),
+        }
+    }
+
+    /// log((1-ε)/ε) member weight, clamped.
+    fn member_weight(&self, i: usize) -> f64 {
+        let eps = self.lambda_wrong[i] / (self.lambda_correct[i] + self.lambda_wrong[i]);
+        let eps = eps.clamp(1e-6, 1.0 - 1e-6);
+        ((1.0 - eps) / eps).ln().max(0.0)
+    }
+}
+
+impl Classifier for OzaBoost {
+    fn predict(&self, inst: &Instance) -> Option<u32> {
+        let mut votes = vec![0f64; self.n_classes as usize];
+        for (i, m) in self.members.iter().enumerate() {
+            if let Some(c) = m.predict(inst) {
+                votes[c as usize] += self.member_weight(i);
+            }
+        }
+        votes
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > 0.0)
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, _)| c as u32)
+    }
+
+    fn train(&mut self, inst: &Instance) {
+        let Some(truth) = inst.class() else { return };
+        let mut lambda = 1.0f64;
+        for i in 0..self.members.len() {
+            let k = self.rng.poisson(lambda);
+            if k > 0 {
+                let mut weighted = inst.clone();
+                weighted.weight = k as f32;
+                self.members[i].train(&weighted);
+            }
+            let correct = self.members[i].predict(inst) == Some(truth);
+            if correct {
+                self.lambda_correct[i] += lambda;
+                let denom = 2.0 * (self.lambda_correct[i]
+                    / (self.lambda_correct[i] + self.lambda_wrong[i]));
+                lambda /= denom.max(1e-9);
+            } else {
+                self.lambda_wrong[i] += lambda;
+                let denom = 2.0 * (self.lambda_wrong[i]
+                    / (self.lambda_correct[i] + self.lambda_wrong[i]));
+                lambda /= denom.max(1e-9);
+            }
+            lambda = lambda.clamp(1e-6, 1e3);
+        }
+    }
+
+    fn model_bytes(&self) -> usize {
+        self.members.iter().map(|m| m.model_bytes()).sum::<usize>() + 16 * self.members.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+    use crate::core::instance::Label;
+    use crate::core::AttributeKind;
+
+    #[test]
+    fn boosting_learns_xor_better_than_single_stump() {
+        // XOR of two categorical attributes: hard for a depth-limited tree,
+        // boosting should still get most of it
+        let mut attrs = vec![AttributeKind::Categorical { n_values: 2 }; 2];
+        attrs.push(AttributeKind::Categorical { n_values: 2 });
+        let schema = Schema::classification("xor", attrs, 2);
+        let s2 = schema.clone();
+        let mut boost = OzaBoost::new(
+            &schema,
+            10,
+            1,
+            Box::new(move || {
+                Box::new(HoeffdingTree::new(
+                    s2.clone(),
+                    HTConfig { grace_period: 50, ..Default::default() },
+                ))
+            }),
+        );
+        let mut rng = Rng::new(2);
+        for _ in 0..6000 {
+            let a = rng.below(2) as u32;
+            let b = rng.below(2) as u32;
+            let inst = Instance::dense(
+                vec![a as f32, b as f32, rng.below(2) as f32],
+                Label::Class(a ^ b),
+            );
+            boost.train(&inst);
+        }
+        let mut correct = 0;
+        for _ in 0..400 {
+            let a = rng.below(2) as u32;
+            let b = rng.below(2) as u32;
+            let inst = Instance::dense(
+                vec![a as f32, b as f32, rng.below(2) as f32],
+                Label::Class(a ^ b),
+            );
+            if boost.predict(&inst) == inst.class() {
+                correct += 1;
+            }
+        }
+        assert!(correct > 300, "correct={correct}/400");
+    }
+}

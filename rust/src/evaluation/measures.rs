@@ -1,0 +1,181 @@
+//! Evaluation measures: accuracy/kappa for classification, MAE/RMSE
+//! (optionally normalized by label range, as in Figs 14-16) for regression.
+
+/// Online classification measure (cumulative + windowed).
+#[derive(Clone, Debug)]
+pub struct ClassificationMeasure {
+    pub n: u64,
+    pub correct: u64,
+    /// confusion[truth][pred] for kappa
+    confusion: Vec<Vec<u64>>,
+    n_classes: usize,
+    /// measurement checkpoints: (instances seen, cumulative accuracy)
+    pub curve: Vec<(u64, f64)>,
+    window: u64,
+}
+
+impl ClassificationMeasure {
+    pub fn new(n_classes: u32, curve_every: u64) -> Self {
+        ClassificationMeasure {
+            n: 0,
+            correct: 0,
+            confusion: vec![vec![0; n_classes as usize]; n_classes as usize],
+            n_classes: n_classes as usize,
+            curve: Vec::new(),
+            window: curve_every.max(1),
+        }
+    }
+
+    pub fn add(&mut self, truth: u32, pred: Option<u32>) {
+        self.n += 1;
+        if let Some(p) = pred {
+            if p == truth {
+                self.correct += 1;
+            }
+            if (truth as usize) < self.n_classes && (p as usize) < self.n_classes {
+                self.confusion[truth as usize][p as usize] += 1;
+            }
+        }
+        if self.n % self.window == 0 {
+            self.curve.push((self.n, self.accuracy()));
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.correct as f64 / self.n as f64
+    }
+
+    /// Cohen's kappa from the confusion matrix.
+    pub fn kappa(&self) -> f64 {
+        let total: u64 = self.confusion.iter().flatten().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let t = total as f64;
+        let po = (0..self.n_classes)
+            .map(|i| self.confusion[i][i] as f64)
+            .sum::<f64>()
+            / t;
+        let pe = (0..self.n_classes)
+            .map(|i| {
+                let row: f64 = self.confusion[i].iter().map(|&x| x as f64).sum();
+                let col: f64 = (0..self.n_classes).map(|j| self.confusion[j][i] as f64).sum();
+                (row / t) * (col / t)
+            })
+            .sum::<f64>();
+        if (1.0 - pe).abs() < 1e-12 {
+            return 0.0;
+        }
+        (po - pe) / (1.0 - pe)
+    }
+}
+
+/// Online regression measure.
+#[derive(Clone, Debug)]
+pub struct RegressionMeasure {
+    pub n: u64,
+    abs_sum: f64,
+    sq_sum: f64,
+    /// (instances, mae, rmse) checkpoints
+    pub curve: Vec<(u64, f64, f64)>,
+    window: u64,
+    /// label range for normalized reporting (paper Figs 14-16)
+    pub label_range: f64,
+}
+
+impl RegressionMeasure {
+    pub fn new(label_range: f64, curve_every: u64) -> Self {
+        RegressionMeasure {
+            n: 0,
+            abs_sum: 0.0,
+            sq_sum: 0.0,
+            curve: Vec::new(),
+            window: curve_every.max(1),
+            label_range: label_range.max(1e-12),
+        }
+    }
+
+    pub fn add(&mut self, truth: f64, pred: f64) {
+        self.n += 1;
+        let e = truth - pred;
+        self.abs_sum += e.abs();
+        self.sq_sum += e * e;
+        if self.n % self.window == 0 {
+            self.curve.push((self.n, self.mae(), self.rmse()));
+        }
+    }
+
+    pub fn mae(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.abs_sum / self.n as f64
+    }
+
+    pub fn rmse(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        (self.sq_sum / self.n as f64).sqrt()
+    }
+
+    pub fn nmae(&self) -> f64 {
+        self.mae() / self.label_range
+    }
+
+    pub fn nrmse(&self) -> f64 {
+        self.rmse() / self.label_range
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        let mut m = ClassificationMeasure::new(2, 100);
+        m.add(1, Some(1));
+        m.add(0, Some(1));
+        m.add(0, None); // no prediction counts as wrong
+        assert!((m.accuracy() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kappa_perfect_and_random() {
+        let mut perfect = ClassificationMeasure::new(2, 100);
+        for i in 0..100 {
+            perfect.add(i % 2, Some(i % 2));
+        }
+        assert!((perfect.kappa() - 1.0).abs() < 1e-9);
+
+        let mut random = ClassificationMeasure::new(2, 100);
+        for i in 0..1000u32 {
+            random.add(i % 2, Some((i / 2) % 2));
+        }
+        assert!(random.kappa().abs() < 0.1);
+    }
+
+    #[test]
+    fn curve_records_checkpoints() {
+        let mut m = ClassificationMeasure::new(2, 10);
+        for i in 0..35 {
+            m.add(0, Some((i % 2) as u32));
+        }
+        assert_eq!(m.curve.len(), 3);
+        assert_eq!(m.curve[0].0, 10);
+    }
+
+    #[test]
+    fn regression_errors() {
+        let mut m = RegressionMeasure::new(10.0, 100);
+        m.add(5.0, 3.0);
+        m.add(1.0, 1.0);
+        assert!((m.mae() - 1.0).abs() < 1e-12);
+        assert!((m.rmse() - (2.0f64).sqrt()).abs() < 1e-12);
+        assert!((m.nmae() - 0.1).abs() < 1e-12);
+    }
+}

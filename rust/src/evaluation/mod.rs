@@ -1,0 +1,3 @@
+//! Prequential evaluation (test-then-train) and its measures (paper §6.3/7.3).
+pub mod measures;
+pub mod prequential;

@@ -1,0 +1,284 @@
+//! AMRules experiments: Table 5-7 and Figs 12-16 of the paper (§7.3).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::common::cli::Args;
+use crate::core::model::Regressor;
+use crate::engine::{LocalEngine, SimTimeEngine, ThreadedEngine};
+use crate::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use crate::regressors::amrules::{AMRules, AMRulesConfig};
+use crate::regressors::{hamr, vamr};
+use crate::topology::Event;
+
+use super::{print_table, regression_stream};
+
+const DATASETS: [&str; 3] = ["electricity", "airlines", "waveform"];
+
+fn limit(args: &Args) -> u64 {
+    args.u64("instances", 100_000)
+}
+
+/// Table 5: rules/features statistics of sequential AMRules (MAMR).
+pub fn table5(args: &Args) -> anyhow::Result<()> {
+    let n = limit(args);
+    let mut rows = Vec::new();
+    for ds in DATASETS {
+        let mut stream = regression_stream(ds, 7, n);
+        let mut model = AMRules::new(stream.schema().clone(), AMRulesConfig::default());
+        let mut count = 0u64;
+        while count < n {
+            let Some(inst) = stream.next_instance() else { break };
+            model.train(&inst);
+            count += 1;
+        }
+        let s = &model.stats;
+        rows.push(vec![
+            ds.to_string(),
+            count.to_string(),
+            stream.schema().n_attributes().to_string(),
+            s.rules_created.to_string(),
+            s.rules_removed.to_string(),
+            model.n_rules().to_string(),
+            s.features_created.to_string(),
+        ]);
+    }
+    print_table(
+        "Table 5 — MAMR rule/feature statistics",
+        &["dataset", "instances", "#attrs", "rules created", "rules removed", "rules live", "features created"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Table 6: memory consumption of MAMR.
+pub fn table6(args: &Args) -> anyhow::Result<()> {
+    let n = limit(args);
+    let mut rows = Vec::new();
+    for ds in DATASETS {
+        let mut stream = regression_stream(ds, 8, n);
+        let mut model = AMRules::new(stream.schema().clone(), AMRulesConfig::default());
+        let mut count = 0u64;
+        while count < n {
+            let Some(inst) = stream.next_instance() else { break };
+            model.train(&inst);
+            count += 1;
+        }
+        rows.push(vec![
+            ds.to_string(),
+            format!("{:.2}", model.model_bytes() as f64 / 1e6),
+        ]);
+    }
+    print_table(
+        "Table 6 — MAMR model memory (MB; model state, not JVM heap)",
+        &["dataset", "memory (MB)"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Table 7: memory of VAMR's aggregator and learners by parallelism.
+pub fn table7(args: &Args) -> anyhow::Result<()> {
+    let n = limit(args);
+    let ps = args.usize_list("p", &[1, 2, 4, 8]);
+    let mut rows = Vec::new();
+    for ds in DATASETS {
+        for &p in &ps {
+            let mut stream = regression_stream(ds, 9, n);
+            let sink = EvalSink::new(0, stream.schema().label_range(), n);
+            let sink2 = Arc::clone(&sink);
+            let (topo, handles) =
+                vamr::build_topology(stream.schema(), &AMRulesConfig::default(), p, move |_| {
+                    Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+                });
+            let source = (0..n).map_while(|id| {
+                stream.next_instance().map(|inst| Event::Instance { id, inst })
+            });
+            let mut ma_bytes = 0usize;
+            let mut learner_bytes = Vec::new();
+            LocalEngine::new().run(&topo, handles.entry, source, |inst| {
+                ma_bytes = inst[handles.ma.0][0].mem_bytes();
+                learner_bytes =
+                    inst[handles.learners.0].iter().map(|l| l.mem_bytes()).collect();
+            });
+            let avg_learner =
+                learner_bytes.iter().sum::<usize>() as f64 / learner_bytes.len().max(1) as f64;
+            rows.push(vec![
+                ds.to_string(),
+                p.to_string(),
+                format!("{:.2}", ma_bytes as f64 / 1e6),
+                format!("{:.2}", avg_learner / 1e6),
+            ]);
+        }
+    }
+    print_table(
+        "Table 7 — VAMR memory by parallelism (MB; model state)",
+        &["dataset", "p", "model aggregator", "avg learner"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// One AMRules variant's simulated/wall throughput + errors.
+struct AmrOutcome {
+    throughput: f64,
+    mae: f64,
+    rmse: f64,
+}
+
+fn run_mamr(ds: &str, n: u64) -> AmrOutcome {
+    let mut stream = regression_stream(ds, 11, n);
+    let mut model = AMRules::new(stream.schema().clone(), AMRulesConfig::default());
+    let mut measure =
+        crate::evaluation::measures::RegressionMeasure::new(stream.schema().label_range(), n);
+    let started = Instant::now();
+    let mut count = 0u64;
+    while count < n {
+        let Some(inst) = stream.next_instance() else { break };
+        if let Some(y) = inst.numeric_label() {
+            measure.add(y, model.predict(&inst));
+        }
+        model.train(&inst);
+        count += 1;
+    }
+    AmrOutcome {
+        throughput: count as f64 / started.elapsed().as_secs_f64().max(1e-9),
+        mae: measure.nmae(),
+        rmse: measure.nrmse(),
+    }
+}
+
+/// Run VAMR (r = None) or HAMR (r = Some(replicas)) and report simulated
+/// throughput + errors. `p` = learner count (VAMR) / MA count (HAMR, as
+/// in Fig. 12's x-axis).
+fn run_distributed(ds: &str, p: usize, hamr_learners: Option<usize>, n: u64, sim: bool) -> AmrOutcome {
+    let mut stream = regression_stream(ds, 11, n);
+    let range = stream.schema().label_range();
+    let sink = EvalSink::new(0, range, n);
+    let sink2 = Arc::clone(&sink);
+    let cfg = AMRulesConfig::default();
+    let (topo, entry) = match hamr_learners {
+        None => {
+            let (t, h) = vamr::build_topology(stream.schema(), &cfg, p, move |_| {
+                Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+            });
+            (t, h.entry)
+        }
+        Some(l) => {
+            let (t, h) = hamr::build_topology(stream.schema(), &cfg, p, l, move |_| {
+                Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+            });
+            (t, h.entry)
+        }
+    };
+    let source = (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let throughput = if sim {
+        SimTimeEngine::default().run(&topo, entry, source, |_| {}).throughput()
+    } else {
+        let started = Instant::now();
+        let m = ThreadedEngine::default().run(&topo, entry, source, |_, _, _| {});
+        m.source_instances as f64 / started.elapsed().as_secs_f64().max(1e-9)
+    };
+    let measure = sink.regression.lock().unwrap().clone();
+    AmrOutcome { throughput, mae: measure.nmae(), rmse: measure.nrmse() }
+}
+
+/// Fig 12: throughput of MAMR / VAMR / HAMR-1 / HAMR-2 by parallelism.
+pub fn fig12(args: &Args) -> anyhow::Result<()> {
+    let n = args.u64("instances", 40_000);
+    let ps = args.usize_list("p", &[1, 2, 4, 8]);
+    let mut rows = Vec::new();
+    for ds in DATASETS {
+        let mamr = run_mamr(ds, n);
+        rows.push(vec![ds.into(), "MAMR".into(), "-".into(), format!("{:.0}", mamr.throughput)]);
+        for &p in &ps {
+            let v = run_distributed(ds, p, None, n, true);
+            rows.push(vec![ds.into(), "VAMR".into(), p.to_string(), format!("{:.0}", v.throughput)]);
+            let h1 = run_distributed(ds, p, Some(1), n, true);
+            rows.push(vec![ds.into(), "HAMR-1".into(), p.to_string(), format!("{:.0}", h1.throughput)]);
+            let h2 = run_distributed(ds, p, Some(2), n, true);
+            rows.push(vec![ds.into(), "HAMR-2".into(), p.to_string(), format!("{:.0}", h2.throughput)]);
+        }
+    }
+    print_table(
+        "Fig 12 — AMRules throughput (instances/s; distributed = simulated p workers)",
+        &["dataset", "variant", "p", "throughput"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Fig 13: max HAMR throughput vs result-message size, with the
+/// single-partition reference line from the simtime cost model.
+pub fn fig13(args: &Args) -> anyhow::Result<()> {
+    let n = args.u64("instances", 30_000);
+    let cost = crate::engine::SimCostModel::default();
+    let mut rows = Vec::new();
+    for ds in DATASETS {
+        // measured result-message size = prediction event bytes + label
+        let mut stream = regression_stream(ds, 13, 1);
+        let inst = stream.next_instance().unwrap();
+        let msg_bytes = Event::Instance { id: 0, inst }.wire_bytes() + 24;
+        // best throughput over p for HAMR-2
+        let mut best = 0f64;
+        for p in [1usize, 2, 4, 8] {
+            let r = run_distributed(ds, p, Some(2), n, true);
+            best = best.max(r.throughput);
+        }
+        // reference line: 1 / per-message cost at this size
+        let reference = 1e9 / (cost.c_msg_ns + msg_bytes as f64 * cost.c_byte_ns);
+        rows.push(vec![
+            ds.to_string(),
+            msg_bytes.to_string(),
+            format!("{best:.0}"),
+            format!("{reference:.0}"),
+        ]);
+    }
+    print_table(
+        "Fig 13 — max HAMR throughput vs message size (+ single-partition reference)",
+        &["dataset", "msg bytes", "max HAMR inst/s", "reference inst/s"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Figs 14-16: normalized MAE/RMSE of MAMR / VAMR / HAMR per dataset.
+pub fn fig14_16(args: &Args) -> anyhow::Result<()> {
+    let n = args.u64("instances", 60_000);
+    let ps = args.usize_list("p", &[1, 2, 4, 8]);
+    let mut rows = Vec::new();
+    for ds in DATASETS {
+        let mamr = run_mamr(ds, n);
+        rows.push(vec![
+            ds.into(),
+            "MAMR".into(),
+            "-".into(),
+            format!("{:.4}", mamr.mae),
+            format!("{:.4}", mamr.rmse),
+        ]);
+        for &p in &ps {
+            let v = run_distributed(ds, p, None, n, false);
+            rows.push(vec![
+                ds.into(),
+                "VAMR".into(),
+                p.to_string(),
+                format!("{:.4}", v.mae),
+                format!("{:.4}", v.rmse),
+            ]);
+            let h = run_distributed(ds, p, Some(2), n, false);
+            rows.push(vec![
+                ds.into(),
+                "HAMR-2".into(),
+                p.to_string(),
+                format!("{:.4}", h.mae),
+                format!("{:.4}", h.rmse),
+            ]);
+        }
+    }
+    print_table(
+        "Figs 14-16 — normalized MAE/RMSE of distributed AMRules",
+        &["dataset", "variant", "p", "MAE/range", "RMSE/range"],
+        &rows,
+    );
+    Ok(())
+}

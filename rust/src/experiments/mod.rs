@@ -1,0 +1,95 @@
+//! Experiment harness: one entry per table/figure of the paper's
+//! evaluation (§6.3 for VHT, §7.3 for AMRules). `samoa exp <id>` prints
+//! the same rows/series the paper reports; see DESIGN.md §5 for the
+//! experiment index and EXPERIMENTS.md for recorded paper-vs-measured
+//! results.
+//!
+//! Real-dataset experiments use the synthetic twins from
+//! [`crate::streams::datasets`] unless the corresponding ARFF file is
+//! present under `data/` (see [`dataset_stream`]).
+
+pub mod runner;
+pub mod vht_exps;
+pub mod amrules_exps;
+
+use crate::common::cli::Args;
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
+    match id {
+        "fig3" => vht_exps::fig3(args),
+        "fig4" => vht_exps::fig4_5(args, false),
+        "fig5" => vht_exps::fig4_5(args, true),
+        "fig6" => vht_exps::fig6_7(args, false),
+        "fig7" => vht_exps::fig6_7(args, true),
+        "fig8" => vht_exps::fig8_9(args, false),
+        "fig9" => vht_exps::fig8_9(args, true),
+        "table3" => vht_exps::table3_4(args, true),
+        "table4" => vht_exps::table3_4(args, false),
+        "table5" => amrules_exps::table5(args),
+        "table6" => amrules_exps::table6(args),
+        "table7" => amrules_exps::table7(args),
+        "fig12" => amrules_exps::fig12(args),
+        "fig13" => amrules_exps::fig13(args),
+        "fig14" | "fig15" | "fig16" => amrules_exps::fig14_16(args),
+        "all" => {
+            for e in ALL {
+                println!("\n================ {e} ================");
+                run(e, args)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}'; available: {ALL:?} / all"),
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table3", "table4", "table5",
+    "table6", "table7", "fig12", "fig13", "fig14",
+];
+
+/// Markdown-ish table printer.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+}
+
+/// Real dataset (from `data/<name>.arff`) or its synthetic twin.
+pub fn dataset_stream(name: &str, seed: u64) -> Box<dyn crate::streams::StreamSource> {
+    let path = std::path::Path::new("data").join(format!("{name}.arff"));
+    if path.exists() {
+        match crate::streams::arff::ArffStream::from_file(&path) {
+            Ok(s) => {
+                eprintln!("[exp] using real dataset {}", path.display());
+                return Box::new(s);
+            }
+            Err(e) => eprintln!("[exp] failed to parse {}: {e}; using twin", path.display()),
+        }
+    }
+    use crate::streams::datasets::*;
+    match name {
+        "elec" => Box::new(ElecStream::new(seed)),
+        "phy" => Box::new(PhyStream::new(seed)),
+        "covtype" => Box::new(CovtypeStream::new(seed)),
+        "electricity" => Box::new(ElectricityRegStream::new(seed)),
+        "airlines" => Box::new(AirlinesStream::new(seed)),
+        "waveform" => Box::new(crate::streams::waveform::WaveformGenerator::new(seed)),
+        other => panic!("unknown dataset {other}"),
+    }
+}
+
+/// Regression dataset twin with an instance cap (throughput experiments).
+pub fn regression_stream(name: &str, seed: u64, limit: u64) -> Box<dyn crate::streams::StreamSource> {
+    use crate::streams::datasets::*;
+    match name {
+        "electricity" => Box::new(ElectricityRegStream::with_limit(seed, limit)),
+        "airlines" => Box::new(AirlinesStream::with_limit(seed, limit)),
+        "waveform" => Box::new(crate::streams::waveform::WaveformGenerator::new(seed)),
+        other => panic!("unknown regression dataset {other}"),
+    }
+}

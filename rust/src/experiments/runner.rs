@@ -1,0 +1,273 @@
+//! Shared experiment runner: executes one classifier variant (the paper's
+//! moa / local / wok / wk(z) / sharding) over a stream and reports
+//! accuracy, time, throughput, memory and the accuracy-evolution curve.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree, LeafPrediction};
+use crate::classifiers::sharding::Sharding;
+use crate::classifiers::vht::{self, SplitBuffering, VhtConfig};
+use crate::core::model::Classifier;
+use crate::engine::{LocalEngine, SimTimeEngine, ThreadedEngine};
+use crate::evaluation::measures::ClassificationMeasure;
+use crate::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use crate::streams::StreamSource;
+use crate::topology::Event;
+
+/// The hoeffding-tree variants of §6.3.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Variant {
+    /// Sequential MOA-style tree.
+    Moa,
+    /// VHT on the local engine, no feedback delay.
+    Local,
+    /// VHT wok (discard during splits) with LS parallelism p.
+    Wok { p: usize },
+    /// VHT wk(z) (buffer + replay) with LS parallelism p.
+    Wk { p: usize, z: usize },
+    /// Horizontal sharding baseline with p shards.
+    Sharding { p: usize },
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Variant::Moa => write!(f, "moa"),
+            Variant::Local => write!(f, "local"),
+            Variant::Wok { p } => write!(f, "wok p={p}"),
+            Variant::Wk { p, z } => write!(f, "wk({z}) p={p}"),
+            Variant::Sharding { p } => write!(f, "sharding p={p}"),
+        }
+    }
+}
+
+/// How to execute a distributed variant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EngineKind {
+    /// Deterministic local engine with `feedback_delay` on local-result.
+    LocalDeterministic { feedback_delay: usize },
+    /// Real threads + queues.
+    Threaded,
+    /// Instrumented local run + analytic p-worker schedule (scaling
+    /// studies on the 1-core testbed; see engine::simtime).
+    Sim,
+}
+
+/// Result of one run.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub variant: String,
+    pub accuracy: f64,
+    pub kappa: f64,
+    pub wall_s: f64,
+    /// instances/s — wall-clock for Moa/Local/Threaded, simulated for Sim.
+    pub throughput: f64,
+    pub model_bytes: usize,
+    pub curve: Vec<(u64, f64)>,
+    pub shed: u64,
+    pub splits: u64,
+}
+
+/// Run `variant` over `n` instances of `stream`.
+pub fn run_variant(
+    stream: &mut dyn StreamSource,
+    variant: Variant,
+    n: u64,
+    engine: EngineKind,
+    sparse: bool,
+    curve_every: u64,
+) -> Outcome {
+    match variant {
+        Variant::Moa => run_sequential(
+            Box::new(HoeffdingTree::new(
+                stream.schema().clone(),
+                HTConfig {
+                    leaf_prediction: LeafPrediction::MajorityClass,
+                    sparse,
+                    ..Default::default()
+                },
+            )),
+            stream,
+            variant,
+            n,
+            curve_every,
+        ),
+        Variant::Sharding { p } => run_sequential(
+            Box::new(Sharding::new(
+                stream.schema().clone(),
+                HTConfig {
+                    leaf_prediction: LeafPrediction::MajorityClass,
+                    sparse,
+                    ..Default::default()
+                },
+                p,
+            )),
+            stream,
+            variant,
+            n,
+            curve_every,
+        ),
+        Variant::Local => run_vht(stream, variant, 1, SplitBuffering::Discard, 0, n, engine, sparse, curve_every),
+        Variant::Wok { p } => {
+            let delay = default_delay(engine);
+            run_vht(stream, variant, p, SplitBuffering::Discard, delay, n, engine, sparse, curve_every)
+        }
+        Variant::Wk { p, z } => {
+            let delay = default_delay(engine);
+            run_vht(stream, variant, p, SplitBuffering::Buffer(z.max(1)), delay, n, engine, sparse, curve_every)
+        }
+    }
+}
+
+fn default_delay(engine: EngineKind) -> usize {
+    match engine {
+        EngineKind::LocalDeterministic { feedback_delay } => feedback_delay,
+        _ => 0,
+    }
+}
+
+fn run_sequential(
+    mut model: Box<dyn Classifier>,
+    stream: &mut dyn StreamSource,
+    variant: Variant,
+    n: u64,
+    curve_every: u64,
+) -> Outcome {
+    let mut measure = ClassificationMeasure::new(stream.schema().n_classes(), curve_every);
+    let started = Instant::now();
+    let mut seen = 0;
+    while seen < n {
+        let Some(inst) = stream.next_instance() else { break };
+        if let Some(t) = inst.class() {
+            measure.add(t, model.predict(&inst));
+        }
+        model.train(&inst);
+        seen += 1;
+    }
+    let wall = started.elapsed().as_secs_f64();
+    Outcome {
+        variant: variant.to_string(),
+        accuracy: measure.accuracy(),
+        kappa: measure.kappa(),
+        wall_s: wall,
+        throughput: seen as f64 / wall.max(1e-9),
+        model_bytes: model.model_bytes(),
+        curve: measure.curve.clone(),
+        shed: 0,
+        splits: 0,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_vht(
+    stream: &mut dyn StreamSource,
+    variant: Variant,
+    p: usize,
+    buffering: SplitBuffering,
+    feedback_delay: usize,
+    n: u64,
+    engine: EngineKind,
+    sparse: bool,
+    curve_every: u64,
+) -> Outcome {
+    let config = VhtConfig {
+        parallelism: p,
+        buffering,
+        feedback_delay,
+        sparse,
+        ..Default::default()
+    };
+    let sink = EvalSink::new(stream.schema().n_classes(), 1.0, curve_every);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = vht::build_topology(stream.schema(), &config, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+
+    // collect source instances up-front so generation cost isn't billed to
+    // the topology (the paper's sources are external spouts)
+    let mut events = Vec::with_capacity(n as usize);
+    for id in 0..n {
+        let Some(inst) = stream.next_instance() else { break };
+        events.push(Event::Instance { id, inst });
+    }
+
+    let mut shed = 0u64;
+    let mut splits = 0u64;
+    let mut model_bytes = 0usize;
+    let started = Instant::now();
+    let (wall, throughput) = match engine {
+        EngineKind::LocalDeterministic { .. } => {
+            let m = LocalEngine::new().run(&topo, handles.entry, events.into_iter(), |inst| {
+                model_bytes = inst[1][0].mem_bytes()
+                    + inst[2].iter().map(|i| i.mem_bytes()).sum::<usize>();
+            });
+            let w = started.elapsed().as_secs_f64();
+            (w, m.source_instances as f64 / w.max(1e-9))
+        }
+        EngineKind::Threaded => {
+            let m = ThreadedEngine::default().run(
+                &topo,
+                handles.entry,
+                events.into_iter(),
+                |_, _, proc_| {
+                    model_bytes += proc_.mem_bytes();
+                },
+            );
+            let w = started.elapsed().as_secs_f64();
+            (w, m.source_instances as f64 / w.max(1e-9))
+        }
+        EngineKind::Sim => {
+            let sim = SimTimeEngine::default();
+            let r = sim.run(&topo, handles.entry, events.into_iter(), |inst| {
+                model_bytes = inst[1][0].mem_bytes()
+                    + inst[2].iter().map(|i| i.mem_bytes()).sum::<usize>();
+            });
+            (started.elapsed().as_secs_f64(), r.throughput())
+        }
+    };
+    let _ = (&mut shed, &mut splits);
+
+    let measure = sink.classification.lock().unwrap().clone();
+    Outcome {
+        variant: variant.to_string(),
+        accuracy: measure.accuracy(),
+        kappa: measure.kappa(),
+        wall_s: wall,
+        throughput,
+        model_bytes,
+        curve: measure.curve.clone(),
+        shed,
+        splits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::streams::random_tree::RandomTreeGenerator;
+
+    #[test]
+    fn moa_and_local_agree_on_easy_stream() {
+        let mut s1 = RandomTreeGenerator::new(5, 5, 2, 3);
+        let moa = run_variant(&mut s1, Variant::Moa, 15_000, EngineKind::Threaded, false, 5_000);
+        let mut s2 = RandomTreeGenerator::new(5, 5, 2, 3);
+        let local = run_variant(
+            &mut s2,
+            Variant::Local,
+            15_000,
+            EngineKind::LocalDeterministic { feedback_delay: 0 },
+            false,
+            5_000,
+        );
+        assert!((moa.accuracy - local.accuracy).abs() < 0.06, "moa={} local={}", moa.accuracy, local.accuracy);
+        assert!(!local.curve.is_empty());
+    }
+
+    #[test]
+    fn sim_engine_reports_throughput() {
+        let mut s = RandomTreeGenerator::new(5, 5, 2, 4);
+        let out = run_variant(&mut s, Variant::Wok { p: 4 }, 5_000, EngineKind::Sim, false, 5_000);
+        assert!(out.throughput > 0.0);
+    }
+}

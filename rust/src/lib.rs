@@ -1,0 +1,38 @@
+//! # samoa-rs — Scalable Advanced Massive Online Analysis, in Rust
+//!
+//! A reproduction of **Apache SAMOA** (Kourtellis, De Francisci Morales,
+//! Bifet 2018): a platform for distributed machine learning on data
+//! streams, built as a three-layer rust + JAX/Pallas stack.
+//!
+//! * **L3 (this crate)** — the SAMOA platform: a mini distributed stream
+//!   processing engine ([`topology`], [`engine`]) and the paper's algorithm
+//!   library: Vertical Hoeffding Tree ([`classifiers::vht`]), distributed
+//!   AMRules ([`regressors`]), CluStream ([`clustering`]), ensembles and
+//!   drift detectors ([`ensemble`], [`drift`]), plus stream generators
+//!   ([`streams`]) and prequential evaluation ([`evaluation`]).
+//! * **L2/L1 (python, build-time only)** — the numeric hot-spots
+//!   (split-criterion information gain, AMRules SDR, CluStream assignment)
+//!   as Pallas kernels under JAX, AOT-lowered to HLO text and executed from
+//!   rust through the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` once; the rust binary is self-contained after that
+//! (and falls back to bit-compatible native implementations of each kernel
+//! when artifacts are absent).
+
+pub mod common;
+pub mod topology;
+pub mod engine;
+pub mod core;
+pub mod classifiers;
+pub mod regressors;
+pub mod clustering;
+pub mod drift;
+pub mod ensemble;
+pub mod streams;
+pub mod evaluation;
+pub mod runtime;
+pub mod experiments;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

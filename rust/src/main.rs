@@ -1,0 +1,233 @@
+//! `samoa` — the leader entrypoint / CLI of samoa-rs.
+//!
+//! ```text
+//! samoa run  --task prequential --learner vht --stream covtype [--p 4 ...]
+//! samoa exp  fig4 [--instances 60000 --p 2,4 --seeds 3 --delay 100]
+//! samoa exp  all
+//! samoa list
+//! samoa backend
+//! ```
+//!
+//! `samoa run` is the paper's `PrequentialEvaluation` task runner;
+//! `samoa exp` regenerates the paper's tables and figures (DESIGN.md §5).
+
+use samoa::common::cli::Args;
+use samoa::core::model::{Classifier, Regressor};
+use samoa::evaluation::prequential::{
+    prequential_run, prequential_run_regression, PrequentialConfig,
+};
+use samoa::experiments;
+use samoa::runtime::backend_in_use;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "run" => cmd_run(&args),
+        "exp" => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            experiments::run(id, &args)
+        }
+        "list" => {
+            println!("experiments: {:?}", experiments::ALL);
+            println!("learners: moa | vht | sharding | nb | bag | boost | amrules | clustream");
+            println!(
+                "streams: random-tree | random-tweet | waveform | elec | phy | covtype | electricity | airlines | <path>.arff"
+            );
+            Ok(())
+        }
+        "backend" => {
+            println!("criterion backend: {:?}", backend_in_use());
+            println!(
+                "artifacts dir: {:?}",
+                samoa::runtime::registry::artifacts_dir()
+            );
+            Ok(())
+        }
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "samoa-rs — Apache SAMOA reproduction (rust + JAX/Pallas)\n\n\
+         USAGE:\n  samoa run --learner <l> --stream <s> [--instances N] [--p K]\n  \
+         samoa exp <fig3..fig16|table3..table7|all> [--instances N --seeds K --p 2,4]\n  \
+         samoa list\n  samoa backend\n\nRun `samoa list` for learners/streams."
+    );
+}
+
+fn make_stream(name: &str, seed: u64, sparse_dim: u32) -> Box<dyn samoa::streams::StreamSource> {
+    use samoa::streams::*;
+    if name.ends_with(".arff") {
+        return Box::new(
+            arff::ArffStream::from_file(std::path::Path::new(name)).expect("parse arff"),
+        );
+    }
+    match name {
+        "random-tree" => Box::new(random_tree::RandomTreeGenerator::new(10, 10, 2, seed)),
+        "random-tweet" => Box::new(random_tweet::RandomTweetGenerator::new(sparse_dim, seed)),
+        "waveform" => Box::new(waveform::WaveformGenerator::new(seed)),
+        "waveform-cls" => Box::new(waveform::WaveformGenerator::classification(seed)),
+        other => experiments::dataset_stream(other, seed),
+    }
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let learner = args.get_or("learner", "vht");
+    let stream_name = args.get_or("stream", "random-tree");
+    let seed = args.u64("seed", 42);
+    let n = args.u64("instances", 100_000);
+    let p = args.usize("p", 4);
+    let mut stream = make_stream(stream_name, seed, args.usize("dim", 1000) as u32);
+    let config = PrequentialConfig { max_instances: n, report_every: args.u64("report", n / 10) };
+    let schema = stream.schema().clone();
+
+    println!(
+        "samoa run: learner={learner} stream={stream_name} instances={n} p={p} backend={:?}",
+        backend_in_use()
+    );
+
+    if schema.is_regression() || learner == "amrules" {
+        let mut model: Box<dyn Regressor> = Box::new(
+            samoa::regressors::amrules::AMRules::new(schema, Default::default()),
+        );
+        let r = prequential_run_regression(model.as_mut(), stream.as_mut(), &config);
+        println!(
+            "instances={} mae={:.4} rmse={:.4} throughput={:.0}/s model={:.2}MB",
+            r.instances,
+            r.measure.mae(),
+            r.measure.rmse(),
+            r.throughput(),
+            r.model_bytes as f64 / 1e6
+        );
+        return Ok(());
+    }
+
+    if learner == "clustream" {
+        let mut model = samoa::clustering::clustream::CluStream::new(
+            &schema,
+            Default::default(),
+            seed,
+        );
+        let started = std::time::Instant::now();
+        let mut count = 0u64;
+        while count < n {
+            let Some(inst) = stream.next_instance() else { break };
+            model.add(&inst);
+            count += 1;
+        }
+        model.flush();
+        model.run_macro();
+        println!(
+            "instances={count} micro-clusters={} macro-runs={} throughput={:.0}/s",
+            model.n_micro(),
+            model.macro_runs,
+            count as f64 / started.elapsed().as_secs_f64()
+        );
+        return Ok(());
+    }
+
+    use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+    let sparse = matches!(stream_name, "random-tweet");
+    let ht_cfg = HTConfig { sparse, ..Default::default() };
+    let mut model: Box<dyn Classifier> = match learner {
+        "moa" | "ht" => Box::new(HoeffdingTree::new(schema.clone(), ht_cfg)),
+        "nb" => Box::new(samoa::classifiers::naive_bayes::NaiveBayes::new(schema.clone())),
+        "sharding" => Box::new(samoa::classifiers::sharding::Sharding::new(
+            schema.clone(),
+            ht_cfg,
+            p,
+        )),
+        "bag" => {
+            let s = schema.clone();
+            Box::new(samoa::ensemble::oza_bag::OzaBag::new(
+                &schema,
+                p.max(2),
+                seed,
+                Box::new(move || -> Box<dyn Classifier> {
+                    Box::new(HoeffdingTree::new(s.clone(), Default::default()))
+                }),
+            ))
+        }
+        "boost" => {
+            let s = schema.clone();
+            Box::new(samoa::ensemble::oza_boost::OzaBoost::new(
+                &schema,
+                p.max(2),
+                seed,
+                Box::new(move || Box::new(HoeffdingTree::new(s.clone(), Default::default()))),
+            ))
+        }
+        "vht" => {
+            // distributed VHT behind the sequential interface is exercised
+            // via `samoa exp`; `run` uses the topology on the local engine
+            return run_vht_task(args, stream.as_mut(), p, sparse, n);
+        }
+        other => anyhow::bail!("unknown learner {other}"),
+    };
+    let r = prequential_run(model.as_mut(), stream.as_mut(), &config);
+    println!(
+        "instances={} accuracy={:.4} kappa={:.4} throughput={:.0}/s model={:.2}MB",
+        r.instances,
+        r.final_accuracy(),
+        r.measure.kappa(),
+        r.throughput(),
+        r.model_bytes as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn run_vht_task(
+    args: &Args,
+    stream: &mut dyn samoa::streams::StreamSource,
+    p: usize,
+    sparse: bool,
+    n: u64,
+) -> anyhow::Result<()> {
+    use samoa::classifiers::vht::{build_topology, SplitBuffering, VhtConfig};
+    use samoa::engine::{LocalEngine, ThreadedEngine};
+    use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+    use samoa::topology::Event;
+    use std::sync::Arc;
+
+    let config = VhtConfig {
+        parallelism: p,
+        sparse,
+        feedback_delay: args.usize("delay", 0),
+        buffering: match args.usize("buffer", 0) {
+            0 => SplitBuffering::Discard,
+            z => SplitBuffering::Buffer(z),
+        },
+        batch_attributes: !args.flag("no-batch"),
+        ..Default::default()
+    };
+    let sink = EvalSink::new(stream.schema().n_classes(), 1.0, n / 10);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = build_topology(stream.schema(), &config, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+    let source = (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let started = std::time::Instant::now();
+    let metrics = if args.flag("threaded") {
+        ThreadedEngine::default().run(&topo, handles.entry, source, |_, _, _| {})
+    } else {
+        LocalEngine::new().run(&topo, handles.entry, source, |_| {})
+    };
+    println!(
+        "instances={} accuracy={:.4} wall={:.2}s events={} attr-bytes={}",
+        metrics.source_instances,
+        sink.accuracy(),
+        started.elapsed().as_secs_f64(),
+        metrics.total_events(),
+        metrics.streams[handles.streams.attribute.0].bytes,
+    );
+    Ok(())
+}

@@ -1,0 +1,499 @@
+//! Sequential AMRules (Almeida/Ikonomovska/Gama; paper §7) — the **MAMR**
+//! baseline and the building block reused by the distributed VAMR/HAMR:
+//! [`RuleLearner`] (one rule's statistics + expansion + drift/anomaly
+//! logic) is exactly what VAMR/HAMR learner processors host remotely.
+//!
+//! * Ordered-rules mode (the paper's focus): first covering rule predicts
+//!   and is updated.
+//! * Expansion every `n_min` updates via the SDR criterion evaluated by
+//!   [`crate::runtime::sdr`] (XLA artifact or native twin) with the
+//!   Hoeffding-bound ratio test: expand when `ratio + ε < 1` or `ε < τ`.
+//! * Each rule monitors its absolute error with Page–Hinkley and is
+//!   evicted on drift; covered instances failing a z-score anomaly test
+//!   are skipped.
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::common::MemSize;
+use crate::core::criterion::VarStats;
+use crate::core::instance::Instance;
+use crate::core::model::Regressor;
+use crate::core::observers::Binner;
+use crate::core::Schema;
+use crate::drift::page_hinkley::PageHinkley;
+use crate::drift::ChangeDetector;
+use crate::runtime::sdr;
+
+use super::rule::{Feature, HeadSnapshot, Op, RuleSpec};
+
+/// AMRules hyperparameters.
+#[derive(Clone, Debug)]
+pub struct AMRulesConfig {
+    /// Updates between expansion attempts (N_m).
+    pub n_min: u32,
+    /// Hoeffding-bound confidence for the SDR ratio test.
+    pub delta: f64,
+    /// Tie threshold: expand when ε < τ.
+    pub tau: f64,
+    /// Histogram bins per attribute for candidate thresholds (≤ 64).
+    pub bins: u32,
+    /// Page–Hinkley (α, λ) for rule eviction.
+    pub ph_alpha: f64,
+    pub ph_lambda: f64,
+    /// Covered instances with |target z-score| above this are anomalies
+    /// (0 disables).
+    pub anomaly_z: f64,
+    /// Ordered-rules mode (the paper's setting).
+    pub ordered: bool,
+    /// Cap on rule-set size (0 = unlimited).
+    pub max_rules: usize,
+}
+
+impl Default for AMRulesConfig {
+    fn default() -> Self {
+        AMRulesConfig {
+            n_min: 200,
+            delta: 1e-7,
+            tau: 0.05,
+            bins: 64,
+            ph_alpha: 0.005,
+            ph_lambda: 35.0,
+            anomaly_z: 3.0,
+            ordered: true,
+            max_rules: 0,
+        }
+    }
+}
+
+/// What a rule decides after one update.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RuleEvent {
+    None,
+    /// Expanded with a new feature (already applied to the local spec).
+    Expanded(Feature),
+    /// Page–Hinkley fired: evict this rule.
+    Evict,
+    /// Instance rejected as an anomaly (not absorbed).
+    Anomaly,
+}
+
+/// One rule's full learning state (hosted in-process by MAMR, remotely by
+/// the VAMR/HAMR learner processors).
+pub struct RuleLearner {
+    pub spec: RuleSpec,
+    /// target stats of covered instances since last expansion
+    target: VarStats,
+    /// per-attribute per-bin target stats
+    attr_bins: Vec<Vec<VarStats>>,
+    binners: Vec<Binner>,
+    /// linear head state
+    weights: Vec<f64>,
+    lr: f64,
+    /// adaptive head choice: recent absolute errors of each head
+    err_mean: f64,
+    err_perc: f64,
+    ph: PageHinkley,
+    updates_since_attempt: u32,
+    pub total_updates: u64,
+    /// Fading fraction of updates rejected as anomalies. Outliers are
+    /// rare by definition; a high sustained rate means the target
+    /// distribution genuinely moved (drift) — stop skipping so
+    /// Page–Hinkley can see it. (A consecutive-run counter would fail on
+    /// interleaved regimes.)
+    anomaly_rate: f64,
+    config: AMRulesConfig,
+}
+
+impl RuleLearner {
+    pub fn new(spec: RuleSpec, schema: &Schema, config: &AMRulesConfig) -> Self {
+        let a = schema.n_attributes();
+        RuleLearner {
+            spec,
+            target: VarStats::default(),
+            attr_bins: vec![vec![VarStats::default(); config.bins as usize]; a],
+            binners: (0..a).map(|_| Binner::new(config.bins)).collect(),
+            weights: vec![0.0; a + 1],
+            lr: 0.01,
+            err_mean: 0.0,
+            err_perc: 0.0,
+            ph: PageHinkley::new(config.ph_alpha, config.ph_lambda),
+            updates_since_attempt: 0,
+            total_updates: 0,
+            anomaly_rate: 0.0,
+            config: config.clone(),
+        }
+    }
+
+    /// Current prediction (adaptive head: mean vs perceptron).
+    pub fn predict(&self, inst: &Instance) -> f64 {
+        if self.target.n < 1.0 {
+            return 0.0;
+        }
+        if self.err_perc < self.err_mean && self.target.n > 30.0 {
+            self.perceptron(inst)
+        } else {
+            self.target.mean()
+        }
+    }
+
+    fn perceptron(&self, inst: &Instance) -> f64 {
+        let mut y = self.weights[self.weights.len() - 1];
+        for (i, v) in inst.iter_stored() {
+            if i < self.weights.len() - 1 {
+                y += self.weights[i] * v as f64;
+            }
+        }
+        // perceptron predicts the residual scale around the mean
+        self.target.mean() + y * self.target.sd().max(1e-9)
+    }
+
+    /// Head snapshot for replication at model aggregators.
+    pub fn head(&self) -> HeadSnapshot {
+        HeadSnapshot { mean: self.target.mean(), weights: None }
+    }
+
+    /// Is `inst` anomalous w.r.t. this rule's past targets?
+    pub fn is_anomaly(&self, y: f64) -> bool {
+        if self.config.anomaly_z <= 0.0 || self.target.n < 30.0 {
+            return false;
+        }
+        let sd = self.target.sd();
+        if sd < 1e-9 {
+            return false;
+        }
+        ((y - self.target.mean()) / sd).abs() > self.config.anomaly_z
+    }
+
+    /// Update with a covered instance; may expand or request eviction.
+    pub fn update(&mut self, inst: &Instance, y: f64) -> RuleEvent {
+        let anomalous = self.is_anomaly(y);
+        self.anomaly_rate = 0.98 * self.anomaly_rate + if anomalous { 0.02 } else { 0.0 };
+        // skip genuine outliers, but a sustained anomaly *rate* is drift —
+        // let those instances through so Page–Hinkley can fire
+        if anomalous && self.anomaly_rate < 0.3 {
+            return RuleEvent::Anomaly;
+        }
+        // drift check on absolute error of the *current* prediction
+        let pred = self.predict(inst);
+        let abs_err = (y - pred).abs();
+        self.ph.add(abs_err);
+        if self.ph.detected() {
+            return RuleEvent::Evict;
+        }
+        // head error tracking (fading)
+        let e_mean = (y - self.target.mean()).abs();
+        let e_perc = (y - self.perceptron(inst)).abs();
+        self.err_mean = 0.99 * self.err_mean + 0.01 * e_mean;
+        self.err_perc = 0.99 * self.err_perc + 0.01 * e_perc;
+
+        // statistics
+        let w = inst.weight as f64;
+        self.target.add(y, w);
+        for (a, v) in inst.iter_stored() {
+            if a < self.attr_bins.len() {
+                let bin = self.binners[a].observe(v) as usize;
+                let last = self.attr_bins[a].len() - 1;
+                self.attr_bins[a][bin.min(last)].add(y, w);
+            }
+        }
+        // perceptron (residual form, normalized lr)
+        let sd = self.target.sd().max(1e-9);
+        let resid = (y - self.target.mean()) / sd;
+        let pred_r = (self.perceptron(inst) - self.target.mean()) / sd;
+        let err = resid - pred_r;
+        let last = self.weights.len() - 1;
+        self.weights[last] += self.lr * err;
+        for (i, v) in inst.iter_stored() {
+            if i < last {
+                self.weights[i] += self.lr * err * (v as f64).clamp(-10.0, 10.0);
+            }
+        }
+
+        self.total_updates += 1;
+        self.updates_since_attempt += 1;
+        if self.updates_since_attempt >= self.config.n_min {
+            self.updates_since_attempt = 0;
+            if let Some(f) = self.try_expand() {
+                return RuleEvent::Expanded(f);
+            }
+        }
+        RuleEvent::None
+    }
+
+    /// SDR ratio test over the best candidate of each attribute.
+    ///
+    /// Candidates at adjacent thresholds of the *same* attribute always
+    /// have near-identical SDR, so — as in FIMT-DD — the Hoeffding ratio
+    /// compares the best split of the best attribute against the best
+    /// split of the runner-up *attribute*; a usefulness guard additionally
+    /// requires the best SDR to be a meaningful fraction of the current
+    /// target sd (blocks tie-break expansions on pure noise).
+    fn try_expand(&mut self) -> Option<Feature> {
+        let surfaces = sdr::sdr_surfaces(&self.attr_bins);
+        // best (bin, sdr) per attribute
+        let (mut best, mut second) = ((0usize, 0usize, 0.0f64), 0.0f64);
+        for (a, surf) in surfaces.iter().enumerate() {
+            let mut attr_best = (0usize, 0.0f64);
+            for (b, &v) in surf.iter().enumerate() {
+                if v > attr_best.1 {
+                    attr_best = (b, v);
+                }
+            }
+            if attr_best.1 > best.2 {
+                second = best.2;
+                best = (a, attr_best.0, attr_best.1);
+            } else if attr_best.1 > second {
+                second = attr_best.1;
+            }
+        }
+        // usefulness guard: the split must reduce a meaningful share of
+        // the current sd — noise SDR is O(sd/√n) which stays below 10%
+        // after the n_min warm-up, while genuine structure is far above
+        if best.2 <= 0.1 * self.target.sd().max(1e-9) {
+            return None;
+        }
+        let ratio = second / best.2;
+        let n = self.target.n;
+        let eps = crate::core::hoeffding::hoeffding_bound(1.0, self.config.delta, n);
+        if ratio + eps < 1.0 || eps < self.config.tau {
+            let (a, b, _) = best;
+            // keep the lower-sd side of the split
+            let left: VarStats = self.attr_bins[a][..=b]
+                .iter()
+                .fold(VarStats::default(), |x, y| x.merge(y));
+            let right = self.target.sub(&left);
+            let threshold = self.binners[a].threshold(b as u32);
+            let op = if left.sd() <= right.sd() { Op::Le } else { Op::Gt };
+            let feature = Feature { attr: a as u32, op, threshold };
+            self.spec.features.push(feature);
+            // restart statistics (head/target keep a decayed memory via
+            // the chosen side's stats)
+            let kept = if op == Op::Le { left } else { right };
+            self.target = kept;
+            for bins in self.attr_bins.iter_mut() {
+                for s in bins.iter_mut() {
+                    *s = VarStats::default();
+                }
+            }
+            self.ph.reset();
+            Some(feature)
+        } else {
+            None
+        }
+    }
+}
+
+impl MemSize for RuleLearner {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.attr_bins.iter().map(vec_flat_bytes).sum::<usize>()
+            + vec_flat_bytes(&self.weights)
+            + self.spec.features.len() * std::mem::size_of::<Feature>()
+            + self.binners.iter().map(|b| b.mem_bytes()).sum::<usize>()
+    }
+}
+
+/// Statistics for Table 5.
+#[derive(Clone, Debug, Default)]
+pub struct AMRulesStats {
+    pub rules_created: u64,
+    pub rules_removed: u64,
+    pub features_created: u64,
+    pub anomalies: u64,
+}
+
+/// The sequential AMRules regressor (MAMR).
+pub struct AMRules {
+    schema: Schema,
+    config: AMRulesConfig,
+    rules: Vec<(u32, RuleLearner)>,
+    default_rule: RuleLearner,
+    next_id: u32,
+    pub stats: AMRulesStats,
+}
+
+impl AMRules {
+    pub fn new(schema: Schema, config: AMRulesConfig) -> Self {
+        let default_rule = RuleLearner::new(RuleSpec::default(), &schema, &config);
+        AMRules { schema, config, rules: Vec::new(), default_rule, next_id: 0, stats: AMRulesStats::default() }
+    }
+
+    pub fn n_rules(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn rule_specs(&self) -> impl Iterator<Item = (&u32, &RuleSpec)> {
+        self.rules.iter().map(|(id, r)| (id, &r.spec))
+    }
+}
+
+impl Regressor for AMRules {
+    /// Ordered mode: first covering rule predicts; else the default rule.
+    fn predict(&self, inst: &Instance) -> f64 {
+        for (_, r) in &self.rules {
+            if r.spec.covers(inst) {
+                return r.predict(inst);
+            }
+        }
+        self.default_rule.predict(inst)
+    }
+
+    fn train(&mut self, inst: &Instance) {
+        let Some(y) = inst.numeric_label() else { return };
+        // ordered: first covering rule absorbs (anomalies fall through)
+        let mut evict: Option<usize> = None;
+        let mut covered = false;
+        for (i, (_, r)) in self.rules.iter_mut().enumerate() {
+            if r.spec.covers(inst) {
+                match r.update(inst, y) {
+                    RuleEvent::Anomaly => {
+                        self.stats.anomalies += 1;
+                        continue; // treated as not covered (paper §7)
+                    }
+                    RuleEvent::Evict => {
+                        evict = Some(i);
+                    }
+                    RuleEvent::Expanded(_) => {
+                        self.stats.features_created += 1;
+                    }
+                    RuleEvent::None => {}
+                }
+                covered = true;
+                break;
+            }
+        }
+        if let Some(i) = evict {
+            self.rules.remove(i);
+            self.stats.rules_removed += 1;
+        }
+        if covered {
+            return;
+        }
+        // default rule
+        match self.default_rule.update(inst, y) {
+            RuleEvent::Expanded(_) => {
+                // default became a normal rule; fresh default replaces it
+                self.stats.rules_created += 1;
+                self.stats.features_created += 1;
+                let spec = self.default_rule.spec.clone();
+                let mut promoted =
+                    std::mem::replace(&mut self.default_rule, RuleLearner::new(RuleSpec::default(), &self.schema, &self.config));
+                promoted.spec = spec;
+                if self.config.max_rules == 0 || self.rules.len() < self.config.max_rules {
+                    self.rules.push((self.next_id, promoted));
+                    self.next_id += 1;
+                }
+            }
+            RuleEvent::Evict => {
+                self.default_rule.ph.reset();
+            }
+            _ => {}
+        }
+    }
+
+    fn model_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.rules.iter().map(|(_, r)| 4 + r.mem_bytes()).sum::<usize>()
+            + self.default_rule.mem_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::core::instance::Label;
+
+    fn piecewise(rng: &mut Rng) -> Instance {
+        // y = 10 if x0 <= 0.5 else -10, plus small noise
+        let x0 = rng.f32();
+        let x1 = rng.f32();
+        let y = if x0 <= 0.5 { 10.0 } else { -10.0 } + 0.2 * rng.gaussian();
+        Instance::dense(vec![x0, x1], Label::Numeric(y))
+    }
+
+    fn schema() -> Schema {
+        Schema::regression("pw", Schema::all_numeric(2), -12.0, 12.0)
+    }
+
+    #[test]
+    fn learns_piecewise_concept() {
+        let mut rng = Rng::new(1);
+        let mut m = AMRules::new(schema(), AMRulesConfig::default());
+        for _ in 0..20_000 {
+            m.train(&piecewise(&mut rng));
+        }
+        assert!(m.stats.rules_created >= 1, "no rules created");
+        // predictions should separate the two regimes
+        let lo = m.predict(&Instance::dense(vec![0.2, 0.5], Label::None));
+        let hi = m.predict(&Instance::dense(vec![0.8, 0.5], Label::None));
+        assert!(lo > hi + 5.0, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn default_rule_predicts_before_any_rule() {
+        let mut rng = Rng::new(2);
+        let mut m = AMRules::new(schema(), AMRulesConfig::default());
+        for _ in 0..50 {
+            let mut i = piecewise(&mut rng);
+            i.label = Label::Numeric(5.0);
+            m.train(&i);
+        }
+        let p = m.predict(&Instance::dense(vec![0.5, 0.5], Label::None));
+        assert!((p - 5.0).abs() < 1.0, "p={p}");
+    }
+
+    #[test]
+    fn drift_evicts_rules() {
+        let mut rng = Rng::new(3);
+        let mut m = AMRules::new(schema(), AMRulesConfig::default());
+        for _ in 0..15_000 {
+            m.train(&piecewise(&mut rng));
+        }
+        // flip the concept violently
+        for _ in 0..15_000 {
+            let x0 = rng.f32();
+            let y = if x0 <= 0.5 { -50.0 } else { 50.0 };
+            m.train(&Instance::dense(vec![x0, rng.f32()], Label::Numeric(y)));
+        }
+        assert!(m.stats.rules_removed > 0, "no rule evicted after drift");
+    }
+
+    #[test]
+    fn anomalies_skipped() {
+        let mut rng = Rng::new(4);
+        let cfg = AMRulesConfig { anomaly_z: 3.0, ..Default::default() };
+        let mut m = AMRules::new(schema(), cfg);
+        for i in 0..5000 {
+            let mut inst = piecewise(&mut rng);
+            if i % 500 == 499 {
+                inst.label = Label::Numeric(1e4); // wild outlier
+            }
+            m.train(&inst);
+        }
+        assert!(m.stats.anomalies > 0);
+    }
+
+    #[test]
+    fn feature_count_grows_with_complexity() {
+        let mut rng = Rng::new(5);
+        let mut m = AMRules::new(
+            Schema::regression("c", Schema::all_numeric(4), -40.0, 40.0),
+            AMRulesConfig::default(),
+        );
+        for _ in 0..30_000 {
+            let x: Vec<f32> = (0..4).map(|_| rng.f32()).collect();
+            let y = (x[0] > 0.5) as u32 as f64 * 20.0 + (x[1] > 0.3) as u32 as f64 * 10.0
+                - (x[2] > 0.7) as u32 as f64 * 15.0
+                + 0.3 * rng.gaussian();
+            m.train(&Instance::dense(x, Label::Numeric(y)));
+        }
+        assert!(m.stats.features_created >= 2, "features={}", m.stats.features_created);
+    }
+}
+
+impl RuleLearner {
+    /// Debug introspection (examples only).
+    pub fn debug_state(&self) -> (f64, f64, f64, f64, f64) {
+        (self.target.n, self.target.mean(), self.target.sd(), self.err_mean, self.err_perc)
+    }
+}

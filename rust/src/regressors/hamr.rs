@@ -1,0 +1,371 @@
+//! HAMR — Hybrid AMRules (paper §7.2, Fig. 11): `r` horizontally
+//! replicated model aggregators (shuffle-grouped input) + a centralized
+//! **default-rule learner** that keeps rule creation consistent, + the
+//! same rule learners as VAMR.
+//!
+//! ```text
+//!          shuffle               key: rule id
+//!   source ──────► MA × r ════════════════════► learners × p
+//!                   │  ▲ uncovered (shuffle→DRL)      ║
+//!                   ▼  ╚═ new-rule (broadcast) ═ DRL ═╝ (new-rule, key)
+//!                 prediction → evaluator    rule-updates (broadcast to MAs)
+//! ```
+
+use crate::core::instance::Instance;
+use crate::core::model::Regressor;
+use crate::core::Schema;
+use crate::topology::{
+    Ctx, Event, Grouping, Output, Processor, ProcessorId, StreamId, Topology, TopologyBuilder,
+};
+
+use super::amrules::{AMRulesConfig, RuleEvent, RuleLearner};
+use super::rule::RuleSpec;
+use super::vamr::{RuleLearnerProcessor, VamrStreamIds};
+
+/// Stream ids of a HAMR topology (fixed by declaration order).
+#[derive(Clone, Copy, Debug)]
+pub struct HamrStreamIds {
+    pub rule_instance: StreamId,
+    pub uncovered: StreamId,
+    pub new_rule_to_mas: StreamId,
+    pub new_rule_to_learner: StreamId,
+    pub rule_updates: StreamId,
+    pub prediction: StreamId,
+}
+
+/// HAMR model aggregator replica: simplified rules only; uncovered
+/// instances go to the default-rule learner.
+pub struct HamrAggregator {
+    streams: HamrStreamIds,
+    specs: Vec<(u32, RuleSpec)>,
+    pub stats: super::vamr::VamrMaStats,
+}
+
+impl HamrAggregator {
+    pub fn new(streams: HamrStreamIds) -> Self {
+        HamrAggregator { streams, specs: Vec::new(), stats: Default::default() }
+    }
+
+    fn predict(&self, inst: &Instance) -> Output {
+        for (_, spec) in &self.specs {
+            if spec.covers(inst) {
+                return Output::Numeric(spec.head.predict(inst));
+            }
+        }
+        Output::None // default rule lives at the DRL; MA has no copy
+    }
+}
+
+impl Processor for HamrAggregator {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        match event {
+            Event::Instance { id, inst } => {
+                self.stats.instances += 1;
+                let output = match self.predict(&inst) {
+                    Output::None => Output::Numeric(0.0), // cold-start guess
+                    o => o,
+                };
+                ctx.emit_any(
+                    self.streams.prediction,
+                    Event::Prediction { id, truth: inst.label, output },
+                );
+                if inst.numeric_label().is_none() {
+                    return;
+                }
+                for (rid, spec) in &self.specs {
+                    if spec.covers(&inst) {
+                        self.stats.forwarded += 1;
+                        ctx.emit(
+                            self.streams.rule_instance,
+                            *rid as u64,
+                            Event::RuleInstance { rule: *rid, inst },
+                        );
+                        return;
+                    }
+                }
+                // uncovered → default-rule learner
+                ctx.emit_any(self.streams.uncovered, Event::Instance { id, inst });
+            }
+            Event::NewRule { rule, spec } => {
+                // broadcast from the DRL: all replicas stay in sync
+                self.specs.push((rule, spec));
+                self.stats.rules_created += 1;
+            }
+            Event::RuleFeature { rule, feature, head } => {
+                if let Some((_, spec)) = self.specs.iter_mut().find(|(id, _)| *id == rule) {
+                    spec.features.push(feature);
+                    spec.head = head;
+                    self.stats.features_applied += 1;
+                }
+            }
+            Event::RuleHead { rule, head } => {
+                if let Some((_, spec)) = self.specs.iter_mut().find(|(id, _)| *id == rule) {
+                    spec.head = head;
+                }
+            }
+            Event::RuleRemoved { rule } => {
+                self.specs.retain(|(id, _)| *id != rule);
+                self.stats.rules_removed += 1;
+            }
+            _ => {}
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.specs.iter().map(|(_, s)| 64 + 16 * s.features.len()).sum::<usize>()
+    }
+
+    fn name(&self) -> &'static str {
+        "hamr-model-aggregator"
+    }
+}
+
+/// The centralized default-rule learner (§7.2 "centralized rule creation").
+pub struct DefaultRuleLearner {
+    schema: Schema,
+    config: AMRulesConfig,
+    streams: HamrStreamIds,
+    default_rule: RuleLearner,
+    next_id: u32,
+    pub rules_created: u64,
+}
+
+impl DefaultRuleLearner {
+    pub fn new(schema: Schema, config: AMRulesConfig, streams: HamrStreamIds) -> Self {
+        let default_rule = RuleLearner::new(RuleSpec::default(), &schema, &config);
+        DefaultRuleLearner { schema, config, streams, default_rule, next_id: 0, rules_created: 0 }
+    }
+}
+
+impl Processor for DefaultRuleLearner {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        if let Event::Instance { inst, .. } = event {
+            let Some(y) = inst.numeric_label() else { return };
+            match self.default_rule.update(&inst, y) {
+                RuleEvent::Expanded(_) => {
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    self.rules_created += 1;
+                    let spec = RuleSpec {
+                        features: self.default_rule.spec.features.clone(),
+                        head: self.default_rule.head(),
+                    };
+                    // broadcast to all MAs and hand to the owning learner
+                    ctx.emit_any(
+                        self.streams.new_rule_to_mas,
+                        Event::NewRule { rule: id, spec: spec.clone() },
+                    );
+                    ctx.emit(
+                        self.streams.new_rule_to_learner,
+                        id as u64,
+                        Event::NewRule { rule: id, spec },
+                    );
+                    self.default_rule =
+                        RuleLearner::new(RuleSpec::default(), &self.schema, &self.config);
+                }
+                RuleEvent::Evict => {
+                    self.default_rule =
+                        RuleLearner::new(RuleSpec::default(), &self.schema, &self.config);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        use crate::common::MemSize;
+        std::mem::size_of::<Self>() + self.default_rule.mem_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "hamr-default-rule-learner"
+    }
+}
+
+/// Handles of an assembled HAMR topology.
+#[derive(Clone, Copy, Debug)]
+pub struct HamrHandles {
+    pub entry: StreamId,
+    pub streams: HamrStreamIds,
+    pub mas: ProcessorId,
+    pub drl: ProcessorId,
+    pub learners: ProcessorId,
+    pub evaluator: ProcessorId,
+}
+
+/// Build the HAMR topology (Fig. 11): r MAs + 1 DRL + p learners.
+pub fn build_topology(
+    schema: &Schema,
+    config: &AMRulesConfig,
+    r: usize,
+    p: usize,
+    evaluator: impl Fn(usize) -> Box<dyn crate::topology::Processor> + 'static,
+) -> (Topology, HamrHandles) {
+    let mut b = TopologyBuilder::new("hamr");
+    let eval = b.add_processor("evaluator", 1, evaluator);
+    // stream order: 0 entry, 1 rule-instance, 2 uncovered, 3 new-rule→MAs,
+    // 4 new-rule→learner, 5 rule-updates, 6 prediction
+    let ids = HamrStreamIds {
+        rule_instance: StreamId(1),
+        uncovered: StreamId(2),
+        new_rule_to_mas: StreamId(3),
+        new_rule_to_learner: StreamId(4),
+        rule_updates: StreamId(5),
+        prediction: StreamId(6),
+    };
+    let mas = b.add_processor("model-aggregator", r, move |_| {
+        Box::new(HamrAggregator::new(ids))
+    });
+    let (s_d, c_d) = (schema.clone(), config.clone());
+    let drl = b.add_processor("default-rule-learner", 1, move |_| {
+        Box::new(DefaultRuleLearner::new(s_d.clone(), c_d.clone(), ids))
+    });
+    // learners reuse the VAMR processor; map the stream ids it needs
+    let vids = VamrStreamIds {
+        rule_instance: ids.rule_instance,
+        new_rule: ids.new_rule_to_learner,
+        rule_updates: ids.rule_updates,
+        prediction: ids.prediction,
+    };
+    let (s_l, c_l) = (schema.clone(), config.clone());
+    let learners = b.add_processor("learner", p, move |_| {
+        Box::new(RuleLearnerProcessor::new(s_l.clone(), c_l.clone(), vids))
+    });
+
+    let entry = b.stream("instance", None, mas, Grouping::Shuffle);
+    let ri = b.stream("rule-instance", Some(mas), learners, Grouping::Key);
+    let un = b.stream("uncovered", Some(mas), drl, Grouping::Shuffle);
+    let nm = b.stream("new-rule-mas", Some(drl), mas, Grouping::All);
+    let nl = b.stream("new-rule-learner", Some(drl), learners, Grouping::Key);
+    let ru = b.stream("rule-updates", Some(learners), mas, Grouping::All);
+    let pr = b.stream("prediction", Some(mas), eval, Grouping::Shuffle);
+    debug_assert_eq!(
+        (ri, un, nm, nl, ru, pr),
+        (
+            ids.rule_instance,
+            ids.uncovered,
+            ids.new_rule_to_mas,
+            ids.new_rule_to_learner,
+            ids.rule_updates,
+            ids.prediction
+        )
+    );
+
+    (
+        b.build(),
+        HamrHandles { entry, streams: ids, mas, drl, learners, evaluator: eval },
+    )
+}
+
+/// Sequential driver over the HAMR processors (r=1, p=1) for tests.
+pub struct HamrLocal {
+    ma: HamrAggregator,
+    drl: DefaultRuleLearner,
+    learner: RuleLearnerProcessor,
+    ids: HamrStreamIds,
+}
+
+impl HamrLocal {
+    pub fn new(schema: Schema, config: AMRulesConfig) -> Self {
+        let ids = HamrStreamIds {
+            rule_instance: StreamId(1),
+            uncovered: StreamId(2),
+            new_rule_to_mas: StreamId(3),
+            new_rule_to_learner: StreamId(4),
+            rule_updates: StreamId(5),
+            prediction: StreamId(6),
+        };
+        let vids = VamrStreamIds {
+            rule_instance: ids.rule_instance,
+            new_rule: ids.new_rule_to_learner,
+            rule_updates: ids.rule_updates,
+            prediction: ids.prediction,
+        };
+        HamrLocal {
+            ma: HamrAggregator::new(ids),
+            drl: DefaultRuleLearner::new(schema.clone(), config.clone(), ids),
+            learner: RuleLearnerProcessor::new(schema, config, vids),
+            ids,
+        }
+    }
+
+    fn pump(&mut self, out: Vec<(StreamId, u64, Event)>) {
+        let mut queue = out;
+        while !queue.is_empty() {
+            let mut next = Vec::new();
+            for (stream, _k, ev) in queue.drain(..) {
+                let mut ctx = Ctx::new(0, 1);
+                match stream.0 {
+                    s if s == self.ids.rule_instance.0 || s == self.ids.new_rule_to_learner.0 => {
+                        self.learner.process(ev, &mut ctx)
+                    }
+                    s if s == self.ids.uncovered.0 => self.drl.process(ev, &mut ctx),
+                    s if s == self.ids.new_rule_to_mas.0 || s == self.ids.rule_updates.0 => {
+                        self.ma.process(ev, &mut ctx)
+                    }
+                    _ => {}
+                }
+                next.extend(ctx.take());
+            }
+            queue = next;
+        }
+    }
+}
+
+impl Regressor for HamrLocal {
+    fn predict(&self, inst: &Instance) -> f64 {
+        match self.ma.predict(inst) {
+            Output::Numeric(y) => y,
+            _ => self.drl.default_rule.predict(inst),
+        }
+    }
+
+    fn train(&mut self, inst: &Instance) {
+        let mut ctx = Ctx::new(0, 1);
+        self.ma.process(Event::Instance { id: 0, inst: inst.clone() }, &mut ctx);
+        self.pump(ctx.take());
+    }
+
+    fn model_bytes(&self) -> usize {
+        self.ma.mem_bytes() + self.drl.mem_bytes() + self.learner.mem_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::core::instance::Label;
+
+    fn schema() -> Schema {
+        Schema::regression("pw", Schema::all_numeric(2), -12.0, 12.0)
+    }
+
+    #[test]
+    fn hamr_local_learns_piecewise() {
+        let mut rng = Rng::new(1);
+        let mut m = HamrLocal::new(schema(), AMRulesConfig::default());
+        for _ in 0..25_000 {
+            let x0 = rng.f32();
+            let y = if x0 <= 0.5 { 10.0 } else { -10.0 } + 0.2 * rng.gaussian();
+            m.train(&Instance::dense(vec![x0, rng.f32()], Label::Numeric(y)));
+        }
+        assert!(m.drl.rules_created >= 1, "DRL created no rules");
+        assert!(m.ma.stats.rules_created >= 1, "MA never heard about new rules");
+        let lo = m.predict(&Instance::dense(vec![0.2, 0.5], Label::None));
+        let hi = m.predict(&Instance::dense(vec![0.8, 0.5], Label::None));
+        assert!(lo > hi + 5.0, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn uncovered_instances_reach_drl() {
+        let mut m = HamrLocal::new(schema(), AMRulesConfig::default());
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            m.train(&Instance::dense(vec![rng.f32(), rng.f32()], Label::Numeric(1.0)));
+        }
+        // everything is uncovered initially, so the DRL must have stats
+        assert!(m.drl.default_rule.predict(&Instance::dense(vec![0.5, 0.5], Label::None)) > 0.5);
+    }
+}

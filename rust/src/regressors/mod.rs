@@ -1,0 +1,9 @@
+//! Regression on streams: AMRules (paper §7) — sequential (MAMR),
+//! vertically parallel (VAMR), and hybrid (HAMR).
+
+pub mod rule;
+pub mod amrules;
+pub mod vamr;
+pub mod hamr;
+
+

@@ -1,0 +1,127 @@
+//! Decision rules: `IF antecedent THEN consequent` (paper §7).
+//!
+//! A rule body is a conjunction of [`Feature`]s (conditions on attributes);
+//! the head predicts the target for covered instances. `RuleSpec` is the
+//! *simplified* rule replicated at model aggregators: body + head only, no
+//! statistics (§7.1).
+
+use crate::core::Instance;
+
+/// Comparison operator of a feature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// attribute ≤ threshold
+    Le,
+    /// attribute > threshold
+    Gt,
+    /// attribute == threshold (categorical)
+    Eq,
+}
+
+/// One condition on one attribute.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Feature {
+    pub attr: u32,
+    pub op: Op,
+    pub threshold: f64,
+}
+
+impl Feature {
+    #[inline]
+    pub fn covers(&self, inst: &Instance) -> bool {
+        let v = inst.value(self.attr as usize) as f64;
+        match self.op {
+            Op::Le => v <= self.threshold,
+            Op::Gt => v > self.threshold,
+            Op::Eq => (v - self.threshold).abs() < 1e-9,
+        }
+    }
+}
+
+/// Prediction head: adaptively chooses between target-mean and perceptron
+/// (the standard AMRules head; see `amrules::Perceptron`).
+#[derive(Clone, Debug, Default)]
+pub struct HeadSnapshot {
+    /// Target mean of covered instances.
+    pub mean: f64,
+    /// Perceptron weights (len = n_attributes + 1 bias), if trained.
+    pub weights: Option<Vec<f64>>,
+}
+
+impl HeadSnapshot {
+    pub fn predict(&self, inst: &Instance) -> f64 {
+        match &self.weights {
+            Some(w) => {
+                let mut y = w[w.len() - 1];
+                for (i, v) in inst.iter_stored() {
+                    if i < w.len() - 1 {
+                        y += w[i] * v as f64;
+                    }
+                }
+                y
+            }
+            None => self.mean,
+        }
+    }
+}
+
+/// Body + head, as replicated at model aggregators (no statistics).
+#[derive(Clone, Debug, Default)]
+pub struct RuleSpec {
+    pub features: Vec<Feature>,
+    pub head: HeadSnapshot,
+}
+
+impl RuleSpec {
+    /// Does the rule body cover the instance?
+    #[inline]
+    pub fn covers(&self, inst: &Instance) -> bool {
+        self.features.iter().all(|f| f.covers(inst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::instance::Label;
+
+    fn inst(vals: &[f32]) -> Instance {
+        Instance::dense(vals.to_vec(), Label::Numeric(0.0))
+    }
+
+    #[test]
+    fn feature_covers() {
+        let f = Feature { attr: 1, op: Op::Le, threshold: 5.0 };
+        assert!(f.covers(&inst(&[0.0, 4.0])));
+        assert!(!f.covers(&inst(&[0.0, 6.0])));
+        let g = Feature { attr: 0, op: Op::Gt, threshold: 1.0 };
+        assert!(g.covers(&inst(&[2.0, 0.0])));
+    }
+
+    #[test]
+    fn conjunction_all_must_hold() {
+        let spec = RuleSpec {
+            features: vec![
+                Feature { attr: 0, op: Op::Gt, threshold: 1.0 },
+                Feature { attr: 1, op: Op::Le, threshold: 3.0 },
+            ],
+            head: HeadSnapshot::default(),
+        };
+        assert!(spec.covers(&inst(&[2.0, 2.0])));
+        assert!(!spec.covers(&inst(&[2.0, 4.0])));
+        assert!(!spec.covers(&inst(&[0.0, 2.0])));
+    }
+
+    #[test]
+    fn empty_body_covers_everything() {
+        assert!(RuleSpec::default().covers(&inst(&[1.0])));
+    }
+
+    #[test]
+    fn head_mean_vs_perceptron() {
+        let mut h = HeadSnapshot { mean: 7.0, weights: None };
+        assert_eq!(h.predict(&inst(&[1.0, 2.0])), 7.0);
+        h.weights = Some(vec![1.0, 2.0, 0.5]); // y = x0 + 2 x1 + 0.5
+        assert!((h.predict(&inst(&[1.0, 2.0])) - 5.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,427 @@
+//! VAMR — Vertical AMRules (paper §7.1): one model aggregator holding the
+//! simplified rule set (bodies + head snapshots) and the *default rule*,
+//! plus `p` learner processors each hosting the full statistics of the
+//! rules key-grouped to them.
+//!
+//! ```text
+//!            instance            rule-instance (key: rule id)
+//!   source ───────────► MA ═══════════════════════════► learners × p
+//!                        ▲   new-rule (key) ──────────►
+//!                        ╚═ rule-feature / rule-head / rule-removed ═╝
+//!                        └──► prediction ──► evaluator
+//! ```
+//!
+//! The learner re-checks coverage before updating (the MA's body copy may
+//! be stale) — with ordered rules this is the temporary inconsistency the
+//! paper discusses.
+
+use crate::core::instance::{Instance, Label};
+use crate::core::model::Regressor;
+use crate::core::Schema;
+use crate::topology::{Ctx, Event, Grouping, Output, Processor, ProcessorId, StreamId, Topology, TopologyBuilder};
+
+use super::amrules::{AMRulesConfig, RuleEvent, RuleLearner};
+use super::rule::RuleSpec;
+
+/// Stream ids of a VAMR topology (fixed by declaration order).
+#[derive(Clone, Copy, Debug)]
+pub struct VamrStreamIds {
+    pub rule_instance: StreamId,
+    pub new_rule: StreamId,
+    pub rule_updates: StreamId,
+    pub prediction: StreamId,
+}
+
+/// The VAMR model aggregator.
+pub struct VamrAggregator {
+    schema: Schema,
+    config: AMRulesConfig,
+    streams: VamrStreamIds,
+    /// simplified replicated rules (ordered)
+    specs: Vec<(u32, RuleSpec)>,
+    /// the default rule learns fully at the MA (§7.1)
+    default_rule: RuleLearner,
+    next_id: u32,
+    pub stats: VamrMaStats,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct VamrMaStats {
+    pub instances: u64,
+    pub forwarded: u64,
+    pub rules_created: u64,
+    pub rules_removed: u64,
+    pub features_applied: u64,
+}
+
+impl VamrAggregator {
+    pub fn new(schema: Schema, config: AMRulesConfig, streams: VamrStreamIds) -> Self {
+        let default_rule = RuleLearner::new(RuleSpec::default(), &schema, &config);
+        VamrAggregator {
+            schema,
+            config,
+            streams,
+            specs: Vec::new(),
+            default_rule,
+            next_id: 0,
+            stats: VamrMaStats::default(),
+        }
+    }
+
+    fn predict(&self, inst: &Instance) -> f64 {
+        for (_, spec) in &self.specs {
+            if spec.covers(inst) {
+                return spec.head.predict(inst);
+            }
+        }
+        self.default_rule.predict(inst)
+    }
+
+    fn train(&mut self, inst: Instance, y: f64, ctx: &mut Ctx) {
+        // ordered: first covering (by the possibly-stale bodies) forwards
+        for (id, spec) in &self.specs {
+            if spec.covers(&inst) {
+                self.stats.forwarded += 1;
+                ctx.emit(
+                    self.streams.rule_instance,
+                    *id as u64,
+                    Event::RuleInstance { rule: *id, inst },
+                );
+                return;
+            }
+        }
+        // uncovered: default rule learns here
+        match self.default_rule.update(&inst, y) {
+            RuleEvent::Expanded(_) => {
+                let id = self.next_id;
+                self.next_id += 1;
+                self.stats.rules_created += 1;
+                let spec = RuleSpec {
+                    features: self.default_rule.spec.features.clone(),
+                    head: self.default_rule.head(),
+                };
+                self.specs.push((id, spec.clone()));
+                // hand the full rule to its learner
+                ctx.emit(self.streams.new_rule, id as u64, Event::NewRule { rule: id, spec });
+                // fresh default rule
+                self.default_rule =
+                    RuleLearner::new(RuleSpec::default(), &self.schema, &self.config);
+            }
+            RuleEvent::Evict => self.default_rule = RuleLearner::new(RuleSpec::default(), &self.schema, &self.config),
+            _ => {}
+        }
+    }
+}
+
+impl Processor for VamrAggregator {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        match event {
+            Event::Instance { id, inst } => {
+                self.stats.instances += 1;
+                let output = Output::Numeric(self.predict(&inst));
+                ctx.emit_any(
+                    self.streams.prediction,
+                    Event::Prediction { id, truth: inst.label, output },
+                );
+                if let Some(y) = inst.numeric_label() {
+                    self.train(inst, y, ctx);
+                }
+            }
+            Event::RuleFeature { rule, feature, head } => {
+                if let Some((_, spec)) = self.specs.iter_mut().find(|(id, _)| *id == rule) {
+                    spec.features.push(feature);
+                    spec.head = head;
+                    self.stats.features_applied += 1;
+                }
+            }
+            Event::RuleHead { rule, head } => {
+                if let Some((_, spec)) = self.specs.iter_mut().find(|(id, _)| *id == rule) {
+                    spec.head = head;
+                }
+            }
+            Event::RuleRemoved { rule } => {
+                self.specs.retain(|(id, _)| *id != rule);
+                self.stats.rules_removed += 1;
+            }
+            _ => {}
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        use crate::common::MemSize;
+        std::mem::size_of::<Self>()
+            + self
+                .specs
+                .iter()
+                .map(|(_, s)| 64 + 16 * s.features.len())
+                .sum::<usize>()
+            + self.default_rule.mem_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "vamr-model-aggregator"
+    }
+}
+
+/// A VAMR/HAMR learner processor: hosts the rules key-grouped to it.
+pub struct RuleLearnerProcessor {
+    schema: Schema,
+    config: AMRulesConfig,
+    streams: VamrStreamIds,
+    rules: Vec<(u32, RuleLearner)>,
+    /// emit a head refresh every N covered updates per rule
+    head_refresh: u32,
+    pub dropped_uncovered: u64,
+}
+
+impl RuleLearnerProcessor {
+    pub fn new(schema: Schema, config: AMRulesConfig, streams: VamrStreamIds) -> Self {
+        RuleLearnerProcessor {
+            schema,
+            config,
+            streams,
+            rules: Vec::new(),
+            head_refresh: 200,
+            dropped_uncovered: 0,
+        }
+    }
+
+    pub fn n_rules(&self) -> usize {
+        self.rules.len()
+    }
+}
+
+impl Processor for RuleLearnerProcessor {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        match event {
+            Event::NewRule { rule, spec } => {
+                let mut learner = RuleLearner::new(spec, &self.schema, &self.config);
+                // reset expansion counter: statistics start fresh here
+                learner.total_updates = 0;
+                self.rules.push((rule, learner));
+            }
+            Event::RuleInstance { rule, inst } => {
+                let Some(y) = inst.numeric_label() else { return };
+                let Some(pos) = self.rules.iter().position(|(id, _)| *id == rule) else {
+                    return;
+                };
+                let learner = &mut self.rules[pos].1;
+                // coverage re-check: MA may have been stale (§7.1)
+                if !learner.spec.covers(&inst) {
+                    self.dropped_uncovered += 1;
+                    return;
+                }
+                match learner.update(&inst, y) {
+                    RuleEvent::Expanded(f) => {
+                        let head = learner.head();
+                        ctx.emit_any(
+                            self.streams.rule_updates,
+                            Event::RuleFeature { rule, feature: f, head },
+                        );
+                    }
+                    RuleEvent::Evict => {
+                        self.rules.remove(pos);
+                        ctx.emit_any(self.streams.rule_updates, Event::RuleRemoved { rule });
+                    }
+                    RuleEvent::None => {
+                        if learner.total_updates % self.head_refresh as u64 == 0 {
+                            let head = learner.head();
+                            ctx.emit_any(self.streams.rule_updates, Event::RuleHead { rule, head });
+                        }
+                    }
+                    RuleEvent::Anomaly => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        use crate::common::MemSize;
+        std::mem::size_of::<Self>()
+            + self.rules.iter().map(|(_, r)| 4 + r.mem_bytes()).sum::<usize>()
+    }
+
+    fn name(&self) -> &'static str {
+        "amrules-learner"
+    }
+}
+
+/// Handles of an assembled VAMR topology.
+#[derive(Clone, Copy, Debug)]
+pub struct VamrHandles {
+    pub entry: StreamId,
+    pub streams: VamrStreamIds,
+    pub ma: ProcessorId,
+    pub learners: ProcessorId,
+    pub evaluator: ProcessorId,
+}
+
+/// Build the VAMR topology (Fig. 10 left): 1 MA + p learners.
+pub fn build_topology(
+    schema: &Schema,
+    config: &AMRulesConfig,
+    p: usize,
+    evaluator: impl Fn(usize) -> Box<dyn crate::topology::Processor> + 'static,
+) -> (Topology, VamrHandles) {
+    let mut b = TopologyBuilder::new("vamr");
+    let eval = b.add_processor("evaluator", 1, evaluator);
+    // stream order: 0 entry, 1 rule-instance, 2 new-rule, 3 rule-updates,
+    // 4 prediction
+    let ids = VamrStreamIds {
+        rule_instance: StreamId(1),
+        new_rule: StreamId(2),
+        rule_updates: StreamId(3),
+        prediction: StreamId(4),
+    };
+    let (s_ma, c_ma) = (schema.clone(), config.clone());
+    let ma = b.add_processor("model-aggregator", 1, move |_| {
+        Box::new(VamrAggregator::new(s_ma.clone(), c_ma.clone(), ids))
+    });
+    let (s_l, c_l) = (schema.clone(), config.clone());
+    let learners = b.add_processor("learner", p, move |_| {
+        Box::new(RuleLearnerProcessor::new(s_l.clone(), c_l.clone(), ids))
+    });
+
+    let entry = b.stream("instance", None, ma, Grouping::Shuffle);
+    let ri = b.stream("rule-instance", Some(ma), learners, Grouping::Key);
+    let nr = b.stream("new-rule", Some(ma), learners, Grouping::Key);
+    let ru = b.stream("rule-updates", Some(learners), ma, Grouping::Shuffle);
+    let pr = b.stream("prediction", Some(ma), eval, Grouping::Shuffle);
+    debug_assert_eq!((ri, nr, ru, pr), (ids.rule_instance, ids.new_rule, ids.rule_updates, ids.prediction));
+
+    (b.build(), VamrHandles { entry, streams: ids, ma, learners, evaluator: eval })
+}
+
+/// Sequential driver: runs the VAMR topology on the local engine behind
+/// the [`Regressor`] interface — used for cross-checking against MAMR in
+/// tests (with zero feedback delay the rule set must evolve like MAMR's).
+pub struct VamrLocal {
+    agg: VamrAggregator,
+    learner: RuleLearnerProcessor,
+}
+
+impl VamrLocal {
+    pub fn new(schema: Schema, config: AMRulesConfig) -> Self {
+        let ids = VamrStreamIds {
+            rule_instance: StreamId(1),
+            new_rule: StreamId(2),
+            rule_updates: StreamId(3),
+            prediction: StreamId(4),
+        };
+        VamrLocal {
+            agg: VamrAggregator::new(schema.clone(), config.clone(), ids),
+            learner: RuleLearnerProcessor::new(schema, config, ids),
+        }
+    }
+
+    /// Deliver queued emissions between MA and learner until quiescent.
+    fn pump(&mut self, out: Vec<(StreamId, u64, Event)>) {
+        let mut queue = out;
+        while !queue.is_empty() {
+            let mut next = Vec::new();
+            for (stream, _key, ev) in queue.drain(..) {
+                let mut ctx = Ctx::new(0, 1);
+                match stream.0 {
+                    1 | 2 => self.learner.process(ev, &mut ctx),
+                    3 => self.agg.process(ev, &mut ctx),
+                    _ => {}
+                }
+                next.extend(ctx.take());
+            }
+            queue = next;
+        }
+    }
+}
+
+impl Regressor for VamrLocal {
+    fn predict(&self, inst: &Instance) -> f64 {
+        self.agg.predict(inst)
+    }
+
+    fn train(&mut self, inst: &Instance) {
+        let mut ctx = Ctx::new(0, 1);
+        self.agg.process(
+            Event::Instance { id: 0, inst: inst.clone() },
+            &mut ctx,
+        );
+        self.pump(ctx.take());
+    }
+
+    fn model_bytes(&self) -> usize {
+        self.agg.mem_bytes() + self.learner.mem_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    fn schema() -> Schema {
+        Schema::regression("pw", Schema::all_numeric(2), -12.0, 12.0)
+    }
+
+    fn piecewise(rng: &mut Rng) -> Instance {
+        let x0 = rng.f32();
+        let y = if x0 <= 0.5 { 10.0 } else { -10.0 } + 0.2 * rng.gaussian();
+        Instance::dense(vec![x0, rng.f32()], Label::Numeric(y))
+    }
+
+    #[test]
+    fn vamr_local_learns_like_mamr() {
+        let mut rng = Rng::new(1);
+        let mut m = VamrLocal::new(schema(), AMRulesConfig::default());
+        for _ in 0..20_000 {
+            m.train(&piecewise(&mut rng));
+        }
+        let lo = m.predict(&Instance::dense(vec![0.2, 0.5], Label::None));
+        let hi = m.predict(&Instance::dense(vec![0.8, 0.5], Label::None));
+        assert!(lo > hi + 5.0, "lo={lo} hi={hi}");
+        assert!(m.agg.stats.rules_created >= 1);
+        assert!(m.learner.n_rules() >= 1);
+    }
+
+    #[test]
+    fn learner_drops_uncovered_after_expansion() {
+        // send an instance to a learner whose rule no longer covers it
+        let ids = VamrStreamIds {
+            rule_instance: StreamId(1),
+            new_rule: StreamId(2),
+            rule_updates: StreamId(3),
+            prediction: StreamId(4),
+        };
+        let mut l = RuleLearnerProcessor::new(schema(), AMRulesConfig::default(), ids);
+        let mut ctx = Ctx::new(0, 1);
+        let spec = RuleSpec {
+            features: vec![super::super::rule::Feature {
+                attr: 0,
+                op: super::super::rule::Op::Le,
+                threshold: 0.5,
+            }],
+            head: Default::default(),
+        };
+        l.process(Event::NewRule { rule: 0, spec }, &mut ctx);
+        l.process(
+            Event::RuleInstance {
+                rule: 0,
+                inst: Instance::dense(vec![0.9, 0.0], Label::Numeric(1.0)),
+            },
+            &mut ctx,
+        );
+        assert_eq!(l.dropped_uncovered, 1);
+    }
+}
+
+impl VamrLocal {
+    /// Debug helper for examples (not part of the public API contract).
+    pub fn debug_dump(&self) {
+        println!("MA stats: {:?}", self.agg.stats);
+        for (id, spec) in &self.agg.specs {
+            println!("spec {id}: {:?} head.mean={}", spec.features, spec.head.mean);
+        }
+        println!("learner rules: {}", self.learner.n_rules());
+        let (n, mean, sd, em, ep) = self.agg.default_rule.debug_state();
+        println!("default: n={n} mean={mean} sd={sd} err_mean={em} err_perc={ep}");
+    }
+}

@@ -1,0 +1,123 @@
+//! CluStream nearest-centroid assignment: XLA artifact or native fallback.
+
+use anyhow::Result;
+
+use super::registry::{self, Backend};
+use super::shapes::{CL_D, CL_K, CL_N};
+
+/// Assign each point to its nearest live centroid.
+///
+/// `points`: `n × d` row-major, `centers`: `k × d` row-major, `weights[k]`
+/// (weight 0 ⇒ dead slot). Returns (index, squared distance) per point.
+pub fn assign(
+    points: &[f32],
+    centers: &[f32],
+    weights: &[f32],
+    d: usize,
+) -> Vec<(usize, f64)> {
+    let n = points.len() / d;
+    let k = weights.len();
+    debug_assert_eq!(centers.len(), k * d);
+    match registry::backend_in_use() {
+        Backend::Native => assign_native(points, centers, weights, d),
+        Backend::Xla if n <= CL_N && k <= CL_K && d <= CL_D => {
+            match assign_xla(points, centers, weights, d) {
+                Ok(a) => a,
+                Err(e) => {
+                    eprintln!("[samoa] XLA cluster path failed ({e:#}); falling back to native");
+                    registry::force_backend(Backend::Native);
+                    assign_native(points, centers, weights, d)
+                }
+            }
+        }
+        // shapes exceed the artifact: native handles arbitrary sizes
+        Backend::Xla => assign_native(points, centers, weights, d),
+    }
+}
+
+/// Native brute-force assignment.
+pub fn assign_native(
+    points: &[f32],
+    centers: &[f32],
+    weights: &[f32],
+    d: usize,
+) -> Vec<(usize, f64)> {
+    let n = points.len() / d;
+    let k = weights.len();
+    let mut out = Vec::with_capacity(n);
+    for p in 0..n {
+        let pv = &points[p * d..(p + 1) * d];
+        let mut best = (usize::MAX, f64::INFINITY);
+        for c in 0..k {
+            if weights[c] <= 0.0 {
+                continue;
+            }
+            let cv = &centers[c * d..(c + 1) * d];
+            let mut acc = 0f64;
+            for i in 0..d {
+                let diff = (pv[i] - cv[i]) as f64;
+                acc += diff * diff;
+            }
+            if acc < best.1 {
+                best = (c, acc);
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
+/// XLA path: single padded `[CL_N, CL_D] × [CL_K, CL_D]` invocation.
+pub fn assign_xla(
+    points: &[f32],
+    centers: &[f32],
+    weights: &[f32],
+    d: usize,
+) -> Result<Vec<(usize, f64)>> {
+    let n = points.len() / d;
+    let k = weights.len();
+    let mut px = vec![0f32; CL_N * CL_D];
+    let mut cx = vec![0f32; CL_K * CL_D];
+    let mut wx = vec![0f32; CL_K];
+    for p in 0..n {
+        px[p * CL_D..p * CL_D + d].copy_from_slice(&points[p * d..(p + 1) * d]);
+    }
+    for c in 0..k {
+        cx[c * CL_D..c * CL_D + d].copy_from_slice(&centers[c * d..(c + 1) * d]);
+    }
+    wx[..k].copy_from_slice(weights);
+
+    let (idx, d2) = registry::with_runtime(|rt| {
+        let pl = xla::Literal::vec1(&px).reshape(&[CL_N as i64, CL_D as i64])?;
+        let cl = xla::Literal::vec1(&cx).reshape(&[CL_K as i64, CL_D as i64])?;
+        let wl = xla::Literal::vec1(&wx);
+        let outs = rt.execute_tuple("cluster", &[pl, cl, wl])?;
+        Ok((outs[0].to_vec::<i32>()?, outs[1].to_vec::<f32>()?))
+    })?;
+    Ok((0..n).map(|p| (idx[p] as usize, d2[p] as f64)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_picks_nearest() {
+        let points = [0.0, 0.0, 10.0, 10.0];
+        let centers = [0.0, 1.0, 9.0, 9.0];
+        let weights = [1.0, 1.0];
+        let a = assign_native(&points, &centers, &weights, 2);
+        assert_eq!(a[0].0, 0);
+        assert_eq!(a[1].0, 1);
+        assert!((a[0].1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_skips_dead_slots() {
+        let points = [0.0, 0.0];
+        let centers = [0.0, 0.0, 5.0, 5.0];
+        let weights = [0.0, 1.0]; // exact-match centroid is dead
+        let a = assign_native(&points, &centers, &weights, 2);
+        assert_eq!(a[0].0, 1);
+    }
+}

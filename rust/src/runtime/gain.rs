@@ -1,0 +1,128 @@
+//! Split-criterion gains: XLA artifact or native fallback.
+//!
+//! The local-statistics processor hands over the counter blocks of the
+//! attributes it tracks for one leaf; this module returns the information
+//! gain of each, chunking the blocks through the fixed-shape
+//! `infogain.hlo.txt` artifact (`[IG_A, IG_V, IG_C]`, zero-padded — padding
+//! attributes yield gain exactly 0 by kernel construction).
+
+use anyhow::Result;
+
+use crate::core::criterion;
+use crate::core::observers::CounterBlock;
+
+use super::registry::{self, Backend};
+use super::shapes::{IG_A, IG_C, IG_V};
+
+/// Information gain for each block, backend-selected.
+pub fn gains(blocks: &[&CounterBlock]) -> Vec<f64> {
+    match registry::backend_in_use() {
+        Backend::Native => gains_native(blocks),
+        Backend::Xla => match gains_xla(blocks) {
+            Ok(g) => g,
+            Err(e) => {
+                eprintln!("[samoa] XLA gain path failed ({e:#}); falling back to native");
+                registry::force_backend(Backend::Native);
+                gains_native(blocks)
+            }
+        },
+    }
+}
+
+/// Native path (also the oracle for the integration test).
+pub fn gains_native(blocks: &[&CounterBlock]) -> Vec<f64> {
+    blocks.iter().map(|b| criterion::info_gain(b)).collect()
+}
+
+/// XLA path: chunk blocks into `[IG_A, IG_V, IG_C]` tensors.
+pub fn gains_xla(blocks: &[&CounterBlock]) -> Result<Vec<f64>> {
+    let mut out = Vec::with_capacity(blocks.len());
+    let mut buf = vec![0f32; IG_A * IG_V * IG_C];
+    for chunk in blocks.chunks(IG_A) {
+        buf.iter_mut().for_each(|x| *x = 0.0);
+        for (i, b) in chunk.iter().enumerate() {
+            anyhow::ensure!(
+                b.v() as usize <= IG_V && b.c() as usize <= IG_C,
+                "counter block [{}x{}] exceeds artifact shape [{IG_V}x{IG_C}]",
+                b.v(),
+                b.c()
+            );
+            b.copy_padded(&mut buf[i * IG_V * IG_C..(i + 1) * IG_V * IG_C], IG_V, IG_C);
+        }
+        let gain_vec = registry::with_runtime(|rt| {
+            let lit = xla::Literal::vec1(&buf).reshape(&[IG_A as i64, IG_V as i64, IG_C as i64])?;
+            let outs = rt.execute_tuple("infogain", &[lit])?;
+            // outputs: (gain[IG_A], best_idx, best, second)
+            Ok(outs[0].to_vec::<f32>()?)
+        })?;
+        out.extend(gain_vec[..chunk.len()].iter().map(|&g| g as f64));
+    }
+    Ok(out)
+}
+
+/// Top-2 (index, gain) from a gain vector — shared by MA and LS logic.
+pub fn top2(gains: &[f64]) -> (usize, f64, usize, f64) {
+    let (mut bi, mut b, mut si, mut s) = (0usize, f64::NEG_INFINITY, 0usize, f64::NEG_INFINITY);
+    for (i, &g) in gains.iter().enumerate() {
+        if g > b {
+            si = bi;
+            s = b;
+            bi = i;
+            b = g;
+        } else if g > s {
+            si = i;
+            s = g;
+        }
+    }
+    if gains.len() < 2 {
+        (bi, b.max(0.0), bi, 0.0)
+    } else {
+        (bi, b, si, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    fn random_block(rng: &mut Rng, v: u32, c: u32) -> CounterBlock {
+        let mut b = CounterBlock::new(v, c);
+        for _ in 0..200 {
+            b.add(rng.below(v as usize) as u32, rng.below(c as usize) as u32, 1.0);
+        }
+        b
+    }
+
+    #[test]
+    fn native_gains_match_direct() {
+        let mut rng = Rng::new(1);
+        let blocks: Vec<CounterBlock> = (0..10).map(|_| random_block(&mut rng, 16, 8)).collect();
+        let refs: Vec<&CounterBlock> = blocks.iter().collect();
+        let g = gains_native(&refs);
+        for (i, b) in blocks.iter().enumerate() {
+            assert_eq!(g[i], criterion::info_gain(b));
+        }
+    }
+
+    #[test]
+    fn top2_basic() {
+        let (bi, b, si, s) = top2(&[0.1, 0.9, 0.5]);
+        assert_eq!((bi, si), (1, 2));
+        assert!((b - 0.9).abs() < 1e-12 && (s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top2_single() {
+        let (bi, b, _, s) = top2(&[0.4]);
+        assert_eq!(bi, 0);
+        assert!((b - 0.4).abs() < 1e-12);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn top2_ties() {
+        let (bi, _, si, _) = top2(&[0.5, 0.5, 0.1]);
+        assert_ne!(bi, si);
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the request path — python is never involved.
+//!
+//! The `xla` crate's handles wrap raw C pointers and are not `Send`/`Sync`,
+//! so the runtime is **thread-local**: each engine thread that evaluates a
+//! split criterion lazily builds its own `PjRtClient` and compiles the HLO
+//! text once (a few ms), then reuses the loaded executables for the life of
+//! the thread. Local-statistics processors call [`gain::gains`] /
+//! [`sdr::sdr_surfaces`] / [`cluster::assign`], which transparently choose:
+//!
+//! * the **XLA path** — artifacts found and `SAMOA_BACKEND` ∈ {auto, xla};
+//! * the **native path** — bit-compatible rust implementations in
+//!   [`crate::core::criterion`] (also the fallback on any runtime error).
+//!
+//! `SAMOA_ARTIFACTS` overrides the artifact directory (default: walk up
+//! from CWD looking for `artifacts/manifest.txt`).
+
+pub mod shapes;
+pub mod registry;
+pub mod gain;
+pub mod sdr;
+pub mod cluster;
+
+pub use registry::{backend_in_use, Backend};

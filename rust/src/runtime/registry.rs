@@ -1,0 +1,164 @@
+//! Thread-local artifact registry: PJRT client + compiled executables.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::shapes::Manifest;
+
+/// Which criterion backend is active.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust implementations (core::criterion).
+    Native,
+    /// AOT XLA artifacts through PJRT.
+    Xla,
+}
+
+// 0 = undecided, 1 = native, 2 = xla
+static BACKEND: AtomicU8 = AtomicU8::new(0);
+
+/// Resolve (and cache) the global backend decision.
+pub fn backend_in_use() -> Backend {
+    match BACKEND.load(Ordering::Relaxed) {
+        1 => Backend::Native,
+        2 => Backend::Xla,
+        _ => {
+            let choice = decide_backend();
+            BACKEND.store(if choice == Backend::Xla { 2 } else { 1 }, Ordering::Relaxed);
+            choice
+        }
+    }
+}
+
+/// Force a backend (tests, benches, `--backend` CLI flag).
+pub fn force_backend(b: Backend) {
+    BACKEND.store(if b == Backend::Xla { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+fn decide_backend() -> Backend {
+    match std::env::var("SAMOA_BACKEND").as_deref() {
+        Ok("native") => return Backend::Native,
+        Ok("xla") | Ok("auto") | Err(_) => {}
+        Ok(other) => {
+            eprintln!("[samoa] unknown SAMOA_BACKEND={other}, using auto");
+        }
+    }
+    match artifacts_dir() {
+        Some(dir) => {
+            let manifest = std::fs::read_to_string(dir.join("manifest.txt")).ok();
+            match manifest.and_then(|t| Manifest::parse(&t)) {
+                Some(m) if m.compatible() => Backend::Xla,
+                Some(_) => {
+                    eprintln!(
+                        "[samoa] artifact manifest shape mismatch — rebuild with `make artifacts`; using native backend"
+                    );
+                    Backend::Native
+                }
+                None => Backend::Native,
+            }
+        }
+        None => Backend::Native,
+    }
+}
+
+/// Locate the artifacts directory: `SAMOA_ARTIFACTS`, else walk up from CWD.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("SAMOA_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        return p.join("manifest.txt").exists().then_some(p);
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Thread-local compiled-executable cache.
+pub struct XlaThreadRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<&'static str, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl XlaThreadRuntime {
+    fn new() -> Result<Self> {
+        let dir = artifacts_dir().ok_or_else(|| anyhow!("no artifacts directory found"))?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(XlaThreadRuntime { client, exes: HashMap::new(), dir })
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn executable(&mut self, name: &'static str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            self.exes.insert(name, exe);
+        }
+        Ok(self.exes.get(name).unwrap())
+    }
+
+    /// Execute `name` on literal inputs, returning the decomposed output
+    /// tuple (artifacts are lowered with return_tuple=True).
+    pub fn execute_tuple(
+        &mut self,
+        name: &'static str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+thread_local! {
+    static RUNTIME: RefCell<Option<XlaThreadRuntime>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's XLA runtime (created on first use).
+pub fn with_runtime<T>(f: impl FnOnce(&mut XlaThreadRuntime) -> Result<T>) -> Result<T> {
+    RUNTIME.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(XlaThreadRuntime::new()?);
+        }
+        f(slot.as_mut().unwrap())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_discoverable_from_repo() {
+        // test runs from the crate root, which contains artifacts/
+        if artifacts_dir().is_none() {
+            eprintln!("artifacts/ not built; skipping");
+            return;
+        }
+        let dir = artifacts_dir().unwrap();
+        assert!(dir.join("infogain.hlo.txt").exists());
+    }
+
+    #[test]
+    fn backend_decision_is_sticky() {
+        let b1 = backend_in_use();
+        let b2 = backend_in_use();
+        assert_eq!(b1, b2);
+    }
+}

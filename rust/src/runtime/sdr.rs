@@ -1,0 +1,83 @@
+//! SDR surfaces for AMRules expansion: XLA artifact or native fallback.
+
+use anyhow::Result;
+
+use crate::core::criterion::{self, VarStats};
+
+use super::registry::{self, Backend};
+use super::shapes::{SDR_A, SDR_B};
+
+/// Per-attribute candidate-split statistics: one `VarStats` per bin.
+pub type AttrBins = Vec<VarStats>;
+
+/// SDR surface (`[bins]` per attribute) for every attribute's bins.
+pub fn sdr_surfaces(attrs: &[AttrBins]) -> Vec<Vec<f64>> {
+    match registry::backend_in_use() {
+        Backend::Native => sdr_native(attrs),
+        Backend::Xla => match sdr_xla(attrs) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("[samoa] XLA sdr path failed ({e:#}); falling back to native");
+                registry::force_backend(Backend::Native);
+                sdr_native(attrs)
+            }
+        },
+    }
+}
+
+pub fn sdr_native(attrs: &[AttrBins]) -> Vec<Vec<f64>> {
+    attrs.iter().map(|bins| criterion::sdr_surface(bins)).collect()
+}
+
+/// XLA path: chunk attributes into `[SDR_A, SDR_B, 3]` tensors.
+pub fn sdr_xla(attrs: &[AttrBins]) -> Result<Vec<Vec<f64>>> {
+    let mut out = Vec::with_capacity(attrs.len());
+    let mut buf = vec![0f32; SDR_A * SDR_B * 3];
+    for chunk in attrs.chunks(SDR_A) {
+        buf.iter_mut().for_each(|x| *x = 0.0);
+        for (i, bins) in chunk.iter().enumerate() {
+            anyhow::ensure!(
+                bins.len() <= SDR_B,
+                "attribute has {} bins, artifact supports {SDR_B}",
+                bins.len()
+            );
+            for (bidx, st) in bins.iter().enumerate() {
+                let off = i * SDR_B * 3 + bidx * 3;
+                buf[off] = st.n as f32;
+                buf[off + 1] = st.sum as f32;
+                buf[off + 2] = st.sq as f32;
+            }
+        }
+        let flat = registry::with_runtime(|rt| {
+            let lit =
+                xla::Literal::vec1(&buf).reshape(&[SDR_A as i64, SDR_B as i64, 3])?;
+            let outs = rt.execute_tuple("sdr", &[lit])?;
+            // outputs: (sdr[SDR_A, SDR_B], best_flat_idx, best, second)
+            Ok(outs[0].to_vec::<f32>()?)
+        })?;
+        for (i, bins) in chunk.iter().enumerate() {
+            out.push(
+                flat[i * SDR_B..i * SDR_B + bins.len()]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .collect(),
+            );
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_matches_direct_surface() {
+        let mut bins = vec![VarStats::default(); 8];
+        for (i, b) in bins.iter_mut().enumerate() {
+            b.add(i as f64, 2.0);
+        }
+        let s = sdr_native(&[bins.clone()]);
+        assert_eq!(s[0], criterion::sdr_surface(&bins));
+    }
+}

@@ -1,0 +1,82 @@
+//! Compile-time shapes of the AOT artifacts.
+//!
+//! Must match `python/compile/model.py` (the AOT manifest is checked at
+//! load time; a mismatch disables the XLA path with a warning rather than
+//! corrupting results).
+
+/// Info-gain artifact: `n[IG_A, IG_V, IG_C] → (gain[IG_A], idx, best, 2nd)`.
+pub const IG_A: usize = 64;
+pub const IG_V: usize = 16;
+pub const IG_C: usize = 8;
+
+/// SDR artifact: `stats[SDR_A, SDR_B, 3] → (sdr[SDR_A, SDR_B], idx, best, 2nd)`.
+pub const SDR_A: usize = 32;
+pub const SDR_B: usize = 64;
+
+/// Cluster artifact: `x[CL_N, CL_D], c[CL_K, CL_D], w[CL_K] → (idx[CL_N], d2[CL_N])`.
+pub const CL_N: usize = 128;
+pub const CL_K: usize = 128;
+pub const CL_D: usize = 64;
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub ig: (usize, usize, usize),
+    pub sdr: (usize, usize),
+    pub cluster: (usize, usize, usize),
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Option<Manifest> {
+        let mut ig = None;
+        let mut sdr = None;
+        let mut cluster = None;
+        for line in text.lines() {
+            let f: Vec<&str> = line.split_whitespace().collect();
+            match f.as_slice() {
+                ["ig_shape", a, v, c] => {
+                    ig = Some((a.parse().ok()?, v.parse().ok()?, c.parse().ok()?))
+                }
+                ["sdr_shape", a, b] => sdr = Some((a.parse().ok()?, b.parse().ok()?)),
+                ["cluster_shape", n, k, d] => {
+                    cluster = Some((n.parse().ok()?, k.parse().ok()?, d.parse().ok()?))
+                }
+                _ => {}
+            }
+        }
+        Some(Manifest { ig: ig?, sdr: sdr?, cluster: cluster? })
+    }
+
+    /// Does the manifest match this build's constants?
+    pub fn compatible(&self) -> bool {
+        self.ig == (IG_A, IG_V, IG_C)
+            && self.sdr == (SDR_A, SDR_B)
+            && self.cluster == (CL_N, CL_K, CL_D)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(
+            "ig_shape 64 16 8\nsdr_shape 32 64\ncluster_shape 128 128 64\nartifact x y 1\n",
+        )
+        .unwrap();
+        assert!(m.compatible());
+    }
+
+    #[test]
+    fn incompatible_shapes_detected() {
+        let m = Manifest::parse("ig_shape 32 16 8\nsdr_shape 32 64\ncluster_shape 128 128 64\n")
+            .unwrap();
+        assert!(!m.compatible());
+    }
+
+    #[test]
+    fn missing_lines_none() {
+        assert!(Manifest::parse("ig_shape 64 16 8\n").is_none());
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal ARFF reader (numeric + nominal attributes) so the *real*
+//! datasets can be used when available: drop e.g. `covtypeNorm.arff` into
+//! `data/` and the experiment harness picks it up instead of the synthetic
+//! twin (see `experiments::datasets_or_twins`).
+
+use std::io::{BufRead, BufReader, Read};
+
+use crate::core::instance::{Instance, Label};
+use crate::core::{AttributeKind, Schema};
+
+use super::StreamSource;
+
+/// Fully parsed ARFF dataset (materialized; streams replay it).
+pub struct ArffData {
+    pub schema: Schema,
+    pub instances: Vec<Instance>,
+}
+
+/// Parse an ARFF document. The last attribute is the class/target.
+pub fn parse_arff<R: Read>(reader: R, name: &str) -> anyhow::Result<ArffData> {
+    let mut attrs: Vec<AttributeKind> = Vec::new();
+    let mut nominal_values: Vec<Option<Vec<String>>> = Vec::new();
+    let mut in_data = false;
+    let mut instances = Vec::new();
+    let mut schema: Option<Schema> = None;
+
+    for line in BufReader::new(reader).lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let lower = line.to_ascii_lowercase();
+        if !in_data {
+            if lower.starts_with("@attribute") {
+                let rest = line["@attribute".len()..].trim();
+                // name may be quoted; type is the remainder
+                let (_, ty) = split_attr(rest)?;
+                if ty.starts_with('{') {
+                    let vals: Vec<String> = ty
+                        .trim_matches(|c| c == '{' || c == '}')
+                        .split(',')
+                        .map(|v| v.trim().trim_matches('\'').to_string())
+                        .collect();
+                    attrs.push(AttributeKind::Categorical { n_values: vals.len() as u32 });
+                    nominal_values.push(Some(vals));
+                } else {
+                    attrs.push(AttributeKind::Numeric);
+                    nominal_values.push(None);
+                }
+            } else if lower.starts_with("@data") {
+                in_data = true;
+                // last attribute is the class
+                let class_kind = attrs.pop().ok_or_else(|| anyhow::anyhow!("no attributes"))?;
+                let class_vals = nominal_values.pop().unwrap();
+                schema = Some(match (class_kind, &class_vals) {
+                    (AttributeKind::Categorical { n_values }, _) => {
+                        Schema::classification(name, attrs.clone(), n_values)
+                    }
+                    (AttributeKind::Numeric, _) => {
+                        Schema::regression(name, attrs.clone(), f64::MIN, f64::MAX)
+                    }
+                });
+                nominal_values.push(class_vals); // keep for label lookup
+            }
+        } else {
+            let schema = schema.as_ref().unwrap();
+            let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
+            if fields.len() != schema.n_attributes() + 1 {
+                continue; // skip malformed rows
+            }
+            let mut values = Vec::with_capacity(fields.len() - 1);
+            for (i, f) in fields[..fields.len() - 1].iter().enumerate() {
+                let v = match &nominal_values[i] {
+                    Some(vals) => vals
+                        .iter()
+                        .position(|x| x == f.trim_matches('\''))
+                        .unwrap_or(0) as f32,
+                    None => f.parse::<f32>().unwrap_or(0.0),
+                };
+                values.push(v);
+            }
+            let class_field = fields[fields.len() - 1];
+            let label = match &nominal_values[nominal_values.len() - 1] {
+                Some(vals) => Label::Class(
+                    vals.iter()
+                        .position(|x| x == class_field.trim_matches('\''))
+                        .unwrap_or(0) as u32,
+                ),
+                None => Label::Numeric(class_field.parse().unwrap_or(0.0)),
+            };
+            instances.push(Instance::dense(values, label));
+        }
+    }
+    let schema = schema.ok_or_else(|| anyhow::anyhow!("no @data section"))?;
+    Ok(ArffData { schema, instances })
+}
+
+fn split_attr(rest: &str) -> anyhow::Result<(String, String)> {
+    let rest = rest.trim();
+    if let Some(stripped) = rest.strip_prefix('\'') {
+        let end = stripped
+            .find('\'')
+            .ok_or_else(|| anyhow::anyhow!("unterminated quote"))?;
+        Ok((stripped[..end].to_string(), stripped[end + 1..].trim().to_string()))
+    } else {
+        let mut it = rest.splitn(2, char::is_whitespace);
+        let name = it.next().unwrap_or_default().to_string();
+        let ty = it.next().unwrap_or_default().trim().to_string();
+        Ok((name, ty))
+    }
+}
+
+/// Stream replaying parsed ARFF instances.
+pub struct ArffStream {
+    data: ArffData,
+    pos: usize,
+}
+
+impl ArffStream {
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("arff");
+        Ok(ArffStream { data: parse_arff(f, name)?, pos: 0 })
+    }
+
+    pub fn from_data(data: ArffData) -> Self {
+        ArffStream { data, pos: 0 }
+    }
+}
+
+impl StreamSource for ArffStream {
+    fn schema(&self) -> &Schema {
+        &self.data.schema
+    }
+
+    fn next_instance(&mut self) -> Option<Instance> {
+        let i = self.data.instances.get(self.pos)?.clone();
+        self.pos += 1;
+        Some(i)
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.data.instances.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+% comment
+@relation test
+@attribute a1 numeric
+@attribute a2 {red, green, blue}
+@attribute class {yes, no}
+@data
+1.5, green, yes
+2.0, red, no
+0.1, blue, yes
+";
+
+    #[test]
+    fn parses_schema_and_rows() {
+        let d = parse_arff(SAMPLE.as_bytes(), "test").unwrap();
+        assert_eq!(d.schema.n_attributes(), 2);
+        assert_eq!(d.schema.n_classes(), 2);
+        assert_eq!(d.instances.len(), 3);
+        assert_eq!(d.instances[0].value(0), 1.5);
+        assert_eq!(d.instances[0].value(1), 1.0); // green
+        assert_eq!(d.instances[0].class(), Some(0)); // yes
+        assert_eq!(d.instances[1].class(), Some(1)); // no
+    }
+
+    #[test]
+    fn numeric_class_is_regression() {
+        let s = "@relation r\n@attribute x numeric\n@attribute y numeric\n@data\n1,2.5\n";
+        let d = parse_arff(s.as_bytes(), "r").unwrap();
+        assert!(d.schema.is_regression());
+        assert_eq!(d.instances[0].numeric_label(), Some(2.5));
+    }
+
+    #[test]
+    fn stream_replays() {
+        let d = parse_arff(SAMPLE.as_bytes(), "test").unwrap();
+        let mut s = ArffStream::from_data(d);
+        assert_eq!(s.len_hint(), Some(3));
+        let mut n = 0;
+        while s.next_instance().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 3);
+    }
+}

@@ -1,0 +1,41 @@
+//! Stream sources: the synthetic generators of the paper's evaluation and
+//! schema-matched twins of its real datasets (substitution documented in
+//! DESIGN.md §3), plus an ARFF reader for using the real files when
+//! available (drop them into `data/`).
+
+pub mod random_tree;
+pub mod random_tweet;
+pub mod waveform;
+pub mod datasets;
+pub mod arff;
+
+use crate::core::{Instance, Schema};
+
+/// A (possibly infinite) stream of instances with a fixed schema.
+pub trait StreamSource: Send {
+    fn schema(&self) -> &Schema;
+    fn next_instance(&mut self) -> Option<Instance>;
+
+    /// Hint for harnesses: total instances available (None = unbounded).
+    fn len_hint(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// Adapter: iterate a `StreamSource` (bounded by `max`).
+pub struct Take<'a> {
+    pub src: &'a mut dyn StreamSource,
+    pub remaining: u64,
+}
+
+impl<'a> Iterator for Take<'a> {
+    type Item = Instance;
+
+    fn next(&mut self) -> Option<Instance> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        self.src.next_instance()
+    }
+}

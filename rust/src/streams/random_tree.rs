@@ -1,0 +1,186 @@
+//! Dense synthetic generator (paper §6.3): instances labeled by a random
+//! decision tree over a mix of categorical and numerical attributes — the
+//! "dense" streams of Figs 3, 4, 6, 8 (configurations like 10-10 meaning
+//! 10 categorical + 10 numerical).
+//!
+//! The concept tree is built once from the seed: internal nodes test a
+//! random attribute (random threshold for numeric, value-branch for
+//! categorical); leaves carry one of the (balanced) classes. Attribute
+//! values are drawn uniformly, the label read off the tree, plus optional
+//! class noise.
+
+use crate::common::Rng;
+use crate::core::instance::{Instance, Label};
+use crate::core::{AttributeKind, Schema};
+
+use super::StreamSource;
+
+enum CNode {
+    LeafC(u32),
+    SplitCat { attr: usize, children: Vec<usize> },
+    SplitNum { attr: usize, threshold: f32, low: usize, high: usize },
+}
+
+/// Random-decision-tree labeled dense stream.
+pub struct RandomTreeGenerator {
+    schema: Schema,
+    nodes: Vec<CNode>,
+    rng: Rng,
+    noise: f64,
+    n_categorical: usize,
+    cat_values: u32,
+}
+
+impl RandomTreeGenerator {
+    /// `n_categorical` categorical (5 values each) + `n_numeric` numeric
+    /// attributes, `n_classes` balanced classes. Deterministic in `seed`.
+    pub fn new(n_categorical: usize, n_numeric: usize, n_classes: u32, seed: u64) -> Self {
+        Self::with_depth(n_categorical, n_numeric, n_classes, seed, 5, 0.0)
+    }
+
+    pub fn with_depth(
+        n_categorical: usize,
+        n_numeric: usize,
+        n_classes: u32,
+        seed: u64,
+        max_depth: u32,
+        noise: f64,
+    ) -> Self {
+        let cat_values = 5;
+        let mut attrs = Schema::all_categorical(n_categorical, cat_values);
+        attrs.extend(Schema::all_numeric(n_numeric));
+        let schema = Schema::classification(
+            &format!("random-tree-{n_categorical}-{n_numeric}"),
+            attrs,
+            n_classes,
+        );
+        let mut rng = Rng::new(seed);
+        let mut gen = RandomTreeGenerator {
+            schema,
+            nodes: Vec::new(),
+            rng: rng.fork(1),
+            noise,
+            n_categorical,
+            cat_values,
+        };
+        let mut next_class = 0u32;
+        gen.build(&mut rng, 0, max_depth, &mut next_class);
+        gen
+    }
+
+    fn build(&mut self, rng: &mut Rng, depth: u32, max_depth: u32, next_class: &mut u32) -> usize {
+        let n_attrs = self.schema.n_attributes();
+        if depth >= max_depth || rng.bool(0.15 * depth as f64) {
+            // balanced classes: leaves cycle through the class labels
+            let c = *next_class % self.schema.n_classes();
+            *next_class += 1;
+            self.nodes.push(CNode::LeafC(c));
+            return self.nodes.len() - 1;
+        }
+        let attr = rng.below(n_attrs);
+        if attr < self.n_categorical {
+            let children: Vec<usize> = (0..self.cat_values)
+                .map(|_| self.build(rng, depth + 1, max_depth, next_class))
+                .collect();
+            self.nodes.push(CNode::SplitCat { attr, children });
+        } else {
+            let threshold = rng.f32();
+            let low = self.build(rng, depth + 1, max_depth, next_class);
+            let high = self.build(rng, depth + 1, max_depth, next_class);
+            self.nodes.push(CNode::SplitNum { attr, threshold, low, high });
+        }
+        self.nodes.len() - 1
+    }
+
+    fn classify(&self, values: &[f32]) -> u32 {
+        let mut node = self.nodes.len() - 1; // root pushed last
+        loop {
+            match &self.nodes[node] {
+                CNode::LeafC(c) => return *c,
+                CNode::SplitCat { attr, children } => {
+                    node = children[values[*attr] as usize % children.len()];
+                }
+                CNode::SplitNum { attr, threshold, low, high } => {
+                    node = if values[*attr] <= *threshold { *low } else { *high };
+                }
+            }
+        }
+    }
+}
+
+impl StreamSource for RandomTreeGenerator {
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    fn next_instance(&mut self) -> Option<Instance> {
+        let n = self.schema.n_attributes();
+        let mut values = Vec::with_capacity(n);
+        for a in 0..n {
+            if a < self.n_categorical {
+                values.push(self.rng.below(self.cat_values as usize) as f32);
+            } else {
+                values.push(self.rng.f32());
+            }
+        }
+        let mut class = self.classify(&values);
+        if self.noise > 0.0 && self.rng.bool(self.noise) {
+            class = self.rng.below(self.schema.n_classes() as usize) as u32;
+        }
+        Some(Instance::dense(values, Label::Class(class)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = RandomTreeGenerator::new(5, 5, 2, 7);
+        let mut b = RandomTreeGenerator::new(5, 5, 2, 7);
+        for _ in 0..100 {
+            let (x, y) = (a.next_instance().unwrap(), b.next_instance().unwrap());
+            assert_eq!(x.values, y.values);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = RandomTreeGenerator::new(5, 5, 2, 1);
+        let mut b = RandomTreeGenerator::new(5, 5, 2, 2);
+        let same = (0..50)
+            .filter(|_| {
+                a.next_instance().unwrap().values == b.next_instance().unwrap().values
+            })
+            .count();
+        assert!(same < 50);
+    }
+
+    #[test]
+    fn labels_learnable_not_constant() {
+        let mut g = RandomTreeGenerator::new(10, 10, 2, 3);
+        let mut counts = [0u32; 2];
+        for _ in 0..2000 {
+            counts[g.next_instance().unwrap().class().unwrap() as usize] += 1;
+        }
+        // both classes present, neither vanishingly rare
+        assert!(counts[0] > 100 && counts[1] > 100, "{counts:?}");
+    }
+
+    #[test]
+    fn concept_is_a_function_of_attributes() {
+        // same attribute values → same label (no noise)
+        let g = RandomTreeGenerator::new(3, 3, 2, 5);
+        let vals = vec![1.0, 0.0, 2.0, 0.3, 0.7, 0.1];
+        assert_eq!(g.classify(&vals), g.classify(&vals));
+    }
+
+    #[test]
+    fn dimensions_match_config() {
+        let mut g = RandomTreeGenerator::new(100, 100, 2, 9);
+        let i = g.next_instance().unwrap();
+        assert_eq!(i.n_attributes(), 200);
+    }
+}

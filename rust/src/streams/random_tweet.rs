@@ -1,0 +1,132 @@
+//! Sparse synthetic generator (paper §6.3): the random **tweet** stream.
+//!
+//! Attributes are a bag-of-words of dimensionality D ∈ {100, 1k, 10k};
+//! each tweet has Gaussian length (mean 15 words) drawn from a Zipf(z=1.5)
+//! distribution over the vocabulary; the binary class (uniform) conditions
+//! the Zipf distribution used — class 1 reverses pairs of word ranks, so
+//! word identity carries the signal.
+
+use crate::common::zipf::Zipf;
+use crate::common::Rng;
+use crate::core::instance::{Instance, Label};
+use crate::core::Schema;
+
+use super::StreamSource;
+
+/// Sparse tweet stream.
+pub struct RandomTweetGenerator {
+    schema: Schema,
+    zipf: Zipf,
+    rng: Rng,
+    vocab: u32,
+    mean_words: f64,
+    sd_words: f64,
+    /// class-1 permutation: swap adjacent rank pairs (rank r ↔ r^1)
+    _marker: (),
+}
+
+impl RandomTweetGenerator {
+    pub fn new(vocab: u32, seed: u64) -> Self {
+        let schema =
+            Schema::classification(&format!("random-tweet-{vocab}"), Schema::all_numeric(vocab as usize), 2);
+        RandomTweetGenerator {
+            schema,
+            zipf: Zipf::new(vocab as usize, 1.5),
+            rng: Rng::new(seed),
+            vocab,
+            mean_words: 15.0,
+            sd_words: 5.0,
+            _marker: (),
+        }
+    }
+
+    /// Class-conditional word rank: class 1 shifts the rank→word mapping
+    /// by 3, so each class has its own set of high-frequency words (the
+    /// paper: the class "conditions the Zipf distribution used to
+    /// generate the words").
+    #[inline]
+    fn word_for(&self, rank: usize, class: u32) -> u32 {
+        ((rank as u32) + 3 * class) % self.vocab
+    }
+}
+
+impl StreamSource for RandomTweetGenerator {
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    fn next_instance(&mut self) -> Option<Instance> {
+        let class = self.rng.below(2) as u32;
+        let len = (self.mean_words + self.sd_words * self.rng.gaussian())
+            .round()
+            .clamp(1.0, 100.0) as usize;
+        let mut words: Vec<u32> = (0..len)
+            .map(|_| {
+                let r = self.zipf.sample(&mut self.rng);
+                self.word_for(r, class)
+            })
+            .collect();
+        words.sort_unstable();
+        words.dedup();
+        let values = vec![1.0f32; words.len()];
+        Some(Instance::sparse(words, values, self.vocab, Label::Class(class)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tweets_are_sparse_with_mean_len() {
+        let mut g = RandomTweetGenerator::new(1000, 1);
+        let mut total = 0usize;
+        for _ in 0..500 {
+            let i = g.next_instance().unwrap();
+            assert!(i.n_stored() <= 100);
+            assert_eq!(i.n_attributes(), 1000);
+            total += i.n_stored();
+        }
+        let mean = total as f64 / 500.0;
+        // dedup trims below 15 a bit
+        assert!(mean > 6.0 && mean < 16.0, "mean={mean}");
+    }
+
+    #[test]
+    fn classes_roughly_balanced() {
+        let mut g = RandomTweetGenerator::new(100, 2);
+        let ones = (0..1000)
+            .filter(|_| g.next_instance().unwrap().class() == Some(1))
+            .count();
+        assert!(ones > 400 && ones < 600, "ones={ones}");
+    }
+
+    #[test]
+    fn class_signal_exists() {
+        // word 0 should be much more common under class 0 than class 1
+        let mut g = RandomTweetGenerator::new(100, 3);
+        let (mut w0_c0, mut w0_c1) = (0, 0);
+        for _ in 0..4000 {
+            let i = g.next_instance().unwrap();
+            let has0 = i.value(0) != 0.0;
+            match (i.class().unwrap(), has0) {
+                (0, true) => w0_c0 += 1,
+                (1, true) => w0_c1 += 1,
+                _ => {}
+            }
+        }
+        assert!(
+            w0_c0 as f64 > w0_c1 as f64 * 1.2,
+            "w0 under c0={w0_c0} vs c1={w0_c1}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = RandomTweetGenerator::new(100, 9);
+        let mut b = RandomTweetGenerator::new(100, 9);
+        for _ in 0..50 {
+            assert_eq!(a.next_instance().unwrap().values, b.next_instance().unwrap().values);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! `TopologyBuilder` — connects user processors and streams and performs
+//! the bookkeeping (ids, parallelism, routing tables) the engines need.
+//!
+//! Mirrors the paper's §4 code snippet:
+//! ```ignore
+//! let mut b = TopologyBuilder::new();
+//! let ma = b.add_processor("model-aggregator", 1, |_| Box::new(...));
+//! let ls = b.add_processor("local-statistics", p, |i| Box::new(...));
+//! let attr = b.stream(Some(ma), ls, Grouping::Key);
+//! ```
+
+use super::processor::Processor;
+use super::stream::Grouping;
+
+/// Logical processor handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProcessorId(pub usize);
+
+/// Stream handle (index into the topology's stream table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StreamId(pub usize);
+
+/// A logical processor: `parallelism` instances created by `factory`.
+pub struct ProcessorDef {
+    pub name: String,
+    pub parallelism: usize,
+    pub factory: Box<dyn Fn(usize) -> Box<dyn Processor>>,
+}
+
+/// A stream: routing policy + endpoints.
+#[derive(Clone, Debug)]
+pub struct StreamDef {
+    pub name: String,
+    /// `None` when events are injected by the engine (source stream).
+    pub from: Option<ProcessorId>,
+    pub to: ProcessorId,
+    pub grouping: Grouping,
+    /// Extra delivery delay in *source instances* applied by the local
+    /// engine — models the MA↔LS feedback latency of a real DSPE
+    /// deterministically (see `engine::local`). Ignored by the threaded
+    /// engine, where queues create delay naturally.
+    pub delay: usize,
+}
+
+/// An assembled topology, ready for an engine to materialize.
+pub struct Topology {
+    pub name: String,
+    pub processors: Vec<ProcessorDef>,
+    pub streams: Vec<StreamDef>,
+}
+
+impl Topology {
+    pub fn total_instances(&self) -> usize {
+        self.processors.iter().map(|p| p.parallelism).sum()
+    }
+}
+
+/// Builder with the bookkeeping of the paper's TopologyBuilder.
+pub struct TopologyBuilder {
+    name: String,
+    processors: Vec<ProcessorDef>,
+    streams: Vec<StreamDef>,
+}
+
+impl TopologyBuilder {
+    pub fn new(name: &str) -> Self {
+        TopologyBuilder { name: name.to_string(), processors: Vec::new(), streams: Vec::new() }
+    }
+
+    /// Register a logical processor with `parallelism` instances.
+    pub fn add_processor<F>(&mut self, name: &str, parallelism: usize, factory: F) -> ProcessorId
+    where
+        F: Fn(usize) -> Box<dyn Processor> + 'static,
+    {
+        assert!(parallelism >= 1, "parallelism must be >= 1");
+        self.processors.push(ProcessorDef {
+            name: name.to_string(),
+            parallelism,
+            factory: Box::new(factory),
+        });
+        ProcessorId(self.processors.len() - 1)
+    }
+
+    /// Create a stream from `from` (or the engine source if `None`) to `to`.
+    pub fn stream(
+        &mut self,
+        name: &str,
+        from: Option<ProcessorId>,
+        to: ProcessorId,
+        grouping: Grouping,
+    ) -> StreamId {
+        self.stream_delayed(name, from, to, grouping, 0)
+    }
+
+    /// Like [`Self::stream`] but with a local-engine delivery delay.
+    pub fn stream_delayed(
+        &mut self,
+        name: &str,
+        from: Option<ProcessorId>,
+        to: ProcessorId,
+        grouping: Grouping,
+        delay: usize,
+    ) -> StreamId {
+        assert!(to.0 < self.processors.len(), "unknown destination processor");
+        if let Some(f) = from {
+            assert!(f.0 < self.processors.len(), "unknown source processor");
+        }
+        self.streams.push(StreamDef {
+            name: name.to_string(),
+            from,
+            to,
+            grouping,
+            delay,
+        });
+        StreamId(self.streams.len() - 1)
+    }
+
+    pub fn build(self) -> Topology {
+        Topology { name: self.name, processors: self.processors, streams: self.streams }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::event::Event;
+    use crate::topology::processor::Ctx;
+
+    struct Nop;
+    impl Processor for Nop {
+        fn process(&mut self, _e: Event, _c: &mut Ctx) {}
+    }
+
+    #[test]
+    fn builds_graph() {
+        let mut b = TopologyBuilder::new("t");
+        let a = b.add_processor("a", 1, |_| Box::new(Nop));
+        let c = b.add_processor("c", 4, |_| Box::new(Nop));
+        let s = b.stream("a->c", Some(a), c, Grouping::Key);
+        let t = b.build();
+        assert_eq!(t.processors.len(), 2);
+        assert_eq!(t.streams[s.0].to, c);
+        assert_eq!(t.total_instances(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_parallelism_panics() {
+        let mut b = TopologyBuilder::new("t");
+        b.add_processor("a", 0, |_| Box::new(Nop));
+    }
+}

@@ -1,0 +1,166 @@
+//! Content events — every message type exchanged in any SAMOA topology.
+//!
+//! The VHT variants implement Table 2 of the paper verbatim
+//! (`instance`, `attribute`, `compute`, `local-result`, `drop`); the
+//! AMRules and CluStream variants implement the messages described in
+//! §7.1–7.2 and §5 respectively.
+
+use std::sync::Arc;
+
+use crate::core::instance::{Instance, Label};
+use crate::regressors::rule::{Feature, RuleSpec};
+
+/// Model output attached to a prediction event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Output {
+    Class(u32),
+    Numeric(f64),
+    /// No prediction possible yet (empty model).
+    None,
+}
+
+/// All content events.
+#[derive(Clone, Debug)]
+pub enum Event {
+    // ---------------------------------------------------------- generic
+    /// A (possibly labeled) instance from the source S.
+    Instance { id: u64, inst: Instance },
+    /// Model prediction, flowing to the evaluator.
+    Prediction { id: u64, truth: Label, output: Output },
+    /// Engine-injected shutdown marker (flushes buffered state).
+    Shutdown,
+
+    // ------------------------------------------------- VHT (Table 2)
+    /// One attribute of a training instance: MA → LS, key-grouped by
+    /// (leaf id, attribute id).
+    Attribute { leaf: u64, attr: u32, value: f32, class: u32, weight: f32 },
+    /// Attribute events of one instance destined to the *same* LS
+    /// instance, grouped by the MA (Direct grouping). Semantically
+    /// identical to the per-attribute events; one message per LS per
+    /// instance instead of one per attribute (§Perf optimization; the
+    /// wire size still counts every attribute).
+    AttributeBatch { leaf: u64, class: u32, weight: f32, attrs: Vec<(u32, u8)> },
+    /// Ask all LS to evaluate the split criterion for `leaf`: MA → all LS.
+    /// `class_counts` (leaf class marginals) lets LS derive absence rows
+    /// for sparse presence observers; empty in dense mode.
+    Compute { leaf: u64, seq: u32, n_l: f64, class_counts: Vec<f32> },
+    /// Local top-2 attributes by criterion: LS → MA. `best_dist` carries
+    /// the winning attribute's `[arity × class]` counts so the MA can seed
+    /// child leaves (Alg. 4 line 8, "derived sufficient statistic").
+    LocalResult {
+        leaf: u64,
+        seq: u32,
+        best_attr: u32,
+        best: f64,
+        second_attr: u32,
+        second: f64,
+        best_dist: Vec<f32>,
+    },
+    /// Release leaf state after a split: MA → all LS.
+    DropLeaf { leaf: u64 },
+
+    // ------------------------------------------------- AMRules (§7)
+    /// Instance covered by `rule`: model aggregator → learner (key-grouped
+    /// by rule id).
+    RuleInstance { rule: u32, inst: Instance },
+    /// Default rule expanded into a new rule: default-rule learner → all
+    /// model aggregators (broadcast) + owning learner.
+    NewRule { rule: u32, spec: RuleSpec },
+    /// A learner expanded a rule with a new feature: learner → all MAs
+    /// (carries a fresh head snapshot so MA predictions track the learner).
+    RuleFeature { rule: u32, feature: Feature, head: crate::regressors::rule::HeadSnapshot },
+    /// Periodic head refresh: learner → all MAs.
+    RuleHead { rule: u32, head: crate::regressors::rule::HeadSnapshot },
+    /// Drift detected, rule evicted: learner → all MAs.
+    RuleRemoved { rule: u32 },
+
+    // ------------------------------------------------- CluStream
+    /// Point routed to the micro-cluster aggregator with its tentative
+    /// nearest-centroid assignment (computed worker-side on a snapshot).
+    ClusterAssign { idx: u32, dist2: f64, inst: Instance },
+    /// Periodic centroid snapshot: aggregator → all workers (broadcast).
+    CentroidSnapshot {
+        version: u64,
+        k: u32,
+        d: u32,
+        centers: Arc<Vec<f32>>,
+        weights: Arc<Vec<f32>>,
+    },
+}
+
+impl Event {
+    /// Approximate serialized size — the cost model of `engine::simtime`
+    /// and the quantity on the x-axis of Fig. 13.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Event::Instance { inst, .. } => 8 + inst.wire_bytes(),
+            Event::Prediction { .. } => 8 + 16 + 9,
+            Event::Shutdown => 1,
+            Event::Attribute { .. } => 8 + 4 + 4 + 4 + 4,
+            Event::AttributeBatch { attrs, .. } => 8 + 4 + 4 + 5 * attrs.len(),
+            Event::Compute { class_counts, .. } => 8 + 4 + 8 + 4 * class_counts.len(),
+            Event::LocalResult { best_dist, .. } => 8 + 4 + 2 * (4 + 8) + 4 * best_dist.len(),
+            Event::DropLeaf { .. } => 8,
+            Event::RuleInstance { inst, .. } => 4 + inst.wire_bytes(),
+            Event::NewRule { spec, .. } => 4 + 16 * spec.features.len() + 16,
+            Event::RuleFeature { .. } => 4 + 16 + 16,
+            Event::RuleHead { head, .. } => {
+                4 + 8 + head.weights.as_ref().map_or(0, |w| 8 * w.len())
+            }
+            Event::RuleRemoved { .. } => 4,
+            Event::ClusterAssign { inst, .. } => 12 + inst.wire_bytes(),
+            Event::CentroidSnapshot { centers, weights, .. } => {
+                8 + 8 + 4 * centers.len() + 4 * weights.len()
+            }
+        }
+    }
+
+    /// True for control-plane events that must not be subject to data-path
+    /// backpressure (they close the MA↔LS feedback loop; see
+    /// `engine::threaded` on deadlock avoidance).
+    pub fn is_control(&self) -> bool {
+        matches!(
+            self,
+            Event::Compute { .. }
+                | Event::LocalResult { .. }
+                | Event::DropLeaf { .. }
+                | Event::NewRule { .. }
+                | Event::RuleFeature { .. }
+                | Event::RuleHead { .. }
+                | Event::RuleRemoved { .. }
+                | Event::CentroidSnapshot { .. }
+                | Event::Shutdown
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attribute_event_is_small() {
+        let e = Event::Attribute { leaf: 1, attr: 2, value: 0.5, class: 1, weight: 1.0 };
+        assert!(e.wire_bytes() <= 32);
+    }
+
+    #[test]
+    fn instance_event_scales_with_density() {
+        let dense = Event::Instance {
+            id: 0,
+            inst: Instance::dense(vec![0.0; 100], Label::Class(0)),
+        };
+        let sparse = Event::Instance {
+            id: 0,
+            inst: Instance::sparse(vec![1, 5], vec![1.0, 2.0], 100, Label::Class(0)),
+        };
+        assert!(sparse.wire_bytes() < dense.wire_bytes());
+    }
+
+    #[test]
+    fn control_classification() {
+        assert!(Event::Compute { leaf: 0, seq: 0, n_l: 0.0, class_counts: vec![] }.is_control());
+        assert!(!Event::Attribute { leaf: 0, attr: 0, value: 0.0, class: 0, weight: 1.0 }
+            .is_control());
+    }
+}

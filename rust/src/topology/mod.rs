@@ -1,0 +1,23 @@
+//! The SAMOA abstraction layer (paper §4): an algorithm is a directed graph
+//! of [`Processor`]s connected by [`Stream`]s carrying [`Event`]s
+//! (content events), assembled by a [`TopologyBuilder`] and executed inside
+//! a [`task::Task`] by one of the engines in [`crate::engine`].
+//!
+//! Differences from the Java original, by design:
+//! * `ContentEvent` is a closed enum ([`Event`]) instead of an open
+//!   interface — no boxing/downcasting on the hot path.
+//! * `ProcessingItem` (the paper's hidden physical wrapper of a Processor)
+//!   corresponds to one *instance* of a logical processor: the engines
+//!   materialize `parallelism` instances per processor and route to them
+//!   per the stream's [`Grouping`].
+
+pub mod event;
+pub mod processor;
+pub mod stream;
+pub mod builder;
+pub mod task;
+
+pub use builder::{ProcessorId, StreamId, Topology, TopologyBuilder};
+pub use event::{Event, Output};
+pub use processor::{Ctx, Processor};
+pub use stream::Grouping;

@@ -1,0 +1,80 @@
+//! The [`Processor`] trait — the container for user algorithm code — and
+//! the [`Ctx`] handed to it for emitting events downstream.
+
+use super::builder::StreamId;
+use super::event::Event;
+
+/// Emission buffer + identity information passed to `Processor::process`.
+///
+/// Emissions are buffered and routed by the engine *after* the call
+/// returns; a processor never blocks inside `process` (the threaded
+/// engine applies backpressure at the routing step).
+pub struct Ctx {
+    /// Which instance of the logical processor this is (0..parallelism).
+    pub instance: usize,
+    /// Parallelism of this logical processor.
+    pub parallelism: usize,
+    pub(crate) out: Vec<(StreamId, u64, Event)>,
+}
+
+impl Ctx {
+    pub(crate) fn new(instance: usize, parallelism: usize) -> Self {
+        Ctx { instance, parallelism, out: Vec::new() }
+    }
+
+    /// Emit `event` on `stream`. `key` is used by key-grouped streams to
+    /// pick the destination instance (ignored by shuffle/all).
+    #[inline]
+    pub fn emit(&mut self, stream: StreamId, key: u64, event: Event) {
+        self.out.push((stream, key, event));
+    }
+
+    /// Emit with no meaningful key (shuffle / all / parallelism-1 streams).
+    #[inline]
+    pub fn emit_any(&mut self, stream: StreamId, event: Event) {
+        self.out.push((stream, 0, event));
+    }
+
+    pub(crate) fn take(&mut self) -> Vec<(StreamId, u64, Event)> {
+        std::mem::take(&mut self.out)
+    }
+}
+
+/// A node in the topology. One logical processor may be instantiated
+/// `parallelism` times; each instance owns independent state.
+pub trait Processor: Send {
+    /// Handle one content event.
+    fn process(&mut self, event: Event, ctx: &mut Ctx);
+
+    /// Called once when the engine shuts the topology down; flush any
+    /// buffered state (e.g. pending predictions).
+    fn on_shutdown(&mut self, _ctx: &mut Ctx) {}
+
+    /// Estimated model-state bytes (Tables 6-7).
+    fn mem_bytes(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "processor"
+    }
+}
+
+/// Blanket helper so `Box<dyn Processor>` also implements `Processor`.
+impl Processor for Box<dyn Processor> {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        (**self).process(event, ctx)
+    }
+
+    fn on_shutdown(&mut self, ctx: &mut Ctx) {
+        (**self).on_shutdown(ctx)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        (**self).mem_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}

@@ -1,0 +1,16 @@
+//! Tasks — execution entities (paper §4: "a Topology is instantiated
+//! inside a Task to be run"). A task supplies the topology, the source
+//! stream of instances, and knows which stream carries source events.
+
+use super::builder::{StreamId, Topology};
+use crate::streams::StreamSource;
+
+/// A runnable unit: topology + instance source + entry stream.
+pub struct Task {
+    pub topology: Topology,
+    pub source: Box<dyn StreamSource>,
+    /// Stream on which the engine injects `Event::Instance`.
+    pub entry: StreamId,
+    /// Stop after this many source instances (0 = until exhausted).
+    pub max_instances: u64,
+}

@@ -1,0 +1,123 @@
+//! End-to-end distributed AMRules: VAMR and HAMR topologies on the local
+//! and threaded engines against the sequential MAMR baseline.
+
+use std::sync::Arc;
+
+use samoa::core::model::Regressor;
+use samoa::engine::{LocalEngine, ThreadedEngine};
+use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use samoa::regressors::amrules::{AMRules, AMRulesConfig};
+use samoa::regressors::{hamr, vamr};
+use samoa::streams::{datasets::ElectricityRegStream, StreamSource};
+use samoa::topology::Event;
+
+const N: u64 = 30_000;
+
+fn mamr_rmse(seed: u64) -> f64 {
+    let mut stream = ElectricityRegStream::with_limit(seed, N);
+    let mut model = AMRules::new(stream.schema().clone(), AMRulesConfig::default());
+    let mut sq = 0.0;
+    let mut n = 0u64;
+    while let Some(inst) = stream.next_instance() {
+        let y = inst.numeric_label().unwrap();
+        let e = y - model.predict(&inst);
+        sq += e * e;
+        n += 1;
+        model.train(&inst);
+    }
+    (sq / n as f64).sqrt()
+}
+
+#[test]
+fn vamr_topology_tracks_mamr() {
+    let base = mamr_rmse(5);
+
+    let mut stream = ElectricityRegStream::with_limit(5, N);
+    let range = stream.schema().label_range();
+    let sink = EvalSink::new(0, range, 100_000);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) =
+        vamr::build_topology(stream.schema(), &AMRulesConfig::default(), 2, move |_| {
+            Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+        });
+    let source = (0..N).map(move |id| Event::Instance {
+        id,
+        inst: stream.next_instance().unwrap(),
+    });
+    LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+    let vamr_rmse = sink.rmse();
+    assert!(vamr_rmse.is_finite() && vamr_rmse > 0.0);
+    // distributed must stay in the same error regime as sequential
+    assert!(
+        vamr_rmse < base * 2.0 + 0.2,
+        "VAMR rmse {vamr_rmse:.4} vs MAMR {base:.4}"
+    );
+}
+
+#[test]
+fn hamr_topology_with_replicated_mas() {
+    let mut stream = ElectricityRegStream::with_limit(9, N);
+    let range = stream.schema().label_range();
+    let sink = EvalSink::new(0, range, 100_000);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) =
+        hamr::build_topology(stream.schema(), &AMRulesConfig::default(), 2, 2, move |_| {
+            Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+        });
+    let source = (0..N).map(move |id| Event::Instance {
+        id,
+        inst: stream.next_instance().unwrap(),
+    });
+    let metrics = LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+    assert_eq!(metrics.source_instances, N);
+    // rules were created and broadcast: new-rule→MAs stream carried events
+    assert!(
+        metrics.streams[handles.streams.new_rule_to_mas.0].events > 0,
+        "DRL never broadcast a rule"
+    );
+    let rmse = sink.rmse();
+    assert!(rmse.is_finite() && rmse < 2.0, "HAMR rmse {rmse}");
+}
+
+#[test]
+fn vamr_on_threaded_engine() {
+    let mut stream = ElectricityRegStream::with_limit(11, 15_000);
+    let range = stream.schema().label_range();
+    let sink = EvalSink::new(0, range, 100_000);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) =
+        vamr::build_topology(stream.schema(), &AMRulesConfig::default(), 2, move |_| {
+            Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+        });
+    let source = (0..15_000u64).map(move |id| Event::Instance {
+        id,
+        inst: stream.next_instance().unwrap(),
+    });
+    let metrics = ThreadedEngine::default().run(&topo, handles.entry, source, |_, _, _| {});
+    assert_eq!(metrics.source_instances, 15_000);
+    assert!(sink.rmse().is_finite());
+}
+
+#[test]
+fn mamr_table5_statistics_nontrivial() {
+    // Table 5 shape: airlines (complex) creates far more rules/features
+    // than electricity (simple)
+    let mut elec = ElectricityRegStream::with_limit(3, 40_000);
+    let mut m1 = AMRules::new(elec.schema().clone(), AMRulesConfig::default());
+    while let Some(i) = elec.next_instance() {
+        m1.train(&i);
+    }
+    let mut air = samoa::streams::datasets::AirlinesStream::with_limit(3, 40_000);
+    let mut m2 = AMRules::new(air.schema().clone(), AMRulesConfig::default());
+    while let Some(i) = air.next_instance() {
+        m2.train(&i);
+    }
+    assert!(m1.stats.rules_created > 0);
+    assert!(m2.stats.rules_created > 0);
+    assert!(
+        m2.stats.features_created >= m1.stats.features_created,
+        "airlines ({}) should be at least as complex as electricity ({})",
+        m2.stats.features_created,
+        m1.stats.features_created
+    );
+}

@@ -1,0 +1,167 @@
+//! Property-style tests over the engines and topology substrate: seeded
+//! random topologies and event mixes, checking conservation and
+//! determinism invariants. (No proptest crate offline; this is a small
+//! hand-rolled generator loop over many seeds.)
+
+use samoa::common::Rng;
+use samoa::core::instance::{Instance, Label};
+use samoa::engine::{LocalEngine, SimTimeEngine, ThreadedEngine};
+use samoa::topology::{Ctx, Event, Grouping, Processor, TopologyBuilder};
+
+/// Forwards every instance to a configured stream (if any) and counts.
+struct Fwd {
+    out: Option<samoa::topology::StreamId>,
+    seen: u64,
+}
+
+impl Processor for Fwd {
+    fn process(&mut self, e: Event, ctx: &mut Ctx) {
+        self.seen += 1;
+        if let (Some(s), Event::Instance { id, inst }) = (self.out, e) {
+            ctx.emit(s, id, Event::Instance { id, inst });
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.seen as usize
+    }
+}
+
+fn inst_event(id: u64) -> Event {
+    Event::Instance { id, inst: Instance::dense(vec![id as f32], Label::None) }
+}
+
+/// Random linear pipelines: events are conserved at every stage under
+/// every grouping, on both engines.
+#[test]
+fn prop_event_conservation_random_pipelines() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let stages = 2 + rng.below(3);
+        let n_events = 200 + rng.below(300) as u64;
+        let groupings = [Grouping::Key, Grouping::Shuffle, Grouping::Direct];
+
+        let mut b = TopologyBuilder::new("prop");
+        let mut procs = Vec::new();
+        let mut pars = Vec::new();
+        for s in 0..stages {
+            let par = 1 + rng.below(4);
+            pars.push(par);
+            // stage s forwards on stream id s+1 (entry is stream 0)
+            let out = if s + 1 < stages {
+                Some(samoa::topology::StreamId(s + 1))
+            } else {
+                None
+            };
+            procs.push(b.add_processor(&format!("s{s}"), par, move |_| {
+                Box::new(Fwd { out, seen: 0 })
+            }));
+        }
+        let entry = b.stream("entry", None, procs[0], Grouping::Shuffle);
+        for s in 1..stages {
+            let g = groupings[rng.below(groupings.len())];
+            b.stream(&format!("st{s}"), Some(procs[s - 1]), procs[s], g);
+        }
+        let topo = b.build();
+
+        let mut counts = vec![0u64; stages];
+        let metrics = LocalEngine::new().run(&topo, entry, (0..n_events).map(inst_event), |inst| {
+            for (s, row) in inst.iter().enumerate() {
+                counts[s] = row.iter().map(|p| p.mem_bytes() as u64).sum();
+            }
+        });
+        assert_eq!(metrics.source_instances, n_events, "seed {seed}");
+        for (s, &c) in counts.iter().enumerate() {
+            assert_eq!(c, n_events, "seed {seed}: stage {s} lost/duplicated events");
+        }
+    }
+}
+
+/// The local engine is deterministic: identical runs produce identical
+/// stream metrics.
+#[test]
+fn prop_local_engine_deterministic() {
+    for seed in 0..10u64 {
+        let build = || {
+            let mut b = TopologyBuilder::new("det");
+            let a = b.add_processor("a", 3, |_| {
+                Box::new(Fwd { out: Some(samoa::topology::StreamId(1)), seen: 0 })
+            });
+            let c = b.add_processor("c", 2, |_| Box::new(Fwd { out: None, seen: 0 }));
+            let entry = b.stream("in", None, a, Grouping::Shuffle);
+            b.stream("a->c", Some(a), c, Grouping::Key);
+            (b.build(), entry)
+        };
+        let run = || {
+            let (topo, entry) = build();
+            let m = LocalEngine::new().run(
+                &topo,
+                entry,
+                (0..500).map(|i| inst_event(i * seed)),
+                |_| {},
+            );
+            (m.streams[0].events, m.streams[0].bytes, m.streams[1].events, m.streams[1].bytes)
+        };
+        assert_eq!(run(), run(), "seed {seed}");
+    }
+}
+
+/// Threaded engine: conservation holds under concurrency for random
+/// fan-out shapes.
+#[test]
+fn prop_threaded_conservation() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SINK: AtomicU64 = AtomicU64::new(0);
+
+    struct Count;
+    impl Processor for Count {
+        fn process(&mut self, _e: Event, _c: &mut Ctx) {
+            SINK.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    for seed in 0..5u64 {
+        SINK.store(0, Ordering::SeqCst);
+        let mut rng = Rng::new(seed);
+        let par = 1 + rng.below(6);
+        let n = 500 + rng.below(1000) as u64;
+        let mut b = TopologyBuilder::new("tc");
+        let p = b.add_processor("w", par, |_| Box::new(Count));
+        let entry = b.stream("in", None, p, Grouping::Shuffle);
+        let topo = b.build();
+        let m = ThreadedEngine::new(64).run(&topo, entry, (0..n).map(inst_event), |_, _, _| {});
+        assert_eq!(SINK.load(Ordering::SeqCst), n, "seed {seed}");
+        assert_eq!(m.streams[0].events, n, "seed {seed}");
+    }
+}
+
+/// Simtime: throughput is monotone non-decreasing in parallelism for an
+/// embarrassingly parallel stage (up to measurement noise).
+#[test]
+fn prop_simtime_monotone_in_parallelism() {
+    struct Burn;
+    impl Processor for Burn {
+        fn process(&mut self, _e: Event, _c: &mut Ctx) {
+            let mut x = 0u64;
+            for i in 0..30_000u64 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        }
+    }
+    let tput = |par: usize| {
+        let mut b = TopologyBuilder::new("mono");
+        let p = b.add_processor("w", par, |_| Box::new(Burn));
+        let entry = b.stream("in", None, p, Grouping::Shuffle);
+        let topo = b.build();
+        SimTimeEngine::default()
+            .run(&topo, entry, (0..1500).map(inst_event), |_| {})
+            .throughput()
+    };
+    let t1 = tput(1);
+    let t4 = tput(4);
+    let t8 = tput(8);
+    assert!(t4 > t1, "t4={t4} t1={t1}");
+    // t8 may plateau (communication) but must not collapse below t4/2
+    assert!(t8 > t4 * 0.5, "t8={t8} t4={t4}");
+}

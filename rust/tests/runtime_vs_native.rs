@@ -1,0 +1,137 @@
+//! Integration: the AOT XLA artifacts must agree with the native rust
+//! criterion implementations to float32 tolerance. This is the rust-side
+//! half of the correctness chain (python-side: pytest kernel-vs-ref).
+//!
+//! Skips (with a note) when `artifacts/` has not been built.
+
+use samoa::common::Rng;
+use samoa::core::criterion::{self, VarStats};
+use samoa::core::observers::CounterBlock;
+use samoa::runtime::{cluster, gain, registry, sdr};
+
+fn artifacts_available() -> bool {
+    registry::artifacts_dir().is_some()
+}
+
+fn random_block(rng: &mut Rng, v: u32, c: u32, n: usize) -> CounterBlock {
+    let mut b = CounterBlock::new(v, c);
+    for _ in 0..n {
+        b.add(rng.below(v as usize) as u32, rng.below(c as usize) as u32, 1.0);
+    }
+    b
+}
+
+#[test]
+fn xla_gains_match_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut rng = Rng::new(11);
+    // more blocks than one chunk (64) to exercise chunking
+    let blocks: Vec<CounterBlock> = (0..150)
+        .map(|i| random_block(&mut rng, if i % 3 == 0 { 16 } else { 5 }, 8, 300))
+        .collect();
+    let refs: Vec<&CounterBlock> = blocks.iter().collect();
+    let native = gain::gains_native(&refs);
+    let xla = gain::gains_xla(&refs).expect("xla gain path");
+    assert_eq!(native.len(), xla.len());
+    for (i, (n, x)) in native.iter().zip(xla.iter()).enumerate() {
+        assert!(
+            (n - x).abs() < 1e-4,
+            "gain mismatch at block {i}: native={n} xla={x}"
+        );
+    }
+}
+
+#[test]
+fn xla_gains_empty_and_pure_blocks() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let empty = CounterBlock::new(16, 8);
+    let mut pure = CounterBlock::new(16, 8);
+    for v in 0..16 {
+        pure.add(v, 2, 5.0);
+    }
+    let refs: Vec<&CounterBlock> = vec![&empty, &pure];
+    let xla = gain::gains_xla(&refs).expect("xla gain path");
+    assert!(xla[0].abs() < 1e-6, "empty block gain must be 0, got {}", xla[0]);
+    assert!(xla[1].abs() < 1e-5, "single-class block gain must be 0, got {}", xla[1]);
+}
+
+#[test]
+fn xla_sdr_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut rng = Rng::new(22);
+    // 70 attributes (3 chunks of 32), 16-64 bins each
+    let attrs: Vec<Vec<VarStats>> = (0..70)
+        .map(|i| {
+            let bins = if i % 2 == 0 { 16 } else { 64 };
+            (0..bins)
+                .map(|_| {
+                    let mut s = VarStats::default();
+                    for _ in 0..rng.below(20) {
+                        s.add(rng.gaussian() * 3.0 + 1.0, 1.0);
+                    }
+                    s
+                })
+                .collect()
+        })
+        .collect();
+    let native = sdr::sdr_native(&attrs);
+    let xla = sdr::sdr_xla(&attrs).expect("xla sdr path");
+    assert_eq!(native.len(), xla.len());
+    for (a, (n, x)) in native.iter().zip(xla.iter()).enumerate() {
+        assert_eq!(n.len(), x.len());
+        for (b, (nv, xv)) in n.iter().zip(x.iter()).enumerate() {
+            assert!(
+                (nv - xv).abs() < 2e-3,
+                "sdr mismatch at attr {a} bin {b}: native={nv} xla={xv}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_cluster_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut rng = Rng::new(33);
+    let (n, k, d) = (100, 60, 32);
+    let points: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+    let centers: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32).collect();
+    let mut weights = vec![0f32; k];
+    for w in weights.iter_mut().take(40) {
+        *w = 1.0;
+    }
+    let native = cluster::assign_native(&points, &centers, &weights, d);
+    let xla = cluster::assign_xla(&points, &centers, &weights, d).expect("xla cluster path");
+    for (i, (nv, xv)) in native.iter().zip(xla.iter()).enumerate() {
+        // distances must agree; indices may differ only on exact ties
+        assert!(
+            (nv.1 - xv.1).abs() < 1e-2 * (1.0 + nv.1),
+            "dist mismatch at point {i}: native={:?} xla={:?}",
+            nv,
+            xv
+        );
+        assert!(xv.0 < 40, "dead slot won at point {i}: {:?}", xv);
+    }
+}
+
+#[test]
+fn gain_wrapper_uses_some_backend_and_is_consistent() {
+    let mut rng = Rng::new(44);
+    let blocks: Vec<CounterBlock> = (0..10).map(|_| random_block(&mut rng, 16, 8, 200)).collect();
+    let refs: Vec<&CounterBlock> = blocks.iter().collect();
+    let g = gain::gains(&refs);
+    for (i, b) in blocks.iter().enumerate() {
+        assert!((g[i] - criterion::info_gain(b)).abs() < 1e-4);
+    }
+}

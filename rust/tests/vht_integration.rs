@@ -1,0 +1,138 @@
+//! End-to-end VHT: full topology (source → MA → LS → MA → evaluator) on
+//! both the local and the threaded engine, across wok / wk(z) / delay
+//! configurations. Checks the paper's qualitative claims: VHT-local
+//! matches the sequential tree, distributed variants stay close, state is
+//! dropped after splits.
+
+use std::sync::Arc;
+
+use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree, LeafPrediction};
+use samoa::classifiers::vht::{build_topology, SplitBuffering, VhtConfig};
+use samoa::core::model::Classifier;
+use samoa::engine::{LocalEngine, ThreadedEngine};
+use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use samoa::streams::{random_tree::RandomTreeGenerator, StreamSource};
+use samoa::topology::Event;
+
+fn run_vht_local(config: &VhtConfig, n: u64, seed: u64) -> (f64, samoa::engine::EngineMetrics) {
+    let mut stream = RandomTreeGenerator::new(5, 5, 2, seed);
+    let sink = EvalSink::new(stream.schema().n_classes(), 1.0, 100_000);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = build_topology(stream.schema(), config, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+    let source = (0..n).map(move |id| Event::Instance {
+        id,
+        inst: stream.next_instance().unwrap(),
+    });
+    let metrics = LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+    (sink.accuracy(), metrics)
+}
+
+#[test]
+fn vht_local_matches_sequential_tree() {
+    // VHT with zero feedback delay == sequential Hoeffding tree (both
+    // majority-class prediction) to within statistical noise
+    let config = VhtConfig {
+        parallelism: 2,
+        feedback_delay: 0,
+        buffering: SplitBuffering::Discard,
+        ..Default::default()
+    };
+    let (vht_acc, metrics) = run_vht_local(&config, 30_000, 7);
+
+    let mut stream = RandomTreeGenerator::new(5, 5, 2, 7);
+    let mut ht = HoeffdingTree::new(
+        stream.schema().clone(),
+        HTConfig { leaf_prediction: LeafPrediction::MajorityClass, ..Default::default() },
+    );
+    let mut correct = 0u64;
+    for _ in 0..30_000 {
+        let inst = stream.next_instance().unwrap();
+        if ht.predict(&inst) == inst.class() {
+            correct += 1;
+        }
+        ht.train(&inst);
+    }
+    let ht_acc = correct as f64 / 30_000.0;
+
+    assert!(
+        (vht_acc - ht_acc).abs() < 0.05,
+        "VHT local {vht_acc:.3} vs sequential {ht_acc:.3}"
+    );
+    assert!(vht_acc > 0.6, "vht_acc={vht_acc}");
+    // messages flowed on every VHT stream
+    assert!(metrics.streams[1].events > 0, "no attribute events");
+    assert!(metrics.streams[2].events > 0, "no compute events");
+    assert!(metrics.streams[3].events > 0, "no local-result events");
+}
+
+#[test]
+fn feedback_delay_degrades_accuracy_gracefully() {
+    // wok with a large feedback delay must lose some accuracy vs local
+    // but still learn (paper: within 18% of local)
+    let base = VhtConfig { parallelism: 2, ..Default::default() };
+    let delayed = VhtConfig { parallelism: 2, feedback_delay: 500, ..Default::default() };
+    let (acc_local, _) = run_vht_local(&base, 30_000, 11);
+    let (acc_delay, _) = run_vht_local(&delayed, 30_000, 11);
+    assert!(acc_delay > 0.55, "delayed VHT stopped learning: {acc_delay}");
+    assert!(
+        acc_local >= acc_delay - 0.02,
+        "delay should not help: local={acc_local} delayed={acc_delay}"
+    );
+}
+
+#[test]
+fn buffering_replays_instances() {
+    let config = VhtConfig {
+        parallelism: 2,
+        feedback_delay: 200,
+        buffering: SplitBuffering::Buffer(1000),
+        ..Default::default()
+    };
+    let (acc, _) = run_vht_local(&config, 30_000, 13);
+    assert!(acc > 0.55, "wk(z) accuracy {acc}");
+}
+
+#[test]
+fn threaded_engine_runs_vht() {
+    let config = VhtConfig { parallelism: 4, ..Default::default() };
+    let mut stream = RandomTreeGenerator::new(5, 5, 2, 17);
+    let sink = EvalSink::new(stream.schema().n_classes(), 1.0, 100_000);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = build_topology(stream.schema(), &config, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+    let source = (0..20_000u64).map(move |id| Event::Instance {
+        id,
+        inst: stream.next_instance().unwrap(),
+    });
+    let metrics = ThreadedEngine::default().run(&topo, handles.entry, source, |_, _, _| {});
+    assert_eq!(metrics.source_instances, 20_000);
+    let acc = sink.accuracy();
+    // asynchronous split decisions: accuracy lower than local but learning
+    assert!(acc > 0.55, "threaded VHT accuracy {acc}");
+}
+
+#[test]
+fn sparse_vht_learns_tweets() {
+    let config = VhtConfig {
+        parallelism: 2,
+        sparse: true,
+        grace_period: 500,
+        ..Default::default()
+    };
+    let mut stream = samoa::streams::random_tweet::RandomTweetGenerator::new(100, 3);
+    let sink = EvalSink::new(2, 1.0, 100_000);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = build_topology(stream.schema(), &config, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+    let source = (0..40_000u64).map(move |id| Event::Instance {
+        id,
+        inst: stream.next_instance().unwrap(),
+    });
+    LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+    let acc = sink.accuracy();
+    assert!(acc > 0.6, "sparse VHT accuracy {acc} (chance = 0.5)");
+}
