@@ -1,0 +1,98 @@
+//! Preprocess subsystem benches: sketch update throughput (CountMin /
+//! Misra-Gries inserts per second) and end-to-end `Pipeline` overhead
+//! against a raw stream pass-through.
+
+mod bench_util;
+use bench_util::bench;
+
+use samoa::common::zipf::Zipf;
+use samoa::common::Rng;
+use samoa::preprocess::{
+    CountMinSketch, Discretizer, FeatureHasher, MisraGries, Pipeline, StandardScaler,
+    TransformedStream,
+};
+use samoa::streams::random_tweet::RandomTweetGenerator;
+use samoa::streams::waveform::WaveformGenerator;
+use samoa::streams::StreamSource;
+
+fn sketch_benches() {
+    const N: usize = 2_000_000;
+    let mut rng = Rng::new(1);
+    let zipf = Zipf::new(10_000, 1.2);
+    let items: Vec<u64> = (0..N).map(|_| zipf.sample(&mut rng) as u64).collect();
+
+    for (w, d) in [(1024usize, 4usize), (4096, 6)] {
+        let mut cm = CountMinSketch::new(w, d);
+        bench(&format!("countmin {w}x{d} add"), 5, || {
+            for &x in &items {
+                cm.add(x, 1);
+            }
+            items.len() as u64
+        });
+    }
+
+    for k in [64usize, 512] {
+        let mut mg = MisraGries::new(k);
+        bench(&format!("misra-gries k={k} add"), 5, || {
+            for &x in &items {
+                mg.add(x);
+            }
+            items.len() as u64
+        });
+    }
+}
+
+/// Drain `n` instances from a source, returning n (for items/s).
+fn drain(src: &mut dyn StreamSource, n: u64) -> u64 {
+    let mut count = 0;
+    while count < n {
+        let Some(i) = src.next_instance() else { break };
+        std::hint::black_box(i.n_attributes());
+        count += 1;
+    }
+    count
+}
+
+fn pipeline_benches() {
+    const N: u64 = 50_000;
+
+    bench("waveform raw pass-through", 5, || {
+        let mut s = WaveformGenerator::classification(7);
+        drain(&mut s, N)
+    });
+
+    bench("waveform | scale", 5, || {
+        let mut s = TransformedStream::new(
+            WaveformGenerator::classification(7),
+            Pipeline::new().then(StandardScaler::new()),
+        );
+        drain(&mut s, N)
+    });
+
+    bench("waveform | scale,discretize:8", 5, || {
+        let mut s = TransformedStream::new(
+            WaveformGenerator::classification(7),
+            Pipeline::new().then(StandardScaler::new()).then(Discretizer::new(8)),
+        );
+        drain(&mut s, N)
+    });
+
+    bench("tweets(d=1000) raw pass-through", 5, || {
+        let mut s = RandomTweetGenerator::new(1000, 7);
+        drain(&mut s, N)
+    });
+
+    bench("tweets(d=1000) | hash:64,scale", 5, || {
+        let mut s = TransformedStream::new(
+            RandomTweetGenerator::new(1000, 7),
+            Pipeline::new().then(FeatureHasher::new(64)).then(StandardScaler::new()),
+        );
+        drain(&mut s, N)
+    });
+}
+
+fn main() {
+    println!("== preprocess benches ==");
+    sketch_benches();
+    pipeline_benches();
+}

@@ -91,6 +91,19 @@ impl Schema {
         }
     }
 
+    /// Schema rewriting (preprocessing pipelines): same target and bin
+    /// configuration, new name and attribute layout. Transforms that
+    /// re-project the attribute space ([`crate::preprocess`]) derive their
+    /// output schema with this.
+    pub fn with_attributes(&self, name: &str, attributes: Vec<AttributeKind>) -> Schema {
+        Schema {
+            attributes,
+            target: self.target.clone(),
+            numeric_bins: self.numeric_bins,
+            name: name.to_string(),
+        }
+    }
+
     /// Range of the label values (for normalized regression error).
     pub fn label_range(&self) -> f64 {
         match self.target {

@@ -16,7 +16,7 @@ use std::time::Instant;
 use crate::core::instance::Label;
 use crate::core::model::{Classifier, Regressor};
 use crate::streams::StreamSource;
-use crate::topology::{Ctx, Event, Output, Processor};
+use crate::topology::{Ctx, Event, Output, Processor, StreamId};
 
 use super::measures::{ClassificationMeasure, RegressionMeasure};
 
@@ -146,6 +146,46 @@ impl EvalSink {
 
     pub fn rmse(&self) -> f64 {
         self.regression.lock().unwrap().rmse()
+    }
+}
+
+/// Test-then-train topology node wrapping any sequential [`Classifier`]:
+/// predicts each inbound instance, emits the `Prediction` (so an
+/// [`EvaluatorProcessor`] downstream scores it), then trains. This is how
+/// sequential learners ride behind topology-level preprocessing
+/// ([`crate::preprocess::PipelineProcessor`]) without a bespoke
+/// distributed implementation.
+pub struct ClassifierProcessor {
+    model: Box<dyn Classifier>,
+    out: StreamId,
+}
+
+impl ClassifierProcessor {
+    pub fn new(model: Box<dyn Classifier>, out: StreamId) -> Self {
+        ClassifierProcessor { model, out }
+    }
+}
+
+impl Processor for ClassifierProcessor {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        if let Event::Instance { id, inst } = event {
+            let output = match self.model.predict(&inst) {
+                Some(c) => Output::Class(c),
+                None => Output::None,
+            };
+            ctx.emit(self.out, id, Event::Prediction { id, truth: inst.label, output });
+            if inst.class().is_some() {
+                self.model.train(&inst);
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.model.model_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "classifier"
     }
 }
 

@@ -1,0 +1,134 @@
+//! Preprocessing-pipeline experiment: prequential accuracy & throughput of
+//! a Hoeffding tree over a preprocessed stream, comparing
+//!
+//! * the raw stream (no preprocessing baseline),
+//! * the standalone [`TransformedStream`] path, and
+//! * the topology path ([`PipelineProcessor`]) under the local and
+//!   threaded engines —
+//!
+//! demonstrating that the two integration styles agree (identical
+//! accuracy at parallelism 1) and what the pipeline costs.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+use crate::common::cli::Args;
+use crate::engine::{LocalEngine, ThreadedEngine};
+use crate::evaluation::prequential::{
+    prequential_run, EvalSink, EvaluatorProcessor, PrequentialConfig,
+};
+use crate::preprocess::processor::build_prequential_topology;
+use crate::preprocess::{parse_pipeline, TransformedStream};
+use crate::streams::StreamSource;
+use crate::topology::Event;
+
+use super::print_table;
+
+/// Stream registry for this experiment (generators + dataset twins).
+pub fn preprocess_stream(name: &str, seed: u64, dim: u32) -> Box<dyn StreamSource> {
+    use crate::streams::*;
+    match name {
+        "waveform-cls" => Box::new(waveform::WaveformGenerator::classification(seed)),
+        "random-tweet" => Box::new(random_tweet::RandomTweetGenerator::new(dim, seed)),
+        "random-tree" => Box::new(random_tree::RandomTreeGenerator::new(10, 10, 2, seed)),
+        other => super::dataset_stream(other, seed),
+    }
+}
+
+/// `samoa exp preprocess [--stream waveform-cls --pipeline scale,discretize:8
+/// --instances 20000 --p 2 --seed 42]`
+pub fn preprocess(args: &Args) -> anyhow::Result<()> {
+    let stream_name = args.get_or("stream", "waveform-cls");
+    let spec = args.get_or("pipeline", "scale,discretize:8");
+    let n = args.u64("instances", 20_000);
+    // p = 1 keeps stateful operators (running moments) on a single shard,
+    // so all four rows are exactly comparable; raise --p to see sharded
+    // pipeline statistics (accuracy drifts slightly, throughput scales).
+    let p = args.usize("p", 1);
+    let seed = args.u64("seed", 42);
+    let dim = args.usize("dim", 1000) as u32;
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    // -- baseline: raw stream, sequential HT
+    {
+        let mut stream = preprocess_stream(stream_name, seed, dim);
+        let schema = stream.schema().clone();
+        let mut model = HoeffdingTree::new(schema, HTConfig::default());
+        let r = prequential_run(
+            &mut model,
+            stream.as_mut(),
+            &PrequentialConfig { max_instances: n, report_every: n },
+        );
+        rows.push(vec![
+            "raw (no preprocessing)".into(),
+            format!("{:.4}", r.final_accuracy()),
+            format!("{:.0}", r.throughput()),
+            "-".into(),
+        ]);
+    }
+
+    // -- standalone TransformedStream, sequential HT
+    {
+        let stream = preprocess_stream(stream_name, seed, dim);
+        let mut ts = TransformedStream::new(stream, parse_pipeline(spec)?);
+        let schema = ts.schema().clone();
+        let mut model = HoeffdingTree::new(schema, HTConfig::default());
+        let r = prequential_run(
+            &mut model,
+            &mut ts,
+            &PrequentialConfig { max_instances: n, report_every: n },
+        );
+        rows.push(vec![
+            "TransformedStream + HT".into(),
+            format!("{:.4}", r.final_accuracy()),
+            format!("{:.0}", r.throughput()),
+            format!("{}B", crate::preprocess::Transform::mem_bytes(ts.pipeline())),
+        ]);
+    }
+
+    // -- topology path, local + threaded engines
+    for engine in ["local", "threaded"] {
+        let mut stream = preprocess_stream(stream_name, seed, dim);
+        let schema = stream.schema().clone();
+        let sink = EvalSink::new(schema.n_classes(), 1.0, n);
+        let sink2 = Arc::clone(&sink);
+        let spec_owned = spec.to_string();
+        let (topo, handles) = build_prequential_topology(
+            &schema,
+            if engine == "local" { p } else { 1 },
+            move |_| parse_pipeline(&spec_owned).expect("validated above"),
+            |s| Box::new(HoeffdingTree::new(s.clone(), HTConfig::default())),
+            move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+        );
+        let source = (0..n)
+            .map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+        let started = Instant::now();
+        let events = if engine == "local" {
+            LocalEngine::new().run(&topo, handles.entry, source, |_| {}).total_events()
+        } else {
+            ThreadedEngine::default().run(&topo, handles.entry, source, |_, _, _| {}).total_events()
+        };
+        let wall = started.elapsed().as_secs_f64();
+        rows.push(vec![
+            format!("PipelineProcessor ({engine})"),
+            format!("{:.4}", sink.accuracy()),
+            format!("{:.0}", n as f64 / wall.max(1e-9)),
+            format!("{events} events"),
+        ]);
+    }
+
+    print_table(
+        &format!("preprocess: {stream_name} | pipeline = {spec} | n = {n}"),
+        &["configuration", "accuracy", "inst/s", "pipeline state"],
+        &rows,
+    );
+    println!(
+        "note: at p=1 the TransformedStream and PipelineProcessor paths see \
+         identical instance order and statistics, so their accuracies match \
+         exactly (the preprocess_integration test asserts this); threaded \
+         always runs p=1 to keep arrival order deterministic."
+    );
+    Ok(())
+}

@@ -9,7 +9,9 @@
 //!   library: Vertical Hoeffding Tree ([`classifiers::vht`]), distributed
 //!   AMRules ([`regressors`]), CluStream ([`clustering`]), ensembles and
 //!   drift detectors ([`ensemble`], [`drift`]), plus stream generators
-//!   ([`streams`]) and prequential evaluation ([`evaluation`]).
+//!   ([`streams`]), a streaming preprocessing & feature-pipeline layer
+//!   with sketch-backed operators ([`preprocess`]) and prequential
+//!   evaluation ([`evaluation`]).
 //! * **L2/L1 (python, build-time only)** — the numeric hot-spots
 //!   (split-criterion information gain, AMRules SDR, CluStream assignment)
 //!   as Pallas kernels under JAX, AOT-lowered to HLO text and executed from
@@ -30,6 +32,7 @@ pub mod clustering;
 pub mod drift;
 pub mod ensemble;
 pub mod streams;
+pub mod preprocess;
 pub mod evaluation;
 pub mod runtime;
 pub mod experiments;

@@ -34,6 +34,9 @@ fn main() {
             println!(
                 "streams: random-tree | random-tweet | waveform | elec | phy | covtype | electricity | airlines | <path>.arff"
             );
+            println!(
+                "pipeline ops (--pipeline a,b,...): hash:D | scale | minmax | discretize:K | topk:K"
+            );
             Ok(())
         }
         "backend" => {
@@ -58,7 +61,7 @@ fn main() {
 fn print_help() {
     println!(
         "samoa-rs — Apache SAMOA reproduction (rust + JAX/Pallas)\n\n\
-         USAGE:\n  samoa run --learner <l> --stream <s> [--instances N] [--p K]\n  \
+         USAGE:\n  samoa run --learner <l> --stream <s> [--instances N] [--p K] [--pipeline hash:64,scale,...]\n  \
          samoa exp <fig3..fig16|table3..table7|all> [--instances N --seeds K --p 2,4]\n  \
          samoa list\n  samoa backend\n\nRun `samoa list` for learners/streams."
     );
@@ -87,6 +90,13 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let n = args.u64("instances", 100_000);
     let p = args.usize("p", 4);
     let mut stream = make_stream(stream_name, seed, args.usize("dim", 1000) as u32);
+    // --pipeline hash:64,scale,discretize:8 — route the source through a
+    // preprocessing pipeline; every learner below sees the rewritten schema
+    if let Some(spec) = args.get("pipeline") {
+        let pipeline = samoa::preprocess::parse_pipeline(spec)?;
+        println!("pipeline: {spec} -> stages {:?}", pipeline.stage_names());
+        stream = Box::new(samoa::preprocess::TransformedStream::new(stream, pipeline));
+    }
     let config = PrequentialConfig { max_instances: n, report_every: args.u64("report", n / 10) };
     let schema = stream.schema().clone();
 
@@ -136,7 +146,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     }
 
     use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
-    let sparse = matches!(stream_name, "random-tweet");
+    // a hashing/filtering pipeline changes instance density, so only the
+    // raw tweet stream gets the sparse observers
+    let sparse = matches!(stream_name, "random-tweet") && args.get("pipeline").is_none();
     let ht_cfg = HTConfig { sparse, ..Default::default() };
     let mut model: Box<dyn Classifier> = match learner {
         "moa" | "ht" => Box::new(HoeffdingTree::new(schema.clone(), ht_cfg)),

@@ -1,0 +1,280 @@
+//! Streaming equal-frequency discretization, PiD-style (Gama & Pinto's
+//! Partition Incremental Discretization): a fine-grained layer-1 summary
+//! per attribute feeds quantile queries; the layer-2 output is the
+//! equal-frequency bin index, so downstream learners see a categorical
+//! attribute with `k` values.
+//!
+//! Layer 1 is an exact buffer for the first `warmup` values (the range is
+//! unknown at stream start), then an equal-width histogram over the warmup
+//! range with out-of-range values clamped into the edge cells. Memory per
+//! attribute is O(warmup + fine_bins), independent of stream length.
+//!
+//! Sparse handling: like the scalers, absent attributes are "not
+//! observed" — only stored values are summarized and rewritten, and an
+//! absent attribute still reads as 0 downstream, i.e. it aliases with
+//! the lowest-quantile bin. The same data piped dense vs sparse can
+//! therefore discretize differently around value 0; discretization is
+//! meant for dense numeric streams (waveform, covtype), while sparse
+//! bag-of-words streams should be hashed dense first.
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::core::instance::Values;
+use crate::core::{AttributeKind, Instance, Schema};
+
+use super::Transform;
+
+/// Per-attribute layer-1 quantile summary.
+struct AttrSummary {
+    /// Exact values until the histogram is frozen.
+    buffer: Vec<f32>,
+    /// Equal-width histogram over [lo, hi] after warmup (empty before).
+    counts: Vec<f64>,
+    lo: f64,
+    hi: f64,
+    n: f64,
+}
+
+impl AttrSummary {
+    fn new() -> Self {
+        AttrSummary { buffer: Vec::new(), counts: Vec::new(), lo: 0.0, hi: 0.0, n: 0.0 }
+    }
+
+    fn frozen(&self) -> bool {
+        !self.counts.is_empty()
+    }
+
+    fn freeze(&mut self, fine: usize) {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &self.buffer {
+            lo = lo.min(v as f64);
+            hi = hi.max(v as f64);
+        }
+        // Widen 10% each side so near-range values don't all clamp.
+        let pad = (hi - lo).max(1e-9) * 0.1;
+        self.lo = lo - pad;
+        self.hi = hi + pad;
+        self.counts = vec![0.0; fine];
+        let buffer = std::mem::take(&mut self.buffer);
+        for &v in &buffer {
+            let c = self.cell(v as f64);
+            self.counts[c] += 1.0;
+        }
+    }
+
+    #[inline]
+    fn cell(&self, x: f64) -> usize {
+        let fine = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        ((t * fine as f64) as isize).clamp(0, fine as isize - 1) as usize
+    }
+
+    fn add(&mut self, x: f64, warmup: usize, fine: usize) {
+        self.n += 1.0;
+        if self.frozen() {
+            let c = self.cell(x);
+            self.counts[c] += 1.0;
+        } else {
+            self.buffer.push(x as f32);
+            if self.buffer.len() >= warmup {
+                self.freeze(fine);
+            }
+        }
+    }
+
+    /// Approximate rank of `x` in [0, 1].
+    fn rank(&self, x: f64) -> f64 {
+        if self.n < 1.0 {
+            return 0.0;
+        }
+        if !self.frozen() {
+            let below = self.buffer.iter().filter(|&&v| (v as f64) < x).count();
+            return below as f64 / self.buffer.len() as f64;
+        }
+        let c = self.cell(x);
+        let below: f64 = self.counts[..c].iter().sum();
+        // linear interpolation inside the cell
+        let fine = self.counts.len();
+        let cell_lo = self.lo + (self.hi - self.lo) * c as f64 / fine as f64;
+        let cell_w = (self.hi - self.lo) / fine as f64;
+        let frac = ((x - cell_lo) / cell_w).clamp(0.0, 1.0);
+        (below + frac * self.counts[c]) / self.n
+    }
+}
+
+/// Equal-frequency discretizer: numeric attributes become
+/// `Categorical { n_values: k }`, the emitted value being the bin index.
+pub struct Discretizer {
+    k: u32,
+    warmup: usize,
+    fine: usize,
+    summaries: Vec<Option<AttrSummary>>,
+}
+
+impl Discretizer {
+    /// `k` output bins with default layer-1 resolution (256-value warmup,
+    /// 128 fine cells).
+    pub fn new(k: u32) -> Self {
+        Self::with_resolution(k, 256, 128)
+    }
+
+    pub fn with_resolution(k: u32, warmup: usize, fine: usize) -> Self {
+        assert!(k >= 2, "need at least 2 bins");
+        assert!(warmup >= 2 && fine >= k as usize);
+        Discretizer { k, warmup, fine, summaries: Vec::new() }
+    }
+
+    /// Bin index for attribute `j` and raw value `x` under current stats.
+    #[inline]
+    fn bin(&self, j: usize, x: f64) -> u32 {
+        match &self.summaries[j] {
+            Some(s) => ((s.rank(x) * self.k as f64) as u32).min(self.k - 1),
+            None => 0,
+        }
+    }
+}
+
+impl Transform for Discretizer {
+    fn bind(&mut self, input: &Schema) -> Schema {
+        self.summaries = input
+            .attributes
+            .iter()
+            .map(|a| matches!(a, AttributeKind::Numeric).then(AttrSummary::new))
+            .collect();
+        input.with_attributes(
+            &format!("{}|discretize{}", input.name, self.k),
+            input
+                .attributes
+                .iter()
+                .map(|a| match a {
+                    AttributeKind::Numeric => AttributeKind::Categorical { n_values: self.k },
+                    c => c.clone(),
+                })
+                .collect(),
+        )
+    }
+
+    fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
+        let (warmup, fine) = (self.warmup, self.fine);
+        match &mut inst.values {
+            Values::Dense(v) => {
+                for (j, val) in v.iter_mut().enumerate() {
+                    let x = *val as f64;
+                    if let Some(s) = &mut self.summaries[j] {
+                        s.add(x, warmup, fine);
+                    } else {
+                        continue;
+                    }
+                    *val = self.bin(j, x) as f32;
+                }
+            }
+            Values::Sparse { indices, values, .. } => {
+                for (&j, val) in indices.iter().zip(values.iter_mut()) {
+                    let j = j as usize;
+                    let x = *val as f64;
+                    if let Some(s) = &mut self.summaries[j] {
+                        s.add(x, warmup, fine);
+                    } else {
+                        continue;
+                    }
+                    *val = self.bin(j, x) as f32;
+                }
+            }
+        }
+        Some(inst)
+    }
+
+    fn name(&self) -> &'static str {
+        "discretizer"
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self
+                .summaries
+                .iter()
+                .flatten()
+                .map(|s| {
+                    std::mem::size_of::<AttrSummary>()
+                        + vec_flat_bytes(&s.buffer)
+                        + vec_flat_bytes(&s.counts)
+                })
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::core::instance::Label;
+
+    fn occupancy(dist: &str, k: u32) -> Vec<u64> {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut d = Discretizer::new(k);
+        d.bind(&schema);
+        let mut rng = Rng::new(11);
+        let mut occ = vec![0u64; k as usize];
+        for i in 0..12_000 {
+            let x = match dist {
+                "uniform" => rng.f64() * 40.0 - 7.0,
+                _ => rng.gaussian() * 3.0 + 1.0,
+            };
+            let out = d.transform(Instance::dense(vec![x as f32], Label::None)).unwrap();
+            let b = out.value(0) as usize;
+            assert!(b < k as usize);
+            if i >= 2000 {
+                occ[b] += 1; // skip the adaptation prefix
+            }
+        }
+        occ
+    }
+
+    #[test]
+    fn equal_frequency_on_uniform() {
+        let occ = occupancy("uniform", 8);
+        let total: u64 = occ.iter().sum();
+        let expect = total as f64 / 8.0;
+        for (b, &c) in occ.iter().enumerate() {
+            assert!(
+                (c as f64) > expect * 0.7 && (c as f64) < expect * 1.3,
+                "bin {b}: {c} vs expected {expect} ({occ:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn equal_frequency_on_gaussian() {
+        // equal-frequency (not equal-width): a skew-free gaussian must
+        // still fill every bin roughly evenly
+        let occ = occupancy("gaussian", 6);
+        let total: u64 = occ.iter().sum();
+        let expect = total as f64 / 6.0;
+        for (b, &c) in occ.iter().enumerate() {
+            assert!(
+                (c as f64) > expect * 0.6 && (c as f64) < expect * 1.4,
+                "bin {b}: {c} vs expected {expect} ({occ:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn schema_becomes_categorical() {
+        let schema = Schema::classification("t", Schema::all_numeric(3), 2);
+        let mut d = Discretizer::new(4);
+        let out = d.bind(&schema);
+        for a in &out.attributes {
+            assert_eq!(*a, AttributeKind::Categorical { n_values: 4 });
+        }
+        assert_eq!(out.n_classes(), 2);
+    }
+
+    #[test]
+    fn categorical_input_passes_through() {
+        let schema = Schema::classification("t", Schema::all_categorical(1, 3), 2);
+        let mut d = Discretizer::new(4);
+        let out = d.bind(&schema);
+        assert_eq!(out.attributes, schema.attributes);
+        let i = d.transform(Instance::dense(vec![2.0], Label::None)).unwrap();
+        assert_eq!(i.value(0), 2.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Signed feature hashing (Weinberger et al.): project any attribute space
+//! — in particular the sparse bag-of-words of the tweet generator — onto a
+//! fixed `dim`-dimensional dense space. Stateless, so it parallelizes
+//! perfectly; collisions are unbiased thanks to the sign hash. Reuses the
+//! crate's [`crate::common::fxhash`] hasher.
+
+use std::hash::Hasher;
+
+use crate::common::fxhash::FxHasher;
+use crate::core::instance::{Label, Values};
+use crate::core::{AttributeKind, Instance, Schema};
+
+use super::Transform;
+
+/// Hash attribute index `j` (with `seed`) to 64 bits: low bits pick the
+/// bucket, bit 63 the sign. The FxHash word mix alone leaves its low bits
+/// depending only on `(j ^ seed) mod 2^b`, which would make attributes at
+/// stride `dim` collide for every seed — finalize with the SplitMix
+/// avalanche so bucket bits see the whole word.
+#[inline]
+fn hash_attr(j: u64, seed: u64) -> u64 {
+    let mut h = FxHasher::default();
+    h.write_u64(j ^ seed);
+    crate::topology::stream::hash64(h.finish())
+}
+
+/// Sparse→dense signed feature hasher.
+pub struct FeatureHasher {
+    dim: u32,
+    seed: u64,
+    /// Fold collision sign (+/-) instead of plain accumulation.
+    signed: bool,
+}
+
+impl FeatureHasher {
+    pub fn new(dim: u32) -> Self {
+        Self::with_seed(dim, 0x5EED_F00D)
+    }
+
+    pub fn with_seed(dim: u32, seed: u64) -> Self {
+        assert!(dim >= 1, "hash dimension must be >= 1");
+        FeatureHasher { dim, seed, signed: true }
+    }
+
+    /// Disable the sign hash (plain count-style accumulation).
+    pub fn unsigned(mut self) -> Self {
+        self.signed = false;
+        self
+    }
+
+    /// (bucket, sign) for input attribute `j`.
+    #[inline]
+    fn slot(&self, j: usize) -> (usize, f32) {
+        let h = hash_attr(j as u64, self.seed);
+        let bucket = (h % self.dim as u64) as usize;
+        let sign = if self.signed && (h >> 63) == 1 { -1.0 } else { 1.0 };
+        (bucket, sign)
+    }
+}
+
+impl Transform for FeatureHasher {
+    fn bind(&mut self, input: &Schema) -> Schema {
+        input.with_attributes(
+            &format!("{}|hash{}", input.name, self.dim),
+            vec![AttributeKind::Numeric; self.dim as usize],
+        )
+    }
+
+    fn transform(&mut self, inst: Instance) -> Option<Instance> {
+        let mut out = vec![0.0f32; self.dim as usize];
+        match &inst.values {
+            Values::Dense(v) => {
+                for (j, &x) in v.iter().enumerate() {
+                    if x != 0.0 {
+                        let (b, s) = self.slot(j);
+                        out[b] += s * x;
+                    }
+                }
+            }
+            Values::Sparse { indices, values, .. } => {
+                for (&j, &x) in indices.iter().zip(values.iter()) {
+                    if x != 0.0 {
+                        let (b, s) = self.slot(j as usize);
+                        out[b] += s * x;
+                    }
+                }
+            }
+        }
+        let mut hashed = Instance::dense(out, Label::None);
+        hashed.label = inst.label;
+        hashed.weight = inst.weight;
+        Some(hashed)
+    }
+
+    fn name(&self) -> &'static str {
+        "feature-hasher"
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_label_preserving() {
+        let schema = Schema::classification("t", Schema::all_numeric(100), 2);
+        let mut h = FeatureHasher::new(16);
+        h.bind(&schema);
+        let i = Instance::sparse(vec![3, 40, 77], vec![1.0, 2.0, 3.0], 100, Label::Class(1));
+        let a = h.transform(i.clone()).unwrap();
+        let b = h.transform(i).unwrap();
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.label, Label::Class(1));
+        assert_eq!(a.n_attributes(), 16);
+    }
+
+    #[test]
+    fn total_mass_preserved_up_to_sign() {
+        let schema = Schema::classification("t", Schema::all_numeric(50), 2);
+        let mut h = FeatureHasher::new(64).unsigned();
+        h.bind(&schema);
+        let i = Instance::dense(vec![1.0; 50], Label::None);
+        let out = h.transform(i).unwrap();
+        let total: f32 = (0..64).map(|j| out.value(j)).sum();
+        assert_eq!(total, 50.0); // unsigned hashing only moves mass
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let schema = Schema::classification("t", Schema::all_numeric(100), 2);
+        let mut h1 = FeatureHasher::with_seed(32, 1);
+        let mut h2 = FeatureHasher::with_seed(32, 2);
+        h1.bind(&schema);
+        h2.bind(&schema);
+        let i = Instance::sparse(vec![5, 6, 7], vec![1.0, 1.0, 1.0], 100, Label::None);
+        assert_ne!(h1.transform(i.clone()).unwrap().values, h2.transform(i).unwrap().values);
+    }
+
+    #[test]
+    fn schema_rewritten_to_dim() {
+        let schema = Schema::classification("tweets", Schema::all_numeric(10_000), 2);
+        let mut h = FeatureHasher::new(256);
+        let out = h.bind(&schema);
+        assert_eq!(out.n_attributes(), 256);
+        assert_eq!(out.n_classes(), 2);
+    }
+}

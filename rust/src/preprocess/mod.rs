@@ -1,0 +1,205 @@
+//! Streaming preprocessing & feature pipelines — the missing layer DPASF
+//! (García-Gil et al. 2018) identifies in distributed stream-ML stacks.
+//!
+//! A [`Transform`] is a schema-in → schema-out operator over instances;
+//! [`Pipeline`] chains transforms and rewrites the schema end-to-end. Every
+//! pipeline is usable two ways:
+//!
+//! * **standalone** — [`TransformedStream`] wraps any
+//!   [`crate::streams::StreamSource`], so the sequential prequential
+//!   drivers (and `samoa run --pipeline ...`) see a preprocessed stream;
+//! * **as a topology node** — [`processor::PipelineProcessor`] runs the
+//!   same pipeline as a parallelizable [`crate::topology::Processor`]
+//!   under the local, threaded and simtime engines, composing with VHT,
+//!   the AMRules ensembles and CluStream.
+//!
+//! Operators (all bounded-memory, one pass, following the sketch/summary
+//! structures surveyed by Benczúr et al. 2018):
+//!
+//! | operator | state | effect |
+//! |---|---|---|
+//! | [`scalers::StandardScaler`] | running moments (Welford) | z-score numeric attributes |
+//! | [`scalers::MinMaxScaler`] | running min/max | map numeric attributes to `[0, 1]` |
+//! | [`discretize::Discretizer`] | PiD-style layer-1 histogram | equal-frequency bins → categorical |
+//! | [`hasher::FeatureHasher`] | none | signed feature hashing, sparse→dense projection |
+//! | [`topk::TopKFilter`] | Misra-Gries + CountMin | keep only heavy-hitter attributes |
+//! | [`sketch`] | CountMin / Misra-Gries | the summaries backing the above |
+
+pub mod sketch;
+pub mod scalers;
+pub mod discretize;
+pub mod hasher;
+pub mod topk;
+pub mod pipeline;
+pub mod processor;
+
+pub use discretize::Discretizer;
+pub use hasher::FeatureHasher;
+pub use pipeline::Pipeline;
+pub use processor::PipelineProcessor;
+pub use scalers::{MinMaxScaler, StandardScaler};
+pub use sketch::{CountMinSketch, MisraGries};
+pub use topk::TopKFilter;
+
+use crate::core::{Instance, Schema};
+use crate::streams::StreamSource;
+
+/// A streaming instance transform: bound to an input schema once, then
+/// applied to every instance in arrival order. Stateful operators learn
+/// *online* (update-then-transform), so no separate fit phase exists —
+/// the first instances are transformed with whatever statistics have
+/// accumulated so far, exactly like the models consuming them.
+pub trait Transform: Send {
+    /// Bind to `input`, allocate per-attribute state, and return the
+    /// schema of the transformed stream. Called exactly once, before the
+    /// first [`Transform::transform`].
+    fn bind(&mut self, input: &Schema) -> Schema;
+
+    /// Transform one instance. `None` drops the instance (filters).
+    fn transform(&mut self, inst: Instance) -> Option<Instance>;
+
+    fn name(&self) -> &'static str {
+        "transform"
+    }
+
+    /// Estimated bytes of operator state (sketches, moments, cut points).
+    fn mem_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Standalone adapter: any stream source, preprocessed. Filters (transforms
+/// returning `None`) are skipped transparently, so downstream consumers
+/// only ever see surviving instances.
+pub struct TransformedStream<S: StreamSource> {
+    source: S,
+    pipeline: Pipeline,
+    schema: Schema,
+}
+
+impl<S: StreamSource> TransformedStream<S> {
+    /// Wrap `source`, binding `pipeline` to its schema.
+    pub fn new(source: S, mut pipeline: Pipeline) -> Self {
+        let schema = pipeline.bind(source.schema());
+        TransformedStream { source, pipeline, schema }
+    }
+
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.pipeline
+    }
+
+    pub fn into_inner(self) -> S {
+        self.source
+    }
+}
+
+impl<S: StreamSource> StreamSource for TransformedStream<S> {
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    fn next_instance(&mut self) -> Option<Instance> {
+        loop {
+            let inst = self.source.next_instance()?;
+            if let Some(out) = self.pipeline.transform(inst) {
+                return Some(out);
+            }
+        }
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        // Filters may drop instances, so the inner hint is an upper bound;
+        // still useful for harness sizing.
+        self.source.len_hint()
+    }
+}
+
+/// Parse a comma-separated pipeline spec into a [`Pipeline`]:
+/// `hash:64,scale,minmax,discretize:8,topk:32`. Numeric suffixes are
+/// optional and fall back to per-operator defaults.
+pub fn parse_pipeline(spec: &str) -> anyhow::Result<Pipeline> {
+    let mut pipeline = Pipeline::new();
+    for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let (op, arg) = match tok.split_once(':') {
+            Some((op, arg)) => (op, Some(arg)),
+            None => (tok, None),
+        };
+        let num = |default: usize| -> anyhow::Result<usize> {
+            match arg {
+                Some(a) => a
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad argument '{a}' in pipeline token '{tok}'")),
+                None => Ok(default),
+            }
+        };
+        // range checks here so a bad CLI spec reports a clean error
+        // instead of tripping the constructors' asserts
+        pipeline = match op {
+            "scale" | "standard" => pipeline.then(StandardScaler::new()),
+            "minmax" => pipeline.then(MinMaxScaler::new()),
+            "discretize" | "bins" => {
+                let k = num(8)?;
+                if k < 2 {
+                    anyhow::bail!("discretize needs at least 2 bins (got {k})");
+                }
+                pipeline.then(Discretizer::new(k as u32))
+            }
+            "hash" => {
+                let d = num(64)?;
+                if d < 1 {
+                    anyhow::bail!("hash needs a dimension >= 1");
+                }
+                pipeline.then(FeatureHasher::new(d as u32))
+            }
+            "topk" => {
+                let k = num(32)?;
+                if k < 1 {
+                    anyhow::bail!("topk needs k >= 1");
+                }
+                pipeline.then(TopKFilter::new(k))
+            }
+            other => anyhow::bail!(
+                "unknown pipeline operator '{other}' (known: hash:D scale minmax discretize:K topk:K)"
+            ),
+        };
+    }
+    Ok(pipeline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::instance::Label;
+    use crate::streams::waveform::WaveformGenerator;
+
+    #[test]
+    fn parse_builds_all_operators() {
+        let p = parse_pipeline("hash:16,scale,minmax,discretize:4,topk:8").unwrap();
+        assert_eq!(p.len(), 5);
+        assert!(parse_pipeline("bogus").is_err());
+        assert!(parse_pipeline("hash:x").is_err());
+    }
+
+    #[test]
+    fn transformed_stream_rewrites_schema_and_flows() {
+        let src = WaveformGenerator::classification(7);
+        let mut ts = TransformedStream::new(src, parse_pipeline("hash:16,scale").unwrap());
+        assert_eq!(ts.schema().n_attributes(), 16);
+        assert_eq!(ts.schema().n_classes(), 3);
+        for _ in 0..50 {
+            let i = ts.next_instance().unwrap();
+            assert_eq!(i.n_attributes(), 16);
+            assert!(matches!(i.label, Label::Class(_)));
+        }
+    }
+
+    #[test]
+    fn empty_pipeline_is_identity() {
+        let src = WaveformGenerator::new(3);
+        let mut raw = WaveformGenerator::new(3);
+        let mut ts = TransformedStream::new(src, Pipeline::new());
+        for _ in 0..20 {
+            assert_eq!(ts.next_instance().unwrap().values, raw.next_instance().unwrap().values);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! [`Pipeline`] — the combinator chaining transforms into one operator,
+//! rewriting the schema end-to-end at bind time. A pipeline is itself a
+//! [`Transform`], so pipelines nest.
+
+use crate::core::{Instance, Schema};
+
+use super::Transform;
+
+/// An ordered chain of transforms. Build with [`Pipeline::then`], bind
+/// once to the source schema, then feed instances in arrival order.
+pub struct Pipeline {
+    transforms: Vec<Box<dyn Transform>>,
+    /// Set by `bind`: the schema after every stage.
+    output: Option<Schema>,
+}
+
+impl Pipeline {
+    pub fn new() -> Self {
+        Pipeline { transforms: Vec::new(), output: None }
+    }
+
+    /// Append a transform (builder style).
+    pub fn then(mut self, t: impl Transform + 'static) -> Self {
+        assert!(self.output.is_none(), "cannot extend a pipeline after bind");
+        self.transforms.push(Box::new(t));
+        self
+    }
+
+    /// Append a boxed transform (for dynamically assembled pipelines).
+    pub fn then_boxed(mut self, t: Box<dyn Transform>) -> Self {
+        assert!(self.output.is_none(), "cannot extend a pipeline after bind");
+        self.transforms.push(t);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.transforms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transforms.is_empty()
+    }
+
+    /// Output schema; panics if the pipeline is not bound yet.
+    pub fn output_schema(&self) -> &Schema {
+        self.output.as_ref().expect("pipeline not bound")
+    }
+
+    /// Stage names, in order (diagnostics / `samoa run` banner).
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.transforms.iter().map(|t| t.name()).collect()
+    }
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transform for Pipeline {
+    fn bind(&mut self, input: &Schema) -> Schema {
+        let mut schema = input.clone();
+        for t in &mut self.transforms {
+            schema = t.bind(&schema);
+        }
+        self.output = Some(schema.clone());
+        schema
+    }
+
+    fn transform(&mut self, inst: Instance) -> Option<Instance> {
+        let mut cur = inst;
+        for t in &mut self.transforms {
+            cur = t.transform(cur)?;
+        }
+        Some(cur)
+    }
+
+    fn name(&self) -> &'static str {
+        "pipeline"
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.transforms.iter().map(|t| t.mem_bytes()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::instance::Label;
+    use crate::core::AttributeKind;
+    use crate::preprocess::{Discretizer, FeatureHasher, StandardScaler};
+
+    #[test]
+    fn schema_rewrites_chain() {
+        let schema = Schema::classification("src", Schema::all_numeric(100), 3);
+        let mut p = Pipeline::new()
+            .then(FeatureHasher::new(32))
+            .then(StandardScaler::new())
+            .then(Discretizer::new(5));
+        let out = p.bind(&schema);
+        assert_eq!(out.n_attributes(), 32);
+        assert_eq!(out.attributes[0], AttributeKind::Categorical { n_values: 5 });
+        assert_eq!(out.n_classes(), 3);
+        assert_eq!(p.output_schema().n_attributes(), 32);
+        assert_eq!(p.stage_names(), vec!["feature-hasher", "standard-scaler", "discretizer"]);
+    }
+
+    #[test]
+    fn instances_flow_through_all_stages() {
+        let schema = Schema::classification("src", Schema::all_numeric(10), 2);
+        let mut p = Pipeline::new().then(FeatureHasher::new(4)).then(Discretizer::new(3));
+        p.bind(&schema);
+        for n in 0..300 {
+            let vals: Vec<f32> = (0..10).map(|j| (n * j) as f32 * 0.1).collect();
+            let out = p.transform(Instance::dense(vals, Label::Class(0))).unwrap();
+            assert_eq!(out.n_attributes(), 4);
+            for j in 0..4 {
+                assert!(out.value(j) < 3.0);
+            }
+        }
+    }
+
+    #[test]
+    fn nested_pipelines() {
+        let schema = Schema::classification("src", Schema::all_numeric(8), 2);
+        let inner = Pipeline::new().then(StandardScaler::new());
+        let mut outer = Pipeline::new().then(inner).then(Discretizer::new(4));
+        let out = outer.bind(&schema);
+        assert_eq!(out.attributes[7], AttributeKind::Categorical { n_values: 4 });
+        let i = outer.transform(Instance::dense(vec![1.0; 8], Label::None)).unwrap();
+        assert_eq!(i.n_attributes(), 8);
+    }
+}

@@ -1,0 +1,290 @@
+//! Running-moment scalers: z-score ([`StandardScaler`]) and range
+//! ([`MinMaxScaler`]) normalization with online statistics — no fit phase,
+//! statistics accumulate as the stream flows (update-then-transform).
+//!
+//! Sparse handling: centering would densify, so sparse instances are only
+//! *divided* (by the running σ / range); stored zeros stay zero and absent
+//! attributes stay absent. Statistics over sparse input are computed from
+//! stored values only (absence is "not observed", not "zero" — matching
+//! the presence semantics of the sparse VHT observers).
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::core::instance::Values;
+use crate::core::{AttributeKind, Instance, Schema};
+
+use super::Transform;
+
+/// Welford z-score scaler for numeric attributes; categorical attributes
+/// pass through untouched.
+pub struct StandardScaler {
+    /// Per-attribute observation count / mean / sum of squared deviations.
+    n: Vec<f64>,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+    /// Which attributes are numeric under the bound schema.
+    numeric: Vec<bool>,
+}
+
+impl StandardScaler {
+    pub fn new() -> Self {
+        StandardScaler { n: Vec::new(), mean: Vec::new(), m2: Vec::new(), numeric: Vec::new() }
+    }
+
+    #[inline]
+    fn update(&mut self, j: usize, x: f64) {
+        self.n[j] += 1.0;
+        let d = x - self.mean[j];
+        self.mean[j] += d / self.n[j];
+        self.m2[j] += d * (x - self.mean[j]);
+    }
+
+    #[inline]
+    fn sd(&self, j: usize) -> f64 {
+        if self.n[j] < 2.0 {
+            return 0.0;
+        }
+        (self.m2[j] / self.n[j]).sqrt()
+    }
+
+    /// Current running mean of attribute `j` (diagnostics/tests).
+    pub fn mean(&self, j: usize) -> f64 {
+        self.mean[j]
+    }
+}
+
+impl Default for StandardScaler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transform for StandardScaler {
+    fn bind(&mut self, input: &Schema) -> Schema {
+        let d = input.n_attributes();
+        self.n = vec![0.0; d];
+        self.mean = vec![0.0; d];
+        self.m2 = vec![0.0; d];
+        self.numeric =
+            input.attributes.iter().map(|a| matches!(a, AttributeKind::Numeric)).collect();
+        let mut out = input.clone();
+        out.name = format!("{}|scale", input.name);
+        out
+    }
+
+    fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
+        match &mut inst.values {
+            Values::Dense(v) => {
+                for (j, val) in v.iter_mut().enumerate() {
+                    if !self.numeric[j] {
+                        continue;
+                    }
+                    let x = *val as f64;
+                    self.update(j, x);
+                    let sd = self.sd(j);
+                    *val = if sd > 1e-12 { ((x - self.mean[j]) / sd) as f32 } else { 0.0 };
+                }
+            }
+            Values::Sparse { indices, values, .. } => {
+                for (&j, val) in indices.iter().zip(values.iter_mut()) {
+                    let j = j as usize;
+                    if !self.numeric[j] {
+                        continue;
+                    }
+                    let x = *val as f64;
+                    self.update(j, x);
+                    let sd = self.sd(j);
+                    if sd > 1e-12 {
+                        *val = (x / sd) as f32; // no centering: keep sparsity
+                    }
+                }
+            }
+        }
+        Some(inst)
+    }
+
+    fn name(&self) -> &'static str {
+        "standard-scaler"
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + vec_flat_bytes(&self.n)
+            + vec_flat_bytes(&self.mean)
+            + vec_flat_bytes(&self.m2)
+            + self.numeric.capacity()
+    }
+}
+
+/// Running min/max scaler: numeric attributes mapped into `[0, 1]`
+/// (dense) or scaled by the running range without shifting (sparse).
+pub struct MinMaxScaler {
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    numeric: Vec<bool>,
+}
+
+impl MinMaxScaler {
+    pub fn new() -> Self {
+        MinMaxScaler { lo: Vec::new(), hi: Vec::new(), numeric: Vec::new() }
+    }
+
+    #[inline]
+    fn update(&mut self, j: usize, x: f64) {
+        if x < self.lo[j] {
+            self.lo[j] = x;
+        }
+        if x > self.hi[j] {
+            self.hi[j] = x;
+        }
+    }
+
+    #[inline]
+    fn range(&self, j: usize) -> f64 {
+        self.hi[j] - self.lo[j]
+    }
+}
+
+impl Default for MinMaxScaler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transform for MinMaxScaler {
+    fn bind(&mut self, input: &Schema) -> Schema {
+        let d = input.n_attributes();
+        self.lo = vec![f64::INFINITY; d];
+        self.hi = vec![f64::NEG_INFINITY; d];
+        self.numeric =
+            input.attributes.iter().map(|a| matches!(a, AttributeKind::Numeric)).collect();
+        let mut out = input.clone();
+        out.name = format!("{}|minmax", input.name);
+        out
+    }
+
+    fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
+        match &mut inst.values {
+            Values::Dense(v) => {
+                for (j, val) in v.iter_mut().enumerate() {
+                    if !self.numeric[j] {
+                        continue;
+                    }
+                    let x = *val as f64;
+                    self.update(j, x);
+                    let r = self.range(j);
+                    *val = if r > 1e-12 { ((x - self.lo[j]) / r) as f32 } else { 0.0 };
+                }
+            }
+            Values::Sparse { indices, values, .. } => {
+                for (&j, val) in indices.iter().zip(values.iter_mut()) {
+                    let j = j as usize;
+                    if !self.numeric[j] {
+                        continue;
+                    }
+                    let x = *val as f64;
+                    self.update(j, x);
+                    // scale by the larger magnitude bound: stays in [-1, 1]
+                    let m = self.lo[j].abs().max(self.hi[j].abs());
+                    if m > 1e-12 {
+                        *val = (x / m) as f32;
+                    }
+                }
+            }
+        }
+        Some(inst)
+    }
+
+    fn name(&self) -> &'static str {
+        "minmax-scaler"
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + vec_flat_bytes(&self.lo)
+            + vec_flat_bytes(&self.hi)
+            + self.numeric.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::core::instance::Label;
+
+    #[test]
+    fn standard_scaler_converges_to_zero_mean_unit_var() {
+        let schema = Schema::classification("t", Schema::all_numeric(2), 2);
+        let mut s = StandardScaler::new();
+        s.bind(&schema);
+        let mut rng = Rng::new(5);
+        let (mut sum, mut sumsq, mut n) = (0.0f64, 0.0f64, 0.0f64);
+        for _ in 0..20_000 {
+            let x = 10.0 + 3.0 * rng.gaussian();
+            let out = s
+                .transform(Instance::dense(vec![x as f32, 1.0], Label::Class(0)))
+                .unwrap();
+            let z = out.value(0) as f64;
+            sum += z;
+            sumsq += z * z;
+            n += 1.0;
+        }
+        let mean = sum / n;
+        let var = sumsq / n - mean * mean;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+        // running mean tracked the true location
+        assert!((s.mean(0) - 10.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn constant_attribute_maps_to_zero() {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut s = StandardScaler::new();
+        s.bind(&schema);
+        for _ in 0..100 {
+            let out = s.transform(Instance::dense(vec![4.2], Label::None)).unwrap();
+            assert_eq!(out.value(0), 0.0);
+        }
+    }
+
+    #[test]
+    fn minmax_lands_in_unit_interval() {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut s = MinMaxScaler::new();
+        s.bind(&schema);
+        let mut rng = Rng::new(6);
+        for _ in 0..5000 {
+            let x = -50.0 + 100.0 * rng.f64();
+            let out = s.transform(Instance::dense(vec![x as f32], Label::None)).unwrap();
+            let y = out.value(0);
+            assert!((0.0..=1.0).contains(&y), "y={y}");
+        }
+    }
+
+    #[test]
+    fn categorical_attributes_untouched() {
+        let schema = Schema::classification("t", Schema::all_categorical(1, 5), 2);
+        let mut s = StandardScaler::new();
+        let out_schema = s.bind(&schema);
+        assert_eq!(out_schema.attributes, schema.attributes);
+        let out = s.transform(Instance::dense(vec![3.0], Label::None)).unwrap();
+        assert_eq!(out.value(0), 3.0);
+    }
+
+    #[test]
+    fn sparse_scaling_preserves_structure() {
+        let schema = Schema::classification("t", Schema::all_numeric(100), 2);
+        let mut s = StandardScaler::new();
+        s.bind(&schema);
+        let mut rng = Rng::new(7);
+        for _ in 0..500 {
+            let v = 1.0 + rng.f32();
+            let out = s
+                .transform(Instance::sparse(vec![3, 9], vec![v, v], 100, Label::None))
+                .unwrap();
+            assert_eq!(out.n_stored(), 2, "sparsity must be preserved");
+            assert_eq!(out.n_attributes(), 100);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Frequency sketches: Count-Min (Cormode & Muthukrishnan) and Misra-Gries
+//! heavy hitters — the bounded-memory summaries backing
+//! [`super::topk::TopKFilter`] and available to any processor that needs
+//! approximate stream frequencies.
+//!
+//! Guarantees (N = total weight added):
+//! * CountMin: `estimate(x) >= count(x)` always, and
+//!   `estimate(x) <= count(x) + 2N/width` with probability `>= 1 - 2^-depth`
+//!   per query (pairwise-independent row hashes via seeded SplitMix).
+//! * Misra-Gries with `k` counters: `count(x) - N/k <= estimate(x) <=
+//!   count(x)`, and every item with `count(x) > N/k` is present.
+
+use crate::common::memsize::vec_flat_bytes;
+use crate::common::MemSize;
+use crate::topology::stream::hash64;
+
+/// Count-Min sketch over `u64` item ids with `u64` counts.
+#[derive(Clone, Debug)]
+pub struct CountMinSketch {
+    width: usize,
+    depth: usize,
+    /// Row-major `depth × width` counter matrix.
+    counters: Vec<u64>,
+    /// Per-row hash seeds, fixed at construction (hot path: one hash64
+    /// per row per operation).
+    row_seeds: Vec<u64>,
+    total: u64,
+}
+
+impl CountMinSketch {
+    pub fn new(width: usize, depth: usize) -> Self {
+        assert!(width >= 1 && depth >= 1, "CountMin needs width, depth >= 1");
+        let row_seeds =
+            (0..depth).map(|row| hash64(row as u64 ^ 0xA5A5_A5A5_5A5A_5A5A)).collect();
+        CountMinSketch { width, depth, counters: vec![0; width * depth], row_seeds, total: 0 }
+    }
+
+    /// Size the sketch for additive error `<= epsilon * N` (with the 2N/w
+    /// Markov bound) at failure probability `<= delta` per query.
+    pub fn with_error(epsilon: f64, delta: f64) -> Self {
+        let width = (2.0 / epsilon).ceil().max(1.0) as usize;
+        let depth = (1.0 / delta).log2().ceil().max(1.0) as usize;
+        Self::new(width, depth)
+    }
+
+    /// Per-row cell index: each row hashes with its own SplitMix-derived
+    /// seed, giving (empirically) pairwise-independent rows.
+    #[inline]
+    fn cell(&self, row: usize, item: u64) -> usize {
+        (hash64(item ^ self.row_seeds[row]) % self.width as u64) as usize
+    }
+
+    #[inline]
+    pub fn add(&mut self, item: u64, count: u64) {
+        self.total += count;
+        for row in 0..self.depth {
+            let c = self.cell(row, item);
+            self.counters[row * self.width + c] += count;
+        }
+    }
+
+    /// Point estimate: min over rows (overestimate-only).
+    #[inline]
+    pub fn estimate(&self, item: u64) -> u64 {
+        let mut est = u64::MAX;
+        for row in 0..self.depth {
+            let c = self.cell(row, item);
+            est = est.min(self.counters[row * self.width + c]);
+        }
+        est
+    }
+
+    /// Total weight added so far (the N of the error bound).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+}
+
+impl MemSize for CountMinSketch {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + vec_flat_bytes(&self.counters)
+            + vec_flat_bytes(&self.row_seeds)
+    }
+}
+
+/// Misra-Gries heavy-hitter summary with at most `k` counters.
+#[derive(Clone, Debug)]
+pub struct MisraGries {
+    k: usize,
+    counters: crate::common::fxhash::FxHashMap<u64, u64>,
+    total: u64,
+}
+
+impl MisraGries {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "MisraGries needs k >= 1");
+        MisraGries { k, counters: Default::default(), total: 0 }
+    }
+
+    /// Add one occurrence of `item`. Amortized O(1): the O(k)
+    /// decrement-all fires at most once per k additions.
+    pub fn add(&mut self, item: u64) {
+        self.total += 1;
+        if let Some(c) = self.counters.get_mut(&item) {
+            *c += 1;
+        } else if self.counters.len() < self.k {
+            self.counters.insert(item, 1);
+        } else {
+            // Decrement every counter; evict the ones that reach zero.
+            self.counters.retain(|_, c| {
+                *c -= 1;
+                *c > 0
+            });
+        }
+    }
+
+    /// Lower-bound estimate (0 when absent): `count(x) - N/k <= estimate`.
+    pub fn estimate(&self, item: u64) -> u64 {
+        self.counters.get(&item).copied().unwrap_or(0)
+    }
+
+    pub fn contains(&self, item: u64) -> bool {
+        self.counters.contains_key(&item)
+    }
+
+    /// Tracked (item, estimate) pairs, heaviest first (ties by item id for
+    /// determinism across runs).
+    pub fn heavy_hitters(&self) -> Vec<(u64, u64)> {
+        let mut hh: Vec<(u64, u64)> = self.counters.iter().map(|(&i, &c)| (i, c)).collect();
+        hh.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        hh
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl MemSize for MisraGries {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.counters.capacity() * (8 + 8 + 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn countmin_never_underestimates() {
+        let mut cm = CountMinSketch::new(32, 4);
+        for i in 0..1000u64 {
+            cm.add(i % 50, 1);
+        }
+        for i in 0..50u64 {
+            assert!(cm.estimate(i) >= 20, "item {i} underestimated: {}", cm.estimate(i));
+        }
+        assert_eq!(cm.total(), 1000);
+    }
+
+    #[test]
+    fn countmin_exact_when_wide() {
+        // width >> distinct items, collisions vanishingly unlikely to hit
+        // all rows: estimates are exact here.
+        let mut cm = CountMinSketch::new(4096, 5);
+        for i in 0..64u64 {
+            for _ in 0..(i + 1) {
+                cm.add(i, 1);
+            }
+        }
+        for i in 0..64u64 {
+            assert_eq!(cm.estimate(i), i + 1);
+        }
+    }
+
+    #[test]
+    fn with_error_sizes_reasonably() {
+        let cm = CountMinSketch::with_error(0.01, 0.01);
+        assert!(cm.width() >= 200);
+        assert!(cm.depth() >= 7);
+    }
+
+    #[test]
+    fn misra_gries_tracks_majority() {
+        let mut mg = MisraGries::new(4);
+        // item 7 has frequency 1/2 > N/4: guaranteed present
+        for i in 0..10_000u64 {
+            mg.add(if i % 2 == 0 { 7 } else { 100 + (i % 97) });
+        }
+        assert!(mg.contains(7));
+        assert_eq!(mg.heavy_hitters()[0].0, 7);
+        assert!(mg.estimate(7) <= 5000);
+        assert!(mg.estimate(7) + mg.total() / 4 >= 5000);
+    }
+
+    #[test]
+    fn misra_gries_bounded_state() {
+        let mut mg = MisraGries::new(8);
+        for i in 0..100_000u64 {
+            mg.add(i); // all-distinct adversarial stream
+        }
+        assert!(mg.heavy_hitters().len() <= 8);
+    }
+}

@@ -1,0 +1,203 @@
+//! Heavy-hitter attribute filter: keep only the `k` most frequent
+//! attributes of a sparse stream (bag-of-words vocabulary pruning), as
+//! estimated online by a Misra-Gries summary with Count-Min refinement —
+//! MG nominates a bounded candidate set (no false-negative heavy hitters),
+//! CountMin ranks the candidates with overestimate-only counts.
+
+use crate::common::MemSize;
+use crate::core::instance::Values;
+use crate::core::{Instance, Schema};
+
+use super::sketch::{CountMinSketch, MisraGries};
+use super::Transform;
+
+/// Keep the top-`k` attributes by stream frequency; everything else is
+/// dropped (sparse) or zeroed (dense). Schema is unchanged — the surviving
+/// attributes keep their indices.
+pub struct TopKFilter {
+    k: usize,
+    mg: MisraGries,
+    cm: CountMinSketch,
+    /// Recompute the keep-set every `refresh` instances.
+    refresh: u64,
+    seen: u64,
+    /// Sorted attribute indices currently kept (empty until first refresh
+    /// = keep everything while the summaries warm up).
+    keep: Vec<u32>,
+}
+
+impl TopKFilter {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "need k >= 1");
+        TopKFilter {
+            k,
+            // 4x headroom: MG's N/cap error must be well under the k-th
+            // frequency for a stable keep-set.
+            mg: MisraGries::new(4 * k),
+            cm: CountMinSketch::new((16 * k).next_power_of_two(), 4),
+            refresh: 512,
+            seen: 0,
+            keep: Vec::new(),
+        }
+    }
+
+    pub fn with_refresh(mut self, refresh: u64) -> Self {
+        self.refresh = refresh.max(1);
+        self
+    }
+
+    /// Current keep-set (sorted attribute indices); empty before warmup.
+    pub fn kept(&self) -> &[u32] {
+        &self.keep
+    }
+
+    fn recompute_keep(&mut self) {
+        let mut candidates = self.mg.heavy_hitters();
+        // rank MG candidates by the (tighter at the top) CountMin estimate
+        for c in candidates.iter_mut() {
+            c.1 = self.cm.estimate(c.0);
+        }
+        candidates.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        candidates.truncate(self.k);
+        self.keep = candidates.iter().map(|&(i, _)| i as u32).collect();
+        self.keep.sort_unstable();
+    }
+
+    #[inline]
+    fn keeps(&self, j: u32) -> bool {
+        // empty keep-set = warmup, let everything through
+        self.keep.is_empty() || self.keep.binary_search(&j).is_ok()
+    }
+}
+
+impl Transform for TopKFilter {
+    fn bind(&mut self, input: &Schema) -> Schema {
+        let mut out = input.clone();
+        out.name = format!("{}|top{}", input.name, self.k);
+        out
+    }
+
+    fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
+        // observe attribute occurrences (presence, not magnitude)
+        match &inst.values {
+            Values::Dense(v) => {
+                for (j, &x) in v.iter().enumerate() {
+                    if x != 0.0 {
+                        self.mg.add(j as u64);
+                        self.cm.add(j as u64, 1);
+                    }
+                }
+            }
+            Values::Sparse { indices, values, .. } => {
+                for (&j, &x) in indices.iter().zip(values.iter()) {
+                    if x != 0.0 {
+                        self.mg.add(j as u64);
+                        self.cm.add(j as u64, 1);
+                    }
+                }
+            }
+        }
+        self.seen += 1;
+        if self.seen % self.refresh == 0 {
+            self.recompute_keep();
+        }
+
+        match &mut inst.values {
+            Values::Dense(v) => {
+                for (j, x) in v.iter_mut().enumerate() {
+                    if !self.keeps(j as u32) {
+                        *x = 0.0;
+                    }
+                }
+            }
+            Values::Sparse { indices, values, .. } => {
+                let keep = std::mem::take(indices);
+                let vals = std::mem::take(values);
+                for (j, x) in keep.into_iter().zip(vals) {
+                    if self.keeps(j) {
+                        indices.push(j);
+                        values.push(x);
+                    }
+                }
+            }
+        }
+        Some(inst)
+    }
+
+    fn name(&self) -> &'static str {
+        "topk-filter"
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.mg.mem_bytes()
+            + self.cm.mem_bytes()
+            + self.keep.capacity() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::core::instance::Label;
+
+    #[test]
+    fn converges_to_true_heavy_hitters() {
+        // attributes 0..8 appear every instance; 100 noise attributes
+        // appear rarely — after refresh, exactly 0..8 must be kept
+        let schema = Schema::classification("t", Schema::all_numeric(200), 2);
+        let mut f = TopKFilter::new(8).with_refresh(256);
+        f.bind(&schema);
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            let noise = 8 + rng.below(192) as u32;
+            let mut idx = vec![0u32, 1, 2, 3, 4, 5, 6, 7];
+            if !idx.contains(&noise) {
+                idx.push(noise);
+            }
+            idx.sort_unstable();
+            let vals = vec![1.0f32; idx.len()];
+            f.transform(Instance::sparse(idx, vals, 200, Label::None)).unwrap();
+        }
+        assert_eq!(f.kept(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn filters_sparse_instances_to_keep_set() {
+        let schema = Schema::classification("t", Schema::all_numeric(100), 2);
+        let mut f = TopKFilter::new(2).with_refresh(64);
+        f.bind(&schema);
+        for _ in 0..500 {
+            f.transform(Instance::sparse(
+                vec![10, 20, 30],
+                vec![1.0, 1.0, 1.0],
+                100,
+                Label::None,
+            ))
+            .unwrap();
+        }
+        // 10/20/30 tie at equal frequency; deterministic tie-break keeps
+        // the two lowest ids
+        let out = f
+            .transform(Instance::sparse(vec![10, 20, 30], vec![1.0, 1.0, 1.0], 100, Label::None))
+            .unwrap();
+        assert_eq!(out.n_stored(), 2);
+        assert_eq!(out.n_attributes(), 100);
+    }
+
+    #[test]
+    fn dense_zeroing() {
+        let schema = Schema::classification("t", Schema::all_numeric(4), 2);
+        let mut f = TopKFilter::new(1).with_refresh(16);
+        f.bind(&schema);
+        for _ in 0..64 {
+            f.transform(Instance::dense(vec![1.0, 0.0, 0.5, 0.0], Label::None)).unwrap();
+        }
+        let out = f.transform(Instance::dense(vec![1.0, 1.0, 0.5, 1.0], Label::None)).unwrap();
+        // only one attribute survives; it must be 0 or 2 (the observed ones)
+        let kept: Vec<usize> = (0..4).filter(|&j| out.value(j) != 0.0).collect();
+        assert_eq!(kept.len(), 1);
+        assert!(kept[0] == 0 || kept[0] == 2);
+    }
+}

@@ -22,6 +22,33 @@ pub trait StreamSource: Send {
     }
 }
 
+/// Boxed sources are sources too — lets `TransformedStream` (and any
+/// generic consumer) wrap the `Box<dyn StreamSource>` handed out by the
+/// CLI stream registry.
+impl StreamSource for Box<dyn StreamSource> {
+    fn schema(&self) -> &Schema {
+        (**self).schema()
+    }
+
+    fn next_instance(&mut self) -> Option<Instance> {
+        (**self).next_instance()
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        (**self).len_hint()
+    }
+}
+
+/// Extension: route any source through a preprocessing pipeline
+/// ([`crate::preprocess`]), e.g. `ArffStream::from_file(p)?.pipe(pl)`.
+pub trait StreamSourceExt: StreamSource + Sized {
+    fn pipe(self, pipeline: crate::preprocess::Pipeline) -> crate::preprocess::TransformedStream<Self> {
+        crate::preprocess::TransformedStream::new(self, pipeline)
+    }
+}
+
+impl<S: StreamSource + Sized> StreamSourceExt for S {}
+
 /// Adapter: iterate a `StreamSource` (bounded by `max`).
 pub struct Take<'a> {
     pub src: &'a mut dyn StreamSource,

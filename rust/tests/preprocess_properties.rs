@@ -1,0 +1,125 @@
+//! Property-style tests for the sketch guarantees backing the preprocess
+//! subsystem (hand-rolled seed loops, like `engine_properties.rs` — no
+//! proptest crate offline).
+//!
+//! * CountMin: overestimate-only, with additive error bounded by εN at the
+//!   chosen width/depth.
+//! * Misra-Gries: every item with frequency > N/k is recovered, estimates
+//!   lower-bound true counts by at most N/k.
+
+use std::collections::HashMap;
+
+use samoa::common::zipf::Zipf;
+use samoa::common::Rng;
+use samoa::preprocess::{CountMinSketch, MisraGries};
+
+/// Zipf-distributed item stream with its exact counts.
+fn zipf_stream(seed: u64, universe: usize, n: usize, theta: f64) -> (Vec<u64>, HashMap<u64, u64>) {
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(universe, theta);
+    let mut items = Vec::with_capacity(n);
+    let mut truth: HashMap<u64, u64> = HashMap::new();
+    for _ in 0..n {
+        let x = zipf.sample(&mut rng) as u64;
+        *truth.entry(x).or_insert(0) += 1;
+        items.push(x);
+    }
+    (items, truth)
+}
+
+#[test]
+fn prop_countmin_overestimates_within_epsilon_n() {
+    // width 1024 ⇒ expected collision mass N/1024 per row; the min over 8
+    // rows exceeding 4·N/width is vanishingly unlikely for every tested
+    // seed/item (Markov per row: P ≤ 1/4, rows independent ⇒ ≤ 4^-8).
+    for seed in 0..8u64 {
+        let (items, truth) = zipf_stream(seed, 2000, 20_000, 1.2);
+        let mut cm = CountMinSketch::new(1024, 8);
+        for &x in &items {
+            cm.add(x, 1);
+        }
+        assert_eq!(cm.total(), items.len() as u64, "seed {seed}");
+        let bound = 4 * cm.total() / 1024;
+        for (&x, &t) in &truth {
+            let est = cm.estimate(x);
+            assert!(est >= t, "seed {seed}: item {x} underestimated ({est} < {t})");
+            assert!(
+                est - t <= bound,
+                "seed {seed}: item {x} error {} exceeds εN = {bound}",
+                est - t
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_countmin_weighted_adds() {
+    // weighted adds obey the same overestimate-only invariant
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed);
+        let mut cm = CountMinSketch::new(256, 6);
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for _ in 0..2000 {
+            let x = rng.below(300) as u64;
+            let w = 1 + rng.below(9) as u64;
+            *truth.entry(x).or_insert(0) += w;
+            cm.add(x, w);
+        }
+        for (&x, &t) in &truth {
+            assert!(cm.estimate(x) >= t, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_misra_gries_recovers_heavy_hitters() {
+    for seed in 0..8u64 {
+        let k = 16 + (seed as usize % 3) * 8; // 16, 24, 32
+        let (items, truth) = zipf_stream(seed, 500, 30_000, 1.5);
+        let mut mg = MisraGries::new(k);
+        for &x in &items {
+            mg.add(x);
+        }
+        let n = mg.total();
+        assert_eq!(n, items.len() as u64, "seed {seed}");
+        let threshold = n / k as u64;
+        for (&x, &t) in &truth {
+            let est = mg.estimate(x);
+            // estimates never exceed the true count...
+            assert!(est <= t, "seed {seed}: item {x} overestimated ({est} > {t})");
+            // ...and undershoot by at most N/k
+            assert!(
+                est + threshold >= t,
+                "seed {seed}: item {x} est {est} below {t} - N/k"
+            );
+            // the defining guarantee: frequency > N/k ⇒ recovered
+            if t > threshold {
+                assert!(mg.contains(x), "seed {seed}: heavy item {x} (count {t}) lost");
+            }
+        }
+        // summary stays bounded
+        assert!(mg.heavy_hitters().len() <= k, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_misra_gries_ranking_matches_truth_on_skewed_stream() {
+    // on a heavily skewed stream the top-3 by MG estimate are the true
+    // top-3 (their gaps exceed the N/k error)
+    for seed in 0..5u64 {
+        let (items, truth) = zipf_stream(seed, 200, 50_000, 2.0);
+        let mut mg = MisraGries::new(64);
+        for &x in &items {
+            mg.add(x);
+        }
+        let mut true_top: Vec<(u64, u64)> = truth.iter().map(|(&i, &c)| (i, c)).collect();
+        true_top.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let hh = mg.heavy_hitters();
+        for rank in 0..3 {
+            assert_eq!(
+                hh[rank].0, true_top[rank].0,
+                "seed {seed}: rank {rank} mismatch (mg {hh:?} vs truth {true_top:?})"
+            );
+        }
+    }
+}
