@@ -1,9 +1,13 @@
 //! Preprocess subsystem benches: sketch update throughput (CountMin /
-//! Misra-Gries inserts per second) and end-to-end `Pipeline` overhead
-//! against a raw stream pass-through.
+//! Misra-Gries inserts per second), end-to-end `Pipeline` overhead
+//! against a raw stream pass-through, the discretizer's Fenwick-backed
+//! rank query against the naive O(fine) prefix scan, and the stats-sync
+//! overhead of the prequential topology at p ∈ {1, 2, 4, 8}.
 
 mod bench_util;
 use bench_util::bench;
+
+use std::time::Instant;
 
 use samoa::common::zipf::Zipf;
 use samoa::common::Rng;
@@ -91,8 +95,109 @@ fn pipeline_benches() {
     });
 }
 
+/// Fenwick rank query vs the naive O(fine) prefix scan on a
+/// discretizer-heavy setup (large fine-cell count). Asserts the cached
+/// path is not slower — the regression the prefix-sum rewrite fixes.
+fn discretizer_rank_benches() {
+    use samoa::core::Schema;
+
+    let schema = Schema::classification("b", Schema::all_numeric(1), 2);
+    let mut d = samoa::preprocess::Discretizer::with_resolution(8, 256, 2048);
+    samoa::preprocess::Transform::bind(&mut d, &schema);
+    let mut rng = Rng::new(5);
+    for _ in 0..100_000 {
+        let x = (rng.gaussian() * 10.0) as f32;
+        let _ = samoa::preprocess::Transform::transform(
+            &mut d,
+            samoa::core::Instance::dense(vec![x], samoa::core::instance::Label::None),
+        );
+    }
+    let queries: Vec<f64> = (0..200_000).map(|_| rng.gaussian() * 12.0).collect();
+
+    let time = |name: &str, f: &dyn Fn(f64) -> f64| -> f64 {
+        let mut acc = 0.0;
+        for &q in &queries {
+            acc += f(q); // warmup + sanity
+        }
+        std::hint::black_box(acc);
+        let t0 = Instant::now();
+        let mut acc = 0.0;
+        for &q in &queries {
+            acc += f(q);
+        }
+        std::hint::black_box(acc);
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "{name:<48} {:>9.3}ms  ranks/s={:>12.0}",
+            secs * 1e3,
+            queries.len() as f64 / secs.max(1e-12)
+        );
+        secs
+    };
+    let cached = time("discretizer rank (fenwick, fine=2048)", &|q| d.rank(0, q));
+    let naive = time("discretizer rank (naive scan, fine=2048)", &|q| d.rank_naive(0, q));
+    println!(
+        "rank speedup (naive/fenwick): {:.1}x over {} queries",
+        naive / cached.max(1e-12),
+        queries.len()
+    );
+    assert!(
+        cached <= naive,
+        "fenwick rank ({cached:.4}s) must not be slower than the naive scan ({naive:.4}s)"
+    );
+}
+
+/// Stats-sync overhead: the prequential classifier topology at
+/// p ∈ {1, 2, 4, 8}, delta-sync off vs on (interval 256), local engine.
+fn sync_benches() {
+    use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+    use samoa::core::model::Classifier;
+    use samoa::core::Schema;
+    use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+    use samoa::preprocess::processor::{build_prequential_topology_head, LearnerHead};
+    use samoa::topology::Event;
+    use std::sync::Arc;
+
+    const N: u64 = 20_000;
+    for p in [1usize, 2, 4, 8] {
+        for sync in [None, Some(256u64)] {
+            let label = match sync {
+                Some(i) => format!("prequential topology p={p} sync={i}"),
+                None => format!("prequential topology p={p} sync=off"),
+            };
+            bench(&label, 3, || {
+                let mut stream = WaveformGenerator::classification(7);
+                let schema = stream.schema().clone();
+                let sink = EvalSink::new(schema.n_classes(), 1.0, N);
+                let sink2 = Arc::clone(&sink);
+                let (topo, handles) = build_prequential_topology_head(
+                    &schema,
+                    p,
+                    sync,
+                    |_| {
+                        samoa::preprocess::Pipeline::new()
+                            .then(samoa::preprocess::StandardScaler::new())
+                            .then(samoa::preprocess::Discretizer::new(8))
+                    },
+                    LearnerHead::Classifier(Box::new(|s: &Schema| -> Box<dyn Classifier> {
+                        Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
+                    })),
+                    move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+                );
+                let source = (0..N).map_while(|id| {
+                    stream.next_instance().map(|inst| Event::Instance { id, inst })
+                });
+                let m = samoa::engine::LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+                m.source_instances
+            });
+        }
+    }
+}
+
 fn main() {
     println!("== preprocess benches ==");
     sketch_benches();
     pipeline_benches();
+    discretizer_rank_benches();
+    sync_benches();
 }

@@ -189,6 +189,42 @@ impl Processor for ClassifierProcessor {
     }
 }
 
+/// Test-then-train topology node wrapping any sequential [`Regressor`] —
+/// the regression twin of [`ClassifierProcessor`], so AMRules (and any
+/// future regressor) rides behind topology-level preprocessing too.
+/// Predicts each inbound instance, emits the `Prediction`, then trains on
+/// instances carrying a numeric label.
+pub struct RegressorProcessor {
+    model: Box<dyn Regressor>,
+    out: StreamId,
+}
+
+impl RegressorProcessor {
+    pub fn new(model: Box<dyn Regressor>, out: StreamId) -> Self {
+        RegressorProcessor { model, out }
+    }
+}
+
+impl Processor for RegressorProcessor {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        if let Event::Instance { id, inst } = event {
+            let output = Output::Numeric(self.model.predict(&inst));
+            ctx.emit(self.out, id, Event::Prediction { id, truth: inst.label, output });
+            if inst.numeric_label().is_some() {
+                self.model.train(&inst);
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.model.model_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "regressor"
+    }
+}
+
 /// Evaluator node: consumes `Prediction` events.
 pub struct EvaluatorProcessor {
     pub sink: Arc<EvalSink>,
@@ -261,6 +297,45 @@ mod tests {
         let r = prequential_run(&mut model, &mut stream, &PrequentialConfig::default());
         assert_eq!(r.instances, 1000);
         assert!((r.final_accuracy() - 0.5).abs() < 1e-12);
+    }
+
+    struct ConstReg(f64);
+    impl Regressor for ConstReg {
+        fn predict(&self, _i: &Instance) -> f64 {
+            self.0
+        }
+        fn train(&mut self, _i: &Instance) {}
+        fn model_bytes(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn regressor_processor_emits_numeric_predictions() {
+        let sink = EvalSink::new(0, 2.0, 100);
+        let mut reg = RegressorProcessor::new(Box::new(ConstReg(1.0)), StreamId(0));
+        let mut ev = EvaluatorProcessor { sink: Arc::clone(&sink) };
+        let mut ctx = Ctx::new(0, 1);
+        for i in 0..10u64 {
+            reg.process(
+                Event::Instance {
+                    id: i,
+                    inst: Instance::dense(vec![0.0], Label::Numeric(2.0)),
+                },
+                &mut ctx,
+            );
+        }
+        let emitted = ctx.take();
+        assert_eq!(emitted.len(), 10);
+        for (_, _, e) in emitted {
+            assert!(matches!(
+                &e,
+                Event::Prediction { truth: Label::Numeric(t), output: Output::Numeric(p), .. }
+                if *t == 2.0 && *p == 1.0
+            ));
+            ev.process(e, &mut ctx);
+        }
+        assert!((sink.mae() - 1.0).abs() < 1e-12);
     }
 
     #[test]

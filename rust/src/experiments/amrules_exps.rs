@@ -126,8 +126,9 @@ struct AmrOutcome {
     rmse: f64,
 }
 
-fn run_mamr(ds: &str, n: u64) -> AmrOutcome {
-    let mut stream = regression_stream(ds, 11, n);
+fn run_mamr(ds: &str, n: u64, pipeline: Option<&str>) -> AmrOutcome {
+    let mut stream = super::maybe_pipeline(regression_stream(ds, 11, n), pipeline)
+        .expect("pipeline spec validated by caller");
     let mut model = AMRules::new(stream.schema().clone(), AMRulesConfig::default());
     let mut measure =
         crate::evaluation::measures::RegressionMeasure::new(stream.schema().label_range(), n);
@@ -151,8 +152,16 @@ fn run_mamr(ds: &str, n: u64) -> AmrOutcome {
 /// Run VAMR (r = None) or HAMR (r = Some(replicas)) and report simulated
 /// throughput + errors. `p` = learner count (VAMR) / MA count (HAMR, as
 /// in Fig. 12's x-axis).
-fn run_distributed(ds: &str, p: usize, hamr_learners: Option<usize>, n: u64, sim: bool) -> AmrOutcome {
-    let mut stream = regression_stream(ds, 11, n);
+fn run_distributed(
+    ds: &str,
+    p: usize,
+    hamr_learners: Option<usize>,
+    n: u64,
+    sim: bool,
+    pipeline: Option<&str>,
+) -> AmrOutcome {
+    let mut stream = super::maybe_pipeline(regression_stream(ds, 11, n), pipeline)
+        .expect("pipeline spec validated by caller");
     let range = stream.schema().label_range();
     let sink = EvalSink::new(0, range, n);
     let sink2 = Arc::clone(&sink);
@@ -186,17 +195,18 @@ fn run_distributed(ds: &str, p: usize, hamr_learners: Option<usize>, n: u64, sim
 /// Fig 12: throughput of MAMR / VAMR / HAMR-1 / HAMR-2 by parallelism.
 pub fn fig12(args: &Args) -> anyhow::Result<()> {
     let n = args.u64("instances", 40_000);
+    let pipeline = super::validated_pipeline(args)?;
     let ps = args.usize_list("p", &[1, 2, 4, 8]);
     let mut rows = Vec::new();
     for ds in DATASETS {
-        let mamr = run_mamr(ds, n);
+        let mamr = run_mamr(ds, n, pipeline);
         rows.push(vec![ds.into(), "MAMR".into(), "-".into(), format!("{:.0}", mamr.throughput)]);
         for &p in &ps {
-            let v = run_distributed(ds, p, None, n, true);
+            let v = run_distributed(ds, p, None, n, true, pipeline);
             rows.push(vec![ds.into(), "VAMR".into(), p.to_string(), format!("{:.0}", v.throughput)]);
-            let h1 = run_distributed(ds, p, Some(1), n, true);
+            let h1 = run_distributed(ds, p, Some(1), n, true, pipeline);
             rows.push(vec![ds.into(), "HAMR-1".into(), p.to_string(), format!("{:.0}", h1.throughput)]);
-            let h2 = run_distributed(ds, p, Some(2), n, true);
+            let h2 = run_distributed(ds, p, Some(2), n, true, pipeline);
             rows.push(vec![ds.into(), "HAMR-2".into(), p.to_string(), format!("{:.0}", h2.throughput)]);
         }
     }
@@ -212,17 +222,18 @@ pub fn fig12(args: &Args) -> anyhow::Result<()> {
 /// single-partition reference line from the simtime cost model.
 pub fn fig13(args: &Args) -> anyhow::Result<()> {
     let n = args.u64("instances", 30_000);
+    let pipeline = super::validated_pipeline(args)?;
     let cost = crate::engine::SimCostModel::default();
     let mut rows = Vec::new();
     for ds in DATASETS {
         // measured result-message size = prediction event bytes + label
-        let mut stream = regression_stream(ds, 13, 1);
+        let mut stream = super::maybe_pipeline(regression_stream(ds, 13, 1), pipeline)?;
         let inst = stream.next_instance().unwrap();
         let msg_bytes = Event::Instance { id: 0, inst }.wire_bytes() + 24;
         // best throughput over p for HAMR-2
         let mut best = 0f64;
         for p in [1usize, 2, 4, 8] {
-            let r = run_distributed(ds, p, Some(2), n, true);
+            let r = run_distributed(ds, p, Some(2), n, true, pipeline);
             best = best.max(r.throughput);
         }
         // reference line: 1 / per-message cost at this size
@@ -245,10 +256,11 @@ pub fn fig13(args: &Args) -> anyhow::Result<()> {
 /// Figs 14-16: normalized MAE/RMSE of MAMR / VAMR / HAMR per dataset.
 pub fn fig14_16(args: &Args) -> anyhow::Result<()> {
     let n = args.u64("instances", 60_000);
+    let pipeline = super::validated_pipeline(args)?;
     let ps = args.usize_list("p", &[1, 2, 4, 8]);
     let mut rows = Vec::new();
     for ds in DATASETS {
-        let mamr = run_mamr(ds, n);
+        let mamr = run_mamr(ds, n, pipeline);
         rows.push(vec![
             ds.into(),
             "MAMR".into(),
@@ -257,7 +269,7 @@ pub fn fig14_16(args: &Args) -> anyhow::Result<()> {
             format!("{:.4}", mamr.rmse),
         ]);
         for &p in &ps {
-            let v = run_distributed(ds, p, None, n, false);
+            let v = run_distributed(ds, p, None, n, false, pipeline);
             rows.push(vec![
                 ds.into(),
                 "VAMR".into(),
@@ -265,7 +277,7 @@ pub fn fig14_16(args: &Args) -> anyhow::Result<()> {
                 format!("{:.4}", v.mae),
                 format!("{:.4}", v.rmse),
             ]);
-            let h = run_distributed(ds, p, Some(2), n, false);
+            let h = run_distributed(ds, p, Some(2), n, false, pipeline);
             rows.push(vec![
                 ds.into(),
                 "HAMR-2".into(),

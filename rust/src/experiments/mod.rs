@@ -61,6 +61,32 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     }
 }
 
+/// Parse-check `--pipeline` once (clean CLI error up front) and hand the
+/// spec back for per-run wrapping via [`maybe_pipeline`], whose `expect`
+/// is then unreachable. Shared by the VHT and AMRules harnesses.
+pub fn validated_pipeline(args: &Args) -> anyhow::Result<Option<&str>> {
+    if let Some(spec) = args.get("pipeline") {
+        crate::preprocess::parse_pipeline(spec)?;
+    }
+    Ok(args.get("pipeline"))
+}
+
+/// `--pipeline <spec>` support for the VHT / AMRules harnesses: wrap a
+/// harness stream in a preprocessing pipeline parsed from the CLI spec
+/// (`hash:64,scale,discretize:8,...`). No spec = the stream unchanged.
+pub fn maybe_pipeline(
+    stream: Box<dyn crate::streams::StreamSource>,
+    spec: Option<&str>,
+) -> anyhow::Result<Box<dyn crate::streams::StreamSource>> {
+    match spec {
+        Some(spec) => Ok(Box::new(crate::preprocess::TransformedStream::new(
+            stream,
+            crate::preprocess::parse_pipeline(spec)?,
+        ))),
+        None => Ok(stream),
+    }
+}
+
 /// Real dataset (from `data/<name>.arff`) or its synthetic twin.
 pub fn dataset_stream(name: &str, seed: u64) -> Box<dyn crate::streams::StreamSource> {
     let path = std::path::Path::new("data").join(format!("{name}.arff"));

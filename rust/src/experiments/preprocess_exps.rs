@@ -1,25 +1,32 @@
-//! Preprocessing-pipeline experiment: prequential accuracy & throughput of
-//! a Hoeffding tree over a preprocessed stream, comparing
+//! Preprocessing-pipeline experiment: prequential quality & throughput
+//! over a preprocessed stream, comparing
 //!
 //! * the raw stream (no preprocessing baseline),
 //! * the standalone [`TransformedStream`] path, and
-//! * the topology path ([`PipelineProcessor`]) under the local and
-//!   threaded engines —
+//! * the topology path ([`crate::preprocess::PipelineProcessor`]) under
+//!   the local and threaded engines, across a parallelism sweep with the
+//!   stats-sync loop off and on —
 //!
 //! demonstrating that the two integration styles agree (identical
-//! accuracy at parallelism 1) and what the pipeline costs.
+//! accuracy at parallelism 1), what the pipeline costs, and what the
+//! delta-sync protocol buys at `p > 1` (shard-convergent statistics) for
+//! both a classifier head (Hoeffding tree) and a regressor head
+//! (AMRules), selected by `--learner ht|amrules`.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
 use crate::common::cli::Args;
+use crate::core::model::{Classifier, Regressor};
+use crate::core::Schema;
 use crate::engine::{LocalEngine, ThreadedEngine};
 use crate::evaluation::prequential::{
-    prequential_run, EvalSink, EvaluatorProcessor, PrequentialConfig,
+    prequential_run, prequential_run_regression, EvalSink, EvaluatorProcessor, PrequentialConfig,
 };
-use crate::preprocess::processor::build_prequential_topology;
+use crate::preprocess::processor::{build_prequential_topology_head, LearnerHead};
 use crate::preprocess::{parse_pipeline, TransformedStream};
+use crate::regressors::amrules::{AMRules, AMRulesConfig};
 use crate::streams::StreamSource;
 use crate::topology::Event;
 
@@ -36,99 +43,167 @@ pub fn preprocess_stream(name: &str, seed: u64, dim: u32) -> Box<dyn StreamSourc
     }
 }
 
+/// Run the topology path once and report (quality, inst/s, total events).
+#[allow(clippy::too_many_arguments)]
+fn run_topology(
+    stream_name: &str,
+    seed: u64,
+    dim: u32,
+    spec: &str,
+    n: u64,
+    p: usize,
+    sync: Option<u64>,
+    threaded: bool,
+    regression: bool,
+) -> (f64, f64, u64) {
+    let mut stream = preprocess_stream(stream_name, seed, dim);
+    let schema = stream.schema().clone();
+    let sink = EvalSink::new(schema.n_classes(), schema.label_range(), n);
+    let sink2 = Arc::clone(&sink);
+    let spec_owned = spec.to_string();
+    let head = if regression {
+        LearnerHead::Regressor(Box::new(|s: &Schema| -> Box<dyn Regressor> {
+            Box::new(AMRules::new(s.clone(), AMRulesConfig::default()))
+        }))
+    } else {
+        LearnerHead::Classifier(Box::new(|s: &Schema| -> Box<dyn Classifier> {
+            Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
+        }))
+    };
+    let (topo, handles) = build_prequential_topology_head(
+        &schema,
+        p,
+        sync,
+        move |_| parse_pipeline(&spec_owned).expect("validated by caller"),
+        head,
+        move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+    );
+    let source =
+        (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let started = Instant::now();
+    let events = if threaded {
+        ThreadedEngine::default().run(&topo, handles.entry, source, |_, _, _| {}).total_events()
+    } else {
+        LocalEngine::new().run(&topo, handles.entry, source, |_| {}).total_events()
+    };
+    let wall = started.elapsed().as_secs_f64();
+    let quality = if regression { sink.mae() } else { sink.accuracy() };
+    (quality, n as f64 / wall.max(1e-9), events)
+}
+
 /// `samoa exp preprocess [--stream waveform-cls --pipeline scale,discretize:8
-/// --instances 20000 --p 2 --seed 42]`
+/// --instances 20000 --p 1,2,4 --sync 256 --learner ht|amrules --seed 42]`
 pub fn preprocess(args: &Args) -> anyhow::Result<()> {
-    let stream_name = args.get_or("stream", "waveform-cls");
+    let regression = args.get_or("learner", "ht") == "amrules";
+    let stream_name =
+        args.get_or("stream", if regression { "waveform" } else { "waveform-cls" });
     let spec = args.get_or("pipeline", "scale,discretize:8");
+    parse_pipeline(spec)?; // fail fast on a bad CLI spec
     let n = args.u64("instances", 20_000);
-    // p = 1 keeps stateful operators (running moments) on a single shard,
-    // so all four rows are exactly comparable; raise --p to see sharded
-    // pipeline statistics (accuracy drifts slightly, throughput scales).
-    let p = args.usize("p", 1);
+    let ps = args.usize_list("p", &[1, 2, 4]);
+    // per-shard delta emission period; 0 disables the sync rows
+    let sync = args.u64("sync", 256);
     let seed = args.u64("seed", 42);
     let dim = args.usize("dim", 1000) as u32;
+    let quality_col = if regression { "MAE" } else { "accuracy" };
 
     let mut rows: Vec<Vec<String>> = Vec::new();
 
-    // -- baseline: raw stream, sequential HT
+    // -- baseline: raw stream, sequential learner
     {
         let mut stream = preprocess_stream(stream_name, seed, dim);
         let schema = stream.schema().clone();
-        let mut model = HoeffdingTree::new(schema, HTConfig::default());
-        let r = prequential_run(
-            &mut model,
-            stream.as_mut(),
-            &PrequentialConfig { max_instances: n, report_every: n },
-        );
+        let cfg = PrequentialConfig { max_instances: n, report_every: n };
+        let (quality, tput) = if regression {
+            let mut model = AMRules::new(schema, AMRulesConfig::default());
+            let r = prequential_run_regression(&mut model, stream.as_mut(), &cfg);
+            (r.measure.mae(), r.throughput())
+        } else {
+            let mut model = HoeffdingTree::new(schema, HTConfig::default());
+            let r = prequential_run(&mut model, stream.as_mut(), &cfg);
+            (r.final_accuracy(), r.throughput())
+        };
         rows.push(vec![
             "raw (no preprocessing)".into(),
-            format!("{:.4}", r.final_accuracy()),
-            format!("{:.0}", r.throughput()),
+            format!("{quality:.4}"),
+            format!("{tput:.0}"),
             "-".into(),
         ]);
     }
 
-    // -- standalone TransformedStream, sequential HT
+    // -- standalone TransformedStream, sequential learner
     {
         let stream = preprocess_stream(stream_name, seed, dim);
         let mut ts = TransformedStream::new(stream, parse_pipeline(spec)?);
         let schema = ts.schema().clone();
-        let mut model = HoeffdingTree::new(schema, HTConfig::default());
-        let r = prequential_run(
-            &mut model,
-            &mut ts,
-            &PrequentialConfig { max_instances: n, report_every: n },
-        );
+        let cfg = PrequentialConfig { max_instances: n, report_every: n };
+        let (quality, tput) = if regression {
+            let mut model = AMRules::new(schema, AMRulesConfig::default());
+            let r = prequential_run_regression(&mut model, &mut ts, &cfg);
+            (r.measure.mae(), r.throughput())
+        } else {
+            let mut model = HoeffdingTree::new(schema, HTConfig::default());
+            let r = prequential_run(&mut model, &mut ts, &cfg);
+            (r.final_accuracy(), r.throughput())
+        };
         rows.push(vec![
-            "TransformedStream + HT".into(),
-            format!("{:.4}", r.final_accuracy()),
-            format!("{:.0}", r.throughput()),
+            "TransformedStream (standalone)".into(),
+            format!("{quality:.4}"),
+            format!("{tput:.0}"),
             format!("{}B", crate::preprocess::Transform::mem_bytes(ts.pipeline())),
         ]);
     }
 
-    // -- topology path, local + threaded engines
-    for engine in ["local", "threaded"] {
-        let mut stream = preprocess_stream(stream_name, seed, dim);
-        let schema = stream.schema().clone();
-        let sink = EvalSink::new(schema.n_classes(), 1.0, n);
-        let sink2 = Arc::clone(&sink);
-        let spec_owned = spec.to_string();
-        let (topo, handles) = build_prequential_topology(
-            &schema,
-            if engine == "local" { p } else { 1 },
-            move |_| parse_pipeline(&spec_owned).expect("validated above"),
-            |s| Box::new(HoeffdingTree::new(s.clone(), HTConfig::default())),
-            move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
-        );
-        let source = (0..n)
-            .map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
-        let started = Instant::now();
-        let events = if engine == "local" {
-            LocalEngine::new().run(&topo, handles.entry, source, |_| {}).total_events()
-        } else {
-            ThreadedEngine::default().run(&topo, handles.entry, source, |_, _, _| {}).total_events()
-        };
-        let wall = started.elapsed().as_secs_f64();
+    // -- topology path: parallelism sweep, stats-sync off and on
+    for &p in &ps {
+        let mut syncs = vec![None];
+        if sync > 0 && p > 1 {
+            syncs.push(Some(sync));
+        }
+        for &s in &syncs {
+            let (quality, tput, events) =
+                run_topology(stream_name, seed, dim, spec, n, p, s, false, regression);
+            let label = match s {
+                Some(i) => format!("PipelineProcessor (local, p={p}, sync={i})"),
+                None => format!("PipelineProcessor (local, p={p})"),
+            };
+            rows.push(vec![
+                label,
+                format!("{quality:.4}"),
+                format!("{tput:.0}"),
+                format!("{events} events"),
+            ]);
+        }
+    }
+
+    // -- threaded engine (p = 1 keeps arrival order deterministic)
+    {
+        let (quality, tput, events) =
+            run_topology(stream_name, seed, dim, spec, n, 1, None, true, regression);
         rows.push(vec![
-            format!("PipelineProcessor ({engine})"),
-            format!("{:.4}", sink.accuracy()),
-            format!("{:.0}", n as f64 / wall.max(1e-9)),
+            "PipelineProcessor (threaded, p=1)".into(),
+            format!("{quality:.4}"),
+            format!("{tput:.0}"),
             format!("{events} events"),
         ]);
     }
 
     print_table(
-        &format!("preprocess: {stream_name} | pipeline = {spec} | n = {n}"),
-        &["configuration", "accuracy", "inst/s", "pipeline state"],
+        &format!(
+            "preprocess: {stream_name} | learner = {} | pipeline = {spec} | n = {n}",
+            if regression { "amrules" } else { "ht" }
+        ),
+        &["configuration", quality_col, "inst/s", "pipeline state"],
         &rows,
     );
     println!(
         "note: at p=1 the TransformedStream and PipelineProcessor paths see \
-         identical instance order and statistics, so their accuracies match \
-         exactly (the preprocess_integration test asserts this); threaded \
-         always runs p=1 to keep arrival order deterministic."
+         identical instance order and statistics, so their results match \
+         exactly (the preprocess_integration test asserts this). At p>1 \
+         each shard learns its own operator statistics unless sync is on: \
+         the sync rows emit state deltas every --sync instances per shard \
+         and converge all shards to the merged global statistics (the \
+         stats_sync_integration test pins the p=4 vs p=1 agreement)."
     );
     Ok(())
 }

@@ -229,6 +229,9 @@ pub fn fig8_9(args: &Args, sparse: bool) -> anyhow::Result<()> {
     let n = args.u64("instances", 20_000);
     let delay = args.usize("delay", 100);
     let ps = args.usize_list("p", if sparse { &[1, 2, 4, 8, 16] } else { &[1, 2, 4, 8] });
+    // optional `--pipeline hash:64,scale,...` preprocessing in front of
+    // the VHT topology
+    let pipeline = super::validated_pipeline(args)?;
     // Storm-like per-tuple costs (VHT experiments ran on Storm 0.9.3)
     let cost = SimCostModel {
         c_msg_ns: args.f64("cmsg", 2_000.0),
@@ -244,11 +247,13 @@ pub fn fig8_9(args: &Args, sparse: bool) -> anyhow::Result<()> {
     };
 
     let run_sim = |ci: usize, p: usize, delay: usize| -> (f64, u64) {
-        let mut stream: Box<dyn StreamSource> = if sparse {
+        let raw: Box<dyn StreamSource> = if sparse {
             sparse_stream(sparse_dims(args)[ci], 400)
         } else {
             dense_stream(dense_configs(args)[ci], 400)
         };
+        let mut stream =
+            super::maybe_pipeline(raw, pipeline).expect("pipeline spec validated above");
         let config = VhtConfig {
             parallelism: p,
             buffering: SplitBuffering::Discard,
@@ -270,11 +275,13 @@ pub fn fig8_9(args: &Args, sparse: bool) -> anyhow::Result<()> {
 
     for (ci, cname) in configs.iter().enumerate() {
         // cross-software reference: rust sequential tree wall-clock
-        let mut stream: Box<dyn StreamSource> = if sparse {
+        let raw: Box<dyn StreamSource> = if sparse {
             sparse_stream(sparse_dims(args)[ci], 400)
         } else {
             dense_stream(dense_configs(args)[ci], 400)
         };
+        let mut stream =
+            super::maybe_pipeline(raw, pipeline).expect("pipeline spec validated above");
         let moa = run_variant(stream.as_mut(), Variant::Moa, n, EngineKind::Threaded, sparse, n);
         // same-software, same-cost-model baseline: single worker, no delay
         let (base_tput, _) = run_sim(ci, 1, 0);

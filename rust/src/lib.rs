@@ -10,7 +10,8 @@
 //!   AMRules ([`regressors`]), CluStream ([`clustering`]), ensembles and
 //!   drift detectors ([`ensemble`], [`drift`]), plus stream generators
 //!   ([`streams`]), a streaming preprocessing & feature-pipeline layer
-//!   with sketch-backed operators ([`preprocess`]) and prequential
+//!   with sketch-backed operators whose statistics are mergeable and
+//!   shard-convergent under parallelism ([`preprocess`]) and prequential
 //!   evaluation ([`evaluation`]).
 //! * **L2/L1 (python, build-time only)** — the numeric hot-spots
 //!   (split-criterion information gain, AMRules SDR, CluStream assignment)

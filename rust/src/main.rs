@@ -37,6 +37,10 @@ fn main() {
             println!(
                 "pipeline ops (--pipeline a,b,...): hash:D | scale | minmax | discretize:K | topk:K"
             );
+            println!(
+                "exp preprocess knobs: --p 1,2,4 --sync N (delta-sync interval, 0=off) \
+                 --learner ht|amrules; fig8/fig9/fig12/fig13/fig14 also accept --pipeline"
+            );
             Ok(())
         }
         "backend" => {

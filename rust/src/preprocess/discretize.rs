@@ -9,6 +9,19 @@
 //! range with out-of-range values clamped into the edge cells. Memory per
 //! attribute is O(warmup + fine_bins), independent of stream length.
 //!
+//! Rank queries are served from a Fenwick (binary indexed) tree over the
+//! fine cells: O(log fine) per query and per insert, instead of the
+//! O(fine) prefix scan of the naive layout ([`Discretizer::rank_naive`]
+//! keeps that path as the reference for tests and benches). The tree is
+//! rebuilt wholesale on merge/deserialize.
+//!
+//! The per-attribute summaries are **mergeable**
+//! ([`super::merge::MergeableState`]): equal-range histograms add
+//! pointwise (exact); differing ranges re-bin by cell center into the
+//! union range (approximate, within one fine cell); unfrozen buffers
+//! concatenate. Under `p > 1` shards the delta-sync protocol ships
+//! pending summaries so every shard converges to shared cut points.
+//!
 //! Sparse handling: like the scalers, absent attributes are "not
 //! observed" — only stored values are summarized and rewritten, and an
 //! absent attribute still reads as 0 downstream, i.e. it aliases with
@@ -21,14 +34,48 @@ use crate::common::memsize::vec_flat_bytes;
 use crate::core::instance::Values;
 use crate::core::{AttributeKind, Instance, Schema};
 
+use super::merge::MergeableState;
 use super::Transform;
 
+/// Point update: add `delta` to cell `i` (0-based).
+fn fenwick_update(tree: &mut [f64], i: usize, delta: f64) {
+    let mut i = i + 1;
+    while i <= tree.len() {
+        tree[i - 1] += delta;
+        i += i & i.wrapping_neg();
+    }
+}
+
+/// Prefix sum of cells `[0, i)`.
+fn fenwick_prefix(tree: &[f64], i: usize) -> f64 {
+    let mut i = i.min(tree.len());
+    let mut s = 0.0;
+    while i > 0 {
+        s += tree[i - 1];
+        i -= i & i.wrapping_neg();
+    }
+    s
+}
+
+fn fenwick_build(counts: &[f64]) -> Vec<f64> {
+    let mut tree = vec![0.0; counts.len()];
+    for (i, &c) in counts.iter().enumerate() {
+        if c != 0.0 {
+            fenwick_update(&mut tree, i, c);
+        }
+    }
+    tree
+}
+
 /// Per-attribute layer-1 quantile summary.
+#[derive(Clone, Debug)]
 struct AttrSummary {
     /// Exact values until the histogram is frozen.
     buffer: Vec<f32>,
     /// Equal-width histogram over [lo, hi] after warmup (empty before).
     counts: Vec<f64>,
+    /// Fenwick tree mirroring `counts` for O(log fine) prefix sums.
+    fenwick: Vec<f64>,
     lo: f64,
     hi: f64,
     n: f64,
@@ -36,7 +83,14 @@ struct AttrSummary {
 
 impl AttrSummary {
     fn new() -> Self {
-        AttrSummary { buffer: Vec::new(), counts: Vec::new(), lo: 0.0, hi: 0.0, n: 0.0 }
+        AttrSummary {
+            buffer: Vec::new(),
+            counts: Vec::new(),
+            fenwick: Vec::new(),
+            lo: 0.0,
+            hi: 0.0,
+            n: 0.0,
+        }
     }
 
     fn frozen(&self) -> bool {
@@ -59,6 +113,7 @@ impl AttrSummary {
             let c = self.cell(v as f64);
             self.counts[c] += 1.0;
         }
+        self.fenwick = fenwick_build(&self.counts);
     }
 
     #[inline]
@@ -73,6 +128,7 @@ impl AttrSummary {
         if self.frozen() {
             let c = self.cell(x);
             self.counts[c] += 1.0;
+            fenwick_update(&mut self.fenwick, c, 1.0);
         } else {
             self.buffer.push(x as f32);
             if self.buffer.len() >= warmup {
@@ -81,7 +137,7 @@ impl AttrSummary {
         }
     }
 
-    /// Approximate rank of `x` in [0, 1].
+    /// Approximate rank of `x` in [0, 1]; O(log fine) once frozen.
     fn rank(&self, x: f64) -> f64 {
         if self.n < 1.0 {
             return 0.0;
@@ -91,13 +147,163 @@ impl AttrSummary {
             return below as f64 / self.buffer.len() as f64;
         }
         let c = self.cell(x);
+        let below = fenwick_prefix(&self.fenwick, c);
+        self.interpolated(x, c, below)
+    }
+
+    /// Reference rank with the O(fine) prefix scan (tests/benches).
+    fn rank_naive(&self, x: f64) -> f64 {
+        if self.n < 1.0 {
+            return 0.0;
+        }
+        if !self.frozen() {
+            let below = self.buffer.iter().filter(|&&v| (v as f64) < x).count();
+            return below as f64 / self.buffer.len() as f64;
+        }
+        let c = self.cell(x);
         let below: f64 = self.counts[..c].iter().sum();
-        // linear interpolation inside the cell
+        self.interpolated(x, c, below)
+    }
+
+    /// Linear interpolation inside cell `c` given the mass `below` it.
+    fn interpolated(&self, x: f64, c: usize, below: f64) -> f64 {
         let fine = self.counts.len();
         let cell_lo = self.lo + (self.hi - self.lo) * c as f64 / fine as f64;
         let cell_w = (self.hi - self.lo) / fine as f64;
         let frac = ((x - cell_lo) / cell_w).clamp(0.0, 1.0);
         (below + frac * self.counts[c]) / self.n
+    }
+
+    /// Histogram merge. Equal-range frozen summaries add pointwise
+    /// (exact); differing ranges re-bin each source cell's mass at its
+    /// center into the union range; unfrozen buffers concatenate (and
+    /// freeze once the combined buffer reaches `warmup`).
+    fn merge(&mut self, other: &AttrSummary, warmup: usize, fine: usize) {
+        if other.n == 0.0 {
+            return;
+        }
+        if self.n == 0.0 {
+            *self = other.clone();
+            return;
+        }
+        match (self.frozen(), other.frozen()) {
+            (false, false) => {
+                self.buffer.extend_from_slice(&other.buffer);
+                self.n += other.n;
+                if self.buffer.len() >= warmup {
+                    self.freeze(fine);
+                }
+            }
+            (true, false) => {
+                for &v in &other.buffer {
+                    let c = self.cell(v as f64);
+                    self.counts[c] += 1.0;
+                    fenwick_update(&mut self.fenwick, c, 1.0);
+                }
+                self.n += other.n;
+            }
+            (false, true) => {
+                let buffer = std::mem::take(&mut self.buffer);
+                let my_n = self.n;
+                *self = other.clone();
+                self.n += my_n;
+                for &v in &buffer {
+                    let c = self.cell(v as f64);
+                    self.counts[c] += 1.0;
+                    fenwick_update(&mut self.fenwick, c, 1.0);
+                }
+            }
+            (true, true) => {
+                if self.lo == other.lo
+                    && self.hi == other.hi
+                    && self.counts.len() == other.counts.len()
+                {
+                    // identical layout: pointwise (exact, associative);
+                    // Fenwick trees are linear in the counts, so they add
+                    // elementwise too.
+                    for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+                        *c += o;
+                    }
+                    for (f, o) in self.fenwick.iter_mut().zip(&other.fenwick) {
+                        *f += o;
+                    }
+                } else {
+                    let lo = self.lo.min(other.lo);
+                    let hi = self.hi.max(other.hi);
+                    let cells = self.counts.len().max(other.counts.len());
+                    let mut counts = vec![0.0; cells];
+                    for src in [&*self, other] {
+                        let w = (src.hi - src.lo) / src.counts.len() as f64;
+                        for (c, &m) in src.counts.iter().enumerate() {
+                            if m > 0.0 {
+                                let center = src.lo + (c as f64 + 0.5) * w;
+                                let t = ((center - lo) / (hi - lo) * cells as f64) as isize;
+                                counts[t.clamp(0, cells as isize - 1) as usize] += m;
+                            }
+                        }
+                    }
+                    self.lo = lo;
+                    self.hi = hi;
+                    self.fenwick = fenwick_build(&counts);
+                    self.counts = counts;
+                }
+                self.n += other.n;
+            }
+        }
+    }
+
+    /// Flat encoding: `[frozen, n, lo, hi, len, data...]` where `data` is
+    /// the buffer (unfrozen) or the counts (frozen).
+    fn encode(&self, out: &mut Vec<f64>) {
+        let frozen = self.frozen();
+        out.push(if frozen { 1.0 } else { 0.0 });
+        out.push(self.n);
+        out.push(self.lo);
+        out.push(self.hi);
+        if frozen {
+            out.push(self.counts.len() as f64);
+            out.extend_from_slice(&self.counts);
+        } else {
+            out.push(self.buffer.len() as f64);
+            out.extend(self.buffer.iter().map(|&v| v as f64));
+        }
+    }
+
+    /// Decode one summary starting at `payload[*pos]`; advances `pos`.
+    /// Returns `None` (leaving `pos` unusable) on malformed input.
+    fn decode(payload: &[f64], pos: &mut usize) -> Option<AttrSummary> {
+        if payload.len() < *pos + 5 {
+            return None;
+        }
+        let frozen = payload[*pos] != 0.0;
+        let n = payload[*pos + 1];
+        let lo = payload[*pos + 2];
+        let hi = payload[*pos + 3];
+        let len = payload[*pos + 4] as usize;
+        *pos += 5;
+        if payload.len() < *pos + len {
+            return None;
+        }
+        let data = &payload[*pos..*pos + len];
+        *pos += len;
+        let mut s = AttrSummary::new();
+        s.n = n;
+        s.lo = lo;
+        s.hi = hi;
+        if frozen {
+            s.counts = data.to_vec();
+            s.fenwick = fenwick_build(&s.counts);
+        } else {
+            s.buffer = data.iter().map(|&v| v as f32).collect();
+        }
+        Some(s)
+    }
+
+    fn bytes(&self) -> usize {
+        std::mem::size_of::<AttrSummary>()
+            + vec_flat_bytes(&self.buffer)
+            + vec_flat_bytes(&self.counts)
+            + vec_flat_bytes(&self.fenwick)
     }
 }
 
@@ -107,7 +313,10 @@ pub struct Discretizer {
     k: u32,
     warmup: usize,
     fine: usize,
+    /// Transform-side summaries (global ⊕ pending after a sync).
     summaries: Vec<Option<AttrSummary>>,
+    /// Increment since the last `stats_delta` emission.
+    pending: Vec<Option<AttrSummary>>,
 }
 
 impl Discretizer {
@@ -120,7 +329,7 @@ impl Discretizer {
     pub fn with_resolution(k: u32, warmup: usize, fine: usize) -> Self {
         assert!(k >= 2, "need at least 2 bins");
         assert!(warmup >= 2 && fine >= k as usize);
-        Discretizer { k, warmup, fine, summaries: Vec::new() }
+        Discretizer { k, warmup, fine, summaries: Vec::new(), pending: Vec::new() }
     }
 
     /// Bin index for attribute `j` and raw value `x` under current stats.
@@ -131,6 +340,94 @@ impl Discretizer {
             None => 0,
         }
     }
+
+    /// Approximate rank of `x` on attribute `j` in [0, 1] (Fenwick path;
+    /// 0.0 for categorical attributes). Diagnostics/benches.
+    pub fn rank(&self, j: usize, x: f64) -> f64 {
+        self.summaries[j].as_ref().map_or(0.0, |s| s.rank(x))
+    }
+
+    /// Reference rank via the O(fine) prefix scan — must agree with
+    /// [`Discretizer::rank`] exactly up to f64 summation order.
+    pub fn rank_naive(&self, j: usize, x: f64) -> f64 {
+        self.summaries[j].as_ref().map_or(0.0, |s| s.rank_naive(x))
+    }
+
+    /// Encode a summary set (shared by delta/snapshot paths).
+    fn encode_set(set: &[Option<AttrSummary>]) -> Vec<f64> {
+        let mut out = Vec::new();
+        for s in set {
+            match s {
+                Some(s) => {
+                    out.push(1.0);
+                    s.encode(&mut out);
+                }
+                None => out.push(0.0),
+            }
+        }
+        out
+    }
+
+    /// Decode a payload produced by [`Discretizer::encode_set`]. Returns
+    /// `None` on malformed input.
+    fn decode_set(payload: &[f64]) -> Option<Vec<Option<AttrSummary>>> {
+        let mut set = Vec::new();
+        let mut pos = 0;
+        while pos < payload.len() {
+            let present = payload[pos] != 0.0;
+            pos += 1;
+            if present {
+                set.push(Some(AttrSummary::decode(payload, &mut pos)?));
+            } else {
+                set.push(None);
+            }
+        }
+        Some(set)
+    }
+
+    fn merge_sets(
+        dst: &mut [Option<AttrSummary>],
+        src: &[Option<AttrSummary>],
+        warmup: usize,
+        fine: usize,
+    ) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            if let (Some(d), Some(s)) = (d.as_mut(), s.as_ref()) {
+                d.merge(s, warmup, fine);
+            }
+        }
+    }
+
+    fn fresh_set(&self) -> Vec<Option<AttrSummary>> {
+        self.summaries
+            .iter()
+            .map(|s| s.as_ref().map(|_| AttrSummary::new()))
+            .collect()
+    }
+}
+
+impl MergeableState for Discretizer {
+    fn merge(&mut self, other: &Self) {
+        let (warmup, fine) = (self.warmup, self.fine);
+        Self::merge_sets(&mut self.summaries, &other.summaries, warmup, fine);
+    }
+
+    fn delta(&self) -> Vec<f64> {
+        Self::encode_set(&self.summaries)
+    }
+
+    fn apply_delta(&mut self, payload: &[f64]) {
+        if let Some(set) = Self::decode_set(payload) {
+            if set.len() == self.summaries.len() {
+                self.summaries = set;
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.summaries = self.fresh_set();
+        self.pending = self.fresh_set();
+    }
 }
 
 impl Transform for Discretizer {
@@ -140,6 +437,7 @@ impl Transform for Discretizer {
             .iter()
             .map(|a| matches!(a, AttributeKind::Numeric).then(AttrSummary::new))
             .collect();
+        self.pending = self.fresh_set();
         input.with_attributes(
             &format!("{}|discretize{}", input.name, self.k),
             input
@@ -164,6 +462,9 @@ impl Transform for Discretizer {
                     } else {
                         continue;
                     }
+                    if let Some(p) = &mut self.pending[j] {
+                        p.add(x, warmup, fine);
+                    }
                     *val = self.bin(j, x) as f32;
                 }
             }
@@ -176,11 +477,43 @@ impl Transform for Discretizer {
                     } else {
                         continue;
                     }
+                    if let Some(p) = &mut self.pending[j] {
+                        p.add(x, warmup, fine);
+                    }
                     *val = self.bin(j, x) as f32;
                 }
             }
         }
         Some(inst)
+    }
+
+    fn stats_delta(&mut self) -> Option<Vec<f64>> {
+        let payload = Self::encode_set(&self.pending);
+        self.pending = self.fresh_set();
+        Some(payload)
+    }
+
+    fn stats_merge(&mut self, payload: &[f64]) {
+        if let Some(set) = Self::decode_set(payload) {
+            if set.len() == self.summaries.len() {
+                let (warmup, fine) = (self.warmup, self.fine);
+                Self::merge_sets(&mut self.summaries, &set, warmup, fine);
+            }
+        }
+    }
+
+    fn stats_snapshot(&self) -> Option<Vec<f64>> {
+        Some(Self::encode_set(&self.summaries))
+    }
+
+    fn stats_apply(&mut self, payload: &[f64]) {
+        if let Some(mut set) = Self::decode_set(payload) {
+            if set.len() == self.summaries.len() {
+                let (warmup, fine) = (self.warmup, self.fine);
+                Self::merge_sets(&mut set, &self.pending, warmup, fine);
+                self.summaries = set;
+            }
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -192,12 +525,9 @@ impl Transform for Discretizer {
             + self
                 .summaries
                 .iter()
+                .chain(self.pending.iter())
                 .flatten()
-                .map(|s| {
-                    std::mem::size_of::<AttrSummary>()
-                        + vec_flat_bytes(&s.buffer)
-                        + vec_flat_bytes(&s.counts)
-                })
+                .map(AttrSummary::bytes)
                 .sum::<usize>()
     }
 }
@@ -276,5 +606,65 @@ mod tests {
         assert_eq!(out.attributes, schema.attributes);
         let i = d.transform(Instance::dense(vec![2.0], Label::None)).unwrap();
         assert_eq!(i.value(0), 2.0);
+    }
+
+    #[test]
+    fn fenwick_rank_matches_naive_scan() {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut d = Discretizer::with_resolution(8, 64, 256);
+        d.bind(&schema);
+        let mut rng = Rng::new(21);
+        for _ in 0..5000 {
+            let x = rng.gaussian() * 4.0;
+            d.transform(Instance::dense(vec![x as f32], Label::None)).unwrap();
+            let q = rng.gaussian() * 5.0;
+            let (fast, slow) = (d.rank(0, q), d.rank_naive(0, q));
+            assert!(
+                (fast - slow).abs() < 1e-9,
+                "fenwick rank {fast} != naive {slow} at {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equal_ranges_is_exact() {
+        // two summaries frozen over the same warmup data: merging doubles
+        // every count, leaving ranks unchanged
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mk = || {
+            let mut d = Discretizer::with_resolution(4, 16, 32);
+            d.bind(&schema);
+            let mut rng = Rng::new(3);
+            for _ in 0..500 {
+                let x = rng.f64() * 10.0;
+                d.transform(Instance::dense(vec![x as f32], Label::None)).unwrap();
+            }
+            d
+        };
+        let (mut a, b) = (mk(), mk());
+        let before = a.rank(0, 5.0);
+        a.merge(&b);
+        assert!((a.rank(0, 5.0) - before).abs() < 1e-9);
+        assert!((a.rank(0, 5.0) - a.rank_naive(0, 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_round_trip_preserves_ranks() {
+        let schema = Schema::classification("t", Schema::all_numeric(2), 2);
+        let mut d = Discretizer::with_resolution(4, 16, 32);
+        d.bind(&schema);
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let (x, y) = (rng.f64() * 4.0, rng.gaussian());
+            d.transform(Instance::dense(vec![x as f32, y as f32], Label::None))
+                .unwrap();
+        }
+        let mut e = Discretizer::with_resolution(4, 16, 32);
+        e.bind(&schema);
+        e.apply_delta(&d.delta());
+        for q in [-1.0, 0.5, 2.0, 3.9] {
+            assert!((d.rank(0, q) - e.rank(0, q)).abs() < 1e-9);
+            assert!((d.rank(1, q) - e.rank(1, q)).abs() < 1e-9);
+        }
     }
 }

@@ -1,0 +1,85 @@
+//! Mergeable operator state — the property that makes parallel pipelines
+//! converge (paper §6: the VHT local-stat aggregators keep *mergeable*
+//! sufficient statistics; Benczúr et al. 2018 survey the same idea for
+//! general distributed online learning).
+//!
+//! A [`MergeableState`] is a bounded-memory summary with a commutative,
+//! associative (up to f64 rounding where the summary is exact, up to the
+//! summary's own approximation bound where it is not) binary `merge`, an
+//! identity element (`reset`), and a flat serialization (`delta` /
+//! `apply_delta`) so it can ride inside topology event payloads.
+//!
+//! The delta-sync protocol built on top (see
+//! [`super::sync::StatsSyncProcessor`]) ships each shard's *pending*
+//! increment — the state accumulated since the shard's last emission —
+//! to an aggregator, which merges every increment into a master state
+//! exactly once and broadcasts the merged snapshot back. Because `merge`
+//! is commutative and associative, the master converges to the same
+//! state regardless of shard count or arrival order; `tests/merge_properties.rs`
+//! pins those laws for every implementation in this crate:
+//!
+//! * [`super::scalers::StandardScaler`] — Chan/parallel-Welford moment
+//!   merge (exact up to f64 rounding),
+//! * [`super::scalers::MinMaxScaler`] — elementwise min/max (exact,
+//!   idempotent),
+//! * [`super::discretize::Discretizer`] — fine-bin histogram merge
+//!   (exact while ranges agree; re-bins by cell center otherwise),
+//! * [`super::sketch::CountMinSketch`] — pointwise counter addition
+//!   (exact),
+//! * [`super::sketch::MisraGries`] — counter addition + (k+1)-th-largest
+//!   decrement (the Agarwal et al. mergeable-summary rule; estimates stay
+//!   within the composed N/k bound).
+
+/// Bounded-memory summary with a merge operation.
+///
+/// Laws (checked by `tests/merge_properties.rs`):
+/// * **commutativity** — `a.merge(&b)` and `b.merge(&a)` yield equal
+///   states (identical `delta()` payloads up to f64 tolerance);
+/// * **associativity** — `(a ⊕ b) ⊕ c` equals `a ⊕ (b ⊕ c)` exactly for
+///   exact summaries (moments, min/max, CountMin, equal-range
+///   histograms), and within the summary's approximation bound for lossy
+///   ones (Misra-Gries, re-binned histograms);
+/// * **identity** — merging a `reset()` state is a no-op;
+/// * **round trip** — `apply_delta(&delta())` reproduces the state.
+pub trait MergeableState {
+    /// Fold `other`'s state into `self`. Both sides must be configured
+    /// identically (same dimensionality / width / depth / bin layout) —
+    /// shards built by the same pipeline factory always are.
+    fn merge(&mut self, other: &Self);
+
+    /// Serialize the full mergeable state as a flat `f64` payload (the
+    /// wire format of `Event::StatsDelta` / `Event::StatsGlobal`).
+    fn delta(&self) -> Vec<f64>;
+
+    /// Rebuild state from a payload produced by [`MergeableState::delta`].
+    /// Malformed payloads are ignored (the state is left unchanged).
+    fn apply_delta(&mut self, payload: &[f64]);
+
+    /// Clear to the empty state — the identity element of `merge`.
+    fn reset(&mut self);
+}
+
+/// `true` when two payloads are elementwise equal within `tol` (relative
+/// for large magnitudes, absolute near zero). Shared by the property
+/// tests and debug assertions.
+pub fn payloads_close(a: &[f64], b: &[f64], tol: f64) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(&x, &y)| {
+            let scale = x.abs().max(y.abs()).max(1.0);
+            (x == y) || (x - y).abs() <= tol * scale
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payloads_close_handles_infinities_and_scale() {
+        assert!(payloads_close(&[f64::INFINITY, 1.0], &[f64::INFINITY, 1.0 + 1e-12], 1e-9));
+        assert!(!payloads_close(&[1.0], &[1.1], 1e-9));
+        assert!(!payloads_close(&[1.0, 2.0], &[1.0], 1e-9));
+        // relative comparison at large magnitude
+        assert!(payloads_close(&[1e12], &[1e12 + 1.0], 1e-9));
+    }
+}

@@ -24,7 +24,16 @@
 //! | [`hasher::FeatureHasher`] | none | signed feature hashing, sparse→dense projection |
 //! | [`topk::TopKFilter`] | Misra-Gries + CountMin | keep only heavy-hitter attributes |
 //! | [`sketch`] | CountMin / Misra-Gries | the summaries backing the above |
+//!
+//! Every stateful operator's statistics are **mergeable**
+//! ([`merge::MergeableState`]): under `p > 1` pipeline shards the
+//! delta-sync protocol ([`sync::StatsSyncProcessor`]) periodically ships
+//! each shard's pending state increment to an aggregator and broadcasts
+//! the merged global state back, so all shards converge to shared
+//! statistics — the same instance normalizes identically at `p = 1` and
+//! `p = 64`. See `README.md` in this directory for the protocol.
 
+pub mod merge;
 pub mod sketch;
 pub mod scalers;
 pub mod discretize;
@@ -32,13 +41,16 @@ pub mod hasher;
 pub mod topk;
 pub mod pipeline;
 pub mod processor;
+pub mod sync;
 
 pub use discretize::Discretizer;
 pub use hasher::FeatureHasher;
+pub use merge::MergeableState;
 pub use pipeline::Pipeline;
 pub use processor::PipelineProcessor;
 pub use scalers::{MinMaxScaler, StandardScaler};
 pub use sketch::{CountMinSketch, MisraGries};
+pub use sync::StatsSyncProcessor;
 pub use topk::TopKFilter;
 
 use crate::core::{Instance, Schema};
@@ -66,6 +78,35 @@ pub trait Transform: Send {
     fn mem_bytes(&self) -> usize {
         0
     }
+
+    // --- delta-sync hooks (see `merge` / `sync`) -----------------------
+    //
+    // Stateless transforms keep the defaults (no sync traffic). Stateful
+    // ones implement all four in terms of their `MergeableState`:
+    // a shard ships `stats_delta` (the pending increment, then resets
+    // it), the aggregator folds it in with `stats_merge` and broadcasts
+    // `stats_snapshot`, and shards adopt it with `stats_apply` (global
+    // merged with the still-pending local increment).
+
+    /// Take the pending state increment accumulated since the last call,
+    /// serialized as a flat payload, and reset it. `None` = stateless.
+    fn stats_delta(&mut self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Aggregator side: fold a shard's delta payload into this
+    /// operator's state (interpreted as the global master).
+    fn stats_merge(&mut self, _payload: &[f64]) {}
+
+    /// Serialize the full current state (the aggregator's broadcast
+    /// snapshot; on shards, a diagnostic view). `None` = stateless.
+    fn stats_snapshot(&self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Shard side: replace the transform-side state with the broadcast
+    /// global snapshot, keeping the not-yet-shipped pending increment.
+    fn stats_apply(&mut self, _payload: &[f64]) {}
 }
 
 /// Standalone adapter: any stream source, preprocessed. Filters (transforms

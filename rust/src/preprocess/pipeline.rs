@@ -50,6 +50,40 @@ impl Pipeline {
     pub fn stage_names(&self) -> Vec<&'static str> {
         self.transforms.iter().map(|t| t.name()).collect()
     }
+
+    // --- delta-sync plumbing (per-stage fan-out of the Transform hooks;
+    // see `super::sync`). Nested pipelines count as one opaque stage and
+    // keep the stateless defaults, so only top-level operators sync.
+
+    /// Pending (stage index, payload) increments of every stateful stage,
+    /// resetting each as it is taken.
+    pub fn stats_deltas(&mut self) -> Vec<(usize, Vec<f64>)> {
+        self.transforms
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, t)| t.stats_delta().map(|p| (i, p)))
+            .collect()
+    }
+
+    /// Aggregator side: fold a shard's delta for `stage` into the master.
+    pub fn stats_merge(&mut self, stage: usize, payload: &[f64]) {
+        if let Some(t) = self.transforms.get_mut(stage) {
+            t.stats_merge(payload);
+        }
+    }
+
+    /// Full-state snapshot of `stage` (`None` for stateless stages or
+    /// out-of-range indices).
+    pub fn stats_snapshot(&self, stage: usize) -> Option<Vec<f64>> {
+        self.transforms.get(stage).and_then(|t| t.stats_snapshot())
+    }
+
+    /// Shard side: adopt the broadcast global state for `stage`.
+    pub fn stats_apply(&mut self, stage: usize, payload: &[f64]) {
+        if let Some(t) = self.transforms.get_mut(stage) {
+            t.stats_apply(payload);
+        }
+    }
 }
 
 impl Default for Pipeline {

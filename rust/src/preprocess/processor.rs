@@ -1,25 +1,40 @@
 //! Topology integration: run a preprocessing [`Pipeline`] as a
-//! [`Processor`] node, parallelizable like any other SAMOA processor —
-//! shuffle-group the inbound stream for stateless pipelines (hashing) or
-//! key-group by instance id when per-key statistics matter. Stateful
-//! operators keep *per-instance-local* statistics, mirroring how the
-//! paper's local statistics processors shard state.
+//! [`Processor`] node, parallelizable like any other SAMOA processor.
+//! Stateful operators keep mergeable statistics, and with a sync interval
+//! configured the shards converge to *shared* statistics through the
+//! delta-sync loop ([`super::sync::StatsSyncProcessor`]): shard → (Key)
+//! aggregator → (All broadcast) shards.
+//!
+//! [`build_prequential_topology`] (classifier head, no sync — the PR-1
+//! shape) and [`build_prequential_topology_head`] (classifier *or*
+//! regressor head, optional sync) assemble the full prequential task:
+//! `source → pipeline×p [⇄ stats-sync] → learner → evaluator`.
 
-use crate::core::model::Classifier;
+use crate::core::model::{Classifier, Regressor};
 use crate::core::Schema;
 use crate::topology::{
     Ctx, Event, Grouping, Processor, ProcessorId, StreamId, Topology, TopologyBuilder,
 };
 
 use super::pipeline::Pipeline;
+use super::sync::StatsSyncProcessor;
 use super::Transform;
 
 /// One pipeline instance inside a topology: transforms every
 /// `Event::Instance` and forwards survivors downstream, preserving ids
 /// (so downstream key-groupings and the evaluator still line up).
+///
+/// With [`PipelineProcessor::with_sync`], every `interval` locally
+/// processed instances the shard emits its stages' pending state deltas
+/// (`Event::StatsDelta`, keyed by stage) and adopts the aggregator's
+/// merged broadcasts (`Event::StatsGlobal`).
 pub struct PipelineProcessor {
     pipeline: Pipeline,
     out: StreamId,
+    /// (interval, delta stream) when delta-sync is enabled.
+    sync: Option<(u64, StreamId)>,
+    /// Instances processed since the last delta emission.
+    since_sync: u64,
 }
 
 impl PipelineProcessor {
@@ -27,19 +42,68 @@ impl PipelineProcessor {
     /// instances on `out`.
     pub fn new(mut pipeline: Pipeline, input: &Schema, out: StreamId) -> Self {
         pipeline.bind(input);
-        PipelineProcessor { pipeline, out }
+        PipelineProcessor { pipeline, out, sync: None, since_sync: 0 }
+    }
+
+    /// Enable delta-sync: emit pending state deltas on `delta_stream`
+    /// every `interval` locally processed instances.
+    pub fn with_sync(mut self, interval: u64, delta_stream: StreamId) -> Self {
+        self.sync = Some((interval.max(1), delta_stream));
+        self
     }
 
     pub fn output_schema(&self) -> &Schema {
         self.pipeline.output_schema()
     }
+
+    /// The bound pipeline (state inspection in tests/harnesses).
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.pipeline
+    }
+
+    /// Ship every stage's pending increment on `delta_stream`.
+    fn emit_deltas(&mut self, delta_stream: StreamId, ctx: &mut Ctx) {
+        for (stage, payload) in self.pipeline.stats_deltas() {
+            ctx.emit(
+                delta_stream,
+                stage as u64,
+                Event::StatsDelta { stage: stage as u32, payload: std::sync::Arc::new(payload) },
+            );
+        }
+        self.since_sync = 0;
+    }
 }
 
 impl Processor for PipelineProcessor {
     fn process(&mut self, event: Event, ctx: &mut Ctx) {
-        if let Event::Instance { id, inst } = event {
-            if let Some(out) = self.pipeline.transform(inst) {
-                ctx.emit(self.out, id, Event::Instance { id, inst: out });
+        match event {
+            Event::Instance { id, inst } => {
+                if let Some(out) = self.pipeline.transform(inst) {
+                    ctx.emit(self.out, id, Event::Instance { id, inst: out });
+                }
+                self.since_sync += 1;
+                if let Some((interval, delta_stream)) = self.sync {
+                    if self.since_sync >= interval {
+                        self.emit_deltas(delta_stream, ctx);
+                    }
+                }
+            }
+            Event::StatsGlobal { stage, payload } => {
+                self.pipeline.stats_apply(stage as usize, &payload);
+            }
+            _ => {}
+        }
+    }
+
+    /// Flush the un-shipped pending increment so short runs (or
+    /// `interval > n/p`) still reach the aggregator. Reliable under the
+    /// local engine (the flush drains before processors are collected);
+    /// best-effort under the threaded engine, where the aggregator may
+    /// already be shutting down.
+    fn on_shutdown(&mut self, ctx: &mut Ctx) {
+        if let Some((_, delta_stream)) = self.sync {
+            if self.since_sync > 0 {
+                self.emit_deltas(delta_stream, ctx);
             }
         }
     }
@@ -51,10 +115,24 @@ impl Processor for PipelineProcessor {
     fn name(&self) -> &'static str {
         "pipeline"
     }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
 }
 
-/// Stream/processor handles of [`build_prequential_topology`]. Stream ids
-/// are fixed by declaration order: 0 entry, 1 instances, 2 prediction.
+/// Which learner rides behind the pipeline shards: a sequential
+/// classifier ([`crate::evaluation::prequential::ClassifierProcessor`])
+/// or a sequential regressor such as AMRules
+/// ([`crate::evaluation::prequential::RegressorProcessor`]).
+pub enum LearnerHead {
+    Classifier(Box<dyn Fn(&Schema) -> Box<dyn Classifier>>),
+    Regressor(Box<dyn Fn(&Schema) -> Box<dyn Regressor>>),
+}
+
+/// Stream/processor handles of the prequential preprocessing topologies.
+/// Stream ids are fixed by declaration order: 0 entry, 1 instances,
+/// 2 prediction, then (sync only) 3 delta, 4 global.
 #[derive(Clone, Copy, Debug)]
 pub struct PreprocessHandles {
     pub entry: StreamId,
@@ -65,48 +143,119 @@ pub struct PreprocessHandles {
     pub pipeline: ProcessorId,
     pub learner: ProcessorId,
     pub evaluator: ProcessorId,
+    /// shards → aggregator state deltas (sync topologies only).
+    pub delta: Option<StreamId>,
+    /// aggregator → shards merged broadcasts (sync topologies only).
+    pub global: Option<StreamId>,
+    pub stats: Option<ProcessorId>,
 }
 
-/// Assemble `source → pipeline×p → learner → evaluator`: the prequential
-/// classification task over a preprocessed stream, runnable on every
-/// engine. `pipeline_factory` is called once per pipeline instance (each
-/// owns independent operator state); the learner is a single test-then-
-/// train [`crate::evaluation::prequential::ClassifierProcessor`] fed by
-/// `classifier_factory` with the pipeline's *output* schema.
+/// Assemble `source → pipeline×p → learner → evaluator` with a
+/// classifier head and no stats-sync (the PR-1 shape; see
+/// [`build_prequential_topology_head`] for the full knobs).
 pub fn build_prequential_topology(
     schema: &Schema,
     parallelism: usize,
-    pipeline_factory: impl Fn(usize) -> Pipeline + 'static,
+    pipeline_factory: impl Fn(usize) -> Pipeline + Clone + 'static,
     classifier_factory: impl Fn(&Schema) -> Box<dyn Classifier> + 'static,
+    evaluator: impl Fn(usize) -> Box<dyn Processor> + 'static,
+) -> (Topology, PreprocessHandles) {
+    build_prequential_topology_head(
+        schema,
+        parallelism,
+        None,
+        pipeline_factory,
+        LearnerHead::Classifier(Box::new(classifier_factory)),
+        evaluator,
+    )
+}
+
+/// Assemble the prequential preprocessing topology with a selectable
+/// learner head and optional delta-sync:
+///
+/// ```text
+/// source → pipeline×p → learner(classifier|regressor) → evaluator
+///              ⇅ (sync_interval: Key-grouped deltas / All broadcasts)
+///          stats-sync
+/// ```
+///
+/// `pipeline_factory` is called once per pipeline shard (each owns
+/// independent operator state) and once more for the aggregator's master
+/// state container; `sync_interval` is the per-shard emission period in
+/// instances (`None` = isolated shard statistics, the PR-1 behavior).
+pub fn build_prequential_topology_head(
+    schema: &Schema,
+    parallelism: usize,
+    sync_interval: Option<u64>,
+    pipeline_factory: impl Fn(usize) -> Pipeline + Clone + 'static,
+    head: LearnerHead,
     evaluator: impl Fn(usize) -> Box<dyn Processor> + 'static,
 ) -> (Topology, PreprocessHandles) {
     let mut b = TopologyBuilder::new("preprocess-prequential");
     let instances = StreamId(1);
     let prediction = StreamId(2);
+    let delta = StreamId(3);
+    let global = StreamId(4);
 
     // probe bind: the learner consumes the pipeline's output schema
     let mut probe = pipeline_factory(usize::MAX);
     let out_schema = probe.bind(schema);
 
     let in_schema = schema.clone();
+    let pf = pipeline_factory.clone();
     let pipe = b.add_processor("pipeline", parallelism, move |i| {
-        Box::new(PipelineProcessor::new(pipeline_factory(i), &in_schema, instances))
+        let p = PipelineProcessor::new(pf(i), &in_schema, instances);
+        Box::new(match sync_interval {
+            Some(interval) => p.with_sync(interval, delta),
+            None => p,
+        })
     });
     // the factory stays inside the closure so the topology is re-runnable
     // (engines re-invoke every processor factory per run)
-    let learner = b.add_processor("learner", 1, move |_| {
-        Box::new(crate::evaluation::prequential::ClassifierProcessor::new(
-            classifier_factory(&out_schema),
-            prediction,
-        ))
-    });
+    let learner = match head {
+        LearnerHead::Classifier(f) => {
+            let s = out_schema.clone();
+            b.add_processor("learner", 1, move |_| {
+                Box::new(crate::evaluation::prequential::ClassifierProcessor::new(
+                    f(&s),
+                    prediction,
+                ))
+            })
+        }
+        LearnerHead::Regressor(f) => {
+            let s = out_schema.clone();
+            b.add_processor("learner", 1, move |_| {
+                Box::new(crate::evaluation::prequential::RegressorProcessor::new(
+                    f(&s),
+                    prediction,
+                ))
+            })
+        }
+    };
     let eval = b.add_processor("evaluator", 1, evaluator);
+    let stats = sync_interval.map(|_| {
+        let s = schema.clone();
+        let pf = pipeline_factory.clone();
+        b.add_processor("stats-sync", 1, move |_| {
+            Box::new(StatsSyncProcessor::new(pf(usize::MAX), &s, global))
+        })
+    });
 
     let entry = b.stream("instance", None, pipe, Grouping::Shuffle);
     let s_inst = b.stream("transformed", Some(pipe), learner, Grouping::Shuffle);
     let s_pred = b.stream("prediction", Some(learner), eval, Grouping::Shuffle);
     debug_assert_eq!(s_inst, instances);
     debug_assert_eq!(s_pred, prediction);
+    let (s_delta, s_global) = match stats {
+        Some(stats) => {
+            let d = b.stream("stats-delta", Some(pipe), stats, Grouping::Key);
+            let g = b.stream("stats-global", Some(stats), pipe, Grouping::All);
+            debug_assert_eq!(d, delta);
+            debug_assert_eq!(g, global);
+            (Some(d), Some(g))
+        }
+        None => (None, None),
+    };
 
     (
         b.build(),
@@ -117,6 +266,9 @@ pub fn build_prequential_topology(
             pipeline: pipe,
             learner,
             evaluator: eval,
+            delta: s_delta,
+            global: s_global,
+            stats,
         },
     )
 }
@@ -155,5 +307,36 @@ mod tests {
         assert_eq!(m.streams[handles.prediction.0].events, 3000);
         // waveform has strong signal: must beat majority-class guessing
         assert!(sink.accuracy() > 0.5, "accuracy={}", sink.accuracy());
+    }
+
+    #[test]
+    fn sync_topology_emits_deltas_and_broadcasts() {
+        let mut stream = WaveformGenerator::classification(5);
+        let schema = stream.schema().clone();
+        let sink = EvalSink::new(schema.n_classes(), 1.0, 1000);
+        let sink2 = Arc::clone(&sink);
+        let p = 4usize;
+        let (topo, handles) = build_prequential_topology_head(
+            &schema,
+            p,
+            Some(64),
+            |_| Pipeline::new().then(StandardScaler::new()),
+            LearnerHead::Classifier(Box::new(|s: &Schema| -> Box<dyn crate::core::model::Classifier> {
+                Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
+            })),
+            move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+        );
+        let n = 2048u64;
+        let source = (0..n)
+            .map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+        let m = LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+        assert_eq!(m.source_instances, n);
+        assert_eq!(m.streams[handles.prediction.0].events, n);
+        // each shard sees n/p instances and emits a delta every 64:
+        // (n/p/64) emissions per shard, one stateful stage
+        let expected_deltas = (n as usize / p / 64 * p) as u64;
+        assert_eq!(m.streams[handles.delta.unwrap().0].events, expected_deltas);
+        // every delta triggers a broadcast to all p shards
+        assert_eq!(m.streams[handles.global.unwrap().0].events, expected_deltas * p as u64);
     }
 }

@@ -2,6 +2,14 @@
 //! ([`MinMaxScaler`]) normalization with online statistics — no fit phase,
 //! statistics accumulate as the stream flows (update-then-transform).
 //!
+//! Both scalers keep **mergeable** statistics ([`Moments`] /
+//! [`Ranges`], see [`super::merge::MergeableState`]): a *view* state used
+//! to transform, plus a *pending* increment accumulated since the last
+//! stats-sync emission. Under `p > 1` pipeline shards the delta-sync
+//! protocol ([`super::sync`]) periodically ships the pending increment to
+//! an aggregator and replaces the view with the merged global state, so
+//! every shard normalizes with (near-)identical statistics.
+//!
 //! Sparse handling: centering would densify, so sparse instances are only
 //! *divided* (by the running σ / range); stored zeros stay zero and absent
 //! attributes stay absent. Statistics over sparse input are computed from
@@ -12,43 +20,220 @@ use crate::common::memsize::vec_flat_bytes;
 use crate::core::instance::Values;
 use crate::core::{AttributeKind, Instance, Schema};
 
+use super::merge::MergeableState;
 use super::Transform;
 
-/// Welford z-score scaler for numeric attributes; categorical attributes
-/// pass through untouched.
-pub struct StandardScaler {
-    /// Per-attribute observation count / mean / sum of squared deviations.
+/// Per-attribute Welford moments (count / mean / sum of squared
+/// deviations) with the Chan et al. parallel merge.
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
     n: Vec<f64>,
     mean: Vec<f64>,
     m2: Vec<f64>,
-    /// Which attributes are numeric under the bound schema.
-    numeric: Vec<bool>,
 }
 
-impl StandardScaler {
-    pub fn new() -> Self {
-        StandardScaler { n: Vec::new(), mean: Vec::new(), m2: Vec::new(), numeric: Vec::new() }
+impl Moments {
+    pub fn with_dim(d: usize) -> Self {
+        Moments { n: vec![0.0; d], mean: vec![0.0; d], m2: vec![0.0; d] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n.len()
     }
 
     #[inline]
-    fn update(&mut self, j: usize, x: f64) {
+    fn add(&mut self, j: usize, x: f64) {
         self.n[j] += 1.0;
         let d = x - self.mean[j];
         self.mean[j] += d / self.n[j];
         self.m2[j] += d * (x - self.mean[j]);
     }
 
-    #[inline]
-    fn sd(&self, j: usize) -> f64 {
+    pub fn count(&self, j: usize) -> f64 {
+        self.n[j]
+    }
+
+    pub fn mean(&self, j: usize) -> f64 {
+        self.mean[j]
+    }
+
+    /// Population standard deviation (0 below 2 observations).
+    pub fn sd(&self, j: usize) -> f64 {
         if self.n[j] < 2.0 {
             return 0.0;
         }
         (self.m2[j] / self.n[j]).sqrt()
     }
 
+    fn bytes(&self) -> usize {
+        vec_flat_bytes(&self.n) + vec_flat_bytes(&self.mean) + vec_flat_bytes(&self.m2)
+    }
+}
+
+impl MergeableState for Moments {
+    fn merge(&mut self, other: &Self) {
+        if other.dim() == 0 {
+            return;
+        }
+        if self.dim() == 0 {
+            *self = other.clone();
+            return;
+        }
+        debug_assert_eq!(self.dim(), other.dim(), "Moments dim mismatch");
+        for j in 0..self.dim().min(other.dim()) {
+            let (na, nb) = (self.n[j], other.n[j]);
+            if nb == 0.0 {
+                continue;
+            }
+            if na == 0.0 {
+                self.n[j] = nb;
+                self.mean[j] = other.mean[j];
+                self.m2[j] = other.m2[j];
+                continue;
+            }
+            // Chan's parallel update: exact in ℝ, commutative/associative
+            // up to f64 rounding.
+            let n = na + nb;
+            let d = other.mean[j] - self.mean[j];
+            self.mean[j] += d * nb / n;
+            self.m2[j] += other.m2[j] + d * d * na * nb / n;
+            self.n[j] = n;
+        }
+    }
+
+    fn delta(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(3 * self.dim());
+        out.extend_from_slice(&self.n);
+        out.extend_from_slice(&self.mean);
+        out.extend_from_slice(&self.m2);
+        out
+    }
+
+    fn apply_delta(&mut self, payload: &[f64]) {
+        if payload.len() % 3 != 0 {
+            return;
+        }
+        let d = payload.len() / 3;
+        self.n = payload[..d].to_vec();
+        self.mean = payload[d..2 * d].to_vec();
+        self.m2 = payload[2 * d..].to_vec();
+    }
+
+    fn reset(&mut self) {
+        self.n.fill(0.0);
+        self.mean.fill(0.0);
+        self.m2.fill(0.0);
+    }
+}
+
+/// Per-attribute running min/max. Merge is elementwise min/max — exact,
+/// commutative, associative and idempotent.
+#[derive(Clone, Debug, Default)]
+pub struct Ranges {
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+}
+
+impl Ranges {
+    pub fn with_dim(d: usize) -> Self {
+        Ranges { lo: vec![f64::INFINITY; d], hi: vec![f64::NEG_INFINITY; d] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    #[inline]
+    fn add(&mut self, j: usize, x: f64) {
+        if x < self.lo[j] {
+            self.lo[j] = x;
+        }
+        if x > self.hi[j] {
+            self.hi[j] = x;
+        }
+    }
+
+    pub fn lo(&self, j: usize) -> f64 {
+        self.lo[j]
+    }
+
+    pub fn hi(&self, j: usize) -> f64 {
+        self.hi[j]
+    }
+
+    fn bytes(&self) -> usize {
+        vec_flat_bytes(&self.lo) + vec_flat_bytes(&self.hi)
+    }
+}
+
+impl MergeableState for Ranges {
+    fn merge(&mut self, other: &Self) {
+        if other.dim() == 0 {
+            return;
+        }
+        if self.dim() == 0 {
+            *self = other.clone();
+            return;
+        }
+        debug_assert_eq!(self.dim(), other.dim(), "Ranges dim mismatch");
+        for j in 0..self.dim().min(other.dim()) {
+            self.lo[j] = self.lo[j].min(other.lo[j]);
+            self.hi[j] = self.hi[j].max(other.hi[j]);
+        }
+    }
+
+    fn delta(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(2 * self.dim());
+        out.extend_from_slice(&self.lo);
+        out.extend_from_slice(&self.hi);
+        out
+    }
+
+    fn apply_delta(&mut self, payload: &[f64]) {
+        if payload.len() % 2 != 0 {
+            return;
+        }
+        let d = payload.len() / 2;
+        self.lo = payload[..d].to_vec();
+        self.hi = payload[d..].to_vec();
+    }
+
+    fn reset(&mut self) {
+        self.lo.fill(f64::INFINITY);
+        self.hi.fill(f64::NEG_INFINITY);
+    }
+}
+
+/// Welford z-score scaler for numeric attributes; categorical attributes
+/// pass through untouched.
+pub struct StandardScaler {
+    /// Statistics used to transform (global ⊕ pending after a sync).
+    view: Moments,
+    /// Increment since the last `stats_delta` emission.
+    pending: Moments,
+    /// Which attributes are numeric under the bound schema.
+    numeric: Vec<bool>,
+}
+
+impl StandardScaler {
+    pub fn new() -> Self {
+        StandardScaler { view: Moments::default(), pending: Moments::default(), numeric: Vec::new() }
+    }
+
+    #[inline]
+    fn update(&mut self, j: usize, x: f64) {
+        self.view.add(j, x);
+        self.pending.add(j, x);
+    }
+
     /// Current running mean of attribute `j` (diagnostics/tests).
     pub fn mean(&self, j: usize) -> f64 {
-        self.mean[j]
+        self.view.mean(j)
+    }
+
+    /// The transform-side statistics (diagnostics/tests).
+    pub fn moments(&self) -> &Moments {
+        &self.view
     }
 }
 
@@ -58,12 +243,30 @@ impl Default for StandardScaler {
     }
 }
 
+impl MergeableState for StandardScaler {
+    fn merge(&mut self, other: &Self) {
+        self.view.merge(&other.view);
+    }
+
+    fn delta(&self) -> Vec<f64> {
+        self.view.delta()
+    }
+
+    fn apply_delta(&mut self, payload: &[f64]) {
+        self.view.apply_delta(payload);
+    }
+
+    fn reset(&mut self) {
+        self.view.reset();
+        self.pending.reset();
+    }
+}
+
 impl Transform for StandardScaler {
     fn bind(&mut self, input: &Schema) -> Schema {
         let d = input.n_attributes();
-        self.n = vec![0.0; d];
-        self.mean = vec![0.0; d];
-        self.m2 = vec![0.0; d];
+        self.view = Moments::with_dim(d);
+        self.pending = Moments::with_dim(d);
         self.numeric =
             input.attributes.iter().map(|a| matches!(a, AttributeKind::Numeric)).collect();
         let mut out = input.clone();
@@ -80,8 +283,8 @@ impl Transform for StandardScaler {
                     }
                     let x = *val as f64;
                     self.update(j, x);
-                    let sd = self.sd(j);
-                    *val = if sd > 1e-12 { ((x - self.mean[j]) / sd) as f32 } else { 0.0 };
+                    let sd = self.view.sd(j);
+                    *val = if sd > 1e-12 { ((x - self.view.mean(j)) / sd) as f32 } else { 0.0 };
                 }
             }
             Values::Sparse { indices, values, .. } => {
@@ -92,7 +295,7 @@ impl Transform for StandardScaler {
                     }
                     let x = *val as f64;
                     self.update(j, x);
-                    let sd = self.sd(j);
+                    let sd = self.view.sd(j);
                     if sd > 1e-12 {
                         *val = (x / sd) as f32; // no centering: keep sparsity
                     }
@@ -102,15 +305,45 @@ impl Transform for StandardScaler {
         Some(inst)
     }
 
+    fn stats_delta(&mut self) -> Option<Vec<f64>> {
+        let payload = self.pending.delta();
+        self.pending.reset();
+        Some(payload)
+    }
+
+    fn stats_merge(&mut self, payload: &[f64]) {
+        // shape guard: a foreign/truncated payload must not shrink state
+        if payload.len() != 3 * self.view.dim() {
+            return;
+        }
+        let mut inc = Moments::default();
+        inc.apply_delta(payload);
+        self.view.merge(&inc);
+    }
+
+    fn stats_snapshot(&self) -> Option<Vec<f64>> {
+        Some(self.view.delta())
+    }
+
+    fn stats_apply(&mut self, payload: &[f64]) {
+        if payload.len() != 3 * self.pending.dim() {
+            return;
+        }
+        let mut global = Moments::default();
+        global.apply_delta(payload);
+        // keep the not-yet-shipped local increment on top of the global
+        global.merge(&self.pending);
+        self.view = global;
+    }
+
     fn name(&self) -> &'static str {
         "standard-scaler"
     }
 
     fn mem_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
-            + vec_flat_bytes(&self.n)
-            + vec_flat_bytes(&self.mean)
-            + vec_flat_bytes(&self.m2)
+            + self.view.bytes()
+            + self.pending.bytes()
             + self.numeric.capacity()
     }
 }
@@ -118,29 +351,30 @@ impl Transform for StandardScaler {
 /// Running min/max scaler: numeric attributes mapped into `[0, 1]`
 /// (dense) or scaled by the running range without shifting (sparse).
 pub struct MinMaxScaler {
-    lo: Vec<f64>,
-    hi: Vec<f64>,
+    view: Ranges,
+    pending: Ranges,
     numeric: Vec<bool>,
 }
 
 impl MinMaxScaler {
     pub fn new() -> Self {
-        MinMaxScaler { lo: Vec::new(), hi: Vec::new(), numeric: Vec::new() }
+        MinMaxScaler { view: Ranges::default(), pending: Ranges::default(), numeric: Vec::new() }
     }
 
     #[inline]
     fn update(&mut self, j: usize, x: f64) {
-        if x < self.lo[j] {
-            self.lo[j] = x;
-        }
-        if x > self.hi[j] {
-            self.hi[j] = x;
-        }
+        self.view.add(j, x);
+        self.pending.add(j, x);
     }
 
     #[inline]
     fn range(&self, j: usize) -> f64 {
-        self.hi[j] - self.lo[j]
+        self.view.hi(j) - self.view.lo(j)
+    }
+
+    /// The transform-side statistics (diagnostics/tests).
+    pub fn ranges(&self) -> &Ranges {
+        &self.view
     }
 }
 
@@ -150,11 +384,30 @@ impl Default for MinMaxScaler {
     }
 }
 
+impl MergeableState for MinMaxScaler {
+    fn merge(&mut self, other: &Self) {
+        self.view.merge(&other.view);
+    }
+
+    fn delta(&self) -> Vec<f64> {
+        self.view.delta()
+    }
+
+    fn apply_delta(&mut self, payload: &[f64]) {
+        self.view.apply_delta(payload);
+    }
+
+    fn reset(&mut self) {
+        self.view.reset();
+        self.pending.reset();
+    }
+}
+
 impl Transform for MinMaxScaler {
     fn bind(&mut self, input: &Schema) -> Schema {
         let d = input.n_attributes();
-        self.lo = vec![f64::INFINITY; d];
-        self.hi = vec![f64::NEG_INFINITY; d];
+        self.view = Ranges::with_dim(d);
+        self.pending = Ranges::with_dim(d);
         self.numeric =
             input.attributes.iter().map(|a| matches!(a, AttributeKind::Numeric)).collect();
         let mut out = input.clone();
@@ -172,7 +425,7 @@ impl Transform for MinMaxScaler {
                     let x = *val as f64;
                     self.update(j, x);
                     let r = self.range(j);
-                    *val = if r > 1e-12 { ((x - self.lo[j]) / r) as f32 } else { 0.0 };
+                    *val = if r > 1e-12 { ((x - self.view.lo(j)) / r) as f32 } else { 0.0 };
                 }
             }
             Values::Sparse { indices, values, .. } => {
@@ -184,7 +437,7 @@ impl Transform for MinMaxScaler {
                     let x = *val as f64;
                     self.update(j, x);
                     // scale by the larger magnitude bound: stays in [-1, 1]
-                    let m = self.lo[j].abs().max(self.hi[j].abs());
+                    let m = self.view.lo(j).abs().max(self.view.hi(j).abs());
                     if m > 1e-12 {
                         *val = (x / m) as f32;
                     }
@@ -194,14 +447,44 @@ impl Transform for MinMaxScaler {
         Some(inst)
     }
 
+    fn stats_delta(&mut self) -> Option<Vec<f64>> {
+        let payload = self.pending.delta();
+        self.pending.reset();
+        Some(payload)
+    }
+
+    fn stats_merge(&mut self, payload: &[f64]) {
+        // shape guard: a foreign/truncated payload must not shrink state
+        if payload.len() != 2 * self.view.dim() {
+            return;
+        }
+        let mut inc = Ranges::default();
+        inc.apply_delta(payload);
+        self.view.merge(&inc);
+    }
+
+    fn stats_snapshot(&self) -> Option<Vec<f64>> {
+        Some(self.view.delta())
+    }
+
+    fn stats_apply(&mut self, payload: &[f64]) {
+        if payload.len() != 2 * self.pending.dim() {
+            return;
+        }
+        let mut global = Ranges::default();
+        global.apply_delta(payload);
+        global.merge(&self.pending);
+        self.view = global;
+    }
+
     fn name(&self) -> &'static str {
         "minmax-scaler"
     }
 
     fn mem_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
-            + vec_flat_bytes(&self.lo)
-            + vec_flat_bytes(&self.hi)
+            + self.view.bytes()
+            + self.pending.bytes()
             + self.numeric.capacity()
     }
 }
@@ -286,5 +569,44 @@ mod tests {
             assert_eq!(out.n_stored(), 2, "sparsity must be preserved");
             assert_eq!(out.n_attributes(), 100);
         }
+    }
+
+    #[test]
+    fn chan_merge_equals_single_pass() {
+        let mut rng = Rng::new(9);
+        let (mut a, mut b, mut all) =
+            (Moments::with_dim(1), Moments::with_dim(1), Moments::with_dim(1));
+        for i in 0..5000 {
+            let x = rng.gaussian() * 2.0 + 0.5;
+            if i % 2 == 0 {
+                a.add(0, x);
+            } else {
+                b.add(0, x);
+            }
+            all.add(0, x);
+        }
+        a.merge(&b);
+        assert!((a.count(0) - all.count(0)).abs() < 1e-9);
+        assert!((a.mean(0) - all.mean(0)).abs() < 1e-9);
+        assert!((a.sd(0) - all.sd(0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pending_delta_resets_and_round_trips() {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut s = StandardScaler::new();
+        s.bind(&schema);
+        for i in 0..10 {
+            s.transform(Instance::dense(vec![i as f32], Label::None)).unwrap();
+        }
+        let d1 = s.stats_delta().unwrap();
+        assert_eq!(d1[0], 10.0, "pending count shipped");
+        let d2 = s.stats_delta().unwrap();
+        assert_eq!(d2[0], 0.0, "pending reset after emit");
+        // snapshot round trip through another scaler
+        let mut t = StandardScaler::new();
+        t.bind(&schema);
+        t.stats_merge(&s.stats_snapshot().unwrap());
+        assert!((t.mean(0) - s.mean(0)).abs() < 1e-12);
     }
 }

@@ -14,6 +14,8 @@ use crate::common::memsize::vec_flat_bytes;
 use crate::common::MemSize;
 use crate::topology::stream::hash64;
 
+use super::merge::MergeableState;
+
 /// Count-Min sketch over `u64` item ids with `u64` counts.
 #[derive(Clone, Debug)]
 pub struct CountMinSketch {
@@ -84,6 +86,57 @@ impl CountMinSketch {
     }
 }
 
+impl MergeableState for CountMinSketch {
+    /// Pointwise counter addition — exact, commutative and associative
+    /// (both sketches must share width/depth; the row seeds are derived
+    /// deterministically from the row index, so equal depth ⇒ equal
+    /// hashes).
+    fn merge(&mut self, other: &Self) {
+        if other.total == 0 {
+            return;
+        }
+        if self.width != other.width || self.depth != other.depth {
+            debug_assert!(false, "CountMin shape mismatch in merge");
+            return;
+        }
+        for (c, o) in self.counters.iter_mut().zip(&other.counters) {
+            *c += o;
+        }
+        self.total += other.total;
+    }
+
+    /// `[width, depth, total, counters...]`. Counts are carried as f64 —
+    /// exact below 2^53, far beyond any bounded sync interval.
+    fn delta(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(3 + self.counters.len());
+        out.push(self.width as f64);
+        out.push(self.depth as f64);
+        out.push(self.total as f64);
+        out.extend(self.counters.iter().map(|&c| c as f64));
+        out
+    }
+
+    fn apply_delta(&mut self, payload: &[f64]) {
+        if payload.len() < 3 {
+            return;
+        }
+        let (width, depth) = (payload[0] as usize, payload[1] as usize);
+        if width < 1 || depth < 1 || payload.len() != 3 + width * depth {
+            return;
+        }
+        *self = CountMinSketch::new(width, depth);
+        self.total = payload[2] as u64;
+        for (c, &p) in self.counters.iter_mut().zip(&payload[3..]) {
+            *c = p as u64;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.counters.fill(0);
+        self.total = 0;
+    }
+}
+
 impl MemSize for CountMinSketch {
     fn mem_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
@@ -146,6 +199,74 @@ impl MisraGries {
 
     pub fn k(&self) -> usize {
         self.k
+    }
+}
+
+impl MergeableState for MisraGries {
+    /// The Agarwal et al. mergeable-summary rule: add counters pointwise,
+    /// then if more than `k` survive, subtract the (k+1)-th largest count
+    /// from every counter and drop the non-positive ones. Commutative
+    /// exactly; associative within the composed `N/k` estimate bound
+    /// (the classic MG guarantee is preserved under arbitrary merge
+    /// trees, but individual counter values may differ by grouping).
+    fn merge(&mut self, other: &Self) {
+        if other.total == 0 {
+            return;
+        }
+        self.total += other.total;
+        for (&item, &c) in other.counters.iter() {
+            *self.counters.entry(item).or_insert(0) += c;
+        }
+        if self.counters.len() > self.k {
+            let mut counts: Vec<u64> = self.counters.values().copied().collect();
+            counts.sort_unstable_by(|a, b| b.cmp(a));
+            let thr = counts[self.k];
+            self.counters.retain(|_, c| {
+                if *c > thr {
+                    *c -= thr;
+                    true
+                } else {
+                    false
+                }
+            });
+        }
+    }
+
+    /// `[k, total, m, (item, count) * m]`, pairs sorted by item id so
+    /// equal states serialize identically.
+    fn delta(&self) -> Vec<f64> {
+        let mut pairs: Vec<(u64, u64)> = self.counters.iter().map(|(&i, &c)| (i, c)).collect();
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        let mut out = Vec::with_capacity(3 + 2 * pairs.len());
+        out.push(self.k as f64);
+        out.push(self.total as f64);
+        out.push(pairs.len() as f64);
+        for (i, c) in pairs {
+            out.push(i as f64);
+            out.push(c as f64);
+        }
+        out
+    }
+
+    fn apply_delta(&mut self, payload: &[f64]) {
+        if payload.len() < 3 {
+            return;
+        }
+        let m = payload[2] as usize;
+        if payload.len() != 3 + 2 * m {
+            return;
+        }
+        // keep our own k (bind-time config); adopt the payload's counters
+        self.counters.clear();
+        self.total = payload[1] as u64;
+        for pair in payload[3..].chunks_exact(2) {
+            self.counters.insert(pair[0] as u64, pair[1] as u64);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.counters.clear();
+        self.total = 0;
     }
 }
 
@@ -213,5 +334,50 @@ mod tests {
             mg.add(i); // all-distinct adversarial stream
         }
         assert!(mg.heavy_hitters().len() <= 8);
+    }
+
+    #[test]
+    fn countmin_merge_equals_union_stream() {
+        let (mut a, mut b, mut all) =
+            (CountMinSketch::new(64, 4), CountMinSketch::new(64, 4), CountMinSketch::new(64, 4));
+        for i in 0..2000u64 {
+            let x = i % 37;
+            if i % 2 == 0 {
+                a.add(x, 1);
+            } else {
+                b.add(x, 1);
+            }
+            all.add(x, 1);
+        }
+        a.merge(&b);
+        assert_eq!(a.total(), all.total());
+        for x in 0..37u64 {
+            assert_eq!(a.estimate(x), all.estimate(x));
+        }
+        // delta round trip
+        let mut c = CountMinSketch::new(1, 1);
+        c.apply_delta(&a.delta());
+        assert_eq!(c.delta(), a.delta());
+    }
+
+    #[test]
+    fn misra_gries_merge_keeps_heavy_hitters_bounded() {
+        let (mut a, mut b) = (MisraGries::new(4), MisraGries::new(4));
+        for i in 0..6000u64 {
+            // item 3 is heavy in both halves
+            let x = if i % 2 == 0 { 3 } else { 10 + i % 23 };
+            if i < 3000 {
+                a.add(x);
+            } else {
+                b.add(x);
+            }
+        }
+        let n = a.total() + b.total();
+        a.merge(&b);
+        assert_eq!(a.total(), n);
+        assert!(a.heavy_hitters().len() <= 4);
+        assert!(a.contains(3), "majority item must survive the merge");
+        let est = a.estimate(3);
+        assert!(est <= 3000 && est + n / 4 >= 3000, "est={est}");
     }
 }

@@ -1,0 +1,148 @@
+//! Delta-sync aggregator — the topology stage that makes `p > 1`
+//! pipeline shards converge to shared statistics.
+//!
+//! Protocol (one aggregator instance, `p` [`super::PipelineProcessor`]
+//! shards):
+//!
+//! 1. every `interval` locally-processed instances, a shard takes each
+//!    stateful stage's *pending increment* (`Transform::stats_delta`, the
+//!    state accumulated since the shard's last emission) and emits it as
+//!    an `Event::StatsDelta` on a **`Key`-grouped** stream (keyed by
+//!    stage index);
+//! 2. the aggregator folds the increment into its master state
+//!    (`Transform::stats_merge`) — each update is merged **exactly
+//!    once**, so the master equals the single-shard state up to merge
+//!    reordering (commutativity/associativity, see
+//!    [`super::merge::MergeableState`]);
+//! 3. the aggregator broadcasts the merged snapshot
+//!    (`Transform::stats_snapshot`) as an `Event::StatsGlobal` on an
+//!    **`All`-grouped** stream;
+//! 4. each shard replaces its transform-side view with the broadcast
+//!    state merged with its own still-pending increment
+//!    (`Transform::stats_apply`) — nothing is lost or double-counted.
+//!
+//! Both event kinds are control-plane (`Event::is_control`), so the
+//! feedback loop can never deadlock against data-path backpressure in
+//! the threaded engine — the same reasoning as the VHT `compute`/
+//! `local-result` loop.
+
+use std::sync::Arc;
+
+use crate::core::Schema;
+use crate::topology::{Ctx, Event, Processor, StreamId};
+
+use super::pipeline::Pipeline;
+use super::Transform;
+
+/// Aggregator node: merges shard deltas into a master pipeline state and
+/// broadcasts merged snapshots.
+pub struct StatsSyncProcessor {
+    /// Master state container — a pipeline built by the same factory as
+    /// the shards (never sees instances, only merged deltas).
+    master: Pipeline,
+    /// Broadcast (`All`-grouped) stream back to the shards.
+    out: StreamId,
+    /// Deltas merged so far (diagnostics).
+    deltas_merged: u64,
+}
+
+impl StatsSyncProcessor {
+    /// Bind `pipeline` (unbound, same factory as the shards) to the
+    /// source schema and broadcast merged state on `out`.
+    pub fn new(mut pipeline: Pipeline, input: &Schema, out: StreamId) -> Self {
+        pipeline.bind(input);
+        StatsSyncProcessor { master: pipeline, out, deltas_merged: 0 }
+    }
+
+    pub fn deltas_merged(&self) -> u64 {
+        self.deltas_merged
+    }
+
+    /// Master-state snapshot of `stage` (diagnostics/tests).
+    pub fn snapshot(&self, stage: usize) -> Option<Vec<f64>> {
+        self.master.stats_snapshot(stage)
+    }
+}
+
+impl Processor for StatsSyncProcessor {
+    fn process(&mut self, event: Event, ctx: &mut Ctx) {
+        if let Event::StatsDelta { stage, payload } = event {
+            self.master.stats_merge(stage as usize, &payload);
+            self.deltas_merged += 1;
+            if let Some(snap) = self.master.stats_snapshot(stage as usize) {
+                ctx.emit_any(self.out, Event::StatsGlobal { stage, payload: Arc::new(snap) });
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        Transform::mem_bytes(&self.master)
+    }
+
+    fn name(&self) -> &'static str {
+        "stats-sync"
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::instance::{Instance, Label};
+    use crate::preprocess::{MergeableState, StandardScaler};
+
+    /// Drive the shard ⇄ aggregator handshake by hand (no engine): four
+    /// shards each see a disjoint quarter of the stream; after sync +
+    /// apply, every shard's view moments equal the single-pass moments.
+    #[test]
+    fn manual_protocol_round_converges_shards() {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut shards: Vec<StandardScaler> = (0..4)
+            .map(|_| {
+                let mut s = StandardScaler::new();
+                s.bind(&schema);
+                s
+            })
+            .collect();
+        let mut reference = StandardScaler::new();
+        reference.bind(&schema);
+
+        let mut rng = crate::common::Rng::new(17);
+        for i in 0..4000 {
+            let x = (rng.gaussian() * 3.0 + 1.0) as f32;
+            shards[i % 4].transform(Instance::dense(vec![x], Label::None)).unwrap();
+            reference.transform(Instance::dense(vec![x], Label::None)).unwrap();
+        }
+
+        let mut sync = StatsSyncProcessor::new(
+            crate::preprocess::Pipeline::new().then(StandardScaler::new()),
+            &schema,
+            StreamId(0),
+        );
+        let mut ctx = Ctx::new(0, 1);
+        for shard in shards.iter_mut() {
+            let delta = Transform::stats_delta(shard).unwrap();
+            sync.process(
+                Event::StatsDelta { stage: 0, payload: Arc::new(delta) },
+                &mut ctx,
+            );
+        }
+        assert_eq!(sync.deltas_merged(), 4);
+        let global = sync.snapshot(0).unwrap();
+        for shard in shards.iter_mut() {
+            shard.stats_apply(&global);
+        }
+
+        let want = reference.delta();
+        for shard in &shards {
+            let got = shard.delta();
+            assert!(
+                crate::preprocess::merge::payloads_close(&got, &want, 1e-9),
+                "shard view {got:?} != single-pass {want:?}"
+            );
+        }
+    }
+}

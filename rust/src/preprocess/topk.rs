@@ -8,16 +8,26 @@ use crate::common::MemSize;
 use crate::core::instance::Values;
 use crate::core::{Instance, Schema};
 
+use super::merge::MergeableState;
 use super::sketch::{CountMinSketch, MisraGries};
 use super::Transform;
 
 /// Keep the top-`k` attributes by stream frequency; everything else is
 /// dropped (sparse) or zeroed (dense). Schema is unchanged — the surviving
 /// attributes keep their indices.
+///
+/// Both backing sketches are mergeable, so under `p > 1` shards the
+/// delta-sync protocol ([`super::sync`]) converges every shard to the
+/// same keep-set: pending (since last emission) sketch increments ship to
+/// the aggregator and the broadcast global sketches replace the local
+/// view (the keep-set is recomputed on every broadcast).
 pub struct TopKFilter {
     k: usize,
     mg: MisraGries,
     cm: CountMinSketch,
+    /// Increments since the last `stats_delta` emission.
+    pending_mg: MisraGries,
+    pending_cm: CountMinSketch,
     /// Recompute the keep-set every `refresh` instances.
     refresh: u64,
     seen: u64,
@@ -35,6 +45,8 @@ impl TopKFilter {
             // frequency for a stable keep-set.
             mg: MisraGries::new(4 * k),
             cm: CountMinSketch::new((16 * k).next_power_of_two(), 4),
+            pending_mg: MisraGries::new(4 * k),
+            pending_cm: CountMinSketch::new((16 * k).next_power_of_two(), 4),
             refresh: 512,
             seen: 0,
             keep: Vec::new(),
@@ -85,6 +97,8 @@ impl Transform for TopKFilter {
                     if x != 0.0 {
                         self.mg.add(j as u64);
                         self.cm.add(j as u64, 1);
+                        self.pending_mg.add(j as u64);
+                        self.pending_cm.add(j as u64, 1);
                     }
                 }
             }
@@ -93,6 +107,8 @@ impl Transform for TopKFilter {
                     if x != 0.0 {
                         self.mg.add(j as u64);
                         self.cm.add(j as u64, 1);
+                        self.pending_mg.add(j as u64);
+                        self.pending_cm.add(j as u64, 1);
                     }
                 }
             }
@@ -124,6 +140,51 @@ impl Transform for TopKFilter {
         Some(inst)
     }
 
+    fn stats_delta(&mut self) -> Option<Vec<f64>> {
+        let mg = self.pending_mg.delta();
+        let cm = self.pending_cm.delta();
+        let mut out = Vec::with_capacity(1 + mg.len() + cm.len());
+        out.push(mg.len() as f64);
+        out.extend(mg);
+        out.extend(cm);
+        self.pending_mg.reset();
+        self.pending_cm.reset();
+        Some(out)
+    }
+
+    fn stats_merge(&mut self, payload: &[f64]) {
+        let Some((mg, cm)) = split_sketch_payload(payload) else { return };
+        let mut inc_mg = MisraGries::new(self.mg.k());
+        inc_mg.apply_delta(mg);
+        self.mg.merge(&inc_mg);
+        let mut inc_cm = CountMinSketch::new(self.cm.width(), self.cm.depth());
+        inc_cm.apply_delta(cm);
+        self.cm.merge(&inc_cm);
+    }
+
+    fn stats_snapshot(&self) -> Option<Vec<f64>> {
+        let mg = self.mg.delta();
+        let cm = self.cm.delta();
+        let mut out = Vec::with_capacity(1 + mg.len() + cm.len());
+        out.push(mg.len() as f64);
+        out.extend(mg);
+        out.extend(cm);
+        Some(out)
+    }
+
+    fn stats_apply(&mut self, payload: &[f64]) {
+        let Some((mg, cm)) = split_sketch_payload(payload) else { return };
+        let mut global_mg = MisraGries::new(self.mg.k());
+        global_mg.apply_delta(mg);
+        global_mg.merge(&self.pending_mg);
+        self.mg = global_mg;
+        let mut global_cm = CountMinSketch::new(self.cm.width(), self.cm.depth());
+        global_cm.apply_delta(cm);
+        global_cm.merge(&self.pending_cm);
+        self.cm = global_cm;
+        self.recompute_keep();
+    }
+
     fn name(&self) -> &'static str {
         "topk-filter"
     }
@@ -132,8 +193,19 @@ impl Transform for TopKFilter {
         std::mem::size_of::<Self>()
             + self.mg.mem_bytes()
             + self.cm.mem_bytes()
+            + self.pending_mg.mem_bytes()
+            + self.pending_cm.mem_bytes()
             + self.keep.capacity() * 4
     }
+}
+
+/// Split a `[mg_len, mg..., cm...]` combined payload.
+fn split_sketch_payload(payload: &[f64]) -> Option<(&[f64], &[f64])> {
+    let mg_len = *payload.first()? as usize;
+    if payload.len() < 1 + mg_len {
+        return None;
+    }
+    Some((&payload[1..1 + mg_len], &payload[1 + mg_len..]))
 }
 
 #[cfg(test)]

@@ -30,6 +30,15 @@ pub enum Event {
     /// Engine-injected shutdown marker (flushes buffered state).
     Shutdown,
 
+    // ------------------------------------------- preprocess delta-sync
+    /// Mergeable-state increment of pipeline stage `stage` from one
+    /// shard: `PipelineProcessor` → `StatsSyncProcessor`, key-grouped by
+    /// stage id (see `preprocess::sync`).
+    StatsDelta { stage: u32, payload: Arc<Vec<f64>> },
+    /// Merged global state of stage `stage` broadcast back:
+    /// `StatsSyncProcessor` → all pipeline shards (All grouping).
+    StatsGlobal { stage: u32, payload: Arc<Vec<f64>> },
+
     // ------------------------------------------------- VHT (Table 2)
     /// One attribute of a training instance: MA → LS, key-grouped by
     /// (leaf id, attribute id).
@@ -96,6 +105,9 @@ impl Event {
             Event::Instance { inst, .. } => 8 + inst.wire_bytes(),
             Event::Prediction { .. } => 8 + 16 + 9,
             Event::Shutdown => 1,
+            Event::StatsDelta { payload, .. } | Event::StatsGlobal { payload, .. } => {
+                4 + 8 * payload.len()
+            }
             Event::Attribute { .. } => 8 + 4 + 4 + 4 + 4,
             Event::AttributeBatch { attrs, .. } => 8 + 4 + 4 + 5 * attrs.len(),
             Event::Compute { class_counts, .. } => 8 + 4 + 8 + 4 * class_counts.len(),
@@ -129,6 +141,8 @@ impl Event {
                 | Event::RuleHead { .. }
                 | Event::RuleRemoved { .. }
                 | Event::CentroidSnapshot { .. }
+                | Event::StatsDelta { .. }
+                | Event::StatsGlobal { .. }
                 | Event::Shutdown
         )
     }

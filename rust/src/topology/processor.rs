@@ -58,6 +58,12 @@ pub trait Processor: Send {
     fn name(&self) -> &'static str {
         "processor"
     }
+
+    /// Concrete-type escape hatch for state inspection (harness/tests):
+    /// implementors return `Some(self)` to allow `downcast_ref`.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
 }
 
 /// Blanket helper so `Box<dyn Processor>` also implements `Processor`.
@@ -76,5 +82,9 @@ impl Processor for Box<dyn Processor> {
 
     fn name(&self) -> &'static str {
         (**self).name()
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        (**self).as_any()
     }
 }

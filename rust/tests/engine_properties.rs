@@ -135,6 +135,74 @@ fn prop_threaded_conservation() {
     }
 }
 
+/// Simtime engine, `Grouping::All` with p > 1: every downstream instance
+/// receives every event (n·p deliveries), the broadcast shows up in the
+/// stream metrics, and the priced result stays sane. (Before this test
+/// only the local/threaded paths exercised broadcasts.)
+#[test]
+fn prop_simtime_broadcast_all_with_parallelism() {
+    for p in [2usize, 4, 7] {
+        let mut b = TopologyBuilder::new("bcast");
+        let head = b.add_processor("head", 1, |_| {
+            Box::new(Fwd { out: Some(samoa::topology::StreamId(1)), seen: 0 })
+        });
+        let fan = b.add_processor("fan", p, |_| Box::new(Fwd { out: None, seen: 0 }));
+        let entry = b.stream("in", None, head, Grouping::Shuffle);
+        b.stream("head->fan", Some(head), fan, Grouping::All);
+        let topo = b.build();
+
+        let n = 600u64;
+        let mut per_instance = Vec::new();
+        let r = SimTimeEngine::default().run(&topo, entry, (0..n).map(inst_event), |inst| {
+            per_instance = inst[1].iter().map(|q| q.mem_bytes() as u64).collect();
+        });
+        assert_eq!(r.metrics.source_instances, n, "p={p}");
+        assert_eq!(r.metrics.streams[1].events, n * p as u64, "p={p}: broadcast fan-out");
+        assert_eq!(per_instance.len(), p);
+        for (i, &c) in per_instance.iter().enumerate() {
+            assert_eq!(c, n, "p={p}: broadcast instance {i} missed events");
+        }
+        assert!(r.throughput() > 0.0);
+        assert!(r.makespan_ns >= r.source_ns);
+    }
+}
+
+/// Simtime engine, `Grouping::Key` with p > 1: conservation (no event
+/// lost or duplicated), determinism (identical runs → identical stream
+/// metrics and per-instance distribution), and genuine spreading across
+/// the parallel instances.
+#[test]
+fn prop_simtime_key_routing_with_parallelism() {
+    for p in [2usize, 4, 8] {
+        let run = || {
+            let mut b = TopologyBuilder::new("key");
+            let head = b.add_processor("head", 1, |_| {
+                Box::new(Fwd { out: Some(samoa::topology::StreamId(1)), seen: 0 })
+            });
+            let workers = b.add_processor("workers", p, |_| Box::new(Fwd { out: None, seen: 0 }));
+            let entry = b.stream("in", None, head, Grouping::Shuffle);
+            b.stream("head->workers", Some(head), workers, Grouping::Key);
+            let topo = b.build();
+            let n = 800u64;
+            let mut per_instance = Vec::new();
+            let r = SimTimeEngine::default().run(&topo, entry, (0..n).map(inst_event), |inst| {
+                per_instance = inst[1].iter().map(|q| q.mem_bytes() as u64).collect();
+            });
+            (r.metrics.streams[1].events, r.metrics.streams[1].bytes, per_instance)
+        };
+        let (events, bytes, dist) = run();
+        assert_eq!(events, 800, "p={p}: key routing lost/duplicated events");
+        assert_eq!(dist.iter().sum::<u64>(), 800, "p={p}");
+        // keys 0..n hash-spread: every instance must receive work
+        assert!(
+            dist.iter().all(|&c| c > 0),
+            "p={p}: key grouping starved an instance ({dist:?})"
+        );
+        // determinism: the same run again routes identically
+        assert_eq!((events, bytes, dist), run(), "p={p}: simtime key routing nondeterministic");
+    }
+}
+
 /// Simtime: throughput is monotone non-decreasing in parallelism for an
 /// embarrassingly parallel stage (up to measurement noise).
 #[test]

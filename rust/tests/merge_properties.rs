@@ -1,0 +1,406 @@
+//! Property tests for the merge laws every `MergeableState` impl must
+//! satisfy (hand-rolled seed loops, like `engine_properties.rs` — no
+//! proptest crate offline). The delta-sync protocol
+//! (`preprocess::sync`) relies on exactly these laws: the aggregator
+//! folds shard increments in arbitrary order, so
+//!
+//! * `merge` must be **commutative** (exactly, up to f64 rounding),
+//! * `merge` must be **associative** — exactly for exact summaries
+//!   (moments, min/max, CountMin, equal-range histograms), within the
+//!   summary's own approximation bound for lossy ones (Misra-Gries,
+//!   re-binned histograms),
+//! * the `reset` state must be the **identity**,
+//! * `apply_delta(delta())` must **round-trip**.
+//!
+//! Plus the headline law: merged Welford moments equal the single-pass
+//! moments of the concatenated stream.
+
+use samoa::common::Rng;
+use samoa::core::instance::{Instance, Label};
+use samoa::core::Schema;
+use samoa::preprocess::merge::payloads_close;
+use samoa::preprocess::{
+    CountMinSketch, Discretizer, MergeableState, MinMaxScaler, MisraGries, StandardScaler,
+    Transform,
+};
+
+const DIM: usize = 3;
+
+fn schema() -> Schema {
+    Schema::classification("t", Schema::all_numeric(DIM), 2)
+}
+
+fn random_instance(rng: &mut Rng) -> Instance {
+    let vals: Vec<f32> = (0..DIM).map(|_| (rng.gaussian() * 5.0 + 1.0) as f32).collect();
+    Instance::dense(vals, Label::None)
+}
+
+/// Deterministic scaler over `n` seeded instances (rebuildable copies —
+/// the transforms are not `Clone`, so "copies" are re-fed streams).
+fn scaler(seed: u64, n: usize) -> StandardScaler {
+    let mut s = StandardScaler::new();
+    s.bind(&schema());
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        s.transform(random_instance(&mut rng)).unwrap();
+    }
+    s
+}
+
+fn minmax(seed: u64, n: usize) -> MinMaxScaler {
+    let mut s = MinMaxScaler::new();
+    s.bind(&schema());
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        s.transform(random_instance(&mut rng)).unwrap();
+    }
+    s
+}
+
+/// Discretizer whose warmup prefix comes from a shared seed, so every
+/// instance built with the same `warm_seed` freezes on the *same* range
+/// (the regime where histogram merge is exact); `seed` then drives the
+/// post-freeze values.
+fn discretizer(warm_seed: u64, seed: u64, n: usize) -> Discretizer {
+    let mut d = Discretizer::with_resolution(4, 32, 64);
+    d.bind(&schema());
+    let mut wrng = Rng::new(warm_seed);
+    for _ in 0..32 {
+        d.transform(random_instance(&mut wrng)).unwrap();
+    }
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        d.transform(random_instance(&mut rng)).unwrap();
+    }
+    d
+}
+
+fn countmin(seed: u64, n: usize) -> CountMinSketch {
+    let mut cm = CountMinSketch::new(128, 4);
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        cm.add(rng.below(200) as u64, 1 + rng.below(3) as u64);
+    }
+    cm
+}
+
+fn misra_gries(seed: u64, n: usize) -> (MisraGries, std::collections::HashMap<u64, u64>) {
+    let mut mg = MisraGries::new(12);
+    let mut truth = std::collections::HashMap::new();
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        // skewed stream: a few heavy items over a noise tail
+        let x = if rng.below(2) == 0 { rng.below(4) as u64 } else { 10 + rng.below(400) as u64 };
+        mg.add(x);
+        *truth.entry(x).or_insert(0u64) += 1;
+    }
+    (mg, truth)
+}
+
+// --------------------------------------------------------- commutativity
+
+#[test]
+fn prop_merge_commutative_scalers_and_sketches() {
+    for seed in 0..8u64 {
+        let (sa, sb) = (100 + seed, 200 + seed);
+        let (na, nb) = (500 + 40 * seed as usize, 300 + 25 * seed as usize);
+
+        let mut ab = scaler(sa, na);
+        ab.merge(&scaler(sb, nb));
+        let mut ba = scaler(sb, nb);
+        ba.merge(&scaler(sa, na));
+        assert!(
+            payloads_close(&ab.delta(), &ba.delta(), 1e-9),
+            "seed {seed}: StandardScaler merge not commutative"
+        );
+
+        let mut ab = minmax(sa, na);
+        ab.merge(&minmax(sb, nb));
+        let mut ba = minmax(sb, nb);
+        ba.merge(&minmax(sa, na));
+        assert_eq!(ab.delta(), ba.delta(), "seed {seed}: MinMaxScaler merge not commutative");
+
+        let mut ab = discretizer(7, sa, na);
+        ab.merge(&discretizer(7, sb, nb));
+        let mut ba = discretizer(7, sb, nb);
+        ba.merge(&discretizer(7, sa, na));
+        assert!(
+            payloads_close(&ab.delta(), &ba.delta(), 1e-9),
+            "seed {seed}: Discretizer merge not commutative (equal ranges)"
+        );
+
+        let mut ab = countmin(sa, na);
+        ab.merge(&countmin(sb, nb));
+        let mut ba = countmin(sb, nb);
+        ba.merge(&countmin(sa, na));
+        assert_eq!(ab.delta(), ba.delta(), "seed {seed}: CountMin merge not commutative");
+
+        let (mut ab, _) = misra_gries(sa, na);
+        ab.merge(&misra_gries(sb, nb).0);
+        let (mut ba, _) = misra_gries(sb, nb);
+        ba.merge(&misra_gries(sa, na).0);
+        assert_eq!(ab.delta(), ba.delta(), "seed {seed}: MisraGries merge not commutative");
+    }
+}
+
+#[test]
+fn prop_merge_commutative_discretizer_disjoint_ranges() {
+    // different warmup seeds ⇒ different frozen ranges ⇒ the re-binning
+    // path; counter mass still lands identically in either merge order
+    for seed in 0..6u64 {
+        let (na, nb) = (200 + 10 * seed as usize, 150 + 5 * seed as usize);
+        let mut ab = discretizer(1 + seed, 100 + seed, na);
+        ab.merge(&discretizer(50 + seed, 200 + seed, nb));
+        let mut ba = discretizer(50 + seed, 200 + seed, nb);
+        ba.merge(&discretizer(1 + seed, 100 + seed, na));
+        assert!(
+            payloads_close(&ab.delta(), &ba.delta(), 1e-9),
+            "seed {seed}: Discretizer re-binning merge not commutative"
+        );
+    }
+}
+
+// --------------------------------------------------------- associativity
+
+#[test]
+fn prop_merge_associative_exact_summaries() {
+    for seed in 0..8u64 {
+        let seeds = [300 + seed, 400 + seed, 500 + seed];
+        let ns = [400usize, 250, 150];
+
+        // (A ⊕ B) ⊕ C
+        let mut left = scaler(seeds[0], ns[0]);
+        left.merge(&scaler(seeds[1], ns[1]));
+        left.merge(&scaler(seeds[2], ns[2]));
+        // A ⊕ (B ⊕ C)
+        let mut bc = scaler(seeds[1], ns[1]);
+        bc.merge(&scaler(seeds[2], ns[2]));
+        let mut right = scaler(seeds[0], ns[0]);
+        right.merge(&bc);
+        assert!(
+            payloads_close(&left.delta(), &right.delta(), 1e-6),
+            "seed {seed}: StandardScaler merge not associative"
+        );
+
+        let mut left = minmax(seeds[0], ns[0]);
+        left.merge(&minmax(seeds[1], ns[1]));
+        left.merge(&minmax(seeds[2], ns[2]));
+        let mut bc = minmax(seeds[1], ns[1]);
+        bc.merge(&minmax(seeds[2], ns[2]));
+        let mut right = minmax(seeds[0], ns[0]);
+        right.merge(&bc);
+        assert_eq!(left.delta(), right.delta(), "seed {seed}: MinMaxScaler not associative");
+
+        let mut left = countmin(seeds[0], ns[0]);
+        left.merge(&countmin(seeds[1], ns[1]));
+        left.merge(&countmin(seeds[2], ns[2]));
+        let mut bc = countmin(seeds[1], ns[1]);
+        bc.merge(&countmin(seeds[2], ns[2]));
+        let mut right = countmin(seeds[0], ns[0]);
+        right.merge(&bc);
+        assert_eq!(left.delta(), right.delta(), "seed {seed}: CountMin not associative");
+
+        // equal-range histograms: pointwise adds, exactly associative
+        let mut left = discretizer(9, seeds[0], ns[0]);
+        left.merge(&discretizer(9, seeds[1], ns[1]));
+        left.merge(&discretizer(9, seeds[2], ns[2]));
+        let mut bc = discretizer(9, seeds[1], ns[1]);
+        bc.merge(&discretizer(9, seeds[2], ns[2]));
+        let mut right = discretizer(9, seeds[0], ns[0]);
+        right.merge(&bc);
+        assert!(
+            payloads_close(&left.delta(), &right.delta(), 1e-9),
+            "seed {seed}: equal-range Discretizer merge not associative"
+        );
+    }
+}
+
+#[test]
+fn prop_merge_associative_discretizer_within_rank_tolerance() {
+    // disjoint ranges: re-binning is lossy, so grouping may differ — but
+    // only by mass shifted within ~one fine cell; rank queries from the
+    // two merge trees must stay close
+    for seed in 0..6u64 {
+        let mk = |i: u64, n: usize| discretizer(20 * (i + 1) + seed, 600 + i + seed, n);
+        let mut left = mk(0, 300);
+        left.merge(&mk(1, 200));
+        left.merge(&mk(2, 250));
+        let mut bc = mk(1, 200);
+        bc.merge(&mk(2, 250));
+        let mut right = mk(0, 300);
+        right.merge(&bc);
+        for probe in -8..=8 {
+            let x = probe as f64 * 2.0;
+            for j in 0..DIM {
+                let (a, b) = (left.rank(j, x), right.rank(j, x));
+                assert!(
+                    (a - b).abs() < 0.1,
+                    "seed {seed}: rank({j}, {x}) {a} vs {b} diverged across merge trees"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_merge_associative_misra_gries_within_error_bound() {
+    // counter values may differ by grouping, but every merge tree must
+    // preserve the MG guarantee: count - N/k <= estimate <= count
+    for seed in 0..6u64 {
+        let parts: Vec<(MisraGries, std::collections::HashMap<u64, u64>)> =
+            (0..3).map(|i| misra_gries(700 + 10 * i + seed, 3000 + 500 * i as usize)).collect();
+        let mut truth = std::collections::HashMap::new();
+        for (_, t) in &parts {
+            for (&x, &c) in t {
+                *truth.entry(x).or_insert(0u64) += c;
+            }
+        }
+        let n: u64 = truth.values().sum();
+        let k = parts[0].0.k() as u64;
+
+        let rebuild = |i: usize| {
+            let (mg, _) = misra_gries(700 + 10 * i as u64 + seed, 3000 + 500 * i);
+            mg
+        };
+        let mut left = rebuild(0);
+        left.merge(&rebuild(1));
+        left.merge(&rebuild(2));
+        let mut bc = rebuild(1);
+        bc.merge(&rebuild(2));
+        let mut right = rebuild(0);
+        right.merge(&bc);
+
+        for tree in [&left, &right] {
+            assert_eq!(tree.total(), n);
+            for (&x, &c) in &truth {
+                let est = tree.estimate(x);
+                assert!(est <= c, "seed {seed}: item {x} overestimated ({est} > {c})");
+                assert!(
+                    est + n / k >= c,
+                    "seed {seed}: item {x} est {est} below {c} - N/k"
+                );
+            }
+        }
+        // and the two trees' estimates agree within the composed bound
+        for &x in truth.keys() {
+            let (a, b) = (left.estimate(x), right.estimate(x));
+            assert!(
+                a.abs_diff(b) <= n / k,
+                "seed {seed}: item {x} estimates {a} vs {b} differ by more than N/k"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------- identity + round trip
+
+#[test]
+fn prop_reset_state_is_merge_identity() {
+    let mut s = scaler(42, 500);
+    let before = s.delta();
+    let mut empty = StandardScaler::new();
+    empty.bind(&schema());
+    s.merge(&empty);
+    assert_eq!(s.delta(), before, "merging an empty scaler changed state");
+
+    let mut m = minmax(42, 500);
+    let before = m.delta();
+    let mut empty = MinMaxScaler::new();
+    empty.bind(&schema());
+    m.merge(&empty);
+    assert_eq!(m.delta(), before);
+
+    let mut d = discretizer(3, 42, 300);
+    let before = d.delta();
+    let mut empty = Discretizer::with_resolution(4, 32, 64);
+    empty.bind(&schema());
+    d.merge(&empty);
+    assert_eq!(d.delta(), before);
+
+    let mut cm = countmin(42, 500);
+    let before = cm.delta();
+    cm.merge(&CountMinSketch::new(128, 4));
+    assert_eq!(cm.delta(), before);
+
+    let (mut mg, _) = misra_gries(42, 500);
+    let before = mg.delta();
+    mg.merge(&MisraGries::new(12));
+    assert_eq!(mg.delta(), before);
+}
+
+#[test]
+fn prop_delta_apply_round_trips() {
+    for seed in 0..5u64 {
+        let s = scaler(seed, 400);
+        let mut t = StandardScaler::new();
+        t.bind(&schema());
+        t.apply_delta(&s.delta());
+        assert_eq!(t.delta(), s.delta(), "seed {seed}: scaler round trip");
+
+        let m = minmax(seed, 400);
+        let mut t = MinMaxScaler::new();
+        t.bind(&schema());
+        t.apply_delta(&m.delta());
+        assert_eq!(t.delta(), m.delta(), "seed {seed}: minmax round trip");
+
+        let d = discretizer(5, seed, 300);
+        let mut t = Discretizer::with_resolution(4, 32, 64);
+        t.bind(&schema());
+        t.apply_delta(&d.delta());
+        assert_eq!(t.delta(), d.delta(), "seed {seed}: discretizer round trip");
+
+        let cm = countmin(seed, 400);
+        let mut t = CountMinSketch::new(1, 1);
+        t.apply_delta(&cm.delta());
+        assert_eq!(t.delta(), cm.delta(), "seed {seed}: countmin round trip");
+
+        let (mg, _) = misra_gries(seed, 400);
+        let mut t = MisraGries::new(12);
+        t.apply_delta(&mg.delta());
+        assert_eq!(t.delta(), mg.delta(), "seed {seed}: misra-gries round trip");
+    }
+}
+
+// ------------------------------------------- the headline Welford law
+
+#[test]
+fn prop_merged_welford_equals_single_pass_on_concatenated_stream() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(900 + seed);
+        let shards = 2 + (seed as usize % 4); // 2..=5 shards
+        let n = 1000 + 100 * seed as usize;
+
+        let mut parts: Vec<StandardScaler> = (0..shards)
+            .map(|_| {
+                let mut s = StandardScaler::new();
+                s.bind(&schema());
+                s
+            })
+            .collect();
+        let mut single = StandardScaler::new();
+        single.bind(&schema());
+
+        for i in 0..n {
+            let inst = random_instance(&mut rng);
+            parts[i % shards].transform(inst.clone()).unwrap();
+            single.transform(inst).unwrap();
+        }
+
+        let mut merged = parts.remove(0);
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert!(
+            payloads_close(&merged.delta(), &single.delta(), 1e-7),
+            "seed {seed}: merged moments != single-pass moments over the concatenated stream"
+        );
+        // and the derived statistics agree
+        for j in 0..DIM {
+            assert!((merged.mean(j) - single.mean(j)).abs() < 1e-9, "seed {seed} mean {j}");
+            assert!(
+                (merged.moments().sd(j) - single.moments().sd(j)).abs() < 1e-9,
+                "seed {seed} sd {j}"
+            );
+        }
+    }
+}

@@ -102,6 +102,114 @@ fn prop_misra_gries_recovers_heavy_hitters() {
     }
 }
 
+/// Reference reimplementation of the pre-Fenwick `Discretizer` layer-1
+/// summary (exact buffer → equal-width freeze with 10% pad → clamped
+/// cells → linear-scan rank with in-cell interpolation), used to pin bin
+/// assignments across the prefix-sum caching rewrite.
+struct ReferenceDiscretizer {
+    k: u32,
+    warmup: usize,
+    fine: usize,
+    buffer: Vec<f32>,
+    counts: Vec<f64>,
+    lo: f64,
+    hi: f64,
+    n: f64,
+}
+
+impl ReferenceDiscretizer {
+    fn new(k: u32, warmup: usize, fine: usize) -> Self {
+        ReferenceDiscretizer {
+            k,
+            warmup,
+            fine,
+            buffer: Vec::new(),
+            counts: Vec::new(),
+            lo: 0.0,
+            hi: 0.0,
+            n: 0.0,
+        }
+    }
+
+    fn cell(&self, x: f64) -> usize {
+        let fine = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        ((t * fine as f64) as isize).clamp(0, fine as isize - 1) as usize
+    }
+
+    fn add_then_bin(&mut self, x: f64) -> u32 {
+        self.n += 1.0;
+        if self.counts.is_empty() {
+            self.buffer.push(x as f32);
+            if self.buffer.len() >= self.warmup {
+                let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+                for &v in &self.buffer {
+                    lo = lo.min(v as f64);
+                    hi = hi.max(v as f64);
+                }
+                let pad = (hi - lo).max(1e-9) * 0.1;
+                self.lo = lo - pad;
+                self.hi = hi + pad;
+                self.counts = vec![0.0; self.fine];
+                let buffer = std::mem::take(&mut self.buffer);
+                for &v in &buffer {
+                    let c = self.cell(v as f64);
+                    self.counts[c] += 1.0;
+                }
+            }
+        } else {
+            let c = self.cell(x);
+            self.counts[c] += 1.0;
+        }
+        let rank = if self.counts.is_empty() {
+            let below = self.buffer.iter().filter(|&&v| (v as f64) < x).count();
+            below as f64 / self.buffer.len() as f64
+        } else {
+            let c = self.cell(x);
+            let below: f64 = self.counts[..c].iter().sum();
+            let cell_lo = self.lo + (self.hi - self.lo) * c as f64 / self.counts.len() as f64;
+            let cell_w = (self.hi - self.lo) / self.counts.len() as f64;
+            let frac = ((x - cell_lo) / cell_w).clamp(0.0, 1.0);
+            (below + frac * self.counts[c]) / self.n
+        };
+        ((rank * self.k as f64) as u32).min(self.k - 1)
+    }
+}
+
+/// Regression pin: the Fenwick-backed `Discretizer` must emit bit-
+/// identical bin assignments to the pre-rewrite linear-scan algorithm on
+/// seeded streams (several k / resolution / distribution combinations).
+#[test]
+fn prop_discretizer_bins_pinned_across_prefix_sum_rewrite() {
+    use samoa::core::instance::{Instance, Label};
+    use samoa::core::Schema;
+    use samoa::preprocess::{Discretizer, Transform};
+
+    for (seed, k, warmup, fine) in
+        [(1u64, 4u32, 32usize, 64usize), (2, 8, 256, 128), (3, 6, 64, 96)]
+    {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut d = Discretizer::with_resolution(k, warmup, fine);
+        d.bind(&schema);
+        let mut reference = ReferenceDiscretizer::new(k, warmup, fine);
+        let mut rng = Rng::new(seed);
+        for i in 0..6000 {
+            let x = match i % 3 {
+                0 => rng.gaussian() * 3.0,
+                1 => rng.f64() * 20.0 - 5.0,
+                _ => rng.gaussian() * 0.5 + 8.0,
+            };
+            let out = d.transform(Instance::dense(vec![x as f32], Label::None)).unwrap();
+            let want = reference.add_then_bin(x as f32 as f64);
+            assert_eq!(
+                out.value(0) as u32,
+                want,
+                "seed {seed}, instance {i}: bin diverged from the pre-rewrite algorithm"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_misra_gries_ranking_matches_truth_on_skewed_stream() {
     // on a heavily skewed stream the top-3 by MG estimate are the true

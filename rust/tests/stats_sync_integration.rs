@@ -1,0 +1,215 @@
+//! Integration tests for the delta-sync protocol: parallel pipeline
+//! shards with stats-sync enabled must converge to shared statistics, so
+//! prequential results at `p = 4` match the `p = 1` run within a tight
+//! tolerance — for a classifier head (Hoeffding tree) *and* a regressor
+//! head (AMRules) — on both the local and threaded engines. The local
+//! engine is additionally bit-deterministic, and the shards' scaler
+//! views must carry the *global* observation count, not their local
+//! quarter.
+
+use std::sync::Arc;
+
+use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+use samoa::core::model::{Classifier, Regressor};
+use samoa::core::Schema;
+use samoa::engine::{LocalEngine, ThreadedEngine};
+use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use samoa::preprocess::processor::{
+    build_prequential_topology_head, LearnerHead, PipelineProcessor,
+};
+use samoa::preprocess::{Discretizer, Pipeline, StandardScaler};
+use samoa::regressors::amrules::{AMRules, AMRulesConfig};
+use samoa::streams::waveform::WaveformGenerator;
+use samoa::streams::StreamSource;
+use samoa::topology::Event;
+
+const N: u64 = 8000;
+const SEED: u64 = 42;
+const SYNC: u64 = 64;
+
+fn classifier_head() -> LearnerHead {
+    LearnerHead::Classifier(Box::new(|s: &Schema| -> Box<dyn Classifier> {
+        Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
+    }))
+}
+
+fn regressor_head() -> LearnerHead {
+    LearnerHead::Regressor(Box::new(|s: &Schema| -> Box<dyn Regressor> {
+        Box::new(AMRules::new(s.clone(), AMRulesConfig::default()))
+    }))
+}
+
+/// Run the prequential topology; returns accuracy (classifier) or MAE
+/// (regressor).
+fn run(regression: bool, p: usize, sync: Option<u64>, threaded: bool) -> f64 {
+    let mut source: Box<dyn StreamSource> = if regression {
+        Box::new(WaveformGenerator::new(SEED))
+    } else {
+        Box::new(WaveformGenerator::classification(SEED))
+    };
+    let schema = source.schema().clone();
+    let sink = EvalSink::new(schema.n_classes(), schema.label_range(), N);
+    let sink2 = Arc::clone(&sink);
+    let head = if regression { regressor_head() } else { classifier_head() };
+    let (topo, handles) = build_prequential_topology_head(
+        &schema,
+        p,
+        sync,
+        move |_| {
+            if regression {
+                // AMRules consumes numeric attributes: scale only
+                Pipeline::new().then(StandardScaler::new())
+            } else {
+                Pipeline::new().then(StandardScaler::new()).then(Discretizer::new(8))
+            }
+        },
+        head,
+        move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+    );
+    let events =
+        (0..N).map_while(|id| source.next_instance().map(|inst| Event::Instance { id, inst }));
+    let m = if threaded {
+        ThreadedEngine::default().run(&topo, handles.entry, events, |_, _, _| {})
+    } else {
+        LocalEngine::new().run(&topo, handles.entry, events, |_| {})
+    };
+    assert_eq!(m.source_instances, N);
+    assert_eq!(m.streams[handles.prediction.0].events, N, "every instance must be scored");
+    if sync.is_some() && p > 1 {
+        assert!(
+            m.streams[handles.delta.unwrap().0].events > 0,
+            "sync enabled but no deltas flowed"
+        );
+        assert!(
+            m.streams[handles.global.unwrap().0].events > 0,
+            "sync enabled but no broadcasts flowed"
+        );
+    }
+    if regression {
+        sink.mae()
+    } else {
+        sink.accuracy()
+    }
+}
+
+#[test]
+fn classifier_p4_with_sync_matches_p1_on_local_engine() {
+    let base = run(false, 1, None, false);
+    let sharded = run(false, 4, Some(SYNC), false);
+    assert!(base > 0.5, "baseline accuracy {base} suspiciously low");
+    assert!(
+        (base - sharded).abs() < 0.05,
+        "p=4+sync accuracy {sharded} drifted from p=1 accuracy {base}"
+    );
+}
+
+#[test]
+fn classifier_p4_with_sync_matches_p1_on_threaded_engine() {
+    let base = run(false, 1, None, false);
+    let sharded = run(false, 4, Some(SYNC), true);
+    assert!(
+        (base - sharded).abs() < 0.06,
+        "threaded p=4+sync accuracy {sharded} drifted from p=1 accuracy {base}"
+    );
+}
+
+#[test]
+fn amrules_p4_with_sync_matches_p1_on_local_engine() {
+    let base = run(true, 1, None, false);
+    let sharded = run(true, 4, Some(SYNC), false);
+    assert!(base < 0.8, "baseline MAE {base} suspiciously high (labels span 2.0)");
+    assert!(
+        (base - sharded).abs() < 0.05,
+        "p=4+sync MAE {sharded} drifted from p=1 MAE {base}"
+    );
+}
+
+#[test]
+fn amrules_p4_with_sync_matches_p1_on_threaded_engine() {
+    let base = run(true, 1, None, false);
+    let sharded = run(true, 4, Some(SYNC), true);
+    // wider than the local bound: threaded arrival order at the learner
+    // is nondeterministic and AMRules' rule expansion is order-sensitive
+    assert!(
+        (base - sharded).abs() < 0.12,
+        "threaded p=4+sync MAE {sharded} drifted from p=1 MAE {base}"
+    );
+}
+
+#[test]
+fn local_engine_sync_runs_are_deterministic() {
+    let a = run(false, 4, Some(SYNC), false);
+    let b = run(false, 4, Some(SYNC), false);
+    assert_eq!(a, b, "identical local sync runs must be bit-identical");
+}
+
+/// The discriminating state-level check: with sync every shard's scaler
+/// view carries (close to) the *global* observation count and the shard
+/// means agree tightly; without sync each shard only ever sees its own
+/// quarter of the stream.
+#[test]
+fn shard_scaler_views_converge_to_global_statistics() {
+    let p = 4usize;
+    let n = 4096u64;
+    let snapshots = |sync: Option<u64>| -> Vec<Vec<f64>> {
+        let mut source = WaveformGenerator::classification(7);
+        let schema = source.schema().clone();
+        let sink = EvalSink::new(schema.n_classes(), 1.0, n);
+        let sink2 = Arc::clone(&sink);
+        let (topo, handles) = build_prequential_topology_head(
+            &schema,
+            p,
+            sync,
+            |_| Pipeline::new().then(StandardScaler::new()),
+            classifier_head(),
+            move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+        );
+        let events = (0..n)
+            .map_while(|id| source.next_instance().map(|inst| Event::Instance { id, inst }));
+        let mut snaps = Vec::new();
+        LocalEngine::new().run(&topo, handles.entry, events, |instances| {
+            snaps = instances[handles.pipeline.0]
+                .iter()
+                .filter_map(|proc_| {
+                    proc_
+                        .as_any()
+                        .and_then(|a| a.downcast_ref::<PipelineProcessor>())
+                        .and_then(|pp| pp.pipeline().stats_snapshot(0))
+                })
+                .collect();
+        });
+        snaps
+    };
+
+    // payload layout of Moments::delta(): [n × d, mean × d, m2 × d]
+    let synced = snapshots(Some(32));
+    assert_eq!(synced.len(), p);
+    let d = synced[0].len() / 3;
+    for s in &synced {
+        assert!(
+            s[0] > (n as f64) * 0.9,
+            "synced shard sees n={} of {n} observations on attribute 0",
+            s[0]
+        );
+    }
+    for s in &synced[1..] {
+        for j in 0..d {
+            assert!(
+                (s[d + j] - synced[0][d + j]).abs() < 0.02,
+                "synced shard means diverged on attribute {j}: {} vs {}",
+                s[d + j],
+                synced[0][d + j]
+            );
+        }
+    }
+
+    // control: without sync each shard holds only its local quarter
+    let isolated = snapshots(None);
+    for s in &isolated {
+        assert!(
+            s[0] < (n as f64) * 0.5,
+            "unsynced shard unexpectedly sees global counts: n={}",
+            s[0]
+        );
+    }
+}
