@@ -1,11 +1,25 @@
 //! Tiny bench harness (criterion is not available offline): warmup +
 //! repeated timed runs, median/min/max reporting.
+//!
+//! Setting the `BENCH_SMOKE` env var puts the harness in CI smoke mode:
+//! a single timed rep per bench (and benches may shrink their workloads
+//! via [`smoke_mode`]) — the goal there is "the perf code still builds
+//! and runs", not stable numbers.
 
 use std::time::Instant;
 
-/// Time `f` `reps` times after one warmup; print a stats row.
+/// True when the `BENCH_SMOKE` env var is set (CI smoke mode).
+pub fn smoke_mode() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+/// Time `f` `reps` times after one warmup; print a stats row. In smoke
+/// mode the warmup is skipped and exactly one rep runs.
 pub fn bench<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
-    let _ = f(); // warmup
+    let reps = if smoke_mode() { 1 } else { reps };
+    if !smoke_mode() {
+        let _ = f(); // warmup
+    }
     let mut times = Vec::with_capacity(reps);
     let mut items = 0u64;
     for _ in 0..reps {

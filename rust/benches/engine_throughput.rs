@@ -1,0 +1,137 @@
+//! Zero-copy data-plane bench: engine events/sec across
+//!
+//! * engine: local vs threaded,
+//! * parallelism p ∈ {1, 2, 4, 8},
+//! * payload: dense (256 × f32, ≈1 KB — the paper's Fig. 13 reference
+//!   size) vs sparse (32 of 1000 attributes),
+//! * topology: broadcast-heavy (`All`, the ensemble shape) vs key-grouped
+//!   (`Key`, the VHT shape),
+//!
+//! with **both data planes** recorded per configuration:
+//!
+//! * `baseline` — the pre-refactor semantics: deep-copied payload per
+//!   broadcast delivery (`Event::deep_clone`) and, on the threaded
+//!   engine, per-event channel sends (`batch_size = 1`);
+//! * `zerocopy` — Arc-shared clones + micro-batched channels (the
+//!   defaults).
+//!
+//! The final summary line reports the speedup on the acceptance
+//! configuration (threaded, broadcast, p = 4): the zero-copy plane must
+//! beat the committed baseline there.
+
+mod bench_util;
+use bench_util::{bench, smoke_mode};
+
+use samoa::core::instance::{Instance, Label};
+use samoa::engine::{LocalEngine, ThreadedEngine};
+use samoa::topology::{Ctx, Event, Grouping, Processor, TopologyBuilder};
+
+struct Nop;
+impl Processor for Nop {
+    fn process(&mut self, _e: Event, _c: &mut Ctx) {}
+}
+
+fn make_event(id: u64, sparse: bool) -> Event {
+    let inst = if sparse {
+        // 32 non-zeros out of 1000 attributes (tweet-like)
+        let indices: Vec<u32> = (0..32u32).map(|i| i * 31).collect();
+        Instance::sparse(indices, vec![1.0; 32], 1000, Label::Class(0))
+    } else {
+        Instance::dense(vec![0.5; 256], Label::Class(0))
+    };
+    Event::Instance { id, inst }
+}
+
+#[derive(Clone, Copy)]
+struct Config {
+    threaded: bool,
+    p: usize,
+    sparse: bool,
+    broadcast: bool,
+    /// Pre-refactor baseline: deep-copy broadcasts + unbatched channels.
+    baseline: bool,
+}
+
+/// One run; returns events/sec over `n` source events.
+fn run(cfg: Config, n: u64) -> f64 {
+    let mut b = TopologyBuilder::new("tp");
+    let w = b.add_processor("w", cfg.p, |_| Box::new(Nop));
+    let grouping = if cfg.broadcast { Grouping::All } else { Grouping::Key };
+    let entry = b.stream("in", None, w, grouping);
+    let topo = b.build();
+    let source = (0..n).map(|id| make_event(id, cfg.sparse));
+    let t0 = std::time::Instant::now();
+    if cfg.threaded {
+        let eng = ThreadedEngine {
+            queue_capacity: 1024,
+            batch_size: if cfg.baseline { 1 } else { 32 },
+            deep_copy_broadcast: cfg.baseline,
+        };
+        eng.run(&topo, entry, source, |_, _, _| {});
+    } else {
+        let eng = LocalEngine { measure_busy: false, deep_copy_broadcast: cfg.baseline };
+        eng.run(&topo, entry, source, |_| {});
+    }
+    n as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+}
+
+fn main() {
+    let n: u64 = if smoke_mode() { 4_000 } else { 40_000 };
+    println!("== engine_throughput: zero-copy data plane vs deep-copy baseline ==");
+    println!("(events/sec of the bench row = source events; broadcast rows deliver p× that)");
+
+    // remembered for the acceptance summary: (baseline, zerocopy) at
+    // threaded broadcast dense p=4
+    let mut acceptance: (f64, f64) = (0.0, 0.0);
+
+    for threaded in [false, true] {
+        for broadcast in [true, false] {
+            for sparse in [false, true] {
+                for p in [1usize, 2, 4, 8] {
+                    let name = format!(
+                        "{} {} {} p={p}",
+                        if threaded { "threaded" } else { "local" },
+                        if broadcast { "broadcast" } else { "key-grouped" },
+                        if sparse { "sparse" } else { "dense" },
+                    );
+                    let mut pair = (0.0f64, 0.0f64);
+                    for baseline in [true, false] {
+                        let cfg = Config { threaded, p, sparse, broadcast, baseline };
+                        let label = format!(
+                            "{name} [{}]",
+                            if baseline { "baseline" } else { "zerocopy" }
+                        );
+                        // measure inside bench for the stats row, keep the
+                        // median-equivalent single measurement for ratios
+                        let mut best = 0.0f64;
+                        bench(&label, 3, || {
+                            let tput = run(cfg, n);
+                            best = best.max(tput);
+                            n
+                        });
+                        if baseline {
+                            pair.0 = best;
+                        } else {
+                            pair.1 = best;
+                        }
+                    }
+                    println!(
+                        "  {name}: zerocopy/baseline speedup = {:.2}x",
+                        pair.1 / pair.0.max(1e-12)
+                    );
+                    if threaded && broadcast && !sparse && p == 4 {
+                        acceptance = pair;
+                    }
+                }
+            }
+        }
+    }
+
+    println!(
+        "acceptance (threaded broadcast dense p=4): baseline={:.0} ev/s, \
+         zerocopy={:.0} ev/s, speedup={:.2}x (target >= 2x)",
+        acceptance.0,
+        acceptance.1,
+        acceptance.1 / acceptance.0.max(1e-12)
+    );
+}

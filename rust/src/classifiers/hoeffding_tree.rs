@@ -237,7 +237,7 @@ impl HoeffdingTree {
 
         // (attr, bin) updates collected first: binner updates need &mut self
         let mut updates: Vec<(usize, u32)> = Vec::with_capacity(inst.n_stored());
-        match (&inst.values, sparse_mode) {
+        match (inst.values(), sparse_mode) {
             (Values::Sparse { .. }, true) => {
                 for (a, v) in inst.iter_stored() {
                     if v != 0.0 {

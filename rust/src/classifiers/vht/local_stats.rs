@@ -7,6 +7,8 @@
 //! [`crate::runtime::gain`] (XLA artifact or native twin) — and replies
 //! with its local top-2 plus the winner's class distribution.
 
+use std::sync::Arc;
+
 use crate::common::fxhash::FxHashMap;
 
 use crate::core::observers::CounterBlock;
@@ -128,7 +130,7 @@ impl LocalStats {
                     best,
                     second_attr: attrs.get(1).copied().unwrap_or(attrs[bi]),
                     second: second.max(0.0),
-                    best_dist: dist,
+                    best_dist: Arc::new(dist),
                 }
             }
             // no data for this leaf here: report a null result so the MA
@@ -140,7 +142,7 @@ impl LocalStats {
                 best: 0.0,
                 second_attr: u32::MAX,
                 second: 0.0,
-                best_dist: Vec::new(),
+                best_dist: Arc::new(Vec::new()),
             },
         };
         ctx.emit_any(self.streams.local_result, reply);
@@ -154,7 +156,7 @@ impl Processor for LocalStats {
                 self.update(leaf, attr, value as u32, class, weight);
             }
             Event::AttributeBatch { leaf, class, weight, attrs } => {
-                for (attr, bin) in attrs {
+                for &(attr, bin) in attrs.iter() {
                     self.update(leaf, attr, bin as u32, class, weight);
                 }
             }
@@ -214,7 +216,7 @@ mod tests {
             ls.process(attr_ev(5, 7, i % 2, i % 2), &mut ctx);
             ls.process(attr_ev(5, 3, (i / 2) % 4, i % 2), &mut ctx);
         }
-        ls.process(Event::Compute { leaf: 5, seq: 1, n_l: 200.0, class_counts: vec![] }, &mut ctx);
+        ls.process(Event::Compute { leaf: 5, seq: 1, n_l: 200.0, class_counts: Arc::new(vec![]) }, &mut ctx);
         let out = ctx.take();
         assert_eq!(out.len(), 1);
         match &out[0].2 {
@@ -233,7 +235,7 @@ mod tests {
     fn compute_unknown_leaf_replies_null() {
         let mut ls = LocalStats::new(2, ids());
         let mut ctx = Ctx::new(0, 1);
-        ls.process(Event::Compute { leaf: 99, seq: 2, n_l: 10.0, class_counts: vec![] }, &mut ctx);
+        ls.process(Event::Compute { leaf: 99, seq: 2, n_l: 10.0, class_counts: Arc::new(vec![]) }, &mut ctx);
         let out = ctx.take();
         match &out[0].2 {
             Event::LocalResult { best_attr, best, .. } => {
@@ -270,7 +272,7 @@ mod tests {
                     leaf: 2,
                     class: i % 2,
                     weight: 1.0,
-                    attrs: vec![(0, (i % 2) as u8), (1, (i % 3) as u8)],
+                    attrs: Arc::new(vec![(0, (i % 2) as u8), (1, (i % 3) as u8)]),
                 },
                 &mut ctx,
             );
@@ -278,8 +280,8 @@ mod tests {
         ctx.take();
         let mut ca = Ctx::new(0, 1);
         let mut cb = Ctx::new(0, 1);
-        a.process(Event::Compute { leaf: 2, seq: 1, n_l: 120.0, class_counts: vec![] }, &mut ca);
-        b.process(Event::Compute { leaf: 2, seq: 1, n_l: 120.0, class_counts: vec![] }, &mut cb);
+        a.process(Event::Compute { leaf: 2, seq: 1, n_l: 120.0, class_counts: Arc::new(vec![]) }, &mut ca);
+        b.process(Event::Compute { leaf: 2, seq: 1, n_l: 120.0, class_counts: Arc::new(vec![]) }, &mut cb);
         let (ea, eb) = (ca.take(), cb.take());
         match (&ea[0].2, &eb[0].2) {
             (

@@ -6,6 +6,8 @@
 //! wok / wk(z) policy to instances that reach a leaf with an in-flight
 //! decision.
 
+use std::sync::Arc;
+
 use crate::core::hoeffding::{hoeffding_bound, infogain_range, should_split};
 use crate::core::instance::{Instance, Label};
 use crate::core::Schema;
@@ -98,7 +100,7 @@ impl ModelAggregator {
                             leaf: leaf_id,
                             class,
                             weight: w,
-                            attrs: std::mem::take(batch),
+                            attrs: Arc::new(std::mem::take(batch)),
                         },
                     );
                 }
@@ -189,7 +191,12 @@ impl ModelAggregator {
             };
             ctx.emit_any(
                 self.streams.compute,
-                Event::Compute { leaf: leaf_id, seq: self.seq, n_l, class_counts },
+                Event::Compute {
+                    leaf: leaf_id,
+                    seq: self.seq,
+                    n_l,
+                    class_counts: Arc::new(class_counts),
+                },
             );
         }
     }
@@ -199,16 +206,17 @@ impl ModelAggregator {
         let Some(pending) = self.tree.leaf_mut(node).pending.take() else { return };
         let leaf_id = self.tree.leaf_id(node);
 
-        // overall top-2 across LS replies (each reply is a local top-2)
-        let mut cands: Vec<(u32, f64, &Vec<f32>)> = Vec::with_capacity(pending.replies.len() * 2);
-        static EMPTY: Vec<f32> = Vec::new();
+        // overall top-2 across LS replies (each reply is a local top-2);
+        // the dists are borrowed straight out of the Arc'd replies — the
+        // split path below never copies the winning distribution
+        let mut cands: Vec<(u32, f64, &[f32])> = Vec::with_capacity(pending.replies.len() * 2);
         for (attr, best, second, dist) in &pending.replies {
-            cands.push((*attr, *best, dist));
-            cands.push((u32::MAX, *second, &EMPTY)); // runner-up, attr unknown
+            cands.push((*attr, *best, dist.as_slice()));
+            cands.push((u32::MAX, *second, &[])); // runner-up, attr unknown
         }
         cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         let (best_attr, best, best_dist) = match cands.first() {
-            Some(&(a, g, d)) if a != u32::MAX => (a, g, d.clone()),
+            Some(&(a, g, d)) if a != u32::MAX => (a, g, d),
             _ => {
                 // no usable winner: replay buffer as plain training input
                 self.replay(pending.buffer, ctx);
@@ -224,7 +232,7 @@ impl ModelAggregator {
             pending.n_l,
         );
         if best > 0.0 && should_split(best, second, eps, self.config.tau) {
-            self.tree.split(node, best_attr, &best_dist);
+            self.tree.split(node, best_attr, best_dist);
             self.stats.splits += 1;
             ctx.emit_any(self.streams.drop_leaf, Event::DropLeaf { leaf: leaf_id });
             self.replay(pending.buffer, ctx);
@@ -308,6 +316,10 @@ impl Processor for ModelAggregator {
     fn name(&self) -> &'static str {
         "vht-model-aggregator"
     }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
 }
 
 
@@ -374,7 +386,7 @@ mod tests {
                 best: 0.95,
                 second_attr: 2,
                 second: 0.01,
-                best_dist: dist.clone(),
+                best_dist: Arc::new(dist.clone()),
             },
             &mut ctx,
         );
@@ -386,7 +398,7 @@ mod tests {
                 best: 0.02,
                 second_attr: 3,
                 second: 0.0,
-                best_dist: vec![1.0; 4],
+                best_dist: Arc::new(vec![1.0; 4]),
             },
             &mut ctx,
         );
@@ -418,7 +430,7 @@ mod tests {
                 best: 1.0,
                 second_attr: 1,
                 second: 0.0,
-                best_dist: vec![],
+                best_dist: Arc::new(vec![]),
             },
             &mut ctx,
         );

@@ -10,6 +10,8 @@
 //! discretization): attribute events carry the *bin*, so all LS instances
 //! and the tree agree on thresholds by construction.
 
+use std::sync::Arc;
+
 use crate::common::fxhash::FxHashMap;
 
 use crate::common::memsize::vec_flat_bytes;
@@ -24,7 +26,9 @@ pub struct PendingSplit {
     /// LS instances expected to reply.
     pub expected: u32,
     /// (best_attr, best, second, child-dist of best) per received reply.
-    pub replies: Vec<(u32, f64, f64, Vec<f32>)>,
+    /// The dist stays behind the `LocalResult` event's Arc — no copy on
+    /// receipt.
+    pub replies: Vec<(u32, f64, f64, Arc<Vec<f32>>)>,
     /// n_l when the round started (used in the Hoeffding bound).
     pub n_l: f64,
     /// Source instances seen since the round started (timeout ticking).

@@ -4,6 +4,18 @@
 //! *model state size*: the bytes held by trees, counter tables and rule
 //! sets. JVM object-header overhead from the original is intentionally not
 //! mimicked; DESIGN.md documents this substitution.
+//!
+//! # Arc-shared payloads
+//!
+//! The zero-copy data plane shares large buffers (instance values, event
+//! payloads) behind `Arc`. The accounting convention is: **each holder is
+//! charged `payload / strong_count`**, so summing `mem_bytes` over every
+//! holder counts the payload exactly once — a sole owner is charged in
+//! full, and `k` sharers are charged `1/k` each (plus their own pointer).
+//! This keeps aggregate model-state reports (Tables 6–7) honest under
+//! sharing: a broadcast that reaches `p` consumers does not inflate total
+//! memory `p`-fold, and the payload never silently vanishes from the
+//! books either.
 
 /// Types that can report (an estimate of) their deep heap footprint.
 pub trait MemSize {
@@ -55,6 +67,15 @@ impl<T: MemSize> MemSize for Box<T> {
     }
 }
 
+impl<T: MemSize> MemSize for std::sync::Arc<T> {
+    /// Amortized over sharers: the payload is counted once across all
+    /// holders (see the module docs).
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + (**self).mem_bytes() / std::sync::Arc::strong_count(self)
+    }
+}
+
 /// Helper: bytes of a flat numeric Vec (no per-element recursion).
 pub fn vec_flat_bytes<T>(v: &Vec<T>) -> usize {
     std::mem::size_of::<Vec<T>>() + v.capacity() * std::mem::size_of::<T>()
@@ -75,5 +96,24 @@ mod tests {
         let mut v = Vec::with_capacity(64);
         v.push(1u64);
         assert!(vec_flat_bytes(&v) >= 64 * 8);
+    }
+
+    /// Pins the Arc accounting convention: payload counted exactly once
+    /// across all sharers, in full at a sole owner.
+    #[test]
+    fn arc_payload_counted_once_across_sharers() {
+        let a = std::sync::Arc::new(vec![0f32; 100]);
+        let ptr = std::mem::size_of::<std::sync::Arc<Vec<f32>>>();
+        let payload = (*a).mem_bytes();
+        assert_eq!(a.mem_bytes(), ptr + payload, "sole owner charged in full");
+        let b = std::sync::Arc::clone(&a);
+        assert_eq!(a.mem_bytes(), ptr + payload / 2, "sharer charged half");
+        assert_eq!(
+            a.mem_bytes() + b.mem_bytes(),
+            2 * ptr + payload / 2 * 2,
+            "sum over holders counts the payload once"
+        );
+        drop(b);
+        assert_eq!(a.mem_bytes(), ptr + payload, "full charge restored after drop");
     }
 }

@@ -5,6 +5,18 @@
 //! pairs — VHT's vertical parallelism only ships the non-zeros downstream,
 //! which is where the constant-per-instance overhead observed for sparse
 //! data in Fig. 9 comes from.
+//!
+//! # Zero-copy data plane
+//!
+//! The attribute payload lives behind an [`Arc`], so `Instance::clone` is
+//! a pointer bump + label/weight copy — an All-grouped broadcast at
+//! parallelism `p` shares one heap payload across all `p` deliveries
+//! instead of deep-copying it `p` times. Mutation goes through
+//! [`Instance::values_mut`], which is copy-on-write (`Arc::make_mut`): a
+//! sole owner mutates in place, a sharer first unshares. The constructor
+//! and read API are unchanged from the pre-Arc layout.
+
+use std::sync::Arc;
 
 use crate::common::memsize::vec_flat_bytes;
 use crate::common::MemSize;
@@ -17,6 +29,18 @@ pub enum Values {
     Sparse { indices: Vec<u32>, values: Vec<f32>, n_attributes: u32 },
 }
 
+impl Values {
+    /// Heap bytes of the payload itself (excluding any container).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Values::Dense(v) => vec_flat_bytes(v),
+            Values::Sparse { indices, values, .. } => {
+                vec_flat_bytes(indices) + vec_flat_bytes(values)
+            }
+        }
+    }
+}
+
 /// Prediction target of one instance.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Label {
@@ -26,29 +50,61 @@ pub enum Label {
     None,
 }
 
-/// One stream element.
+/// One stream element. Cloning shares the attribute payload (see the
+/// module docs); `label` and `weight` stay per-clone, so e.g. the bagging
+/// workers can re-weight their shared broadcast copy without touching the
+/// other destinations.
 #[derive(Clone, Debug)]
 pub struct Instance {
-    pub values: Values,
+    values: Arc<Values>,
     pub label: Label,
     pub weight: f32,
 }
 
 impl Instance {
     pub fn dense(values: Vec<f32>, label: Label) -> Self {
-        Instance { values: Values::Dense(values), label, weight: 1.0 }
+        Instance { values: Arc::new(Values::Dense(values)), label, weight: 1.0 }
     }
 
     pub fn sparse(indices: Vec<u32>, values: Vec<f32>, n_attributes: u32, label: Label) -> Self {
         debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
         debug_assert_eq!(indices.len(), values.len());
-        Instance { values: Values::Sparse { indices, values, n_attributes }, label, weight: 1.0 }
+        Instance {
+            values: Arc::new(Values::Sparse { indices, values, n_attributes }),
+            label,
+            weight: 1.0,
+        }
+    }
+
+    /// Read access to the attribute payload.
+    #[inline]
+    pub fn values(&self) -> &Values {
+        &self.values
+    }
+
+    /// Mutable access — copy-on-write: clones the payload first iff it is
+    /// currently shared with another `Instance`.
+    #[inline]
+    pub fn values_mut(&mut self) -> &mut Values {
+        Arc::make_mut(&mut self.values)
+    }
+
+    /// The shared payload handle (tests / wrappers that need to check or
+    /// extend sharing explicitly).
+    #[inline]
+    pub fn shared_values(&self) -> &Arc<Values> {
+        &self.values
+    }
+
+    /// How many `Instance`s currently share this payload.
+    pub fn payload_sharers(&self) -> usize {
+        Arc::strong_count(&self.values)
     }
 
     /// Value of attribute `i` (0.0 for absent sparse attributes).
     #[inline]
     pub fn value(&self, i: usize) -> f32 {
-        match &self.values {
+        match self.values() {
             Values::Dense(v) => v[i],
             Values::Sparse { indices, values, .. } => {
                 match indices.binary_search(&(i as u32)) {
@@ -60,7 +116,7 @@ impl Instance {
     }
 
     pub fn n_attributes(&self) -> usize {
-        match &self.values {
+        match self.values() {
             Values::Dense(v) => v.len(),
             Values::Sparse { n_attributes, .. } => *n_attributes as usize,
         }
@@ -68,7 +124,7 @@ impl Instance {
 
     /// Number of explicitly stored values (= attribute messages VHT sends).
     pub fn n_stored(&self) -> usize {
-        match &self.values {
+        match self.values() {
             Values::Dense(v) => v.len(),
             Values::Sparse { values, .. } => values.len(),
         }
@@ -76,7 +132,7 @@ impl Instance {
 
     /// Iterate (attribute index, value) over stored values.
     pub fn iter_stored(&self) -> Box<dyn Iterator<Item = (usize, f32)> + '_> {
-        match &self.values {
+        match self.values() {
             Values::Dense(v) => Box::new(v.iter().copied().enumerate()),
             Values::Sparse { indices, values, .. } => Box::new(
                 indices.iter().zip(values.iter()).map(|(&i, &v)| (i as usize, v)),
@@ -100,24 +156,35 @@ impl Instance {
 
     /// Approximate serialized size in bytes — drives the message-size cost
     /// model of `engine::simtime` and the Fig. 13 message-size sweep.
+    /// Counts the full payload regardless of Arc sharing: the *wire* cost
+    /// of a delivery is what a real DSPE would serialize.
     pub fn wire_bytes(&self) -> usize {
-        let payload = match &self.values {
+        let payload = match self.values() {
             Values::Dense(v) => 4 * v.len(),
             Values::Sparse { values, .. } => 8 * values.len(),
         };
         payload + 16 // label + weight + framing
     }
+
+    /// Deep copy: unshares the payload (pre-refactor clone semantics; used
+    /// by `Event::deep_clone` for bench baselines).
+    pub fn deep_clone(&self) -> Self {
+        Instance {
+            values: Arc::new((*self.values).clone()),
+            label: self.label,
+            weight: self.weight,
+        }
+    }
 }
 
 impl MemSize for Instance {
+    /// Arc-shared payloads are charged `payload / sharers` to each holder,
+    /// so summing `mem_bytes` across all holders counts the payload
+    /// exactly once (a sole owner is charged in full). See
+    /// `common::memsize` for the convention.
     fn mem_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
-            + match &self.values {
-                Values::Dense(v) => vec_flat_bytes(v),
-                Values::Sparse { indices, values, .. } => {
-                    vec_flat_bytes(indices) + vec_flat_bytes(values)
-                }
-            }
+            + self.values.payload_bytes() / Arc::strong_count(&self.values)
     }
 }
 
@@ -155,5 +222,48 @@ mod tests {
         let s = Instance::sparse(vec![1, 2], vec![1.0, 1.0], 10_000, Label::None);
         let d = Instance::dense(vec![0.0; 10_000], Label::None);
         assert!(s.wire_bytes() < d.wire_bytes());
+    }
+
+    #[test]
+    fn clone_shares_payload_and_cow_unshares() {
+        let a = Instance::dense(vec![1.0, 2.0], Label::Class(0));
+        let mut b = a.clone();
+        assert_eq!(a.payload_sharers(), 2);
+        assert!(Arc::ptr_eq(a.shared_values(), b.shared_values()));
+        // label/weight are per-clone
+        b.weight = 3.0;
+        assert_eq!(a.weight, 1.0);
+        // mutation unshares (copy-on-write); the original is untouched
+        if let Values::Dense(v) = b.values_mut() {
+            v[0] = 9.0;
+        }
+        assert_eq!(a.value(0), 1.0);
+        assert_eq!(b.value(0), 9.0);
+        assert_eq!(a.payload_sharers(), 1);
+    }
+
+    #[test]
+    fn deep_clone_unshares_immediately() {
+        let a = Instance::dense(vec![1.0], Label::None);
+        let b = a.deep_clone();
+        assert_eq!(a.payload_sharers(), 1);
+        assert!(!Arc::ptr_eq(a.shared_values(), b.shared_values()));
+    }
+
+    #[test]
+    fn mem_bytes_counts_shared_payload_once() {
+        let a = Instance::dense(vec![0.0; 256], Label::None);
+        let solo = a.mem_bytes();
+        assert!(solo >= std::mem::size_of::<Instance>() + 256 * 4);
+        let b = a.clone();
+        // each holder is charged half; the pair sums to one payload
+        let shared = a.mem_bytes();
+        assert!(shared < solo);
+        assert_eq!(
+            a.mem_bytes() + b.mem_bytes(),
+            2 * std::mem::size_of::<Instance>() + a.values.payload_bytes() / 2 * 2
+        );
+        drop(b);
+        assert_eq!(a.mem_bytes(), solo, "sole owner is charged in full again");
     }
 }

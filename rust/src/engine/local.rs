@@ -31,11 +31,16 @@ pub struct LocalEngine {
     /// Instrument `process()` calls with wall-clock timing. Costs a timer
     /// syscall per event; enabled by the simtime engine, off by default.
     pub measure_busy: bool,
+    /// Bench baseline only: force the pre-refactor deep copy on every
+    /// broadcast delivery instead of the alloc-free shared clone. The
+    /// `engine_throughput` bench uses this to report the before/after of
+    /// the zero-copy data plane; leave `false` everywhere else.
+    pub deep_copy_broadcast: bool,
 }
 
 impl Default for LocalEngine {
     fn default() -> Self {
-        LocalEngine { measure_busy: false }
+        LocalEngine { measure_busy: false, deep_copy_broadcast: false }
     }
 }
 
@@ -107,12 +112,18 @@ impl LocalEngine {
                 for (s, k, e) in ctx.take() {
                     self.route(topology, &mut rt, &mut metrics, s, k, e, &mut queue, &mut delayed, fin);
                 }
+                // Drain between on_shutdown calls: emissions of an
+                // earlier processor (e.g. a pipeline shard's final stats
+                // delta) must be observable by a later processor's
+                // on_shutdown (e.g. the stats aggregator's partial-round
+                // flush) — otherwise shutdown stragglers are silently
+                // dropped.
+                while let Some((_, d)) = delayed.pop_front() {
+                    queue.push_back(d);
+                }
+                self.drain(topology, &mut rt, &mut metrics, &mut queue, &mut delayed, fin);
             }
         }
-        while let Some((_, d)) = delayed.pop_front() {
-            queue.push_back(d);
-        }
-        self.drain(topology, &mut rt, &mut metrics, &mut queue, &mut delayed, fin);
 
         metrics.wall_ns = started.elapsed().as_nanos() as u64;
         on_drain(&mut rt.instances);
@@ -154,10 +165,16 @@ impl LocalEngine {
                 push((dest, i, event), bytes);
             }
             Route::All => {
+                // Zero-copy fan-out: `Event::clone` is pointer bumps (all
+                // payloads are Arc-shared), and the last destination takes
+                // the original by move. Wire bytes are still charged per
+                // logical delivery — sharing is an in-process optimization,
+                // not a change to the paper's cost model.
                 let bytes = event.wire_bytes();
-                for i in 0..par {
-                    push((dest, i, event.clone()), bytes);
+                for i in 0..par - 1 {
+                    push((dest, i, event.broadcast_clone(self.deep_copy_broadcast)), bytes);
                 }
+                push((dest, par - 1, event), bytes);
             }
         }
     }

@@ -13,6 +13,25 @@
 //!   and per-stream message volume, then evaluates an analytic p-worker
 //!   schedule. This is how scaling figures are produced on this 1-core
 //!   testbed (DESIGN.md §3, "substitutions").
+//!
+//! # Data-plane contract (all three engines)
+//!
+//! * **Clone-free broadcast**: `All`-grouped routing clones the event
+//!   `p − 1` times and *moves* it to the last destination; since every
+//!   event payload is Arc-shared (see [`crate::topology`]), a broadcast
+//!   performs no heap allocation regardless of payload size. The
+//!   `deep_copy_broadcast` knob on [`LocalEngine`]/[`ThreadedEngine`]
+//!   restores the pre-refactor deep copies — bench baseline only.
+//! * **Micro-batched channels** (threaded only): senders buffer data
+//!   events per (sender, destination-instance) edge and flush on
+//!   `batch_size`, on input quiesce, and at shutdown; control events
+//!   bypass batching. Per-edge FIFO order is preserved at every batch
+//!   size (`tests/golden_equivalence.rs` pins this), and `batch_size = 1`
+//!   reproduces the unbatched engine.
+//! * **Metrics**: `EngineMetrics` counts events *and* bytes per logical
+//!   delivery on every engine (a `p`-way broadcast records `p` events and
+//!   `p × wire_bytes`) — the quantity the paper's cost model and the
+//!   simtime pricer consume. Batching and Arc-sharing change neither.
 
 pub mod metrics;
 pub mod local;

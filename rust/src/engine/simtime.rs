@@ -101,7 +101,7 @@ impl SimTimeEngine {
         source: impl Iterator<Item = Event>,
         on_drain: impl FnMut(&mut [Vec<Box<dyn crate::topology::Processor>>]),
     ) -> SimResult {
-        let engine = LocalEngine { measure_busy: true };
+        let engine = LocalEngine { measure_busy: true, ..LocalEngine::default() };
         let metrics = engine.run(topology, entry, source, on_drain);
         self.price(topology, metrics)
     }

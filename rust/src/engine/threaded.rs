@@ -3,22 +3,40 @@
 //! Storm/Samza adapters.
 //!
 //! Design notes:
-//! * Every processor instance owns a `Receiver<Delivery>`; a shared
-//!   routing table of `Sender`s lets any instance emit to any stream.
+//! * Every processor instance owns a `Receiver`; a shared routing table
+//!   of `Sender`s lets any instance emit to any stream.
+//! * **Micro-batched data plane**: each sender keeps a small per-edge
+//!   buffer (one `Vec<Event>` per destination *instance*), flushed when
+//!   it reaches [`ThreadedEngine::batch_size`] events or when the
+//!   sender's own input goes quiet — so one bounded-channel send
+//!   amortizes over up to `batch_size` events instead of paying channel
+//!   synchronization per event. Order within a (sender, dest-instance)
+//!   edge is preserved: buffers are FIFO and flushes are in-order
+//!   appends. `batch_size = 1` reproduces the per-event sends of the
+//!   pre-batching engine.
 //! * **Backpressure**: data-plane sends use `SyncSender::send` on a
-//!   bounded channel and block when the consumer lags — the Storm
-//!   max-spout-pending analogue.
+//!   bounded channel (capacity counted in *batches*) and block when the
+//!   consumer lags — the Storm max-spout-pending analogue.
 //! * **Deadlock avoidance on feedback loops** (MA→LS→MA): control events
-//!   (`Event::is_control`) are routed through a second, *unbounded*
-//!   channel per instance, drained with priority. A full data channel can
-//!   therefore never wedge the split-decision loop — same reasoning as
-//!   Storm's separate system stream.
+//!   (`Event::is_control`) skip the batch buffers entirely and ride a
+//!   second, *unbounded* channel per instance, drained with priority. A
+//!   full data channel can therefore never wedge the split-decision
+//!   loop, and a latency-critical control event is never parked behind a
+//!   half-full batch — same reasoning as Storm's separate system stream.
+//! * **Quiescence accounting**: `flow.sent` is incremented when an event
+//!   enters a batch buffer (not when the batch hits the channel), so
+//!   `sent == processed` can only hold when every buffer has drained —
+//!   a buffered event can never be mistaken for quiescence. Workers
+//!   flush their buffers before blocking on an empty input, so buffered
+//!   events always make progress.
 //! * **Shutdown**: when the source is exhausted the engine waits for
 //!   global quiescence (sent == processed, all queues empty), then
-//!   broadcasts `Shutdown` and joins.
+//!   broadcasts `Shutdown` on the control plane; a worker receiving it
+//!   runs `on_shutdown`, routes + flushes everything it emitted, and
+//!   exits.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -29,15 +47,12 @@ use crate::topology::{Event, StreamId};
 
 use super::metrics::EngineMetrics;
 
-/// Per-delivery envelope. `stream` kept for metrics.
-struct Delivery {
-    stream: usize,
-    event: Event,
-}
+/// Data-plane channel payload: one micro-batch of events.
+type Batch = Vec<Event>;
 
 struct Mailbox {
-    data: SyncSender<Delivery>,
-    ctrl: Sender<Delivery>,
+    data: SyncSender<Batch>,
+    ctrl: Sender<Event>,
 }
 
 /// Shared counters for quiescence detection.
@@ -48,13 +63,37 @@ struct Flow {
 
 /// Multi-threaded engine.
 pub struct ThreadedEngine {
-    /// Bound of each data channel (Storm max-pending analogue).
+    /// Bound of each data channel in *batches* (Storm max-pending
+    /// analogue; worst-case in-flight events per edge is
+    /// `queue_capacity × batch_size`).
     pub queue_capacity: usize,
+    /// Data-plane micro-batch size: events buffered per (sender,
+    /// dest-instance) edge before a channel send. 1 = unbatched
+    /// (pre-batching per-event sends).
+    pub batch_size: usize,
+    /// Bench baseline only: deep-copy every broadcast delivery instead of
+    /// the alloc-free shared clone (see `engine_throughput`).
+    pub deep_copy_broadcast: bool,
 }
 
 impl Default for ThreadedEngine {
     fn default() -> Self {
-        ThreadedEngine { queue_capacity: 1024 }
+        ThreadedEngine { queue_capacity: 1024, batch_size: 32, deep_copy_broadcast: false }
+    }
+}
+
+/// Per-sender batch buffers: `bufs[dest processor][dest instance]`.
+/// Thread-local by construction — every sender (worker thread or the
+/// source pump) owns one, so buffering needs no synchronization at all.
+struct OutBuffers {
+    bufs: Vec<Vec<Batch>>,
+}
+
+impl OutBuffers {
+    fn new(shape: &[usize]) -> Self {
+        OutBuffers {
+            bufs: shape.iter().map(|&p| (0..p).map(|_| Vec::new()).collect()).collect(),
+        }
     }
 }
 
@@ -66,33 +105,58 @@ struct Router {
     stream_events: Vec<AtomicU64>,
     stream_bytes: Vec<AtomicU64>,
     flow: Flow,
+    batch_size: usize,
+    deep_copy_broadcast: bool,
 }
 
 impl Router {
-    fn route(&self, stream: StreamId, key: u64, event: Event) {
+    /// Route one emission: metrics + `sent` are counted here, per logical
+    /// delivery (a p-way broadcast counts p events and p × wire_bytes,
+    /// exactly like the local engine). Data events are buffered per edge;
+    /// control events go out immediately on the unbounded channel.
+    fn route(&self, out: &mut OutBuffers, stream: StreamId, key: u64, event: Event) {
         let (dest, grouping) = self.topology_streams[stream.0];
         let par = self.mailboxes[dest].len();
         let bytes = event.wire_bytes() as u64;
-        self.stream_bytes.get(stream.0).map(|b| b.fetch_add(bytes, Ordering::Relaxed));
-
-        let send_one = |i: usize, ev: Event| {
-            self.flow.sent.fetch_add(1, Ordering::SeqCst);
-            self.stream_events[stream.0].fetch_add(1, Ordering::Relaxed);
-            let mb = &self.mailboxes[dest][i];
-            if ev.is_control() {
-                let _ = mb.ctrl.send(Delivery { stream: stream.0, event: ev });
-            } else {
-                // blocking send = backpressure
-                let _ = mb.data.send(Delivery { stream: stream.0, event: ev });
-            }
-        };
 
         let mut rr_cursor = self.rr[stream.0].fetch_add(1, Ordering::Relaxed) as usize;
         match grouping.route(key, par, &mut rr_cursor) {
-            Route::One(i) => send_one(i, event),
+            Route::One(i) => self.send_one(out, stream.0, dest, i, bytes, event),
             Route::All => {
-                for i in 0..par {
-                    send_one(i, event.clone());
+                // zero-copy fan-out: shared clones + one move (cf. local)
+                for i in 0..par - 1 {
+                    let copy = event.broadcast_clone(self.deep_copy_broadcast);
+                    self.send_one(out, stream.0, dest, i, bytes, copy);
+                }
+                self.send_one(out, stream.0, dest, par - 1, bytes, event);
+            }
+        }
+    }
+
+    fn send_one(&self, out: &mut OutBuffers, stream: usize, dest: usize, i: usize, bytes: u64, event: Event) {
+        // `sent` rises at buffer time so quiescence can never be observed
+        // while an event sits in a batch buffer.
+        self.flow.sent.fetch_add(1, Ordering::SeqCst);
+        self.stream_events[stream].fetch_add(1, Ordering::Relaxed);
+        self.stream_bytes[stream].fetch_add(bytes, Ordering::Relaxed);
+        if event.is_control() {
+            let _ = self.mailboxes[dest][i].ctrl.send(event);
+        } else {
+            let buf = &mut out.bufs[dest][i];
+            buf.push(event);
+            if buf.len() >= self.batch_size {
+                // blocking send = backpressure
+                let _ = self.mailboxes[dest][i].data.send(std::mem::take(buf));
+            }
+        }
+    }
+
+    /// Ship every non-empty batch buffer (stream-quiesce / shutdown flush).
+    fn flush(&self, out: &mut OutBuffers) {
+        for (dest, row) in out.bufs.iter_mut().enumerate() {
+            for (i, buf) in row.iter_mut().enumerate() {
+                if !buf.is_empty() {
+                    let _ = self.mailboxes[dest][i].data.send(std::mem::take(buf));
                 }
             }
         }
@@ -101,7 +165,13 @@ impl Router {
 
 impl ThreadedEngine {
     pub fn new(queue_capacity: usize) -> Self {
-        ThreadedEngine { queue_capacity }
+        ThreadedEngine { queue_capacity, ..Default::default() }
+    }
+
+    /// Set the data-plane micro-batch size (1 = per-event sends).
+    pub fn with_batch(mut self, batch_size: usize) -> Self {
+        self.batch_size = batch_size.max(1);
+        self
     }
 
     /// Run the topology, injecting events from `source` on `entry`.
@@ -120,7 +190,7 @@ impl ThreadedEngine {
         let started = Instant::now();
 
         // Build mailboxes.
-        let mut receivers: Vec<Vec<(Receiver<Delivery>, Receiver<Delivery>)>> = Vec::new();
+        let mut receivers: Vec<Vec<(Receiver<Batch>, Receiver<Event>)>> = Vec::new();
         let mut mailboxes: Vec<Vec<Mailbox>> = Vec::new();
         for p in topology.processors.iter() {
             let mut mrow = Vec::new();
@@ -146,6 +216,8 @@ impl ThreadedEngine {
             stream_events: topology.streams.iter().map(|_| AtomicU64::new(0)).collect(),
             stream_bytes: topology.streams.iter().map(|_| AtomicU64::new(0)).collect(),
             flow: Flow { sent: AtomicU64::new(0), processed: AtomicU64::new(0) },
+            batch_size: self.batch_size.max(1),
+            deep_copy_broadcast: self.deep_copy_broadcast,
         });
 
         // Spawn worker threads.
@@ -158,57 +230,107 @@ impl ThreadedEngine {
                 let router = Arc::clone(&router);
                 let done = Arc::clone(&done);
                 let par = pdef.parallelism;
+                let shape = shape.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("{}-{}", pdef.name, iid))
                     .spawn(move || {
                         let mut busy_ns = 0u64;
                         let mut processed = 0u64;
                         let mut ctx = Ctx::new(iid, par);
-                        'outer: loop {
-                            // Drain control channel with priority.
-                            let delivery = loop {
-                                match crx.try_recv() {
-                                    Ok(d) => break d,
-                                    Err(_) => {}
-                                }
-                                match drx.try_recv() {
-                                    Ok(d) => break d,
-                                    Err(std::sync::mpsc::TryRecvError::Empty) => {
-                                        // Block on data channel with timeout so
-                                        // control stays responsive.
-                                        match drx.recv_timeout(std::time::Duration::from_micros(200)) {
-                                            Ok(d) => break d,
-                                            Err(_) => continue,
-                                        }
-                                    }
-                                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                                        match crx.recv() {
-                                            Ok(d) => break d,
-                                            Err(_) => break 'outer,
-                                        }
-                                    }
-                                }
-                            };
-                            let is_shutdown = matches!(delivery.event, Event::Shutdown);
+                        let mut out = OutBuffers::new(&shape);
+
+                        /// Process one delivered event; returns true on
+                        /// Shutdown.
+                        fn handle_one(
+                            proc_: &mut Box<dyn crate::topology::Processor>,
+                            ctx: &mut Ctx,
+                            router: &Router,
+                            out: &mut OutBuffers,
+                            busy_ns: &mut u64,
+                            processed: &mut u64,
+                            event: Event,
+                        ) -> bool {
+                            let is_shutdown = matches!(event, Event::Shutdown);
                             let t0 = Instant::now();
                             if is_shutdown {
-                                proc_.on_shutdown(&mut ctx);
+                                proc_.on_shutdown(ctx);
                             } else {
-                                proc_.process(delivery.event, &mut ctx);
+                                proc_.process(event, ctx);
                             }
-                            busy_ns += t0.elapsed().as_nanos() as u64;
-                            processed += 1;
+                            *busy_ns += t0.elapsed().as_nanos() as u64;
+                            *processed += 1;
                             // Route emissions BEFORE acknowledging the event:
                             // `sent` must rise before `processed` does, or the
                             // quiescence check could observe a false fixpoint.
                             for (s, k, e) in ctx.take() {
-                                router.route(s, k, e);
+                                router.route(out, s, k, e);
                             }
                             router.flow.processed.fetch_add(1, Ordering::SeqCst);
-                            if is_shutdown {
-                                break;
+                            is_shutdown
+                        }
+
+                        'outer: loop {
+                            // Drain control channel with priority; data
+                            // arrives in batches.
+                            enum Work {
+                                Ctrl(Event),
+                                Data(Batch),
+                            }
+                            let work = loop {
+                                match crx.try_recv() {
+                                    Ok(d) => break Work::Ctrl(d),
+                                    Err(_) => {}
+                                }
+                                match drx.try_recv() {
+                                    Ok(b) => break Work::Data(b),
+                                    Err(TryRecvError::Empty) => {
+                                        // Input quiet: flush partial batches so
+                                        // downstream (and the quiescence check)
+                                        // never wait on our buffers, then block
+                                        // with a timeout so control stays
+                                        // responsive.
+                                        router.flush(&mut out);
+                                        match drx.recv_timeout(std::time::Duration::from_micros(200)) {
+                                            Ok(b) => break Work::Data(b),
+                                            Err(RecvTimeoutError::Timeout) => continue,
+                                            Err(RecvTimeoutError::Disconnected) => {
+                                                match crx.recv() {
+                                                    Ok(d) => break Work::Ctrl(d),
+                                                    Err(_) => break 'outer,
+                                                }
+                                            }
+                                        }
+                                    }
+                                    Err(TryRecvError::Disconnected) => match crx.recv() {
+                                        Ok(d) => break Work::Ctrl(d),
+                                        Err(_) => break 'outer,
+                                    },
+                                }
+                            };
+                            match work {
+                                Work::Ctrl(d) => {
+                                    if handle_one(
+                                        &mut proc_, &mut ctx, &router, &mut out,
+                                        &mut busy_ns, &mut processed, d,
+                                    ) {
+                                        router.flush(&mut out);
+                                        break 'outer;
+                                    }
+                                }
+                                Work::Data(batch) => {
+                                    for d in batch {
+                                        if handle_one(
+                                            &mut proc_, &mut ctx, &router, &mut out,
+                                            &mut busy_ns, &mut processed, d,
+                                        ) {
+                                            router.flush(&mut out);
+                                            break 'outer;
+                                        }
+                                    }
+                                }
                             }
                         }
+                        router.flush(&mut out);
                         done.lock().unwrap().push((pid, iid, proc_, busy_ns, processed));
                     })
                     .unwrap();
@@ -216,13 +338,17 @@ impl ThreadedEngine {
             }
         }
 
-        // Pump the source from this thread.
+        // Pump the source from this thread (with its own batch buffers).
+        let mut src_out = OutBuffers::new(&shape);
         for event in source {
             metrics.source_instances += 1;
-            router.route(entry, metrics.source_instances, event);
+            router.route(&mut src_out, entry, metrics.source_instances, event);
         }
+        router.flush(&mut src_out);
 
         // Wait for quiescence: sent == processed, stable across two polls.
+        // `sent` includes buffered events, so this can only fire once every
+        // batch buffer in the system has drained.
         loop {
             let s1 = router.flow.sent.load(Ordering::SeqCst);
             let p1 = router.flow.processed.load(Ordering::SeqCst);
@@ -238,11 +364,10 @@ impl ThreadedEngine {
             }
         }
 
-        // Broadcast shutdown (control plane) and join.
-        for (pid, row) in router.mailboxes.iter().enumerate() {
-            for (iid, mb) in row.iter().enumerate() {
-                let _ = (pid, iid);
-                let _ = mb.ctrl.send(Delivery { stream: usize::MAX, event: Event::Shutdown });
+        // Broadcast shutdown (control plane, unbatched) and join.
+        for row in router.mailboxes.iter() {
+            for mb in row.iter() {
+                let _ = mb.ctrl.send(Event::Shutdown);
             }
         }
         for h in handles {
@@ -264,11 +389,6 @@ impl ThreadedEngine {
         metrics
     }
 }
-
-// TrySendError import is used indirectly via try_send in earlier revisions;
-// keep the type alias to document the backpressure contract.
-#[allow(dead_code)]
-type _BackpressureWitness = TrySendError<()>;
 
 #[cfg(test)]
 mod tests {
@@ -303,6 +423,34 @@ mod tests {
         assert_eq!(m.streams[0].events, 1000);
     }
 
+    /// Conservation must hold at every batch size, including the
+    /// unbatched (`1`) and larger-than-stream (`4096`) extremes. Uses a
+    /// per-test counter (not the shared TOTAL static) so it cannot race
+    /// with `all_events_processed_across_threads` under parallel `cargo
+    /// test`.
+    #[test]
+    fn batch_sizes_conserve_events() {
+        struct CountInto(Arc<AtomicUsize>);
+        impl Processor for CountInto {
+            fn process(&mut self, _e: Event, _c: &mut Ctx) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        for batch in [1usize, 2, 32, 4096] {
+            let count = Arc::new(AtomicUsize::new(0));
+            let count2 = Arc::clone(&count);
+            let mut b = TopologyBuilder::new("t");
+            let a = b.add_processor("w", 3, move |_| Box::new(CountInto(Arc::clone(&count2))));
+            let entry = b.stream("src", None, a, Grouping::Shuffle);
+            let topo = b.build();
+            let m = ThreadedEngine::default()
+                .with_batch(batch)
+                .run(&topo, entry, (0..777).map(inst_event), |_, _, _| {});
+            assert_eq!(count.load(Ordering::SeqCst), 777, "batch={batch}");
+            assert_eq!(m.streams[0].events, 777, "batch={batch}");
+        }
+    }
+
     #[test]
     fn feedback_loop_does_not_deadlock() {
         // a -> b (data), b -> a (control) with tiny queues: must terminate.
@@ -326,7 +474,16 @@ mod tests {
                     Event::Attribute { .. } => {
                         if let Some(s) = self.ctrl_out {
                             // close the loop on the control plane
-                            ctx.emit(s, 0, Event::Compute { leaf: 0, seq: 0, n_l: 0.0, class_counts: vec![] });
+                            ctx.emit(
+                                s,
+                                0,
+                                Event::Compute {
+                                    leaf: 0,
+                                    seq: 0,
+                                    n_l: 0.0,
+                                    class_counts: Arc::new(vec![]),
+                                },
+                            );
                         }
                     }
                     _ => {}

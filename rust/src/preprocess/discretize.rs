@@ -453,7 +453,7 @@ impl Transform for Discretizer {
 
     fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
         let (warmup, fine) = (self.warmup, self.fine);
-        match &mut inst.values {
+        match inst.values_mut() {
             Values::Dense(v) => {
                 for (j, val) in v.iter_mut().enumerate() {
                     let x = *val as f64;

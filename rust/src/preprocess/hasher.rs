@@ -68,7 +68,7 @@ impl Transform for FeatureHasher {
 
     fn transform(&mut self, inst: Instance) -> Option<Instance> {
         let mut out = vec![0.0f32; self.dim as usize];
-        match &inst.values {
+        match inst.values() {
             Values::Dense(v) => {
                 for (j, &x) in v.iter().enumerate() {
                     if x != 0.0 {
@@ -113,7 +113,7 @@ mod tests {
         let i = Instance::sparse(vec![3, 40, 77], vec![1.0, 2.0, 3.0], 100, Label::Class(1));
         let a = h.transform(i.clone()).unwrap();
         let b = h.transform(i).unwrap();
-        assert_eq!(a.values, b.values);
+        assert_eq!(a.values(), b.values());
         assert_eq!(a.label, Label::Class(1));
         assert_eq!(a.n_attributes(), 16);
     }
@@ -137,7 +137,7 @@ mod tests {
         h1.bind(&schema);
         h2.bind(&schema);
         let i = Instance::sparse(vec![5, 6, 7], vec![1.0, 1.0, 1.0], 100, Label::None);
-        assert_ne!(h1.transform(i.clone()).unwrap().values, h2.transform(i).unwrap().values);
+        assert_ne!(h1.transform(i.clone()).unwrap().values(), h2.transform(i).unwrap().values());
     }
 
     #[test]

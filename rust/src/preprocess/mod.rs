@@ -240,7 +240,7 @@ mod tests {
         let mut raw = WaveformGenerator::new(3);
         let mut ts = TransformedStream::new(src, Pipeline::new());
         for _ in 0..20 {
-            assert_eq!(ts.next_instance().unwrap().values, raw.next_instance().unwrap().values);
+            assert_eq!(ts.next_instance().unwrap().values(), raw.next_instance().unwrap().values());
         }
     }
 }

@@ -237,7 +237,9 @@ pub fn build_prequential_topology_head(
         let s = schema.clone();
         let pf = pipeline_factory.clone();
         b.add_processor("stats-sync", 1, move |_| {
-            Box::new(StatsSyncProcessor::new(pf(usize::MAX), &s, global))
+            // one sync round = one delta from each of the `parallelism`
+            // shards; the aggregator broadcasts once per stage per round
+            Box::new(StatsSyncProcessor::new(pf(usize::MAX), &s, global, parallelism))
         })
     });
 
@@ -336,7 +338,46 @@ mod tests {
         // (n/p/64) emissions per shard, one stateful stage
         let expected_deltas = (n as usize / p / 64 * p) as u64;
         assert_eq!(m.streams[handles.delta.unwrap().0].events, expected_deltas);
-        // every delta triggers a broadcast to all p shards
-        assert_eq!(m.streams[handles.global.unwrap().0].events, expected_deltas * p as u64);
+        // coalesced broadcasts: ONE snapshot per stage per round of p
+        // deltas, delivered to all p shards — so total global deliveries
+        // equal total deltas (deltas/p rounds × p destinations), not
+        // deltas × p as the pre-coalescing protocol paid
+        assert_eq!(m.streams[handles.global.unwrap().0].events, expected_deltas);
+    }
+
+    /// Shutdown stragglers: with `n` NOT divisible by interval × p, some
+    /// shards flush a final pending delta from `on_shutdown`; the local
+    /// engine drains those into the aggregator BEFORE the aggregator's
+    /// own `on_shutdown`, which then broadcasts the partial round once.
+    #[test]
+    fn shutdown_flush_broadcasts_partial_round() {
+        let mut stream = WaveformGenerator::classification(5);
+        let schema = stream.schema().clone();
+        let sink = EvalSink::new(schema.n_classes(), 1.0, 10_000);
+        let sink2 = Arc::clone(&sink);
+        let p = 4usize;
+        let (topo, handles) = build_prequential_topology_head(
+            &schema,
+            p,
+            Some(64),
+            |_| Pipeline::new().then(StandardScaler::new()),
+            LearnerHead::Classifier(Box::new(|s: &Schema| -> Box<dyn crate::core::model::Classifier> {
+                Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
+            })),
+            move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+        );
+        // 2050 = 4 × 512 + 2: shards 0/1 see 513 instances (8 emissions +
+        // 1 shutdown-flush delta), shards 2/3 see 512 (8 emissions, no
+        // flush) — one stateful stage
+        let n = 2050u64;
+        let source = (0..n)
+            .map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+        let m = LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+        let deltas = m.streams[handles.delta.unwrap().0].events;
+        let globals = m.streams[handles.global.unwrap().0].events;
+        assert_eq!(deltas, 34, "8 regular emissions × 4 shards + 2 shutdown flushes");
+        // 8 complete rounds (32 deliveries) + ONE partial-round flush
+        // broadcast at aggregator shutdown (4 deliveries)
+        assert_eq!(globals, 36, "partial round must be flushed exactly once");
     }
 }

@@ -275,7 +275,7 @@ impl Transform for StandardScaler {
     }
 
     fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
-        match &mut inst.values {
+        match inst.values_mut() {
             Values::Dense(v) => {
                 for (j, val) in v.iter_mut().enumerate() {
                     if !self.numeric[j] {
@@ -416,7 +416,7 @@ impl Transform for MinMaxScaler {
     }
 
     fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
-        match &mut inst.values {
+        match inst.values_mut() {
             Values::Dense(v) => {
                 for (j, val) in v.iter_mut().enumerate() {
                     if !self.numeric[j] {

@@ -14,9 +14,20 @@
 //!    once**, so the master equals the single-shard state up to merge
 //!    reordering (commutativity/associativity, see
 //!    [`super::merge::MergeableState`]);
-//! 3. the aggregator broadcasts the merged snapshot
-//!    (`Transform::stats_snapshot`) as an `Event::StatsGlobal` on an
-//!    **`All`-grouped** stream;
+//! 3. **once per stage per sync round** — i.e. after `round_size`
+//!    (normally = the shard count `p`) deltas for that stage have been
+//!    merged, not after every delta — the aggregator broadcasts the
+//!    merged snapshot (`Transform::stats_snapshot`) as an
+//!    `Event::StatsGlobal` on an **`All`-grouped** stream. This coalescing
+//!    turns the previous `O(p²)` full-state deliveries per round into
+//!    `O(p)`: broadcast *count* is independent of how many deltas arrive
+//!    within a round. Any partial round still pending at shutdown is
+//!    flushed by `on_shutdown` — exact on the local engine, whose
+//!    shutdown sequence drains each processor's shutdown emissions
+//!    before the next processor's `on_shutdown` runs, so shard
+//!    straggler deltas reach the aggregator first (best-effort on the
+//!    threaded engine, where shards and aggregator shut down
+//!    concurrently);
 //! 4. each shard replaces its transform-side view with the broadcast
 //!    state merged with its own still-pending increment
 //!    (`Transform::stats_apply`) — nothing is lost or double-counted.
@@ -35,32 +46,60 @@ use super::pipeline::Pipeline;
 use super::Transform;
 
 /// Aggregator node: merges shard deltas into a master pipeline state and
-/// broadcasts merged snapshots.
+/// broadcasts merged snapshots, one per stage per sync round.
 pub struct StatsSyncProcessor {
     /// Master state container — a pipeline built by the same factory as
     /// the shards (never sees instances, only merged deltas).
     master: Pipeline,
     /// Broadcast (`All`-grouped) stream back to the shards.
     out: StreamId,
+    /// Deltas per stage that complete a sync round (= shard count). 1
+    /// reproduces the broadcast-per-delta behavior.
+    round_size: usize,
+    /// Deltas merged since the last broadcast, per stage.
+    pending: Vec<usize>,
     /// Deltas merged so far (diagnostics).
     deltas_merged: u64,
+    /// Snapshots broadcast so far (diagnostics; the sync-overhead bench
+    /// asserts this is deltas/round_size, not deltas).
+    broadcasts: u64,
 }
 
 impl StatsSyncProcessor {
     /// Bind `pipeline` (unbound, same factory as the shards) to the
-    /// source schema and broadcast merged state on `out`.
-    pub fn new(mut pipeline: Pipeline, input: &Schema, out: StreamId) -> Self {
+    /// source schema and broadcast merged state on `out`. `shards` is the
+    /// pipeline parallelism: one round = one delta from every shard.
+    pub fn new(mut pipeline: Pipeline, input: &Schema, out: StreamId, shards: usize) -> Self {
         pipeline.bind(input);
-        StatsSyncProcessor { master: pipeline, out, deltas_merged: 0 }
+        let stages = pipeline.len();
+        StatsSyncProcessor {
+            master: pipeline,
+            out,
+            round_size: shards.max(1),
+            pending: vec![0; stages],
+            deltas_merged: 0,
+            broadcasts: 0,
+        }
     }
 
     pub fn deltas_merged(&self) -> u64 {
         self.deltas_merged
     }
 
+    pub fn broadcasts(&self) -> u64 {
+        self.broadcasts
+    }
+
     /// Master-state snapshot of `stage` (diagnostics/tests).
     pub fn snapshot(&self, stage: usize) -> Option<Vec<f64>> {
         self.master.stats_snapshot(stage)
+    }
+
+    fn broadcast(&mut self, stage: u32, ctx: &mut Ctx) {
+        if let Some(snap) = self.master.stats_snapshot(stage as usize) {
+            self.broadcasts += 1;
+            ctx.emit_any(self.out, Event::StatsGlobal { stage, payload: Arc::new(snap) });
+        }
     }
 }
 
@@ -69,8 +108,24 @@ impl Processor for StatsSyncProcessor {
         if let Event::StatsDelta { stage, payload } = event {
             self.master.stats_merge(stage as usize, &payload);
             self.deltas_merged += 1;
-            if let Some(snap) = self.master.stats_snapshot(stage as usize) {
-                ctx.emit_any(self.out, Event::StatsGlobal { stage, payload: Arc::new(snap) });
+            if let Some(p) = self.pending.get_mut(stage as usize) {
+                *p += 1;
+                if *p >= self.round_size {
+                    *p = 0;
+                    self.broadcast(stage, ctx);
+                }
+            }
+        }
+    }
+
+    /// Flush partial rounds: shards that emitted a straggler delta (e.g.
+    /// the shutdown flush of `PipelineProcessor`) still get their state
+    /// reflected in a final broadcast.
+    fn on_shutdown(&mut self, ctx: &mut Ctx) {
+        for stage in 0..self.pending.len() {
+            if self.pending[stage] > 0 {
+                self.pending[stage] = 0;
+                self.broadcast(stage as u32, ctx);
             }
         }
     }
@@ -121,6 +176,7 @@ mod tests {
             crate::preprocess::Pipeline::new().then(StandardScaler::new()),
             &schema,
             StreamId(0),
+            4,
         );
         let mut ctx = Ctx::new(0, 1);
         for shard in shards.iter_mut() {
@@ -131,6 +187,9 @@ mod tests {
             );
         }
         assert_eq!(sync.deltas_merged(), 4);
+        // coalescing: the round completed exactly once → one broadcast
+        assert_eq!(sync.broadcasts(), 1);
+        assert_eq!(ctx.take().len(), 1);
         let global = sync.snapshot(0).unwrap();
         for shard in shards.iter_mut() {
             shard.stats_apply(&global);
@@ -144,5 +203,33 @@ mod tests {
                 "shard view {got:?} != single-pass {want:?}"
             );
         }
+    }
+
+    /// A partial round (fewer deltas than shards) is not broadcast until
+    /// shutdown, where it is flushed exactly once.
+    #[test]
+    fn partial_round_flushes_on_shutdown() {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut shard = StandardScaler::new();
+        shard.bind(&schema);
+        shard.transform(Instance::dense(vec![1.0], Label::None)).unwrap();
+
+        let mut sync = StatsSyncProcessor::new(
+            crate::preprocess::Pipeline::new().then(StandardScaler::new()),
+            &schema,
+            StreamId(0),
+            4,
+        );
+        let mut ctx = Ctx::new(0, 1);
+        let delta = Transform::stats_delta(&mut shard).unwrap();
+        sync.process(Event::StatsDelta { stage: 0, payload: Arc::new(delta) }, &mut ctx);
+        assert_eq!(sync.broadcasts(), 0, "partial round must not broadcast");
+        assert!(ctx.take().is_empty());
+        sync.on_shutdown(&mut ctx);
+        assert_eq!(sync.broadcasts(), 1, "shutdown flushes the partial round");
+        assert_eq!(ctx.take().len(), 1);
+        let mut ctx2 = Ctx::new(0, 1);
+        sync.on_shutdown(&mut ctx2);
+        assert!(ctx2.take().is_empty(), "empty rounds are not re-flushed");
     }
 }

@@ -91,7 +91,7 @@ impl Transform for TopKFilter {
 
     fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
         // observe attribute occurrences (presence, not magnitude)
-        match &inst.values {
+        match inst.values() {
             Values::Dense(v) => {
                 for (j, &x) in v.iter().enumerate() {
                     if x != 0.0 {
@@ -118,7 +118,7 @@ impl Transform for TopKFilter {
             self.recompute_keep();
         }
 
-        match &mut inst.values {
+        match inst.values_mut() {
             Values::Dense(v) => {
                 for (j, x) in v.iter_mut().enumerate() {
                     if !self.keeps(j as u32) {

@@ -11,6 +11,8 @@
 //!                 prediction → evaluator    rule-updates (broadcast to MAs)
 //! ```
 
+use std::sync::Arc;
+
 use crate::core::instance::Instance;
 use crate::core::model::Regressor;
 use crate::core::Schema;
@@ -87,20 +89,23 @@ impl Processor for HamrAggregator {
                 ctx.emit_any(self.streams.uncovered, Event::Instance { id, inst });
             }
             Event::NewRule { rule, spec } => {
-                // broadcast from the DRL: all replicas stay in sync
+                // broadcast from the DRL: all replicas stay in sync (the
+                // broadcast shared one Arc; each replica materializes its
+                // own mutable copy here, off the routing hot path)
+                let spec = Arc::try_unwrap(spec).unwrap_or_else(|s| (*s).clone());
                 self.specs.push((rule, spec));
                 self.stats.rules_created += 1;
             }
             Event::RuleFeature { rule, feature, head } => {
                 if let Some((_, spec)) = self.specs.iter_mut().find(|(id, _)| *id == rule) {
                     spec.features.push(feature);
-                    spec.head = head;
+                    spec.head = Arc::try_unwrap(head).unwrap_or_else(|h| (*h).clone());
                     self.stats.features_applied += 1;
                 }
             }
             Event::RuleHead { rule, head } => {
                 if let Some((_, spec)) = self.specs.iter_mut().find(|(id, _)| *id == rule) {
-                    spec.head = head;
+                    spec.head = Arc::try_unwrap(head).unwrap_or_else(|h| (*h).clone());
                 }
             }
             Event::RuleRemoved { rule } => {
@@ -147,14 +152,15 @@ impl Processor for DefaultRuleLearner {
                     let id = self.next_id;
                     self.next_id += 1;
                     self.rules_created += 1;
-                    let spec = RuleSpec {
+                    let spec = Arc::new(RuleSpec {
                         features: self.default_rule.spec.features.clone(),
                         head: self.default_rule.head(),
-                    };
-                    // broadcast to all MAs and hand to the owning learner
+                    });
+                    // broadcast to all MAs and hand to the owning learner —
+                    // one shared allocation for all r + 1 deliveries
                     ctx.emit_any(
                         self.streams.new_rule_to_mas,
-                        Event::NewRule { rule: id, spec: spec.clone() },
+                        Event::NewRule { rule: id, spec: Arc::clone(&spec) },
                     );
                     ctx.emit(
                         self.streams.new_rule_to_learner,

@@ -15,6 +15,8 @@
 //! be stale) — with ordered rules this is the temporary inconsistency the
 //! paper discusses.
 
+use std::sync::Arc;
+
 use crate::core::instance::{Instance, Label};
 use crate::core::model::Regressor;
 use crate::core::Schema;
@@ -101,8 +103,13 @@ impl VamrAggregator {
                     head: self.default_rule.head(),
                 };
                 self.specs.push((id, spec.clone()));
-                // hand the full rule to its learner
-                ctx.emit(self.streams.new_rule, id as u64, Event::NewRule { rule: id, spec });
+                // hand the full rule to its learner (Arc: the event clone
+                // along the way shares, not copies, the spec)
+                ctx.emit(
+                    self.streams.new_rule,
+                    id as u64,
+                    Event::NewRule { rule: id, spec: Arc::new(spec) },
+                );
                 // fresh default rule
                 self.default_rule =
                     RuleLearner::new(RuleSpec::default(), &self.schema, &self.config);
@@ -130,13 +137,13 @@ impl Processor for VamrAggregator {
             Event::RuleFeature { rule, feature, head } => {
                 if let Some((_, spec)) = self.specs.iter_mut().find(|(id, _)| *id == rule) {
                     spec.features.push(feature);
-                    spec.head = head;
+                    spec.head = Arc::try_unwrap(head).unwrap_or_else(|h| (*h).clone());
                     self.stats.features_applied += 1;
                 }
             }
             Event::RuleHead { rule, head } => {
                 if let Some((_, spec)) = self.specs.iter_mut().find(|(id, _)| *id == rule) {
-                    spec.head = head;
+                    spec.head = Arc::try_unwrap(head).unwrap_or_else(|h| (*h).clone());
                 }
             }
             Event::RuleRemoved { rule } => {
@@ -195,6 +202,9 @@ impl Processor for RuleLearnerProcessor {
     fn process(&mut self, event: Event, ctx: &mut Ctx) {
         match event {
             Event::NewRule { rule, spec } => {
+                // the learner owns its copy; unwrap the Arc without a copy
+                // when this was the only (Key-routed) recipient
+                let spec = Arc::try_unwrap(spec).unwrap_or_else(|s| (*s).clone());
                 let mut learner = RuleLearner::new(spec, &self.schema, &self.config);
                 // reset expansion counter: statistics start fresh here
                 learner.total_updates = 0;
@@ -213,7 +223,7 @@ impl Processor for RuleLearnerProcessor {
                 }
                 match learner.update(&inst, y) {
                     RuleEvent::Expanded(f) => {
-                        let head = learner.head();
+                        let head = Arc::new(learner.head());
                         ctx.emit_any(
                             self.streams.rule_updates,
                             Event::RuleFeature { rule, feature: f, head },
@@ -225,7 +235,7 @@ impl Processor for RuleLearnerProcessor {
                     }
                     RuleEvent::None => {
                         if learner.total_updates % self.head_refresh as u64 == 0 {
-                            let head = learner.head();
+                            let head = Arc::new(learner.head());
                             ctx.emit_any(self.streams.rule_updates, Event::RuleHead { rule, head });
                         }
                     }
@@ -401,7 +411,7 @@ mod tests {
             }],
             head: Default::default(),
         };
-        l.process(Event::NewRule { rule: 0, spec }, &mut ctx);
+        l.process(Event::NewRule { rule: 0, spec: Arc::new(spec) }, &mut ctx);
         l.process(
             Event::RuleInstance {
                 rule: 0,

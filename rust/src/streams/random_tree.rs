@@ -141,7 +141,7 @@ mod tests {
         let mut b = RandomTreeGenerator::new(5, 5, 2, 7);
         for _ in 0..100 {
             let (x, y) = (a.next_instance().unwrap(), b.next_instance().unwrap());
-            assert_eq!(x.values, y.values);
+            assert_eq!(x.values(), y.values());
             assert_eq!(x.label, y.label);
         }
     }
@@ -152,7 +152,7 @@ mod tests {
         let mut b = RandomTreeGenerator::new(5, 5, 2, 2);
         let same = (0..50)
             .filter(|_| {
-                a.next_instance().unwrap().values == b.next_instance().unwrap().values
+                a.next_instance().unwrap().values() == b.next_instance().unwrap().values()
             })
             .count();
         assert!(same < 50);

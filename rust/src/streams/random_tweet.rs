@@ -126,7 +126,7 @@ mod tests {
         let mut a = RandomTweetGenerator::new(100, 9);
         let mut b = RandomTweetGenerator::new(100, 9);
         for _ in 0..50 {
-            assert_eq!(a.next_instance().unwrap().values, b.next_instance().unwrap().values);
+            assert_eq!(a.next_instance().unwrap().values(), b.next_instance().unwrap().values());
         }
     }
 }

@@ -4,11 +4,23 @@
 //! (`instance`, `attribute`, `compute`, `local-result`, `drop`); the
 //! AMRules and CluStream variants implement the messages described in
 //! §7.1–7.2 and §5 respectively.
+//!
+//! # Zero-copy clones
+//!
+//! Every variant that carries a heap payload ships it behind an `Arc`
+//! (instances share their `Values` internally, see
+//! [`crate::core::instance`]), so **`Event::clone` never allocates** —
+//! an All-grouped broadcast at parallelism `p` is `p` pointer bumps, not
+//! `p` deep copies. [`Event::wire_bytes`] still prices the *full*
+//! payload per delivery: sharing is an in-process optimization, the
+//! simulated-cluster cost model (`engine::simtime`) charges what a real
+//! DSPE would serialize on every hop. [`Event::deep_clone`] reproduces
+//! the pre-refactor per-destination copy (bench baselines only).
 
 use std::sync::Arc;
 
 use crate::core::instance::{Instance, Label};
-use crate::regressors::rule::{Feature, RuleSpec};
+use crate::regressors::rule::{Feature, HeadSnapshot, RuleSpec};
 
 /// Model output attached to a prediction event.
 #[derive(Clone, Debug, PartialEq)]
@@ -48,11 +60,11 @@ pub enum Event {
     /// identical to the per-attribute events; one message per LS per
     /// instance instead of one per attribute (§Perf optimization; the
     /// wire size still counts every attribute).
-    AttributeBatch { leaf: u64, class: u32, weight: f32, attrs: Vec<(u32, u8)> },
+    AttributeBatch { leaf: u64, class: u32, weight: f32, attrs: Arc<Vec<(u32, u8)>> },
     /// Ask all LS to evaluate the split criterion for `leaf`: MA → all LS.
     /// `class_counts` (leaf class marginals) lets LS derive absence rows
     /// for sparse presence observers; empty in dense mode.
-    Compute { leaf: u64, seq: u32, n_l: f64, class_counts: Vec<f32> },
+    Compute { leaf: u64, seq: u32, n_l: f64, class_counts: Arc<Vec<f32>> },
     /// Local top-2 attributes by criterion: LS → MA. `best_dist` carries
     /// the winning attribute's `[arity × class]` counts so the MA can seed
     /// child leaves (Alg. 4 line 8, "derived sufficient statistic").
@@ -63,7 +75,7 @@ pub enum Event {
         best: f64,
         second_attr: u32,
         second: f64,
-        best_dist: Vec<f32>,
+        best_dist: Arc<Vec<f32>>,
     },
     /// Release leaf state after a split: MA → all LS.
     DropLeaf { leaf: u64 },
@@ -74,12 +86,12 @@ pub enum Event {
     RuleInstance { rule: u32, inst: Instance },
     /// Default rule expanded into a new rule: default-rule learner → all
     /// model aggregators (broadcast) + owning learner.
-    NewRule { rule: u32, spec: RuleSpec },
+    NewRule { rule: u32, spec: Arc<RuleSpec> },
     /// A learner expanded a rule with a new feature: learner → all MAs
     /// (carries a fresh head snapshot so MA predictions track the learner).
-    RuleFeature { rule: u32, feature: Feature, head: crate::regressors::rule::HeadSnapshot },
+    RuleFeature { rule: u32, feature: Feature, head: Arc<HeadSnapshot> },
     /// Periodic head refresh: learner → all MAs.
-    RuleHead { rule: u32, head: crate::regressors::rule::HeadSnapshot },
+    RuleHead { rule: u32, head: Arc<HeadSnapshot> },
     /// Drift detected, rule evicted: learner → all MAs.
     RuleRemoved { rule: u32 },
 
@@ -99,7 +111,9 @@ pub enum Event {
 
 impl Event {
     /// Approximate serialized size — the cost model of `engine::simtime`
-    /// and the quantity on the x-axis of Fig. 13.
+    /// and the quantity on the x-axis of Fig. 13. Counted per logical
+    /// delivery (a `p`-way broadcast is `p × wire_bytes`), independent of
+    /// in-process Arc sharing.
     pub fn wire_bytes(&self) -> usize {
         match self {
             Event::Instance { inst, .. } => 8 + inst.wire_bytes(),
@@ -146,6 +160,88 @@ impl Event {
                 | Event::Shutdown
         )
     }
+
+    /// Clone for one broadcast delivery: the alloc-free shared clone
+    /// normally, the pre-refactor deep copy when the engine's
+    /// `deep_copy_broadcast` bench-baseline knob is set. Single home for
+    /// the policy so the engines cannot diverge.
+    #[inline]
+    pub fn broadcast_clone(&self, deep: bool) -> Self {
+        if deep {
+            self.deep_clone()
+        } else {
+            self.clone()
+        }
+    }
+
+    /// Pre-refactor clone semantics: deep-copies every heap payload so
+    /// each destination owns private memory. Only the `engine_throughput`
+    /// bench uses this (as the "before" baseline of the zero-copy data
+    /// plane); production routing uses `clone()`, which is alloc-free.
+    pub fn deep_clone(&self) -> Self {
+        match self {
+            Event::Instance { id, inst } => {
+                Event::Instance { id: *id, inst: inst.deep_clone() }
+            }
+            Event::RuleInstance { rule, inst } => {
+                Event::RuleInstance { rule: *rule, inst: inst.deep_clone() }
+            }
+            Event::ClusterAssign { idx, dist2, inst } => {
+                Event::ClusterAssign { idx: *idx, dist2: *dist2, inst: inst.deep_clone() }
+            }
+            Event::StatsDelta { stage, payload } => {
+                Event::StatsDelta { stage: *stage, payload: Arc::new((**payload).clone()) }
+            }
+            Event::StatsGlobal { stage, payload } => {
+                Event::StatsGlobal { stage: *stage, payload: Arc::new((**payload).clone()) }
+            }
+            Event::AttributeBatch { leaf, class, weight, attrs } => Event::AttributeBatch {
+                leaf: *leaf,
+                class: *class,
+                weight: *weight,
+                attrs: Arc::new((**attrs).clone()),
+            },
+            Event::Compute { leaf, seq, n_l, class_counts } => Event::Compute {
+                leaf: *leaf,
+                seq: *seq,
+                n_l: *n_l,
+                class_counts: Arc::new((**class_counts).clone()),
+            },
+            Event::LocalResult { leaf, seq, best_attr, best, second_attr, second, best_dist } => {
+                Event::LocalResult {
+                    leaf: *leaf,
+                    seq: *seq,
+                    best_attr: *best_attr,
+                    best: *best,
+                    second_attr: *second_attr,
+                    second: *second,
+                    best_dist: Arc::new((**best_dist).clone()),
+                }
+            }
+            Event::NewRule { rule, spec } => {
+                Event::NewRule { rule: *rule, spec: Arc::new((**spec).clone()) }
+            }
+            Event::RuleFeature { rule, feature, head } => Event::RuleFeature {
+                rule: *rule,
+                feature: *feature,
+                head: Arc::new((**head).clone()),
+            },
+            Event::RuleHead { rule, head } => {
+                Event::RuleHead { rule: *rule, head: Arc::new((**head).clone()) }
+            }
+            Event::CentroidSnapshot { version, k, d, centers, weights } => {
+                Event::CentroidSnapshot {
+                    version: *version,
+                    k: *k,
+                    d: *d,
+                    centers: Arc::new((**centers).clone()),
+                    weights: Arc::new((**weights).clone()),
+                }
+            }
+            // payload-free variants: plain clone is already a deep copy
+            other => other.clone(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -173,8 +269,52 @@ mod tests {
 
     #[test]
     fn control_classification() {
-        assert!(Event::Compute { leaf: 0, seq: 0, n_l: 0.0, class_counts: vec![] }.is_control());
+        assert!(Event::Compute {
+            leaf: 0,
+            seq: 0,
+            n_l: 0.0,
+            class_counts: Arc::new(vec![])
+        }
+        .is_control());
         assert!(!Event::Attribute { leaf: 0, attr: 0, value: 0.0, class: 0, weight: 1.0 }
             .is_control());
+    }
+
+    /// The zero-copy contract: cloning a payload-bearing event shares the
+    /// payload allocation; deep_clone does not.
+    #[test]
+    fn clone_shares_payloads_deep_clone_copies() {
+        let inst = Instance::dense(vec![0.0; 64], Label::Class(0));
+        let e = Event::Instance { id: 1, inst };
+        let c = e.clone();
+        match (&e, &c) {
+            (Event::Instance { inst: a, .. }, Event::Instance { inst: b, .. }) => {
+                assert!(Arc::ptr_eq(a.shared_values(), b.shared_values()));
+            }
+            _ => unreachable!(),
+        }
+        let d = e.deep_clone();
+        match (&e, &d) {
+            (Event::Instance { inst: a, .. }, Event::Instance { inst: b, .. }) => {
+                assert!(!Arc::ptr_eq(a.shared_values(), b.shared_values()));
+            }
+            _ => unreachable!(),
+        }
+
+        let cc = Arc::new(vec![1.0f32; 8]);
+        let e = Event::Compute { leaf: 0, seq: 0, n_l: 1.0, class_counts: Arc::clone(&cc) };
+        let c = e.clone();
+        match &c {
+            Event::Compute { class_counts, .. } => assert!(Arc::ptr_eq(class_counts, &cc)),
+            _ => unreachable!(),
+        }
+        match e.deep_clone() {
+            Event::Compute { class_counts, .. } => assert!(!Arc::ptr_eq(&class_counts, &cc)),
+            _ => unreachable!(),
+        }
+
+        // wire size is a per-delivery quantity: unaffected by sharing
+        assert_eq!(e.wire_bytes(), e.clone().wire_bytes());
+        assert_eq!(e.wire_bytes(), e.deep_clone().wire_bytes());
     }
 }

@@ -10,6 +10,33 @@
 //!   corresponds to one *instance* of a logical processor: the engines
 //!   materialize `parallelism` instances per processor and route to them
 //!   per the stream's [`Grouping`].
+//!
+//! # The zero-copy data plane
+//!
+//! Every heap payload an event can carry — an instance's attribute
+//! `Values`, VHT attribute batches and `compute`/`local-result`
+//! distributions, AMRules rule specs and head snapshots, CluStream
+//! centroid snapshots, stats-sync payloads — lives behind an `Arc`.
+//! Consequences, relied on throughout the engines and algorithms:
+//!
+//! * **`Event::clone` never allocates.** An `All`-grouped broadcast at
+//!   parallelism `p` is `p` pointer bumps (and the engines move, rather
+//!   than clone, the original to the last destination), so fan-out cost
+//!   is independent of payload size.
+//! * **Mutation is copy-on-write.** Consumers that need to mutate a
+//!   shared payload go through an explicit step
+//!   ([`crate::core::Instance::values_mut`], `Arc::try_unwrap`-or-clone
+//!   at the AMRules aggregators), so a broadcast can never alias writes
+//!   across destinations.
+//! * **Accounting is unchanged.** [`Event::wire_bytes`] prices the full
+//!   payload *per logical delivery* — a `p`-way broadcast costs
+//!   `p × wire_bytes` in `EngineMetrics`, exactly what a real DSPE would
+//!   serialize (the paper's cost model; sharing is an in-process
+//!   optimization only). Model-state reports split shared payloads over
+//!   their holders so each is counted once (see `common::memsize`).
+//! * `Event::deep_clone` reproduces the pre-refactor per-destination
+//!   deep copy; it exists solely as the `engine_throughput` bench
+//!   baseline.
 
 pub mod event;
 pub mod processor;

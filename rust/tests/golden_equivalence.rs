@@ -1,0 +1,306 @@
+//! Golden-equivalence suite for the zero-copy data plane: the Arc-shared
+//! instance/event refactor and the threaded micro-batching must be
+//! *semantically invisible*. Pinned here:
+//!
+//! * VHT (the fig8/9 harness shape), dense and sparse: the batched
+//!   (`AttributeBatch`, Arc payload) and unbatched (per-`Attribute`)
+//!   decompositions produce **bit-identical** accuracy, kappa and split
+//!   decisions on the local engine — and identical reruns stay
+//!   bit-identical (stream events *and* bytes), so any change to event
+//!   payloads or routing shows up as a diff here;
+//! * AMRules (VAMR topology) and CluStream harnesses: bit-identical
+//!   reruns on the local engine, quality within sane floors;
+//! * threaded engine micro-batching: no event loss and no reordering
+//!   within a (sender, dest-instance) edge at any batch size, for both
+//!   key-grouped and broadcast fan-out, under tiny-queue backpressure.
+
+use std::sync::{Arc, Mutex};
+
+use samoa::classifiers::vht::{build_topology as build_vht, ModelAggregator, VhtConfig};
+use samoa::clustering::clustream::CluStreamConfig;
+use samoa::common::Rng;
+use samoa::core::instance::{Instance, Label};
+use samoa::engine::{EngineMetrics, LocalEngine, ThreadedEngine};
+use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use samoa::regressors::amrules::AMRulesConfig;
+use samoa::streams::{random_tree::RandomTreeGenerator, StreamSource};
+use samoa::topology::{Ctx, Event, Grouping, Processor, StreamId, TopologyBuilder};
+
+/// Everything a VHT run can disagree on: quality, split decisions, and
+/// the full per-stream traffic signature.
+#[derive(Debug, PartialEq)]
+struct VhtFingerprint {
+    accuracy_bits: u64,
+    kappa_bits: u64,
+    splits: u64,
+    split_rounds: u64,
+    stream_events: Vec<u64>,
+    stream_bytes: Vec<u64>,
+}
+
+fn fingerprint(sink: &EvalSink, splits: (u64, u64), m: &EngineMetrics) -> VhtFingerprint {
+    VhtFingerprint {
+        accuracy_bits: sink.accuracy().to_bits(),
+        kappa_bits: sink.classification.lock().unwrap().kappa().to_bits(),
+        splits: splits.0,
+        split_rounds: splits.1,
+        stream_events: m.streams.iter().map(|s| s.events).collect(),
+        stream_bytes: m.streams.iter().map(|s| s.bytes).collect(),
+    }
+}
+
+/// Run the VHT harness (local engine) and fingerprint the result.
+fn run_vht(config: &VhtConfig, sparse: bool, n: u64, seed: u64) -> VhtFingerprint {
+    let mut stream: Box<dyn StreamSource> = if sparse {
+        Box::new(samoa::streams::random_tweet::RandomTweetGenerator::new(100, seed))
+    } else {
+        Box::new(RandomTreeGenerator::new(5, 5, 2, seed))
+    };
+    let schema = stream.schema().clone();
+    let sink = EvalSink::new(schema.n_classes(), 1.0, n);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = build_vht(&schema, config, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+    let source = (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let mut splits = (0, 0);
+    let m = LocalEngine::new().run(&topo, handles.entry, source, |instances| {
+        if let Some(ma) = instances[handles.ma.0][0]
+            .as_any()
+            .and_then(|a| a.downcast_ref::<ModelAggregator>())
+        {
+            splits = (ma.stats.splits, ma.stats.split_rounds);
+        }
+    });
+    assert_eq!(m.source_instances, n);
+    fingerprint(&sink, splits, &m)
+}
+
+/// Dense VHT: the Arc-batched attribute path must be bit-identical to the
+/// per-attribute path — same accuracy, same kappa, same splits, and (up
+/// to the per-event framing difference) the same decisions at every leaf.
+#[test]
+fn vht_dense_batched_equals_unbatched() {
+    let base = VhtConfig { parallelism: 2, ..Default::default() };
+    let batched = run_vht(&VhtConfig { batch_attributes: true, ..base.clone() }, false, 20_000, 7);
+    let unbatched =
+        run_vht(&VhtConfig { batch_attributes: false, ..base.clone() }, false, 20_000, 7);
+    assert_eq!(batched.accuracy_bits, unbatched.accuracy_bits, "accuracy must be bit-identical");
+    assert_eq!(batched.kappa_bits, unbatched.kappa_bits, "kappa must be bit-identical");
+    assert_eq!(
+        (batched.splits, batched.split_rounds),
+        (unbatched.splits, unbatched.split_rounds),
+        "split decisions must be identical"
+    );
+    // sanity floor so a silently-broken pipeline can't pass as "equal"
+    assert!(f64::from_bits(batched.accuracy_bits) > 0.6);
+    assert!(batched.splits > 0, "harness never split — test is vacuous");
+}
+
+/// Sparse VHT (random tweets): same contract as the dense case.
+#[test]
+fn vht_sparse_batched_equals_unbatched() {
+    let base = VhtConfig { parallelism: 2, sparse: true, grace_period: 500, ..Default::default() };
+    let batched = run_vht(&VhtConfig { batch_attributes: true, ..base.clone() }, true, 20_000, 3);
+    let unbatched = run_vht(&VhtConfig { batch_attributes: false, ..base.clone() }, true, 20_000, 3);
+    assert_eq!(batched.accuracy_bits, unbatched.accuracy_bits);
+    assert_eq!(batched.kappa_bits, unbatched.kappa_bits);
+    assert_eq!(
+        (batched.splits, batched.split_rounds),
+        (unbatched.splits, unbatched.split_rounds)
+    );
+    assert!(f64::from_bits(batched.accuracy_bits) > 0.55);
+}
+
+/// Reruns of the same VHT configuration are bit-identical end to end —
+/// including wire bytes, so payload-size accounting changes are caught.
+#[test]
+fn vht_rerun_bit_identical() {
+    let config = VhtConfig { parallelism: 4, ..Default::default() };
+    let a = run_vht(&config, false, 15_000, 11);
+    let b = run_vht(&config, false, 15_000, 11);
+    assert_eq!(a, b);
+}
+
+/// AMRules via the VAMR topology: bit-identical reruns on the local
+/// engine (covers `RuleInstance` / `NewRule` / `RuleFeature` / `RuleHead`
+/// Arc payloads), MAE within a sane ceiling.
+#[test]
+fn amrules_topology_rerun_bit_identical() {
+    let run = || {
+        let schema =
+            samoa::core::Schema::regression("pw", samoa::core::Schema::all_numeric(2), -12.0, 12.0);
+        let sink = EvalSink::new(0, schema.label_range(), 100_000);
+        let sink2 = Arc::clone(&sink);
+        let (topo, handles) =
+            samoa::regressors::vamr::build_topology(&schema, &AMRulesConfig::default(), 2, move |_| {
+                Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+            });
+        let mut rng = Rng::new(5);
+        let source = (0..15_000u64).map(move |id| {
+            let x0 = rng.f32();
+            let y = if x0 <= 0.5 { 10.0 } else { -10.0 } + 0.2 * rng.gaussian();
+            Event::Instance { id, inst: Instance::dense(vec![x0, rng.f32()], Label::Numeric(y)) }
+        });
+        let m = LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+        let events: Vec<u64> = m.streams.iter().map(|s| s.events).collect();
+        let bytes: Vec<u64> = m.streams.iter().map(|s| s.bytes).collect();
+        (sink.mae().to_bits(), events, bytes)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    assert!(f64::from_bits(a.0) < 4.0, "MAE {} suspicious for ±10 target", f64::from_bits(a.0));
+}
+
+/// CluStream harness: bit-identical reruns (covers `ClusterAssign`
+/// instances and Arc'd `CentroidSnapshot` broadcasts).
+#[test]
+fn clustream_topology_rerun_bit_identical() {
+    let run = || {
+        let schema = samoa::core::Schema::classification(
+            "b",
+            samoa::core::Schema::all_numeric(4),
+            2,
+        );
+        let config = CluStreamConfig {
+            max_micro: 30,
+            k: 3,
+            macro_period: 100_000,
+            ..Default::default()
+        };
+        let (topo, handles) = samoa::clustering::topology::build_topology(&schema, config, 3, 5, 500);
+        let mut rng = Rng::new(1);
+        let source = (0..6_000u64).map(move |id| {
+            let c = [0.0f32, 5.0, 10.0][(id % 3) as usize];
+            let vals: Vec<f32> = (0..4).map(|_| c + 0.2 * rng.gaussian() as f32).collect();
+            Event::Instance { id, inst: Instance::dense(vals, Label::None) }
+        });
+        let mut state = 0usize;
+        let m = LocalEngine::new().run(&topo, handles.entry, source, |instances| {
+            state = instances[handles.aggregator.0][0].mem_bytes();
+        });
+        let events: Vec<u64> = m.streams.iter().map(|s| s.events).collect();
+        let bytes: Vec<u64> = m.streams.iter().map(|s| s.bytes).collect();
+        (state, events, bytes)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    assert!(a.0 > 0, "aggregator built no state");
+}
+
+// ---------------------------------------------------------------------
+// Threaded-engine micro-batching: loss/ordering contract
+// ---------------------------------------------------------------------
+
+/// Records, per destination instance, the sequence of instance ids it
+/// processed (ids are emitted by a single sender in increasing order, so
+/// per-edge FIFO ⇔ each recorded sequence is strictly increasing).
+struct Recorder {
+    log: Arc<Mutex<Vec<Vec<u64>>>>,
+}
+
+impl Processor for Recorder {
+    fn process(&mut self, e: Event, ctx: &mut Ctx) {
+        if let Event::Instance { id, .. } = e {
+            self.log.lock().unwrap()[ctx.instance].push(id);
+        }
+    }
+}
+
+/// Single forwarder: re-emits every instance (ids already increasing).
+struct Fwd(StreamId);
+impl Processor for Fwd {
+    fn process(&mut self, e: Event, ctx: &mut Ctx) {
+        if let Event::Instance { id, inst } = e {
+            ctx.emit(self.0, id, Event::Instance { id, inst });
+        }
+    }
+}
+
+/// Run source → fwd(p=1) → recorder(p) and return the per-instance logs.
+fn run_edge_probe(grouping: Grouping, p: usize, n: u64, batch: usize, queue: usize) -> Vec<Vec<u64>> {
+    let log: Arc<Mutex<Vec<Vec<u64>>>> = Arc::new(Mutex::new(vec![Vec::new(); p]));
+    let mut b = TopologyBuilder::new("probe");
+    let fwd = b.add_processor("fwd", 1, |_| Box::new(Fwd(StreamId(1))));
+    let log2 = Arc::clone(&log);
+    let rec = b.add_processor("rec", p, move |_| Box::new(Recorder { log: Arc::clone(&log2) }));
+    let entry = b.stream("in", None, fwd, Grouping::Shuffle);
+    b.stream("edge", Some(fwd), rec, grouping);
+    let topo = b.build();
+    let source = (0..n)
+        .map(|id| Event::Instance { id, inst: Instance::dense(vec![id as f32], Label::None) });
+    let m = ThreadedEngine::new(queue)
+        .with_batch(batch)
+        .run(&topo, entry, source, |_, _, _| {});
+    assert_eq!(m.source_instances, n);
+    drop(topo); // factories hold a log clone; release before unwrapping
+    Arc::try_unwrap(log).unwrap().into_inner().unwrap()
+}
+
+/// Key-grouped edge: at every batch size (1 = unbatched baseline,
+/// oversized = one flush), no event is lost, none duplicated, and each
+/// (sender, dest-instance) edge preserves emission order — under
+/// tiny-queue backpressure too.
+#[test]
+fn threaded_batching_key_grouped_no_loss_no_reorder() {
+    const N: u64 = 5_000;
+    for batch in [1usize, 7, 32, 1024] {
+        let logs = run_edge_probe(Grouping::Key, 3, N, batch, 4);
+        let total: usize = logs.iter().map(|l| l.len()).sum();
+        assert_eq!(total, N as usize, "batch={batch}: lost/duplicated events");
+        let mut seen: Vec<u64> = logs.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert!(seen.windows(2).all(|w| w[0] < w[1]), "batch={batch}: duplicates");
+        for (i, l) in logs.iter().enumerate() {
+            assert!(
+                l.windows(2).all(|w| w[0] < w[1]),
+                "batch={batch}: edge to instance {i} reordered"
+            );
+        }
+    }
+}
+
+/// Broadcast edge: every destination instance sees EVERY event exactly
+/// once, in order, at every batch size.
+#[test]
+fn threaded_batching_broadcast_no_loss_no_reorder() {
+    const N: u64 = 3_000;
+    for batch in [1usize, 32, 4096] {
+        let logs = run_edge_probe(Grouping::All, 4, N, batch, 4);
+        for (i, l) in logs.iter().enumerate() {
+            assert_eq!(l.len(), N as usize, "batch={batch}: instance {i} missed events");
+            assert!(
+                l.windows(2).all(|w| w[0] < w[1]),
+                "batch={batch}: edge to instance {i} reordered"
+            );
+        }
+    }
+}
+
+/// The batched threaded engine reaches the same totals as the local
+/// engine on the same topology (conservation across engines).
+#[test]
+fn threaded_totals_match_local() {
+    let build = || {
+        let mut b = TopologyBuilder::new("x");
+        let fwd = b.add_processor("fwd", 1, |_| Box::new(Fwd(StreamId(1))));
+        let rec = b.add_processor("rec", 4, |_| {
+            Box::new(Recorder { log: Arc::new(Mutex::new(vec![Vec::new(); 4])) })
+        });
+        let entry = b.stream("in", None, fwd, Grouping::Shuffle);
+        b.stream("edge", Some(fwd), rec, Grouping::All);
+        (b.build(), entry)
+    };
+    let source =
+        || (0..2_000u64).map(|id| Event::Instance { id, inst: Instance::dense(vec![0.0], Label::None) });
+    let (t1, e1) = build();
+    let local = LocalEngine::new().run(&t1, e1, source(), |_| {});
+    let (t2, e2) = build();
+    let threaded = ThreadedEngine::default().run(&t2, e2, source(), |_, _, _| {});
+    for s in 0..local.streams.len() {
+        assert_eq!(local.streams[s].events, threaded.streams[s].events, "stream {s} events");
+        assert_eq!(local.streams[s].bytes, threaded.streams[s].bytes, "stream {s} bytes");
+    }
+}
