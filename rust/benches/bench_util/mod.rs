@@ -6,11 +6,49 @@
 //! via [`smoke_mode`]) — the goal there is "the perf code still builds
 //! and runs", not stable numbers.
 
+use std::io::Write;
 use std::time::Instant;
 
 /// True when the `BENCH_SMOKE` env var is set (CI smoke mode).
 pub fn smoke_mode() -> bool {
     std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+/// When the `BENCH_JSON` env var names a file, append one JSON object
+/// (one line) with the given numeric fields — the machine-readable twin
+/// of the printed bench rows. CI collects the lines into
+/// `BENCH_PR<k>.json` and uploads them as a workflow artifact, so the
+/// perf trajectory (events/sec, sync bytes, broadcast counts, …) is
+/// tracked per PR instead of lost in logs. Non-finite values serialize
+/// as `null`.
+#[allow(dead_code)]
+pub fn record_json(name: &str, fields: &[(&str, f64)]) {
+    let Some(path) = std::env::var_os("BENCH_JSON") else { return };
+    let mut line = String::from("{\"name\":\"");
+    for c in name.chars() {
+        match c {
+            '"' => line.push_str("\\\""),
+            '\\' => line.push_str("\\\\"),
+            c if (c as u32) < 0x20 => line.push(' '),
+            c => line.push(c),
+        }
+    }
+    line.push('"');
+    for (key, value) in fields {
+        line.push_str(",\"");
+        line.push_str(key);
+        line.push_str("\":");
+        if value.is_finite() {
+            line.push_str(&format!("{value}"));
+        } else {
+            line.push_str("null");
+        }
+    }
+    line.push('}');
+    let file = std::fs::OpenOptions::new().create(true).append(true).open(path);
+    if let Ok(mut f) = file {
+        let _ = writeln!(f, "{line}");
+    }
 }
 
 /// Time `f` `reps` times after one warmup; print a stats row. In smoke
@@ -37,5 +75,14 @@ pub fn bench<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
         median * 1e3,
         min * 1e3,
         max * 1e3,
+    );
+    record_json(
+        name,
+        &[
+            ("median_s", median),
+            ("min_s", min),
+            ("max_s", max),
+            ("items_per_s", tput),
+        ],
     );
 }

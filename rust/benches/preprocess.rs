@@ -5,7 +5,7 @@
 //! overhead of the prequential topology at p ∈ {1, 2, 4, 8}.
 
 mod bench_util;
-use bench_util::{bench, smoke_mode};
+use bench_util::{bench, record_json, smoke_mode};
 
 use std::time::Instant;
 
@@ -167,11 +167,14 @@ fn sync_benches() {
     use std::cell::Cell;
     use std::sync::Arc;
 
+    use samoa::preprocess::SyncPolicy;
+
     let n: u64 = if smoke_mode() { 4_096 } else { 20_000 };
     for p in [1usize, 2, 4, 8] {
-        for sync in [None, Some(256u64)] {
+        for sync in [None, Some(SyncPolicy::Count(256))] {
             let label = match sync {
-                Some(i) => format!("prequential topology p={p} sync={i}"),
+                Some(SyncPolicy::Count(i)) => format!("prequential topology p={p} sync={i}"),
+                Some(policy) => format!("prequential topology p={p} sync={policy:?}"),
                 None => format!("prequential topology p={p} sync=off"),
             };
             let msgs: Cell<(u64, u64)> = Cell::new((0, 0));
@@ -211,14 +214,116 @@ fn sync_benches() {
                      pre-coalescing would deliver {})",
                     deltas * p as u64
                 );
+                record_json(
+                    &format!("sync messages p={p}"),
+                    &[("deltas", deltas as f64), ("global_deliveries", globals as f64)],
+                );
                 assert_eq!(
                     globals, deltas,
                     "coalescing regressed: global deliveries must equal deltas \
-                     (one broadcast × p destinations per round of p deltas)"
+                     (one broadcast × p destinations per round of p deltas; \
+                     per-shard rounds keep this exact under the local engine's \
+                     lockstep schedule)"
                 );
             }
         }
     }
+}
+
+/// The policy × compression sweep: drift-gated / hybrid / count emission
+/// crossed with sparse-vs-dense delta encoding, on a sparse
+/// bag-of-words stream (tweets d=1000, top-k filter + scaler) where
+/// compression has room to work. Reports sync message counts and wire
+/// bytes per configuration and asserts compression shrinks the
+/// count-policy delta stream (identical emission schedule, smaller
+/// payloads).
+fn sync_policy_compression_benches() {
+    use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+    use samoa::core::model::Classifier;
+    use samoa::core::Schema;
+    use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+    use samoa::preprocess::processor::{
+        build_prequential_topology_sync, LearnerHead, SyncPolicy,
+    };
+    use samoa::preprocess::TopKFilter;
+    use samoa::topology::Event;
+    use std::sync::Arc;
+
+    let n: u64 = if smoke_mode() { 4_096 } else { 20_000 };
+    let p = 4usize;
+    let policies = [
+        ("count:256", SyncPolicy::Count(256)),
+        ("drift:512", SyncPolicy::Drift { delta: 0.002, max_staleness: 512 }),
+        ("hybrid:256", SyncPolicy::Hybrid { interval: 256, delta: 0.002 }),
+    ];
+    println!("-- sync policy × compression sweep (tweets d=1000 | topk:32,scale, p={p}) --");
+    let mut count_delta_bytes = [0u64; 2]; // [dense, sparse] for the count row
+    for (pname, policy) in policies {
+        for compress in [false, true] {
+            let label = format!(
+                "sync sweep {pname} {}",
+                if compress { "sparse" } else { "dense " }
+            );
+            let mut delta_stats = (0u64, 0u64, 0u64, 0u64); // events, bytes × delta/global
+            bench(&label, 3, || {
+                let mut stream = RandomTweetGenerator::new(1000, 7);
+                let schema = stream.schema().clone();
+                let sink = EvalSink::new(schema.n_classes(), 1.0, n);
+                let sink2 = Arc::clone(&sink);
+                let (topo, handles) = build_prequential_topology_sync(
+                    &schema,
+                    p,
+                    Some(policy),
+                    compress,
+                    |_| {
+                        Pipeline::new()
+                            .then(TopKFilter::new(32))
+                            .then(StandardScaler::new())
+                    },
+                    LearnerHead::Classifier(Box::new(|s: &Schema| -> Box<dyn Classifier> {
+                        Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
+                    })),
+                    move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+                );
+                let source = (0..n).map_while(|id| {
+                    stream.next_instance().map(|inst| Event::Instance { id, inst })
+                });
+                let m = samoa::engine::LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+                let (d, g) = (handles.delta.unwrap(), handles.global.unwrap());
+                delta_stats = (
+                    m.streams[d.0].events,
+                    m.streams[d.0].bytes,
+                    m.streams[g.0].events,
+                    m.streams[g.0].bytes,
+                );
+                m.source_instances
+            });
+            let (de, db, ge, gb) = delta_stats;
+            println!(
+                "  {pname} {}: deltas={de} ({db}B) globals={ge} ({gb}B) total sync bytes={}",
+                if compress { "sparse" } else { "dense" },
+                db + gb
+            );
+            record_json(
+                &format!("sync sweep {pname} {}", if compress { "sparse" } else { "dense" }),
+                &[
+                    ("deltas", de as f64),
+                    ("delta_bytes", db as f64),
+                    ("global_deliveries", ge as f64),
+                    ("global_bytes", gb as f64),
+                ],
+            );
+            if pname == "count:256" {
+                count_delta_bytes[compress as usize] = db;
+            }
+        }
+    }
+    assert!(
+        count_delta_bytes[1] < count_delta_bytes[0],
+        "sparse deltas must beat dense on a sparse stream: {} !< {}",
+        count_delta_bytes[1],
+        count_delta_bytes[0]
+    );
 }
 
 fn main() {
@@ -227,4 +332,5 @@ fn main() {
     pipeline_benches();
     discretizer_rank_benches();
     sync_benches();
+    sync_policy_compression_benches();
 }

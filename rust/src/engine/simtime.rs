@@ -74,6 +74,23 @@ impl SimResult {
         }
         self.metrics.source_instances as f64 / (self.makespan_ns * 1e-9)
     }
+
+    /// Wire bytes carried by one stream (per logical delivery — the
+    /// quantity the cost model charges). Convenience for cost studies
+    /// like `samoa exp sync-cost`, which reads the `StatsDelta` /
+    /// `StatsGlobal` streams to price a sync policy.
+    pub fn stream_bytes(&self, stream: crate::topology::StreamId) -> u64 {
+        self.metrics.streams.get(stream.0).map_or(0, |s| s.bytes)
+    }
+
+    /// ns this run spends on communication alone under the cost model
+    /// (every delivery's per-message + per-byte charge, receive and
+    /// send side) — the sync-overhead denominator of the cost study.
+    pub fn comm_ns(&self, cost: &SimCostModel) -> f64 {
+        let msgs: f64 = self.metrics.streams.iter().map(|s| s.events as f64).sum();
+        let bytes: f64 = self.metrics.streams.iter().map(|s| s.bytes as f64).sum();
+        (msgs * cost.c_msg_ns + bytes * cost.c_byte_ns) * (1.0 + cost.tx_frac)
+    }
 }
 
 /// Runs a topology under the instrumented local engine and prices the
@@ -209,5 +226,55 @@ mod tests {
         let r = eng.run(&t, e, source(500), |_| {});
         assert!(r.makespan_ns >= r.source_ns);
         assert!(r.throughput() > 0.0);
+    }
+
+    /// The stats-sync loop is priced like any other traffic: running the
+    /// same sync topology with a tighter emission interval must show
+    /// more delta-stream bytes under the cost model.
+    #[test]
+    fn sync_traffic_is_priced_by_the_cost_model() {
+        use crate::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+        use crate::core::Schema;
+        use crate::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+        use crate::preprocess::processor::{
+            build_prequential_topology_head, LearnerHead, SyncPolicy,
+        };
+        use crate::preprocess::{Pipeline, StandardScaler};
+        use crate::streams::waveform::WaveformGenerator;
+        use crate::streams::StreamSource;
+        use std::sync::Arc;
+
+        let run = |interval: u64| {
+            let mut stream = WaveformGenerator::classification(13);
+            let schema = stream.schema().clone();
+            let sink = EvalSink::new(schema.n_classes(), 1.0, 10_000);
+            let sink2 = Arc::clone(&sink);
+            let (topo, handles) = build_prequential_topology_head(
+                &schema,
+                4,
+                Some(SyncPolicy::Count(interval)),
+                |_| Pipeline::new().then(StandardScaler::new()),
+                LearnerHead::Classifier(Box::new(
+                    |s: &Schema| -> Box<dyn crate::core::model::Classifier> {
+                        Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
+                    },
+                )),
+                move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+            );
+            let source = (0..2048u64).map_while(|id| {
+                stream.next_instance().map(|inst| Event::Instance { id, inst })
+            });
+            let r = SimTimeEngine::default().run(&topo, handles.entry, source, |_| {});
+            (r.stream_bytes(handles.delta.unwrap()), r)
+        };
+        let (bytes_tight, r_tight) = run(32);
+        let (bytes_loose, r_loose) = run(512);
+        assert!(
+            bytes_tight > bytes_loose,
+            "interval 32 must ship more sync bytes than 512 ({bytes_tight} vs {bytes_loose})"
+        );
+        let cost = SimCostModel::default();
+        assert!(r_tight.comm_ns(&cost) > r_loose.comm_ns(&cost));
+        assert!(r_tight.makespan_ns > 0.0 && r_loose.makespan_ns > 0.0);
     }
 }

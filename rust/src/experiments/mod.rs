@@ -12,6 +12,7 @@ pub mod runner;
 pub mod vht_exps;
 pub mod amrules_exps;
 pub mod preprocess_exps;
+pub mod sync_cost;
 
 use crate::common::cli::Args;
 
@@ -34,6 +35,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
         "fig13" => amrules_exps::fig13(args),
         "fig14" | "fig15" | "fig16" => amrules_exps::fig14_16(args),
         "preprocess" => preprocess_exps::preprocess(args),
+        "sync-cost" => sync_cost::sync_cost(args),
         "all" => {
             for e in ALL {
                 println!("\n================ {e} ================");
@@ -48,7 +50,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table3", "table4", "table5",
-    "table6", "table7", "fig12", "fig13", "fig14", "preprocess",
+    "table6", "table7", "fig12", "fig13", "fig14", "preprocess", "sync-cost",
 ];
 
 /// Markdown-ish table printer.

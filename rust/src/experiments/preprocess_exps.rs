@@ -24,7 +24,7 @@ use crate::engine::{LocalEngine, ThreadedEngine};
 use crate::evaluation::prequential::{
     prequential_run, prequential_run_regression, EvalSink, EvaluatorProcessor, PrequentialConfig,
 };
-use crate::preprocess::processor::{build_prequential_topology_head, LearnerHead};
+use crate::preprocess::processor::{build_prequential_topology_head, LearnerHead, SyncPolicy};
 use crate::preprocess::{parse_pipeline, TransformedStream};
 use crate::regressors::amrules::{AMRules, AMRulesConfig};
 use crate::streams::StreamSource;
@@ -52,7 +52,7 @@ fn run_topology(
     spec: &str,
     n: u64,
     p: usize,
-    sync: Option<u64>,
+    sync: Option<SyncPolicy>,
     threaded: bool,
     regression: bool,
 ) -> (f64, f64, u64) {
@@ -101,8 +101,9 @@ pub fn preprocess(args: &Args) -> anyhow::Result<()> {
     parse_pipeline(spec)?; // fail fast on a bad CLI spec
     let n = args.u64("instances", 20_000);
     let ps = args.usize_list("p", &[1, 2, 4]);
-    // per-shard delta emission period; 0 disables the sync rows
-    let sync = args.u64("sync", 256);
+    // sync policy spec: a count interval, `drift[:staleness[:delta]]` or
+    // `hybrid[:interval[:delta]]`; `0`/`off` disables the sync rows
+    let sync = SyncPolicy::parse(args.get_or("sync", "256"))?;
     let seed = args.u64("seed", 42);
     let dim = args.usize("dim", 1000) as u32;
     let quality_col = if regression { "MAE" } else { "accuracy" };
@@ -157,14 +158,14 @@ pub fn preprocess(args: &Args) -> anyhow::Result<()> {
     // -- topology path: parallelism sweep, stats-sync off and on
     for &p in &ps {
         let mut syncs = vec![None];
-        if sync > 0 && p > 1 {
-            syncs.push(Some(sync));
+        if sync.is_some() && p > 1 {
+            syncs.push(sync);
         }
         for &s in &syncs {
             let (quality, tput, events) =
                 run_topology(stream_name, seed, dim, spec, n, p, s, false, regression);
             let label = match s {
-                Some(i) => format!("PipelineProcessor (local, p={p}, sync={i})"),
+                Some(policy) => format!("PipelineProcessor (local, p={p}, sync={policy:?})"),
                 None => format!("PipelineProcessor (local, p={p})"),
             };
             rows.push(vec![
@@ -201,9 +202,11 @@ pub fn preprocess(args: &Args) -> anyhow::Result<()> {
          identical instance order and statistics, so their results match \
          exactly (the preprocess_integration test asserts this). At p>1 \
          each shard learns its own operator statistics unless sync is on: \
-         the sync rows emit state deltas every --sync instances per shard \
-         and converge all shards to the merged global statistics (the \
-         stats_sync_integration test pins the p=4 vs p=1 agreement)."
+         the sync rows emit state deltas per the --sync policy (a count \
+         interval, drift[:staleness] for ADWIN-gated emission, or \
+         hybrid[:interval]) and converge all shards to the merged global \
+         statistics (the stats_sync_integration test pins the p=4 vs p=1 \
+         agreement). See `samoa exp sync-cost` for the policy cost study."
     );
     Ok(())
 }

@@ -38,8 +38,14 @@ fn main() {
                 "pipeline ops (--pipeline a,b,...): hash:D | scale | minmax | discretize:K | topk:K"
             );
             println!(
-                "exp preprocess knobs: --p 1,2,4 --sync N (delta-sync interval, 0=off) \
-                 --learner ht|amrules; fig8/fig9/fig12/fig13/fig14 also accept --pipeline"
+                "exp preprocess knobs: --p 1,2,4 --sync N|drift[:staleness]|hybrid[:interval] \
+                 (0/off disables) --learner ht|amrules; fig8/fig9/fig12/fig13/fig14 also \
+                 accept --pipeline"
+            );
+            println!(
+                "exp sync-cost knobs: --p 4 --drift-every 0,2000 --drift-mag 4 \
+                 --sync 64,256 --staleness 256,1024 --delta 0.002 (policy × interval × \
+                 drift-rate sweep under the simtime cost model)"
             );
             Ok(())
         }

@@ -317,6 +317,12 @@ pub struct Discretizer {
     summaries: Vec<Option<AttrSummary>>,
     /// Increment since the last `stats_delta` emission.
     pending: Vec<Option<AttrSummary>>,
+    /// Compute the drift signal per instance (off = zero hot-path cost).
+    track_signal: bool,
+    /// Mean normalized bin index of the last instance — ≈ 0.5 while the
+    /// cut points fit the stream (equal-frequency bins are uniform),
+    /// skewed toward 0/1 under drift. The per-stage drift-gate signal.
+    last_signal: Option<f64>,
 }
 
 impl Discretizer {
@@ -329,7 +335,15 @@ impl Discretizer {
     pub fn with_resolution(k: u32, warmup: usize, fine: usize) -> Self {
         assert!(k >= 2, "need at least 2 bins");
         assert!(warmup >= 2 && fine >= k as usize);
-        Discretizer { k, warmup, fine, summaries: Vec::new(), pending: Vec::new() }
+        Discretizer {
+            k,
+            warmup,
+            fine,
+            summaries: Vec::new(),
+            pending: Vec::new(),
+            track_signal: false,
+            last_signal: None,
+        }
     }
 
     /// Bin index for attribute `j` and raw value `x` under current stats.
@@ -353,19 +367,28 @@ impl Discretizer {
         self.summaries[j].as_ref().map_or(0.0, |s| s.rank_naive(x))
     }
 
-    /// Encode a summary set (shared by delta/snapshot paths).
-    fn encode_set(set: &[Option<AttrSummary>]) -> Vec<f64> {
+    /// Encode a summary set (shared by delta/snapshot paths). With
+    /// `skip_empty`, summaries that saw no observations encode as absent
+    /// — the per-attribute presence flags then act as the changed-column
+    /// bitmask of the sparse delta form (see [`super::wire`]), shrinking
+    /// pending increments to the attributes that actually changed.
+    fn encode_set_filtered(set: &[Option<AttrSummary>], skip_empty: bool) -> Vec<f64> {
         let mut out = Vec::new();
         for s in set {
             match s {
-                Some(s) => {
+                Some(s) if !(skip_empty && s.n == 0.0) => {
                     out.push(1.0);
                     s.encode(&mut out);
                 }
-                None => out.push(0.0),
+                _ => out.push(0.0),
             }
         }
         out
+    }
+
+    /// Dense encoding (every stateful attribute present).
+    fn encode_set(set: &[Option<AttrSummary>]) -> Vec<f64> {
+        Self::encode_set_filtered(set, false)
     }
 
     /// Decode a payload produced by [`Discretizer::encode_set`]. Returns
@@ -453,6 +476,7 @@ impl Transform for Discretizer {
 
     fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
         let (warmup, fine) = (self.warmup, self.fine);
+        let (mut sig_sum, mut sig_n) = (0.0f64, 0u32);
         match inst.values_mut() {
             Values::Dense(v) => {
                 for (j, val) in v.iter_mut().enumerate() {
@@ -465,7 +489,12 @@ impl Transform for Discretizer {
                     if let Some(p) = &mut self.pending[j] {
                         p.add(x, warmup, fine);
                     }
-                    *val = self.bin(j, x) as f32;
+                    let b = self.bin(j, x);
+                    if self.track_signal {
+                        sig_sum += b as f64 / (self.k - 1) as f64;
+                        sig_n += 1;
+                    }
+                    *val = b as f32;
                 }
             }
             Values::Sparse { indices, values, .. } => {
@@ -480,14 +509,30 @@ impl Transform for Discretizer {
                     if let Some(p) = &mut self.pending[j] {
                         p.add(x, warmup, fine);
                     }
-                    *val = self.bin(j, x) as f32;
+                    let b = self.bin(j, x);
+                    if self.track_signal {
+                        sig_sum += b as f64 / (self.k - 1) as f64;
+                        sig_n += 1;
+                    }
+                    *val = b as f32;
                 }
             }
+        }
+        if sig_n > 0 {
+            self.last_signal = Some(sig_sum / sig_n as f64);
         }
         Some(inst)
     }
 
     fn stats_delta(&mut self) -> Option<Vec<f64>> {
+        // sparse: attributes untouched since the last emission encode as
+        // absent (strictly no larger than the dense form)
+        let payload = Self::encode_set_filtered(&self.pending, true);
+        self.pending = self.fresh_set();
+        Some(payload)
+    }
+
+    fn stats_delta_dense(&mut self) -> Option<Vec<f64>> {
         let payload = Self::encode_set(&self.pending);
         self.pending = self.fresh_set();
         Some(payload)
@@ -514,6 +559,14 @@ impl Transform for Discretizer {
                 self.summaries = set;
             }
         }
+    }
+
+    fn track_drift_signal(&mut self, on: bool) {
+        self.track_signal = on;
+    }
+
+    fn drift_signal(&mut self) -> Option<f64> {
+        self.last_signal.take()
     }
 
     fn name(&self) -> &'static str {
@@ -646,6 +699,35 @@ mod tests {
         a.merge(&b);
         assert!((a.rank(0, 5.0) - before).abs() < 1e-9);
         assert!((a.rank(0, 5.0) - a.rank_naive(0, 5.0)).abs() < 1e-9);
+    }
+
+    /// Untouched attributes vanish from the pending delta (sparse form)
+    /// but the aggregator-side merge result is identical.
+    #[test]
+    fn sparse_pending_delta_skips_untouched_attributes() {
+        let schema = Schema::classification("t", Schema::all_numeric(3), 2);
+        let mk = || {
+            let mut d = Discretizer::with_resolution(4, 8, 16);
+            d.bind(&schema);
+            d
+        };
+        let (mut d_sparse, mut d_dense) = (mk(), mk());
+        for i in 0..40 {
+            let inst = Instance::sparse(vec![0], vec![i as f32 * 0.1], 3, Label::None);
+            d_sparse.transform(inst.clone()).unwrap();
+            d_dense.transform(inst).unwrap();
+        }
+        let sparse = Transform::stats_delta(&mut d_sparse).unwrap();
+        let dense = Transform::stats_delta_dense(&mut d_dense).unwrap();
+        assert!(sparse.len() < dense.len(), "{} !< {}", sparse.len(), dense.len());
+        // both forms merge identically into a master
+        let (mut ma, mut mb) = (mk(), mk());
+        ma.stats_merge(&sparse);
+        mb.stats_merge(&dense);
+        assert_eq!(
+            Transform::stats_snapshot(&ma).unwrap(),
+            Transform::stats_snapshot(&mb).unwrap()
+        );
     }
 
     #[test]

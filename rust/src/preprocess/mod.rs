@@ -34,6 +34,7 @@
 //! `p = 64`. See `README.md` in this directory for the protocol.
 
 pub mod merge;
+pub mod wire;
 pub mod sketch;
 pub mod scalers;
 pub mod discretize;
@@ -47,7 +48,7 @@ pub use discretize::Discretizer;
 pub use hasher::FeatureHasher;
 pub use merge::MergeableState;
 pub use pipeline::Pipeline;
-pub use processor::PipelineProcessor;
+pub use processor::{PipelineProcessor, SyncPolicy};
 pub use scalers::{MinMaxScaler, StandardScaler};
 pub use sketch::{CountMinSketch, MisraGries};
 pub use sync::StatsSyncProcessor;
@@ -90,8 +91,19 @@ pub trait Transform: Send {
 
     /// Take the pending state increment accumulated since the last call,
     /// serialized as a flat payload, and reset it. `None` = stateless.
+    /// Implementations ship the smaller of the dense and the sparse
+    /// (changed-attributes-only, see [`wire`]) encoding, so short sync
+    /// windows over wide schemas pay for what changed, not for the
+    /// schema width.
     fn stats_delta(&mut self) -> Option<Vec<f64>> {
         None
+    }
+
+    /// Like [`Transform::stats_delta`] but always the dense encoding —
+    /// the bench baseline for measuring what compression saves
+    /// ([`PipelineProcessor`]'s `with_dense_deltas`).
+    fn stats_delta_dense(&mut self) -> Option<Vec<f64>> {
+        self.stats_delta()
     }
 
     /// Aggregator side: fold a shard's delta payload into this
@@ -107,6 +119,28 @@ pub trait Transform: Send {
     /// Shard side: replace the transform-side state with the broadcast
     /// global snapshot, keeping the not-yet-shipped pending increment.
     fn stats_apply(&mut self, _payload: &[f64]) {}
+
+    /// Enable (or disable) drift-signal tracking. Off by default so the
+    /// transform hot path pays nothing for the signal when no gate will
+    /// ever read it (sync off, or `SyncPolicy::Count`);
+    /// [`PipelineProcessor`] turns it on for the gated policies.
+    fn track_drift_signal(&mut self, _on: bool) {}
+
+    /// **Take** the bounded `[0, 1]` drift signal produced by the last
+    /// [`Transform::transform`] call (clearing it), or `None` for
+    /// stateless operators, when tracking is off, and when the last
+    /// instance contributed no observation — so a gate is fed exactly
+    /// one sample per real observation, never a stale repeat. Under
+    /// `SyncPolicy::Drift` / `Hybrid` each pipeline shard feeds this
+    /// into a per-stage ADWIN gate and emits a delta when the gate
+    /// fires — so sync traffic tracks concept drift instead of a fixed
+    /// count (the DPASF adaptive-statistics idea). The signal should
+    /// sit near a stable level while the operator's statistics fit the
+    /// stream and move when they stop fitting (e.g. the scaler's mean
+    /// |z|).
+    fn drift_signal(&mut self) -> Option<f64> {
+        None
+    }
 }
 
 /// Standalone adapter: any stream source, preprocessed. Filters (transforms

@@ -65,6 +65,35 @@ impl Pipeline {
             .collect()
     }
 
+    /// Pending increment of a single stage (resetting it); `compress`
+    /// picks between the adaptive sparse form and the dense baseline.
+    /// `None` for stateless stages and out-of-range indices.
+    pub fn stats_delta_stage(&mut self, stage: usize, compress: bool) -> Option<Vec<f64>> {
+        let t = self.transforms.get_mut(stage)?;
+        if compress {
+            t.stats_delta()
+        } else {
+            t.stats_delta_dense()
+        }
+    }
+
+    /// Stage indices that carry mergeable state (probe: they answer
+    /// [`Transform::stats_snapshot`]).
+    pub fn stateful_stages(&self) -> Vec<usize> {
+        self.transforms
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| t.stats_snapshot().map(|_| i))
+            .collect()
+    }
+
+    /// Take the drift-gate signal of `stage` from its last transform
+    /// (see [`Transform::drift_signal`] — take-semantics, one sample
+    /// per real observation).
+    pub fn drift_signal(&mut self, stage: usize) -> Option<f64> {
+        self.transforms.get_mut(stage).and_then(|t| t.drift_signal())
+    }
+
     /// Aggregator side: fold a shard's delta for `stage` into the master.
     pub fn stats_merge(&mut self, stage: usize, payload: &[f64]) {
         if let Some(t) = self.transforms.get_mut(stage) {
@@ -108,6 +137,14 @@ impl Transform for Pipeline {
             cur = t.transform(cur)?;
         }
         Some(cur)
+    }
+
+    /// Propagate to every stage (nested pipelines included), so enabling
+    /// tracking on the outer pipeline reaches all gated operators.
+    fn track_drift_signal(&mut self, on: bool) {
+        for t in &mut self.transforms {
+            t.track_drift_signal(on);
+        }
     }
 
     fn name(&self) -> &'static str {

@@ -1,9 +1,15 @@
 //! Topology integration: run a preprocessing [`Pipeline`] as a
 //! [`Processor`] node, parallelizable like any other SAMOA processor.
-//! Stateful operators keep mergeable statistics, and with a sync interval
+//! Stateful operators keep mergeable statistics, and with a sync policy
 //! configured the shards converge to *shared* statistics through the
 //! delta-sync loop ([`super::sync::StatsSyncProcessor`]): shard → (Key)
 //! aggregator → (All broadcast) shards.
+//!
+//! Emission is governed by a [`SyncPolicy`]: the classic fixed count
+//! (`Count`), an ADWIN drift gate per stage with a max-staleness
+//! backstop (`Drift` — the default: communicate when the statistics
+//! meaningfully change, per Benczúr et al. 2018 / DPASF), or both
+//! (`Hybrid`).
 //!
 //! [`build_prequential_topology`] (classifier head, no sync — the PR-1
 //! shape) and [`build_prequential_topology_head`] (classifier *or*
@@ -12,6 +18,8 @@
 
 use crate::core::model::{Classifier, Regressor};
 use crate::core::Schema;
+use crate::drift::adwin::Adwin;
+use crate::drift::ChangeDetector;
 use crate::topology::{
     Ctx, Event, Grouping, Processor, ProcessorId, StreamId, Topology, TopologyBuilder,
 };
@@ -20,21 +28,162 @@ use super::pipeline::Pipeline;
 use super::sync::StatsSyncProcessor;
 use super::Transform;
 
+/// When does a pipeline shard ship its pending statistics deltas?
+///
+/// State machine per stateful stage (see `README.md` for the protocol
+/// around it):
+///
+/// ```text
+///             instance processed (staleness += 1, gate fed)
+///           ┌────────────────────────────────────────────┐
+///           ▼                                            │
+///   ACCUMULATING ──[policy trigger]──▶ EMIT StatsDelta ──┘
+///        │                              (round += 1, staleness = 0)
+///        └──[StatsGlobal arrives]──▶ view = global ⊕ pending
+/// ```
+///
+/// Triggers per policy:
+/// * `Count(n)` — staleness reaches `n` (the PR-2 fixed interval);
+/// * `Drift` — the stage's ADWIN gate (fed the stage's
+///   [`Transform::drift_signal`]) detects change, or staleness reaches
+///   `max_staleness` (backstop, so a quiet stage still reconciles);
+/// * `Hybrid` — any stage's gate fires (all stages flush together,
+///   keeping rounds aligned) or staleness reaches `interval`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SyncPolicy {
+    /// Emit every `n` locally processed instances.
+    Count(u64),
+    /// Emit a stage's delta when its ADWIN(`delta`) gate fires; backstop
+    /// emission after `max_staleness` instances without one.
+    Drift { delta: f64, max_staleness: u64 },
+    /// Coordinated flush of every stage when any gate fires, plus the
+    /// fixed `interval` cadence.
+    Hybrid { interval: u64, delta: f64 },
+}
+
+impl Default for SyncPolicy {
+    /// Drift-gated with a generous backstop — the adaptive default that
+    /// replaces the fixed count.
+    fn default() -> Self {
+        SyncPolicy::Drift { delta: 0.002, max_staleness: 1024 }
+    }
+}
+
+impl SyncPolicy {
+    /// Parse a CLI spec: a bare number is `Count(n)` (`0` = `None`, sync
+    /// off), `drift[:staleness[:delta]]`, `hybrid[:interval[:delta]]`.
+    pub fn parse(spec: &str) -> anyhow::Result<Option<SyncPolicy>> {
+        let mut parts = spec.split(':');
+        let head = parts.next().unwrap_or("");
+        let num = |s: Option<&str>, default: u64| -> anyhow::Result<u64> {
+            match s {
+                Some(v) => v
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("bad number '{v}' in sync spec '{spec}'")),
+                None => Ok(default),
+            }
+        };
+        let fnum = |s: Option<&str>, default: f64| -> anyhow::Result<f64> {
+            match s {
+                Some(v) => v
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad number '{v}' in sync spec '{spec}'")),
+                None => Ok(default),
+            }
+        };
+        let parsed = match head {
+            "off" | "0" => None,
+            "drift" => Some(SyncPolicy::Drift {
+                max_staleness: num(parts.next(), 1024)?.max(1),
+                delta: fnum(parts.next(), 0.002)?,
+            }),
+            "hybrid" => Some(SyncPolicy::Hybrid {
+                interval: num(parts.next(), 256)?.max(1),
+                delta: fnum(parts.next(), 0.002)?,
+            }),
+            n => match n.parse::<u64>() {
+                Ok(0) => None,
+                Ok(n) => Some(SyncPolicy::Count(n)),
+                Err(_) => anyhow::bail!(
+                    "bad sync spec '{spec}' (want N | off | drift[:staleness[:delta]] | \
+                     hybrid[:interval[:delta]])"
+                ),
+            },
+        };
+        // a leftover segment means the user asked for a knob that does
+        // not exist — fail fast instead of silently dropping it
+        if let Some(extra) = parts.next() {
+            anyhow::bail!("trailing segment '{extra}' in sync spec '{spec}'");
+        }
+        Ok(parsed)
+    }
+
+    /// ADWIN confidence, when the policy uses a gate.
+    fn gate_delta(&self) -> Option<f64> {
+        match *self {
+            SyncPolicy::Count(_) => None,
+            SyncPolicy::Drift { delta, .. } | SyncPolicy::Hybrid { delta, .. } => Some(delta),
+        }
+    }
+}
+
+/// Per-shard sync machinery: one slot per stateful pipeline stage.
+struct SyncState {
+    policy: SyncPolicy,
+    stream: StreamId,
+    /// Ship the adaptive sparse delta encoding (`false` = dense
+    /// baseline, bench comparisons only).
+    compress: bool,
+    /// Stateful stage indices (slots are parallel to this).
+    stages: Vec<usize>,
+    gates: Vec<Option<Adwin>>,
+    /// Instances since the slot's last emission.
+    staleness: Vec<u64>,
+    /// Gate fired since the slot's last emission.
+    fired: Vec<bool>,
+    /// Per-stage round id: the shard's emission sequence number, carried
+    /// on every `StatsDelta` so the aggregator keeps rounds exact.
+    rounds: Vec<u64>,
+    /// Diagnostics: deltas emitted / gate detections.
+    emissions: u64,
+    gate_fires: u64,
+}
+
+impl SyncState {
+    fn new(policy: SyncPolicy, stream: StreamId, pipeline: &Pipeline) -> Self {
+        let stages = pipeline.stateful_stages();
+        let gates = stages
+            .iter()
+            .map(|_| policy.gate_delta().map(Adwin::new))
+            .collect();
+        SyncState {
+            policy,
+            stream,
+            compress: true,
+            staleness: vec![0; stages.len()],
+            fired: vec![false; stages.len()],
+            rounds: vec![0; stages.len()],
+            gates,
+            stages,
+            emissions: 0,
+            gate_fires: 0,
+        }
+    }
+}
+
 /// One pipeline instance inside a topology: transforms every
 /// `Event::Instance` and forwards survivors downstream, preserving ids
 /// (so downstream key-groupings and the evaluator still line up).
 ///
-/// With [`PipelineProcessor::with_sync`], every `interval` locally
-/// processed instances the shard emits its stages' pending state deltas
-/// (`Event::StatsDelta`, keyed by stage) and adopts the aggregator's
-/// merged broadcasts (`Event::StatsGlobal`).
+/// With [`PipelineProcessor::with_sync`], the shard emits its stages'
+/// pending state deltas (`Event::StatsDelta`, keyed by stage, stamped
+/// with the shard id and a per-stage round id) per the configured
+/// [`SyncPolicy`], and adopts the aggregator's merged broadcasts
+/// (`Event::StatsGlobal`).
 pub struct PipelineProcessor {
     pipeline: Pipeline,
     out: StreamId,
-    /// (interval, delta stream) when delta-sync is enabled.
-    sync: Option<(u64, StreamId)>,
-    /// Instances processed since the last delta emission.
-    since_sync: u64,
+    sync: Option<SyncState>,
 }
 
 impl PipelineProcessor {
@@ -42,13 +191,32 @@ impl PipelineProcessor {
     /// instances on `out`.
     pub fn new(mut pipeline: Pipeline, input: &Schema, out: StreamId) -> Self {
         pipeline.bind(input);
-        PipelineProcessor { pipeline, out, sync: None, since_sync: 0 }
+        PipelineProcessor { pipeline, out, sync: None }
     }
 
-    /// Enable delta-sync: emit pending state deltas on `delta_stream`
-    /// every `interval` locally processed instances.
-    pub fn with_sync(mut self, interval: u64, delta_stream: StreamId) -> Self {
-        self.sync = Some((interval.max(1), delta_stream));
+    /// Enable delta-sync under `policy`, emitting deltas on
+    /// `delta_stream`. Gated policies (`Drift`/`Hybrid`) also switch on
+    /// per-instance drift-signal tracking in the pipeline's operators;
+    /// `Count` leaves it off, so the fixed-interval hot path pays
+    /// nothing for signals no gate will read.
+    pub fn with_sync(mut self, policy: SyncPolicy, delta_stream: StreamId) -> Self {
+        let policy = match policy {
+            SyncPolicy::Count(n) => SyncPolicy::Count(n.max(1)),
+            p => p,
+        };
+        if policy.gate_delta().is_some() {
+            self.pipeline.track_drift_signal(true);
+        }
+        self.sync = Some(SyncState::new(policy, delta_stream, &self.pipeline));
+        self
+    }
+
+    /// Bench baseline: ship dense deltas instead of the adaptive sparse
+    /// encoding (measures what compression saves).
+    pub fn with_dense_deltas(mut self) -> Self {
+        if let Some(sync) = self.sync.as_mut() {
+            sync.compress = false;
+        }
         self
     }
 
@@ -61,16 +229,78 @@ impl PipelineProcessor {
         &self.pipeline
     }
 
-    /// Ship every stage's pending increment on `delta_stream`.
-    fn emit_deltas(&mut self, delta_stream: StreamId, ctx: &mut Ctx) {
-        for (stage, payload) in self.pipeline.stats_deltas() {
+    /// Deltas emitted so far (diagnostics/tests).
+    pub fn sync_emissions(&self) -> u64 {
+        self.sync.as_ref().map_or(0, |s| s.emissions)
+    }
+
+    /// Drift-gate detections so far (diagnostics/tests).
+    pub fn gate_fires(&self) -> u64 {
+        self.sync.as_ref().map_or(0, |s| s.gate_fires)
+    }
+
+    /// Ship slot `slot`'s pending increment on the delta stream.
+    fn emit_slot(pipeline: &mut Pipeline, sync: &mut SyncState, slot: usize, ctx: &mut Ctx) {
+        let stage = sync.stages[slot];
+        if let Some(payload) = pipeline.stats_delta_stage(stage, sync.compress) {
+            let round = sync.rounds[slot];
+            sync.rounds[slot] += 1;
+            sync.emissions += 1;
             ctx.emit(
-                delta_stream,
+                sync.stream,
                 stage as u64,
-                Event::StatsDelta { stage: stage as u32, payload: std::sync::Arc::new(payload) },
+                Event::StatsDelta {
+                    stage: stage as u32,
+                    shard: ctx.instance as u32,
+                    round,
+                    payload: std::sync::Arc::new(payload),
+                },
             );
         }
-        self.since_sync = 0;
+        sync.staleness[slot] = 0;
+        sync.fired[slot] = false;
+    }
+
+    /// Post-instance sync step: feed the gates and emit per policy.
+    fn sync_tick(&mut self, ctx: &mut Ctx) {
+        let Some(sync) = self.sync.as_mut() else { return };
+        for slot in 0..sync.stages.len() {
+            sync.staleness[slot] += 1;
+            if let Some(gate) = sync.gates[slot].as_mut() {
+                if let Some(sig) = self.pipeline.drift_signal(sync.stages[slot]) {
+                    gate.add(sig);
+                    if gate.detected() {
+                        sync.fired[slot] = true;
+                        sync.gate_fires += 1;
+                    }
+                }
+            }
+        }
+        match sync.policy {
+            SyncPolicy::Count(n) => {
+                for slot in 0..sync.stages.len() {
+                    if sync.staleness[slot] >= n {
+                        Self::emit_slot(&mut self.pipeline, sync, slot, ctx);
+                    }
+                }
+            }
+            SyncPolicy::Drift { max_staleness, .. } => {
+                for slot in 0..sync.stages.len() {
+                    if sync.fired[slot] || sync.staleness[slot] >= max_staleness {
+                        Self::emit_slot(&mut self.pipeline, sync, slot, ctx);
+                    }
+                }
+            }
+            SyncPolicy::Hybrid { interval, .. } => {
+                let any = (0..sync.stages.len())
+                    .any(|s| sync.fired[s] || sync.staleness[s] >= interval);
+                if any {
+                    for slot in 0..sync.stages.len() {
+                        Self::emit_slot(&mut self.pipeline, sync, slot, ctx);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -81,12 +311,7 @@ impl Processor for PipelineProcessor {
                 if let Some(out) = self.pipeline.transform(inst) {
                     ctx.emit(self.out, id, Event::Instance { id, inst: out });
                 }
-                self.since_sync += 1;
-                if let Some((interval, delta_stream)) = self.sync {
-                    if self.since_sync >= interval {
-                        self.emit_deltas(delta_stream, ctx);
-                    }
-                }
+                self.sync_tick(ctx);
             }
             Event::StatsGlobal { stage, payload } => {
                 self.pipeline.stats_apply(stage as usize, &payload);
@@ -95,15 +320,17 @@ impl Processor for PipelineProcessor {
         }
     }
 
-    /// Flush the un-shipped pending increment so short runs (or
-    /// `interval > n/p`) still reach the aggregator. Reliable under the
-    /// local engine (the flush drains before processors are collected);
-    /// best-effort under the threaded engine, where the aggregator may
-    /// already be shutting down.
+    /// Flush un-shipped pending increments so short runs (and quiet
+    /// drift-gated stages) still reach the aggregator. Reliable under
+    /// the local engine (the flush drains before processors are
+    /// collected); best-effort under the threaded engine, where the
+    /// aggregator may already be shutting down.
     fn on_shutdown(&mut self, ctx: &mut Ctx) {
-        if let Some((_, delta_stream)) = self.sync {
-            if self.since_sync > 0 {
-                self.emit_deltas(delta_stream, ctx);
+        if let Some(sync) = self.sync.as_mut() {
+            for slot in 0..sync.stages.len() {
+                if sync.staleness[slot] > 0 {
+                    Self::emit_slot(&mut self.pipeline, sync, slot, ctx);
+                }
             }
         }
     }
@@ -170,23 +397,46 @@ pub fn build_prequential_topology(
     )
 }
 
+/// [`build_prequential_topology_sync`] with compressed deltas (the
+/// production encoding).
+pub fn build_prequential_topology_head(
+    schema: &Schema,
+    parallelism: usize,
+    sync: Option<SyncPolicy>,
+    pipeline_factory: impl Fn(usize) -> Pipeline + Clone + 'static,
+    head: LearnerHead,
+    evaluator: impl Fn(usize) -> Box<dyn Processor> + 'static,
+) -> (Topology, PreprocessHandles) {
+    build_prequential_topology_sync(
+        schema,
+        parallelism,
+        sync,
+        true,
+        pipeline_factory,
+        head,
+        evaluator,
+    )
+}
+
 /// Assemble the prequential preprocessing topology with a selectable
 /// learner head and optional delta-sync:
 ///
 /// ```text
 /// source → pipeline×p → learner(classifier|regressor) → evaluator
-///              ⇅ (sync_interval: Key-grouped deltas / All broadcasts)
+///              ⇅ (SyncPolicy: Key-grouped deltas / All broadcasts)
 ///          stats-sync
 /// ```
 ///
 /// `pipeline_factory` is called once per pipeline shard (each owns
 /// independent operator state) and once more for the aggregator's master
-/// state container; `sync_interval` is the per-shard emission period in
-/// instances (`None` = isolated shard statistics, the PR-1 behavior).
-pub fn build_prequential_topology_head(
+/// state container; `sync` selects the emission policy (`None` =
+/// isolated shard statistics, the PR-1 behavior); `compress = false`
+/// ships dense deltas (bench baseline).
+pub fn build_prequential_topology_sync(
     schema: &Schema,
     parallelism: usize,
-    sync_interval: Option<u64>,
+    sync: Option<SyncPolicy>,
+    compress: bool,
     pipeline_factory: impl Fn(usize) -> Pipeline + Clone + 'static,
     head: LearnerHead,
     evaluator: impl Fn(usize) -> Box<dyn Processor> + 'static,
@@ -205,8 +455,15 @@ pub fn build_prequential_topology_head(
     let pf = pipeline_factory.clone();
     let pipe = b.add_processor("pipeline", parallelism, move |i| {
         let p = PipelineProcessor::new(pf(i), &in_schema, instances);
-        Box::new(match sync_interval {
-            Some(interval) => p.with_sync(interval, delta),
+        Box::new(match sync {
+            Some(policy) => {
+                let p = p.with_sync(policy, delta);
+                if compress {
+                    p
+                } else {
+                    p.with_dense_deltas()
+                }
+            }
             None => p,
         })
     });
@@ -233,7 +490,7 @@ pub fn build_prequential_topology_head(
         }
     };
     let eval = b.add_processor("evaluator", 1, evaluator);
-    let stats = sync_interval.map(|_| {
+    let stats = sync.map(|_| {
         let s = schema.clone();
         let pf = pipeline_factory.clone();
         b.add_processor("stats-sync", 1, move |_| {
@@ -279,12 +536,43 @@ pub fn build_prequential_topology_head(
 mod tests {
     use super::*;
     use crate::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+    use crate::core::model::Classifier;
     use crate::engine::LocalEngine;
     use crate::evaluation::prequential::{EvalSink, EvaluatorProcessor};
     use crate::preprocess::{Discretizer, StandardScaler};
     use crate::streams::waveform::WaveformGenerator;
     use crate::streams::StreamSource;
     use std::sync::Arc;
+
+    fn ht_head() -> LearnerHead {
+        LearnerHead::Classifier(Box::new(|s: &Schema| {
+            Box::new(HoeffdingTree::new(s.clone(), HTConfig::default())) as Box<dyn Classifier>
+        }))
+    }
+
+    #[test]
+    fn sync_policy_parse_forms_and_rejections() {
+        assert_eq!(SyncPolicy::parse("off").unwrap(), None);
+        assert_eq!(SyncPolicy::parse("0").unwrap(), None);
+        assert_eq!(SyncPolicy::parse("256").unwrap(), Some(SyncPolicy::Count(256)));
+        assert!(matches!(
+            SyncPolicy::parse("drift").unwrap(),
+            Some(SyncPolicy::Drift { max_staleness: 1024, .. })
+        ));
+        assert!(matches!(
+            SyncPolicy::parse("drift:512:0.01").unwrap(),
+            Some(SyncPolicy::Drift { max_staleness: 512, .. })
+        ));
+        assert!(matches!(
+            SyncPolicy::parse("hybrid:128").unwrap(),
+            Some(SyncPolicy::Hybrid { interval: 128, .. })
+        ));
+        assert!(SyncPolicy::parse("bogus").is_err());
+        assert!(SyncPolicy::parse("drift:x").is_err());
+        // trailing segments are knobs that don't exist: fail fast
+        assert!(SyncPolicy::parse("drift:512:0.01:junk").is_err());
+        assert!(SyncPolicy::parse("256:junk").is_err());
+    }
 
     #[test]
     fn topology_runs_and_predicts() {
@@ -321,11 +609,9 @@ mod tests {
         let (topo, handles) = build_prequential_topology_head(
             &schema,
             p,
-            Some(64),
+            Some(SyncPolicy::Count(64)),
             |_| Pipeline::new().then(StandardScaler::new()),
-            LearnerHead::Classifier(Box::new(|s: &Schema| -> Box<dyn crate::core::model::Classifier> {
-                Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
-            })),
+            ht_head(),
             move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
         );
         let n = 2048u64;
@@ -359,11 +645,9 @@ mod tests {
         let (topo, handles) = build_prequential_topology_head(
             &schema,
             p,
-            Some(64),
+            Some(SyncPolicy::Count(64)),
             |_| Pipeline::new().then(StandardScaler::new()),
-            LearnerHead::Classifier(Box::new(|s: &Schema| -> Box<dyn crate::core::model::Classifier> {
-                Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
-            })),
+            ht_head(),
             move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
         );
         // 2050 = 4 × 512 + 2: shards 0/1 see 513 instances (8 emissions +
@@ -379,5 +663,39 @@ mod tests {
         // 8 complete rounds (32 deliveries) + ONE partial-round flush
         // broadcast at aggregator shutdown (4 deliveries)
         assert_eq!(globals, 36, "partial round must be flushed exactly once");
+    }
+
+    /// Drift policy on a stationary stream: the gate stays silent, so
+    /// only the max-staleness backstop (and the shutdown flush) emits —
+    /// far fewer deltas than a tight fixed count would pay.
+    #[test]
+    fn drift_policy_backstop_bounds_staleness() {
+        let mut stream = WaveformGenerator::classification(11);
+        let schema = stream.schema().clone();
+        let sink = EvalSink::new(schema.n_classes(), 1.0, 10_000);
+        let sink2 = Arc::clone(&sink);
+        let p = 2usize;
+        let (topo, handles) = build_prequential_topology_head(
+            &schema,
+            p,
+            Some(SyncPolicy::Drift { delta: 0.002, max_staleness: 512 }),
+            |_| Pipeline::new().then(StandardScaler::new()),
+            ht_head(),
+            move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+        );
+        let n = 4096u64;
+        let source = (0..n)
+            .map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+        let m = LocalEngine::new().run(&topo, handles.entry, source, |_| {});
+        let deltas = m.streams[handles.delta.unwrap().0].events;
+        // backstop floor: each shard must emit at least every 512
+        // instances (2048 seen per shard → ≥ 4 each), and gate fires can
+        // only add to that; a Count(64) policy would emit 64 total
+        assert!(deltas >= 8, "backstop did not fire: {deltas} deltas");
+        assert!(
+            deltas < 64,
+            "drift policy emitted as much as a tight fixed count: {deltas}"
+        );
+        assert!(m.streams[handles.global.unwrap().0].events > 0);
     }
 }

@@ -21,7 +21,7 @@ use crate::core::instance::Values;
 use crate::core::{AttributeKind, Instance, Schema};
 
 use super::merge::MergeableState;
-use super::Transform;
+use super::{wire, Transform};
 
 /// Per-attribute Welford moments (count / mean / sum of squared
 /// deviations) with the Chan et al. parallel merge.
@@ -47,6 +47,79 @@ impl Moments {
         let d = x - self.mean[j];
         self.mean[j] += d / self.n[j];
         self.m2[j] += d * (x - self.mean[j]);
+    }
+
+    /// Chan parallel update of a single column (shared by full-state
+    /// merge and sparse-payload merge).
+    #[inline]
+    fn merge_col(&mut self, j: usize, nb: f64, mean_b: f64, m2_b: f64) {
+        if nb == 0.0 {
+            return;
+        }
+        let na = self.n[j];
+        if na == 0.0 {
+            self.n[j] = nb;
+            self.mean[j] = mean_b;
+            self.m2[j] = m2_b;
+            return;
+        }
+        // Chan's parallel update: exact in ℝ, commutative/associative
+        // up to f64 rounding.
+        let n = na + nb;
+        let d = mean_b - self.mean[j];
+        self.mean[j] += d * nb / n;
+        self.m2[j] += m2_b + d * d * na * nb / n;
+        self.n[j] = n;
+    }
+
+    /// Sparse encoding of only the columns that saw observations:
+    /// `[NaN, d, mask…, (n, mean, m2) per set column]` (see
+    /// [`super::wire`]).
+    pub fn sparse_delta(&self) -> Vec<f64> {
+        let d = self.dim();
+        let changed: Vec<bool> = self.n.iter().map(|&n| n > 0.0).collect();
+        let m = changed.iter().filter(|&&c| c).count();
+        let mut out = Vec::with_capacity(2 + wire::mask_words(d) + 3 * m);
+        out.push(f64::NAN);
+        out.push(d as f64);
+        wire::encode_mask(&mut out, &changed);
+        for j in 0..d {
+            if changed[j] {
+                out.push(self.n[j]);
+                out.push(self.mean[j]);
+                out.push(self.m2[j]);
+            }
+        }
+        out
+    }
+
+    /// Fold a delta payload (dense or sparse) into this state. Returns
+    /// `false` (leaving the state unchanged) on a shape mismatch.
+    pub fn merge_payload(&mut self, payload: &[f64]) -> bool {
+        if wire::is_sparse(payload) {
+            if payload.len() < 2 || payload[1] as usize != self.dim() {
+                return false;
+            }
+            let d = self.dim();
+            let words = wire::mask_words(d);
+            let Some(cols) = wire::decode_mask(&payload[2..], d) else { return false };
+            let body = &payload[2 + words..];
+            if body.len() != 3 * cols.len() {
+                return false;
+            }
+            for (i, &j) in cols.iter().enumerate() {
+                self.merge_col(j, body[3 * i], body[3 * i + 1], body[3 * i + 2]);
+            }
+            return true;
+        }
+        if payload.len() != 3 * self.dim() {
+            return false;
+        }
+        let d = self.dim();
+        for j in 0..d {
+            self.merge_col(j, payload[j], payload[d + j], payload[2 * d + j]);
+        }
+        true
     }
 
     pub fn count(&self, j: usize) -> f64 {
@@ -81,23 +154,7 @@ impl MergeableState for Moments {
         }
         debug_assert_eq!(self.dim(), other.dim(), "Moments dim mismatch");
         for j in 0..self.dim().min(other.dim()) {
-            let (na, nb) = (self.n[j], other.n[j]);
-            if nb == 0.0 {
-                continue;
-            }
-            if na == 0.0 {
-                self.n[j] = nb;
-                self.mean[j] = other.mean[j];
-                self.m2[j] = other.m2[j];
-                continue;
-            }
-            // Chan's parallel update: exact in ℝ, commutative/associative
-            // up to f64 rounding.
-            let n = na + nb;
-            let d = other.mean[j] - self.mean[j];
-            self.mean[j] += d * nb / n;
-            self.m2[j] += other.m2[j] + d * d * na * nb / n;
-            self.n[j] = n;
+            self.merge_col(j, other.n[j], other.mean[j], other.m2[j]);
         }
     }
 
@@ -110,6 +167,17 @@ impl MergeableState for Moments {
     }
 
     fn apply_delta(&mut self, payload: &[f64]) {
+        if wire::is_sparse(payload) {
+            // sparse rebuild: unset columns are the empty (identity) state
+            if payload.len() < 2 {
+                return;
+            }
+            let mut fresh = Moments::with_dim(payload[1] as usize);
+            if fresh.merge_payload(payload) {
+                *self = fresh;
+            }
+            return;
+        }
         if payload.len() % 3 != 0 {
             return;
         }
@@ -161,6 +229,60 @@ impl Ranges {
         self.hi[j]
     }
 
+    #[inline]
+    fn merge_col(&mut self, j: usize, lo: f64, hi: f64) {
+        self.lo[j] = self.lo[j].min(lo);
+        self.hi[j] = self.hi[j].max(hi);
+    }
+
+    /// Sparse encoding of only the observed columns:
+    /// `[NaN, d, mask…, (lo, hi) per set column]`.
+    pub fn sparse_delta(&self) -> Vec<f64> {
+        let d = self.dim();
+        let changed: Vec<bool> = (0..d).map(|j| self.lo[j] <= self.hi[j]).collect();
+        let m = changed.iter().filter(|&&c| c).count();
+        let mut out = Vec::with_capacity(2 + wire::mask_words(d) + 2 * m);
+        out.push(f64::NAN);
+        out.push(d as f64);
+        wire::encode_mask(&mut out, &changed);
+        for j in 0..d {
+            if changed[j] {
+                out.push(self.lo[j]);
+                out.push(self.hi[j]);
+            }
+        }
+        out
+    }
+
+    /// Fold a delta payload (dense or sparse) into this state. Returns
+    /// `false` (state unchanged) on a shape mismatch.
+    pub fn merge_payload(&mut self, payload: &[f64]) -> bool {
+        if wire::is_sparse(payload) {
+            if payload.len() < 2 || payload[1] as usize != self.dim() {
+                return false;
+            }
+            let d = self.dim();
+            let words = wire::mask_words(d);
+            let Some(cols) = wire::decode_mask(&payload[2..], d) else { return false };
+            let body = &payload[2 + words..];
+            if body.len() != 2 * cols.len() {
+                return false;
+            }
+            for (i, &j) in cols.iter().enumerate() {
+                self.merge_col(j, body[2 * i], body[2 * i + 1]);
+            }
+            return true;
+        }
+        if payload.len() != 2 * self.dim() {
+            return false;
+        }
+        let d = self.dim();
+        for j in 0..d {
+            self.merge_col(j, payload[j], payload[d + j]);
+        }
+        true
+    }
+
     fn bytes(&self) -> usize {
         vec_flat_bytes(&self.lo) + vec_flat_bytes(&self.hi)
     }
@@ -177,8 +299,7 @@ impl MergeableState for Ranges {
         }
         debug_assert_eq!(self.dim(), other.dim(), "Ranges dim mismatch");
         for j in 0..self.dim().min(other.dim()) {
-            self.lo[j] = self.lo[j].min(other.lo[j]);
-            self.hi[j] = self.hi[j].max(other.hi[j]);
+            self.merge_col(j, other.lo[j], other.hi[j]);
         }
     }
 
@@ -190,6 +311,16 @@ impl MergeableState for Ranges {
     }
 
     fn apply_delta(&mut self, payload: &[f64]) {
+        if wire::is_sparse(payload) {
+            if payload.len() < 2 {
+                return;
+            }
+            let mut fresh = Ranges::with_dim(payload[1] as usize);
+            if fresh.merge_payload(payload) {
+                *self = fresh;
+            }
+            return;
+        }
         if payload.len() % 2 != 0 {
             return;
         }
@@ -213,11 +344,23 @@ pub struct StandardScaler {
     pending: Moments,
     /// Which attributes are numeric under the bound schema.
     numeric: Vec<bool>,
+    /// Compute the drift signal per instance (off = zero hot-path cost).
+    track_signal: bool,
+    /// Mean |z|/3 (clamped) of the last transformed instance — the
+    /// drift-gate signal: sits near 0.27 while the stream fits the
+    /// running moments, rises when it stops fitting.
+    last_signal: Option<f64>,
 }
 
 impl StandardScaler {
     pub fn new() -> Self {
-        StandardScaler { view: Moments::default(), pending: Moments::default(), numeric: Vec::new() }
+        StandardScaler {
+            view: Moments::default(),
+            pending: Moments::default(),
+            numeric: Vec::new(),
+            track_signal: false,
+            last_signal: None,
+        }
     }
 
     #[inline]
@@ -275,6 +418,7 @@ impl Transform for StandardScaler {
     }
 
     fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
+        let (mut sig_sum, mut sig_n) = (0.0f64, 0u32);
         match inst.values_mut() {
             Values::Dense(v) => {
                 for (j, val) in v.iter_mut().enumerate() {
@@ -284,7 +428,12 @@ impl Transform for StandardScaler {
                     let x = *val as f64;
                     self.update(j, x);
                     let sd = self.view.sd(j);
-                    *val = if sd > 1e-12 { ((x - self.view.mean(j)) / sd) as f32 } else { 0.0 };
+                    let z = if sd > 1e-12 { (x - self.view.mean(j)) / sd } else { 0.0 };
+                    if self.track_signal {
+                        sig_sum += (z.abs() / 3.0).min(1.0);
+                        sig_n += 1;
+                    }
+                    *val = if sd > 1e-12 { z as f32 } else { 0.0 };
                 }
             }
             Values::Sparse { indices, values, .. } => {
@@ -297,28 +446,37 @@ impl Transform for StandardScaler {
                     self.update(j, x);
                     let sd = self.view.sd(j);
                     if sd > 1e-12 {
+                        if self.track_signal {
+                            sig_sum += ((x / sd).abs() / 3.0).min(1.0);
+                            sig_n += 1;
+                        }
                         *val = (x / sd) as f32; // no centering: keep sparsity
                     }
                 }
             }
         }
+        if sig_n > 0 {
+            self.last_signal = Some(sig_sum / sig_n as f64);
+        }
         Some(inst)
     }
 
     fn stats_delta(&mut self) -> Option<Vec<f64>> {
+        let payload = super::wire::pick_smaller(self.pending.delta(), self.pending.sparse_delta());
+        self.pending.reset();
+        Some(payload)
+    }
+
+    fn stats_delta_dense(&mut self) -> Option<Vec<f64>> {
         let payload = self.pending.delta();
         self.pending.reset();
         Some(payload)
     }
 
     fn stats_merge(&mut self, payload: &[f64]) {
-        // shape guard: a foreign/truncated payload must not shrink state
-        if payload.len() != 3 * self.view.dim() {
-            return;
-        }
-        let mut inc = Moments::default();
-        inc.apply_delta(payload);
-        self.view.merge(&inc);
+        // merge_payload shape-guards: a foreign/truncated payload (dense
+        // or sparse) must not corrupt state
+        self.view.merge_payload(payload);
     }
 
     fn stats_snapshot(&self) -> Option<Vec<f64>> {
@@ -334,6 +492,14 @@ impl Transform for StandardScaler {
         // keep the not-yet-shipped local increment on top of the global
         global.merge(&self.pending);
         self.view = global;
+    }
+
+    fn track_drift_signal(&mut self, on: bool) {
+        self.track_signal = on;
+    }
+
+    fn drift_signal(&mut self) -> Option<f64> {
+        self.last_signal.take()
     }
 
     fn name(&self) -> &'static str {
@@ -354,11 +520,23 @@ pub struct MinMaxScaler {
     view: Ranges,
     pending: Ranges,
     numeric: Vec<bool>,
+    /// Compute the drift signal per instance (off = zero hot-path cost).
+    track_signal: bool,
+    /// Mean normalized position of the last instance — uniform-ish in
+    /// expectation while the range fits; drifts toward 0/1 when the
+    /// stream leaves the learned range.
+    last_signal: Option<f64>,
 }
 
 impl MinMaxScaler {
     pub fn new() -> Self {
-        MinMaxScaler { view: Ranges::default(), pending: Ranges::default(), numeric: Vec::new() }
+        MinMaxScaler {
+            view: Ranges::default(),
+            pending: Ranges::default(),
+            numeric: Vec::new(),
+            track_signal: false,
+            last_signal: None,
+        }
     }
 
     #[inline]
@@ -416,6 +594,7 @@ impl Transform for MinMaxScaler {
     }
 
     fn transform(&mut self, mut inst: Instance) -> Option<Instance> {
+        let (mut sig_sum, mut sig_n) = (0.0f64, 0u32);
         match inst.values_mut() {
             Values::Dense(v) => {
                 for (j, val) in v.iter_mut().enumerate() {
@@ -425,7 +604,12 @@ impl Transform for MinMaxScaler {
                     let x = *val as f64;
                     self.update(j, x);
                     let r = self.range(j);
-                    *val = if r > 1e-12 { ((x - self.view.lo(j)) / r) as f32 } else { 0.0 };
+                    let y = if r > 1e-12 { (x - self.view.lo(j)) / r } else { 0.0 };
+                    if self.track_signal {
+                        sig_sum += y;
+                        sig_n += 1;
+                    }
+                    *val = y as f32;
                 }
             }
             Values::Sparse { indices, values, .. } => {
@@ -440,27 +624,35 @@ impl Transform for MinMaxScaler {
                     let m = self.view.lo(j).abs().max(self.view.hi(j).abs());
                     if m > 1e-12 {
                         *val = (x / m) as f32;
+                        if self.track_signal {
+                            sig_sum += (x / m).abs();
+                            sig_n += 1;
+                        }
                     }
                 }
             }
+        }
+        if sig_n > 0 {
+            self.last_signal = Some(sig_sum / sig_n as f64);
         }
         Some(inst)
     }
 
     fn stats_delta(&mut self) -> Option<Vec<f64>> {
+        let payload = super::wire::pick_smaller(self.pending.delta(), self.pending.sparse_delta());
+        self.pending.reset();
+        Some(payload)
+    }
+
+    fn stats_delta_dense(&mut self) -> Option<Vec<f64>> {
         let payload = self.pending.delta();
         self.pending.reset();
         Some(payload)
     }
 
     fn stats_merge(&mut self, payload: &[f64]) {
-        // shape guard: a foreign/truncated payload must not shrink state
-        if payload.len() != 2 * self.view.dim() {
-            return;
-        }
-        let mut inc = Ranges::default();
-        inc.apply_delta(payload);
-        self.view.merge(&inc);
+        // merge_payload shape-guards both the dense and the sparse form
+        self.view.merge_payload(payload);
     }
 
     fn stats_snapshot(&self) -> Option<Vec<f64>> {
@@ -475,6 +667,14 @@ impl Transform for MinMaxScaler {
         global.apply_delta(payload);
         global.merge(&self.pending);
         self.view = global;
+    }
+
+    fn track_drift_signal(&mut self, on: bool) {
+        self.track_signal = on;
+    }
+
+    fn drift_signal(&mut self) -> Option<f64> {
+        self.last_signal.take()
     }
 
     fn name(&self) -> &'static str {
@@ -608,5 +808,100 @@ mod tests {
         t.bind(&schema);
         t.stats_merge(&s.stats_snapshot().unwrap());
         assert!((t.mean(0) - s.mean(0)).abs() < 1e-12);
+    }
+
+    /// Sparse deltas carry exactly the changed columns and merge to the
+    /// same state as the dense form.
+    #[test]
+    fn sparse_delta_merges_like_dense() {
+        let mut m = Moments::with_dim(64);
+        for j in [3usize, 17, 40] {
+            for i in 0..20 {
+                m.add(j, i as f64 * 0.5 + j as f64);
+            }
+        }
+        let sparse = m.sparse_delta();
+        let dense = m.delta();
+        assert!(crate::preprocess::wire::is_sparse(&sparse));
+        assert!(sparse.len() < dense.len(), "3/64 changed columns must compress");
+
+        let (mut a, mut b) = (Moments::with_dim(64), Moments::with_dim(64));
+        for j in 0..64 {
+            a.add(j, 1.0);
+            b.add(j, 1.0);
+        }
+        assert!(a.merge_payload(&dense));
+        assert!(b.merge_payload(&sparse));
+        assert!(crate::preprocess::merge::payloads_close(&a.delta(), &b.delta(), 1e-12));
+
+        // apply_delta rebuilds from the sparse form too
+        let mut c = Moments::default();
+        c.apply_delta(&sparse);
+        assert!(crate::preprocess::merge::payloads_close(&c.delta(), &m.delta(), 1e-12));
+    }
+
+    #[test]
+    fn sparse_ranges_merge_like_dense() {
+        let mut r = Ranges::with_dim(32);
+        r.add(5, -2.0);
+        r.add(5, 7.0);
+        r.add(30, 1.0);
+        let sparse = r.sparse_delta();
+        assert!(sparse.len() < r.delta().len());
+        let (mut a, mut b) = (Ranges::with_dim(32), Ranges::with_dim(32));
+        a.add(5, 0.0);
+        b.add(5, 0.0);
+        assert!(a.merge_payload(&r.delta()));
+        assert!(b.merge_payload(&sparse));
+        assert_eq!(a.delta(), b.delta());
+        let mut c = Ranges::default();
+        c.apply_delta(&sparse);
+        assert_eq!(c.delta(), r.delta());
+    }
+
+    /// Shape guards: foreign payloads leave state untouched.
+    #[test]
+    fn merge_payload_rejects_mismatched_shapes() {
+        let mut m = Moments::with_dim(4);
+        m.add(0, 1.0);
+        let before = m.delta();
+        assert!(!m.merge_payload(&[f64::NAN, 9.0, 0.0])); // wrong dim
+        assert!(!m.merge_payload(&[1.0, 2.0])); // wrong dense length
+        assert_eq!(m.delta(), before);
+    }
+
+    /// The drift signal tracks distribution shift: stationary data keeps
+    /// mean |z|/3 low, an abrupt mean jump pushes it up.
+    #[test]
+    fn drift_signal_reacts_to_shift() {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut s = StandardScaler::new();
+        s.bind(&schema);
+        Transform::track_drift_signal(&mut s, true);
+        let mut rng = Rng::new(8);
+        let mut stable = 0.0;
+        for _ in 0..2000 {
+            s.transform(Instance::dense(vec![rng.gaussian() as f32], Label::None)).unwrap();
+            // take-semantics: each observed instance yields one sample
+            stable = Transform::drift_signal(&mut s).unwrap();
+            assert!(Transform::drift_signal(&mut s).is_none(), "signal must be taken once");
+        }
+        assert!(stable < 0.6, "stationary signal too high: {stable}");
+        // abrupt +10σ shift: the first post-shift signals must exceed the
+        // stationary level
+        let shifted = {
+            let mut peak: f64 = 0.0;
+            for _ in 0..32 {
+                s.transform(Instance::dense(vec![10.0 + rng.gaussian() as f32], Label::None))
+                    .unwrap();
+                peak = peak.max(Transform::drift_signal(&mut s).unwrap());
+            }
+            peak
+        };
+        assert!(shifted > stable, "signal did not react: {shifted} <= {stable}");
+        // tracking off: no signal is produced
+        Transform::track_drift_signal(&mut s, false);
+        s.transform(Instance::dense(vec![0.0], Label::None)).unwrap();
+        assert!(Transform::drift_signal(&mut s).is_none());
     }
 }

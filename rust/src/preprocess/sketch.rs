@@ -84,6 +84,27 @@ impl CountMinSketch {
     pub fn depth(&self) -> usize {
         self.depth
     }
+
+    /// Sparse encoding of only the non-zero counter cells:
+    /// `[NaN, width, depth, total, m, (cell, count) × m]` — a short sync
+    /// window touches at most `interval × depth` cells of the
+    /// `width × depth` matrix, so pending increments compress hard (see
+    /// [`super::wire`]).
+    pub fn sparse_delta(&self) -> Vec<f64> {
+        let cells: Vec<usize> =
+            (0..self.counters.len()).filter(|&c| self.counters[c] != 0).collect();
+        let mut out = Vec::with_capacity(5 + 2 * cells.len());
+        out.push(f64::NAN);
+        out.push(self.width as f64);
+        out.push(self.depth as f64);
+        out.push(self.total as f64);
+        out.push(cells.len() as f64);
+        for c in cells {
+            out.push(c as f64);
+            out.push(self.counters[c] as f64);
+        }
+        out
+    }
 }
 
 impl MergeableState for CountMinSketch {
@@ -117,6 +138,25 @@ impl MergeableState for CountMinSketch {
     }
 
     fn apply_delta(&mut self, payload: &[f64]) {
+        if super::wire::is_sparse(payload) {
+            if payload.len() < 5 {
+                return;
+            }
+            let (width, depth) = (payload[1] as usize, payload[2] as usize);
+            let m = payload[4] as usize;
+            if width < 1 || depth < 1 || payload.len() != 5 + 2 * m {
+                return;
+            }
+            *self = CountMinSketch::new(width, depth);
+            self.total = payload[3] as u64;
+            for pair in payload[5..].chunks_exact(2) {
+                let c = pair[0] as usize;
+                if c < self.counters.len() {
+                    self.counters[c] = pair[1] as u64;
+                }
+            }
+            return;
+        }
         if payload.len() < 3 {
             return;
         }
@@ -358,6 +398,22 @@ mod tests {
         let mut c = CountMinSketch::new(1, 1);
         c.apply_delta(&a.delta());
         assert_eq!(c.delta(), a.delta());
+    }
+
+    /// The sparse form round-trips to the same sketch state and is
+    /// smaller whenever few cells are occupied.
+    #[test]
+    fn countmin_sparse_delta_round_trips() {
+        let mut cm = CountMinSketch::new(1024, 4);
+        for i in 0..10u64 {
+            cm.add(i, 2);
+        }
+        let sparse = cm.sparse_delta();
+        assert!(sparse.len() < cm.delta().len());
+        let mut back = CountMinSketch::new(1, 1);
+        back.apply_delta(&sparse);
+        assert_eq!(back.delta(), cm.delta());
+        assert_eq!(back.total(), cm.total());
     }
 
     #[test]

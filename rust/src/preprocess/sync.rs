@@ -4,30 +4,37 @@
 //! Protocol (one aggregator instance, `p` [`super::PipelineProcessor`]
 //! shards):
 //!
-//! 1. every `interval` locally-processed instances, a shard takes each
-//!    stateful stage's *pending increment* (`Transform::stats_delta`, the
-//!    state accumulated since the shard's last emission) and emits it as
-//!    an `Event::StatsDelta` on a **`Key`-grouped** stream (keyed by
-//!    stage index);
+//! 1. per its [`super::processor::SyncPolicy`] (fixed count, ADWIN drift
+//!    gate with staleness backstop, or hybrid), a shard takes each
+//!    stateful stage's *pending increment* (`Transform::stats_delta`,
+//!    the state accumulated since the shard's last emission — dense or
+//!    sparse-compressed, see `super::wire`) and emits it as an
+//!    `Event::StatsDelta` on a **`Key`-grouped** stream (keyed by stage
+//!    index), stamped with the shard id and a per-stage round id;
 //! 2. the aggregator folds the increment into its master state
 //!    (`Transform::stats_merge`) — each update is merged **exactly
 //!    once**, so the master equals the single-shard state up to merge
 //!    reordering (commutativity/associativity, see
 //!    [`super::merge::MergeableState`]);
-//! 3. **once per stage per sync round** — i.e. after `round_size`
-//!    (normally = the shard count `p`) deltas for that stage have been
-//!    merged, not after every delta — the aggregator broadcasts the
+//! 3. **once per stage per sync round** the aggregator broadcasts the
 //!    merged snapshot (`Transform::stats_snapshot`) as an
-//!    `Event::StatsGlobal` on an **`All`-grouped** stream. This coalescing
-//!    turns the previous `O(p²)` full-state deliveries per round into
-//!    `O(p)`: broadcast *count* is independent of how many deltas arrive
-//!    within a round. Any partial round still pending at shutdown is
-//!    flushed by `on_shutdown` — exact on the local engine, whose
-//!    shutdown sequence drains each processor's shutdown emissions
-//!    before the next processor's `on_shutdown` runs, so shard
-//!    straggler deltas reach the aggregator first (best-effort on the
-//!    threaded engine, where shards and aggregator shut down
-//!    concurrently);
+//!    `Event::StatsGlobal` on an **`All`-grouped** stream. A round is
+//!    **per-shard exact**: it closes when every one of the `p` shards
+//!    has contributed one delta for the stage — not when *any* `p`
+//!    deltas arrived, which under shard skew could count one fast shard
+//!    several times. If a shard laps the round (its next delta arrives
+//!    while slower or drift-silent shards still owe theirs), the round
+//!    closes early with the members it has (a *skew round*) and the new
+//!    delta opens the next one — so one shard's delta is **never merged
+//!    twice into the same round**, and drift-gated shards that
+//!    legitimately skip rounds cannot stall the broadcast. Coalescing
+//!    keeps deliveries at `O(p)` per round (never `O(p²)`). Any partial
+//!    round still pending at shutdown is flushed by `on_shutdown` —
+//!    exact on the local engine, whose shutdown sequence drains each
+//!    processor's shutdown emissions before the next processor's
+//!    `on_shutdown` runs, so shard straggler deltas reach the aggregator
+//!    first (best-effort on the threaded engine, where shards and
+//!    aggregator shut down concurrently);
 //! 4. each shard replaces its transform-side view with the broadcast
 //!    state merged with its own still-pending increment
 //!    (`Transform::stats_apply`) — nothing is lost or double-counted.
@@ -45,24 +52,78 @@ use crate::topology::{Ctx, Event, Processor, StreamId};
 use super::pipeline::Pipeline;
 use super::Transform;
 
+/// Closed-round audit record (tests/diagnostics): how many distinct
+/// shards contributed and how many deltas were merged into the round.
+/// The per-shard round protocol guarantees `contributors == merged`
+/// (one delta per shard per round); a regression to any-p-deltas
+/// counting shows up as `merged > contributors`.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundAudit {
+    pub stage: u32,
+    pub contributors: u32,
+    pub merged: u32,
+    /// Closed early because a shard lapped the round (shard skew or
+    /// drift-gated shards skipping it), not by full membership.
+    pub skew_closed: bool,
+}
+
+/// Per-stage open-round bookkeeping.
+struct StageRound {
+    /// Shards that contributed to the open round.
+    seen: Vec<bool>,
+    n_seen: usize,
+    /// Deltas merged into the open round (== n_seen by construction;
+    /// audited separately so a regression is observable).
+    merged: u32,
+    /// Highest round id merged per shard (monotonicity diagnostics).
+    last_round: Vec<Option<u64>>,
+}
+
+impl StageRound {
+    fn new(shards: usize) -> Self {
+        StageRound {
+            seen: vec![false; shards],
+            n_seen: 0,
+            merged: 0,
+            last_round: vec![None; shards],
+        }
+    }
+
+    fn clear(&mut self) {
+        self.seen.fill(false);
+        self.n_seen = 0;
+        self.merged = 0;
+    }
+}
+
+/// Cap on the retained [`RoundAudit`] log (diagnostics stay bounded on
+/// long runs; counters keep counting past it).
+const AUDIT_CAP: usize = 4096;
+
 /// Aggregator node: merges shard deltas into a master pipeline state and
-/// broadcasts merged snapshots, one per stage per sync round.
+/// broadcasts merged snapshots, one per stage per *per-shard-exact* sync
+/// round.
 pub struct StatsSyncProcessor {
     /// Master state container — a pipeline built by the same factory as
     /// the shards (never sees instances, only merged deltas).
     master: Pipeline,
     /// Broadcast (`All`-grouped) stream back to the shards.
     out: StreamId,
-    /// Deltas per stage that complete a sync round (= shard count). 1
-    /// reproduces the broadcast-per-delta behavior.
+    /// Shard count: a full round = one delta from every shard.
     round_size: usize,
-    /// Deltas merged since the last broadcast, per stage.
-    pending: Vec<usize>,
+    /// Open round per stage.
+    rounds: Vec<StageRound>,
     /// Deltas merged so far (diagnostics).
     deltas_merged: u64,
     /// Snapshots broadcast so far (diagnostics; the sync-overhead bench
-    /// asserts this is deltas/round_size, not deltas).
+    /// asserts broadcast deliveries == deltas under lockstep shards).
     broadcasts: u64,
+    /// Rounds closed by full membership.
+    completed_rounds: u64,
+    /// Rounds closed early by a lapping shard.
+    skew_rounds: u64,
+    /// Bounded log of closed rounds.
+    audit: Vec<RoundAudit>,
 }
 
 impl StatsSyncProcessor {
@@ -72,13 +133,17 @@ impl StatsSyncProcessor {
     pub fn new(mut pipeline: Pipeline, input: &Schema, out: StreamId, shards: usize) -> Self {
         pipeline.bind(input);
         let stages = pipeline.len();
+        let shards = shards.max(1);
         StatsSyncProcessor {
             master: pipeline,
             out,
-            round_size: shards.max(1),
-            pending: vec![0; stages],
+            round_size: shards,
+            rounds: (0..stages).map(|_| StageRound::new(shards)).collect(),
             deltas_merged: 0,
             broadcasts: 0,
+            completed_rounds: 0,
+            skew_rounds: 0,
+            audit: Vec::new(),
         }
     }
 
@@ -90,12 +155,43 @@ impl StatsSyncProcessor {
         self.broadcasts
     }
 
+    /// Rounds closed with a delta from every shard.
+    pub fn completed_rounds(&self) -> u64 {
+        self.completed_rounds
+    }
+
+    /// Rounds closed early because a shard lapped them.
+    pub fn skew_rounds(&self) -> u64 {
+        self.skew_rounds
+    }
+
+    /// Closed-round log (capped at an internal bound).
+    pub fn round_audit(&self) -> &[RoundAudit] {
+        &self.audit
+    }
+
     /// Master-state snapshot of `stage` (diagnostics/tests).
     pub fn snapshot(&self, stage: usize) -> Option<Vec<f64>> {
         self.master.stats_snapshot(stage)
     }
 
-    fn broadcast(&mut self, stage: u32, ctx: &mut Ctx) {
+    fn close_round(&mut self, stage: u32, skew: bool, ctx: &mut Ctx) {
+        let r = &mut self.rounds[stage as usize];
+        let record = RoundAudit {
+            stage,
+            contributors: r.n_seen as u32,
+            merged: r.merged,
+            skew_closed: skew,
+        };
+        r.clear();
+        if skew {
+            self.skew_rounds += 1;
+        } else {
+            self.completed_rounds += 1;
+        }
+        if self.audit.len() < AUDIT_CAP {
+            self.audit.push(record);
+        }
         if let Some(snap) = self.master.stats_snapshot(stage as usize) {
             self.broadcasts += 1;
             ctx.emit_any(self.out, Event::StatsGlobal { stage, payload: Arc::new(snap) });
@@ -105,15 +201,31 @@ impl StatsSyncProcessor {
 
 impl Processor for StatsSyncProcessor {
     fn process(&mut self, event: Event, ctx: &mut Ctx) {
-        if let Event::StatsDelta { stage, payload } = event {
-            self.master.stats_merge(stage as usize, &payload);
+        if let Event::StatsDelta { stage, shard, round, payload } = event {
+            let (s, sh) = (stage as usize, shard as usize);
+            if s >= self.rounds.len() || sh >= self.round_size {
+                debug_assert!(false, "StatsDelta out of range: stage {stage} shard {shard}");
+                return;
+            }
+            // A lapping shard closes the open round BEFORE its new delta
+            // is merged: the closing broadcast reflects at most one delta
+            // per shard, and the lapper's delta opens the next round.
+            if self.rounds[s].seen[sh] {
+                self.close_round(stage, true, ctx);
+            }
+            self.master.stats_merge(s, &payload);
             self.deltas_merged += 1;
-            if let Some(p) = self.pending.get_mut(stage as usize) {
-                *p += 1;
-                if *p >= self.round_size {
-                    *p = 0;
-                    self.broadcast(stage, ctx);
-                }
+            let r = &mut self.rounds[s];
+            debug_assert!(
+                r.last_round[sh].map_or(true, |prev| round > prev),
+                "shard {shard} round ids must be monotonic on stage {stage}"
+            );
+            r.last_round[sh] = Some(round);
+            r.seen[sh] = true;
+            r.n_seen += 1;
+            r.merged += 1;
+            if r.n_seen == self.round_size {
+                self.close_round(stage, false, ctx);
             }
         }
     }
@@ -122,10 +234,9 @@ impl Processor for StatsSyncProcessor {
     /// the shutdown flush of `PipelineProcessor`) still get their state
     /// reflected in a final broadcast.
     fn on_shutdown(&mut self, ctx: &mut Ctx) {
-        for stage in 0..self.pending.len() {
-            if self.pending[stage] > 0 {
-                self.pending[stage] = 0;
-                self.broadcast(stage as u32, ctx);
+        for stage in 0..self.rounds.len() {
+            if self.rounds[stage].n_seen > 0 {
+                self.close_round(stage as u32, true, ctx);
             }
         }
     }
@@ -148,6 +259,10 @@ mod tests {
     use super::*;
     use crate::core::instance::{Instance, Label};
     use crate::preprocess::{MergeableState, StandardScaler};
+
+    fn delta_event(stage: u32, shard: u32, round: u64, payload: Vec<f64>) -> Event {
+        Event::StatsDelta { stage, shard, round, payload: Arc::new(payload) }
+    }
 
     /// Drive the shard ⇄ aggregator handshake by hand (no engine): four
     /// shards each see a disjoint quarter of the stream; after sync +
@@ -179,16 +294,16 @@ mod tests {
             4,
         );
         let mut ctx = Ctx::new(0, 1);
-        for shard in shards.iter_mut() {
+        for (i, shard) in shards.iter_mut().enumerate() {
             let delta = Transform::stats_delta(shard).unwrap();
-            sync.process(
-                Event::StatsDelta { stage: 0, payload: Arc::new(delta) },
-                &mut ctx,
-            );
+            sync.process(delta_event(0, i as u32, 0, delta), &mut ctx);
         }
         assert_eq!(sync.deltas_merged(), 4);
-        // coalescing: the round completed exactly once → one broadcast
+        // per-shard round: four distinct shards complete exactly one
+        // full round → one broadcast
         assert_eq!(sync.broadcasts(), 1);
+        assert_eq!(sync.completed_rounds(), 1);
+        assert_eq!(sync.skew_rounds(), 0);
         assert_eq!(ctx.take().len(), 1);
         let global = sync.snapshot(0).unwrap();
         for shard in shards.iter_mut() {
@@ -205,7 +320,7 @@ mod tests {
         }
     }
 
-    /// A partial round (fewer deltas than shards) is not broadcast until
+    /// A partial round (fewer shards than `p`) is not broadcast until
     /// shutdown, where it is flushed exactly once.
     #[test]
     fn partial_round_flushes_on_shutdown() {
@@ -222,7 +337,7 @@ mod tests {
         );
         let mut ctx = Ctx::new(0, 1);
         let delta = Transform::stats_delta(&mut shard).unwrap();
-        sync.process(Event::StatsDelta { stage: 0, payload: Arc::new(delta) }, &mut ctx);
+        sync.process(delta_event(0, 0, 0, delta), &mut ctx);
         assert_eq!(sync.broadcasts(), 0, "partial round must not broadcast");
         assert!(ctx.take().is_empty());
         sync.on_shutdown(&mut ctx);
@@ -231,5 +346,41 @@ mod tests {
         let mut ctx2 = Ctx::new(0, 1);
         sync.on_shutdown(&mut ctx2);
         assert!(ctx2.take().is_empty(), "empty rounds are not re-flushed");
+    }
+
+    /// The exactness fix: p deltas from ONE shard are p rounds, not one.
+    /// Each lap closes the open round (with one contributor) and opens
+    /// the next — the old any-p-deltas counter would have merged all
+    /// four into a single round and broadcast once.
+    #[test]
+    fn lapping_shard_never_merges_twice_into_one_round() {
+        let schema = Schema::classification("t", Schema::all_numeric(1), 2);
+        let mut shard = StandardScaler::new();
+        shard.bind(&schema);
+        let mut sync = StatsSyncProcessor::new(
+            crate::preprocess::Pipeline::new().then(StandardScaler::new()),
+            &schema,
+            StreamId(0),
+            4,
+        );
+        let mut ctx = Ctx::new(0, 1);
+        for round in 0..4u64 {
+            shard.transform(Instance::dense(vec![round as f32], Label::None)).unwrap();
+            let delta = Transform::stats_delta(&mut shard).unwrap();
+            sync.process(delta_event(0, 0, round, delta), &mut ctx);
+        }
+        assert_eq!(sync.deltas_merged(), 4);
+        // rounds 1..3 were skew-closed by the lapping shard; round 4 is
+        // still open (one contributor)
+        assert_eq!(sync.skew_rounds(), 3);
+        assert_eq!(sync.completed_rounds(), 0);
+        assert_eq!(sync.broadcasts(), 3);
+        for r in sync.round_audit() {
+            assert_eq!(r.contributors, 1, "one shard can contribute once per round");
+            assert_eq!(r.merged, 1);
+            assert!(r.skew_closed);
+        }
+        // the master still merged every delta exactly once
+        assert_eq!(sync.snapshot(0).unwrap()[0], 4.0);
     }
 }

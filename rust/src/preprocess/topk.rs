@@ -34,6 +34,17 @@ pub struct TopKFilter {
     /// Sorted attribute indices currently kept (empty until first refresh
     /// = keep everything while the summaries warm up).
     keep: Vec<u32>,
+    /// Keep-set hysteresis: a challenger must beat an incumbent's count
+    /// by this relative margin to displace it, so features oscillating
+    /// around the k-th count across refreshes / consecutive global
+    /// snapshots are not churned in and out (ROADMAP "keep-set
+    /// hysteresis under sync churn").
+    hysteresis: f64,
+    /// Compute the drift signal per instance (off = zero hot-path cost).
+    track_signal: bool,
+    /// Last instance's fraction of observed attributes inside the
+    /// keep-set (drift-gate signal: drops when the vocabulary shifts).
+    last_signal: Option<f64>,
 }
 
 impl TopKFilter {
@@ -50,11 +61,21 @@ impl TopKFilter {
             refresh: 512,
             seen: 0,
             keep: Vec::new(),
+            hysteresis: 0.1,
+            track_signal: false,
+            last_signal: None,
         }
     }
 
     pub fn with_refresh(mut self, refresh: u64) -> Self {
         self.refresh = refresh.max(1);
+        self
+    }
+
+    /// Set the keep-set hysteresis margin (0 = any strictly higher count
+    /// displaces an incumbent — the churny pre-hysteresis behavior).
+    pub fn with_hysteresis(mut self, h: f64) -> Self {
+        self.hysteresis = h.max(0.0);
         self
     }
 
@@ -70,9 +91,51 @@ impl TopKFilter {
             c.1 = self.cm.estimate(c.0);
         }
         candidates.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-        candidates.truncate(self.k);
-        self.keep = candidates.iter().map(|&(i, _)| i as u32).collect();
+        if self.keep.is_empty() {
+            // first refresh: no incumbents, take the strict top-k
+            candidates.truncate(self.k);
+            self.keep = candidates.iter().map(|&(i, _)| i as u32).collect();
+            self.keep.sort_unstable();
+            return;
+        }
+        // Hysteresis pass: incumbents hold their slot unless a challenger
+        // beats them by the margin. Near-ties around the k-th count
+        // therefore stay with whoever held the slot first, instead of
+        // flapping on every refresh (or every global-snapshot apply).
+        let is_incumbent = |id: u64| self.keep.binary_search(&(id as u32)).is_ok();
+        let mut slots: Vec<(u64, u64)> = self
+            .keep
+            .iter()
+            .map(|&j| (j as u64, self.cm.estimate(j as u64)))
+            .collect();
+        slots.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let challengers: Vec<(u64, u64)> =
+            candidates.into_iter().filter(|&(id, _)| !is_incumbent(id)).collect();
+        for &(id, est) in &challengers {
+            if slots.len() < self.k {
+                // free slot: no one to displace, admit outright
+                Self::slot_insert(&mut slots, id, est);
+                continue;
+            }
+            let &(_, weakest) = slots.last().expect("k >= 1");
+            // relative margin, with an absolute floor of 1 count so
+            // zero-count incumbents don't hold slots forever
+            let bar = weakest + (weakest as f64 * self.hysteresis).ceil().max(1.0) as u64;
+            if est >= bar {
+                slots.pop();
+                Self::slot_insert(&mut slots, id, est);
+            }
+        }
+        self.keep = slots.iter().map(|&(i, _)| i as u32).collect();
         self.keep.sort_unstable();
+    }
+
+    /// Insert into a (estimate desc, id asc)-sorted slot list.
+    fn slot_insert(slots: &mut Vec<(u64, u64)>, id: u64, est: u64) {
+        let at = slots.partition_point(|&(sid, sest)| {
+            (sest, std::cmp::Reverse(sid)) > (est, std::cmp::Reverse(id))
+        });
+        slots.insert(at, (id, est));
     }
 
     #[inline]
@@ -118,11 +181,18 @@ impl Transform for TopKFilter {
             self.recompute_keep();
         }
 
+        let track = self.track_signal;
+        let (mut observed, mut kept) = (0u32, 0u32);
         match inst.values_mut() {
             Values::Dense(v) => {
                 for (j, x) in v.iter_mut().enumerate() {
+                    if track && *x != 0.0 {
+                        observed += 1;
+                    }
                     if !self.keeps(j as u32) {
                         *x = 0.0;
+                    } else if track && *x != 0.0 {
+                        kept += 1;
                     }
                 }
             }
@@ -130,17 +200,44 @@ impl Transform for TopKFilter {
                 let keep = std::mem::take(indices);
                 let vals = std::mem::take(values);
                 for (j, x) in keep.into_iter().zip(vals) {
+                    if track && x != 0.0 {
+                        observed += 1;
+                    }
                     if self.keeps(j) {
+                        if track && x != 0.0 {
+                            kept += 1;
+                        }
                         indices.push(j);
                         values.push(x);
                     }
                 }
             }
         }
+        if observed > 0 {
+            // fraction of this instance's active attributes that survive
+            // the filter: near-constant under a stable vocabulary, drops
+            // when the heavy-hitter set shifts
+            self.last_signal = Some(kept as f64 / observed as f64);
+        }
         Some(inst)
     }
 
     fn stats_delta(&mut self) -> Option<Vec<f64>> {
+        // MG deltas are changed-key sets by construction; the CountMin
+        // half ships whichever of dense/sparse is smaller
+        let mg = self.pending_mg.delta();
+        let cm =
+            super::wire::pick_smaller(self.pending_cm.delta(), self.pending_cm.sparse_delta());
+        let mut out = Vec::with_capacity(1 + mg.len() + cm.len());
+        out.push(mg.len() as f64);
+        out.extend(mg);
+        out.extend(cm);
+        self.pending_mg.reset();
+        self.pending_cm.reset();
+        Some(out)
+    }
+
+    fn stats_delta_dense(&mut self) -> Option<Vec<f64>> {
         let mg = self.pending_mg.delta();
         let cm = self.pending_cm.delta();
         let mut out = Vec::with_capacity(1 + mg.len() + cm.len());
@@ -183,6 +280,14 @@ impl Transform for TopKFilter {
         global_cm.merge(&self.pending_cm);
         self.cm = global_cm;
         self.recompute_keep();
+    }
+
+    fn track_drift_signal(&mut self, on: bool) {
+        self.track_signal = on;
+    }
+
+    fn drift_signal(&mut self) -> Option<f64> {
+        self.last_signal.take()
     }
 
     fn name(&self) -> &'static str {
@@ -256,6 +361,57 @@ mod tests {
             .unwrap();
         assert_eq!(out.n_stored(), 2);
         assert_eq!(out.n_attributes(), 100);
+    }
+
+    /// Regression (ROADMAP follow-up): two features oscillating around
+    /// the k-th count must not be churned in and out of the keep-set on
+    /// every refresh. The adversarial stream alternates blocks where
+    /// attribute 10 then attribute 11 is *slightly* ahead — within the
+    /// hysteresis margin — so whoever first claims the last slot keeps
+    /// it; with hysteresis 0 the set flips nearly every refresh.
+    #[test]
+    fn hysteresis_stops_keep_set_oscillation_on_near_ties() {
+        let schema = Schema::classification("t", Schema::all_numeric(100), 2);
+        let run = |hysteresis: f64| -> usize {
+            let mut f = TopKFilter::new(3).with_refresh(64).with_hysteresis(hysteresis);
+            f.bind(&schema);
+            let mut changes = 0;
+            let mut last: Vec<u32> = Vec::new();
+            for block in 0..40u64 {
+                // attrs 1, 2 are solid heavy hitters; 10 and 11 near-tie
+                // for the third slot. The per-block deficit is sized so
+                // the *cumulative* lead alternates sign by ±6 at every
+                // block boundary — tiny against totals in the thousands,
+                // so it sits well inside a 10% hysteresis margin.
+                let leader = if block % 2 == 0 { 10 } else { 11 };
+                let trailer = if block % 2 == 0 { 11 } else { 10 };
+                let skips = if block == 0 { 6 } else { 12 };
+                for i in 0..64u64 {
+                    let mut idx = vec![1u32, 2, leader];
+                    if i >= skips {
+                        idx.push(trailer);
+                    }
+                    idx.sort_unstable();
+                    let vals = vec![1.0f32; idx.len()];
+                    f.transform(Instance::sparse(idx, vals, 100, Label::None)).unwrap();
+                }
+                if !last.is_empty() && f.kept() != last.as_slice() {
+                    changes += 1;
+                }
+                last = f.kept().to_vec();
+            }
+            changes
+        };
+        let churny = run(0.0);
+        let stable = run(0.1);
+        assert!(
+            stable <= 1,
+            "hysteresis keep-set still oscillates: {stable} changes (no-hysteresis: {churny})"
+        );
+        assert!(
+            churny > stable,
+            "adversarial stream failed to churn the margin-free filter ({churny} changes)"
+        );
     }
 
     #[test]

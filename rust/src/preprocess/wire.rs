@@ -1,0 +1,127 @@
+//! Sparse delta wire format — the compressed encodings that let the
+//! delta-sync protocol ship only the statistics that *changed* since a
+//! shard's last emission (the ROADMAP's "delta compression" follow-up;
+//! Benczúr et al. 2018 argue distributed learners should communicate
+//! only meaningfully-changed state).
+//!
+//! Payloads stay flat `Vec<f64>` (the `Event::StatsDelta` wire type).
+//! A sparse payload is tagged by a leading **NaN** — no genuine dense
+//! payload can start with one (counts are `>= 0`, `Ranges` lows start at
+//! `+inf` and min/max against NaN never stores it), so decoders
+//! dispatch on [`is_sparse`] without a format version field.
+//!
+//! Per-operator layouts (`d` = attribute count, `m` = changed count):
+//!
+//! | state | sparse layout | changed means |
+//! |---|---|---|
+//! | `Moments` | `[NaN, d, mask…, (n, mean, m2) × m]` | column saw an observation (`n > 0`) |
+//! | `Ranges` | `[NaN, d, mask…, (lo, hi) × m]` | column saw an observation (`lo ≤ hi`) |
+//! | `CountMinSketch` | `[NaN, w, depth, total, m, (cell, count) × m]` | counter cell is non-zero |
+//! | `Discretizer` | presence flag per attribute (pre-existing) | summary saw an observation |
+//! | `MisraGries` | dense form is already a changed-key set | — |
+//!
+//! The changed-column **bitmask** packs 32 column flags per f64 word
+//! (32, not 64: every word stays exactly representable in the f64
+//! mantissa, so the payload survives an f64 round trip bit-exactly).
+//!
+//! Emitters pick whichever of the dense/sparse form is smaller
+//! ([`pick_smaller`]), so compression can never inflate a delta; the
+//! engine's per-delivery byte metrics (`Event::wire_bytes` is
+//! `O(payload len)`) make the saving directly measurable.
+
+/// Bits packed per mask word (see module docs for why not 64).
+pub const MASK_BITS: usize = 32;
+
+/// `true` when `payload` is a NaN-tagged sparse encoding.
+#[inline]
+pub fn is_sparse(payload: &[f64]) -> bool {
+    payload.first().is_some_and(|x| x.is_nan())
+}
+
+/// Number of mask words needed for `d` columns.
+#[inline]
+pub fn mask_words(d: usize) -> usize {
+    d.div_ceil(MASK_BITS)
+}
+
+/// Append the changed-column bitmask for `changed` (one flag per column).
+pub fn encode_mask(out: &mut Vec<f64>, changed: &[bool]) {
+    let words = mask_words(changed.len());
+    let base = out.len();
+    out.resize(base + words, 0.0);
+    for (j, &c) in changed.iter().enumerate() {
+        if c {
+            let w = base + j / MASK_BITS;
+            out[w] = ((out[w] as u64) | (1u64 << (j % MASK_BITS))) as f64;
+        }
+    }
+}
+
+/// Decode a bitmask of `d` columns starting at `words`; returns the set
+/// column indices in ascending order, or `None` if `words` is too short.
+pub fn decode_mask(words: &[f64], d: usize) -> Option<Vec<usize>> {
+    let need = mask_words(d);
+    if words.len() < need {
+        return None;
+    }
+    let mut cols = Vec::new();
+    for j in 0..d {
+        let w = words[j / MASK_BITS] as u64;
+        if w & (1u64 << (j % MASK_BITS)) != 0 {
+            cols.push(j);
+        }
+    }
+    Some(cols)
+}
+
+/// The adaptive choice: whichever encoding is shorter wins (ties go
+/// dense — it is the simpler decode path).
+pub fn pick_smaller(dense: Vec<f64>, sparse: Vec<f64>) -> Vec<f64> {
+    if sparse.len() < dense.len() {
+        sparse
+    } else {
+        dense
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_round_trips() {
+        for d in [1usize, 31, 32, 33, 64, 100] {
+            let changed: Vec<bool> = (0..d).map(|j| j % 3 == 0 || j == d - 1).collect();
+            let mut out = Vec::new();
+            encode_mask(&mut out, &changed);
+            assert_eq!(out.len(), mask_words(d));
+            let cols = decode_mask(&out, d).unwrap();
+            let want: Vec<usize> = (0..d).filter(|&j| changed[j]).collect();
+            assert_eq!(cols, want, "d={d}");
+        }
+    }
+
+    #[test]
+    fn mask_words_survive_f64_exactly() {
+        // all 32 bits set is still an exactly-representable integer
+        let changed = vec![true; 32];
+        let mut out = Vec::new();
+        encode_mask(&mut out, &changed);
+        assert_eq!(out[0] as u64, u32::MAX as u64);
+        assert_eq!(decode_mask(&out, 32).unwrap().len(), 32);
+    }
+
+    #[test]
+    fn sparse_tag_detection() {
+        assert!(is_sparse(&[f64::NAN, 1.0]));
+        assert!(!is_sparse(&[0.0, 1.0]));
+        assert!(!is_sparse(&[]));
+        assert!(!is_sparse(&[f64::INFINITY]));
+    }
+
+    #[test]
+    fn pick_smaller_prefers_dense_on_tie() {
+        assert_eq!(pick_smaller(vec![1.0, 2.0], vec![f64::NAN, 9.0]), vec![1.0, 2.0]);
+        assert!(is_sparse(&pick_smaller(vec![1.0, 2.0, 3.0], vec![f64::NAN, 9.0])));
+    }
+}

@@ -1,0 +1,137 @@
+//! Covariate-drift wrapper: inject abrupt distribution shifts into any
+//! stream. Every `period` instances each numeric attribute's offset is
+//! re-drawn from `±magnitude` (seeded, deterministic), so scalers /
+//! discretizers trained on the old regime suddenly stop fitting — the
+//! scenario the adaptive sync policies (`preprocess::processor::SyncPolicy`)
+//! and the `samoa exp sync-cost` study exercise. Labels and the schema
+//! are untouched: the drift is in the input representation, exactly
+//! where preprocessing statistics live.
+
+use crate::common::Rng;
+use crate::core::instance::Values;
+use crate::core::{AttributeKind, Instance, Schema};
+
+use super::StreamSource;
+
+/// Wraps a source with periodic abrupt mean shifts on numeric
+/// attributes. `period = 0` disables drift (pass-through).
+pub struct DriftingStream<S: StreamSource> {
+    inner: S,
+    period: u64,
+    magnitude: f64,
+    rng: Rng,
+    /// Current per-attribute offset (zero until the first drift point).
+    shift: Vec<f32>,
+    numeric: Vec<bool>,
+    count: u64,
+    drifts: u64,
+}
+
+impl<S: StreamSource> DriftingStream<S> {
+    pub fn new(inner: S, period: u64, magnitude: f64, seed: u64) -> Self {
+        let numeric: Vec<bool> = inner
+            .schema()
+            .attributes
+            .iter()
+            .map(|a| matches!(a, AttributeKind::Numeric))
+            .collect();
+        DriftingStream {
+            shift: vec![0.0; numeric.len()],
+            numeric,
+            inner,
+            period,
+            magnitude,
+            rng: Rng::new(seed ^ 0xD21F_7D21),
+            count: 0,
+            drifts: 0,
+        }
+    }
+
+    /// Drift points seen so far.
+    pub fn drifts(&self) -> u64 {
+        self.drifts
+    }
+
+    fn maybe_drift(&mut self) {
+        if self.period > 0 && self.count > 0 && self.count % self.period == 0 {
+            self.drifts += 1;
+            for (j, s) in self.shift.iter_mut().enumerate() {
+                if self.numeric[j] {
+                    *s = ((self.rng.f64() * 2.0 - 1.0) * self.magnitude) as f32;
+                }
+            }
+        }
+    }
+}
+
+impl<S: StreamSource> StreamSource for DriftingStream<S> {
+    fn schema(&self) -> &Schema {
+        self.inner.schema()
+    }
+
+    fn next_instance(&mut self) -> Option<Instance> {
+        self.maybe_drift();
+        self.count += 1;
+        let mut inst = self.inner.next_instance()?;
+        match inst.values_mut() {
+            Values::Dense(v) => {
+                for (j, val) in v.iter_mut().enumerate() {
+                    if self.numeric[j] {
+                        *val += self.shift[j];
+                    }
+                }
+            }
+            Values::Sparse { indices, values, .. } => {
+                for (&j, val) in indices.iter().zip(values.iter_mut()) {
+                    if self.numeric[j as usize] {
+                        *val += self.shift[j as usize];
+                    }
+                }
+            }
+        }
+        Some(inst)
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        self.inner.len_hint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::streams::waveform::WaveformGenerator;
+
+    #[test]
+    fn shifts_kick_in_at_period_boundaries() {
+        let mut plain = WaveformGenerator::classification(3);
+        let mut drifty = DriftingStream::new(WaveformGenerator::classification(3), 100, 5.0, 9);
+        // first window: identical to the raw stream
+        for _ in 0..100 {
+            let (a, b) = (plain.next_instance().unwrap(), drifty.next_instance().unwrap());
+            assert_eq!(a.values(), b.values());
+        }
+        assert_eq!(drifty.drifts(), 0);
+        // after the drift point the values diverge by a constant offset
+        let (a, b) = (plain.next_instance().unwrap(), drifty.next_instance().unwrap());
+        assert_eq!(drifty.drifts(), 1);
+        let any_shift =
+            (0..a.n_attributes()).any(|j| (b.value(j) - a.value(j)).abs() > 1e-6);
+        assert!(any_shift, "no attribute shifted after the drift point");
+        // labels unchanged
+        assert_eq!(a.label, b.label);
+    }
+
+    #[test]
+    fn zero_period_is_passthrough() {
+        let mut plain = WaveformGenerator::new(4);
+        let mut drifty = DriftingStream::new(WaveformGenerator::new(4), 0, 5.0, 9);
+        for _ in 0..50 {
+            assert_eq!(
+                plain.next_instance().unwrap().values(),
+                drifty.next_instance().unwrap().values()
+            );
+        }
+        assert_eq!(drifty.drifts(), 0);
+    }
+}

@@ -7,6 +7,7 @@ pub mod random_tree;
 pub mod random_tweet;
 pub mod waveform;
 pub mod datasets;
+pub mod drifting;
 pub mod arff;
 
 use crate::core::{Instance, Schema};

@@ -45,8 +45,13 @@ pub enum Event {
     // ------------------------------------------- preprocess delta-sync
     /// Mergeable-state increment of pipeline stage `stage` from one
     /// shard: `PipelineProcessor` → `StatsSyncProcessor`, key-grouped by
-    /// stage id (see `preprocess::sync`).
-    StatsDelta { stage: u32, payload: Arc<Vec<f64>> },
+    /// stage id (see `preprocess::sync`). `shard` is the emitting
+    /// pipeline instance and `round` its per-stage emission sequence
+    /// number, so the aggregator can keep sync rounds exact (one delta
+    /// per shard per round) under shard skew and drift-gated shards that
+    /// legitimately skip rounds. The payload may be the dense or the
+    /// NaN-tagged sparse encoding (see `preprocess::wire`).
+    StatsDelta { stage: u32, shard: u32, round: u64, payload: Arc<Vec<f64>> },
     /// Merged global state of stage `stage` broadcast back:
     /// `StatsSyncProcessor` → all pipeline shards (All grouping).
     StatsGlobal { stage: u32, payload: Arc<Vec<f64>> },
@@ -119,9 +124,8 @@ impl Event {
             Event::Instance { inst, .. } => 8 + inst.wire_bytes(),
             Event::Prediction { .. } => 8 + 16 + 9,
             Event::Shutdown => 1,
-            Event::StatsDelta { payload, .. } | Event::StatsGlobal { payload, .. } => {
-                4 + 8 * payload.len()
-            }
+            Event::StatsDelta { payload, .. } => 4 + 4 + 8 + 8 * payload.len(),
+            Event::StatsGlobal { payload, .. } => 4 + 8 * payload.len(),
             Event::Attribute { .. } => 8 + 4 + 4 + 4 + 4,
             Event::AttributeBatch { attrs, .. } => 8 + 4 + 4 + 5 * attrs.len(),
             Event::Compute { class_counts, .. } => 8 + 4 + 8 + 4 * class_counts.len(),
@@ -189,9 +193,12 @@ impl Event {
             Event::ClusterAssign { idx, dist2, inst } => {
                 Event::ClusterAssign { idx: *idx, dist2: *dist2, inst: inst.deep_clone() }
             }
-            Event::StatsDelta { stage, payload } => {
-                Event::StatsDelta { stage: *stage, payload: Arc::new((**payload).clone()) }
-            }
+            Event::StatsDelta { stage, shard, round, payload } => Event::StatsDelta {
+                stage: *stage,
+                shard: *shard,
+                round: *round,
+                payload: Arc::new((**payload).clone()),
+            },
             Event::StatsGlobal { stage, payload } => {
                 Event::StatsGlobal { stage: *stage, payload: Arc::new((**payload).clone()) }
             }

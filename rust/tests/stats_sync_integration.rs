@@ -5,20 +5,23 @@
 //! head (AMRules) — on both the local and threaded engines. The local
 //! engine is additionally bit-deterministic, and the shards' scaler
 //! views must carry the *global* observation count, not their local
-//! quarter.
+//! quarter. The drift-gated policy additionally has to earn its keep:
+//! on a drifting stream it must converge like count-based sync while
+//! shipping measurably fewer wire bytes (asserted via engine metrics).
 
 use std::sync::Arc;
 
 use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
 use samoa::core::model::{Classifier, Regressor};
 use samoa::core::Schema;
-use samoa::engine::{LocalEngine, ThreadedEngine};
+use samoa::engine::{EngineMetrics, LocalEngine, ThreadedEngine};
 use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
 use samoa::preprocess::processor::{
     build_prequential_topology_head, LearnerHead, PipelineProcessor,
 };
-use samoa::preprocess::{Discretizer, Pipeline, StandardScaler};
+use samoa::preprocess::{Discretizer, Pipeline, StandardScaler, SyncPolicy};
 use samoa::regressors::amrules::{AMRules, AMRulesConfig};
+use samoa::streams::drifting::DriftingStream;
 use samoa::streams::waveform::WaveformGenerator;
 use samoa::streams::StreamSource;
 use samoa::topology::Event;
@@ -39,14 +42,22 @@ fn regressor_head() -> LearnerHead {
     }))
 }
 
-/// Run the prequential topology; returns accuracy (classifier) or MAE
-/// (regressor).
-fn run(regression: bool, p: usize, sync: Option<u64>, threaded: bool) -> f64 {
-    let mut source: Box<dyn StreamSource> = if regression {
-        Box::new(WaveformGenerator::new(SEED))
-    } else {
-        Box::new(WaveformGenerator::classification(SEED))
-    };
+struct Outcome {
+    quality: f64,
+    metrics: EngineMetrics,
+    /// StatsDelta + StatsGlobal wire bytes (0 without sync).
+    sync_bytes: u64,
+}
+
+/// Run the prequential topology over `source`; quality is accuracy
+/// (classifier) or MAE (regressor).
+fn run_source(
+    mut source: Box<dyn StreamSource>,
+    regression: bool,
+    p: usize,
+    sync: Option<SyncPolicy>,
+    threaded: bool,
+) -> Outcome {
     let schema = source.schema().clone();
     let sink = EvalSink::new(schema.n_classes(), schema.label_range(), N);
     let sink2 = Arc::clone(&sink);
@@ -75,27 +86,30 @@ fn run(regression: bool, p: usize, sync: Option<u64>, threaded: bool) -> f64 {
     };
     assert_eq!(m.source_instances, N);
     assert_eq!(m.streams[handles.prediction.0].events, N, "every instance must be scored");
+    let mut sync_bytes = 0;
     if sync.is_some() && p > 1 {
-        assert!(
-            m.streams[handles.delta.unwrap().0].events > 0,
-            "sync enabled but no deltas flowed"
-        );
-        assert!(
-            m.streams[handles.global.unwrap().0].events > 0,
-            "sync enabled but no broadcasts flowed"
-        );
+        let (d, g) = (handles.delta.unwrap(), handles.global.unwrap());
+        assert!(m.streams[d.0].events > 0, "sync enabled but no deltas flowed");
+        assert!(m.streams[g.0].events > 0, "sync enabled but no broadcasts flowed");
+        sync_bytes = m.streams[d.0].bytes + m.streams[g.0].bytes;
     }
-    if regression {
-        sink.mae()
+    let quality = if regression { sink.mae() } else { sink.accuracy() };
+    Outcome { quality, metrics: m, sync_bytes }
+}
+
+fn run(regression: bool, p: usize, sync: Option<SyncPolicy>, threaded: bool) -> f64 {
+    let source: Box<dyn StreamSource> = if regression {
+        Box::new(WaveformGenerator::new(SEED))
     } else {
-        sink.accuracy()
-    }
+        Box::new(WaveformGenerator::classification(SEED))
+    };
+    run_source(source, regression, p, sync, threaded).quality
 }
 
 #[test]
 fn classifier_p4_with_sync_matches_p1_on_local_engine() {
     let base = run(false, 1, None, false);
-    let sharded = run(false, 4, Some(SYNC), false);
+    let sharded = run(false, 4, Some(SyncPolicy::Count(SYNC)), false);
     assert!(base > 0.5, "baseline accuracy {base} suspiciously low");
     assert!(
         (base - sharded).abs() < 0.05,
@@ -106,7 +120,7 @@ fn classifier_p4_with_sync_matches_p1_on_local_engine() {
 #[test]
 fn classifier_p4_with_sync_matches_p1_on_threaded_engine() {
     let base = run(false, 1, None, false);
-    let sharded = run(false, 4, Some(SYNC), true);
+    let sharded = run(false, 4, Some(SyncPolicy::Count(SYNC)), true);
     assert!(
         (base - sharded).abs() < 0.06,
         "threaded p=4+sync accuracy {sharded} drifted from p=1 accuracy {base}"
@@ -116,7 +130,7 @@ fn classifier_p4_with_sync_matches_p1_on_threaded_engine() {
 #[test]
 fn amrules_p4_with_sync_matches_p1_on_local_engine() {
     let base = run(true, 1, None, false);
-    let sharded = run(true, 4, Some(SYNC), false);
+    let sharded = run(true, 4, Some(SyncPolicy::Count(SYNC)), false);
     assert!(base < 0.8, "baseline MAE {base} suspiciously high (labels span 2.0)");
     assert!(
         (base - sharded).abs() < 0.05,
@@ -127,7 +141,7 @@ fn amrules_p4_with_sync_matches_p1_on_local_engine() {
 #[test]
 fn amrules_p4_with_sync_matches_p1_on_threaded_engine() {
     let base = run(true, 1, None, false);
-    let sharded = run(true, 4, Some(SYNC), true);
+    let sharded = run(true, 4, Some(SyncPolicy::Count(SYNC)), true);
     // wider than the local bound: threaded arrival order at the learner
     // is nondeterministic and AMRules' rule expansion is order-sensitive
     assert!(
@@ -138,9 +152,58 @@ fn amrules_p4_with_sync_matches_p1_on_threaded_engine() {
 
 #[test]
 fn local_engine_sync_runs_are_deterministic() {
-    let a = run(false, 4, Some(SYNC), false);
-    let b = run(false, 4, Some(SYNC), false);
+    let a = run(false, 4, Some(SyncPolicy::Count(SYNC)), false);
+    let b = run(false, 4, Some(SyncPolicy::Count(SYNC)), false);
     assert_eq!(a, b, "identical local sync runs must be bit-identical");
+}
+
+/// The acceptance test of the adaptive policy: on a *drifting* stream,
+/// drift-gated p=4 sync converges to the p=1 reference within the same
+/// tolerance as count-based sync, while shipping measurably fewer
+/// `StatsDelta`/`StatsGlobal` wire bytes (the gate concentrates
+/// emissions at the drift points; the staleness backstop covers the
+/// quiet stretches).
+#[test]
+fn drift_gated_sync_matches_count_accuracy_with_fewer_bytes() {
+    let drifting = || -> Box<dyn StreamSource> {
+        Box::new(DriftingStream::new(
+            WaveformGenerator::classification(SEED),
+            2000,
+            2.5,
+            SEED,
+        ))
+    };
+    let base = run_source(drifting(), false, 1, None, false);
+    let count = run_source(drifting(), false, 4, Some(SyncPolicy::Count(SYNC)), false);
+    let drift = run_source(
+        drifting(),
+        false,
+        4,
+        Some(SyncPolicy::Drift { delta: 0.002, max_staleness: 384 }),
+        false,
+    );
+    assert!(base.quality > 0.5, "drifting baseline accuracy {} too low", base.quality);
+    assert!(
+        (base.quality - count.quality).abs() < 0.05,
+        "count sync accuracy {} drifted from p=1 {}",
+        count.quality,
+        base.quality
+    );
+    assert!(
+        (base.quality - drift.quality).abs() < 0.05,
+        "drift-gated accuracy {} drifted from p=1 {}",
+        drift.quality,
+        base.quality
+    );
+    assert!(
+        (drift.sync_bytes as f64) < count.sync_bytes as f64 * 0.85,
+        "drift-gated sync must ship measurably fewer bytes: {} vs {}",
+        drift.sync_bytes,
+        count.sync_bytes
+    );
+    // both runs scored every instance (metrics sanity)
+    assert_eq!(count.metrics.source_instances, N);
+    assert_eq!(drift.metrics.source_instances, N);
 }
 
 /// The discriminating state-level check: with sync every shard's scaler
@@ -151,7 +214,7 @@ fn local_engine_sync_runs_are_deterministic() {
 fn shard_scaler_views_converge_to_global_statistics() {
     let p = 4usize;
     let n = 4096u64;
-    let snapshots = |sync: Option<u64>| -> Vec<Vec<f64>> {
+    let snapshots = |sync: Option<SyncPolicy>| -> Vec<Vec<f64>> {
         let mut source = WaveformGenerator::classification(7);
         let schema = source.schema().clone();
         let sink = EvalSink::new(schema.n_classes(), 1.0, n);
@@ -182,7 +245,7 @@ fn shard_scaler_views_converge_to_global_statistics() {
     };
 
     // payload layout of Moments::delta(): [n × d, mean × d, m2 × d]
-    let synced = snapshots(Some(32));
+    let synced = snapshots(Some(SyncPolicy::Count(32)));
     assert_eq!(synced.len(), p);
     let d = synced[0].len() / 3;
     for s in &synced {
