@@ -12,7 +12,8 @@ fn main() {
     println!("backend: {:?}", samoa::runtime::backend_in_use());
     let d = 16usize;
     let schema = Schema::classification("blobs", Schema::all_numeric(d), 2);
-    let config = CluStreamConfig { max_micro: 60, k: 4, macro_period: 20_000, ..Default::default() };
+    let config =
+        CluStreamConfig { max_micro: 60, k: 4, macro_period: 20_000, ..Default::default() };
     let mut cs = CluStream::new(&schema, config, 99);
     let mut rng = Rng::new(7);
 

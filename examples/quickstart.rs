@@ -45,8 +45,8 @@ fn main() {
     let (topo, handles) = build_topology(stream.schema(), &config, move |_| {
         Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
     });
-    let source =
-        (0..100_000u64).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let source = (0..100_000u64)
+        .map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
     let metrics = LocalEngine::new().run(&topo, handles.entry, source, |_| {});
     println!(
         "VHT (p=4)      : accuracy={:.3} events={} attribute-bytes={}",

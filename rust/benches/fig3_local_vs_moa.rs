@@ -14,7 +14,8 @@ fn main() {
         for v in [Variant::Moa, Variant::Local] {
             bench(&format!("fig3 dense {cat}-{num} {v}"), 5, || {
                 let mut s = RandomTreeGenerator::new(cat, num, 2, 42);
-                run_variant(&mut s, v, n, EngineKind::LocalDeterministic { feedback_delay: 0 }, false, n);
+                let kind = EngineKind::LocalDeterministic { feedback_delay: 0 };
+                run_variant(&mut s, v, n, kind, false, n);
                 n
             });
         }
@@ -23,7 +24,8 @@ fn main() {
         for v in [Variant::Moa, Variant::Local] {
             bench(&format!("fig3 sparse {dim} {v}"), 5, || {
                 let mut s = RandomTweetGenerator::new(dim, 42);
-                run_variant(&mut s, v, n, EngineKind::LocalDeterministic { feedback_delay: 0 }, true, n);
+                let kind = EngineKind::LocalDeterministic { feedback_delay: 0 };
+                run_variant(&mut s, v, n, kind, true, n);
                 n
             });
         }

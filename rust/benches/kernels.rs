@@ -24,7 +24,10 @@ fn blocks(n: usize, seed: u64) -> Vec<CounterBlock> {
 }
 
 fn main() {
-    println!("== kernel benches (backend availability: {:?}) ==", registry::artifacts_dir().is_some());
+    println!(
+        "== kernel benches (backend availability: {:?}) ==",
+        registry::artifacts_dir().is_some()
+    );
 
     for n in [64usize, 256, 1024] {
         let bs = blocks(n, 1);

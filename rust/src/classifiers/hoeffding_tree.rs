@@ -499,8 +499,8 @@ mod tests {
             let a0 = rng.below(2) as f32;
             let a1 = rng.below(2) as f32;
             let cls = (a0 as u32) ^ (a1 as u32);
-            let inst =
-                Instance::dense(vec![a0, a1.into(), rng.f32(), rng.f32(), rng.f32()], Label::Class(cls));
+            let vals = vec![a0, a1.into(), rng.f32(), rng.f32(), rng.f32()];
+            let inst = Instance::dense(vals, Label::Class(cls));
             ht.train(&inst);
         }
         // one split layer max: root + its children (arity <= 16)

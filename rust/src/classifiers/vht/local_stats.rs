@@ -216,7 +216,9 @@ mod tests {
             ls.process(attr_ev(5, 7, i % 2, i % 2), &mut ctx);
             ls.process(attr_ev(5, 3, (i / 2) % 4, i % 2), &mut ctx);
         }
-        ls.process(Event::Compute { leaf: 5, seq: 1, n_l: 200.0, class_counts: Arc::new(vec![]) }, &mut ctx);
+        let compute =
+            Event::Compute { leaf: 5, seq: 1, n_l: 200.0, class_counts: Arc::new(vec![]) };
+        ls.process(compute, &mut ctx);
         let out = ctx.take();
         assert_eq!(out.len(), 1);
         match &out[0].2 {
@@ -235,7 +237,9 @@ mod tests {
     fn compute_unknown_leaf_replies_null() {
         let mut ls = LocalStats::new(2, ids());
         let mut ctx = Ctx::new(0, 1);
-        ls.process(Event::Compute { leaf: 99, seq: 2, n_l: 10.0, class_counts: Arc::new(vec![]) }, &mut ctx);
+        let compute =
+            Event::Compute { leaf: 99, seq: 2, n_l: 10.0, class_counts: Arc::new(vec![]) };
+        ls.process(compute, &mut ctx);
         let out = ctx.take();
         match &out[0].2 {
             Event::LocalResult { best_attr, best, .. } => {
@@ -280,8 +284,10 @@ mod tests {
         ctx.take();
         let mut ca = Ctx::new(0, 1);
         let mut cb = Ctx::new(0, 1);
-        a.process(Event::Compute { leaf: 2, seq: 1, n_l: 120.0, class_counts: Arc::new(vec![]) }, &mut ca);
-        b.process(Event::Compute { leaf: 2, seq: 1, n_l: 120.0, class_counts: Arc::new(vec![]) }, &mut cb);
+        let compute =
+            || Event::Compute { leaf: 2, seq: 1, n_l: 120.0, class_counts: Arc::new(vec![]) };
+        a.process(compute(), &mut ca);
+        b.process(compute(), &mut cb);
         let (ea, eb) = (ca.take(), cb.take());
         match (&ea[0].2, &eb[0].2) {
             (

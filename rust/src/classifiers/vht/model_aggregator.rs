@@ -111,7 +111,13 @@ impl ModelAggregator {
                     ctx.emit(
                         self.streams.attribute,
                         leaf_attr_key(leaf_id, a as u32),
-                        Event::Attribute { leaf: leaf_id, attr: a as u32, value: 1.0, class, weight: w },
+                        Event::Attribute {
+                            leaf: leaf_id,
+                            attr: a as u32,
+                            value: 1.0,
+                            class,
+                            weight: w,
+                        },
                     );
                 }
             }
@@ -292,7 +298,9 @@ impl Processor for ModelAggregator {
                 }
                 self.tick_timeouts(ctx);
             }
-            Event::LocalResult { leaf, seq, best_attr, best, second_attr: _, second, best_dist } => {
+            Event::LocalResult {
+                leaf, seq, best_attr, best, second_attr: _, second, best_dist
+            } => {
                 // the leaf may have split already — stale results dropped
                 let Some(node) = self.tree.node_of_leaf(leaf) else { return };
                 let Some(pending) = self.tree.leaf_mut(node).pending.as_mut() else { return };
@@ -361,7 +369,8 @@ mod tests {
         let mut compute_seen = None;
         for i in 0..200u32 {
             let a0 = i % 2;
-            m.process(Event::Instance { id: i as u64, inst: inst([a0, i % 2, 0, 1], a0) }, &mut ctx);
+            let ev = Event::Instance { id: i as u64, inst: inst([a0, i % 2, 0, 1], a0) };
+            m.process(ev, &mut ctx);
             for (s, _, e) in ctx.take() {
                 if s == ids().compute {
                     if let Event::Compute { leaf, seq, .. } = e {

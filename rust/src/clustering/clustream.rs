@@ -200,7 +200,8 @@ impl CluStream {
                     let r = m.radius();
                     // singleton clusters have zero radius: use distance to
                     // nearest other cluster as a proxy boundary
-                    let boundary = if m.n < 2.0 { r.max(d2.sqrt() * 0.5) } else { self.config.boundary * r };
+                    let boundary =
+                        if m.n < 2.0 { r.max(d2.sqrt() * 0.5) } else { self.config.boundary * r };
                     if d2.sqrt() <= boundary.max(1e-9) {
                         self.micro[idx].absorb(&point, self.t as f64);
                     } else {

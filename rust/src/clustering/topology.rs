@@ -66,7 +66,8 @@ mod tests {
     #[test]
     fn distributed_clustream_finds_blobs() {
         let schema = Schema::classification("b", Schema::all_numeric(4), 2);
-        let config = CluStreamConfig { max_micro: 30, k: 3, macro_period: 100_000, ..Default::default() };
+        let config =
+            CluStreamConfig { max_micro: 30, k: 3, macro_period: 100_000, ..Default::default() };
         let (topo, handles) = build_topology(&schema, config, 3, 5, 500);
         let mut rng = Rng::new(1);
         let source = (0..6000u64).map(move |id| {

@@ -94,7 +94,9 @@ impl LocalEngine {
                 queue.push_back(delayed.pop_front().unwrap().1);
             }
 
-            self.route(topology, &mut rt, &mut metrics, entry, 0, event, &mut queue, &mut delayed, now);
+            self.route(
+                topology, &mut rt, &mut metrics, entry, 0, event, &mut queue, &mut delayed, now,
+            );
             self.drain(topology, &mut rt, &mut metrics, &mut queue, &mut delayed, now);
             on_drain(&mut rt.instances);
         }
@@ -110,7 +112,9 @@ impl LocalEngine {
                 let mut ctx = Ctx::new(i, rt.parallelism[p]);
                 rt.instances[p][i].on_shutdown(&mut ctx);
                 for (s, k, e) in ctx.take() {
-                    self.route(topology, &mut rt, &mut metrics, s, k, e, &mut queue, &mut delayed, fin);
+                    self.route(
+                        topology, &mut rt, &mut metrics, s, k, e, &mut queue, &mut delayed, fin,
+                    );
                 }
                 // Drain between on_shutdown calls: emissions of an
                 // earlier processor (e.g. a pipeline shard's final stats

@@ -133,7 +133,15 @@ impl Router {
         }
     }
 
-    fn send_one(&self, out: &mut OutBuffers, stream: usize, dest: usize, i: usize, bytes: u64, event: Event) {
+    fn send_one(
+        &self,
+        out: &mut OutBuffers,
+        stream: usize,
+        dest: usize,
+        i: usize,
+        bytes: u64,
+        event: Event,
+    ) {
         // `sent` rises at buffer time so quiescence can never be observed
         // while an event sits in a batch buffer.
         self.flow.sent.fetch_add(1, Ordering::SeqCst);
@@ -290,7 +298,8 @@ impl ThreadedEngine {
                                         // with a timeout so control stays
                                         // responsive.
                                         router.flush(&mut out);
-                                        match drx.recv_timeout(std::time::Duration::from_micros(200)) {
+                                        let wait = std::time::Duration::from_micros(200);
+                                        match drx.recv_timeout(wait) {
                                             Ok(b) => break Work::Data(b),
                                             Err(RecvTimeoutError::Timeout) => continue,
                                             Err(RecvTimeoutError::Disconnected) => {
@@ -417,7 +426,8 @@ mod tests {
         let a = b.add_processor("w", 4, |_| Box::new(Add));
         let entry = b.stream("src", None, a, Grouping::Shuffle);
         let topo = b.build();
-        let m = ThreadedEngine::default().run(&topo, entry, (0..1000).map(inst_event), |_, _, _| {});
+        let m =
+            ThreadedEngine::default().run(&topo, entry, (0..1000).map(inst_event), |_, _, _| {});
         assert_eq!(TOTAL.load(Ordering::SeqCst), 1000);
         assert_eq!(m.source_instances, 1000);
         assert_eq!(m.streams[0].events, 1000);
@@ -467,7 +477,13 @@ mod tests {
                             ctx.emit(
                                 s,
                                 id,
-                                Event::Attribute { leaf: id, attr: 0, value: 0.0, class: 0, weight: 1.0 },
+                                Event::Attribute {
+                                    leaf: id,
+                                    attr: 0,
+                                    value: 0.0,
+                                    class: 0,
+                                    weight: 1.0,
+                                },
                             );
                         }
                     }

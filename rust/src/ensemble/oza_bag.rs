@@ -109,7 +109,8 @@ mod tests {
 
     fn factory(schema: Schema) -> BaseFactory {
         Box::new(move || {
-            Box::new(HoeffdingTree::new(schema.clone(), HTConfig { grace_period: 100, ..Default::default() }))
+            let cfg = HTConfig { grace_period: 100, ..Default::default() };
+            Box::new(HoeffdingTree::new(schema.clone(), cfg))
         })
     }
 

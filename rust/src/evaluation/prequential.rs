@@ -291,7 +291,8 @@ mod tests {
 
     #[test]
     fn prequential_accuracy_of_constant_model() {
-        let schema = crate::core::Schema::classification("c", crate::core::Schema::all_numeric(1), 2);
+        let schema =
+            crate::core::Schema::classification("c", crate::core::Schema::all_numeric(1), 2);
         let mut model = Always(0);
         let mut stream = ConstStream { schema, n: 1000 };
         let r = prequential_run(&mut model, &mut stream, &PrequentialConfig::default());

@@ -45,7 +45,15 @@ pub fn table5(args: &Args) -> anyhow::Result<()> {
     }
     print_table(
         "Table 5 — MAMR rule/feature statistics",
-        &["dataset", "instances", "#attrs", "rules created", "rules removed", "rules live", "features created"],
+        &[
+            "dataset",
+            "instances",
+            "#attrs",
+            "rules created",
+            "rules removed",
+            "rules live",
+            "features created",
+        ],
         &rows,
     );
     Ok(())
@@ -180,7 +188,8 @@ fn run_distributed(
             (t, h.entry)
         }
     };
-    let source = (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let source =
+        (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
     let throughput = if sim {
         SimTimeEngine::default().run(&topo, entry, source, |_| {}).throughput()
     } else {
@@ -203,11 +212,16 @@ pub fn fig12(args: &Args) -> anyhow::Result<()> {
         rows.push(vec![ds.into(), "MAMR".into(), "-".into(), format!("{:.0}", mamr.throughput)]);
         for &p in &ps {
             let v = run_distributed(ds, p, None, n, true, pipeline);
-            rows.push(vec![ds.into(), "VAMR".into(), p.to_string(), format!("{:.0}", v.throughput)]);
             let h1 = run_distributed(ds, p, Some(1), n, true, pipeline);
-            rows.push(vec![ds.into(), "HAMR-1".into(), p.to_string(), format!("{:.0}", h1.throughput)]);
             let h2 = run_distributed(ds, p, Some(2), n, true, pipeline);
-            rows.push(vec![ds.into(), "HAMR-2".into(), p.to_string(), format!("{:.0}", h2.throughput)]);
+            for (name, r) in [("VAMR", v), ("HAMR-1", h1), ("HAMR-2", h2)] {
+                rows.push(vec![
+                    ds.into(),
+                    name.into(),
+                    p.to_string(),
+                    format!("{:.0}", r.throughput),
+                ]);
+            }
         }
     }
     print_table(

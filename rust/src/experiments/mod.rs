@@ -114,7 +114,11 @@ pub fn dataset_stream(name: &str, seed: u64) -> Box<dyn crate::streams::StreamSo
 }
 
 /// Regression dataset twin with an instance cap (throughput experiments).
-pub fn regression_stream(name: &str, seed: u64, limit: u64) -> Box<dyn crate::streams::StreamSource> {
+pub fn regression_stream(
+    name: &str,
+    seed: u64,
+    limit: u64,
+) -> Box<dyn crate::streams::StreamSource> {
     use crate::streams::datasets::*;
     match name {
         "electricity" => Box::new(ElectricityRegStream::with_limit(seed, limit)),

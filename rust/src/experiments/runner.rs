@@ -108,14 +108,18 @@ pub fn run_variant(
             n,
             curve_every,
         ),
-        Variant::Local => run_vht(stream, variant, 1, SplitBuffering::Discard, 0, n, engine, sparse, curve_every),
+        Variant::Local => {
+            run_vht(stream, variant, 1, SplitBuffering::Discard, 0, n, engine, sparse, curve_every)
+        }
         Variant::Wok { p } => {
             let delay = default_delay(engine);
-            run_vht(stream, variant, p, SplitBuffering::Discard, delay, n, engine, sparse, curve_every)
+            let buffering = SplitBuffering::Discard;
+            run_vht(stream, variant, p, buffering, delay, n, engine, sparse, curve_every)
         }
         Variant::Wk { p, z } => {
             let delay = default_delay(engine);
-            run_vht(stream, variant, p, SplitBuffering::Buffer(z.max(1)), delay, n, engine, sparse, curve_every)
+            let buffering = SplitBuffering::Buffer(z.max(1));
+            run_vht(stream, variant, p, buffering, delay, n, engine, sparse, curve_every)
         }
     }
 }
@@ -260,7 +264,12 @@ mod tests {
             false,
             5_000,
         );
-        assert!((moa.accuracy - local.accuracy).abs() < 0.06, "moa={} local={}", moa.accuracy, local.accuracy);
+        assert!(
+            (moa.accuracy - local.accuracy).abs() < 0.06,
+            "moa={} local={}",
+            moa.accuracy,
+            local.accuracy
+        );
         assert!(!local.curve.is_empty());
     }
 

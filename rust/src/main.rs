@@ -236,7 +236,8 @@ fn run_vht_task(
     let (topo, handles) = build_topology(stream.schema(), &config, move |_| {
         Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
     });
-    let source = (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let source =
+        (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
     let started = std::time::Instant::now();
     let metrics = if args.flag("threaded") {
         ThreadedEngine::default().run(&topo, handles.entry, source, |_, _, _| {})

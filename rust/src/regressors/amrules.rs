@@ -314,7 +314,14 @@ pub struct AMRules {
 impl AMRules {
     pub fn new(schema: Schema, config: AMRulesConfig) -> Self {
         let default_rule = RuleLearner::new(RuleSpec::default(), &schema, &config);
-        AMRules { schema, config, rules: Vec::new(), default_rule, next_id: 0, stats: AMRulesStats::default() }
+        AMRules {
+            schema,
+            config,
+            rules: Vec::new(),
+            default_rule,
+            next_id: 0,
+            stats: AMRulesStats::default(),
+        }
     }
 
     pub fn n_rules(&self) -> usize {
@@ -375,8 +382,8 @@ impl Regressor for AMRules {
                 self.stats.rules_created += 1;
                 self.stats.features_created += 1;
                 let spec = self.default_rule.spec.clone();
-                let mut promoted =
-                    std::mem::replace(&mut self.default_rule, RuleLearner::new(RuleSpec::default(), &self.schema, &self.config));
+                let fresh = RuleLearner::new(RuleSpec::default(), &self.schema, &self.config);
+                let mut promoted = std::mem::replace(&mut self.default_rule, fresh);
                 promoted.spec = spec;
                 if self.config.max_rules == 0 || self.rules.len() < self.config.max_rules {
                     self.rules.push((self.next_id, promoted));

@@ -20,7 +20,9 @@ use std::sync::Arc;
 use crate::core::instance::{Instance, Label};
 use crate::core::model::Regressor;
 use crate::core::Schema;
-use crate::topology::{Ctx, Event, Grouping, Output, Processor, ProcessorId, StreamId, Topology, TopologyBuilder};
+use crate::topology::{
+    Ctx, Event, Grouping, Output, Processor, ProcessorId, StreamId, Topology, TopologyBuilder,
+};
 
 use super::amrules::{AMRulesConfig, RuleEvent, RuleLearner};
 use super::rule::RuleSpec;
@@ -114,7 +116,10 @@ impl VamrAggregator {
                 self.default_rule =
                     RuleLearner::new(RuleSpec::default(), &self.schema, &self.config);
             }
-            RuleEvent::Evict => self.default_rule = RuleLearner::new(RuleSpec::default(), &self.schema, &self.config),
+            RuleEvent::Evict => {
+                self.default_rule =
+                    RuleLearner::new(RuleSpec::default(), &self.schema, &self.config)
+            }
             _ => {}
         }
     }
@@ -298,7 +303,10 @@ pub fn build_topology(
     let nr = b.stream("new-rule", Some(ma), learners, Grouping::Key);
     let ru = b.stream("rule-updates", Some(learners), ma, Grouping::Shuffle);
     let pr = b.stream("prediction", Some(ma), eval, Grouping::Shuffle);
-    debug_assert_eq!((ri, nr, ru, pr), (ids.rule_instance, ids.new_rule, ids.rule_updates, ids.prediction));
+    debug_assert_eq!(
+        (ri, nr, ru, pr),
+        (ids.rule_instance, ids.new_rule, ids.rule_updates, ids.prediction)
+    );
 
     (b.build(), VamrHandles { entry, streams: ids, ma, learners, evaluator: eval })
 }

@@ -43,7 +43,10 @@ impl StreamSource for Box<dyn StreamSource> {
 /// Extension: route any source through a preprocessing pipeline
 /// ([`crate::preprocess`]), e.g. `ArffStream::from_file(p)?.pipe(pl)`.
 pub trait StreamSourceExt: StreamSource + Sized {
-    fn pipe(self, pipeline: crate::preprocess::Pipeline) -> crate::preprocess::TransformedStream<Self> {
+    fn pipe(
+        self,
+        pipeline: crate::preprocess::Pipeline,
+    ) -> crate::preprocess::TransformedStream<Self> {
         crate::preprocess::TransformedStream::new(self, pipeline)
     }
 }

@@ -27,8 +27,11 @@ pub struct RandomTweetGenerator {
 
 impl RandomTweetGenerator {
     pub fn new(vocab: u32, seed: u64) -> Self {
-        let schema =
-            Schema::classification(&format!("random-tweet-{vocab}"), Schema::all_numeric(vocab as usize), 2);
+        let schema = Schema::classification(
+            &format!("random-tweet-{vocab}"),
+            Schema::all_numeric(vocab as usize),
+            2,
+        );
         RandomTweetGenerator {
             schema,
             zipf: Zipf::new(vocab as usize, 1.5),

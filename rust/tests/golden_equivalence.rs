@@ -62,7 +62,8 @@ fn run_vht(config: &VhtConfig, sparse: bool, n: u64, seed: u64) -> VhtFingerprin
     let (topo, handles) = build_vht(&schema, config, move |_| {
         Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
     });
-    let source = (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let source =
+        (0..n).map_while(|id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
     let mut splits = (0, 0);
     let m = LocalEngine::new().run(&topo, handles.entry, source, |instances| {
         if let Some(ma) = instances[handles.ma.0][0]
@@ -102,7 +103,8 @@ fn vht_dense_batched_equals_unbatched() {
 fn vht_sparse_batched_equals_unbatched() {
     let base = VhtConfig { parallelism: 2, sparse: true, grace_period: 500, ..Default::default() };
     let batched = run_vht(&VhtConfig { batch_attributes: true, ..base.clone() }, true, 20_000, 3);
-    let unbatched = run_vht(&VhtConfig { batch_attributes: false, ..base.clone() }, true, 20_000, 3);
+    let unbatched =
+        run_vht(&VhtConfig { batch_attributes: false, ..base.clone() }, true, 20_000, 3);
     assert_eq!(batched.accuracy_bits, unbatched.accuracy_bits);
     assert_eq!(batched.kappa_bits, unbatched.kappa_bits);
     assert_eq!(
@@ -132,10 +134,12 @@ fn amrules_topology_rerun_bit_identical() {
             samoa::core::Schema::regression("pw", samoa::core::Schema::all_numeric(2), -12.0, 12.0);
         let sink = EvalSink::new(0, schema.label_range(), 100_000);
         let sink2 = Arc::clone(&sink);
-        let (topo, handles) =
-            samoa::regressors::vamr::build_topology(&schema, &AMRulesConfig::default(), 2, move |_| {
-                Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
-            });
+        let (topo, handles) = samoa::regressors::vamr::build_topology(
+            &schema,
+            &AMRulesConfig::default(),
+            2,
+            move |_| Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) }),
+        );
         let mut rng = Rng::new(5);
         let source = (0..15_000u64).map(move |id| {
             let x0 = rng.f32();
@@ -169,7 +173,8 @@ fn clustream_topology_rerun_bit_identical() {
             macro_period: 100_000,
             ..Default::default()
         };
-        let (topo, handles) = samoa::clustering::topology::build_topology(&schema, config, 3, 5, 500);
+        let (topo, handles) =
+            samoa::clustering::topology::build_topology(&schema, config, 3, 5, 500);
         let mut rng = Rng::new(1);
         let source = (0..6_000u64).map(move |id| {
             let c = [0.0f32, 5.0, 10.0][(id % 3) as usize];
@@ -220,7 +225,13 @@ impl Processor for Fwd {
 }
 
 /// Run source → fwd(p=1) → recorder(p) and return the per-instance logs.
-fn run_edge_probe(grouping: Grouping, p: usize, n: u64, batch: usize, queue: usize) -> Vec<Vec<u64>> {
+fn run_edge_probe(
+    grouping: Grouping,
+    p: usize,
+    n: u64,
+    batch: usize,
+    queue: usize,
+) -> Vec<Vec<u64>> {
     let log: Arc<Mutex<Vec<Vec<u64>>>> = Arc::new(Mutex::new(vec![Vec::new(); p]));
     let mut b = TopologyBuilder::new("probe");
     let fwd = b.add_processor("fwd", 1, |_| Box::new(Fwd(StreamId(1))));
@@ -293,8 +304,10 @@ fn threaded_totals_match_local() {
         b.stream("edge", Some(fwd), rec, Grouping::All);
         (b.build(), entry)
     };
-    let source =
-        || (0..2_000u64).map(|id| Event::Instance { id, inst: Instance::dense(vec![0.0], Label::None) });
+    let source = || {
+        (0..2_000u64)
+            .map(|id| Event::Instance { id, inst: Instance::dense(vec![0.0], Label::None) })
+    };
     let (t1, e1) = build();
     let local = LocalEngine::new().run(&t1, e1, source(), |_| {});
     let (t2, e2) = build();
