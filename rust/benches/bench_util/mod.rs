@@ -2,9 +2,10 @@
 //! repeated timed runs, median/min/max reporting.
 //!
 //! Setting the `BENCH_SMOKE` env var puts the harness in CI smoke mode:
-//! a single timed rep per bench (and benches may shrink their workloads
-//! via [`smoke_mode`]) — the goal there is "the perf code still builds
-//! and runs", not stable numbers.
+//! benches shrink their workloads via [`smoke_mode`], and every bench
+//! runs one warmup + three timed reps with the *median* reported — the
+//! numbers feed the perf-trajectory gate, and a single cold rep of a
+//! sub-millisecond run on a shared runner is noise, not a measurement.
 
 use std::io::Write;
 use std::time::Instant;
@@ -52,12 +53,12 @@ pub fn record_json(name: &str, fields: &[(&str, f64)]) {
 }
 
 /// Time `f` `reps` times after one warmup; print a stats row. In smoke
-/// mode the warmup is skipped and exactly one rep runs.
+/// mode exactly three reps run (median reported — shrunk workloads are
+/// fast enough that one rep is runner-jitter, which would flap the CI
+/// perf gate).
 pub fn bench<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
-    let reps = if smoke_mode() { 1 } else { reps };
-    if !smoke_mode() {
-        let _ = f(); // warmup
-    }
+    let reps = if smoke_mode() { 3 } else { reps };
+    let _ = f(); // warmup
     let mut times = Vec::with_capacity(reps);
     let mut items = 0u64;
     for _ in 0..reps {

@@ -1,4 +1,7 @@
-//! Zero-copy data-plane bench: engine events/sec across
+//! Data-plane bench: events/sec across engines, payloads and fan-out
+//! shapes, plus the flow-control sweep of the elastic threaded plane.
+//!
+//! **Section 1 — zero-copy plane** (the PR-3 acceptance matrix):
 //!
 //! * engine: local vs threaded,
 //! * parallelism p ∈ {1, 2, 4, 8},
@@ -7,23 +10,36 @@
 //! * topology: broadcast-heavy (`All`, the ensemble shape) vs key-grouped
 //!   (`Key`, the VHT shape),
 //!
-//! with **both data planes** recorded per configuration:
+//! with **both data planes** recorded per configuration: `baseline` =
+//! deep-copied broadcasts + per-event sends; `zerocopy` = Arc-shared
+//! clones + fixed 32-event micro-batches.
 //!
-//! * `baseline` — the pre-refactor semantics: deep-copied payload per
-//!   broadcast delivery (`Event::deep_clone`) and, on the threaded
-//!   engine, per-event channel sends (`batch_size = 1`);
-//! * `zerocopy` — Arc-shared clones + micro-batched channels (the
-//!   defaults).
+//! **Section 2 — flow control**: capacity × batch-policy × workers on a
+//! compute-bound stage, where bounded queues and the scheduler actually
+//! bite. The acceptance pair: the adaptive batcher must not lose to
+//! fixed `batch=32` at full rate.
 //!
-//! The final summary line reports the speedup on the acceptance
-//! configuration (threaded, broadcast, p = 4): the zero-copy plane must
-//! beat the committed baseline there.
+//! **Section 3 — delivery latency at low rate**: a trickle source
+//! (10 kHz) through fixed-32 vs adaptive batching; adaptive must cut
+//! the p50 delivery latency (it shrinks per-edge batches toward 1 and
+//! flushes on source idle instead of parking events in a 32-slot
+//! buffer).
+//!
+//! Every row lands in `BENCH_JSON` as `tput/...` — the rows the CI
+//! perf-trajectory gate (`tools/bench_compare.py`) diffs against the
+//! committed `perf/BENCH_PR*.json` history.
 
 mod bench_util;
-use bench_util::{bench, smoke_mode};
+use bench_util::{bench, record_json, smoke_mode};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use samoa::core::instance::{Instance, Label};
 use samoa::engine::{LocalEngine, ThreadedEngine};
+// the same deterministic spin load `samoa exp flowcontrol` sweeps
+use samoa::experiments::flowcontrol::Burn;
 use samoa::topology::{Ctx, Event, Grouping, Processor, TopologyBuilder};
 
 struct Nop;
@@ -62,11 +78,8 @@ fn run(cfg: Config, n: u64) -> f64 {
     let source = (0..n).map(|id| make_event(id, cfg.sparse));
     let t0 = std::time::Instant::now();
     if cfg.threaded {
-        let eng = ThreadedEngine {
-            queue_capacity: 1024,
-            batch_size: if cfg.baseline { 1 } else { 32 },
-            deep_copy_broadcast: cfg.baseline,
-        };
+        let mut eng = ThreadedEngine::new(1024).with_batch(if cfg.baseline { 1 } else { 32 });
+        eng.deep_copy_broadcast = cfg.baseline;
         eng.run(&topo, entry, source, |_, _, _| {});
     } else {
         let eng = LocalEngine { measure_busy: false, deep_copy_broadcast: cfg.baseline };
@@ -75,9 +88,117 @@ fn run(cfg: Config, n: u64) -> f64 {
     n as f64 / t0.elapsed().as_secs_f64().max(1e-12)
 }
 
+/// Batch policy of the flow-control sweep.
+#[derive(Clone, Copy)]
+enum BatchPolicy {
+    Fixed(usize),
+    Adaptive(usize),
+}
+
+impl BatchPolicy {
+    fn label(&self) -> String {
+        match self {
+            BatchPolicy::Fixed(n) => format!("fixed{n}"),
+            BatchPolicy::Adaptive(n) => format!("adaptive{n}"),
+        }
+    }
+
+    fn apply(&self, eng: ThreadedEngine) -> ThreadedEngine {
+        match self {
+            BatchPolicy::Fixed(n) => eng.with_batch(*n),
+            BatchPolicy::Adaptive(n) => eng.with_adaptive_batch(*n),
+        }
+    }
+}
+
+/// One flow-control run: fast source → burn(p=4), key-grouped. Returns
+/// (events/sec, stalls, peak queue events, steals).
+fn run_flow(
+    capacity: usize,
+    policy: BatchPolicy,
+    workers: Option<usize>,
+    n: u64,
+) -> (f64, u64, u64, u64) {
+    let mut b = TopologyBuilder::new("fc");
+    let w = b.add_processor("burn", 4, |_| Box::new(Burn(2_000)));
+    let entry = b.stream("in", None, w, Grouping::Key);
+    let topo = b.build();
+    let mut eng = policy.apply(if capacity == usize::MAX {
+        ThreadedEngine::default().unbounded()
+    } else {
+        ThreadedEngine::new(capacity)
+    });
+    if let Some(n_workers) = workers {
+        eng = eng.with_workers(n_workers);
+    }
+    let source = (0..n).map(|id| make_event(id, false));
+    let t0 = Instant::now();
+    let m = eng.run(&topo, entry, source, |_, _, _| {});
+    let tput = n as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+    (tput, m.flow.backpressure_stalls, m.max_peak_queue_events(), m.flow.steals)
+}
+
+/// Sink that records per-event delivery latency against the send stamps.
+struct LatencySink {
+    t0: Instant,
+    send_ns: Arc<Vec<AtomicU64>>,
+    latencies: Arc<Mutex<Vec<u64>>>,
+}
+
+impl Processor for LatencySink {
+    fn process(&mut self, e: Event, _c: &mut Ctx) {
+        if let Event::Instance { id, .. } = e {
+            let now = self.t0.elapsed().as_nanos() as u64;
+            let sent = self.send_ns[id as usize].load(Ordering::Relaxed);
+            self.latencies.lock().unwrap().push(now.saturating_sub(sent));
+        }
+    }
+}
+
+/// Trickle source (gap ≈ 100µs) through the given engine; returns
+/// (p50, p95) delivery latency in µs.
+fn run_latency(policy: BatchPolicy, n: u64) -> (f64, f64) {
+    let t0 = Instant::now();
+    let send_ns: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    let latencies: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut b = TopologyBuilder::new("lat");
+    let send2 = Arc::clone(&send_ns);
+    let lat2 = Arc::clone(&latencies);
+    let sink = b.add_processor("sink", 1, move |_| {
+        Box::new(LatencySink {
+            t0,
+            send_ns: Arc::clone(&send2),
+            latencies: Arc::clone(&lat2),
+        })
+    });
+    let entry = b.stream("in", None, sink, Grouping::Shuffle);
+    let topo = b.build();
+    let send3 = Arc::clone(&send_ns);
+    let source = (0..n).map(move |id| {
+        // gap must sit safely above the engine's ~200µs slow-source
+        // threshold, or the adaptive idle-flush never triggers and the
+        // probe measures scheduler jitter instead of the feature
+        std::thread::sleep(Duration::from_micros(500));
+        send3[id as usize].store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Event::Instance { id, inst: Instance::dense(vec![0.5; 8], Label::None) }
+    });
+    policy
+        .apply(ThreadedEngine::new(1024))
+        .run(&topo, entry, source, |_, _, _| {});
+    let mut lats = latencies.lock().unwrap().clone();
+    lats.sort_unstable();
+    let pct = |q: f64| -> f64 {
+        if lats.is_empty() {
+            return f64::NAN;
+        }
+        lats[((lats.len() - 1) as f64 * q) as usize] as f64 / 1_000.0
+    };
+    (pct(0.50), pct(0.95))
+}
+
 fn main() {
     let n: u64 = if smoke_mode() { 4_000 } else { 40_000 };
-    println!("== engine_throughput: zero-copy data plane vs deep-copy baseline ==");
+    println!("== engine_throughput 1: zero-copy data plane vs deep-copy baseline ==");
     println!("(events/sec of the bench row = source events; broadcast rows deliver p× that)");
 
     // remembered for the acceptance summary: (baseline, zerocopy) at
@@ -89,7 +210,7 @@ fn main() {
             for sparse in [false, true] {
                 for p in [1usize, 2, 4, 8] {
                     let name = format!(
-                        "{} {} {} p={p}",
+                        "tput/{} {} {} p={p}",
                         if threaded { "threaded" } else { "local" },
                         if broadcast { "broadcast" } else { "key-grouped" },
                         if sparse { "sparse" } else { "dense" },
@@ -133,5 +254,90 @@ fn main() {
         acceptance.0,
         acceptance.1,
         acceptance.1 / acceptance.0.max(1e-12)
+    );
+
+    // ------------------------------------------------------------------
+    println!("\n== engine_throughput 2: flow-control sweep (capacity × batch × workers) ==");
+    println!("(fast source → burn stage p=4, key-grouped; stalls/peak from EngineMetrics)");
+    let nf: u64 = if smoke_mode() { 2_000 } else { 20_000 };
+    // remembered for the acceptance summary at capacity 1024, pinned
+    let (mut hot_fixed32, mut hot_adaptive) = (0.0f64, 0.0f64);
+    for capacity in [4usize, 1024, usize::MAX] {
+        for policy in [BatchPolicy::Fixed(1), BatchPolicy::Fixed(32), BatchPolicy::Adaptive(32)] {
+            for workers in [None, Some(2usize)] {
+                let cap_label = if capacity == usize::MAX {
+                    "unbounded".to_string()
+                } else {
+                    format!("cap={capacity}")
+                };
+                let w_label = workers.map_or("pinned".to_string(), |w| format!("steal{w}"));
+                let label = format!("tput/flow {cap_label} {} {w_label}", policy.label());
+                let mut last = (0.0, 0, 0, 0);
+                bench(&label, 2, || {
+                    last = run_flow(capacity, policy, workers, nf);
+                    nf
+                });
+                let (tput, stalls, peak, steals) = last;
+                println!(
+                    "  {label}: stalls={stalls} peak_queue={peak}ev steals={steals}"
+                );
+                record_json(
+                    &format!("{label} [fc]"),
+                    &[
+                        ("stalls", stalls as f64),
+                        ("peak_queue_events", peak as f64),
+                        ("steals", steals as f64),
+                    ],
+                );
+                if capacity == 1024 && workers.is_none() {
+                    match policy {
+                        BatchPolicy::Fixed(32) => hot_fixed32 = tput,
+                        BatchPolicy::Adaptive(32) => hot_adaptive = tput,
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    println!("\n== engine_throughput 3: delivery latency at low rate (trickle source) ==");
+    let nl: u64 = if smoke_mode() { 100 } else { 600 };
+    let (fixed_p50, fixed_p95) = run_latency(BatchPolicy::Fixed(32), nl);
+    let (adapt_p50, adapt_p95) = run_latency(BatchPolicy::Adaptive(32), nl);
+    println!("  tput/latency fixed32 : p50={fixed_p50:.1}us p95={fixed_p95:.1}us");
+    println!("  tput/latency adaptive: p50={adapt_p50:.1}us p95={adapt_p95:.1}us");
+    // items_per_s here is the inverse p50 (deliveries/sec at p50 latency):
+    // a higher-is-better alias so the CI trajectory gate watches latency
+    // regressions with the same >15% rule as the throughput rows
+    record_json(
+        "tput/latency fixed32",
+        &[
+            ("p50_us", fixed_p50),
+            ("p95_us", fixed_p95),
+            ("items_per_s", 1e6 / fixed_p50.max(1e-9)),
+        ],
+    );
+    record_json(
+        "tput/latency adaptive",
+        &[
+            ("p50_us", adapt_p50),
+            ("p95_us", adapt_p95),
+            ("items_per_s", 1e6 / adapt_p50.max(1e-9)),
+        ],
+    );
+
+    println!("\n== acceptance: adaptive micro-batching ==");
+    let hot_ok = hot_adaptive >= hot_fixed32 * 0.9;
+    let lat_ok = adapt_p50 < fixed_p50;
+    println!(
+        "  high rate : adaptive={hot_adaptive:.0} ev/s vs fixed32={hot_fixed32:.0} ev/s \
+         (target >= 0.9x) -> {}",
+        if hot_ok { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "  low rate  : adaptive p50={adapt_p50:.1}us vs fixed32 p50={fixed_p50:.1}us \
+         (target: lower) -> {}",
+        if lat_ok { "PASS" } else { "FAIL" }
     );
 }

@@ -1,0 +1,142 @@
+//! Crate-local error type — the tiny `anyhow` subset this crate uses,
+//! with no external dependency.
+//!
+//! The repository must build in offline containers whose cargo registry
+//! caches cannot be assumed to hold any particular crate version, and a
+//! committed `Cargo.lock` (needed so CI cache keys react to dependency
+//! changes) pins exact versions. Rather than gamble the lockfile on a
+//! registry snapshot, the one external dependency (`anyhow`) is replaced
+//! by this module: a string-backed [`Error`], a [`Result`] alias, a
+//! [`Context`] extension trait, and `anyhow!` / `bail!` / `ensure!`
+//! macros with the same shapes. Error *chains*, downcasting and
+//! backtraces — the parts of `anyhow` this crate never used — are
+//! deliberately out of scope.
+
+use std::fmt;
+
+/// String-backed error value. Like `anyhow::Error` it deliberately does
+/// NOT implement `std::error::Error`: that keeps the blanket
+/// `From<E: std::error::Error>` conversion below coherent (the standard
+/// library's reflexive `From<T> for T` would otherwise overlap).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (the `anyhow!` macro
+    /// lowers to this).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Prefix the message with context, innermost cause last — same
+    /// reading order as `anyhow`'s `{:#}` chain rendering.
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// Debug renders the plain message (not a struct dump) so that
+/// `.unwrap()` / `.expect()` failures stay readable, as with `anyhow`.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias (re-exported as `crate::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on any `Result` whose error is
+/// displayable — including foreign error types, which are converted into
+/// [`Error`] with the context prefixed.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+/// Construct an [`Error`](crate::common::error::Error) from a format
+/// string: `anyhow!("bad value {v}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::common::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return `Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn foreign_errors_convert_and_take_context() {
+        let e = fail_io().unwrap_err();
+        assert_eq!(e.to_string(), "gone");
+        let e = fail_io().context("reading data").unwrap_err();
+        assert_eq!(e.to_string(), "reading data: gone");
+        let e = fail_io().with_context(|| format!("pass {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "pass 2: gone");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn inner(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert_eq!(inner(0).unwrap_err().to_string(), "zero is not allowed");
+        assert_eq!(inner(-2).unwrap_err().to_string(), "negative input -2");
+        assert_eq!(anyhow!("v={}", 7).to_string(), "v=7");
+        assert_eq!(format!("{:#}", anyhow!("alt")), "alt");
+        assert_eq!(format!("{:?}", anyhow!("dbg")), "dbg");
+    }
+}

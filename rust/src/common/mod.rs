@@ -3,6 +3,7 @@
 pub mod rng;
 pub mod zipf;
 pub mod cli;
+pub mod error;
 pub mod memsize;
 pub mod fxhash;
 

@@ -58,6 +58,34 @@ impl LocalEngine {
         Self::default()
     }
 
+    // ------------------------------------------------------------------
+    // Flow-control knob parity with `ThreadedEngine` (all no-ops here):
+    // the local engine delivers every emission synchronously from one
+    // queue, so there are no channels to bound, no batches to size and
+    // no workers to schedule. Harness code can hold an engine choice in
+    // one configuration path and apply the same knobs to either engine.
+    // ------------------------------------------------------------------
+
+    /// No-op (parity with [`super::ThreadedEngine::with_batch`]).
+    pub fn with_batch(self, _batch_size: usize) -> Self {
+        self
+    }
+
+    /// No-op (parity with [`super::ThreadedEngine::with_adaptive_batch`]).
+    pub fn with_adaptive_batch(self, _cap: usize) -> Self {
+        self
+    }
+
+    /// No-op (parity with [`super::ThreadedEngine::unbounded`]).
+    pub fn unbounded(self) -> Self {
+        self
+    }
+
+    /// No-op (parity with [`super::ThreadedEngine::with_workers`]).
+    pub fn with_workers(self, _n: usize) -> Self {
+        self
+    }
+
     /// Run `topology`, injecting `source` events on `entry`, and return
     /// engine metrics. `source` yields (key, event) pairs; each yielded
     /// event counts as one source instance for delay bookkeeping.

@@ -12,6 +12,36 @@ pub struct StreamMetrics {
 pub struct InstanceMetrics {
     pub events_processed: u64,
     pub busy_ns: u64,
+    /// High-water mark of *events resident in this instance's data
+    /// queue* (threaded engine only; the local engine delivers
+    /// synchronously and leaves this 0). With a bounded channel this is
+    /// capped near `queue_capacity × batch_size` regardless of input
+    /// size — the backpressure contract the engine tests assert.
+    pub peak_queue_events: u64,
+}
+
+/// Data-plane flow-control counters (threaded engine; zero elsewhere).
+#[derive(Clone, Debug, Default)]
+pub struct FlowControlMetrics {
+    /// Micro-batches shipped over data channels.
+    pub batches_sent: u64,
+    /// Sends that found the bounded channel full (each one is a
+    /// backpressure event: the producer blocked — pinned mode — or
+    /// parked the batch and stopped consuming input — stealing mode).
+    pub backpressure_stalls: u64,
+    /// Wall time producers spent blocked in full-channel sends (pinned
+    /// mode; stealing mode never blocks, it re-schedules).
+    pub backpressure_stall_ns: u64,
+    /// Adaptive batcher grow steps (pressure → throughput mode).
+    pub batch_grows: u64,
+    /// Adaptive batcher shrink steps (idle → latency mode).
+    pub batch_shrinks: u64,
+    /// Work-stealing mode: task quanta executed by a non-home worker.
+    pub steals: u64,
+    /// Batch buffers recycled through the arena (vs fresh allocations
+    /// in `arena_allocs`).
+    pub arena_reuses: u64,
+    pub arena_allocs: u64,
 }
 
 /// Aggregated engine metrics, returned by every engine run.
@@ -25,6 +55,8 @@ pub struct EngineMetrics {
     pub source_instances: u64,
     /// Wall-clock of the whole run.
     pub wall_ns: u64,
+    /// Flow-control counters (threaded engine; default-zero elsewhere).
+    pub flow: FlowControlMetrics,
 }
 
 impl EngineMetrics {
@@ -37,6 +69,7 @@ impl EngineMetrics {
                 .collect(),
             source_instances: 0,
             wall_ns: 0,
+            flow: FlowControlMetrics::default(),
         }
     }
 
@@ -63,6 +96,17 @@ impl EngineMetrics {
         self.per_instance[processor]
             .iter()
             .map(|i| i.busy_ns)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Highest per-instance resident queue depth seen anywhere in the
+    /// run, in events (the backpressure-bound probe).
+    pub fn max_peak_queue_events(&self) -> u64 {
+        self.per_instance
+            .iter()
+            .flatten()
+            .map(|i| i.peak_queue_events)
             .max()
             .unwrap_or(0)
     }

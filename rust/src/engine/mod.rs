@@ -32,6 +32,51 @@
 //!   delivery on every engine (a `p`-way broadcast records `p` events and
 //!   `p × wire_bytes`) — the quantity the paper's cost model and the
 //!   simtime pricer consume. Batching and Arc-sharing change neither.
+//!
+//! # Flow control (threaded engine)
+//!
+//! The threaded data plane is *elastic and loss-free under sustained
+//! overload* — the property that lets real DSPEs survive load beyond
+//! one machine's memory (Kourtellis et al. 2018; Benczúr et al. on
+//! bounded-memory online learning). The knobs, all on
+//! [`ThreadedEngine`] (accepted as no-ops by [`LocalEngine`] for
+//! configuration parity):
+//!
+//! * `queue_capacity` — bound of each data channel in batches. A full
+//!   channel blocks the producer (one-thread-per-instance mode) or
+//!   parks the batch and pauses that sender's input consumption
+//!   (work-stealing mode); either way pressure propagates hop by hop
+//!   back to the source and resident state stays near
+//!   `queue_capacity × batch_size` events per instance, asserted by
+//!   `tests/engine_properties.rs`. `unbounded()` removes the bound
+//!   (bench baseline: queues then grow with input size).
+//! * `batch_size` + `adaptive_batch` — per-edge micro-batch sizing.
+//!   Adaptive edges double toward the cap on size-triggered flushes
+//!   (hot edge → throughput) and halve toward 1 on idle flushes (cold
+//!   edge → latency); `with_batch(n)` pins the size. Batch buffers are
+//!   recycled through a [`crate::topology::BatchArena`], so steady-state
+//!   batching is allocation-free.
+//! * `with_workers(n)` — work-stealing scheduler: `n` OS threads run
+//!   all processor instances as lockable tasks (a `p = 8` topology on 4
+//!   cores), stealing whichever has queued work. Per-edge FIFO and all
+//!   golden outputs are preserved (a task runs on one worker at a
+//!   time).
+//!
+//! **Deadlock freedom** rests on the split control plane: control
+//! events ride unbounded priority channels, so feedback loops (VHT's
+//! `compute`/`local-result`, the `StatsSync` delta/global rounds) can
+//! always make progress no matter how congested the data plane is, and
+//! shutdown is staged (per-processor `Shutdown` + quiescence wait,
+//! then `Halt`) so shutdown emissions drain deterministically through
+//! the bounded channels. Data-plane *cycles* are the one unsupported
+//! shape — as on real DSPEs, a data cycle under sustained overload has
+//! no finite-memory resolution; route feedback as control events.
+//!
+//! **Observability/pricing**: stalls, stall time, batch grow/shrink
+//! steps, steals and per-instance peak queue depth land in
+//! [`EngineMetrics`] (`flow`, `per_instance[..].peak_queue_events`);
+//! [`SimCostModel::c_stall_ns`] prices recorded stalls into the simtime
+//! makespan (a credit round-trip on a real DSPE).
 
 pub mod metrics;
 pub mod local;

@@ -43,13 +43,21 @@ pub struct SimCostModel {
     /// single model aggregator the bottleneck as p grows (the paper's
     /// plateau beyond p ≈ 4-8 in Figs 8-9).
     pub tx_frac: f64,
+    /// Per-backpressure-stall cost, ns: the price of a producer hitting a
+    /// full bounded queue (on a real DSPE, a credit-replenishment round
+    /// trip / spout-pending pause; in-process, a thread park + wake). The
+    /// local engine records no stalls, so this term is zero for simtime's
+    /// own runs; re-pricing metrics measured on the bounded threaded
+    /// engine (see `EngineMetrics::flow`) charges each recorded stall.
+    pub c_stall_ns: f64,
 }
 
 impl Default for SimCostModel {
     fn default() -> Self {
         // Calibrated against the paper's Fig. 13 reference line
-        // (single-partition Samza stream: ~4·10^4 1KB-msgs/s).
-        SimCostModel { c_msg_ns: 15_000.0, c_byte_ns: 10.0, tx_frac: 0.25 }
+        // (single-partition Samza stream: ~4·10^4 1KB-msgs/s); the stall
+        // price is two context switches on commodity hardware.
+        SimCostModel { c_msg_ns: 15_000.0, c_byte_ns: 10.0, tx_frac: 0.25, c_stall_ns: 5_000.0 }
     }
 }
 
@@ -62,7 +70,11 @@ pub struct SimResult {
     pub stage_ns: Vec<f64>,
     /// ns the source/serialization stage takes.
     pub source_ns: f64,
-    /// Pipeline makespan, ns.
+    /// ns charged for bounded-queue backpressure stalls recorded in the
+    /// metrics (`flow.backpressure_stalls × c_stall_ns`; zero for runs
+    /// under the local engine, which has no bounded queues).
+    pub backpressure_ns: f64,
+    /// Pipeline makespan, ns (includes `backpressure_ns`).
     pub makespan_ns: f64,
 }
 
@@ -165,13 +177,21 @@ impl SimTimeEngine {
         let source_ns = total_msgs * self.cost.c_msg_ns * 0.1 // send side is cheaper than full hop
             + total_bytes * self.cost.c_byte_ns * 0.1;
 
+        // Bounded-queue stalls (recorded only when pricing metrics from a
+        // bounded threaded run) serialize the pipeline: each one pauses
+        // the producer, so they add to the makespan rather than being
+        // hidden by it.
+        let backpressure_ns =
+            metrics.flow.backpressure_stalls as f64 * self.cost.c_stall_ns;
+
         let makespan_ns = stage_ns
             .iter()
             .copied()
             .chain(std::iter::once(source_ns))
-            .fold(0.0f64, f64::max);
+            .fold(0.0f64, f64::max)
+            + backpressure_ns;
 
-        SimResult { metrics, stage_ns, source_ns, makespan_ns }
+        SimResult { metrics, stage_ns, source_ns, backpressure_ns, makespan_ns }
     }
 }
 
@@ -217,6 +237,25 @@ mod tests {
             r4.throughput(),
             r1.throughput()
         );
+    }
+
+    /// Backpressure stalls recorded in engine metrics are priced into
+    /// the makespan; local-engine runs (no bounded queues) charge zero.
+    #[test]
+    fn stalls_are_priced_into_makespan() {
+        let eng = SimTimeEngine::default();
+        let (t, e) = topo(2);
+        let r = eng.run(&t, e, source(300), |_| {});
+        assert_eq!(r.backpressure_ns, 0.0, "local engine records no stalls");
+        // re-price the same measured metrics as if a bounded threaded run
+        // had recorded 1000 stalls
+        let mut metrics = r.metrics.clone();
+        metrics.flow.backpressure_stalls = 1000;
+        let repriced = eng.price(&t, metrics);
+        let want = 1000.0 * eng.cost.c_stall_ns;
+        assert!((repriced.backpressure_ns - want).abs() < 1e-6);
+        assert!(repriced.makespan_ns >= r.makespan_ns + want - 1e-6);
+        assert!(repriced.throughput() < r.throughput());
     }
 
     #[test]

@@ -1,58 +1,142 @@
-//! Threaded engine: one OS thread per processor instance, bounded
-//! channels, real backpressure — the in-process analogue of the paper's
-//! Storm/Samza adapters.
+//! Threaded engine: bounded channels, real backpressure, adaptive
+//! micro-batching and an optional work-stealing scheduler — the
+//! in-process analogue of the paper's Storm/Samza adapters, whose data
+//! planes are defined by flow control (credit-based backpressure in
+//! Flink, max-spout-pending in Storm).
 //!
-//! Design notes:
-//! * Every processor instance owns a `Receiver`; a shared routing table
-//!   of `Sender`s lets any instance emit to any stream.
-//! * **Micro-batched data plane**: each sender keeps a small per-edge
-//!   buffer (one `Vec<Event>` per destination *instance*), flushed when
-//!   it reaches [`ThreadedEngine::batch_size`] events or when the
-//!   sender's own input goes quiet — so one bounded-channel send
-//!   amortizes over up to `batch_size` events instead of paying channel
-//!   synchronization per event. Order within a (sender, dest-instance)
-//!   edge is preserved: buffers are FIFO and flushes are in-order
-//!   appends. `batch_size = 1` reproduces the per-event sends of the
-//!   pre-batching engine.
-//! * **Backpressure**: data-plane sends use `SyncSender::send` on a
-//!   bounded channel (capacity counted in *batches*) and block when the
-//!   consumer lags — the Storm max-spout-pending analogue.
-//! * **Deadlock avoidance on feedback loops** (MA→LS→MA): control events
-//!   (`Event::is_control`) skip the batch buffers entirely and ride a
-//!   second, *unbounded* channel per instance, drained with priority. A
-//!   full data channel can therefore never wedge the split-decision
-//!   loop, and a latency-critical control event is never parked behind a
-//!   half-full batch — same reasoning as Storm's separate system stream.
-//! * **Quiescence accounting**: `flow.sent` is incremented when an event
-//!   enters a batch buffer (not when the batch hits the channel), so
-//!   `sent == processed` can only hold when every buffer has drained —
-//!   a buffered event can never be mistaken for quiescence. Workers
-//!   flush their buffers before blocking on an empty input, so buffered
-//!   events always make progress.
-//! * **Shutdown**: when the source is exhausted the engine waits for
-//!   global quiescence (sent == processed, all queues empty), then
-//!   broadcasts `Shutdown` on the control plane; a worker receiving it
-//!   runs `on_shutdown`, routes + flushes everything it emitted, and
-//!   exits.
+//! # Data plane
+//!
+//! * Every processor instance owns a data `Receiver<Batch>`; a shared
+//!   routing table of senders lets any instance emit to any stream.
+//! * **Bounded channels**: data-plane channels are `sync_channel`s of
+//!   [`ThreadedEngine::queue_capacity`] batches. A full channel blocks
+//!   the producer (pinned mode) or parks the batch and pauses the
+//!   producer's input consumption (stealing mode) — so the resident
+//!   queue of an instance is capped near `queue_capacity × batch_size`
+//!   events no matter how fast the source runs, and pressure propagates
+//!   hop by hop back to the source. `queue_capacity = usize::MAX`
+//!   (see [`ThreadedEngine::unbounded`]) restores unbounded channels as
+//!   a bench baseline. Stalls are counted and timed in
+//!   [`EngineMetrics::flow`]; per-instance high-water queue depths land
+//!   in `per_instance[..].peak_queue_events`.
+//! * **Adaptive micro-batching**: each sender keeps a per-edge buffer
+//!   (one per destination *instance*). Under sustained traffic a
+//!   size-triggered flush doubles the edge's batch size toward
+//!   [`ThreadedEngine::batch_size`] (throughput mode); an idle flush —
+//!   the sender's input went quiet with a partial buffer — halves it
+//!   toward 1 (latency mode). `with_batch(n)` pins the size instead
+//!   (the PR-3 fixed-batch behavior; `with_batch(1)` is the unbatched
+//!   engine). The source pump detects slow sources (inter-arrival gap
+//!   over ~200µs) and flushes per event, so a trickle is delivered with
+//!   per-event latency while a firehose pays one channel send per
+//!   batch. Batch buffers are recycled through a
+//!   [`crate::topology::BatchArena`], so steady-state batching is
+//!   allocation-free.
+//! * **Work stealing** ([`ThreadedEngine::with_workers`]): instead of
+//!   one OS thread per instance, `n` workers run all instances as
+//!   lockable tasks, claiming whichever has queued work — so a `p = 8`
+//!   topology runs well on 4 cores and idle workers drain hot shards.
+//!   Sends never block a worker: a full channel parks the batch on the
+//!   edge and the task stops consuming its *own* input until the park
+//!   clears, which is the same backpressure with the worker free to go
+//!   drain the congested destination. FIFO per (sender, dest-instance)
+//!   edge is preserved — a task is run by at most one worker at a time,
+//!   and parked batches are always re-shipped before newer buffers.
+//!
+//! # Control plane and deadlock freedom
+//!
+//! Control events (`Event::is_control`) skip the batch buffers and ride
+//! a second, *unbounded* channel per instance, drained with priority. A
+//! full data channel can therefore never wedge the MA↔LS split-decision
+//! loop or the `StatsSync` round protocol — same reasoning as Storm's
+//! separate system stream. Cycles in the *data* plane are not supported
+//! (as on the real DSPEs, a data cycle under sustained overload has no
+//! finite-memory resolution): feedback edges must use control events.
+//!
+//! # Quiescence and deterministic shutdown
+//!
+//! `flow.sent` is incremented when an event enters a batch buffer (not
+//! when the batch hits the channel), so `sent == processed` can only
+//! hold when every buffer and queue has drained. Shutdown is *staged*
+//! to kill the old best-effort race where a shard's final emission met
+//! an already-exited consumer: processors receive `Shutdown` in
+//! processor-id order (the local engine's order), with a quiescence
+//! wait after each stage so everything a stage emits from
+//! `on_shutdown` is consumed before the next stage flushes; only after
+//! the last stage quiesces does an engine-internal `Halt` let workers
+//! exit. No worker can observe a closed channel before global
+//! quiescence, so shutdown emissions drain deterministically.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::topology::builder::Topology;
 use crate::topology::processor::Ctx;
 use crate::topology::stream::Route;
-use crate::topology::{Event, StreamId};
+use crate::topology::{BatchArena, Event, StreamId};
 
-use super::metrics::EngineMetrics;
+use super::metrics::{EngineMetrics, FlowControlMetrics};
 
 /// Data-plane channel payload: one micro-batch of events.
 type Batch = Vec<Event>;
 
+/// Control-plane message: a control event, or the engine-internal
+/// terminate marker sent only after global post-shutdown quiescence.
+enum CtrlMsg {
+    Event(Event),
+    Halt,
+}
+
+/// Data sender: bounded (backpressure) or unbounded (bench baseline).
+enum DataTx {
+    Bounded(SyncSender<Batch>),
+    Unbounded(Sender<Batch>),
+}
+
+/// `try_send` outcome. `Gone` (receiver dropped) is impossible before
+/// `Halt` by construction; it is still handled by accounting the events
+/// as processed so the quiescence check can never hang on them.
+enum TrySendErr {
+    Full(Batch),
+    Gone(Batch),
+}
+
+impl DataTx {
+    fn try_send(&self, batch: Batch) -> Result<(), TrySendErr> {
+        match self {
+            DataTx::Bounded(tx) => tx.try_send(batch).map_err(|e| match e {
+                TrySendError::Full(b) => TrySendErr::Full(b),
+                TrySendError::Disconnected(b) => TrySendErr::Gone(b),
+            }),
+            DataTx::Unbounded(tx) => tx.send(batch).map_err(|e| TrySendErr::Gone(e.0)),
+        }
+    }
+
+    fn send_blocking(&self, batch: Batch) -> Result<(), Batch> {
+        match self {
+            DataTx::Bounded(tx) => tx.send(batch).map_err(|e| e.0),
+            DataTx::Unbounded(tx) => tx.send(batch).map_err(|e| e.0),
+        }
+    }
+}
+
+/// Per-destination-instance channel endpoints + queue-depth accounting.
 struct Mailbox {
-    data: SyncSender<Batch>,
-    ctrl: Sender<Event>,
+    data: DataTx,
+    ctrl: Sender<CtrlMsg>,
+    /// Events resident in the data channel. Signed: the sender adds only
+    /// AFTER a successful enqueue and the receiver subtracts at dequeue,
+    /// so a receiver racing ahead of the sender's add makes this dip
+    /// transiently negative — but it can never over-count, keeping
+    /// `peak` within the documented `capacity × batch` bound even with
+    /// many producers retrying against a full channel.
+    depth: AtomicI64,
+    /// High-water mark of `depth`.
+    peak: AtomicI64,
 }
 
 /// Shared counters for quiescence detection.
@@ -61,16 +145,88 @@ struct Flow {
     processed: AtomicU64,
 }
 
+/// Engine-wide flow-control counters (see `FlowControlMetrics`).
+struct FlowStats {
+    batches: AtomicU64,
+    stalls: AtomicU64,
+    stall_ns: AtomicU64,
+    grows: AtomicU64,
+    shrinks: AtomicU64,
+    steals: AtomicU64,
+}
+
+/// Why a flush was requested — drives the adaptive batch size.
+#[derive(Clone, Copy)]
+enum Flush {
+    /// The buffer reached the edge's current batch size: hot edge, grow.
+    Size,
+    /// The sender's input went quiet: ship partials now, shrink.
+    Idle,
+    /// Shutdown/terminal flush: ship everything, no adaptation.
+    Final,
+}
+
+/// One sender's per-edge state: `bufs[dest processor][dest instance]`.
+/// Owned by exactly one thread (a pinned worker, a stealing task, or the
+/// source pump), so buffering needs no synchronization.
+struct EdgeBuf {
+    /// Accumulating FIFO buffer.
+    buf: Vec<Event>,
+    /// A batch that met a full channel in non-blocking (stealing) mode;
+    /// always re-shipped before `buf` so edge FIFO order holds.
+    parked: Option<Batch>,
+    /// Current adaptive batch size (== the cap when adaptation is off).
+    cur: usize,
+}
+
+struct OutBuffers {
+    bufs: Vec<Vec<EdgeBuf>>,
+}
+
+impl OutBuffers {
+    fn new(shape: &[usize], batch: usize) -> Self {
+        OutBuffers {
+            bufs: shape
+                .iter()
+                .map(|&p| {
+                    (0..p)
+                        .map(|_| EdgeBuf { buf: Vec::new(), parked: None, cur: batch })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// True while any edge has a parked batch: the owner must stop
+    /// consuming its own data input (backpressure) until the park clears.
+    fn congested(&self) -> bool {
+        self.bufs.iter().flatten().any(|eb| eb.parked.is_some())
+    }
+
+    /// Any event still buffered (parked or accumulating)?
+    fn dirty(&self) -> bool {
+        self.bufs
+            .iter()
+            .flatten()
+            .any(|eb| eb.parked.is_some() || !eb.buf.is_empty())
+    }
+}
+
 /// Multi-threaded engine.
 pub struct ThreadedEngine {
-    /// Bound of each data channel in *batches* (Storm max-pending
-    /// analogue; worst-case in-flight events per edge is
-    /// `queue_capacity × batch_size`).
+    /// Bound of each data channel in *batches*; worst-case resident
+    /// events per instance is about `queue_capacity × batch_size`.
+    /// `usize::MAX` = unbounded (bench baseline, no backpressure).
     pub queue_capacity: usize,
-    /// Data-plane micro-batch size: events buffered per (sender,
-    /// dest-instance) edge before a channel send. 1 = unbatched
-    /// (pre-batching per-event sends).
+    /// Micro-batch size cap. With `adaptive_batch` the per-edge size
+    /// floats in `1..=batch_size`; without it every edge uses exactly
+    /// this size (1 = per-event sends, the pre-batching engine).
     pub batch_size: usize,
+    /// Adapt per-edge batch sizes (grow when hot, shrink when idle).
+    pub adaptive_batch: bool,
+    /// `None`: one OS thread per processor instance (pinned). `Some(n)`:
+    /// n work-stealing workers run all instances.
+    pub workers: Option<usize>,
     /// Bench baseline only: deep-copy every broadcast delivery instead of
     /// the alloc-free shared clone (see `engine_throughput`).
     pub deep_copy_broadcast: bool,
@@ -78,22 +234,48 @@ pub struct ThreadedEngine {
 
 impl Default for ThreadedEngine {
     fn default() -> Self {
-        ThreadedEngine { queue_capacity: 1024, batch_size: 32, deep_copy_broadcast: false }
+        ThreadedEngine {
+            queue_capacity: 1024,
+            batch_size: 32,
+            adaptive_batch: true,
+            workers: None,
+            deep_copy_broadcast: false,
+        }
     }
 }
 
-/// Per-sender batch buffers: `bufs[dest processor][dest instance]`.
-/// Thread-local by construction — every sender (worker thread or the
-/// source pump) owns one, so buffering needs no synchronization at all.
-struct OutBuffers {
-    bufs: Vec<Vec<Batch>>,
-}
+impl ThreadedEngine {
+    pub fn new(queue_capacity: usize) -> Self {
+        ThreadedEngine { queue_capacity, ..Default::default() }
+    }
 
-impl OutBuffers {
-    fn new(shape: &[usize]) -> Self {
-        OutBuffers {
-            bufs: shape.iter().map(|&p| (0..p).map(|_| Vec::new()).collect()).collect(),
-        }
+    /// Fixed data-plane micro-batch size (adaptation off; 1 = per-event
+    /// sends). `with_adaptive_batch` re-enables adaptation with a cap.
+    pub fn with_batch(mut self, batch_size: usize) -> Self {
+        self.batch_size = batch_size.max(1);
+        self.adaptive_batch = false;
+        self
+    }
+
+    /// Adaptive micro-batching with the given cap (the default, cap 32).
+    pub fn with_adaptive_batch(mut self, cap: usize) -> Self {
+        self.batch_size = cap.max(1);
+        self.adaptive_batch = true;
+        self
+    }
+
+    /// Unbounded data channels: no backpressure, queues grow with input
+    /// size. Bench baseline for the bounded-queue contract.
+    pub fn unbounded(mut self) -> Self {
+        self.queue_capacity = usize::MAX;
+        self
+    }
+
+    /// Run all processor instances on `n` work-stealing workers instead
+    /// of one thread per instance.
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = Some(n.max(1));
+        self
     }
 }
 
@@ -105,7 +287,13 @@ struct Router {
     stream_events: Vec<AtomicU64>,
     stream_bytes: Vec<AtomicU64>,
     flow: Flow,
-    batch_size: usize,
+    stats: FlowStats,
+    arena: BatchArena,
+    batch_cap: usize,
+    adaptive: bool,
+    /// Pinned mode blocks producers on a full channel; stealing mode
+    /// parks the batch instead (a worker must never block).
+    blocking: bool,
     deep_copy_broadcast: bool,
 }
 
@@ -148,40 +336,309 @@ impl Router {
         self.stream_events[stream].fetch_add(1, Ordering::Relaxed);
         self.stream_bytes[stream].fetch_add(bytes, Ordering::Relaxed);
         if event.is_control() {
-            let _ = self.mailboxes[dest][i].ctrl.send(event);
+            if self.mailboxes[dest][i].ctrl.send(CtrlMsg::Event(event)).is_err() {
+                // receiver gone (impossible pre-Halt; keep flow balanced)
+                self.flow.processed.fetch_add(1, Ordering::SeqCst);
+            }
         } else {
-            let buf = &mut out.bufs[dest][i];
-            buf.push(event);
-            if buf.len() >= self.batch_size {
-                // blocking send = backpressure
-                let _ = self.mailboxes[dest][i].data.send(std::mem::take(buf));
+            let eb = &mut out.bufs[dest][i];
+            eb.buf.push(event);
+            if eb.buf.len() >= eb.cur {
+                self.flush_edge(eb, dest, i, Flush::Size);
             }
         }
     }
 
-    /// Ship every non-empty batch buffer (stream-quiesce / shutdown flush).
-    fn flush(&self, out: &mut OutBuffers) {
+    /// Deliver one batch to a mailbox, with depth/peak accounting and
+    /// stall metering. Blocks on a full channel in pinned mode; hands
+    /// the batch back (`Some`) in stealing mode so the caller parks it.
+    fn ship(&self, mb: &Mailbox, batch: Batch) -> Option<Batch> {
+        let len = batch.len() as i64;
+        let bump = |mb: &Mailbox| {
+            let depth = mb.depth.fetch_add(len, Ordering::SeqCst) + len;
+            mb.peak.fetch_max(depth, Ordering::Relaxed);
+        };
+        match mb.data.try_send(batch) {
+            Ok(()) => {
+                bump(mb);
+                self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Err(TrySendErr::Full(batch)) => {
+                if self.blocking {
+                    // one stall = one backpressure event (the blocked send)
+                    self.stats.stalls.fetch_add(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    match mb.data.send_blocking(batch) {
+                        Ok(()) => {
+                            bump(mb);
+                            let ns = t0.elapsed().as_nanos() as u64;
+                            self.stats.stall_ns.fetch_add(ns, Ordering::Relaxed);
+                            self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(lost) => self.account_lost(lost),
+                    }
+                    None
+                } else {
+                    // stall counting happens at the park transition in
+                    // flush_edge, NOT here: retries of an already-parked
+                    // batch would otherwise inflate the counter with the
+                    // poll frequency instead of counting backpressure
+                    // events, breaking comparability with pinned mode
+                    Some(batch)
+                }
+            }
+            Err(TrySendErr::Gone(lost)) => {
+                self.account_lost(lost);
+                None
+            }
+        }
+    }
+
+    /// Receiver gone (only reachable after Halt, i.e. post-quiescence):
+    /// count the events processed so flow stays balanced. Depth was not
+    /// yet bumped for an unsent batch, so there is nothing to undo.
+    fn account_lost(&self, lost: Batch) {
+        self.flow.processed.fetch_add(lost.len() as u64, Ordering::SeqCst);
+    }
+
+    /// Flush one edge: parked batch first (FIFO), then the buffer if the
+    /// reason calls for it. Returns the number of batches shipped.
+    fn flush_edge(&self, eb: &mut EdgeBuf, dest: usize, i: usize, reason: Flush) -> usize {
+        let mb = &self.mailboxes[dest][i];
+        let mut shipped = 0usize;
+        if let Some(batch) = eb.parked.take() {
+            match self.ship(mb, batch) {
+                Some(b) => {
+                    eb.parked = Some(b);
+                    return shipped;
+                }
+                None => shipped += 1,
+            }
+        }
+        let ship_buf = match reason {
+            Flush::Size => eb.buf.len() >= eb.cur,
+            Flush::Idle | Flush::Final => !eb.buf.is_empty(),
+        };
+        if !ship_buf {
+            return shipped;
+        }
+        if self.adaptive {
+            match reason {
+                // hot edge: the buffer filled before input went quiet
+                Flush::Size if eb.cur < self.batch_cap => {
+                    eb.cur = (eb.cur * 2).min(self.batch_cap);
+                    self.stats.grows.fetch_add(1, Ordering::Relaxed);
+                }
+                // cold edge: partial buffer shipped on idle
+                Flush::Idle if eb.buf.len() < eb.cur && eb.cur > 1 => {
+                    eb.cur = (eb.cur / 2).max(1);
+                    self.stats.shrinks.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {}
+            }
+        }
+        // Ship in chunks of at most `batch_cap` events: a buffer that
+        // grew past the cap (a parked stealing-mode edge kept
+        // accumulating, or an adaptive shrink halved `cur` under a
+        // partial buffer) must not enter the channel as one oversized
+        // batch, or the `capacity × batch` resident-depth bound would
+        // silently stretch. The common case (buf ≤ cap) stays a single
+        // pointer swap. A Size flush keeps a sub-`cur` remainder
+        // buffered (it is still accumulating); Idle/Final drain fully.
+        loop {
+            let more = match reason {
+                Flush::Size => eb.buf.len() >= eb.cur,
+                Flush::Idle | Flush::Final => !eb.buf.is_empty(),
+            };
+            if !more {
+                return shipped;
+            }
+            let chunk = if eb.buf.len() <= self.batch_cap {
+                // per-event edges (below the arena minimum) skip the
+                // shared pool: a global lock round-trip per event costs
+                // more than the allocation it saves
+                let repl = if eb.buf.len() >= BatchArena::MIN_CAPACITY {
+                    self.arena.take()
+                } else {
+                    Vec::new()
+                };
+                std::mem::replace(&mut eb.buf, repl)
+            } else {
+                let mut c = if self.batch_cap >= BatchArena::MIN_CAPACITY {
+                    self.arena.take()
+                } else {
+                    Vec::new()
+                };
+                c.extend(eb.buf.drain(..self.batch_cap));
+                c
+            };
+            match self.ship(mb, chunk) {
+                Some(b) => {
+                    // unparked → parked transition: one backpressure event
+                    self.stats.stalls.fetch_add(1, Ordering::Relaxed);
+                    eb.parked = Some(b);
+                    return shipped;
+                }
+                None => shipped += 1,
+            }
+        }
+    }
+
+    /// Idle flush: the sender's input went quiet — ship partial buffers
+    /// (shrinking adaptive edges) and retry parked batches.
+    fn flush_idle(&self, out: &mut OutBuffers) {
         for (dest, row) in out.bufs.iter_mut().enumerate() {
-            for (i, buf) in row.iter_mut().enumerate() {
-                if !buf.is_empty() {
-                    let _ = self.mailboxes[dest][i].data.send(std::mem::take(buf));
+            for (i, eb) in row.iter_mut().enumerate() {
+                if eb.parked.is_some() || !eb.buf.is_empty() {
+                    self.flush_edge(eb, dest, i, Flush::Idle);
                 }
             }
         }
     }
+
+    /// Retry parked batches and ship size-ready buffers (stealing mode's
+    /// quantum prologue). Returns the number of batches shipped.
+    fn flush_ready(&self, out: &mut OutBuffers) -> usize {
+        let mut shipped = 0;
+        for (dest, row) in out.bufs.iter_mut().enumerate() {
+            for (i, eb) in row.iter_mut().enumerate() {
+                if eb.parked.is_some() || eb.buf.len() >= eb.cur {
+                    shipped += self.flush_edge(eb, dest, i, Flush::Size);
+                }
+            }
+        }
+        shipped
+    }
+
+    /// Terminal flush: ship everything, waiting out full channels. In
+    /// pinned mode sends block, so one pass suffices. In stealing mode
+    /// parked batches are retried until the consumers drain them —
+    /// consumers always make progress (workers never block), so this
+    /// terminates; zero-loss is not traded away for a time cap. A
+    /// receiver that is actually gone is handled inside `ship`
+    /// (accounted and dropped), so this cannot spin on a dead consumer.
+    fn flush_final(&self, out: &mut OutBuffers) {
+        loop {
+            for (dest, row) in out.bufs.iter_mut().enumerate() {
+                for (i, eb) in row.iter_mut().enumerate() {
+                    if eb.parked.is_some() || !eb.buf.is_empty() {
+                        self.flush_edge(eb, dest, i, Flush::Final);
+                    }
+                }
+            }
+            if !out.dirty() {
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}
+
+/// Process one delivered event: run the processor (or `on_shutdown` for
+/// the Shutdown marker), route its emissions, then acknowledge it.
+/// Emissions are routed BEFORE `processed` rises, or the quiescence
+/// check could observe a false fixpoint.
+#[allow(clippy::too_many_arguments)]
+fn handle_one(
+    proc_: &mut Box<dyn crate::topology::Processor>,
+    ctx: &mut Ctx,
+    router: &Router,
+    out: &mut OutBuffers,
+    busy_ns: &mut u64,
+    processed: &mut u64,
+    event: Event,
+) {
+    let is_shutdown = matches!(event, Event::Shutdown);
+    let t0 = Instant::now();
+    if is_shutdown {
+        proc_.on_shutdown(ctx);
+    } else {
+        proc_.process(event, ctx);
+    }
+    *busy_ns += t0.elapsed().as_nanos() as u64;
+    *processed += 1;
+    for (s, k, e) in ctx.take() {
+        router.route(out, s, k, e);
+    }
+    router.flow.processed.fetch_add(1, Ordering::SeqCst);
+}
+
+/// A processor instance as a stealable unit of work (stealing mode).
+struct Task {
+    pid: usize,
+    iid: usize,
+    proc_: Box<dyn crate::topology::Processor>,
+    drx: Receiver<Batch>,
+    crx: Receiver<CtrlMsg>,
+    ctx: Ctx,
+    out: OutBuffers,
+    busy_ns: u64,
+    processed: u64,
+    halted: bool,
+}
+
+/// Control events drained per quantum before data is considered.
+const CTRL_QUANTUM: usize = 32;
+/// Data batches drained per quantum before the worker moves on (keeps
+/// one hot task from starving the rest when workers < tasks).
+const DATA_QUANTUM: usize = 4;
+/// Inter-arrival gap beyond which the source is considered slow and its
+/// partial batches are flushed per event (latency mode).
+const SOURCE_IDLE: Duration = Duration::from_micros(200);
+
+/// Run one scheduling quantum of a task. Returns true if any work was
+/// done (flush progress, control events, or data batches).
+fn run_quantum(router: &Router, t: &mut Task) -> bool {
+    let mut did = router.flush_ready(&mut t.out) > 0;
+    for _ in 0..CTRL_QUANTUM {
+        match t.crx.try_recv() {
+            Ok(CtrlMsg::Halt) => {
+                router.flush_final(&mut t.out);
+                t.halted = true;
+                return true;
+            }
+            Ok(CtrlMsg::Event(e)) => {
+                handle_one(
+                    &mut t.proc_, &mut t.ctx, router, &mut t.out, &mut t.busy_ns,
+                    &mut t.processed, e,
+                );
+                did = true;
+            }
+            Err(_) => break,
+        }
+    }
+    // Backpressure: while an output edge is parked, do not consume our
+    // own input — upstream pressure then reaches our input channel.
+    if !t.out.congested() {
+        for _ in 0..DATA_QUANTUM {
+            match t.drx.try_recv() {
+                Ok(mut batch) => {
+                    let mb = &router.mailboxes[t.pid][t.iid];
+                    mb.depth.fetch_sub(batch.len() as i64, Ordering::SeqCst);
+                    for e in batch.drain(..) {
+                        handle_one(
+                            &mut t.proc_, &mut t.ctx, router, &mut t.out, &mut t.busy_ns,
+                            &mut t.processed, e,
+                        );
+                    }
+                    router.arena.put(batch);
+                    did = true;
+                    if t.out.congested() {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    router.flush_idle(&mut t.out);
+                    break;
+                }
+            }
+        }
+    }
+    did
 }
 
 impl ThreadedEngine {
-    pub fn new(queue_capacity: usize) -> Self {
-        ThreadedEngine { queue_capacity, ..Default::default() }
-    }
-
-    /// Set the data-plane micro-batch size (1 = per-event sends).
-    pub fn with_batch(mut self, batch_size: usize) -> Self {
-        self.batch_size = batch_size.max(1);
-        self
-    }
-
     /// Run the topology, injecting events from `source` on `entry`.
     /// `collect` receives each processor instance after shutdown for state
     /// extraction (same role as `on_drain` in the local engine, but only
@@ -194,19 +651,32 @@ impl ThreadedEngine {
         collect: impl FnMut(usize, usize, &dyn crate::topology::Processor),
     ) -> EngineMetrics {
         let shape: Vec<usize> = topology.processors.iter().map(|p| p.parallelism).collect();
+        let n_instances: usize = shape.iter().sum();
         let mut metrics = EngineMetrics::new(topology.streams.len(), &shape);
         let started = Instant::now();
+        let batch = self.batch_size.max(1);
 
         // Build mailboxes.
-        let mut receivers: Vec<Vec<(Receiver<Batch>, Receiver<Event>)>> = Vec::new();
+        let mut receivers: Vec<Vec<(Receiver<Batch>, Receiver<CtrlMsg>)>> = Vec::new();
         let mut mailboxes: Vec<Vec<Mailbox>> = Vec::new();
         for p in topology.processors.iter() {
             let mut mrow = Vec::new();
             let mut rrow = Vec::new();
             for _ in 0..p.parallelism {
-                let (dtx, drx) = sync_channel(self.queue_capacity);
+                let (dtx, drx) = if self.queue_capacity == usize::MAX {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    (DataTx::Unbounded(tx), rx)
+                } else {
+                    let (tx, rx) = sync_channel(self.queue_capacity);
+                    (DataTx::Bounded(tx), rx)
+                };
                 let (ctx_, crx) = std::sync::mpsc::channel();
-                mrow.push(Mailbox { data: dtx, ctrl: ctx_ });
+                mrow.push(Mailbox {
+                    data: dtx,
+                    ctrl: ctx_,
+                    depth: AtomicI64::new(0),
+                    peak: AtomicI64::new(0),
+                });
                 rrow.push((drx, crx));
             }
             mailboxes.push(mrow);
@@ -224,145 +694,210 @@ impl ThreadedEngine {
             stream_events: topology.streams.iter().map(|_| AtomicU64::new(0)).collect(),
             stream_bytes: topology.streams.iter().map(|_| AtomicU64::new(0)).collect(),
             flow: Flow { sent: AtomicU64::new(0), processed: AtomicU64::new(0) },
-            batch_size: self.batch_size.max(1),
+            stats: FlowStats {
+                batches: AtomicU64::new(0),
+                stalls: AtomicU64::new(0),
+                stall_ns: AtomicU64::new(0),
+                grows: AtomicU64::new(0),
+                shrinks: AtomicU64::new(0),
+                steals: AtomicU64::new(0),
+            },
+            arena: BatchArena::new(4 * n_instances + 32),
+            batch_cap: batch,
+            adaptive: self.adaptive_batch,
+            blocking: self.workers.is_none(),
             deep_copy_broadcast: self.deep_copy_broadcast,
         });
 
-        // Spawn worker threads.
+        // Spawn execution: pinned threads or a stealing worker pool.
         let done: Arc<Mutex<Vec<(usize, usize, Box<dyn crate::topology::Processor>, u64, u64)>>> =
             Arc::new(Mutex::new(Vec::new()));
         let mut handles = Vec::new();
-        for (pid, pdef) in topology.processors.iter().enumerate() {
-            for (iid, (drx, crx)) in receivers[pid].drain(..).enumerate().collect::<Vec<_>>() {
-                let mut proc_ = (pdef.factory)(iid);
-                let router = Arc::clone(&router);
-                let done = Arc::clone(&done);
-                let par = pdef.parallelism;
-                let shape = shape.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("{}-{}", pdef.name, iid))
-                    .spawn(move || {
-                        let mut busy_ns = 0u64;
-                        let mut processed = 0u64;
-                        let mut ctx = Ctx::new(iid, par);
-                        let mut out = OutBuffers::new(&shape);
+        let mut slots_arc: Option<Arc<Vec<Mutex<Task>>>> = None;
 
-                        /// Process one delivered event; returns true on
-                        /// Shutdown.
-                        fn handle_one(
-                            proc_: &mut Box<dyn crate::topology::Processor>,
-                            ctx: &mut Ctx,
-                            router: &Router,
-                            out: &mut OutBuffers,
-                            busy_ns: &mut u64,
-                            processed: &mut u64,
-                            event: Event,
-                        ) -> bool {
-                            let is_shutdown = matches!(event, Event::Shutdown);
-                            let t0 = Instant::now();
-                            if is_shutdown {
-                                proc_.on_shutdown(ctx);
-                            } else {
-                                proc_.process(event, ctx);
-                            }
-                            *busy_ns += t0.elapsed().as_nanos() as u64;
-                            *processed += 1;
-                            // Route emissions BEFORE acknowledging the event:
-                            // `sent` must rise before `processed` does, or the
-                            // quiescence check could observe a false fixpoint.
-                            for (s, k, e) in ctx.take() {
-                                router.route(out, s, k, e);
-                            }
-                            router.flow.processed.fetch_add(1, Ordering::SeqCst);
-                            is_shutdown
-                        }
+        match self.workers {
+            None => {
+                for (pid, pdef) in topology.processors.iter().enumerate() {
+                    let rrow: Vec<_> = receivers[pid].drain(..).enumerate().collect();
+                    for (iid, (drx, crx)) in rrow {
+                        let mut proc_ = (pdef.factory)(iid);
+                        let router = Arc::clone(&router);
+                        let done = Arc::clone(&done);
+                        let par = pdef.parallelism;
+                        let shape = shape.clone();
+                        let handle = std::thread::Builder::new()
+                            .name(format!("{}-{}", pdef.name, iid))
+                            .spawn(move || {
+                                let mut busy_ns = 0u64;
+                                let mut processed = 0u64;
+                                let mut ctx = Ctx::new(iid, par);
+                                let mut out = OutBuffers::new(&shape, router.batch_cap);
 
-                        'outer: loop {
-                            // Drain control channel with priority; data
-                            // arrives in batches.
-                            enum Work {
-                                Ctrl(Event),
-                                Data(Batch),
-                            }
-                            let work = loop {
-                                match crx.try_recv() {
-                                    Ok(d) => break Work::Ctrl(d),
-                                    Err(_) => {}
-                                }
-                                match drx.try_recv() {
-                                    Ok(b) => break Work::Data(b),
-                                    Err(TryRecvError::Empty) => {
-                                        // Input quiet: flush partial batches so
-                                        // downstream (and the quiescence check)
-                                        // never wait on our buffers, then block
-                                        // with a timeout so control stays
-                                        // responsive.
-                                        router.flush(&mut out);
-                                        let wait = std::time::Duration::from_micros(200);
-                                        match drx.recv_timeout(wait) {
+                                'outer: loop {
+                                    enum Work {
+                                        Ctrl(CtrlMsg),
+                                        Data(Batch),
+                                    }
+                                    let work = loop {
+                                        if let Ok(c) = crx.try_recv() {
+                                            break Work::Ctrl(c);
+                                        }
+                                        match drx.try_recv() {
                                             Ok(b) => break Work::Data(b),
-                                            Err(RecvTimeoutError::Timeout) => continue,
-                                            Err(RecvTimeoutError::Disconnected) => {
-                                                match crx.recv() {
-                                                    Ok(d) => break Work::Ctrl(d),
-                                                    Err(_) => break 'outer,
+                                            Err(TryRecvError::Empty) => {
+                                                // Input quiet: ship partial
+                                                // batches (shrinking adaptive
+                                                // edges), then block briefly so
+                                                // control stays responsive.
+                                                router.flush_idle(&mut out);
+                                                let wait = Duration::from_micros(200);
+                                                match drx.recv_timeout(wait) {
+                                                    Ok(b) => break Work::Data(b),
+                                                    Err(RecvTimeoutError::Timeout) => continue,
+                                                    Err(RecvTimeoutError::Disconnected) => {
+                                                        match crx.recv() {
+                                                            Ok(c) => break Work::Ctrl(c),
+                                                            Err(_) => break 'outer,
+                                                        }
+                                                    }
                                                 }
                                             }
+                                            Err(TryRecvError::Disconnected) => match crx.recv() {
+                                                Ok(c) => break Work::Ctrl(c),
+                                                Err(_) => break 'outer,
+                                            },
+                                        }
+                                    };
+                                    match work {
+                                        Work::Ctrl(CtrlMsg::Halt) => break 'outer,
+                                        Work::Ctrl(CtrlMsg::Event(e)) => {
+                                            handle_one(
+                                                &mut proc_, &mut ctx, &router, &mut out,
+                                                &mut busy_ns, &mut processed, e,
+                                            );
+                                        }
+                                        Work::Data(mut batch) => {
+                                            let mb = &router.mailboxes[pid][iid];
+                                            mb.depth
+                                                .fetch_sub(batch.len() as i64, Ordering::SeqCst);
+                                            for e in batch.drain(..) {
+                                                handle_one(
+                                                    &mut proc_, &mut ctx, &router, &mut out,
+                                                    &mut busy_ns, &mut processed, e,
+                                                );
+                                            }
+                                            router.arena.put(batch);
                                         }
                                     }
-                                    Err(TryRecvError::Disconnected) => match crx.recv() {
-                                        Ok(d) => break Work::Ctrl(d),
-                                        Err(_) => break 'outer,
-                                    },
                                 }
-                            };
-                            match work {
-                                Work::Ctrl(d) => {
-                                    if handle_one(
-                                        &mut proc_, &mut ctx, &router, &mut out,
-                                        &mut busy_ns, &mut processed, d,
-                                    ) {
-                                        router.flush(&mut out);
-                                        break 'outer;
+                                router.flush_final(&mut out);
+                                done.lock().unwrap().push((pid, iid, proc_, busy_ns, processed));
+                            })
+                            .unwrap();
+                        handles.push(handle);
+                    }
+                }
+            }
+            Some(n_workers) => {
+                let mut tasks = Vec::with_capacity(n_instances);
+                for (pid, pdef) in topology.processors.iter().enumerate() {
+                    let rrow: Vec<_> = receivers[pid].drain(..).enumerate().collect();
+                    for (iid, (drx, crx)) in rrow {
+                        tasks.push(Mutex::new(Task {
+                            pid,
+                            iid,
+                            proc_: (pdef.factory)(iid),
+                            drx,
+                            crx,
+                            ctx: Ctx::new(iid, pdef.parallelism),
+                            out: OutBuffers::new(&shape, batch),
+                            busy_ns: 0,
+                            processed: 0,
+                            halted: false,
+                        }));
+                    }
+                }
+                let slots = Arc::new(tasks);
+                let halted = Arc::new(AtomicUsize::new(0));
+                let n_tasks = slots.len();
+                for w in 0..n_workers.min(n_tasks.max(1)) {
+                    let slots = Arc::clone(&slots);
+                    let halted = Arc::clone(&halted);
+                    let router = Arc::clone(&router);
+                    let handle = std::thread::Builder::new()
+                        .name(format!("steal-w{w}"))
+                        .spawn(move || {
+                            let n_workers = n_workers.max(1);
+                            loop {
+                                let mut progress = false;
+                                for k in 0..n_tasks {
+                                    let idx = (w + k) % n_tasks;
+                                    let Ok(mut t) = slots[idx].try_lock() else { continue };
+                                    if t.halted {
+                                        continue;
                                     }
+                                    let did = run_quantum(&router, &mut t);
+                                    if did && idx % n_workers != w {
+                                        router.stats.steals.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    if t.halted {
+                                        halted.fetch_add(1, Ordering::SeqCst);
+                                    }
+                                    progress |= did;
                                 }
-                                Work::Data(batch) => {
-                                    for d in batch {
-                                        if handle_one(
-                                            &mut proc_, &mut ctx, &router, &mut out,
-                                            &mut busy_ns, &mut processed, d,
-                                        ) {
-                                            router.flush(&mut out);
-                                            break 'outer;
-                                        }
-                                    }
+                                if halted.load(Ordering::SeqCst) == n_tasks {
+                                    break;
+                                }
+                                if !progress {
+                                    std::thread::sleep(Duration::from_micros(100));
                                 }
                             }
-                        }
-                        router.flush(&mut out);
-                        done.lock().unwrap().push((pid, iid, proc_, busy_ns, processed));
-                    })
-                    .unwrap();
-                handles.push(handle);
+                        })
+                        .unwrap();
+                    handles.push(handle);
+                }
+                slots_arc = Some(slots);
             }
         }
 
         // Pump the source from this thread (with its own batch buffers).
-        let mut src_out = OutBuffers::new(&shape);
-        for event in source {
+        // Under adaptive batching a slow source (inter-arrival gap beyond
+        // SOURCE_IDLE) gets its events flushed immediately — latency
+        // mode; fixed batching keeps the strict size-based flushes of
+        // the PR-3 plane (partial source buffers ship only at exhaustion).
+        let mut src_out = OutBuffers::new(&shape, batch);
+        let mut source = source;
+        loop {
+            // Time only the iterator's own `next()`: the gap must not
+            // include route()'s backpressure stalls, or sustained
+            // downstream overload would be misclassified as a trickle
+            // source and shrink batches exactly when batching matters.
+            let t_next = Instant::now();
+            let Some(event) = source.next() else { break };
+            let slow = t_next.elapsed() > SOURCE_IDLE;
             metrics.source_instances += 1;
             router.route(&mut src_out, entry, metrics.source_instances, event);
+            if slow && self.adaptive_batch {
+                router.flush_idle(&mut src_out);
+            }
+            // stealing mode: parked batches are the source's backpressure
+            while src_out.congested() {
+                router.flush_ready(&mut src_out);
+                if src_out.congested() {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
         }
-        router.flush(&mut src_out);
+        router.flush_final(&mut src_out);
 
         // Wait for quiescence: sent == processed, stable across two polls.
         // `sent` includes buffered events, so this can only fire once every
         // batch buffer in the system has drained.
-        loop {
+        let quiesce = || loop {
             let s1 = router.flow.sent.load(Ordering::SeqCst);
             let p1 = router.flow.processed.load(Ordering::SeqCst);
             if s1 == p1 {
-                std::thread::sleep(std::time::Duration::from_millis(2));
+                std::thread::sleep(Duration::from_millis(2));
                 let s2 = router.flow.sent.load(Ordering::SeqCst);
                 let p2 = router.flow.processed.load(Ordering::SeqCst);
                 if s2 == p2 && s2 == s1 {
@@ -371,12 +906,27 @@ impl ThreadedEngine {
             } else {
                 std::thread::yield_now();
             }
-        }
+        };
+        quiesce();
 
-        // Broadcast shutdown (control plane, unbatched) and join.
+        // Staged shutdown in processor-id order (the local engine's
+        // sequence): each stage's on_shutdown emissions fully drain —
+        // through bounded channels and all — before the next stage runs,
+        // so no shutdown emission can meet an exited consumer.
         for row in router.mailboxes.iter() {
             for mb in row.iter() {
-                let _ = mb.ctrl.send(Event::Shutdown);
+                router.flow.sent.fetch_add(1, Ordering::SeqCst);
+                if mb.ctrl.send(CtrlMsg::Event(Event::Shutdown)).is_err() {
+                    router.flow.processed.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            quiesce();
+        }
+
+        // Global post-shutdown quiescence reached: workers may now exit.
+        for row in router.mailboxes.iter() {
+            for mb in row.iter() {
+                let _ = mb.ctrl.send(CtrlMsg::Halt);
             }
         }
         for h in handles {
@@ -388,11 +938,41 @@ impl ThreadedEngine {
             metrics.streams[i].events = router.stream_events[i].load(Ordering::Relaxed);
             metrics.streams[i].bytes = router.stream_bytes[i].load(Ordering::Relaxed);
         }
+        for (pid, row) in router.mailboxes.iter().enumerate() {
+            for (iid, mb) in row.iter().enumerate() {
+                metrics.per_instance[pid][iid].peak_queue_events =
+                    mb.peak.load(Ordering::Relaxed).max(0) as u64;
+            }
+        }
+        metrics.flow = FlowControlMetrics {
+            batches_sent: router.stats.batches.load(Ordering::Relaxed),
+            backpressure_stalls: router.stats.stalls.load(Ordering::Relaxed),
+            backpressure_stall_ns: router.stats.stall_ns.load(Ordering::Relaxed),
+            batch_grows: router.stats.grows.load(Ordering::Relaxed),
+            batch_shrinks: router.stats.shrinks.load(Ordering::Relaxed),
+            steals: router.stats.steals.load(Ordering::Relaxed),
+            arena_reuses: router.arena.reuses(),
+            arena_allocs: router.arena.allocations(),
+        };
         let mut collect = collect;
-        for (pid, iid, proc_, busy, processed) in done.lock().unwrap().iter() {
-            metrics.per_instance[*pid][*iid].busy_ns = *busy;
-            metrics.per_instance[*pid][*iid].events_processed = *processed;
-            collect(*pid, *iid, proc_.as_ref());
+        match slots_arc {
+            Some(slots) => {
+                let slots = Arc::try_unwrap(slots)
+                    .unwrap_or_else(|_| panic!("worker kept a task slot alive"));
+                for slot in slots {
+                    let t = slot.into_inner().unwrap();
+                    metrics.per_instance[t.pid][t.iid].busy_ns = t.busy_ns;
+                    metrics.per_instance[t.pid][t.iid].events_processed = t.processed;
+                    collect(t.pid, t.iid, t.proc_.as_ref());
+                }
+            }
+            None => {
+                for (pid, iid, proc_, busy, processed) in done.lock().unwrap().iter() {
+                    metrics.per_instance[*pid][*iid].busy_ns = *busy;
+                    metrics.per_instance[*pid][*iid].events_processed = *processed;
+                    collect(*pid, *iid, proc_.as_ref());
+                }
+            }
         }
         metrics.wall_ns = started.elapsed().as_nanos() as u64;
         metrics
@@ -431,9 +1011,12 @@ mod tests {
         assert_eq!(TOTAL.load(Ordering::SeqCst), 1000);
         assert_eq!(m.source_instances, 1000);
         assert_eq!(m.streams[0].events, 1000);
+        // events moved in batches, and steady state reuses buffers
+        assert!(m.flow.batches_sent > 0);
+        assert!(m.flow.arena_reuses + m.flow.arena_allocs > 0);
     }
 
-    /// Conservation must hold at every batch size, including the
+    /// Conservation must hold at every fixed batch size, including the
     /// unbatched (`1`) and larger-than-stream (`4096`) extremes. Uses a
     /// per-test counter (not the shared TOTAL static) so it cannot race
     /// with `all_events_processed_across_threads` under parallel `cargo
@@ -459,6 +1042,75 @@ mod tests {
             assert_eq!(count.load(Ordering::SeqCst), 777, "batch={batch}");
             assert_eq!(m.streams[0].events, 777, "batch={batch}");
         }
+    }
+
+    /// Work-stealing mode: conservation and full state collection with
+    /// fewer workers than instances, and with more workers than tasks.
+    #[test]
+    fn steal_mode_conserves_and_collects() {
+        for workers in [1usize, 2, 8] {
+            let count = Arc::new(AtomicUsize::new(0));
+            let count2 = Arc::clone(&count);
+            struct CountInto(Arc<AtomicUsize>);
+            impl Processor for CountInto {
+                fn process(&mut self, _e: Event, _c: &mut Ctx) {
+                    self.0.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            let mut b = TopologyBuilder::new("t");
+            let a = b.add_processor("w", 5, move |_| Box::new(CountInto(Arc::clone(&count2))));
+            let entry = b.stream("src", None, a, Grouping::Shuffle);
+            let topo = b.build();
+            let mut collected = 0;
+            let m = ThreadedEngine::default().with_workers(workers).run(
+                &topo,
+                entry,
+                (0..900).map(inst_event),
+                |_, _, _| collected += 1,
+            );
+            assert_eq!(count.load(Ordering::SeqCst), 900, "workers={workers}");
+            assert_eq!(m.streams[0].events, 900, "workers={workers}");
+            assert_eq!(collected, 5, "workers={workers}");
+            let processed: u64 =
+                m.per_instance[0].iter().map(|i| i.events_processed).sum();
+            // 900 data events + 5 shutdown markers
+            assert_eq!(processed, 905, "workers={workers}");
+        }
+    }
+
+    /// Bounded channels bound the resident queue: a slow consumer behind
+    /// a tiny channel keeps peak depth near capacity × batch while the
+    /// producer stalls, and nothing is lost.
+    #[test]
+    fn bounded_queue_bounds_depth_and_stalls() {
+        struct SlowCount(Arc<AtomicUsize>);
+        impl Processor for SlowCount {
+            fn process(&mut self, _e: Event, _c: &mut Ctx) {
+                std::thread::sleep(Duration::from_micros(50));
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let count = Arc::new(AtomicUsize::new(0));
+        let count2 = Arc::clone(&count);
+        let mut b = TopologyBuilder::new("t");
+        let a = b.add_processor("slow", 1, move |_| Box::new(SlowCount(Arc::clone(&count2))));
+        let entry = b.stream("src", None, a, Grouping::Shuffle);
+        let topo = b.build();
+        let (capacity, batch) = (2usize, 4usize);
+        let m = ThreadedEngine::new(capacity)
+            .with_batch(batch)
+            .run(&topo, entry, (0..600).map(inst_event), |_, _, _| {});
+        assert_eq!(count.load(Ordering::SeqCst), 600);
+        // resident bound: `capacity` batches in the channel plus one
+        // received-but-not-yet-decremented batch at the consumer (one
+        // extra batch of slack kept for safety)
+        let bound = ((capacity + 2) * batch) as u64;
+        assert!(
+            m.max_peak_queue_events() <= bound,
+            "peak {} exceeds bound {bound}",
+            m.max_peak_queue_events()
+        );
+        assert!(m.flow.backpressure_stalls > 0, "tiny queue never stalled");
     }
 
     #[test]
@@ -517,10 +1169,37 @@ mod tests {
         b.stream("a->c", Some(a), c, Grouping::Shuffle);
         b.stream("c->a", Some(c), a, Grouping::Shuffle);
         let topo = b.build();
-        // a forwards Instance as Instance (data), c never generates more
+        // a forwards Instance as Attribute (data), c never generates more
         // data, so the loop closes only via control events.
         let eng = ThreadedEngine::new(2);
         let m = eng.run(&topo, entry, (0..500).map(inst_event), |_, _, _| {});
         assert_eq!(m.source_instances, 500);
+    }
+
+    /// Adaptive batching reacts to a slow source: partial buffers are
+    /// flushed on idle and the per-edge batch size shrinks toward 1 (the
+    /// latency mode), without a single backpressure stall.
+    #[test]
+    fn adaptive_batch_shrinks_on_trickle() {
+        struct CountInto(Arc<AtomicUsize>);
+        impl Processor for CountInto {
+            fn process(&mut self, _e: Event, _c: &mut Ctx) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let count = Arc::new(AtomicUsize::new(0));
+        let count2 = Arc::clone(&count);
+        let mut b = TopologyBuilder::new("t");
+        let a = b.add_processor("w", 1, move |_| Box::new(CountInto(Arc::clone(&count2))));
+        let entry = b.stream("src", None, a, Grouping::Shuffle);
+        let topo = b.build();
+        let trickle = (0..40u64).map(|id| {
+            std::thread::sleep(Duration::from_millis(1));
+            inst_event(id)
+        });
+        let m = ThreadedEngine::default().run(&topo, entry, trickle, |_, _, _| {});
+        assert_eq!(count.load(Ordering::SeqCst), 40);
+        assert!(m.flow.batch_shrinks > 0, "trickle never shrank the batch: {:?}", m.flow);
+        assert_eq!(m.flow.backpressure_stalls, 0);
     }
 }

@@ -20,7 +20,7 @@ fn limit(args: &Args) -> u64 {
 }
 
 /// Table 5: rules/features statistics of sequential AMRules (MAMR).
-pub fn table5(args: &Args) -> anyhow::Result<()> {
+pub fn table5(args: &Args) -> crate::Result<()> {
     let n = limit(args);
     let mut rows = Vec::new();
     for ds in DATASETS {
@@ -60,7 +60,7 @@ pub fn table5(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Table 6: memory consumption of MAMR.
-pub fn table6(args: &Args) -> anyhow::Result<()> {
+pub fn table6(args: &Args) -> crate::Result<()> {
     let n = limit(args);
     let mut rows = Vec::new();
     for ds in DATASETS {
@@ -86,7 +86,7 @@ pub fn table6(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Table 7: memory of VAMR's aggregator and learners by parallelism.
-pub fn table7(args: &Args) -> anyhow::Result<()> {
+pub fn table7(args: &Args) -> crate::Result<()> {
     let n = limit(args);
     let ps = args.usize_list("p", &[1, 2, 4, 8]);
     let mut rows = Vec::new();
@@ -202,7 +202,7 @@ fn run_distributed(
 }
 
 /// Fig 12: throughput of MAMR / VAMR / HAMR-1 / HAMR-2 by parallelism.
-pub fn fig12(args: &Args) -> anyhow::Result<()> {
+pub fn fig12(args: &Args) -> crate::Result<()> {
     let n = args.u64("instances", 40_000);
     let pipeline = super::validated_pipeline(args)?;
     let ps = args.usize_list("p", &[1, 2, 4, 8]);
@@ -234,7 +234,7 @@ pub fn fig12(args: &Args) -> anyhow::Result<()> {
 
 /// Fig 13: max HAMR throughput vs result-message size, with the
 /// single-partition reference line from the simtime cost model.
-pub fn fig13(args: &Args) -> anyhow::Result<()> {
+pub fn fig13(args: &Args) -> crate::Result<()> {
     let n = args.u64("instances", 30_000);
     let pipeline = super::validated_pipeline(args)?;
     let cost = crate::engine::SimCostModel::default();
@@ -268,7 +268,7 @@ pub fn fig13(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Figs 14-16: normalized MAE/RMSE of MAMR / VAMR / HAMR per dataset.
-pub fn fig14_16(args: &Args) -> anyhow::Result<()> {
+pub fn fig14_16(args: &Args) -> crate::Result<()> {
     let n = args.u64("instances", 60_000);
     let pipeline = super::validated_pipeline(args)?;
     let ps = args.usize_list("p", &[1, 2, 4, 8]);

@@ -1,0 +1,160 @@
+//! `samoa exp flowcontrol` — the elastic-data-plane study: sweep
+//! channel **capacity × batch policy × scheduler** on the threaded
+//! engine under a compute-bound stage and report wall throughput next
+//! to the flow-control counters (`EngineMetrics::flow`): backpressure
+//! stalls and stall time, peak resident queue depth, adaptive
+//! grow/shrink steps, work steals, and arena hit rate.
+//!
+//! What the table shows:
+//!
+//! * **bounded vs unbounded** — unbounded queues absorb the source
+//!   burst into memory (peak queue ≈ input size / p); bounded queues
+//!   pin the peak near `capacity × batch` and convert the excess into
+//!   producer stalls, at (near) identical throughput: loss-free
+//!   elasticity instead of unbounded growth;
+//! * **adaptive vs fixed batching** — identical at full rate (the
+//!   adaptive edge sits at the cap), while `--trickle` shows the
+//!   latency side: adaptive shrinks to per-event sends when idle;
+//! * **pinned vs work-stealing** — `p` shards on fewer workers, idle
+//!   workers draining hot shards (`steals` column).
+
+use std::time::Instant;
+
+use crate::common::cli::Args;
+use crate::engine::ThreadedEngine;
+use crate::streams::waveform::WaveformGenerator;
+use crate::streams::StreamSource;
+use crate::topology::{Ctx, Event, Grouping, Processor, TopologyBuilder};
+
+use super::print_table;
+
+/// Deterministic per-event compute (learner stand-in) — shared with the
+/// `engine_throughput` flow-control bench so both measure the same load.
+pub struct Burn(pub u64);
+impl Processor for Burn {
+    fn process(&mut self, _e: Event, _c: &mut Ctx) {
+        let mut x = 0u64;
+        for i in 0..self.0 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(x);
+    }
+}
+
+struct FlowOutcome {
+    throughput: f64,
+    stalls: u64,
+    stall_ms: f64,
+    peak_queue: u64,
+    grows: u64,
+    shrinks: u64,
+    steals: u64,
+    arena_hit: f64,
+}
+
+fn run_one(
+    capacity: usize,
+    adaptive: bool,
+    batch: usize,
+    workers: Option<usize>,
+    p: usize,
+    n: u64,
+    spin: u64,
+) -> FlowOutcome {
+    let mut b = TopologyBuilder::new("flowcontrol");
+    let w = b.add_processor("burn", p, move |_| Box::new(Burn(spin)));
+    let entry = b.stream("in", None, w, Grouping::Key);
+    let topo = b.build();
+
+    let mut eng = if capacity == usize::MAX {
+        ThreadedEngine::default().unbounded()
+    } else {
+        ThreadedEngine::new(capacity)
+    };
+    eng = if adaptive { eng.with_adaptive_batch(batch) } else { eng.with_batch(batch) };
+    if let Some(nw) = workers {
+        eng = eng.with_workers(nw);
+    }
+
+    let mut stream = WaveformGenerator::classification(7);
+    let source =
+        (0..n).map_while(move |id| stream.next_instance().map(|inst| Event::Instance { id, inst }));
+    let t0 = Instant::now();
+    let m = eng.run(&topo, entry, source, |_, _, _| {});
+    let wall = t0.elapsed().as_secs_f64().max(1e-12);
+    let arena_total = m.flow.arena_reuses + m.flow.arena_allocs;
+    FlowOutcome {
+        throughput: m.source_instances as f64 / wall,
+        stalls: m.flow.backpressure_stalls,
+        stall_ms: m.flow.backpressure_stall_ns as f64 / 1e6,
+        peak_queue: m.max_peak_queue_events(),
+        grows: m.flow.batch_grows,
+        shrinks: m.flow.batch_shrinks,
+        steals: m.flow.steals,
+        arena_hit: m.flow.arena_reuses as f64 / arena_total.max(1) as f64,
+    }
+}
+
+/// `samoa exp flowcontrol [--instances 60000 --p 4 --spin 2000
+/// --capacity 4,64,1024,0 --batch 32 --workers 0,2]`
+/// (`--capacity 0` = unbounded; `--workers 0` = pinned)
+pub fn flowcontrol(args: &Args) -> crate::Result<()> {
+    let n = args.u64("instances", 60_000);
+    let p = args.usize("p", 4);
+    let spin = args.u64("spin", 2_000);
+    let batch = args.usize("batch", 32);
+    let capacities = args.usize_list("capacity", &[4, 64, 1024, 0]);
+    let worker_opts = args.usize_list("workers", &[0, 2]);
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for &cap_raw in &capacities {
+        let capacity = if cap_raw == 0 { usize::MAX } else { cap_raw };
+        let cap_label =
+            if cap_raw == 0 { "unbounded".to_string() } else { format!("{cap_raw}") };
+        for &w_raw in &worker_opts {
+            let workers = if w_raw == 0 { None } else { Some(w_raw) };
+            let w_label = workers.map_or("pinned".into(), |w: usize| format!("steal:{w}"));
+            for adaptive in [false, true] {
+                let r = run_one(capacity, adaptive, batch, workers, p, n, spin);
+                rows.push(vec![
+                    format!(
+                        "cap={cap_label} {} {w_label}",
+                        if adaptive { "adaptive" } else { "fixed" }
+                    ),
+                    format!("{:.0}", r.throughput),
+                    r.stalls.to_string(),
+                    format!("{:.1}", r.stall_ms),
+                    r.peak_queue.to_string(),
+                    format!("{}/{}", r.grows, r.shrinks),
+                    r.steals.to_string(),
+                    format!("{:.0}%", r.arena_hit * 100.0),
+                ]);
+            }
+        }
+    }
+
+    print_table(
+        &format!(
+            "flowcontrol: capacity × batch policy × scheduler | waveform-cls n={n} \
+             p={p} spin={spin} batch={batch}"
+        ),
+        &[
+            "configuration",
+            "inst/s",
+            "stalls",
+            "stall ms",
+            "peak queue (ev)",
+            "grow/shrink",
+            "steals",
+            "arena hit",
+        ],
+        &rows,
+    );
+    println!(
+        "\nnote: bounded rows pin 'peak queue' near capacity × batch and convert the \
+         excess into producer stalls (loss-free backpressure); the unbounded row's peak \
+         grows with the input instead. 'steals' counts task quanta run by a non-home \
+         worker — the work-stealing scheduler keeping p shards busy on fewer cores."
+    );
+    Ok(())
+}

@@ -13,11 +13,12 @@ pub mod vht_exps;
 pub mod amrules_exps;
 pub mod preprocess_exps;
 pub mod sync_cost;
+pub mod flowcontrol;
 
 use crate::common::cli::Args;
 
 /// Dispatch an experiment by id.
-pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
+pub fn run(id: &str, args: &Args) -> crate::Result<()> {
     match id {
         "fig3" => vht_exps::fig3(args),
         "fig4" => vht_exps::fig4_5(args, false),
@@ -36,6 +37,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
         "fig14" | "fig15" | "fig16" => amrules_exps::fig14_16(args),
         "preprocess" => preprocess_exps::preprocess(args),
         "sync-cost" => sync_cost::sync_cost(args),
+        "flowcontrol" => flowcontrol::flowcontrol(args),
         "all" => {
             for e in ALL {
                 println!("\n================ {e} ================");
@@ -43,14 +45,14 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
             }
             Ok(())
         }
-        other => anyhow::bail!("unknown experiment '{other}'; available: {ALL:?} / all"),
+        other => crate::bail!("unknown experiment '{other}'; available: {ALL:?} / all"),
     }
 }
 
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table3", "table4", "table5",
-    "table6", "table7", "fig12", "fig13", "fig14", "preprocess", "sync-cost",
+    "table6", "table7", "fig12", "fig13", "fig14", "preprocess", "sync-cost", "flowcontrol",
 ];
 
 /// Markdown-ish table printer.
@@ -66,7 +68,7 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
 /// Parse-check `--pipeline` once (clean CLI error up front) and hand the
 /// spec back for per-run wrapping via [`maybe_pipeline`], whose `expect`
 /// is then unreachable. Shared by the VHT and AMRules harnesses.
-pub fn validated_pipeline(args: &Args) -> anyhow::Result<Option<&str>> {
+pub fn validated_pipeline(args: &Args) -> crate::Result<Option<&str>> {
     if let Some(spec) = args.get("pipeline") {
         crate::preprocess::parse_pipeline(spec)?;
     }
@@ -79,7 +81,7 @@ pub fn validated_pipeline(args: &Args) -> anyhow::Result<Option<&str>> {
 pub fn maybe_pipeline(
     stream: Box<dyn crate::streams::StreamSource>,
     spec: Option<&str>,
-) -> anyhow::Result<Box<dyn crate::streams::StreamSource>> {
+) -> crate::Result<Box<dyn crate::streams::StreamSource>> {
     match spec {
         Some(spec) => Ok(Box::new(crate::preprocess::TransformedStream::new(
             stream,

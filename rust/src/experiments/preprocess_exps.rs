@@ -93,7 +93,7 @@ fn run_topology(
 
 /// `samoa exp preprocess [--stream waveform-cls --pipeline scale,discretize:8
 /// --instances 20000 --p 1,2,4 --sync 256 --learner ht|amrules --seed 42]`
-pub fn preprocess(args: &Args) -> anyhow::Result<()> {
+pub fn preprocess(args: &Args) -> crate::Result<()> {
     let regression = args.get_or("learner", "ht") == "amrules";
     let stream_name =
         args.get_or("stream", if regression { "waveform" } else { "waveform-cls" });

@@ -122,7 +122,7 @@ fn run_one(
 /// `samoa exp sync-cost [--instances 12000 --p 4 --drift-every 0,2000
 /// --drift-mag 4 --sync 64,256 --staleness 256,1024 --delta 0.002
 /// --seed 42]`
-pub fn sync_cost(args: &Args) -> anyhow::Result<()> {
+pub fn sync_cost(args: &Args) -> crate::Result<()> {
     let n = args.u64("instances", 12_000);
     let p = args.usize("p", 4).max(2);
     let seed = args.u64("seed", 42);

@@ -47,7 +47,7 @@ fn seeds(args: &Args) -> u64 {
 }
 
 /// Fig 3: VHT local vs MOA — accuracy and execution time, dense + sparse.
-pub fn fig3(args: &Args) -> anyhow::Result<()> {
+pub fn fig3(args: &Args) -> crate::Result<()> {
     let n = args.u64("instances", 100_000);
     let mut rows = Vec::new();
     for &cfg in &dense_configs(args) {
@@ -118,7 +118,7 @@ fn fig45_variants(args: &Args) -> Vec<Variant> {
 }
 
 /// Figs 4 (dense) / 5 (sparse): accuracy of local/wok/wk(z)/sharding.
-pub fn fig4_5(args: &Args, sparse: bool) -> anyhow::Result<()> {
+pub fn fig4_5(args: &Args, sparse: bool) -> crate::Result<()> {
     let n = args.u64("instances", 60_000);
     let delay = args.usize("delay", 100);
     let mut rows = Vec::new();
@@ -167,7 +167,7 @@ pub fn fig4_5(args: &Args, sparse: bool) -> anyhow::Result<()> {
 }
 
 /// Figs 6 (dense) / 7 (sparse): accuracy evolution over the stream.
-pub fn fig6_7(args: &Args, sparse: bool) -> anyhow::Result<()> {
+pub fn fig6_7(args: &Args, sparse: bool) -> crate::Result<()> {
     let n = args.u64("instances", 100_000);
     let delay = args.usize("delay", 100);
     let p = args.usize("p", 4);
@@ -219,7 +219,7 @@ pub fn fig6_7(args: &Args, sparse: bool) -> anyhow::Result<()> {
 /// "MOA" is ~1-2 orders faster than Java MOA, so cross-software ratios —
 /// also printed — are not the reproduction target; the *scaling shape*
 /// is).
-pub fn fig8_9(args: &Args, sparse: bool) -> anyhow::Result<()> {
+pub fn fig8_9(args: &Args, sparse: bool) -> crate::Result<()> {
     use crate::classifiers::vht::{self, SplitBuffering, VhtConfig};
     use crate::engine::{SimCostModel, SimTimeEngine};
     use crate::evaluation::prequential::{EvalSink, EvaluatorProcessor};
@@ -237,6 +237,7 @@ pub fn fig8_9(args: &Args, sparse: bool) -> anyhow::Result<()> {
         c_msg_ns: args.f64("cmsg", 2_000.0),
         c_byte_ns: args.f64("cbyte", 2.0),
         tx_frac: args.f64("txfrac", 0.25),
+        ..SimCostModel::default()
     };
 
     let mut rows = Vec::new();
@@ -310,7 +311,7 @@ pub fn fig8_9(args: &Args, sparse: bool) -> anyhow::Result<()> {
 }
 
 /// Tables 3 (accuracy) / 4 (time): real-world datasets.
-pub fn table3_4(args: &Args, accuracy: bool) -> anyhow::Result<()> {
+pub fn table3_4(args: &Args, accuracy: bool) -> crate::Result<()> {
     let delay = args.usize("delay", 100);
     let datasets = ["elec", "phy", "covtype"];
     let n_cap = args.u64("instances", 100_000); // covtype twin capped by default

@@ -38,5 +38,8 @@ pub mod evaluation;
 pub mod runtime;
 pub mod experiments;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result type (see [`common::error`] — the in-tree `anyhow`
+/// replacement, so the crate has zero external dependencies).
+pub type Result<T> = common::error::Result<T>;
+
+pub use common::error::{Context, Error};

@@ -47,6 +47,11 @@ fn main() {
                  --sync 64,256 --staleness 256,1024 --delta 0.002 (policy × interval × \
                  drift-rate sweep under the simtime cost model)"
             );
+            println!(
+                "exp flowcontrol knobs: --p 4 --spin 2000 --capacity 4,64,1024,0 \
+                 --batch 32 --workers 0,2 (threaded-engine capacity × batch policy × \
+                 scheduler sweep; 0 = unbounded / pinned)"
+            );
             Ok(())
         }
         "backend" => {
@@ -93,7 +98,7 @@ fn make_stream(name: &str, seed: u64, sparse_dim: u32) -> Box<dyn samoa::streams
     }
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> samoa::Result<()> {
     let learner = args.get_or("learner", "vht");
     let stream_name = args.get_or("stream", "random-tree");
     let seed = args.u64("seed", 42);
@@ -193,7 +198,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             // via `samoa exp`; `run` uses the topology on the local engine
             return run_vht_task(args, stream.as_mut(), p, sparse, n);
         }
-        other => anyhow::bail!("unknown learner {other}"),
+        other => samoa::bail!("unknown learner {other}"),
     };
     let r = prequential_run(model.as_mut(), stream.as_mut(), &config);
     println!(
@@ -213,7 +218,7 @@ fn run_vht_task(
     p: usize,
     sparse: bool,
     n: u64,
-) -> anyhow::Result<()> {
+) -> samoa::Result<()> {
     use samoa::classifiers::vht::{build_topology, SplitBuffering, VhtConfig};
     use samoa::engine::{LocalEngine, ThreadedEngine};
     use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};

@@ -192,18 +192,18 @@ impl<S: StreamSource> StreamSource for TransformedStream<S> {
 /// Parse a comma-separated pipeline spec into a [`Pipeline`]:
 /// `hash:64,scale,minmax,discretize:8,topk:32`. Numeric suffixes are
 /// optional and fall back to per-operator defaults.
-pub fn parse_pipeline(spec: &str) -> anyhow::Result<Pipeline> {
+pub fn parse_pipeline(spec: &str) -> crate::Result<Pipeline> {
     let mut pipeline = Pipeline::new();
     for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
         let (op, arg) = match tok.split_once(':') {
             Some((op, arg)) => (op, Some(arg)),
             None => (tok, None),
         };
-        let num = |default: usize| -> anyhow::Result<usize> {
+        let num = |default: usize| -> crate::Result<usize> {
             match arg {
                 Some(a) => a
                     .parse::<usize>()
-                    .map_err(|_| anyhow::anyhow!("bad argument '{a}' in pipeline token '{tok}'")),
+                    .map_err(|_| crate::anyhow!("bad argument '{a}' in pipeline token '{tok}'")),
                 None => Ok(default),
             }
         };
@@ -215,25 +215,25 @@ pub fn parse_pipeline(spec: &str) -> anyhow::Result<Pipeline> {
             "discretize" | "bins" => {
                 let k = num(8)?;
                 if k < 2 {
-                    anyhow::bail!("discretize needs at least 2 bins (got {k})");
+                    crate::bail!("discretize needs at least 2 bins (got {k})");
                 }
                 pipeline.then(Discretizer::new(k as u32))
             }
             "hash" => {
                 let d = num(64)?;
                 if d < 1 {
-                    anyhow::bail!("hash needs a dimension >= 1");
+                    crate::bail!("hash needs a dimension >= 1");
                 }
                 pipeline.then(FeatureHasher::new(d as u32))
             }
             "topk" => {
                 let k = num(32)?;
                 if k < 1 {
-                    anyhow::bail!("topk needs k >= 1");
+                    crate::bail!("topk needs k >= 1");
                 }
                 pipeline.then(TopKFilter::new(k))
             }
-            other => anyhow::bail!(
+            other => crate::bail!(
                 "unknown pipeline operator '{other}' (known: hash:D scale minmax discretize:K topk:K)"
             ),
         };

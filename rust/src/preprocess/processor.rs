@@ -72,22 +72,22 @@ impl Default for SyncPolicy {
 impl SyncPolicy {
     /// Parse a CLI spec: a bare number is `Count(n)` (`0` = `None`, sync
     /// off), `drift[:staleness[:delta]]`, `hybrid[:interval[:delta]]`.
-    pub fn parse(spec: &str) -> anyhow::Result<Option<SyncPolicy>> {
+    pub fn parse(spec: &str) -> crate::Result<Option<SyncPolicy>> {
         let mut parts = spec.split(':');
         let head = parts.next().unwrap_or("");
-        let num = |s: Option<&str>, default: u64| -> anyhow::Result<u64> {
+        let num = |s: Option<&str>, default: u64| -> crate::Result<u64> {
             match s {
                 Some(v) => v
                     .parse::<u64>()
-                    .map_err(|_| anyhow::anyhow!("bad number '{v}' in sync spec '{spec}'")),
+                    .map_err(|_| crate::anyhow!("bad number '{v}' in sync spec '{spec}'")),
                 None => Ok(default),
             }
         };
-        let fnum = |s: Option<&str>, default: f64| -> anyhow::Result<f64> {
+        let fnum = |s: Option<&str>, default: f64| -> crate::Result<f64> {
             match s {
                 Some(v) => v
                     .parse::<f64>()
-                    .map_err(|_| anyhow::anyhow!("bad number '{v}' in sync spec '{spec}'")),
+                    .map_err(|_| crate::anyhow!("bad number '{v}' in sync spec '{spec}'")),
                 None => Ok(default),
             }
         };
@@ -104,7 +104,7 @@ impl SyncPolicy {
             n => match n.parse::<u64>() {
                 Ok(0) => None,
                 Ok(n) => Some(SyncPolicy::Count(n)),
-                Err(_) => anyhow::bail!(
+                Err(_) => crate::bail!(
                     "bad sync spec '{spec}' (want N | off | drift[:staleness[:delta]] | \
                      hybrid[:interval[:delta]])"
                 ),
@@ -113,7 +113,7 @@ impl SyncPolicy {
         // a leftover segment means the user asked for a knob that does
         // not exist — fail fast instead of silently dropping it
         if let Some(extra) = parts.next() {
-            anyhow::bail!("trailing segment '{extra}' in sync spec '{spec}'");
+            crate::bail!("trailing segment '{extra}' in sync spec '{spec}'");
         }
         Ok(parsed)
     }

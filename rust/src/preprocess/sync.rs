@@ -30,11 +30,13 @@
 //!    legitimately skip rounds cannot stall the broadcast. Coalescing
 //!    keeps deliveries at `O(p)` per round (never `O(p²)`). Any partial
 //!    round still pending at shutdown is flushed by `on_shutdown` —
-//!    exact on the local engine, whose shutdown sequence drains each
-//!    processor's shutdown emissions before the next processor's
-//!    `on_shutdown` runs, so shard straggler deltas reach the aggregator
-//!    first (best-effort on the threaded engine, where shards and
-//!    aggregator shut down concurrently);
+//!    exact on *both* engines: the local engine drains each processor's
+//!    shutdown emissions before the next processor's `on_shutdown`
+//!    runs, and the threaded engine stages shutdown in the same
+//!    processor-id order with a quiescence wait per stage, so shard
+//!    straggler deltas always reach the aggregator before its own
+//!    `on_shutdown` flush (`tests/shard_skew_rounds.rs` pins the exact
+//!    counts on both engines);
 //! 4. each shard replaces its transform-side view with the broadcast
 //!    state merged with its own still-pending increment
 //!    (`Transform::stats_apply`) — nothing is lost or double-counted.
@@ -42,7 +44,12 @@
 //! Both event kinds are control-plane (`Event::is_control`), so the
 //! feedback loop can never deadlock against data-path backpressure in
 //! the threaded engine — the same reasoning as the VHT `compute`/
-//! `local-result` loop.
+//! `local-result` loop. This is load-bearing for the bounded data
+//! plane: with data channels as small as one batch and shards stalled
+//! in backpressure, deltas and global broadcasts still ride the
+//! unbounded control channels, so sync rounds stay live under overload
+//! (`tests/engine_properties.rs` pins round liveness at channel
+//! capacities {1, 4, 64}).
 
 use std::sync::Arc;
 

@@ -1,6 +1,6 @@
 //! CluStream nearest-centroid assignment: XLA artifact or native fallback.
 
-use anyhow::Result;
+use crate::Result;
 
 use super::registry::{self, Backend};
 use super::shapes::{CL_D, CL_K, CL_N};

@@ -6,7 +6,7 @@
 //! `infogain.hlo.txt` artifact (`[IG_A, IG_V, IG_C]`, zero-padded — padding
 //! attributes yield gain exactly 0 by kernel construction).
 
-use anyhow::Result;
+use crate::Result;
 
 use crate::core::criterion;
 use crate::core::observers::CounterBlock;
@@ -41,7 +41,7 @@ pub fn gains_xla(blocks: &[&CounterBlock]) -> Result<Vec<f64>> {
     for chunk in blocks.chunks(IG_A) {
         buf.iter_mut().for_each(|x| *x = 0.0);
         for (i, b) in chunk.iter().enumerate() {
-            anyhow::ensure!(
+            crate::ensure!(
                 b.v() as usize <= IG_V && b.c() as usize <= IG_C,
                 "counter block [{}x{}] exceeds artifact shape [{IG_V}x{IG_C}]",
                 b.v(),

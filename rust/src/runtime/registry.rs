@@ -5,7 +5,8 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU8, Ordering};
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::common::error::{Context, Result};
 
 use super::shapes::Manifest;
 

@@ -1,6 +1,6 @@
 //! SDR surfaces for AMRules expansion: XLA artifact or native fallback.
 
-use anyhow::Result;
+use crate::Result;
 
 use crate::core::criterion::{self, VarStats};
 
@@ -36,7 +36,7 @@ pub fn sdr_xla(attrs: &[AttrBins]) -> Result<Vec<Vec<f64>>> {
     for chunk in attrs.chunks(SDR_A) {
         buf.iter_mut().for_each(|x| *x = 0.0);
         for (i, bins) in chunk.iter().enumerate() {
-            anyhow::ensure!(
+            crate::ensure!(
                 bins.len() <= SDR_B,
                 "attribute has {} bins, artifact supports {SDR_B}",
                 bins.len()

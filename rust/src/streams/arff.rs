@@ -17,7 +17,7 @@ pub struct ArffData {
 }
 
 /// Parse an ARFF document. The last attribute is the class/target.
-pub fn parse_arff<R: Read>(reader: R, name: &str) -> anyhow::Result<ArffData> {
+pub fn parse_arff<R: Read>(reader: R, name: &str) -> crate::Result<ArffData> {
     let mut attrs: Vec<AttributeKind> = Vec::new();
     let mut nominal_values: Vec<Option<Vec<String>>> = Vec::new();
     let mut in_data = false;
@@ -51,7 +51,7 @@ pub fn parse_arff<R: Read>(reader: R, name: &str) -> anyhow::Result<ArffData> {
             } else if lower.starts_with("@data") {
                 in_data = true;
                 // last attribute is the class
-                let class_kind = attrs.pop().ok_or_else(|| anyhow::anyhow!("no attributes"))?;
+                let class_kind = attrs.pop().ok_or_else(|| crate::anyhow!("no attributes"))?;
                 let class_vals = nominal_values.pop().unwrap();
                 schema = Some(match (class_kind, &class_vals) {
                     (AttributeKind::Categorical { n_values }, _) => {
@@ -92,16 +92,16 @@ pub fn parse_arff<R: Read>(reader: R, name: &str) -> anyhow::Result<ArffData> {
             instances.push(Instance::dense(values, label));
         }
     }
-    let schema = schema.ok_or_else(|| anyhow::anyhow!("no @data section"))?;
+    let schema = schema.ok_or_else(|| crate::anyhow!("no @data section"))?;
     Ok(ArffData { schema, instances })
 }
 
-fn split_attr(rest: &str) -> anyhow::Result<(String, String)> {
+fn split_attr(rest: &str) -> crate::Result<(String, String)> {
     let rest = rest.trim();
     if let Some(stripped) = rest.strip_prefix('\'') {
         let end = stripped
             .find('\'')
-            .ok_or_else(|| anyhow::anyhow!("unterminated quote"))?;
+            .ok_or_else(|| crate::anyhow!("unterminated quote"))?;
         Ok((stripped[..end].to_string(), stripped[end + 1..].trim().to_string()))
     } else {
         let mut it = rest.splitn(2, char::is_whitespace);
@@ -118,7 +118,7 @@ pub struct ArffStream {
 }
 
 impl ArffStream {
-    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+    pub fn from_file(path: &std::path::Path) -> crate::Result<Self> {
         let f = std::fs::File::open(path)?;
         let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("arff");
         Ok(ArffStream { data: parse_arff(f, name)?, pos: 0 })

@@ -251,6 +251,78 @@ impl Event {
     }
 }
 
+/// Recycling pool for event micro-batch buffers (`Vec<Event>`): the
+/// threaded engine's data plane moves events in batches, and without
+/// reuse every flush allocates a fresh `Vec` that the consumer frees
+/// after draining — one allocator round-trip per batch, forever. The
+/// arena closes the loop: consumers return drained buffers, senders
+/// take them back, and steady-state batching becomes allocation-free
+/// (the ROADMAP's "AttributeBatch arena" data-plane follow-up: the
+/// attribute batches ride inside these buffers).
+///
+/// The pool is bounded (`max_pooled`) so a transient burst cannot pin
+/// memory forever, and buffers are recycled with their capacity intact.
+/// Tiny buffers (capacity below [`BatchArena::MIN_CAPACITY`]) are not
+/// pooled: at batch size 1 the per-event path must not pay a global
+/// lock round-trip that costs more than the allocation it saves.
+/// `allocations()` / `reuses()` expose the hit rate for benches.
+pub struct BatchArena {
+    pool: std::sync::Mutex<Vec<Vec<Event>>>,
+    max_pooled: usize,
+    allocations: std::sync::atomic::AtomicU64,
+    reuses: std::sync::atomic::AtomicU64,
+}
+
+impl BatchArena {
+    /// Buffers below this capacity are dropped instead of pooled (the
+    /// lock round-trip would exceed the saved allocation).
+    pub const MIN_CAPACITY: usize = 8;
+
+    pub fn new(max_pooled: usize) -> Self {
+        BatchArena {
+            pool: std::sync::Mutex::new(Vec::new()),
+            max_pooled,
+            allocations: std::sync::atomic::AtomicU64::new(0),
+            reuses: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// An empty buffer: recycled when the pool has one, fresh otherwise.
+    pub fn take(&self) -> Vec<Event> {
+        use std::sync::atomic::Ordering::Relaxed;
+        if let Some(buf) = self.pool.lock().unwrap().pop() {
+            self.reuses.fetch_add(1, Relaxed);
+            return buf;
+        }
+        self.allocations.fetch_add(1, Relaxed);
+        Vec::new()
+    }
+
+    /// Return a drained buffer (cleared here; capacity kept). Buffers
+    /// below [`Self::MIN_CAPACITY`] or beyond the pool bound are simply
+    /// dropped — no lock is taken for them.
+    pub fn put(&self, mut buf: Vec<Event>) {
+        buf.clear();
+        if buf.capacity() < Self::MIN_CAPACITY {
+            return;
+        }
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < self.max_pooled {
+            pool.push(buf);
+        }
+    }
+
+    /// Fresh `Vec` allocations handed out by [`take`](Self::take).
+    pub fn allocations(&self) -> u64 {
+        self.allocations.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Recycled buffers handed out by [`take`](Self::take).
+    pub fn reuses(&self) -> u64 {
+        self.reuses.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,5 +395,32 @@ mod tests {
         // wire size is a per-delivery quantity: unaffected by sharing
         assert_eq!(e.wire_bytes(), e.clone().wire_bytes());
         assert_eq!(e.wire_bytes(), e.deep_clone().wire_bytes());
+    }
+
+    /// The arena recycles capacity: a returned buffer comes back cleared
+    /// but with its allocation, and the pool bound caps retention.
+    #[test]
+    fn batch_arena_recycles_capacity() {
+        let arena = BatchArena::new(1);
+        let mut a = arena.take();
+        a.reserve(64);
+        let cap = a.capacity();
+        a.push(Event::Shutdown);
+        arena.put(a);
+        let b = arena.take();
+        assert!(b.is_empty());
+        assert!(b.capacity() >= cap.min(64));
+        assert_eq!(arena.reuses(), 1);
+        // bound: with max_pooled = 1 the pool keeps one buffer; a second
+        // returned buffer is dropped rather than retained
+        let mut c = arena.take();
+        c.reserve(8);
+        assert_eq!(arena.allocations(), 2); // a and c were fresh
+        arena.put(b);
+        arena.put(c); // pool already holds b: dropped
+        let _first = arena.take(); // reuses b
+        let _second = arena.take(); // pool empty again: fresh
+        assert_eq!(arena.reuses(), 2);
+        assert_eq!(arena.allocations(), 3);
     }
 }

@@ -45,6 +45,6 @@ pub mod builder;
 pub mod task;
 
 pub use builder::{ProcessorId, StreamId, Topology, TopologyBuilder};
-pub use event::{Event, Output};
+pub use event::{BatchArena, Event, Output};
 pub use processor::{Ctx, Processor};
 pub use stream::Grouping;

@@ -1,0 +1,93 @@
+//! Shared helpers for the engine test crates: the
+//! `source → fwd(p=1) → recorder(p)` edge-probe topology and its
+//! no-loss / per-edge-FIFO assertions, used by both the golden
+//! equivalence suite and the backpressure property tests so the two
+//! cannot drift apart.
+
+#![allow(dead_code)] // each test crate uses a subset of these helpers
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use samoa::core::instance::{Instance, Label};
+use samoa::engine::{EngineMetrics, ThreadedEngine};
+use samoa::topology::{Ctx, Event, Grouping, Processor, StreamId, TopologyBuilder};
+
+/// Single forwarder: re-emits every instance on the given stream with
+/// its id as the key (ids stay in emission order on each edge).
+pub struct Fwd(pub StreamId);
+
+impl Processor for Fwd {
+    fn process(&mut self, e: Event, ctx: &mut Ctx) {
+        if let Event::Instance { id, inst } = e {
+            ctx.emit(self.0, id, Event::Instance { id, inst });
+        }
+    }
+}
+
+/// Records, per destination instance, the sequence of instance ids it
+/// processed, optionally burning wall-clock per event (the slow-consumer
+/// half of the backpressure stress). Ids are emitted by a single sender
+/// in increasing order, so per-edge FIFO ⇔ each log is strictly
+/// increasing.
+pub struct Recorder {
+    pub log: Arc<Mutex<Vec<Vec<u64>>>>,
+    pub spin: Duration,
+}
+
+impl Processor for Recorder {
+    fn process(&mut self, e: Event, ctx: &mut Ctx) {
+        if !self.spin.is_zero() {
+            std::thread::sleep(self.spin);
+        }
+        if let Event::Instance { id, .. } = e {
+            self.log.lock().unwrap()[ctx.instance].push(id);
+        }
+    }
+}
+
+/// Run `source → fwd(p=1) → recorder(p)` on `eng`, the recorder burning
+/// `spin` per event; returns the engine metrics and the per-instance id
+/// logs.
+pub fn run_edge_probe(
+    grouping: Grouping,
+    p: usize,
+    n: u64,
+    spin: Duration,
+    eng: ThreadedEngine,
+) -> (EngineMetrics, Vec<Vec<u64>>) {
+    let log: Arc<Mutex<Vec<Vec<u64>>>> = Arc::new(Mutex::new(vec![Vec::new(); p]));
+    let mut b = TopologyBuilder::new("probe");
+    let fwd = b.add_processor("fwd", 1, |_| Box::new(Fwd(StreamId(1))));
+    let log2 = Arc::clone(&log);
+    let rec = b.add_processor("rec", p, move |_| {
+        Box::new(Recorder { log: Arc::clone(&log2), spin })
+    });
+    let entry = b.stream("in", None, fwd, Grouping::Shuffle);
+    b.stream("edge", Some(fwd), rec, grouping);
+    let topo = b.build();
+    let source = (0..n)
+        .map(|id| Event::Instance { id, inst: Instance::dense(vec![id as f32], Label::None) });
+    let m = eng.run(&topo, entry, source, |_, _, _| {});
+    assert_eq!(m.source_instances, n);
+    drop(topo); // factories hold a log clone; release before unwrapping
+    let logs = Arc::try_unwrap(log).unwrap().into_inner().unwrap();
+    (m, logs)
+}
+
+/// Zero loss, no duplicates, and strictly-increasing order per edge
+/// (valid for `One`-routed groupings where each id reaches one
+/// instance; broadcast probes assert per-instance totals instead).
+pub fn assert_no_loss_fifo(logs: &[Vec<u64>], n: u64, label: &str) {
+    let total: usize = logs.iter().map(|l| l.len()).sum();
+    assert_eq!(total, n as usize, "{label}: lost/duplicated events");
+    let mut seen: Vec<u64> = logs.iter().flatten().copied().collect();
+    seen.sort_unstable();
+    assert!(seen.windows(2).all(|w| w[0] < w[1]), "{label}: duplicate ids");
+    for (i, l) in logs.iter().enumerate() {
+        assert!(
+            l.windows(2).all(|w| w[0] < w[1]),
+            "{label}: edge to instance {i} reordered"
+        );
+    }
+}

@@ -1,12 +1,23 @@
 //! Property-style tests over the engines and topology substrate: seeded
 //! random topologies and event mixes, checking conservation and
-//! determinism invariants. (No proptest crate offline; this is a small
-//! hand-rolled generator loop over many seeds.)
+//! determinism invariants (no proptest crate offline; this is a small
+//! hand-rolled generator loop over many seeds) — plus the backpressure
+//! contract of the bounded threaded data plane: bounded peak queue
+//! depth, zero event loss, per-edge FIFO, and shutdown/`StatsSync`
+//! round liveness at tiny channel capacities.
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{assert_no_loss_fifo, run_edge_probe};
 
 use samoa::common::Rng;
 use samoa::core::instance::{Instance, Label};
 use samoa::engine::{LocalEngine, SimTimeEngine, ThreadedEngine};
-use samoa::topology::{Ctx, Event, Grouping, Processor, TopologyBuilder};
+use samoa::topology::{Ctx, Event, Grouping, Processor, StreamId, TopologyBuilder};
 
 /// Forwards every instance to a configured stream (if any) and counts.
 struct Fwd {
@@ -232,4 +243,227 @@ fn prop_simtime_monotone_in_parallelism() {
     assert!(t4 > t1, "t4={t4} t1={t1}");
     // t8 may plateau (communication) but must not collapse below t4/2
     assert!(t8 > t4 * 0.5, "t8={t8} t4={t4}");
+}
+
+// ---------------------------------------------------------------------
+// Backpressure invariants (bounded threaded data plane)
+// ---------------------------------------------------------------------
+
+/// Run `f` on a helper thread and fail the test if it does not finish in
+/// `secs` — a liveness watchdog, so a backpressure deadlock fails fast
+/// instead of hanging the harness.
+fn with_deadline<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("run did not complete in time — backpressure liveness violated")
+}
+
+// The slow-consumer stress topology (source → fwd(1) → recorder(p))
+// and its loss/FIFO assertions live in tests/common, shared with the
+// golden-equivalence suite.
+
+/// The backpressure contract at channel capacities {1, 4, 64}: a fast
+/// source feeding a sleeping sink keeps every resident queue bounded by
+/// `capacity × batch` (plus two batches of accounting slack: the
+/// consumer's not-yet-decremented batch and a safety margin), loses
+/// nothing, preserves per-edge FIFO, and the producer visibly stalls —
+/// while the unbounded baseline on the same topology grows its queues
+/// with input size.
+#[test]
+fn prop_bounded_queue_depth_no_loss_fifo_at_tiny_capacities() {
+    const N: u64 = 3_000;
+    const P: usize = 3;
+    let batch = 8usize;
+    for capacity in [1usize, 4, 64] {
+        let (m, logs) = with_deadline(120, move || {
+            run_edge_probe(
+                Grouping::Key,
+                P,
+                N,
+                Duration::from_micros(10),
+                ThreadedEngine::new(capacity).with_batch(batch),
+            )
+        });
+        assert_no_loss_fifo(&logs, N, &format!("capacity={capacity}"));
+        let bound = ((capacity + 2) * batch) as u64;
+        assert!(
+            m.max_peak_queue_events() <= bound,
+            "capacity={capacity}: peak queue {} exceeds bound {bound}",
+            m.max_peak_queue_events()
+        );
+        if capacity <= 4 {
+            assert!(
+                m.flow.backpressure_stalls > 0,
+                "capacity={capacity}: slow consumer never stalled the producer"
+            );
+        }
+        assert_eq!(m.streams[1].events, N, "capacity={capacity}");
+    }
+}
+
+/// Unbounded baseline: with no backpressure the resident queue grows
+/// with input size (the exact failure mode bounded channels remove).
+#[test]
+fn prop_unbounded_queue_grows_with_input() {
+    let run = |n: u64| {
+        let (m, logs) = with_deadline(120, move || {
+            run_edge_probe(
+                Grouping::Key,
+                3,
+                n,
+                Duration::from_micros(20),
+                ThreadedEngine::default().unbounded().with_batch(8),
+            )
+        });
+        assert_no_loss_fifo(&logs, n, "unbounded");
+        m.max_peak_queue_events()
+    };
+    let small = run(1_500);
+    let large = run(6_000);
+    assert!(
+        large > small * 2,
+        "unbounded peak depth did not grow with input: {small} -> {large}"
+    );
+    // and it dwarfs what any tiny bounded config would allow
+    assert!(large > (4 + 2) * 8, "unbounded run barely queued ({large})");
+}
+
+/// Work-stealing mode under the same slow-consumer stress: zero loss,
+/// per-edge FIFO, bounded resident depth — with fewer workers than
+/// instances and parked batches standing in for blocking sends.
+#[test]
+fn prop_steal_mode_backpressure_no_loss_fifo() {
+    const N: u64 = 2_000;
+    let batch = 8usize;
+    for capacity in [1usize, 4] {
+        let (m, logs) = with_deadline(120, move || {
+            run_edge_probe(
+                Grouping::Key,
+                3,
+                N,
+                Duration::from_micros(10),
+                ThreadedEngine::new(capacity).with_batch(batch).with_workers(2),
+            )
+        });
+        assert_no_loss_fifo(&logs, N, &format!("steal capacity={capacity}"));
+        let bound = ((capacity + 2) * batch) as u64;
+        assert!(
+            m.max_peak_queue_events() <= bound,
+            "steal capacity={capacity}: peak {} exceeds bound {bound}",
+            m.max_peak_queue_events()
+        );
+        assert!(m.flow.backpressure_stalls > 0, "steal capacity={capacity}: no stalls");
+    }
+}
+
+/// `StatsSync` round liveness under backpressure: the delta/global sync
+/// loop rides the unbounded control plane, so rounds complete and the
+/// master merges every observation exactly once even when the data
+/// channels hold a single batch — on the pinned and the work-stealing
+/// scheduler alike.
+#[test]
+fn prop_statssync_rounds_live_under_tiny_capacity() {
+    use samoa::core::Schema;
+    use samoa::preprocess::processor::PipelineProcessor;
+    use samoa::preprocess::{Pipeline, StandardScaler, StatsSyncProcessor, SyncPolicy};
+    use samoa::streams::waveform::WaveformGenerator;
+    use samoa::streams::StreamSource;
+
+    const N: u64 = 2_048;
+    const P: usize = 4;
+    const INTERVAL: u64 = 16;
+
+    let seen = Arc::new(AtomicU64::new(0));
+
+    struct CountSink(Arc<AtomicU64>);
+    impl Processor for CountSink {
+        fn process(&mut self, _e: Event, _c: &mut Ctx) {
+            std::thread::sleep(Duration::from_micros(5));
+            self.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    for (capacity, workers) in [(1usize, None), (4, None), (64, None), (4, Some(2usize))] {
+        let seen2 = Arc::clone(&seen);
+        seen.store(0, Ordering::SeqCst);
+        let (deltas, master_n, broadcasts, completed, skew) = with_deadline(180, move || {
+            let schema: Schema = WaveformGenerator::classification(1).schema().clone();
+            let out = StreamId(1);
+            let delta = StreamId(2);
+            let global = StreamId(3);
+
+            let mut b = TopologyBuilder::new("sync-bp");
+            let s = schema.clone();
+            let pipe = b.add_processor("pipeline", P, move |_| {
+                Box::new(
+                    PipelineProcessor::new(
+                        Pipeline::new().then(StandardScaler::new()),
+                        &s,
+                        out,
+                    )
+                    .with_sync(SyncPolicy::Count(INTERVAL), delta),
+                )
+            });
+            let sink = b.add_processor("sink", 1, move |_| {
+                Box::new(CountSink(Arc::clone(&seen2)))
+            });
+            let s2 = schema.clone();
+            let stats = b.add_processor("stats-sync", 1, move |_| {
+                Box::new(StatsSyncProcessor::new(
+                    Pipeline::new().then(StandardScaler::new()),
+                    &s2,
+                    global,
+                    P,
+                ))
+            });
+            let entry = b.stream("instance", None, pipe, Grouping::Shuffle);
+            let s_out = b.stream("transformed", Some(pipe), sink, Grouping::Shuffle);
+            let s_delta = b.stream("stats-delta", Some(pipe), stats, Grouping::Key);
+            let s_global = b.stream("stats-global", Some(stats), pipe, Grouping::All);
+            assert_eq!((s_out, s_delta, s_global), (out, delta, global));
+            let topo = b.build();
+
+            let mut stream = WaveformGenerator::classification(1);
+            let source = (0..N)
+                .map_while(move |id| {
+                    stream.next_instance().map(|inst| Event::Instance { id, inst })
+                });
+            let mut eng = ThreadedEngine::new(capacity).with_batch(8);
+            if let Some(w) = workers {
+                eng = eng.with_workers(w);
+            }
+            let mut extracted = (0u64, 0.0f64, 0u64, 0u64, 0u64);
+            eng.run(&topo, entry, source, |pid, _iid, proc_| {
+                if pid == 2 {
+                    if let Some(agg) = proc_
+                        .as_any()
+                        .and_then(|a| a.downcast_ref::<StatsSyncProcessor>())
+                    {
+                        extracted = (
+                            agg.deltas_merged(),
+                            agg.snapshot(0).map_or(0.0, |s| s[0]),
+                            agg.broadcasts(),
+                            agg.completed_rounds(),
+                            agg.skew_rounds(),
+                        );
+                    }
+                }
+            });
+            extracted
+        });
+        let label = format!("capacity={capacity} workers={workers:?}");
+        // every shard emits exactly N/P/INTERVAL deltas; all are merged
+        let waves = N / P as u64 / INTERVAL;
+        assert_eq!(deltas, waves * P as u64, "{label}");
+        assert_eq!(master_n, N as f64, "{label}: master lost observations");
+        assert!(
+            broadcasts >= waves && broadcasts <= deltas,
+            "{label}: broadcasts {broadcasts} outside [{waves}, {deltas}]"
+        );
+        assert_eq!(completed + skew, broadcasts, "{label}");
+        assert_eq!(seen.load(Ordering::SeqCst), N, "{label}: sink lost instances");
+    }
 }

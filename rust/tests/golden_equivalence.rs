@@ -14,7 +14,12 @@
 //!   within a (sender, dest-instance) edge at any batch size, for both
 //!   key-grouped and broadcast fan-out, under tiny-queue backpressure.
 
+mod common;
+
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use common::{Fwd, Recorder};
 
 use samoa::classifiers::vht::{build_topology as build_vht, ModelAggregator, VhtConfig};
 use samoa::clustering::clustream::CluStreamConfig;
@@ -24,7 +29,7 @@ use samoa::engine::{EngineMetrics, LocalEngine, ThreadedEngine};
 use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
 use samoa::regressors::amrules::AMRulesConfig;
 use samoa::streams::{random_tree::RandomTreeGenerator, StreamSource};
-use samoa::topology::{Ctx, Event, Grouping, Processor, StreamId, TopologyBuilder};
+use samoa::topology::{Event, Grouping, StreamId, TopologyBuilder};
 
 /// Everything a VHT run can disagree on: quality, split decisions, and
 /// the full per-stream traffic signature.
@@ -197,57 +202,14 @@ fn clustream_topology_rerun_bit_identical() {
 
 // ---------------------------------------------------------------------
 // Threaded-engine micro-batching: loss/ordering contract
+// (probe topology + Fwd/Recorder shared with engine_properties via
+// tests/common — see common::run_edge_probe)
 // ---------------------------------------------------------------------
 
-/// Records, per destination instance, the sequence of instance ids it
-/// processed (ids are emitted by a single sender in increasing order, so
-/// per-edge FIFO ⇔ each recorded sequence is strictly increasing).
-struct Recorder {
-    log: Arc<Mutex<Vec<Vec<u64>>>>,
-}
-
-impl Processor for Recorder {
-    fn process(&mut self, e: Event, ctx: &mut Ctx) {
-        if let Event::Instance { id, .. } = e {
-            self.log.lock().unwrap()[ctx.instance].push(id);
-        }
-    }
-}
-
-/// Single forwarder: re-emits every instance (ids already increasing).
-struct Fwd(StreamId);
-impl Processor for Fwd {
-    fn process(&mut self, e: Event, ctx: &mut Ctx) {
-        if let Event::Instance { id, inst } = e {
-            ctx.emit(self.0, id, Event::Instance { id, inst });
-        }
-    }
-}
-
-/// Run source → fwd(p=1) → recorder(p) and return the per-instance logs.
-fn run_edge_probe(
-    grouping: Grouping,
-    p: usize,
-    n: u64,
-    batch: usize,
-    queue: usize,
-) -> Vec<Vec<u64>> {
-    let log: Arc<Mutex<Vec<Vec<u64>>>> = Arc::new(Mutex::new(vec![Vec::new(); p]));
-    let mut b = TopologyBuilder::new("probe");
-    let fwd = b.add_processor("fwd", 1, |_| Box::new(Fwd(StreamId(1))));
-    let log2 = Arc::clone(&log);
-    let rec = b.add_processor("rec", p, move |_| Box::new(Recorder { log: Arc::clone(&log2) }));
-    let entry = b.stream("in", None, fwd, Grouping::Shuffle);
-    b.stream("edge", Some(fwd), rec, grouping);
-    let topo = b.build();
-    let source = (0..n)
-        .map(|id| Event::Instance { id, inst: Instance::dense(vec![id as f32], Label::None) });
-    let m = ThreadedEngine::new(queue)
-        .with_batch(batch)
-        .run(&topo, entry, source, |_, _, _| {});
-    assert_eq!(m.source_instances, n);
-    drop(topo); // factories hold a log clone; release before unwrapping
-    Arc::try_unwrap(log).unwrap().into_inner().unwrap()
+/// Run source → fwd(p=1) → recorder(p) on `eng` (no consumer spin) and
+/// return the per-instance logs.
+fn run_edge_probe(grouping: Grouping, p: usize, n: u64, eng: ThreadedEngine) -> Vec<Vec<u64>> {
+    common::run_edge_probe(grouping, p, n, Duration::ZERO, eng).1
 }
 
 /// Key-grouped edge: at every batch size (1 = unbatched baseline,
@@ -258,7 +220,7 @@ fn run_edge_probe(
 fn threaded_batching_key_grouped_no_loss_no_reorder() {
     const N: u64 = 5_000;
     for batch in [1usize, 7, 32, 1024] {
-        let logs = run_edge_probe(Grouping::Key, 3, N, batch, 4);
+        let logs = run_edge_probe(Grouping::Key, 3, N, ThreadedEngine::new(4).with_batch(batch));
         let total: usize = logs.iter().map(|l| l.len()).sum();
         assert_eq!(total, N as usize, "batch={batch}: lost/duplicated events");
         let mut seen: Vec<u64> = logs.iter().flatten().copied().collect();
@@ -279,13 +241,38 @@ fn threaded_batching_key_grouped_no_loss_no_reorder() {
 fn threaded_batching_broadcast_no_loss_no_reorder() {
     const N: u64 = 3_000;
     for batch in [1usize, 32, 4096] {
-        let logs = run_edge_probe(Grouping::All, 4, N, batch, 4);
+        let logs = run_edge_probe(Grouping::All, 4, N, ThreadedEngine::new(4).with_batch(batch));
         for (i, l) in logs.iter().enumerate() {
             assert_eq!(l.len(), N as usize, "batch={batch}: instance {i} missed events");
             assert!(
                 l.windows(2).all(|w| w[0] < w[1]),
                 "batch={batch}: edge to instance {i} reordered"
             );
+        }
+    }
+}
+
+/// Flow-control configuration is semantically invisible: the exact
+/// per-edge delivery sequences are bit-identical across bounded vs
+/// unbounded channels, fixed vs adaptive batching, and pinned vs
+/// work-stealing scheduling — for key-grouped and broadcast fan-out.
+#[test]
+fn edge_sequences_identical_across_flow_control_configs() {
+    const N: u64 = 4_000;
+    for (gname, grouping) in [("key", Grouping::Key), ("broadcast", Grouping::All)] {
+        let baseline = run_edge_probe(grouping, 3, N, ThreadedEngine::new(4).with_batch(7));
+        let configs: Vec<(&str, ThreadedEngine)> = vec![
+            ("unbounded fixed", ThreadedEngine::default().unbounded().with_batch(7)),
+            ("bounded adaptive", ThreadedEngine::new(4).with_adaptive_batch(32)),
+            ("steal bounded", ThreadedEngine::new(4).with_batch(7).with_workers(2)),
+            (
+                "steal adaptive unbounded",
+                ThreadedEngine::default().unbounded().with_workers(2),
+            ),
+        ];
+        for (name, eng) in configs {
+            let logs = run_edge_probe(grouping, 3, N, eng);
+            assert_eq!(logs, baseline, "{gname}: '{name}' diverged from baseline");
         }
     }
 }
@@ -298,7 +285,10 @@ fn threaded_totals_match_local() {
         let mut b = TopologyBuilder::new("x");
         let fwd = b.add_processor("fwd", 1, |_| Box::new(Fwd(StreamId(1))));
         let rec = b.add_processor("rec", 4, |_| {
-            Box::new(Recorder { log: Arc::new(Mutex::new(vec![Vec::new(); 4])) })
+            Box::new(Recorder {
+                log: Arc::new(Mutex::new(vec![Vec::new(); 4])),
+                spin: Duration::ZERO,
+            })
         });
         let entry = b.stream("in", None, fwd, Grouping::Shuffle);
         b.stream("edge", Some(fwd), rec, Grouping::All);
@@ -310,10 +300,23 @@ fn threaded_totals_match_local() {
     };
     let (t1, e1) = build();
     let local = LocalEngine::new().run(&t1, e1, source(), |_| {});
-    let (t2, e2) = build();
-    let threaded = ThreadedEngine::default().run(&t2, e2, source(), |_, _, _| {});
-    for s in 0..local.streams.len() {
-        assert_eq!(local.streams[s].events, threaded.streams[s].events, "stream {s} events");
-        assert_eq!(local.streams[s].bytes, threaded.streams[s].bytes, "stream {s} bytes");
+    let engines: Vec<(&str, ThreadedEngine)> = vec![
+        ("default", ThreadedEngine::default()),
+        ("tiny bounded", ThreadedEngine::new(2).with_batch(4)),
+        ("steal", ThreadedEngine::default().with_workers(2)),
+    ];
+    for (name, eng) in engines {
+        let (t2, e2) = build();
+        let threaded = eng.run(&t2, e2, source(), |_, _, _| {});
+        for s in 0..local.streams.len() {
+            assert_eq!(
+                local.streams[s].events, threaded.streams[s].events,
+                "{name}: stream {s} events"
+            );
+            assert_eq!(
+                local.streams[s].bytes, threaded.streams[s].bytes,
+                "{name}: stream {s} bytes"
+            );
+        }
     }
 }

@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: diff the current bench-smoke run against the
+committed baseline history in perf/BENCH_PR<k>.json.
+
+CI calls this after the smoke benches wrote their JSONL rows:
+
+    python3 tools/bench_compare.py \
+        --current bench_results.jsonl --baseline-dir perf \
+        --prefix tput/ --max-regress 0.15 --summary "$GITHUB_STEP_SUMMARY"
+
+Behavior:
+  * the latest committed BENCH_PR<k>.json (highest k) is the baseline;
+  * rows are matched by exact bench name, filtered to --prefix (the
+    engine_throughput rows) and to rows that carry items_per_s;
+  * a row regressing by more than --max-regress (relative items/s)
+    fails the job, listing every offender;
+  * a trajectory table (every committed file + the current run) is
+    printed, and appended to --summary when given (the GitHub job
+    summary);
+  * no committed baselines yet -> pass with a note (the trajectory is
+    seeded by the auto-commit step on the next main push).
+
+Smoke-mode numbers are single-rep and noisy; the 15% default gate is
+deliberately loose — it catches collapses (a lost fast path, an
+accidental O(n^2)), not 2% drifts.
+"""
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+
+def load_jsonl(path):
+    rows = {}
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if "name" in row:
+                rows[row["name"]] = row
+    return rows
+
+
+def load_baselines(baseline_dir):
+    """[(pr_number, path, {name: row})] sorted by PR number."""
+    out = []
+    for path in glob.glob(os.path.join(baseline_dir, "BENCH_PR*.json")):
+        m = re.search(r"BENCH_PR(\d+)\.json$", os.path.basename(path))
+        if not m:
+            continue
+        try:
+            with open(path, encoding="utf-8") as fh:
+                doc = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: unreadable baseline {path}: {e}", file=sys.stderr)
+            continue
+        rows = {r["name"]: r for r in doc.get("results", []) if "name" in r}
+        out.append((int(m.group(1)), path, rows))
+    out.sort(key=lambda t: t[0])
+    return out
+
+
+def fmt_rate(v):
+    if v is None:
+        return "-"
+    if v >= 1e6:
+        return f"{v / 1e6:.2f}M"
+    if v >= 1e3:
+        return f"{v / 1e3:.1f}k"
+    return f"{v:.0f}"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True, help="bench JSONL of this run")
+    ap.add_argument("--baseline-dir", default="perf")
+    ap.add_argument("--prefix", default="tput/", help="gate rows whose name starts with this")
+    ap.add_argument("--max-regress", type=float, default=0.15)
+    ap.add_argument("--summary", default=None, help="markdown summary file to append to")
+    ap.add_argument("--soft", action="store_true",
+                    help="report regressions but always exit 0 (main-branch "
+                         "trajectory recording must not be blocked by an "
+                         "already-accepted regression)")
+    args = ap.parse_args()
+
+    current = load_jsonl(args.current)
+    gated = {
+        name: row
+        for name, row in current.items()
+        if name.startswith(args.prefix) and isinstance(row.get("items_per_s"), (int, float))
+    }
+    baselines = load_baselines(args.baseline_dir)
+
+    lines = ["## Perf trajectory", ""]
+    regressions = []
+    if not baselines:
+        msg = (
+            f"No committed baselines in {args.baseline_dir}/ yet — gate passes; "
+            "the trajectory is seeded when this run's BENCH_PR<k>.json is "
+            "committed on the main branch."
+        )
+        print(msg)
+        lines.append(msg)
+    else:
+        pr, path, base_rows = baselines[-1]
+        print(f"baseline: {path} (PR {pr}); gating {len(gated)} '{args.prefix}' rows "
+              f"at -{args.max_regress:.0%}")
+
+        # trajectory table: the last few committed PRs + current (CI also
+        # prunes perf/ to a window; cap the columns so the summary stays
+        # readable regardless)
+        shown = baselines[-8:]
+        cols = [f"PR{p}" for p, _, _ in shown] + ["current"]
+        lines.append("| bench | " + " | ".join(cols) + " |")
+        lines.append("|---|" + "---|" * len(cols))
+        for name in sorted(gated):
+            cells = []
+            for _, _, rows in shown:
+                cells.append(fmt_rate(rows.get(name, {}).get("items_per_s")))
+            cells.append(fmt_rate(gated[name]["items_per_s"]))
+            lines.append(f"| {name} | " + " | ".join(cells) + " |")
+
+        for name, row in sorted(gated.items()):
+            base = base_rows.get(name, {}).get("items_per_s")
+            if not base:
+                continue
+            ratio = row["items_per_s"] / base
+            status = "REGRESSION" if ratio < 1.0 - args.max_regress else "ok"
+            print(f"  {name}: base={fmt_rate(base)} cur={fmt_rate(row['items_per_s'])} "
+                  f"({ratio:.2f}x) {status}")
+            if status == "REGRESSION":
+                regressions.append((name, base, row["items_per_s"], ratio))
+
+        if regressions:
+            lines.append("")
+            lines.append(f"**FAIL: {len(regressions)} row(s) regressed more than "
+                         f"{args.max_regress:.0%} vs PR{pr}:**")
+            for name, base, cur, ratio in regressions:
+                lines.append(f"- `{name}`: {fmt_rate(base)} -> {fmt_rate(cur)} ({ratio:.2f}x)")
+        else:
+            lines.append("")
+            lines.append(f"All {len(gated)} gated rows within {args.max_regress:.0%} of PR{pr}.")
+
+    text = "\n".join(lines) + "\n"
+    print(text)
+    if args.summary:
+        try:
+            with open(args.summary, "a", encoding="utf-8") as fh:
+                fh.write(text)
+        except OSError as e:
+            print(f"warning: could not write summary: {e}", file=sys.stderr)
+
+    if regressions and args.soft:
+        print("(--soft: regressions reported above, exit 0)")
+    sys.exit(1 if regressions and not args.soft else 0)
+
+
+if __name__ == "__main__":
+    main()
