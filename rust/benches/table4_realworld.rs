@@ -1,10 +1,60 @@
-//! Bench regenerating Table 4 (execution time on real-world datasets).
+//! Bench regenerating Table 4 (execution time on real-world datasets):
+//! one timed row per (dataset twin × variant), instead of the old
+//! single-shot `samoa exp table4` wrapper that produced no per-row
+//! timings. Rows land in `BENCH_JSON` as `tput/table4 ...` records
+//! (median seconds + instances/s), plus one `table4/quality ...` record
+//! per row (accuracy/kappa/splits), so the CI perf-trajectory gate
+//! tracks real-dataset throughput per PR.
+//!
+//! `BENCH_SMOKE` shrinks the workload (fewer instances, fewer variants)
+//! for the CI smoke leg.
 
-use samoa::common::cli::Args;
+mod bench_util;
+use bench_util::{bench, record_json, smoke_mode};
+
+use samoa::experiments::dataset_stream;
+use samoa::experiments::runner::{run_variant, EngineKind, Variant};
 
 fn main() {
-    let args = Args::parse(
-        ["--instances", "40000", "--seeds", "1"].iter().map(|s| s.to_string()),
-    );
-    samoa::experiments::run("table4", &args).unwrap();
+    let smoke = smoke_mode();
+    let n: u64 = if smoke { 4_000 } else { 60_000 };
+    // The paper's Table 4 feedback latency for the distributed variants.
+    let kind = EngineKind::LocalDeterministic { feedback_delay: 100 };
+    let datasets = ["elec", "phy", "covtype"];
+    let variants: &[Variant] = if smoke {
+        &[Variant::Moa, Variant::Local, Variant::Wok { p: 2 }]
+    } else {
+        &[
+            Variant::Moa,
+            Variant::Local,
+            Variant::Wok { p: 2 },
+            Variant::Wok { p: 4 },
+            Variant::Wk { p: 2, z: 1 },
+            Variant::Sharding { p: 2 },
+        ]
+    };
+
+    for ds in datasets {
+        for &variant in variants {
+            // Accuracy is deterministic given (dataset seed, variant); run
+            // it once outside the timed reps and attach it to the record.
+            let mut acc_stream = dataset_stream(ds, 500);
+            let out = run_variant(acc_stream.as_mut(), variant, n, kind, false, n);
+            let name = format!("tput/table4 {ds} {variant}");
+            bench(&name, 5, || {
+                let mut stream = dataset_stream(ds, 500);
+                run_variant(stream.as_mut(), variant, n, kind, false, n);
+                n
+            });
+            record_json(
+                &format!("table4/quality {ds} {variant}"),
+                &[
+                    ("accuracy", out.accuracy),
+                    ("kappa", out.kappa),
+                    ("splits", out.splits as f64),
+                    ("model_bytes", out.model_bytes as f64),
+                ],
+            );
+        }
+    }
 }

@@ -328,6 +328,17 @@ impl Processor for ModelAggregator {
     fn as_any(&self) -> Option<&dyn std::any::Any> {
         Some(self)
     }
+
+    fn report(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("instances", self.stats.instances as f64),
+            ("shed", self.stats.shed as f64),
+            ("buffered_replayed", self.stats.buffered_replayed as f64),
+            ("splits", self.stats.splits as f64),
+            ("split_rounds", self.stats.split_rounds as f64),
+            ("timeouts", self.stats.timeouts as f64),
+        ]
+    }
 }
 
 

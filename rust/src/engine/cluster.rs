@@ -1,0 +1,1233 @@
+//! Cluster engine: multi-process execution of a topology over sockets —
+//! the first engine whose bytes physically leave the process, closing
+//! the gap between `Event::wire_bytes()` (an estimate the simtime cost
+//! model prices) and what a real DSPE serializes per hop.
+//!
+//! # Architecture
+//!
+//! One **coordinator** (this process) and `workers` **worker** shards.
+//! Processor instances are assigned by instance index
+//! (`instance i → worker i % workers`, so every shard of a parallel
+//! processor lands on a different worker — vertical parallelism across
+//! processes). Each worker is connected by **two socket lanes**:
+//!
+//! * a **data lane** carrying data-event deliveries, subject to the
+//!   bounded in-flight window (backpressure at the socket boundary), and
+//! * a **control lane** carrying control events (per `Event::is_control`)
+//!   plus the protocol's shutdown/collect/halt frames. Control frames are
+//!   exempt from the data window — the priority-lane property that keeps
+//!   feedback loops (VHT `compute`/`local-result`, StatsSync rounds) and
+//!   staged shutdown live no matter how congested the data plane is,
+//!   mirroring the threaded engine's unbounded control channels.
+//!
+//! Every frame sent to a worker carries a per-worker monotone sequence
+//! number (`wseq`); the worker merges both lanes back into contiguous
+//! `wseq` order before processing. Lane priority is therefore a
+//! *liveness* property (control is never blocked behind the data
+//! window), never a *reordering* — which is what makes the execution
+//! deterministic.
+//!
+//! # Determinism (golden equivalence with the local engine)
+//!
+//! The coordinator performs **all routing itself** — groupings,
+//! round-robin cursors, broadcast fan-out, delayed-stream release, and
+//! per-delivery `wire_bytes` metrics run the exact code path of
+//! [`super::LocalEngine`]. Workers only execute `process()` and send
+//! their emissions back; the coordinator consumes replies **in global
+//! send order** and routes the returned emissions in that order. The
+//! resulting global delivery sequence is bit-identical to the local
+//! engine's FIFO drain, so totals, per-edge sequences and learned models
+//! match the local engine exactly at any worker count
+//! (`tests/cluster_equivalence.rs` pins this for VHT, AMRules and
+//! StatsSync). Pipelining happens *within* each source cascade — up to
+//! `window` un-acknowledged data deliveries per worker — while source
+//! boundaries are quiescence barriers, exactly as in local execution.
+//!
+//! Staged shutdown mirrors the local engine too: per processor in pid
+//! order, per instance, the coordinator sends an `on_shutdown` frame on
+//! the control lane, consumes the reply, routes its emissions and drains
+//! to cross-process quiescence before moving on — so e.g. a pipeline
+//! shard's final stats delta is observable by the stats aggregator's
+//! own shutdown flush, and the delta/master counts of
+//! `tests/shard_skew_rounds.rs` are reproduced exactly.
+//!
+//! # Deadlock freedom
+//!
+//! Workers always drain their sockets (a dedicated reader thread per
+//! lane feeds an in-memory reorder buffer), so a coordinator write can
+//! never block indefinitely. The coordinator only blocks reading the
+//! reply of the *oldest* outstanding delivery, whose worker is
+//! guaranteed to reach it (its inputs are all flushed and it processes
+//! in `wseq` order). Un-replied data deliveries are bounded by `window`
+//! per worker (stalls land in `FlowControlMetrics`); control frames are
+//! unbounded, as in the threaded engine.
+//!
+//! # Two spawn modes
+//!
+//! * [`ClusterEngine::run`] — workers are OS threads connected by real
+//!   `UnixStream::pair` sockets. Processor factories run on the calling
+//!   thread (they are not `Send`), instances move into worker threads.
+//!   The full wire protocol is exercised; only process isolation is
+//!   mocked. Integration tests use this mode (test binaries cannot
+//!   re-exec themselves).
+//! * [`ClusterEngine::run_spec`] — workers are genuine OS processes:
+//!   the coordinator re-execs the `samoa` binary with the hidden
+//!   `--cluster-worker` flag and a topology *spec string* (factories
+//!   cannot cross a process boundary, so workers rebuild the topology
+//!   from the spec registry in [`spec`]), over Unix-domain or TCP
+//!   loopback sockets. `samoa exp cluster` and the CI smoke leg use
+//!   this mode.
+//!
+//! Final worker state (accuracy, sync-round counters, split counts …)
+//! returns to the coordinator through [`Processor::report`] key/value
+//! frames — the cross-process replacement for `as_any` downcasting.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::common::cli::Args;
+use crate::topology::builder::Topology;
+use crate::topology::codec::{self, Reader};
+use crate::topology::processor::{Ctx, Processor};
+use crate::topology::stream::Route;
+use crate::topology::{Event, StreamId};
+use crate::{Context as _, Result};
+
+use super::metrics::{ClusterMetrics, EngineMetrics};
+
+// Frame kinds. Every frame is `[len: u32 LE][kind: u8][wseq: u64 LE]…`;
+// coordinator → worker kinds first, worker → coordinator kinds after.
+const K_DELIVER: u8 = 1;
+const K_SHUTDOWN: u8 = 2;
+const K_COLLECT: u8 = 3;
+const K_HALT: u8 = 4;
+const K_EMISSIONS: u8 = 5;
+const K_REPORT: u8 = 6;
+const K_DONE: u8 = 7;
+
+/// One pending delivery, exactly as in the local engine.
+type Delivery = (usize, usize, Event);
+
+/// Destination worker of instance `iid` (any processor): shards spread
+/// across workers so a parallel processor parallelizes across processes.
+#[inline]
+fn worker_of(iid: usize, n_workers: usize) -> usize {
+    iid % n_workers
+}
+
+// ------------------------------------------------------------ transport
+
+/// A duplex byte stream: Unix-domain (default, lowest latency) or TCP
+/// loopback (`--tcp`; the shape a multi-host deployment would use).
+enum Sock {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Sock {
+    fn try_clone(&self) -> std::io::Result<Sock> {
+        Ok(match self {
+            Sock::Unix(s) => Sock::Unix(s.try_clone()?),
+            Sock::Tcp(s) => Sock::Tcp(s.try_clone()?),
+        })
+    }
+
+    /// Close both directions (unblocks any peer read); errors ignored —
+    /// used on teardown paths where the socket may already be gone.
+    fn shutdown(&self) {
+        let _ = match self {
+            Sock::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+            Sock::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for Sock {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Sock::Unix(s) => s.read(buf),
+            Sock::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Sock {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Sock::Unix(s) => s.write(buf),
+            Sock::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Sock::Unix(s) => s.flush(),
+            Sock::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Write one length-prefixed frame.
+fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)
+}
+
+/// Read one length-prefixed frame into `buf` (resized to fit).
+fn read_frame<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<()> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    crate::ensure!(len > 0 && len <= codec::MAX_FRAME_BYTES, "cluster: bad frame length {len}");
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)?;
+    Ok(())
+}
+
+// ------------------------------------------------------------ worker side
+
+/// Frames received by a worker, keyed by `wseq`: the reorder buffer that
+/// merges the control and data lanes back into one deterministic order.
+#[derive(Default)]
+struct Inbox {
+    frames: BTreeMap<u64, Vec<u8>>,
+    /// A lane hit EOF or a read error: the coordinator hung up.
+    eof: bool,
+}
+
+type SharedInbox = Arc<(Mutex<Inbox>, Condvar)>;
+
+/// Per-lane reader: drains the socket unconditionally (the worker-side
+/// half of the deadlock-freedom argument) into the shared inbox.
+fn reader_loop(sock: Sock, inbox: SharedInbox) {
+    let mut r = BufReader::new(sock);
+    let mut buf = Vec::new();
+    loop {
+        let ok = read_frame(&mut r, &mut buf).is_ok() && buf.len() >= 9;
+        let (lock, cv) = &*inbox;
+        let mut g = lock.lock().unwrap();
+        if !ok {
+            g.eof = true;
+            cv.notify_all();
+            return;
+        }
+        let wseq = u64::from_le_bytes(buf[1..9].try_into().unwrap());
+        g.frames.insert(wseq, std::mem::take(&mut buf));
+        cv.notify_all();
+    }
+}
+
+/// One processor instance living on this worker.
+struct Cell {
+    pid: usize,
+    iid: usize,
+    node: Box<dyn Processor>,
+    processed: u64,
+    busy_ns: u64,
+}
+
+/// Worker main loop, shared by thread-mode and subprocess-mode workers:
+/// merge lanes into `wseq` order, execute deliveries, reply with
+/// emissions, report state on collect, exit on halt.
+fn serve(
+    ctrl: Sock,
+    data: Sock,
+    owned: Vec<(usize, usize, Box<dyn Processor>)>,
+    shape: Vec<usize>,
+    measure_busy: bool,
+) -> Result<()> {
+    let inbox: SharedInbox = Arc::new((Mutex::new(Inbox::default()), Condvar::new()));
+    let reply_sock = data.try_clone().context("cluster worker: clone data lane")?;
+    // Kept so teardown can close the lanes even though the reader threads
+    // own the primary handles — on an abnormal exit this unblocks both
+    // our readers and a coordinator still waiting for a reply.
+    let ctrl_shut = ctrl.try_clone().context("cluster worker: clone ctrl lane")?;
+    let data_shut = data.try_clone().context("cluster worker: clone data lane")?;
+    let readers = [
+        std::thread::spawn({
+            let inbox = Arc::clone(&inbox);
+            move || reader_loop(ctrl, inbox)
+        }),
+        std::thread::spawn({
+            let inbox = Arc::clone(&inbox);
+            move || reader_loop(data, inbox)
+        }),
+    ];
+    let mut out = BufWriter::new(reply_sock);
+
+    let mut cells: Vec<Cell> = owned
+        .into_iter()
+        .map(|(pid, iid, node)| Cell { pid, iid, node, processed: 0, busy_ns: 0 })
+        .collect();
+    let index: HashMap<(usize, usize), usize> =
+        cells.iter().enumerate().map(|(n, c)| ((c.pid, c.iid), n)).collect();
+
+    let result = (|| -> Result<()> {
+        let mut next: u64 = 0;
+        let mut dirty = false;
+        loop {
+            // Fetch frame `next`, flushing buffered replies before any
+            // blocking wait (never while holding the inbox lock: a flush
+            // may block on the socket and must not stall the readers).
+            let frame = loop {
+                {
+                    let mut g = inbox.0.lock().unwrap();
+                    if let Some(b) = g.frames.remove(&next) {
+                        break Some(b);
+                    }
+                    if g.eof {
+                        break None;
+                    }
+                }
+                if dirty {
+                    out.flush()?;
+                    dirty = false;
+                    continue;
+                }
+                let g = inbox.0.lock().unwrap();
+                if !g.frames.contains_key(&next) && !g.eof {
+                    drop(inbox.1.wait(g).unwrap());
+                }
+            };
+            // Coordinator hung up (normal after halt, or its run aborted).
+            let Some(frame) = frame else { return Ok(()) };
+            next += 1;
+
+            let mut r = Reader::new(&frame);
+            let kind = r.u8()?;
+            let wseq = r.u64()?;
+            match kind {
+                K_DELIVER | K_SHUTDOWN => {
+                    let pid = r.u16()? as usize;
+                    let iid = r.u16()? as usize;
+                    let Some(&n) = index.get(&(pid, iid)) else {
+                        crate::bail!("cluster worker: not my instance ({pid},{iid})");
+                    };
+                    let cell = &mut cells[n];
+                    let mut ctx = Ctx::new(iid, shape[pid]);
+                    if kind == K_DELIVER {
+                        let event = r.event()?;
+                        if measure_busy {
+                            let t0 = Instant::now();
+                            cell.node.process(event, &mut ctx);
+                            cell.busy_ns += t0.elapsed().as_nanos() as u64;
+                        } else {
+                            cell.node.process(event, &mut ctx);
+                        }
+                        cell.processed += 1;
+                    } else {
+                        cell.node.on_shutdown(&mut ctx);
+                    }
+                    let emissions = ctx.take();
+                    let mut b = Vec::with_capacity(16 + 24 * emissions.len());
+                    codec::put_u8(&mut b, K_EMISSIONS);
+                    codec::put_u64(&mut b, wseq);
+                    codec::put_u32(&mut b, emissions.len() as u32);
+                    for (s, k, e) in &emissions {
+                        codec::put_u32(&mut b, s.0 as u32);
+                        codec::put_u64(&mut b, *k);
+                        codec::encode_event(e, &mut b);
+                    }
+                    write_frame(&mut out, &b)?;
+                    dirty = true;
+                }
+                K_COLLECT => {
+                    for cell in &cells {
+                        let mut b = Vec::with_capacity(64);
+                        codec::put_u8(&mut b, K_REPORT);
+                        codec::put_u64(&mut b, wseq);
+                        codec::put_u16(&mut b, cell.pid as u16);
+                        codec::put_u16(&mut b, cell.iid as u16);
+                        codec::put_u64(&mut b, cell.node.mem_bytes() as u64);
+                        codec::put_u64(&mut b, cell.processed);
+                        codec::put_u64(&mut b, cell.busy_ns);
+                        let kv = cell.node.report();
+                        codec::put_u16(&mut b, kv.len() as u16);
+                        for (name, v) in kv {
+                            codec::put_u16(&mut b, name.len() as u16);
+                            b.extend_from_slice(name.as_bytes());
+                            codec::put_f64(&mut b, v);
+                        }
+                        write_frame(&mut out, &b)?;
+                    }
+                    let mut b = Vec::with_capacity(9);
+                    codec::put_u8(&mut b, K_DONE);
+                    codec::put_u64(&mut b, wseq);
+                    write_frame(&mut out, &b)?;
+                    out.flush()?;
+                    dirty = false;
+                }
+                K_HALT => {
+                    out.flush()?;
+                    return Ok(());
+                }
+                k => crate::bail!("cluster worker: unknown frame kind {k}"),
+            }
+        }
+    })();
+    // Teardown: close both lanes (no-op if the coordinator already did),
+    // then collect the readers — they exit on EOF.
+    ctrl_shut.shutdown();
+    data_shut.shutdown();
+    for h in readers {
+        let _ = h.join();
+    }
+    result
+}
+
+// -------------------------------------------------------- coordinator side
+
+/// Coordinator-side connection to one worker.
+struct Link {
+    ctrl: BufWriter<Sock>,
+    data: BufWriter<Sock>,
+    reply: BufReader<Sock>,
+    ctrl_dirty: bool,
+    data_dirty: bool,
+    /// Next sequence number to stamp on a frame to this worker.
+    wseq: u64,
+    /// Un-replied data-lane deliveries (the backpressure window).
+    inflight: usize,
+}
+
+impl Link {
+    /// Both lanes write on distinct sockets; replies ride the data
+    /// socket's reverse direction (the worker's only upstream writer).
+    fn new(ctrl: Sock, data: Sock) -> Result<Self> {
+        let reply = BufReader::new(data.try_clone().context("cluster: clone data lane")?);
+        Ok(Link {
+            ctrl: BufWriter::new(ctrl),
+            data: BufWriter::new(data),
+            reply,
+            ctrl_dirty: false,
+            data_dirty: false,
+            wseq: 0,
+            inflight: 0,
+        })
+    }
+
+    fn send(&mut self, body: &[u8], ctrl: bool, cm: &mut ClusterMetrics) -> Result<()> {
+        let t0 = Instant::now();
+        if ctrl {
+            write_frame(&mut self.ctrl, body)?;
+            self.ctrl_dirty = true;
+            cm.ctrl_frames += 1;
+        } else {
+            write_frame(&mut self.data, body)?;
+            self.data_dirty = true;
+            cm.data_frames += 1;
+        }
+        cm.tx_bytes += 4 + body.len() as u64;
+        cm.tx_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    fn flush(&mut self, cm: &mut ClusterMetrics) -> Result<()> {
+        if self.ctrl_dirty || self.data_dirty {
+            let t0 = Instant::now();
+            if self.ctrl_dirty {
+                self.ctrl.flush()?;
+                self.ctrl_dirty = false;
+            }
+            if self.data_dirty {
+                self.data.flush()?;
+                self.data_dirty = false;
+            }
+            cm.tx_ns += t0.elapsed().as_nanos() as u64;
+        }
+        Ok(())
+    }
+
+    fn read_reply(&mut self, buf: &mut Vec<u8>, cm: &mut ClusterMetrics) -> Result<()> {
+        let t0 = Instant::now();
+        read_frame(&mut self.reply, buf)?;
+        cm.rx_bytes += 4 + buf.len() as u64;
+        cm.reply_frames += 1;
+        cm.rx_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+}
+
+/// One un-replied delivery, in global send order.
+struct Pending {
+    worker: usize,
+    wseq: u64,
+    data: bool,
+}
+
+/// Final state of one processor instance, reported across the process
+/// boundary at collection time.
+#[derive(Clone, Debug)]
+pub struct InstanceReport {
+    pub pid: usize,
+    pub iid: usize,
+    /// `Processor::mem_bytes` at shutdown.
+    pub mem_bytes: u64,
+    /// `Processor::report` key/value pairs.
+    pub kv: Vec<(String, f64)>,
+}
+
+/// Result of a cluster run: engine metrics (identical quantities to the
+/// local engine, plus the socket-plane counters in `metrics.cluster`)
+/// and per-instance state reports.
+#[derive(Clone, Debug)]
+pub struct ClusterRun {
+    pub metrics: EngineMetrics,
+    pub reports: Vec<InstanceReport>,
+}
+
+impl ClusterRun {
+    /// Value of `name` reported by instance (`pid`, `iid`).
+    pub fn kv(&self, pid: usize, iid: usize, name: &str) -> Option<f64> {
+        self.reports
+            .iter()
+            .find(|r| r.pid == pid && r.iid == iid)
+            .and_then(|r| r.kv.iter().find(|(k, _)| k == name).map(|(_, v)| *v))
+    }
+
+    /// Sum of `name` across all instances that report it.
+    pub fn kv_sum(&self, name: &str) -> f64 {
+        self.reports
+            .iter()
+            .flat_map(|r| r.kv.iter())
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v)
+            .sum()
+    }
+}
+
+/// Coordinator drive state, shared by both spawn modes.
+struct Coordinator<'a> {
+    topology: &'a Topology,
+    links: Vec<Link>,
+    outstanding: VecDeque<Pending>,
+    rr: Vec<usize>,
+    queue: VecDeque<Delivery>,
+    delayed: VecDeque<(u64, Delivery)>,
+    metrics: EngineMetrics,
+    window: usize,
+    buf: Vec<u8>,
+}
+
+impl Coordinator<'_> {
+    /// Route one emission — byte-for-byte the local engine's routing
+    /// (groupings, rr cursors, broadcast fan-out, delayed buffering,
+    /// per-delivery `wire_bytes` metrics), which is what makes cluster
+    /// totals bit-identical to local totals.
+    fn route_emission(&mut self, stream: StreamId, key: u64, event: Event, now: u64) {
+        let topo = self.topology;
+        let def = &topo.streams[stream.0];
+        let dest = def.to.0;
+        let par = topo.processors[dest].parallelism;
+        let sm = &mut self.metrics.streams[stream.0];
+        let queue = &mut self.queue;
+        let delayed = &mut self.delayed;
+        let mut push = |d: Delivery, bytes: usize| {
+            sm.events += 1;
+            sm.bytes += bytes as u64;
+            if def.delay == 0 || now == u64::MAX {
+                queue.push_back(d);
+            } else {
+                delayed.push_back((now + def.delay as u64, d));
+            }
+        };
+        match def.grouping.route(key, par, &mut self.rr[stream.0]) {
+            Route::One(i) => {
+                let bytes = event.wire_bytes();
+                push((dest, i, event), bytes);
+            }
+            Route::All => {
+                let bytes = event.wire_bytes();
+                for i in 0..par - 1 {
+                    push((dest, i, event.clone()), bytes);
+                }
+                push((dest, par - 1, event), bytes);
+            }
+        }
+    }
+
+    /// Consume the reply of the *oldest* outstanding delivery and route
+    /// its emissions. Replies are consumed strictly in global send order,
+    /// so emissions append to the queue exactly where the local engine
+    /// would append them.
+    fn consume_one(&mut self, now: u64) -> Result<()> {
+        let pend = self.outstanding.pop_front().expect("consume_one with nothing outstanding");
+        // Everything this reply causally depends on was sent to the same
+        // worker with a smaller wseq; make sure none of it is still
+        // sitting in our write buffers.
+        let mut buf = std::mem::take(&mut self.buf);
+        self.links[pend.worker].flush(&mut self.metrics.cluster)?;
+        self.links[pend.worker].read_reply(&mut buf, &mut self.metrics.cluster)?;
+        {
+            let mut r = Reader::new(&buf);
+            let kind = r.u8()?;
+            crate::ensure!(kind == K_EMISSIONS, "cluster: expected emissions, got kind {kind}");
+            let wseq = r.u64()?;
+            crate::ensure!(
+                wseq == pend.wseq,
+                "cluster: reply out of order (got {wseq}, expected {})",
+                pend.wseq
+            );
+            let n = r.u32()?;
+            for _ in 0..n {
+                let s = StreamId(r.u32()? as usize);
+                let k = r.u64()?;
+                let e = r.event()?;
+                self.route_emission(s, k, e, now);
+            }
+        }
+        self.buf = buf;
+        if pend.data {
+            self.links[pend.worker].inflight -= 1;
+        }
+        Ok(())
+    }
+
+    /// Ship one delivery to its owning worker, blocking on the window
+    /// first if it is a data event.
+    fn ship(&mut self, (p, i, e): Delivery, now: u64) -> Result<()> {
+        let w = worker_of(i, self.links.len());
+        let ctrl = e.is_control();
+        if !ctrl {
+            // Bounded-buffer backpressure at the socket boundary: block
+            // until the oldest outstanding deliveries are acknowledged.
+            while self.links[w].inflight >= self.window {
+                self.metrics.flow.backpressure_stalls += 1;
+                let t0 = Instant::now();
+                self.consume_one(now)?;
+                self.metrics.flow.backpressure_stall_ns += t0.elapsed().as_nanos() as u64;
+            }
+        }
+        let link = &mut self.links[w];
+        let wseq = link.wseq;
+        link.wseq += 1;
+        let mut b = Vec::with_capacity(24 + e.wire_bytes());
+        codec::put_u8(&mut b, K_DELIVER);
+        codec::put_u64(&mut b, wseq);
+        codec::put_u16(&mut b, p as u16);
+        codec::put_u16(&mut b, i as u16);
+        codec::encode_event(&e, &mut b);
+        link.send(&b, ctrl, &mut self.metrics.cluster)?;
+        if !ctrl {
+            self.links[w].inflight += 1;
+        }
+        self.outstanding.push_back(Pending { worker: w, wseq, data: !ctrl });
+        Ok(())
+    }
+
+    /// Drain queue and outstanding replies to full quiescence — the
+    /// cross-process equivalent of the local engine's `drain`.
+    fn pump(&mut self, now: u64) -> Result<()> {
+        loop {
+            while let Some(d) = self.queue.pop_front() {
+                self.ship(d, now)?;
+            }
+            if self.outstanding.is_empty() {
+                return Ok(());
+            }
+            self.consume_one(now)?;
+        }
+    }
+
+    /// Release matured delayed deliveries (local-engine semantics).
+    fn release_delayed(&mut self, now: u64) {
+        while self.delayed.front().map_or(false, |(at, _)| *at <= now) {
+            self.queue.push_back(self.delayed.pop_front().unwrap().1);
+        }
+    }
+
+    /// Release everything still delayed (shutdown flush).
+    fn release_all_delayed(&mut self) {
+        while let Some((_, d)) = self.delayed.pop_front() {
+            self.queue.push_back(d);
+        }
+    }
+}
+
+// -------------------------------------------------------------- the engine
+
+/// Multi-process (or multi-thread-over-sockets) execution engine. See
+/// the module docs for the architecture and determinism contract.
+pub struct ClusterEngine {
+    /// Worker shards to spread processor instances across.
+    pub workers: usize,
+    /// Max un-acknowledged data deliveries per worker before the
+    /// coordinator blocks (bounded-buffer backpressure at the socket).
+    pub window: usize,
+    /// Measure per-event `process()` wall time worker-side (reported
+    /// back in the collect phase).
+    pub measure_busy: bool,
+    /// Subprocess mode only: TCP loopback instead of Unix sockets.
+    pub tcp: bool,
+}
+
+impl Default for ClusterEngine {
+    fn default() -> Self {
+        ClusterEngine { workers: 2, window: 128, measure_busy: false, tcp: false }
+    }
+}
+
+impl ClusterEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    pub fn with_window(mut self, n: usize) -> Self {
+        self.window = n.max(1);
+        self
+    }
+
+    pub fn over_tcp(mut self) -> Self {
+        self.tcp = true;
+        self
+    }
+
+    /// Thread-mode run: workers are OS threads behind real Unix-socket
+    /// pairs. Instances are constructed here (factories are not `Send`)
+    /// and move into their worker thread.
+    pub fn run(
+        &self,
+        topology: &Topology,
+        entry: StreamId,
+        source: impl Iterator<Item = Event>,
+    ) -> Result<ClusterRun> {
+        let n_workers = self.workers.max(1);
+        let shape: Vec<usize> = topology.processors.iter().map(|p| p.parallelism).collect();
+        let mut per_worker: Vec<Vec<(usize, usize, Box<dyn Processor>)>> =
+            (0..n_workers).map(|_| Vec::new()).collect();
+        for (p, def) in topology.processors.iter().enumerate() {
+            for i in 0..def.parallelism {
+                per_worker[worker_of(i, n_workers)].push((p, i, (def.factory)(i)));
+            }
+        }
+        let mut links = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for owned in per_worker {
+            let (c0, c1) = UnixStream::pair().context("cluster: socketpair")?;
+            let (d0, d1) = UnixStream::pair().context("cluster: socketpair")?;
+            let shape2 = shape.clone();
+            let measure = self.measure_busy;
+            handles.push(std::thread::spawn(move || {
+                serve(Sock::Unix(c1), Sock::Unix(d1), owned, shape2, measure)
+            }));
+            links.push(Link::new(Sock::Unix(c0), Sock::Unix(d0))?);
+        }
+        // drive() owns the links and drops them on return, EOF-ing the
+        // worker reader threads if anything aborted early.
+        let result = self.drive(topology, entry, source, links);
+        for h in handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => crate::bail!("cluster: worker thread panicked"),
+            }
+        }
+        let (metrics, reports) = result?;
+        Ok(ClusterRun { metrics, reports })
+    }
+
+    /// Subprocess-mode run: spawn `workers` copies of the `samoa` binary
+    /// (hidden `--cluster-worker` flag), each rebuilding the topology
+    /// from `spec` (see [`spec`]) and serving its instance shard over
+    /// Unix-domain (default) or TCP loopback sockets.
+    pub fn run_spec(
+        &self,
+        spec_str: &str,
+        source: impl Iterator<Item = Event>,
+    ) -> Result<ClusterRun> {
+        let (topology, entry) = spec::build(spec_str)?;
+        let n_workers = self.workers.max(1);
+        let exe = std::env::current_exe().context("cluster: locate samoa binary")?;
+
+        enum Listener {
+            Unix(UnixListener, std::path::PathBuf),
+            Tcp(TcpListener),
+        }
+        let (listener, addr) = if self.tcp {
+            let l = TcpListener::bind("127.0.0.1:0").context("cluster: bind tcp")?;
+            let addr = format!("tcp:{}", l.local_addr()?);
+            (Listener::Tcp(l), addr)
+        } else {
+            // pid + per-process counter keep paths unique across
+            // concurrent coordinators and repeated runs in one process
+            let salt = {
+                use std::sync::atomic::{AtomicU64, Ordering};
+                static SALT: AtomicU64 = AtomicU64::new(0);
+                SALT.fetch_add(1, Ordering::Relaxed)
+            };
+            let path = std::env::temp_dir()
+                .join(format!("samoa-cluster-{}-{salt}.sock", std::process::id()));
+            let _ = std::fs::remove_file(&path);
+            let l = UnixListener::bind(&path)
+                .with_context(|| format!("cluster: bind {}", path.display()))?;
+            (Listener::Unix(l, path.clone()), format!("unix:{}", path.display()))
+        };
+
+        let mut children = Vec::with_capacity(n_workers);
+        for k in 0..n_workers {
+            let mut cmd = std::process::Command::new(&exe);
+            cmd.arg("--cluster-worker")
+                .arg(&addr)
+                .arg("--cluster-spec")
+                .arg(spec_str)
+                .arg("--cluster-index")
+                .arg(k.to_string())
+                .arg("--cluster-workers")
+                .arg(n_workers.to_string());
+            if self.measure_busy {
+                cmd.arg("--cluster-measure");
+            }
+            children.push(cmd.spawn().context("cluster: spawn worker process")?);
+        }
+
+        // Accept 2 connections per worker; each starts with a 2-byte
+        // handshake [worker index, lane (0 = ctrl, 1 = data)]. Non-blocking
+        // accept with a deadline so a worker that dies on startup fails the
+        // run instead of hanging it.
+        let accept = |deadline: Instant, children: &mut [std::process::Child]| -> Result<Sock> {
+            loop {
+                let got = match &listener {
+                    Listener::Unix(l, _) => {
+                        l.set_nonblocking(true)?;
+                        l.accept().map(|(s, _)| Sock::Unix(s))
+                    }
+                    Listener::Tcp(l) => {
+                        l.set_nonblocking(true)?;
+                        l.accept().map(|(s, _)| Sock::Tcp(s))
+                    }
+                };
+                match got {
+                    Ok(s) => return Ok(s),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        for c in children.iter_mut() {
+                            if let Ok(Some(status)) = c.try_wait() {
+                                crate::bail!("cluster: worker exited during startup: {status}");
+                            }
+                        }
+                        if Instant::now() > deadline {
+                            crate::bail!("cluster: timed out waiting for workers to connect");
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        };
+
+        let mut ctrl: Vec<Option<Sock>> = (0..n_workers).map(|_| None).collect();
+        let mut data: Vec<Option<Sock>> = (0..n_workers).map(|_| None).collect();
+        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        let setup = (|| -> Result<()> {
+            for _ in 0..2 * n_workers {
+                let mut s = accept(deadline, &mut children)?;
+                let mut hs = [0u8; 2];
+                // the sock inherited non-blocking from the listener on some
+                // platforms; force blocking for the stream itself
+                match &s {
+                    Sock::Unix(u) => u.set_nonblocking(false)?,
+                    Sock::Tcp(t) => t.set_nonblocking(false)?,
+                }
+                s.read_exact(&mut hs)?;
+                let (idx, lane) = (hs[0] as usize, hs[1]);
+                crate::ensure!(idx < n_workers, "cluster: handshake from unknown worker {idx}");
+                let slot = if lane == 0 { &mut ctrl[idx] } else { &mut data[idx] };
+                crate::ensure!(slot.is_none(), "cluster: duplicate lane {lane} from {idx}");
+                *slot = Some(s);
+            }
+            Ok(())
+        })();
+        if let Listener::Unix(_, path) = &listener {
+            let _ = std::fs::remove_file(path);
+        }
+
+        let result = setup.and_then(|()| {
+            let mut links = Vec::with_capacity(n_workers);
+            for (c, d) in ctrl.into_iter().zip(data) {
+                links.push(Link::new(c.unwrap(), d.unwrap())?);
+            }
+            self.drive(&topology, entry, source, links)
+        });
+        for mut c in children {
+            if result.is_err() {
+                let _ = c.kill();
+            }
+            let _ = c.wait();
+        }
+        let (metrics, reports) = result?;
+        Ok(ClusterRun { metrics, reports })
+    }
+
+    /// The coordinator loop shared by both modes: inject source events at
+    /// quiescence barriers, pump the cross-process FIFO, stage shutdown,
+    /// collect reports, halt workers.
+    fn drive(
+        &self,
+        topology: &Topology,
+        entry: StreamId,
+        source: impl Iterator<Item = Event>,
+        links: Vec<Link>,
+    ) -> Result<(EngineMetrics, Vec<InstanceReport>)> {
+        let shape: Vec<usize> = topology.processors.iter().map(|p| p.parallelism).collect();
+        let n_workers = links.len();
+        let mut metrics = EngineMetrics::new(topology.streams.len(), &shape);
+        metrics.cluster.workers = n_workers as u64;
+        let mut co = Coordinator {
+            topology,
+            links,
+            outstanding: VecDeque::new(),
+            rr: vec![0; topology.streams.len()],
+            queue: VecDeque::new(),
+            delayed: VecDeque::new(),
+            metrics,
+            window: self.window.max(1),
+            buf: Vec::new(),
+        };
+        let started = Instant::now();
+
+        for event in source {
+            co.metrics.source_instances += 1;
+            let now = co.metrics.source_instances;
+            co.release_delayed(now);
+            co.route_emission(entry, 0, event, now);
+            co.pump(now)?;
+        }
+
+        // Flush delayed, then staged deterministic shutdown: per
+        // processor in pid order, per instance, on_shutdown over the
+        // control lane + drain to cross-process quiescence in between.
+        let fin = u64::MAX;
+        co.release_all_delayed();
+        co.pump(fin)?;
+        for (p, &par) in shape.iter().enumerate() {
+            for i in 0..par {
+                let w = worker_of(i, n_workers);
+                let link = &mut co.links[w];
+                let wseq = link.wseq;
+                link.wseq += 1;
+                let mut b = Vec::with_capacity(16);
+                codec::put_u8(&mut b, K_SHUTDOWN);
+                codec::put_u64(&mut b, wseq);
+                codec::put_u16(&mut b, p as u16);
+                codec::put_u16(&mut b, i as u16);
+                link.send(&b, true, &mut co.metrics.cluster)?;
+                co.outstanding.push_back(Pending { worker: w, wseq, data: false });
+                co.release_all_delayed();
+                co.pump(fin)?;
+            }
+        }
+
+        // Collect per-instance reports, then halt, worker by worker.
+        let mut reports = Vec::new();
+        let mut buf = Vec::new();
+        for w in 0..n_workers {
+            let link = &mut co.links[w];
+            let wseq = link.wseq;
+            link.wseq += 1;
+            let mut b = Vec::with_capacity(9);
+            codec::put_u8(&mut b, K_COLLECT);
+            codec::put_u64(&mut b, wseq);
+            link.send(&b, true, &mut co.metrics.cluster)?;
+            link.flush(&mut co.metrics.cluster)?;
+            loop {
+                co.links[w].read_reply(&mut buf, &mut co.metrics.cluster)?;
+                let mut r = Reader::new(&buf);
+                match r.u8()? {
+                    K_REPORT => {
+                        let _wseq = r.u64()?;
+                        let pid = r.u16()? as usize;
+                        let iid = r.u16()? as usize;
+                        let mem_bytes = r.u64()?;
+                        let processed = r.u64()?;
+                        let busy_ns = r.u64()?;
+                        let n_kv = r.u16()?;
+                        let mut kv = Vec::with_capacity(n_kv as usize);
+                        for _ in 0..n_kv {
+                            let ln = r.u16()? as usize;
+                            let name = String::from_utf8_lossy(r.bytes(ln)?).into_owned();
+                            kv.push((name, r.f64()?));
+                        }
+                        crate::ensure!(
+                            pid < shape.len() && iid < shape[pid],
+                            "cluster: report for unknown instance ({pid},{iid})"
+                        );
+                        co.metrics.per_instance[pid][iid].events_processed = processed;
+                        co.metrics.per_instance[pid][iid].busy_ns = busy_ns;
+                        reports.push(InstanceReport { pid, iid, mem_bytes, kv });
+                    }
+                    K_DONE => break,
+                    k => crate::bail!("cluster: unexpected report frame kind {k}"),
+                }
+            }
+            let link = &mut co.links[w];
+            let wseq = link.wseq;
+            link.wseq += 1;
+            let mut b = Vec::with_capacity(9);
+            codec::put_u8(&mut b, K_HALT);
+            codec::put_u64(&mut b, wseq);
+            link.send(&b, true, &mut co.metrics.cluster)?;
+            link.flush(&mut co.metrics.cluster)?;
+        }
+
+        co.metrics.wall_ns = started.elapsed().as_nanos() as u64;
+        reports.sort_by_key(|r| (r.pid, r.iid));
+        Ok((co.metrics, reports))
+    }
+}
+
+/// Entry point of a `--cluster-worker` subprocess (dispatched from
+/// `main.rs` before normal command parsing): connect back to the
+/// coordinator, rebuild the topology from the spec, serve our shard.
+pub fn worker_main(args: &Args) -> Result<()> {
+    let addr =
+        args.get("cluster-worker").ok_or_else(|| crate::anyhow!("missing --cluster-worker"))?;
+    let spec_str =
+        args.get("cluster-spec").ok_or_else(|| crate::anyhow!("missing --cluster-spec"))?;
+    let index = args.usize("cluster-index", 0);
+    let n_workers = args.usize("cluster-workers", 1).max(1);
+    let measure = args.flag("cluster-measure");
+
+    let connect = |lane: u8| -> Result<Sock> {
+        let mut s = if let Some(p) = addr.strip_prefix("unix:") {
+            Sock::Unix(UnixStream::connect(p).with_context(|| format!("connect {p}"))?)
+        } else if let Some(a) = addr.strip_prefix("tcp:") {
+            Sock::Tcp(TcpStream::connect(a).with_context(|| format!("connect {a}"))?)
+        } else {
+            crate::bail!("cluster worker: bad address {addr}");
+        };
+        s.write_all(&[index as u8, lane])?;
+        s.flush()?;
+        Ok(s)
+    };
+    let ctrl = connect(0)?;
+    let data = connect(1)?;
+
+    let (topology, _entry) = spec::build(spec_str)?;
+    let shape: Vec<usize> = topology.processors.iter().map(|p| p.parallelism).collect();
+    let mut owned = Vec::new();
+    for (p, def) in topology.processors.iter().enumerate() {
+        for i in 0..def.parallelism {
+            if worker_of(i, n_workers) == index {
+                owned.push((p, i, (def.factory)(i)));
+            }
+        }
+    }
+    serve(ctrl, data, owned, shape, measure)
+}
+
+pub mod spec {
+    //! Topology spec registry for subprocess mode: worker processes
+    //! cannot receive processor factories (closures don't cross `exec`),
+    //! so coordinator and workers independently rebuild the same topology
+    //! from a deterministic spec string `name:key=value:...`. Evaluator
+    //! state stays worker-side and returns via [`Processor::report`].
+
+    use super::*;
+    use crate::topology::{Grouping, TopologyBuilder};
+
+    /// A sink that counts deliveries and emits nothing — the null
+    /// round-trip workload of the `samoa exp cluster` cost sweep.
+    struct NullSink {
+        seen: u64,
+    }
+
+    impl Processor for NullSink {
+        fn process(&mut self, _event: Event, _ctx: &mut Ctx) {
+            self.seen += 1;
+        }
+
+        fn name(&self) -> &'static str {
+            "null-sink"
+        }
+
+        fn report(&self) -> Vec<(&'static str, f64)> {
+            vec![("seen", self.seen as f64)]
+        }
+    }
+
+    fn param(spec: &str, key: &str) -> Option<String> {
+        spec.split(':').skip(1).find_map(|kv| {
+            kv.split_once('=').and_then(|(k, v)| (k == key).then(|| v.to_string()))
+        })
+    }
+
+    fn usize_param(spec: &str, key: &str, default: usize) -> usize {
+        param(spec, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn u64_param(spec: &str, key: &str, default: u64) -> u64 {
+        param(spec, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Build the topology named by `spec`. Must be bit-deterministic
+    /// given the spec string: the coordinator uses it for routing shape
+    /// and every worker rebuilds it to own its instance shard.
+    pub fn build(spec: &str) -> Result<(Topology, StreamId)> {
+        let name = spec.split(':').next().unwrap_or("");
+        match name {
+            // null:p=K — entry --shuffle--> sink×K, no emissions.
+            "null" => {
+                let p = usize_param(spec, "p", 2);
+                let mut b = TopologyBuilder::new("cluster-null");
+                let sink = b.add_processor("sink", p, |_| Box::new(NullSink { seen: 0 }));
+                let entry = b.stream("entry", None, sink, Grouping::Shuffle);
+                Ok((b.build(), entry))
+            }
+            // vht:stream=S:p=K:seed=N — the paper's VHT classifier over a
+            // dataset twin; accuracy returns via the evaluator's report.
+            "vht" => {
+                let stream = param(spec, "stream").unwrap_or_else(|| "elec".to_string());
+                let p = usize_param(spec, "p", 2);
+                let seed = u64_param(spec, "seed", 42);
+                let schema = crate::experiments::dataset_stream(&stream, seed).schema().clone();
+                let config = crate::classifiers::vht::VhtConfig {
+                    parallelism: p,
+                    ..Default::default()
+                };
+                let n_classes = schema.n_classes();
+                let (topo, handles) =
+                    crate::classifiers::vht::build_topology(&schema, &config, move |_| {
+                        let sink =
+                            crate::evaluation::prequential::EvalSink::new(n_classes, 1.0, u64::MAX);
+                        Box::new(crate::evaluation::prequential::EvaluatorProcessor { sink })
+                    });
+                Ok((topo, handles.entry))
+            }
+            // sync:stream=S:p=K:interval=I:seed=N — pipeline shards with
+            // exact StatsSync rounds feeding a Hoeffding tree.
+            "sync" => {
+                let stream = param(spec, "stream").unwrap_or_else(|| "elec".to_string());
+                let p = usize_param(spec, "p", 4);
+                let interval = u64_param(spec, "interval", 64);
+                let seed = u64_param(spec, "seed", 42);
+                let schema = crate::experiments::dataset_stream(&stream, seed).schema().clone();
+                let n_classes = schema.n_classes();
+                let (topo, handles) = crate::preprocess::processor::build_prequential_topology_head(
+                    &schema,
+                    p,
+                    Some(crate::preprocess::SyncPolicy::Count(interval)),
+                    |_| {
+                        crate::preprocess::Pipeline::new()
+                            .then(crate::preprocess::StandardScaler::new())
+                    },
+                    crate::preprocess::processor::LearnerHead::Classifier(Box::new(
+                        |s: &crate::core::Schema| -> Box<dyn crate::core::model::Classifier> {
+                            Box::new(crate::classifiers::hoeffding_tree::HoeffdingTree::new(
+                                s.clone(),
+                                crate::classifiers::hoeffding_tree::HTConfig::default(),
+                            ))
+                        },
+                    )),
+                    move |_| {
+                        let sink =
+                            crate::evaluation::prequential::EvalSink::new(n_classes, 1.0, u64::MAX);
+                        Box::new(crate::evaluation::prequential::EvaluatorProcessor { sink })
+                    },
+                );
+                Ok((topo, handles.entry))
+            }
+            other => crate::bail!("cluster spec: unknown topology '{other}' in '{spec}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::instance::{Instance, Label};
+    use crate::topology::{Grouping, TopologyBuilder};
+
+    struct Forwarder {
+        out: Option<StreamId>,
+        seen: u64,
+    }
+
+    impl Processor for Forwarder {
+        fn process(&mut self, e: Event, ctx: &mut Ctx) {
+            self.seen += 1;
+            if let (Some(s), Event::Instance { id, inst }) = (self.out, e) {
+                ctx.emit(s, id, Event::Instance { id, inst });
+            }
+        }
+
+        fn report(&self) -> Vec<(&'static str, f64)> {
+            vec![("seen", self.seen as f64)]
+        }
+    }
+
+    fn inst_event(id: u64) -> Event {
+        Event::Instance { id, inst: Instance::dense(vec![id as f32], Label::None) }
+    }
+
+    fn two_stage() -> (Topology, StreamId) {
+        let mut b = TopologyBuilder::new("t");
+        let a = b.add_processor("a", 1, |_| {
+            Box::new(Forwarder { out: Some(StreamId(1)), seen: 0 })
+        });
+        let c = b.add_processor("c", 3, |_| Box::new(Forwarder { out: None, seen: 0 }));
+        let entry = b.stream("src", None, a, Grouping::Shuffle);
+        b.stream("a->c", Some(a), c, Grouping::Key);
+        (b.build(), entry)
+    }
+
+    #[test]
+    fn pipeline_counts_match_local() {
+        let (topo, entry) = two_stage();
+        let run = ClusterEngine::new()
+            .with_workers(2)
+            .run(&topo, entry, (0..100).map(inst_event))
+            .expect("cluster run");
+        assert_eq!(run.metrics.source_instances, 100);
+        assert_eq!(run.metrics.streams[0].events, 100);
+        assert_eq!(run.metrics.streams[1].events, 100);
+        assert_eq!(run.kv(0, 0, "seen"), Some(100.0));
+        let downstream: f64 = (0..3).map(|i| run.kv(1, i, "seen").unwrap()).sum();
+        assert_eq!(downstream, 100.0);
+        // every delivery crossed a socket and was acknowledged
+        assert_eq!(run.metrics.cluster.workers, 2);
+        assert!(run.metrics.cluster.data_frames >= 200);
+        assert!(run.metrics.cluster.tx_bytes > 0 && run.metrics.cluster.rx_bytes > 0);
+    }
+
+    #[test]
+    fn stream_totals_bit_identical_to_local() {
+        let (topo, entry) = two_stage();
+        let local = super::super::LocalEngine::new().run(
+            &topo,
+            entry,
+            (0..257).map(inst_event),
+            |_| {},
+        );
+        let (topo2, entry2) = two_stage();
+        for workers in [1, 2, 4] {
+            let run = ClusterEngine::new()
+                .with_workers(workers)
+                .run(&topo2, entry2, (0..257).map(inst_event))
+                .expect("cluster run");
+            for (s, (a, b)) in local.streams.iter().zip(&run.metrics.streams).enumerate() {
+                assert_eq!(a.events, b.events, "stream {s} events at workers={workers}");
+                assert_eq!(a.bytes, b.bytes, "stream {s} bytes at workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_window_applies_backpressure_and_stays_exact() {
+        let (topo, entry) = two_stage();
+        let run = ClusterEngine::new()
+            .with_workers(2)
+            .with_window(1)
+            .run(&topo, entry, (0..64).map(inst_event))
+            .expect("cluster run");
+        assert_eq!(run.metrics.streams[1].events, 64);
+        assert!(run.metrics.flow.backpressure_stalls > 0, "window=1 must stall");
+    }
+}

@@ -44,6 +44,47 @@ pub struct FlowControlMetrics {
     pub arena_allocs: u64,
 }
 
+/// Socket-plane counters of the cluster engine (zero elsewhere). Unlike
+/// [`StreamMetrics::bytes`] — which prices logical deliveries via
+/// `Event::wire_bytes` identically on every engine — these count the
+/// bytes and frames that actually crossed sockets, including protocol
+/// framing and the coordinator↔worker round trips. The difference
+/// between the two is exactly what the `samoa exp cluster` sweep feeds
+/// back into `SimCostModel` validation.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    /// Worker processes/threads the run sharded instances across.
+    pub workers: u64,
+    /// Data-lane `Deliver` frames sent coordinator → workers.
+    pub data_frames: u64,
+    /// Control-lane frames sent coordinator → workers (control events,
+    /// shutdown, collection — the priority lane).
+    pub ctrl_frames: u64,
+    /// `Emissions`/`Report` frames received back from workers.
+    pub reply_frames: u64,
+    /// Encoded bytes written to worker sockets (both lanes, framing
+    /// included).
+    pub tx_bytes: u64,
+    /// Encoded bytes read back from worker sockets.
+    pub rx_bytes: u64,
+    /// Wall time the coordinator spent writing/flushing sockets.
+    pub tx_ns: u64,
+    /// Wall time the coordinator spent blocked reading replies.
+    pub rx_ns: u64,
+}
+
+impl ClusterMetrics {
+    /// Total frames that crossed the wire in either direction.
+    pub fn total_frames(&self) -> u64 {
+        self.data_frames + self.ctrl_frames + self.reply_frames
+    }
+
+    /// Total socket bytes in either direction.
+    pub fn total_bytes(&self) -> u64 {
+        self.tx_bytes + self.rx_bytes
+    }
+}
+
 /// Aggregated engine metrics, returned by every engine run.
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
@@ -57,6 +98,8 @@ pub struct EngineMetrics {
     pub wall_ns: u64,
     /// Flow-control counters (threaded engine; default-zero elsewhere).
     pub flow: FlowControlMetrics,
+    /// Socket-plane counters (cluster engine; default-zero elsewhere).
+    pub cluster: ClusterMetrics,
 }
 
 impl EngineMetrics {
@@ -70,6 +113,7 @@ impl EngineMetrics {
             source_instances: 0,
             wall_ns: 0,
             flow: FlowControlMetrics::default(),
+            cluster: ClusterMetrics::default(),
         }
     }
 

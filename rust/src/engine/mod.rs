@@ -1,6 +1,6 @@
 //! Execution engines — the DSPE-adapter layer of the paper (§3).
 //!
-//! Three engines run the same [`crate::topology::Topology`]:
+//! Four engines run the same [`crate::topology::Topology`]:
 //!
 //! * [`local`] — sequential, deterministic, in-process; the analogue of
 //!   SAMOA's local execution engine ("VHT local" in the paper). Supports
@@ -9,10 +9,35 @@
 //! * [`threaded`] — one OS thread per processor instance, bounded
 //!   channels, real backpressure; the analogue of the Storm/Samza
 //!   adapters.
+//! * [`cluster`] — shards processor instances across OS *processes*
+//!   connected by sockets, serializing every delivery through the
+//!   [`crate::topology::codec`] wire format; the analogue of a real
+//!   multi-node DSPE deployment.
 //! * [`simtime`] — runs locally while metering per-instance compute cost
 //!   and per-stream message volume, then evaluates an analytic p-worker
 //!   schedule. This is how scaling figures are produced on this 1-core
 //!   testbed (DESIGN.md §3, "substitutions").
+//!
+//! # Choosing an engine
+//!
+//! | engine | parallelism | determinism | what it measures |
+//! |---|---|---|---|
+//! | [`LocalEngine`] | none (sequential) | bit-exact, the golden reference | logical events/bytes per stream |
+//! | [`ThreadedEngine`] | shared-memory threads | per-edge FIFO; totals match local | real wall time, backpressure, steals |
+//! | [`ClusterEngine`] | OS processes over sockets | global order matches local (coordinator-sequenced) | real serialization + socket bytes/time |
+//! | [`SimTimeEngine`] | analytic p-worker schedule | inherits local | predicted makespan from a cost model |
+//!
+//! Rules of thumb: start on [`LocalEngine`] (every test pins against
+//! it); use [`ThreadedEngine`] to exercise concurrency and flow control
+//! on one machine; use [`ClusterEngine`] when the question involves the
+//! *wire* — serialization cost, socket throughput, per-process memory
+//! isolation — or to validate [`SimCostModel`]'s `c_msg_ns`/`c_byte_ns`
+//! against measured socket time (`samoa exp cluster`); use
+//! [`SimTimeEngine`] to extrapolate to worker counts the testbed does
+//! not have. The cluster engine routes every event through the
+//! coordinator, so it is a *fidelity* engine, not a speedup engine: its
+//! value is that totals stay bit-identical to local while the bytes and
+//! nanoseconds in [`metrics::ClusterMetrics`] are real.
 //!
 //! # Data-plane contract (all three engines)
 //!
@@ -81,8 +106,10 @@
 pub mod metrics;
 pub mod local;
 pub mod threaded;
+pub mod cluster;
 pub mod simtime;
 
+pub use cluster::{ClusterEngine, ClusterRun, InstanceReport};
 pub use local::LocalEngine;
 pub use metrics::EngineMetrics;
 pub use simtime::{SimCostModel, SimTimeEngine};

@@ -71,7 +71,7 @@ use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::topology::builder::Topology;
@@ -280,6 +280,46 @@ impl ThreadedEngine {
 }
 
 /// Routing state shared by all worker threads.
+/// Work-arrival signal for the stealing scheduler: a generation counter
+/// bumped (under the mutex) on every mailbox enqueue, with a condvar an
+/// idle worker waits on. Replaces the old fixed 100µs idle sleep — an
+/// idle worker now wakes the moment work arrives instead of busy-polling,
+/// and a short timeout remains only as a liveness backstop (a wake-up is
+/// never *required* for correctness, only for latency). Workers capture
+/// the generation *before* scanning for work, so an enqueue racing the
+/// scan makes the subsequent wait return immediately — no lost wakeups.
+struct Wake {
+    generation: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Wake {
+    fn new() -> Self {
+        Wake { generation: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn notify(&self) {
+        *self.generation.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    fn current(&self) -> u64 {
+        *self.generation.lock().unwrap()
+    }
+
+    /// Block until the generation moves past `seen` or `timeout` expires.
+    fn wait_past(&self, seen: u64, timeout: Duration) {
+        let mut g = self.generation.lock().unwrap();
+        while *g == seen {
+            let (g2, res) = self.cv.wait_timeout(g, timeout).unwrap();
+            g = g2;
+            if res.timed_out() {
+                return;
+            }
+        }
+    }
+}
+
 struct Router {
     topology_streams: Vec<(usize, crate::topology::Grouping)>, // (dest processor, grouping)
     mailboxes: Vec<Vec<Mailbox>>,                              // [processor][instance]
@@ -295,6 +335,9 @@ struct Router {
     /// parks the batch instead (a worker must never block).
     blocking: bool,
     deep_copy_broadcast: bool,
+    /// Stealing-mode idle-worker wakeup (unused in pinned mode, where
+    /// blocking channel receives provide the wakeups).
+    wake: Wake,
 }
 
 impl Router {
@@ -339,6 +382,8 @@ impl Router {
             if self.mailboxes[dest][i].ctrl.send(CtrlMsg::Event(event)).is_err() {
                 // receiver gone (impossible pre-Halt; keep flow balanced)
                 self.flow.processed.fetch_add(1, Ordering::SeqCst);
+            } else if !self.blocking {
+                self.wake.notify();
             }
         } else {
             let eb = &mut out.bufs[dest][i];
@@ -362,6 +407,9 @@ impl Router {
             Ok(()) => {
                 bump(mb);
                 self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                if !self.blocking {
+                    self.wake.notify();
+                }
                 None
             }
             Err(TrySendErr::Full(batch)) => {
@@ -707,6 +755,7 @@ impl ThreadedEngine {
             adaptive: self.adaptive_batch,
             blocking: self.workers.is_none(),
             deep_copy_broadcast: self.deep_copy_broadcast,
+            wake: Wake::new(),
         });
 
         // Spawn execution: pinned threads or a stealing worker pool.
@@ -829,6 +878,10 @@ impl ThreadedEngine {
                         .spawn(move || {
                             let n_workers = n_workers.max(1);
                             loop {
+                                // Capture the wake generation BEFORE the
+                                // scan: an enqueue racing the scan bumps it
+                                // and the wait below returns immediately.
+                                let wake_gen = router.wake.current();
                                 let mut progress = false;
                                 for k in 0..n_tasks {
                                     let idx = (w + k) % n_tasks;
@@ -842,6 +895,9 @@ impl ThreadedEngine {
                                     }
                                     if t.halted {
                                         halted.fetch_add(1, Ordering::SeqCst);
+                                        // crisp exit for workers idling in
+                                        // the wait below
+                                        router.wake.notify();
                                     }
                                     progress |= did;
                                 }
@@ -849,7 +905,10 @@ impl ThreadedEngine {
                                     break;
                                 }
                                 if !progress {
-                                    std::thread::sleep(Duration::from_micros(100));
+                                    // Sleep until work arrives (send-side
+                                    // notify) instead of busy-polling; the
+                                    // timeout is a liveness backstop only.
+                                    router.wake.wait_past(wake_gen, Duration::from_millis(1));
                                 }
                             }
                         })
@@ -919,6 +978,7 @@ impl ThreadedEngine {
                 if mb.ctrl.send(CtrlMsg::Event(Event::Shutdown)).is_err() {
                     router.flow.processed.fetch_add(1, Ordering::SeqCst);
                 }
+                router.wake.notify();
             }
             quiesce();
         }
@@ -927,6 +987,7 @@ impl ThreadedEngine {
         for row in router.mailboxes.iter() {
             for mb in row.iter() {
                 let _ = mb.ctrl.send(CtrlMsg::Halt);
+                router.wake.notify();
             }
         }
         for h in handles {

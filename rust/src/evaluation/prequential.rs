@@ -254,6 +254,23 @@ impl Processor for EvaluatorProcessor {
     fn name(&self) -> &'static str {
         "evaluator"
     }
+
+    /// Final prequential measures, readable across process boundaries
+    /// (the cluster engine collects these from worker processes where
+    /// the `Arc<EvalSink>` handle is unreachable).
+    fn report(&self) -> Vec<(&'static str, f64)> {
+        let c = self.sink.classification.lock().unwrap();
+        let r = self.sink.regression.lock().unwrap();
+        vec![
+            ("n", c.n as f64),
+            ("correct", c.correct as f64),
+            ("accuracy", c.accuracy()),
+            ("kappa", c.kappa()),
+            ("reg_n", r.n as f64),
+            ("mae", r.mae()),
+            ("rmse", r.rmse()),
+        ]
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,201 @@
+//! `samoa exp cluster` — the cluster-engine wire-cost study: run real
+//! topologies across worker processes (or threads with `--threads`) and
+//! measure what the sockets actually charge per frame and per byte,
+//! then hold that against the per-message/per-byte prices
+//! [`SimCostModel`](crate::engine::simtime::SimCostModel) assumes.
+//!
+//! Two parts:
+//!
+//! 1. **Wire-cost sweep** — the `null` spec topology (entry → counting
+//!    sinks, no emissions) over a grid of payload sizes. Each run yields
+//!    one sample `(frames, socket bytes, coordinator wire ns)`; a
+//!    least-squares fit of `ns ≈ c_msg·frames + c_byte·bytes` recovers
+//!    the measured per-frame and per-byte costs, printed next to the
+//!    cost model's defaults.
+//! 2. **Workload rows** — the VHT and StatsSync spec topologies over a
+//!    dataset twin, reporting throughput, socket traffic, backpressure
+//!    stalls and worker-side accuracy (returned over the wire via
+//!    `Processor::report`, exercising the collect phase end-to-end).
+//!
+//! Caveat printed with the fit: `SimCostModel` prices *logical
+//! deliveries* on an idealized DSPE, while this sweep measures the
+//! coordinator's socket time (framing included, both directions), so
+//! the comparison is a sanity band — same order of magnitude — not a
+//! calibration identity.
+//!
+//! Knobs: `--n` instances (default 20000), `--workers` (default 2),
+//! `--window` (default 128), `--stream` twin for the workload rows
+//! (default elec), `--tcp` loopback TCP instead of Unix sockets,
+//! `--threads` worker threads instead of processes, `--smoke` tiny
+//! sweep for CI.
+
+use crate::common::cli::Args;
+use crate::core::instance::{Instance, Label};
+use crate::engine::cluster::{spec, ClusterEngine, ClusterRun};
+use crate::engine::simtime::SimCostModel;
+use crate::streams::StreamSource;
+use crate::topology::Event;
+
+use super::print_table;
+
+/// Run `spec_str`: subprocess mode first (unless `threads`), falling
+/// back to thread-mode workers — same protocol, no exec — with a
+/// warning if spawning processes is impossible in this environment.
+fn run_one(
+    eng: &ClusterEngine,
+    spec_str: &str,
+    threads: bool,
+    make_source: &dyn Fn() -> Box<dyn Iterator<Item = Event>>,
+) -> crate::Result<(ClusterRun, &'static str)> {
+    if !threads {
+        match eng.run_spec(spec_str, make_source()) {
+            Ok(run) => return Ok((run, "procs")),
+            Err(e) => eprintln!(
+                "[cluster] subprocess mode failed for '{spec_str}' ({e:#}); \
+                 falling back to worker threads"
+            ),
+        }
+    }
+    let (topo, entry) = spec::build(spec_str)?;
+    Ok((eng.run(&topo, entry, make_source())?, "threads"))
+}
+
+/// Least-squares fit of `t ≈ a·f + b·B` over samples `(f, B, t)`.
+/// Returns `None` when the grid is degenerate (det ~ 0).
+fn fit_two_term(samples: &[(f64, f64, f64)]) -> Option<(f64, f64)> {
+    let (mut sff, mut sfb, mut sbb, mut sft, mut sbt) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for &(f, b, t) in samples {
+        sff += f * f;
+        sfb += f * b;
+        sbb += b * b;
+        sft += f * t;
+        sbt += b * t;
+    }
+    let det = sff * sbb - sfb * sfb;
+    if det.abs() < 1e-6 * sff.max(sbb).max(1.0) {
+        return None;
+    }
+    let a = (sft * sbb - sbt * sfb) / det;
+    let b = (sbt * sff - sft * sfb) / det;
+    Some((a, b))
+}
+
+pub fn cluster(args: &Args) -> crate::Result<()> {
+    let smoke = args.flag("smoke");
+    let n: u64 = args.u64("n", if smoke { 4_000 } else { 20_000 });
+    let workers = args.usize("workers", 2);
+    let window = args.usize("window", 128);
+    let stream_name = args.get_or("stream", "elec").to_string();
+    let threads = args.flag("threads");
+    let mut eng = ClusterEngine::new().with_workers(workers).with_window(window);
+    if args.flag("tcp") {
+        eng = eng.over_tcp();
+    }
+
+    // ---------------------------------------------- 1. wire-cost sweep
+    let dims: &[usize] = if smoke { &[0, 64] } else { &[0, 16, 64, 256, 1024] };
+    let mut samples: Vec<(f64, f64, f64)> = Vec::new();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let spec_str = format!("null:p={workers}");
+    for &d in dims {
+        let make = move || -> Box<dyn Iterator<Item = Event>> {
+            Box::new((0..n).map(move |id| Event::Instance {
+                id,
+                inst: Instance::dense(vec![0.25; d], Label::None),
+            }))
+        };
+        let (run, mode) = run_one(&eng, &spec_str, threads, &make)?;
+        let seen = run.kv_sum("seen");
+        crate::ensure!(
+            seen == n as f64,
+            "cluster null sweep: sinks saw {seen} of {n} instances"
+        );
+        let c = &run.metrics.cluster;
+        let frames = c.total_frames() as f64;
+        let bytes = c.total_bytes() as f64;
+        let wire_ns = (c.tx_ns + c.rx_ns) as f64;
+        samples.push((frames, bytes, wire_ns));
+        rows.push(vec![
+            d.to_string(),
+            mode.to_string(),
+            format!("{frames:.0}"),
+            format!("{:.1}", bytes / 1024.0),
+            format!("{:.1}", wire_ns / 1e6),
+            format!("{:.0}", wire_ns / frames.max(1.0)),
+            format!("{:.0}", run.metrics.wall_throughput()),
+        ]);
+    }
+    print_table(
+        &format!("cluster wire-cost sweep (null topology, {n} inst, {workers} workers)"),
+        &["payload f32s", "mode", "frames", "socket KB", "wire ms", "ns/frame", "inst/s"],
+        &rows,
+    );
+
+    let model = SimCostModel::default();
+    match fit_two_term(&samples) {
+        Some((c_msg, c_byte)) => {
+            print_table(
+                "measured wire cost vs SimCostModel (sanity band, not a calibration identity)",
+                &["coefficient", "measured", "model", "ratio"],
+                &[
+                    vec![
+                        "c_msg_ns (per frame)".into(),
+                        format!("{c_msg:.0}"),
+                        format!("{:.0}", model.c_msg_ns),
+                        format!("{:.2}x", c_msg / model.c_msg_ns),
+                    ],
+                    vec![
+                        "c_byte_ns (per byte)".into(),
+                        format!("{c_byte:.2}"),
+                        format!("{:.2}", model.c_byte_ns),
+                        format!("{:.2}x", c_byte / model.c_byte_ns),
+                    ],
+                ],
+            );
+        }
+        None => println!("\n(fit degenerate — widen the payload grid for a cost estimate)"),
+    }
+
+    // ------------------------------------------------ 2. workload rows
+    let seed = args.u64("seed", 42);
+    let specs = [
+        format!("vht:stream={stream_name}:p={workers}:seed={seed}"),
+        format!("sync:stream={stream_name}:p={workers}:interval=64:seed={seed}"),
+    ];
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for spec_str in &specs {
+        let name = stream_name.clone();
+        let make = move || -> Box<dyn Iterator<Item = Event>> {
+            let mut s = crate::experiments::dataset_stream(&name, seed);
+            Box::new(
+                (0..n).map_while(move |id| {
+                    s.next_instance().map(|inst| Event::Instance { id, inst })
+                }),
+            )
+        };
+        let (run, mode) = run_one(&eng, spec_str, threads, &make)?;
+        let c = &run.metrics.cluster;
+        let evald = run.kv_sum("n");
+        let acc = if evald > 0.0 {
+            format!("{:.4}", run.kv_sum("correct") / evald)
+        } else {
+            "-".into()
+        };
+        rows.push(vec![
+            spec_str.clone(),
+            mode.to_string(),
+            format!("{:.2}", run.metrics.wall_ns as f64 / 1e9),
+            format!("{:.0}", run.metrics.wall_throughput()),
+            format!("{:.2}", c.total_bytes() as f64 / (1024.0 * 1024.0)),
+            c.total_frames().to_string(),
+            run.metrics.flow.backpressure_stalls.to_string(),
+            acc,
+        ]);
+    }
+    print_table(
+        &format!("cluster workloads ({n} inst, {workers} workers, window {window})"),
+        &["spec", "mode", "wall s", "inst/s", "socket MB", "frames", "stalls", "accuracy"],
+        &rows,
+    );
+    Ok(())
+}

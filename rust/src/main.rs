@@ -21,6 +21,15 @@ use samoa::runtime::backend_in_use;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    // Hidden re-exec entrypoint: the cluster engine spawns `samoa
+    // --cluster-worker <addr> ...` child processes (engine::cluster).
+    if args.get("cluster-worker").is_some() {
+        if let Err(e) = samoa::engine::cluster::worker_main(&args) {
+            eprintln!("cluster worker error: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "run" => cmd_run(&args),
@@ -51,6 +60,11 @@ fn main() {
                 "exp flowcontrol knobs: --p 4 --spin 2000 --capacity 4,64,1024,0 \
                  --batch 32 --workers 0,2 (threaded-engine capacity × batch policy × \
                  scheduler sweep; 0 = unbounded / pinned)"
+            );
+            println!(
+                "exp cluster knobs: --n 20000 --workers 2 --window 128 --stream elec \
+                 --tcp --threads --smoke (multi-process wire-cost sweep + VHT/StatsSync \
+                 workloads over sockets, measured vs SimCostModel)"
             );
             Ok(())
         }

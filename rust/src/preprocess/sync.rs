@@ -259,6 +259,15 @@ impl Processor for StatsSyncProcessor {
     fn as_any(&self) -> Option<&dyn std::any::Any> {
         Some(self)
     }
+
+    fn report(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("deltas_merged", self.deltas_merged() as f64),
+            ("broadcasts", self.broadcasts() as f64),
+            ("completed_rounds", self.completed_rounds() as f64),
+            ("skew_rounds", self.skew_rounds() as f64),
+        ]
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,649 @@
+//! Wire codec for [`Event`] — the serialization layer of the cluster
+//! engine (`engine::cluster`).
+//!
+//! Until this module existed every byte in the crate moved through
+//! in-process channels and `Event::wire_bytes` merely *estimated* what a
+//! real DSPE would serialize. The codec makes that number physical: every
+//! `Event` variant round-trips through a serde-free, length-prefixed
+//! frame encoding, so the cluster engine ships real bytes over real
+//! sockets and the measured frame sizes can be compared against the
+//! `wire_bytes()` estimate and the simtime cost model.
+//!
+//! # Frame format
+//!
+//! A frame is `len: u32` (little-endian, byte count of everything after
+//! the prefix) followed by `kind: u8` and a kind-specific body. Event
+//! bodies are `tag: u8` (one tag per `Event` variant, in declaration
+//! order) followed by the variant's fields in declaration order:
+//!
+//! * integers and floats are fixed-width little-endian (`f32`/`f64` via
+//!   `to_le_bytes`, so NaN payload bits survive — the NaN-*tagged* sparse
+//!   stats encoding of `preprocess::wire` rides through `StatsDelta`
+//!   payloads bit-exactly; this module generalizes that format's
+//!   "no-serde, exact-bits" philosophy to every event),
+//! * `Vec<T>` is `len: u32` then the elements,
+//! * enums (`Label`, `Output`, `Values`, `Op`, `Option`) are a one-byte
+//!   discriminant then the payload of the active arm.
+//!
+//! Decoding is bounds-checked everywhere ([`Reader`]): truncated input,
+//! trailing garbage inside a counted region, unknown tags and unknown
+//! discriminants all return `Err`, never panic — a corrupt or hostile
+//! peer cannot take down a worker.
+
+use std::sync::Arc;
+
+use crate::core::instance::{Instance, Label, Values};
+use crate::regressors::rule::{Feature, HeadSnapshot, Op, RuleSpec};
+use crate::Result;
+
+use super::event::{Event, Output};
+
+/// Upper bound a reader accepts for one frame's length prefix. Far above
+/// any legitimate event (the largest payloads are stats vectors of a few
+/// thousand f64s) while small enough that a corrupt length cannot ask the
+/// receiver to allocate gigabytes.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+// ---------------------------------------------------------------- writing
+
+#[inline]
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+#[inline]
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        put_f32(out, *v);
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        put_f64(out, *v);
+    }
+}
+
+fn put_label(out: &mut Vec<u8>, label: &Label) {
+    match label {
+        Label::Class(c) => {
+            put_u8(out, 0);
+            put_u32(out, *c);
+        }
+        Label::Numeric(y) => {
+            put_u8(out, 1);
+            put_f64(out, *y);
+        }
+        Label::None => put_u8(out, 2),
+    }
+}
+
+fn put_output(out: &mut Vec<u8>, output: &Output) {
+    match output {
+        Output::Class(c) => {
+            put_u8(out, 0);
+            put_u32(out, *c);
+        }
+        Output::Numeric(y) => {
+            put_u8(out, 1);
+            put_f64(out, *y);
+        }
+        Output::None => put_u8(out, 2),
+    }
+}
+
+fn put_instance(out: &mut Vec<u8>, inst: &Instance) {
+    match inst.values() {
+        Values::Dense(v) => {
+            put_u8(out, 0);
+            put_f32s(out, v);
+        }
+        Values::Sparse { indices, values, n_attributes } => {
+            put_u8(out, 1);
+            put_u32(out, indices.len() as u32);
+            for i in indices {
+                put_u32(out, *i);
+            }
+            for v in values {
+                put_f32(out, *v);
+            }
+            put_u32(out, *n_attributes);
+        }
+    }
+    put_label(out, &inst.label);
+    put_f32(out, inst.weight);
+}
+
+fn put_feature(out: &mut Vec<u8>, f: &Feature) {
+    put_u32(out, f.attr);
+    put_u8(
+        out,
+        match f.op {
+            Op::Le => 0,
+            Op::Gt => 1,
+            Op::Eq => 2,
+        },
+    );
+    put_f64(out, f.threshold);
+}
+
+fn put_head(out: &mut Vec<u8>, head: &HeadSnapshot) {
+    put_f64(out, head.mean);
+    match &head.weights {
+        Some(w) => {
+            put_u8(out, 1);
+            put_f64s(out, w);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+/// Append the tagged body of `event` to `out` (no length prefix — the
+/// frame layer of `engine::cluster` adds it around the whole frame).
+pub fn encode_event(event: &Event, out: &mut Vec<u8>) {
+    match event {
+        Event::Instance { id, inst } => {
+            put_u8(out, 1);
+            put_u64(out, *id);
+            put_instance(out, inst);
+        }
+        Event::Prediction { id, truth, output } => {
+            put_u8(out, 2);
+            put_u64(out, *id);
+            put_label(out, truth);
+            put_output(out, output);
+        }
+        Event::Shutdown => put_u8(out, 3),
+        Event::StatsDelta { stage, shard, round, payload } => {
+            put_u8(out, 4);
+            put_u32(out, *stage);
+            put_u32(out, *shard);
+            put_u64(out, *round);
+            put_f64s(out, payload);
+        }
+        Event::StatsGlobal { stage, payload } => {
+            put_u8(out, 5);
+            put_u32(out, *stage);
+            put_f64s(out, payload);
+        }
+        Event::Attribute { leaf, attr, value, class, weight } => {
+            put_u8(out, 6);
+            put_u64(out, *leaf);
+            put_u32(out, *attr);
+            put_f32(out, *value);
+            put_u32(out, *class);
+            put_f32(out, *weight);
+        }
+        Event::AttributeBatch { leaf, class, weight, attrs } => {
+            put_u8(out, 7);
+            put_u64(out, *leaf);
+            put_u32(out, *class);
+            put_f32(out, *weight);
+            put_u32(out, attrs.len() as u32);
+            for (a, v) in attrs.iter() {
+                put_u32(out, *a);
+                put_u8(out, *v);
+            }
+        }
+        Event::Compute { leaf, seq, n_l, class_counts } => {
+            put_u8(out, 8);
+            put_u64(out, *leaf);
+            put_u32(out, *seq);
+            put_f64(out, *n_l);
+            put_f32s(out, class_counts);
+        }
+        Event::LocalResult { leaf, seq, best_attr, best, second_attr, second, best_dist } => {
+            put_u8(out, 9);
+            put_u64(out, *leaf);
+            put_u32(out, *seq);
+            put_u32(out, *best_attr);
+            put_f64(out, *best);
+            put_u32(out, *second_attr);
+            put_f64(out, *second);
+            put_f32s(out, best_dist);
+        }
+        Event::DropLeaf { leaf } => {
+            put_u8(out, 10);
+            put_u64(out, *leaf);
+        }
+        Event::RuleInstance { rule, inst } => {
+            put_u8(out, 11);
+            put_u32(out, *rule);
+            put_instance(out, inst);
+        }
+        Event::NewRule { rule, spec } => {
+            put_u8(out, 12);
+            put_u32(out, *rule);
+            put_u32(out, spec.features.len() as u32);
+            for f in &spec.features {
+                put_feature(out, f);
+            }
+            put_head(out, &spec.head);
+        }
+        Event::RuleFeature { rule, feature, head } => {
+            put_u8(out, 13);
+            put_u32(out, *rule);
+            put_feature(out, feature);
+            put_head(out, head);
+        }
+        Event::RuleHead { rule, head } => {
+            put_u8(out, 14);
+            put_u32(out, *rule);
+            put_head(out, head);
+        }
+        Event::RuleRemoved { rule } => {
+            put_u8(out, 15);
+            put_u32(out, *rule);
+        }
+        Event::ClusterAssign { idx, dist2, inst } => {
+            put_u8(out, 16);
+            put_u32(out, *idx);
+            put_f64(out, *dist2);
+            put_instance(out, inst);
+        }
+        Event::CentroidSnapshot { version, k, d, centers, weights } => {
+            put_u8(out, 17);
+            put_u64(out, *version);
+            put_u32(out, *k);
+            put_u32(out, *d);
+            put_f32s(out, centers);
+            put_f32s(out, weights);
+        }
+    }
+}
+
+/// Encode `event` as a standalone byte vector (tests/benches convenience).
+pub fn encode_event_vec(event: &Event) -> Vec<u8> {
+    let mut out = Vec::with_capacity(event.wire_bytes() + 8);
+    encode_event(event, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------- reading
+
+/// Bounds-checked cursor over a received frame body. Every getter
+/// returns `Err` instead of panicking when the input is truncated, so a
+/// corrupt frame is rejected, not fatal.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes consumed so far.
+    pub fn consumed(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left unread.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            crate::bail!(
+                "codec: truncated frame (need {n} bytes at offset {}, have {})",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// A counted run of raw bytes (string payloads of the cluster
+    /// protocol's report frames).
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u32` length prefix, validated against the bytes actually left
+    /// (`elem_bytes` per element) so a corrupt count fails here instead
+    /// of over-allocating.
+    fn len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes.max(1)) > self.remaining() {
+            crate::bail!("codec: length {n} exceeds frame remainder {}", self.remaining());
+        }
+        Ok(n)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    fn label(&mut self) -> Result<Label> {
+        Ok(match self.u8()? {
+            0 => Label::Class(self.u32()?),
+            1 => Label::Numeric(self.f64()?),
+            2 => Label::None,
+            k => crate::bail!("codec: unknown label kind {k}"),
+        })
+    }
+
+    fn output(&mut self) -> Result<Output> {
+        Ok(match self.u8()? {
+            0 => Output::Class(self.u32()?),
+            1 => Output::Numeric(self.f64()?),
+            2 => Output::None,
+            k => crate::bail!("codec: unknown output kind {k}"),
+        })
+    }
+
+    fn instance(&mut self) -> Result<Instance> {
+        let mut inst = match self.u8()? {
+            0 => {
+                let v = self.f32s()?;
+                Instance::dense(v, Label::None)
+            }
+            1 => {
+                let n = self.len(8)?; // each entry: u32 index + f32 value
+                let mut indices = Vec::with_capacity(n);
+                for _ in 0..n {
+                    indices.push(self.u32()?);
+                }
+                let mut values = Vec::with_capacity(n);
+                for _ in 0..n {
+                    values.push(self.f32()?);
+                }
+                let n_attributes = self.u32()?;
+                Instance::sparse(indices, values, n_attributes, Label::None)
+            }
+            k => crate::bail!("codec: unknown values kind {k}"),
+        };
+        inst.label = self.label()?;
+        inst.weight = self.f32()?;
+        Ok(inst)
+    }
+
+    fn feature(&mut self) -> Result<Feature> {
+        let attr = self.u32()?;
+        let op = match self.u8()? {
+            0 => Op::Le,
+            1 => Op::Gt,
+            2 => Op::Eq,
+            k => crate::bail!("codec: unknown op {k}"),
+        };
+        let threshold = self.f64()?;
+        Ok(Feature { attr, op, threshold })
+    }
+
+    fn head(&mut self) -> Result<HeadSnapshot> {
+        let mean = self.f64()?;
+        let weights = match self.u8()? {
+            0 => None,
+            1 => Some(self.f64s()?),
+            k => crate::bail!("codec: unknown option flag {k}"),
+        };
+        Ok(HeadSnapshot { mean, weights })
+    }
+
+    /// Decode one tagged event body from the cursor.
+    pub fn event(&mut self) -> Result<Event> {
+        Ok(match self.u8()? {
+            1 => {
+                let id = self.u64()?;
+                let inst = self.instance()?;
+                Event::Instance { id, inst }
+            }
+            2 => {
+                let id = self.u64()?;
+                let truth = self.label()?;
+                let output = self.output()?;
+                Event::Prediction { id, truth, output }
+            }
+            3 => Event::Shutdown,
+            4 => {
+                let stage = self.u32()?;
+                let shard = self.u32()?;
+                let round = self.u64()?;
+                let payload = Arc::new(self.f64s()?);
+                Event::StatsDelta { stage, shard, round, payload }
+            }
+            5 => {
+                let stage = self.u32()?;
+                let payload = Arc::new(self.f64s()?);
+                Event::StatsGlobal { stage, payload }
+            }
+            6 => {
+                let leaf = self.u64()?;
+                let attr = self.u32()?;
+                let value = self.f32()?;
+                let class = self.u32()?;
+                let weight = self.f32()?;
+                Event::Attribute { leaf, attr, value, class, weight }
+            }
+            7 => {
+                let leaf = self.u64()?;
+                let class = self.u32()?;
+                let weight = self.f32()?;
+                let n = self.len(5)?; // u32 attr + u8 value per entry
+                let mut attrs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let a = self.u32()?;
+                    let v = self.u8()?;
+                    attrs.push((a, v));
+                }
+                Event::AttributeBatch { leaf, class, weight, attrs: Arc::new(attrs) }
+            }
+            8 => {
+                let leaf = self.u64()?;
+                let seq = self.u32()?;
+                let n_l = self.f64()?;
+                let class_counts = Arc::new(self.f32s()?);
+                Event::Compute { leaf, seq, n_l, class_counts }
+            }
+            9 => {
+                let leaf = self.u64()?;
+                let seq = self.u32()?;
+                let best_attr = self.u32()?;
+                let best = self.f64()?;
+                let second_attr = self.u32()?;
+                let second = self.f64()?;
+                let best_dist = Arc::new(self.f32s()?);
+                Event::LocalResult { leaf, seq, best_attr, best, second_attr, second, best_dist }
+            }
+            10 => Event::DropLeaf { leaf: self.u64()? },
+            11 => {
+                let rule = self.u32()?;
+                let inst = self.instance()?;
+                Event::RuleInstance { rule, inst }
+            }
+            12 => {
+                let rule = self.u32()?;
+                let n = self.len(13)?; // u32 attr + u8 op + f64 threshold
+                let mut features = Vec::with_capacity(n);
+                for _ in 0..n {
+                    features.push(self.feature()?);
+                }
+                let head = self.head()?;
+                Event::NewRule { rule, spec: Arc::new(RuleSpec { features, head }) }
+            }
+            13 => {
+                let rule = self.u32()?;
+                let feature = self.feature()?;
+                let head = Arc::new(self.head()?);
+                Event::RuleFeature { rule, feature, head }
+            }
+            14 => {
+                let rule = self.u32()?;
+                let head = Arc::new(self.head()?);
+                Event::RuleHead { rule, head }
+            }
+            15 => Event::RuleRemoved { rule: self.u32()? },
+            16 => {
+                let idx = self.u32()?;
+                let dist2 = self.f64()?;
+                let inst = self.instance()?;
+                Event::ClusterAssign { idx, dist2, inst }
+            }
+            17 => {
+                let version = self.u64()?;
+                let k = self.u32()?;
+                let d = self.u32()?;
+                let centers = Arc::new(self.f32s()?);
+                let weights = Arc::new(self.f32s()?);
+                Event::CentroidSnapshot { version, k, d, centers, weights }
+            }
+            t => crate::bail!("codec: unknown event tag {t}"),
+        })
+    }
+}
+
+/// Decode one event from the start of `buf`; returns the event and the
+/// number of bytes consumed.
+pub fn decode_event(buf: &[u8]) -> Result<(Event, usize)> {
+    let mut r = Reader::new(buf);
+    let e = r.event()?;
+    Ok((e, r.consumed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(e: &Event) -> Event {
+        let bytes = encode_event_vec(e);
+        let (decoded, used) = decode_event(&bytes).expect("decode");
+        assert_eq!(used, bytes.len(), "whole buffer consumed for {e:?}");
+        decoded
+    }
+
+    /// Event has no PartialEq (Arc payloads); Debug formatting is a
+    /// faithful structural fingerprint including exact float bits for
+    /// finite values — NaN bit patterns are asserted separately.
+    fn assert_same(a: &Event, b: &Event) {
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn roundtrip_core_variants() {
+        let dense = Event::Instance {
+            id: 7,
+            inst: Instance::dense(vec![1.5, -2.25, 0.0], Label::Class(3)),
+        };
+        assert_same(&dense, &roundtrip(&dense));
+
+        let mut weighted = Instance::sparse(vec![2, 9], vec![0.5, -4.0], 16, Label::Numeric(1.25));
+        weighted.weight = 0.375;
+        let sparse = Event::Instance { id: u64::MAX, inst: weighted };
+        assert_same(&sparse, &roundtrip(&sparse));
+
+        let pred = Event::Prediction { id: 1, truth: Label::Class(2), output: Output::None };
+        assert_same(&pred, &roundtrip(&pred));
+        assert_same(&Event::Shutdown, &roundtrip(&Event::Shutdown));
+    }
+
+    #[test]
+    fn roundtrip_preserves_nan_tagged_payload_bits() {
+        // the preprocess sparse encoding stores a tag NaN + mask words as
+        // f64 bit patterns; the codec must not canonicalize them
+        let tag = f64::from_bits(0x7FF8_0000_0000_0001);
+        let e = Event::StatsDelta {
+            stage: 2,
+            shard: 1,
+            round: 42,
+            payload: Arc::new(vec![tag, 3.5, f64::from_bits(0x7FF8_DEAD_BEEF_0001)]),
+        };
+        let bytes = encode_event_vec(&e);
+        let (d, _) = decode_event(&bytes).unwrap();
+        match (e, d) {
+            (Event::StatsDelta { payload: a, .. }, Event::StatsDelta { payload: b, .. }) => {
+                let a: Vec<u64> = a.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u64> = b.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn rejects_truncation_and_unknown_tags() {
+        let e = Event::Compute { leaf: 5, seq: 1, n_l: 9.0, class_counts: Arc::new(vec![1.0]) };
+        let bytes = encode_event_vec(&e);
+        for cut in 0..bytes.len() {
+            assert!(decode_event(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        assert!(decode_event(&[99]).is_err(), "unknown tag");
+        assert!(decode_event(&[]).is_err(), "empty buffer");
+    }
+
+    #[test]
+    fn rejects_oversized_length_prefix() {
+        // StatsGlobal claiming u32::MAX payload elements in a tiny buffer
+        let mut bytes = vec![5u8];
+        put_u32(&mut bytes, 0);
+        put_u32(&mut bytes, u32::MAX);
+        assert!(decode_event(&bytes).is_err());
+    }
+}

@@ -42,6 +42,7 @@ pub mod event;
 pub mod processor;
 pub mod stream;
 pub mod builder;
+pub mod codec;
 pub mod task;
 
 pub use builder::{ProcessorId, StreamId, Topology, TopologyBuilder};

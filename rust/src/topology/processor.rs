@@ -64,6 +64,17 @@ pub trait Processor: Send {
     fn as_any(&self) -> Option<&dyn std::any::Any> {
         None
     }
+
+    /// Named scalar state counters, collected by engines after shutdown.
+    /// Unlike [`Processor::as_any`] this crosses *process* boundaries:
+    /// the cluster engine (`engine::cluster`) serializes these pairs from
+    /// worker processes back to the coordinator, where `as_any`
+    /// downcasting is impossible. Implement it on processors whose final
+    /// state tests/experiments need (evaluators, stats aggregators, model
+    /// aggregators); the default is no report.
+    fn report(&self) -> Vec<(&'static str, f64)> {
+        Vec::new()
+    }
 }
 
 /// Blanket helper so `Box<dyn Processor>` also implements `Processor`.
@@ -86,5 +97,9 @@ impl Processor for Box<dyn Processor> {
 
     fn as_any(&self) -> Option<&dyn std::any::Any> {
         (**self).as_any()
+    }
+
+    fn report(&self) -> Vec<(&'static str, f64)> {
+        (**self).report()
     }
 }

@@ -1,0 +1,282 @@
+//! Golden equivalence of the cluster engine: a topology executed across
+//! worker shards over real sockets — every delivery serialized through
+//! the wire codec — must produce *bit-identical* results to the
+//! sequential local engine at every worker count. Pinned for the three
+//! paper workloads: VHT (control-plane split rounds + delayed feedback),
+//! AMRules/VAMR (rule broadcast protocol), and StatsSync (exact
+//! delta/broadcast round counts, including the staged-shutdown straggler
+//! flush).
+//!
+//! Thread-mode cluster runs are used (test binaries cannot re-exec
+//! themselves into worker processes); the full wire protocol — codec,
+//! lanes, windows, staged shutdown — is identical in both modes.
+
+use std::sync::Arc;
+
+use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
+use samoa::classifiers::vht::{self, VhtConfig};
+use samoa::core::model::Classifier;
+use samoa::core::Schema;
+use samoa::engine::{ClusterEngine, ClusterRun, EngineMetrics, LocalEngine};
+use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
+use samoa::preprocess::processor::{build_prequential_topology_head, LearnerHead};
+use samoa::preprocess::{Pipeline, StandardScaler, SyncPolicy};
+use samoa::regressors::amrules::AMRulesConfig;
+use samoa::regressors::vamr;
+use samoa::streams::datasets::ElectricityRegStream;
+use samoa::streams::random_tree::RandomTreeGenerator;
+use samoa::streams::StreamSource;
+use samoa::topology::{Event, Processor};
+
+const N: u64 = 6_000;
+const SEED: u64 = 11;
+
+/// Assert the per-stream event/byte totals match exactly — the cluster
+/// coordinator routes with the local engine's own code path, so any
+/// divergence is a protocol-ordering bug, not noise.
+fn assert_streams_identical(local: &EngineMetrics, cluster: &ClusterRun, label: &str) {
+    assert_eq!(local.streams.len(), cluster.metrics.streams.len(), "{label}: stream count");
+    for (s, (a, b)) in local.streams.iter().zip(&cluster.metrics.streams).enumerate() {
+        assert_eq!(a.events, b.events, "{label}: stream {s} events");
+        assert_eq!(a.bytes, b.bytes, "{label}: stream {s} bytes");
+    }
+    assert_eq!(local.source_instances, cluster.metrics.source_instances, "{label}: sources");
+    for (p, (ra, rb)) in
+        local.per_instance.iter().zip(&cluster.metrics.per_instance).enumerate()
+    {
+        for (i, (ia, ib)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(
+                ia.events_processed, ib.events_processed,
+                "{label}: instance ({p},{i}) processed"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------------ VHT
+
+fn vht_source(n: u64) -> impl Iterator<Item = Event> {
+    let mut stream = RandomTreeGenerator::new(5, 5, 2, SEED);
+    (0..n).map(move |id| Event::Instance { id, inst: stream.next_instance().unwrap() })
+}
+
+fn vht_config(p: usize) -> VhtConfig {
+    // Delayed feedback exercises the coordinator's delayed-release path.
+    VhtConfig { parallelism: p, feedback_delay: 50, ..Default::default() }
+}
+
+#[test]
+fn vht_totals_and_model_bit_identical_to_local() {
+    let schema = RandomTreeGenerator::new(5, 5, 2, SEED).schema().clone();
+    for p in [1usize, 2, 4] {
+        let config = vht_config(p);
+
+        let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+        let sink2 = Arc::clone(&sink);
+        let (topo, handles) = vht::build_topology(&schema, &config, move |_| {
+            Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+        });
+        let mut local_splits = None;
+        let ma = handles.ma.0;
+        let local = LocalEngine::new().run(&topo, handles.entry, vht_source(N), |instances| {
+            local_splits = instances[ma][0]
+                .report()
+                .iter()
+                .find(|(k, _)| *k == "splits")
+                .map(|(_, v)| *v);
+        });
+        let local_acc = sink.accuracy();
+        let local_n = sink.classification.lock().unwrap().n;
+        let local_correct = sink.classification.lock().unwrap().correct;
+
+        for workers in [1usize, 2, 4] {
+            let (topo2, h2) = vht::build_topology(&schema, &config, {
+                let schema = schema.clone();
+                move |_| {
+                    let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+                    Box::new(EvaluatorProcessor { sink })
+                }
+            });
+            let run = ClusterEngine::new()
+                .with_workers(workers)
+                .run(&topo2, h2.entry, vht_source(N))
+                .expect("cluster run");
+
+            let label = format!("vht p={p} workers={workers}");
+            assert_streams_identical(&local, &run, &label);
+            assert_eq!(run.kv(h2.evaluator.0, 0, "n"), Some(local_n as f64), "{label}: n");
+            assert_eq!(
+                run.kv(h2.evaluator.0, 0, "correct"),
+                Some(local_correct as f64),
+                "{label}: correct"
+            );
+            assert_eq!(run.kv(h2.evaluator.0, 0, "accuracy"), Some(local_acc), "{label}: acc");
+            assert_eq!(run.kv(h2.ma.0, 0, "splits"), local_splits, "{label}: splits");
+            // real bytes crossed sockets
+            assert!(run.metrics.cluster.total_bytes() > 0, "{label}: wire bytes");
+            assert_eq!(run.metrics.cluster.workers, workers as u64, "{label}: workers");
+        }
+    }
+}
+
+// -------------------------------------------------------------- AMRules
+
+fn amr_source(n: u64) -> impl Iterator<Item = Event> {
+    let mut stream = ElectricityRegStream::with_limit(SEED, n);
+    (0..n).map_while(move |id| {
+        stream.next_instance().map(|inst| Event::Instance { id, inst })
+    })
+}
+
+#[test]
+fn vamr_totals_and_rmse_bit_identical_to_local() {
+    let probe = ElectricityRegStream::with_limit(SEED, N);
+    let schema = probe.schema().clone();
+    let range = schema.label_range();
+
+    for p in [1usize, 2, 4] {
+        let sink = EvalSink::new(0, range, u64::MAX);
+        let sink2 = Arc::clone(&sink);
+        let (topo, handles) =
+            vamr::build_topology(&schema, &AMRulesConfig::default(), p, move |_| {
+                Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+            });
+        let local = LocalEngine::new().run(&topo, handles.entry, amr_source(N), |_| {});
+        let local_rmse = sink.rmse();
+
+        for workers in [1usize, 2, 4] {
+            let (topo2, h2) =
+                vamr::build_topology(&schema, &AMRulesConfig::default(), p, move |_| {
+                    let sink = EvalSink::new(0, range, u64::MAX);
+                    Box::new(EvaluatorProcessor { sink })
+                });
+            let run = ClusterEngine::new()
+                .with_workers(workers)
+                .run(&topo2, h2.entry, amr_source(N))
+                .expect("cluster run");
+
+            let label = format!("vamr p={p} workers={workers}");
+            assert_streams_identical(&local, &run, &label);
+            assert_eq!(run.kv(h2.evaluator.0, 0, "rmse"), Some(local_rmse), "{label}: rmse");
+        }
+    }
+}
+
+// ------------------------------------------------------------ StatsSync
+
+fn sync_topology(
+    schema: &Schema,
+    p: usize,
+) -> (samoa::topology::Topology, samoa::preprocess::processor::PreprocessHandles) {
+    build_prequential_topology_head(
+        schema,
+        p,
+        Some(SyncPolicy::Count(64)),
+        |_| Pipeline::new().then(StandardScaler::new()),
+        LearnerHead::Classifier(Box::new(|s: &Schema| -> Box<dyn Classifier> {
+            Box::new(HoeffdingTree::new(s.clone(), HTConfig::default()))
+        })),
+        {
+            let n_classes = schema.n_classes();
+            move |_| {
+                let sink = EvalSink::new(n_classes, 1.0, u64::MAX);
+                Box::new(EvaluatorProcessor { sink })
+            }
+        },
+    )
+}
+
+fn waveform_source(n: u64) -> impl Iterator<Item = Event> {
+    let mut stream = samoa::streams::waveform::WaveformGenerator::classification(SEED);
+    (0..n).map(move |id| Event::Instance { id, inst: stream.next_instance().unwrap() })
+}
+
+#[test]
+fn stats_sync_round_counts_bit_identical_to_local() {
+    let schema =
+        samoa::streams::waveform::WaveformGenerator::classification(SEED).schema().clone();
+    let p = 4usize;
+
+    let (topo, handles) = sync_topology(&schema, p);
+    let stats_pid = handles.stats.expect("sync topology has an aggregator").0;
+    let mut local_kv: Vec<(String, f64)> = Vec::new();
+    let local = LocalEngine::new().run(&topo, handles.entry, waveform_source(N), |instances| {
+        local_kv = instances[stats_pid][0]
+            .report()
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect();
+    });
+    assert!(
+        local_kv.iter().any(|(k, v)| k == "deltas_merged" && *v > 0.0),
+        "local run must complete sync rounds, got {local_kv:?}"
+    );
+
+    for workers in [1usize, 2, 4] {
+        let (topo2, h2) = sync_topology(&schema, p);
+        let run = ClusterEngine::new()
+            .with_workers(workers)
+            .run(&topo2, h2.entry, waveform_source(N))
+            .expect("cluster run");
+
+        let label = format!("sync p={p} workers={workers}");
+        assert_streams_identical(&local, &run, &label);
+        let stats2 = h2.stats.unwrap().0;
+        for (k, v) in &local_kv {
+            assert_eq!(
+                run.kv(stats2, 0, k),
+                Some(*v),
+                "{label}: {k} (delta/broadcast rounds must survive staged shutdown)"
+            );
+        }
+        // the evaluator's report made it back over the collect phase
+        let eval_n = run.kv(h2.evaluator.0, 0, "n");
+        assert!(eval_n.is_some(), "{label}: evaluator report present");
+    }
+}
+
+// ------------------------------------------- backpressure window (small)
+
+#[test]
+fn small_window_changes_nothing_but_stall_counters() {
+    let schema = RandomTreeGenerator::new(5, 5, 2, SEED).schema().clone();
+    let config = vht_config(2);
+    let (topo, handles) = vht::build_topology(&schema, &config, {
+        let schema = schema.clone();
+        move |_| {
+            let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+            Box::new(EvaluatorProcessor { sink })
+        }
+    });
+    let wide = ClusterEngine::new()
+        .with_workers(2)
+        .run(&topo, handles.entry, vht_source(2_000))
+        .expect("wide run");
+
+    let (topo2, h2) = vht::build_topology(&schema, &config, {
+        let schema = schema.clone();
+        move |_| {
+            let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+            Box::new(EvaluatorProcessor { sink })
+        }
+    });
+    let narrow = ClusterEngine::new()
+        .with_workers(2)
+        .with_window(2)
+        .run(&topo2, h2.entry, vht_source(2_000))
+        .expect("narrow run");
+
+    for (s, (a, b)) in wide.metrics.streams.iter().zip(&narrow.metrics.streams).enumerate() {
+        assert_eq!(a.events, b.events, "stream {s} events under window=2");
+        assert_eq!(a.bytes, b.bytes, "stream {s} bytes under window=2");
+    }
+    assert_eq!(
+        wide.kv(handles.evaluator.0, 0, "accuracy"),
+        narrow.kv(h2.evaluator.0, 0, "accuracy"),
+        "window size must not change results"
+    );
+    assert!(
+        narrow.metrics.flow.backpressure_stalls > wide.metrics.flow.backpressure_stalls,
+        "window=2 must record more socket-window stalls"
+    );
+}

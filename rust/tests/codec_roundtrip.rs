@@ -1,0 +1,239 @@
+//! Property tests of the event wire codec (`topology::codec`): every
+//! `Event` variant round-trips bit-exactly (dense and sparse payloads,
+//! empty batches, control events), and truncated or corrupt frames are
+//! rejected with an error — never a panic, never a wrong decode.
+
+use std::sync::Arc;
+
+use samoa::core::instance::{Instance, Label};
+use samoa::regressors::rule::{Feature, HeadSnapshot, Op, RuleSpec};
+use samoa::topology::codec::{decode_event, encode_event_vec};
+use samoa::topology::{Event, Output};
+
+/// One exemplar per `Event` variant, exercising dense + sparse instance
+/// payloads, weighted instances, empty vectors, extreme ids and every
+/// enum discriminant reachable from the event graph.
+fn exemplars() -> Vec<Event> {
+    let mut weighted = Instance::sparse(
+        vec![0, 7, 4095],
+        vec![1.0, -0.5, 33.25],
+        8192,
+        Label::Numeric(-2.5),
+    );
+    weighted.weight = 2.5;
+    vec![
+        // generic
+        Event::Instance { id: 0, inst: Instance::dense(vec![], Label::None) },
+        Event::Instance {
+            id: 1,
+            inst: Instance::dense(vec![0.5, -1.25, 3.75], Label::Class(2)),
+        },
+        Event::Instance { id: u64::MAX, inst: weighted },
+        Event::Prediction { id: 9, truth: Label::Class(1), output: Output::Class(0) },
+        Event::Prediction { id: 10, truth: Label::Numeric(0.125), output: Output::Numeric(-0.25) },
+        Event::Prediction { id: 11, truth: Label::None, output: Output::None },
+        Event::Shutdown,
+        // preprocess delta-sync
+        Event::StatsDelta { stage: 0, shard: 3, round: 17, payload: Arc::new(vec![1.5, -2.5]) },
+        Event::StatsDelta { stage: 2, shard: 0, round: 0, payload: Arc::new(vec![]) },
+        Event::StatsGlobal { stage: 1, payload: Arc::new(vec![0.0, f64::MAX, f64::MIN]) },
+        // VHT
+        Event::Attribute { leaf: 5, attr: 2, value: 1.5, class: 1, weight: 1.0 },
+        Event::AttributeBatch {
+            leaf: 6,
+            class: 0,
+            weight: 0.5,
+            attrs: Arc::new(vec![(0, 1), (3, 0), (255, 7)]),
+        },
+        Event::AttributeBatch { leaf: 7, class: 2, weight: 1.0, attrs: Arc::new(vec![]) },
+        Event::Compute { leaf: 8, seq: 3, n_l: 120.0, class_counts: Arc::new(vec![50.0, 70.0]) },
+        Event::Compute { leaf: 9, seq: 4, n_l: 0.0, class_counts: Arc::new(vec![]) },
+        Event::LocalResult {
+            leaf: 10,
+            seq: 5,
+            best_attr: 1,
+            best: 0.75,
+            second_attr: 0,
+            second: 0.5,
+            best_dist: Arc::new(vec![1.0, 2.0, 3.0, 4.0]),
+        },
+        Event::DropLeaf { leaf: u64::MAX },
+        // AMRules
+        Event::RuleInstance {
+            rule: 3,
+            inst: Instance::dense(vec![9.0, -9.0], Label::Numeric(4.5)),
+        },
+        Event::NewRule {
+            rule: 4,
+            spec: Arc::new(RuleSpec {
+                features: vec![
+                    Feature { attr: 0, op: Op::Le, threshold: 1.5 },
+                    Feature { attr: 3, op: Op::Gt, threshold: -0.5 },
+                    Feature { attr: 7, op: Op::Eq, threshold: 2.0 },
+                ],
+                head: HeadSnapshot { mean: 0.25, weights: Some(vec![0.1, 0.2, 0.3]) },
+            }),
+        },
+        Event::NewRule {
+            rule: 5,
+            spec: Arc::new(RuleSpec {
+                features: vec![],
+                head: HeadSnapshot { mean: -1.0, weights: None },
+            }),
+        },
+        Event::RuleFeature {
+            rule: 6,
+            feature: Feature { attr: 2, op: Op::Gt, threshold: 0.0 },
+            head: Arc::new(HeadSnapshot { mean: 2.5, weights: Some(vec![]) }),
+        },
+        Event::RuleHead {
+            rule: 7,
+            head: Arc::new(HeadSnapshot { mean: 0.0, weights: None }),
+        },
+        Event::RuleRemoved { rule: u32::MAX },
+        // CluStream
+        Event::ClusterAssign {
+            idx: 2,
+            dist2: 0.0625,
+            inst: Instance::dense(vec![1.0, 2.0], Label::None),
+        },
+        Event::CentroidSnapshot {
+            version: 12,
+            k: 2,
+            d: 3,
+            centers: Arc::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            weights: Arc::new(vec![10.0, 20.0]),
+        },
+        Event::CentroidSnapshot {
+            version: 0,
+            k: 0,
+            d: 0,
+            centers: Arc::new(vec![]),
+            weights: Arc::new(vec![]),
+        },
+    ]
+}
+
+/// Debug formatting is a faithful structural fingerprint for events with
+/// finite float payloads (NaN bit-exactness is asserted separately).
+fn fingerprint(e: &Event) -> String {
+    format!("{e:?}")
+}
+
+#[test]
+fn every_variant_roundtrips() {
+    // All 17 Event variants must be covered by the exemplar list — if a
+    // variant is added to the enum without a codec arm, encode_event
+    // fails to compile (exhaustive match), but this guards the *test*
+    // against silently losing coverage.
+    let evs = exemplars();
+    let tags: std::collections::BTreeSet<u8> = evs
+        .iter()
+        .map(|e| encode_event_vec(e)[0])
+        .collect();
+    assert_eq!(tags.len(), 17, "exemplars must cover all 17 event tags, got {tags:?}");
+
+    for e in &evs {
+        let bytes = encode_event_vec(e);
+        let (decoded, used) =
+            decode_event(&bytes).unwrap_or_else(|err| panic!("decode {e:?}: {err}"));
+        assert_eq!(used, bytes.len(), "whole buffer consumed for {e:?}");
+        assert_eq!(fingerprint(e), fingerprint(&decoded));
+    }
+}
+
+#[test]
+fn roundtrip_is_stable_under_reencoding() {
+    for e in &exemplars() {
+        let b1 = encode_event_vec(e);
+        let (d1, _) = decode_event(&b1).unwrap();
+        let b2 = encode_event_vec(&d1);
+        assert_eq!(b1, b2, "re-encoding must be byte-identical for {e:?}");
+    }
+}
+
+#[test]
+fn nan_payload_bits_survive() {
+    // The NaN-tagged sparse stats encoding of preprocess::wire stores
+    // tag + mask words as non-canonical NaN bit patterns inside StatsDelta
+    // payloads; the codec must carry them through bit-exactly.
+    let patterns = [
+        0x7FF8_0000_0000_0001u64,
+        0x7FF8_DEAD_BEEF_0001,
+        0xFFF8_0000_0000_0042,
+        f64::NAN.to_bits(),
+    ];
+    let payload: Vec<f64> = patterns.iter().map(|&b| f64::from_bits(b)).collect();
+    let e = Event::StatsDelta { stage: 1, shard: 2, round: 3, payload: Arc::new(payload) };
+    let (d, _) = decode_event(&encode_event_vec(&e)).unwrap();
+    match d {
+        Event::StatsDelta { payload, .. } => {
+            let got: Vec<u64> = payload.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, patterns.to_vec());
+        }
+        other => panic!("wrong variant {other:?}"),
+    }
+}
+
+#[test]
+fn every_truncation_of_every_variant_is_rejected() {
+    for e in &exemplars() {
+        let bytes = encode_event_vec(e);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_event(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} must fail for {e:?}",
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupt_tags_and_discriminants_are_rejected() {
+    assert!(decode_event(&[]).is_err(), "empty buffer");
+    assert!(decode_event(&[0]).is_err(), "tag 0 is reserved");
+    for tag in 18..=255u8 {
+        assert!(decode_event(&[tag]).is_err(), "unknown tag {tag}");
+    }
+    // Corrupt an inner enum discriminant: Prediction's Label byte.
+    let e = Event::Prediction { id: 1, truth: Label::Class(2), output: Output::None };
+    let mut bytes = encode_event_vec(&e);
+    bytes[9] = 9; // tag(1) + id(8), then the label discriminant
+    assert!(decode_event(&bytes).is_err(), "unknown label kind");
+}
+
+#[test]
+fn oversized_length_prefixes_are_rejected_not_allocated() {
+    // A StatsGlobal frame claiming u32::MAX f64 elements in a 9-byte
+    // buffer must fail on the validated length, not try to allocate 32 GB.
+    let mut bytes = vec![5u8]; // StatsGlobal tag
+    bytes.extend_from_slice(&0u32.to_le_bytes()); // stage
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // payload len
+    assert!(decode_event(&bytes).is_err());
+
+    // Same for a sparse instance claiming an enormous index count.
+    let mut bytes = vec![1u8]; // Instance tag
+    bytes.extend_from_slice(&7u64.to_le_bytes()); // id
+    bytes.push(1); // sparse values kind
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // n entries
+    assert!(decode_event(&bytes).is_err());
+}
+
+#[test]
+fn trailing_garbage_is_not_consumed() {
+    // decode_event reports how many bytes it used; a frame carrying two
+    // events back-to-back decodes both (the cluster protocol's emissions
+    // reply packs events contiguously).
+    let a = Event::DropLeaf { leaf: 1 };
+    let b = Event::RuleRemoved { rule: 2 };
+    let mut bytes = encode_event_vec(&a);
+    let split = bytes.len();
+    bytes.extend_from_slice(&encode_event_vec(&b));
+    let (d1, used1) = decode_event(&bytes).unwrap();
+    assert_eq!(used1, split);
+    assert_eq!(fingerprint(&a), fingerprint(&d1));
+    let (d2, used2) = decode_event(&bytes[used1..]).unwrap();
+    assert_eq!(used1 + used2, bytes.len());
+    assert_eq!(fingerprint(&b), fingerprint(&d2));
+}
