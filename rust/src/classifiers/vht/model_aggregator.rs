@@ -339,6 +339,43 @@ impl Processor for ModelAggregator {
             ("timeouts", self.stats.timeouts as f64),
         ]
     }
+
+    /// Checkpoint the MA's run counters and the split-round sequence
+    /// number. The tree itself is deliberately NOT captured: it is
+    /// reconstructed implicitly by the replay log (instances replayed
+    /// after restore re-grow the leaf counts), and any splits lost to a
+    /// kill merely delay convergence — they cannot corrupt it, because
+    /// the local statistics drop stale rounds by `seq`. Carrying `seq`
+    /// forward is what keeps pre-kill `LocalResult`s stale after recovery.
+    fn snapshot(&self) -> Option<Vec<u8>> {
+        use crate::engine::checkpoint::{encode_frame, TAG_META_BASE};
+        let counters = vec![
+            self.stats.instances as f64,
+            self.stats.shed as f64,
+            self.stats.buffered_replayed as f64,
+            self.stats.splits as f64,
+            self.stats.split_rounds as f64,
+            self.stats.timeouts as f64,
+            self.seq as f64,
+        ];
+        Some(encode_frame(&[(TAG_META_BASE, counters)]))
+    }
+
+    fn restore(&mut self, frame: &[u8]) -> crate::Result<()> {
+        use crate::engine::checkpoint::{decode_frame, section, TAG_META_BASE};
+        let sections = decode_frame(frame)?;
+        let c = section(&sections, TAG_META_BASE)
+            .ok_or_else(|| crate::anyhow!("vht ma restore: counter section missing"))?;
+        crate::ensure!(c.len() == 7, "vht ma restore: got {} counters, need 7", c.len());
+        self.stats.instances = c[0] as u64;
+        self.stats.shed = c[1] as u64;
+        self.stats.buffered_replayed = c[2] as u64;
+        self.stats.splits = c[3] as u64;
+        self.stats.split_rounds = c[4] as u64;
+        self.stats.timeouts = c[5] as u64;
+        self.seq = c[6] as u32;
+        Ok(())
+    }
 }
 
 

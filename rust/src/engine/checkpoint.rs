@@ -1,0 +1,340 @@
+//! Checkpoint frames — the serialization layer of engine fault
+//! tolerance.
+//!
+//! SAMOA itself delegates recovery to the underlying SPE; our in-tree
+//! engines had none, so a killed task or worker lost the whole run.
+//! This module gives every engine one shared snapshot format:
+//! a processor's recoverable state is a list of tagged `f64` sections
+//! (the flat-vector shape `MergeableState::snapshot` already produces),
+//! encoded into one length-checked binary frame per `(processor,
+//! instance)`.
+//!
+//! # Frame format
+//!
+//! ```text
+//! frame   := version: u8 (=1)  n_sections: u32  section*
+//! section := tag: u32  enc: u8  len: u32  payload: f64 × len
+//! ```
+//!
+//! Integers and floats are fixed-width little-endian via the event
+//! codec's writers ([`crate::topology::codec`]), and decoding goes
+//! through the same bounds-checked [`Reader`] discipline: truncated
+//! frames, bogus section counts and over-long length prefixes return
+//! `Err`, never panic and never over-allocate.
+//!
+//! `enc` selects the payload encoding:
+//!
+//! * `0` — dense: `len` raw f64 words, bit-exact (NaN payload bits
+//!   survive `to_le_bytes`).
+//! * `1` — sparse: the PR 4 stats wire layout `[NaN, d, mask…, value ×
+//!   m]` (see [`crate::preprocess::wire`]) where the mask flags every
+//!   word whose *bit pattern* is non-zero. Only `+0.0` words are
+//!   omitted, so decoding scatters into a zero vector and reproduces
+//!   the original bit-for-bit (`-0.0` and NaNs are "changed" and ride
+//!   in the value list).
+//!
+//! The explicit `enc` byte — rather than the NaN-tag dispatch the
+//! stats path uses — exists because checkpoint sections may *begin*
+//! with a legitimate NaN (e.g. a captured stats payload); sections pick
+//! whichever encoding is smaller per [`wire::pick_smaller`]'s policy,
+//! so compression never inflates a frame.
+//!
+//! # Section tags
+//!
+//! Tags below [`TAG_META_BASE`] are pipeline stage indices (the
+//! `stats_snapshot` vector of stage `tag`); tags at or above it carry
+//! processor-specific metadata (sync-policy counters, evaluator
+//! measures, aggregator counts). Each `Processor::snapshot` impl
+//! documents its own tag map; the frame layer treats tags as opaque.
+
+use std::collections::HashMap;
+
+use crate::preprocess::wire;
+use crate::topology::codec::{put_f64, put_u32, put_u8, Reader};
+use crate::Result;
+
+/// Frame format version written by [`encode_frame`].
+pub const VERSION: u8 = 1;
+
+/// First tag reserved for non-stage (metadata) sections. Stage sections
+/// use `tag == stage index`, which is always far below this.
+pub const TAG_META_BASE: u32 = 0x0001_0000;
+
+/// Upper bound accepted for one frame's section count and payload
+/// lengths (guards the coordinator against corrupt frames exactly like
+/// `codec::MAX_FRAME_BYTES` guards event decode).
+pub const MAX_SECTION_LEN: usize = 1 << 24;
+
+/// Encode tagged sections into one checkpoint frame. Each section's
+/// payload is stored dense or sparse, whichever is smaller.
+pub fn encode_frame(sections: &[(u32, Vec<f64>)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u8(&mut out, VERSION);
+    put_u32(&mut out, sections.len() as u32);
+    for (tag, payload) in sections {
+        let (enc, stored) = compress(payload);
+        put_u32(&mut out, *tag);
+        put_u8(&mut out, enc);
+        put_u32(&mut out, stored.len() as u32);
+        for v in &stored {
+            put_f64(&mut out, *v);
+        }
+    }
+    out
+}
+
+/// Decode a checkpoint frame back into `(tag, payload)` sections, in
+/// frame order, with sparse sections expanded to their dense form.
+pub fn decode_frame(frame: &[u8]) -> Result<Vec<(u32, Vec<f64>)>> {
+    let mut r = Reader::new(frame);
+    let version = r.u8()?;
+    crate::ensure!(version == VERSION, "checkpoint: unknown frame version {version}");
+    let n = r.u32()? as usize;
+    crate::ensure!(n <= MAX_SECTION_LEN, "checkpoint: bogus section count {n}");
+    let mut sections = Vec::with_capacity(n.min(64));
+    for _ in 0..n {
+        let tag = r.u32()?;
+        let enc = r.u8()?;
+        let len = r.u32()? as usize;
+        crate::ensure!(
+            len * 8 <= r.remaining() && len <= MAX_SECTION_LEN,
+            "checkpoint: section length {len} exceeds frame remainder {}",
+            r.remaining()
+        );
+        let mut stored = Vec::with_capacity(len);
+        for _ in 0..len {
+            stored.push(r.f64()?);
+        }
+        sections.push((tag, decompress(enc, stored)?));
+    }
+    crate::ensure!(r.remaining() == 0, "checkpoint: {} trailing bytes", r.remaining());
+    Ok(sections)
+}
+
+/// Look up one section's payload by tag (first match).
+pub fn section<'a>(sections: &'a [(u32, Vec<f64>)], tag: u32) -> Option<&'a [f64]> {
+    sections.iter().find(|(t, _)| *t == tag).map(|(_, p)| p.as_slice())
+}
+
+/// Pick the smaller of the dense payload and its sparse re-encoding.
+/// Returns `(enc, stored)`; bit-exact in both directions.
+fn compress(payload: &[f64]) -> (u8, Vec<f64>) {
+    let changed: Vec<bool> = payload.iter().map(|v| v.to_bits() != 0).collect();
+    let m = changed.iter().filter(|&&c| c).count();
+    // sparse = [NaN, d, mask…, values…]; skip building it when it
+    // cannot win (pick_smaller's tie-goes-dense policy).
+    let sparse_len = 2 + wire::mask_words(payload.len()) + m;
+    if sparse_len >= payload.len() {
+        return (0, payload.to_vec());
+    }
+    let mut sparse = Vec::with_capacity(sparse_len);
+    sparse.push(f64::NAN);
+    sparse.push(payload.len() as f64);
+    wire::encode_mask(&mut sparse, &changed);
+    for (v, c) in payload.iter().zip(&changed) {
+        if *c {
+            sparse.push(*v);
+        }
+    }
+    (1, sparse)
+}
+
+/// Inverse of [`compress`]: expand a stored section to its dense form.
+fn decompress(enc: u8, stored: Vec<f64>) -> Result<Vec<f64>> {
+    match enc {
+        0 => Ok(stored),
+        1 => {
+            crate::ensure!(
+                stored.len() >= 2 && stored[0].is_nan(),
+                "checkpoint: sparse section missing NaN tag"
+            );
+            let d = stored[1] as usize;
+            crate::ensure!(
+                stored[1] >= 0.0 && stored[1].fract() == 0.0 && d <= MAX_SECTION_LEN,
+                "checkpoint: bogus sparse dimension {}",
+                stored[1]
+            );
+            let words = wire::mask_words(d);
+            crate::ensure!(stored.len() >= 2 + words, "checkpoint: sparse mask truncated");
+            let cols = wire::decode_mask(&stored[2..2 + words], d)
+                .ok_or_else(|| crate::anyhow!("checkpoint: sparse mask decode failed"))?;
+            let values = &stored[2 + words..];
+            crate::ensure!(
+                values.len() == cols.len(),
+                "checkpoint: sparse section has {} values for {} set columns",
+                values.len(),
+                cols.len()
+            );
+            let mut dense = vec![0.0; d];
+            for (j, v) in cols.into_iter().zip(values) {
+                dense[j] = *v;
+            }
+            Ok(dense)
+        }
+        other => crate::bail!("checkpoint: unknown section encoding {other}"),
+    }
+}
+
+/// Coordinator-held store of the latest checkpoint frame per
+/// `(processor, instance)`. Both engines write into one of these during
+/// checkpoint rounds and read it back when respawning.
+#[derive(Default, Debug, Clone)]
+pub struct CheckpointStore {
+    frames: HashMap<(usize, usize), Vec<u8>>,
+}
+
+impl CheckpointStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the latest frame for `(pid, iid)`, replacing any older one.
+    pub fn put(&mut self, pid: usize, iid: usize, frame: Vec<u8>) {
+        self.frames.insert((pid, iid), frame);
+    }
+
+    pub fn get(&self, pid: usize, iid: usize) -> Option<&[u8]> {
+        self.frames.get(&(pid, iid)).map(|f| f.as_slice())
+    }
+
+    /// All held frames for processor `pid`, in instance order.
+    pub fn instances_of(&self, pid: usize) -> Vec<(usize, &[u8])> {
+        let mut v: Vec<(usize, &[u8])> = self
+            .frames
+            .iter()
+            .filter(|((p, _), _)| *p == pid)
+            .map(|((_, i), f)| (*i, f.as_slice()))
+            .collect();
+        v.sort_by_key(|(i, _)| *i);
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Total bytes currently held (feeds the recovery metrics).
+    pub fn bytes(&self) -> usize {
+        self.frames.values().map(|f| f.len()).sum()
+    }
+}
+
+/// Rescale support: merge the per-shard stage sections of several
+/// pipeline-shard checkpoint frames into one frame whose stage payloads
+/// are the *merged* statistics, using `scratch` (a pipeline of the same
+/// shape, freshly built) as the merge arena. Metadata sections
+/// (`tag >= TAG_META_BASE`) are per-shard counters and do not survive a
+/// rescale — the new shards restart them at the merged state's cut
+/// point. The merged frame can be replicated to any number of new
+/// shards: every `MergeableState` adopts a full snapshot exactly, so a
+/// split simply hands each new shard the same global statistics.
+pub fn merge_shard_frames(
+    frames: &[&[u8]],
+    scratch: &mut crate::preprocess::Pipeline,
+) -> Result<Vec<u8>> {
+    crate::ensure!(!frames.is_empty(), "checkpoint: no shard frames to merge");
+    let stages = scratch.stateful_stages();
+    let mut seen_first = vec![false; stages.len()];
+    for frame in frames {
+        let sections = decode_frame(frame)?;
+        for (si, &stage) in stages.iter().enumerate() {
+            let Some(payload) = section(&sections, stage as u32) else {
+                crate::bail!("checkpoint: shard frame missing stage {stage} section");
+            };
+            if seen_first[si] {
+                scratch.stats_merge(stage, payload);
+            } else {
+                scratch.stats_apply(stage, payload);
+                seen_first[si] = true;
+            }
+        }
+    }
+    let merged: Vec<(u32, Vec<f64>)> = stages
+        .iter()
+        .map(|&stage| (stage as u32, scratch.stats_snapshot(stage).unwrap_or_default()))
+        .collect();
+    Ok(encode_frame(&merged))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrips_dense_and_sparse() {
+        let sections = vec![
+            (0u32, vec![1.0, 0.0, -0.5, 3.25]),
+            // mostly zeros → stored sparse
+            (1u32, {
+                let mut v = vec![0.0; 200];
+                v[3] = 7.0;
+                v[199] = -0.0;
+                v
+            }),
+            (TAG_META_BASE, vec![]),
+        ];
+        let frame = encode_frame(&sections);
+        let back = decode_frame(&frame).unwrap();
+        assert_eq!(sections.len(), back.len());
+        for ((t1, p1), (t2, p2)) in sections.iter().zip(&back) {
+            assert_eq!(t1, t2);
+            let b1: Vec<u64> = p1.iter().map(|x| x.to_bits()).collect();
+            let b2: Vec<u64> = p2.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(b1, b2);
+        }
+    }
+
+    #[test]
+    fn nan_and_negative_zero_survive_compression() {
+        let mut payload = vec![0.0; 100];
+        payload[0] = f64::from_bits(0x7FF8_DEAD_BEEF_0001);
+        payload[50] = -0.0;
+        payload[99] = f64::from_bits(0xFFF8_0000_0000_0042);
+        let (enc, stored) = compress(&payload);
+        assert_eq!(enc, 1, "mostly-zero payload must pick the sparse form");
+        let back = decompress(enc, stored).unwrap();
+        let bits: Vec<u64> = back.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u64> = payload.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let frame = encode_frame(&[(0, vec![1.0, 2.0]), (7, vec![0.0; 64])]);
+        for cut in 0..frame.len() {
+            assert!(decode_frame(&frame[..cut]).is_err(), "cut at {cut}/{}", frame.len());
+        }
+    }
+
+    #[test]
+    fn corrupt_headers_are_rejected() {
+        assert!(decode_frame(&[]).is_err(), "empty");
+        assert!(decode_frame(&[9]).is_err(), "bad version");
+        let mut frame = encode_frame(&[(0, vec![1.0])]);
+        frame[9] = 7; // section enc byte
+        assert!(decode_frame(&frame).is_err(), "unknown encoding");
+        // section count far beyond the buffer must not allocate
+        let mut bogus = vec![VERSION];
+        bogus.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&bogus).is_err());
+    }
+
+    #[test]
+    fn store_tracks_latest_per_instance() {
+        let mut store = CheckpointStore::new();
+        store.put(1, 0, vec![1, 2, 3]);
+        store.put(1, 1, vec![4]);
+        store.put(1, 0, vec![5, 6]);
+        assert_eq!(store.get(1, 0), Some(&[5u8, 6][..]));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.bytes(), 3);
+        let insts = store.instances_of(1);
+        assert_eq!(insts.len(), 2);
+        assert_eq!(insts[0].0, 0);
+        assert_eq!(insts[1].0, 1);
+    }
+}

@@ -108,6 +108,14 @@ const K_HALT: u8 = 4;
 const K_EMISSIONS: u8 = 5;
 const K_REPORT: u8 = 6;
 const K_DONE: u8 = 7;
+// Recovery protocol (enabled by `with_checkpoints`): the coordinator
+// periodically asks each worker to snapshot its cells (the worker sends
+// one K_SNAP per snapshottable cell, then K_DONE), and after respawning
+// a dead worker pushes the held frames back with K_RESTORE (no reply;
+// processed in wseq order like everything else).
+const K_SNAPSHOT: u8 = 8;
+const K_SNAP: u8 = 9;
+const K_RESTORE: u8 = 10;
 
 /// One pending delivery, exactly as in the local engine.
 type Delivery = (usize, usize, Event);
@@ -267,7 +275,14 @@ fn serve(
     let index: HashMap<(usize, usize), usize> =
         cells.iter().enumerate().map(|(n, c)| ((c.pid, c.iid), n)).collect();
 
-    let result = (|| -> Result<()> {
+    // A panicking processor must not strand the coordinator: without the
+    // catch, the serve thread unwinds past the teardown below while the
+    // reader threads keep the sockets open, and the coordinator blocks on
+    // a reply that will never come. Catching converts the panic into an
+    // orderly socket shutdown — which is exactly the death signal the
+    // coordinator's recovery path (`ClusterEngine::with_checkpoints`)
+    // detects and repairs.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
         let mut next: u64 = 0;
         let mut dirty = false;
         loop {
@@ -362,6 +377,37 @@ fn serve(
                     out.flush()?;
                     dirty = false;
                 }
+                K_SNAPSHOT => {
+                    for cell in &cells {
+                        let Some(frame) = cell.node.snapshot() else { continue };
+                        let mut b = Vec::with_capacity(21 + frame.len());
+                        codec::put_u8(&mut b, K_SNAP);
+                        codec::put_u64(&mut b, wseq);
+                        codec::put_u16(&mut b, cell.pid as u16);
+                        codec::put_u16(&mut b, cell.iid as u16);
+                        codec::put_u32(&mut b, frame.len() as u32);
+                        b.extend_from_slice(&frame);
+                        write_frame(&mut out, &b)?;
+                    }
+                    let mut b = Vec::with_capacity(9);
+                    codec::put_u8(&mut b, K_DONE);
+                    codec::put_u64(&mut b, wseq);
+                    write_frame(&mut out, &b)?;
+                    out.flush()?;
+                    dirty = false;
+                }
+                K_RESTORE => {
+                    let pid = r.u16()? as usize;
+                    let iid = r.u16()? as usize;
+                    let n = r.u32()? as usize;
+                    let frame = r.bytes(n)?;
+                    let Some(&c) = index.get(&(pid, iid)) else {
+                        crate::bail!("cluster worker: restore for foreign instance ({pid},{iid})");
+                    };
+                    cells[c].node.restore(frame).with_context(|| {
+                        format!("cluster worker: restore rejected for ({pid},{iid})")
+                    })?;
+                }
                 K_HALT => {
                     out.flush()?;
                     return Ok(());
@@ -369,7 +415,15 @@ fn serve(
                 k => crate::bail!("cluster worker: unknown frame kind {k}"),
             }
         }
-    })();
+    }))
+    .unwrap_or_else(|p| {
+        let msg = p
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| p.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "unknown panic".to_string());
+        Err(crate::anyhow!("cluster worker: processor panicked: {msg}"))
+    });
     // Teardown: close both lanes (no-op if the coordinator already did),
     // then collect the readers — they exit on EOF.
     ctrl_shut.shutdown();
@@ -458,6 +512,33 @@ struct Pending {
     worker: usize,
     wseq: u64,
     data: bool,
+    /// Absolute replay-log index of this delivery (recovery mode only):
+    /// the matching log entry is marked `replied` when the reply lands.
+    log_ref: Option<u64>,
+    /// Replay of an already-replied delivery: parse the reply, do NOT
+    /// route its emissions (they were routed before the worker died).
+    discard: bool,
+}
+
+/// One logged delivery awaiting a checkpoint that covers it.
+struct LogEntry {
+    pid: usize,
+    iid: usize,
+    event: Event,
+    ctrl: bool,
+    /// The reply was consumed (and its emissions routed) pre-death; a
+    /// re-drive of this entry rebuilds worker state only.
+    replied: bool,
+}
+
+/// Bounded per-worker replay log: every delivery since the worker's last
+/// checkpoint. `base` is the absolute index of `entries.front()` and
+/// only grows, so a stale `Pending::log_ref` can never alias a newer
+/// entry after an overflow pop or a checkpoint clear.
+#[derive(Default)]
+struct ReplayLog {
+    entries: VecDeque<LogEntry>,
+    base: u64,
 }
 
 /// Final state of one processor instance, reported across the process
@@ -512,6 +593,17 @@ struct Coordinator<'a> {
     metrics: EngineMetrics,
     window: usize,
     buf: Vec<u8>,
+    /// Recovery mode (`with_checkpoints`): per-worker replay logs, the
+    /// coordinator-held snapshot frames, and the death bookkeeping.
+    recovery_on: bool,
+    replay_cap: usize,
+    logs: Vec<ReplayLog>,
+    store: super::checkpoint::CheckpointStore,
+    /// Worker whose socket just failed (set at the IO error site so the
+    /// recovery path knows *who* died, not only that someone did).
+    dead: Option<usize>,
+    /// One respawn per worker per run; a second death is fatal.
+    respawned: Vec<bool>,
 }
 
 impl Coordinator<'_> {
@@ -557,12 +649,25 @@ impl Coordinator<'_> {
     /// would append them.
     fn consume_one(&mut self, now: u64) -> Result<()> {
         let pend = self.outstanding.pop_front().expect("consume_one with nothing outstanding");
+        self.consume_pending(pend, now)
+    }
+
+    /// Consume the reply of one specific pending delivery. An IO failure
+    /// marks the worker dead (`self.dead`) before surfacing the error, so
+    /// the recovery path in `drive` knows which shard to respawn.
+    fn consume_pending(&mut self, pend: Pending, now: u64) -> Result<()> {
         // Everything this reply causally depends on was sent to the same
         // worker with a smaller wseq; make sure none of it is still
         // sitting in our write buffers.
         let mut buf = std::mem::take(&mut self.buf);
-        self.links[pend.worker].flush(&mut self.metrics.cluster)?;
-        self.links[pend.worker].read_reply(&mut buf, &mut self.metrics.cluster)?;
+        let io = self.links[pend.worker]
+            .flush(&mut self.metrics.cluster)
+            .and_then(|()| self.links[pend.worker].read_reply(&mut buf, &mut self.metrics.cluster));
+        if let Err(e) = io {
+            self.dead = Some(pend.worker);
+            self.buf = buf;
+            return Err(e);
+        }
         {
             let mut r = Reader::new(&buf);
             let kind = r.u8()?;
@@ -578,10 +683,20 @@ impl Coordinator<'_> {
                 let s = StreamId(r.u32()? as usize);
                 let k = r.u64()?;
                 let e = r.event()?;
-                self.route_emission(s, k, e, now);
+                if !pend.discard {
+                    self.route_emission(s, k, e, now);
+                }
             }
         }
         self.buf = buf;
+        if let Some(abs) = pend.log_ref {
+            let log = &mut self.logs[pend.worker];
+            if abs >= log.base {
+                if let Some(entry) = log.entries.get_mut((abs - log.base) as usize) {
+                    entry.replied = true;
+                }
+            }
+        }
         if pend.data {
             self.links[pend.worker].inflight -= 1;
         }
@@ -612,11 +727,28 @@ impl Coordinator<'_> {
         codec::put_u16(&mut b, p as u16);
         codec::put_u16(&mut b, i as u16);
         codec::encode_event(&e, &mut b);
-        link.send(&b, ctrl, &mut self.metrics.cluster)?;
+        if let Err(err) = link.send(&b, ctrl, &mut self.metrics.cluster) {
+            self.dead = Some(w);
+            return Err(err);
+        }
         if !ctrl {
             self.links[w].inflight += 1;
         }
-        self.outstanding.push_back(Pending { worker: w, wseq, data: !ctrl });
+        let log_ref = if self.recovery_on {
+            let log = &mut self.logs[w];
+            if log.entries.len() >= self.replay_cap {
+                log.entries.pop_front();
+                log.base += 1;
+                self.metrics.recovery.replay_dropped += 1;
+            }
+            let abs = log.base + log.entries.len() as u64;
+            log.entries.push_back(LogEntry { pid: p, iid: i, event: e, ctrl, replied: false });
+            Some(abs)
+        } else {
+            None
+        };
+        self.outstanding
+            .push_back(Pending { worker: w, wseq, data: !ctrl, log_ref, discard: false });
         Ok(())
     }
 
@@ -647,6 +779,133 @@ impl Coordinator<'_> {
             self.queue.push_back(d);
         }
     }
+
+    /// One checkpoint round: at full quiescence (nothing outstanding),
+    /// ask every worker to snapshot its cells, hold the frames
+    /// coordinator-side, and clear the covered replay logs. Runs
+    /// synchronously — the protocol guarantees the worker has processed
+    /// every prior delivery before it answers, so the frames are exact.
+    fn checkpoint_round(&mut self) -> Result<()> {
+        debug_assert!(self.outstanding.is_empty(), "checkpoint round outside quiescence");
+        let mut buf = std::mem::take(&mut self.buf);
+        for w in 0..self.links.len() {
+            let link = &mut self.links[w];
+            let wseq = link.wseq;
+            link.wseq += 1;
+            let mut b = Vec::with_capacity(9);
+            codec::put_u8(&mut b, K_SNAPSHOT);
+            codec::put_u64(&mut b, wseq);
+            let io = link
+                .send(&b, true, &mut self.metrics.cluster)
+                .and_then(|()| link.flush(&mut self.metrics.cluster));
+            if let Err(e) = io {
+                self.dead = Some(w);
+                self.buf = buf;
+                return Err(e);
+            }
+            loop {
+                if let Err(e) = self.links[w].read_reply(&mut buf, &mut self.metrics.cluster) {
+                    self.dead = Some(w);
+                    self.buf = buf;
+                    return Err(e);
+                }
+                let mut r = Reader::new(&buf);
+                match r.u8()? {
+                    K_SNAP => {
+                        let _wseq = r.u64()?;
+                        let pid = r.u16()? as usize;
+                        let iid = r.u16()? as usize;
+                        let n = r.u32()? as usize;
+                        let frame = r.bytes(n)?;
+                        self.metrics.recovery.checkpoints += 1;
+                        self.metrics.recovery.checkpoint_bytes += frame.len() as u64;
+                        self.store.put(pid, iid, frame.to_vec());
+                    }
+                    K_DONE => break,
+                    k => crate::bail!("cluster: unexpected snapshot reply kind {k}"),
+                }
+            }
+            let log = &mut self.logs[w];
+            log.base += log.entries.len() as u64;
+            log.entries.clear();
+        }
+        self.buf = buf;
+        Ok(())
+    }
+
+    /// Repair a dead worker: drain the live workers' outstanding replies
+    /// (in global order), bring up a replacement link via `respawn`, push
+    /// the held checkpoint frames, and re-drive the replay log — replies
+    /// of entries the dead worker had already answered are parsed but
+    /// their emissions discarded (they were routed pre-death), unreplied
+    /// entries behave as fresh deliveries. State after recovery is
+    /// bit-identical to a never-killed run iff the log covered the whole
+    /// delta (`recovery.replay_dropped` stayed 0 for this worker).
+    fn recover_worker(
+        &mut self,
+        w: usize,
+        respawn: &mut dyn FnMut(usize) -> Result<Link>,
+        now: u64,
+    ) -> Result<()> {
+        self.metrics.recovery.kills += 1;
+        let outstanding: Vec<Pending> = self.outstanding.drain(..).collect();
+        for pend in outstanding {
+            if pend.worker == w {
+                continue; // no reply will ever come; the log entry stays unreplied
+            }
+            self.consume_pending(pend, now)?;
+        }
+        self.links[w] = respawn(w)?;
+        let n_workers = self.links.len();
+        let mut to_restore: Vec<(usize, usize, Vec<u8>)> = Vec::new();
+        for (p, def) in self.topology.processors.iter().enumerate() {
+            for i in 0..def.parallelism {
+                if worker_of(i, n_workers) == w {
+                    if let Some(frame) = self.store.get(p, i) {
+                        to_restore.push((p, i, frame.to_vec()));
+                    }
+                }
+            }
+        }
+        for (p, i, frame) in to_restore {
+            let link = &mut self.links[w];
+            let wseq = link.wseq;
+            link.wseq += 1;
+            let mut b = Vec::with_capacity(21 + frame.len());
+            codec::put_u8(&mut b, K_RESTORE);
+            codec::put_u64(&mut b, wseq);
+            codec::put_u16(&mut b, p as u16);
+            codec::put_u16(&mut b, i as u16);
+            codec::put_u32(&mut b, frame.len() as u32);
+            b.extend_from_slice(&frame);
+            link.send(&b, true, &mut self.metrics.cluster)?;
+            self.metrics.recovery.restores += 1;
+        }
+        let entries: Vec<LogEntry> = self.logs[w].entries.drain(..).collect();
+        self.logs[w].base += entries.len() as u64;
+        for entry in entries {
+            let link = &mut self.links[w];
+            let wseq = link.wseq;
+            link.wseq += 1;
+            let mut b = Vec::with_capacity(24 + entry.event.wire_bytes());
+            codec::put_u8(&mut b, K_DELIVER);
+            codec::put_u64(&mut b, wseq);
+            codec::put_u16(&mut b, entry.pid as u16);
+            codec::put_u16(&mut b, entry.iid as u16);
+            codec::encode_event(&entry.event, &mut b);
+            link.send(&b, entry.ctrl, &mut self.metrics.cluster)?;
+            self.metrics.recovery.replayed += 1;
+            let pend = Pending {
+                worker: w,
+                wseq,
+                data: false, // inflight was never bumped for this re-send
+                log_ref: None,
+                discard: entry.replied,
+            };
+            self.consume_pending(pend, now)?;
+        }
+        Ok(())
+    }
 }
 
 // -------------------------------------------------------------- the engine
@@ -664,11 +923,29 @@ pub struct ClusterEngine {
     pub measure_busy: bool,
     /// Subprocess mode only: TCP loopback instead of Unix sockets.
     pub tcp: bool,
+    /// Recovery mode: snapshot every worker every N source events and
+    /// keep per-worker replay logs, so a worker that dies mid-run is
+    /// respawned and re-driven instead of failing the run (0 = off).
+    pub checkpoint_every: u64,
+    /// Bound of each per-worker replay log, in deliveries.
+    pub replay_cap: usize,
+    /// Subprocess mode: seconds to wait for worker handshakes before
+    /// failing the run (overridable via `SAMOA_CLUSTER_ACCEPT_SECS` for
+    /// loaded CI runners).
+    pub accept_secs: u64,
 }
 
 impl Default for ClusterEngine {
     fn default() -> Self {
-        ClusterEngine { workers: 2, window: 128, measure_busy: false, tcp: false }
+        ClusterEngine {
+            workers: 2,
+            window: 128,
+            measure_busy: false,
+            tcp: false,
+            checkpoint_every: 0,
+            replay_cap: 65536,
+            accept_secs: 30,
+        }
     }
 }
 
@@ -692,6 +969,30 @@ impl ClusterEngine {
         self
     }
 
+    /// Enable recovery: snapshot every worker every `every` source
+    /// events (at the quiescence barrier) and keep per-worker replay
+    /// logs, so one worker death per worker is repaired in place
+    /// instead of failing the run. 0 disables recovery.
+    pub fn with_checkpoints(mut self, every: u64) -> Self {
+        self.checkpoint_every = every;
+        self
+    }
+
+    /// Bound of each per-worker replay log. Deliveries evicted before a
+    /// covering checkpoint count in `recovery.replay_dropped` and void
+    /// the bit-identical recovery guarantee for that worker.
+    pub fn with_replay_cap(mut self, cap: usize) -> Self {
+        self.replay_cap = cap.max(1);
+        self
+    }
+
+    /// Subprocess mode: seconds to wait for worker handshakes (spawn and
+    /// respawn) before failing the run.
+    pub fn with_accept_timeout(mut self, secs: u64) -> Self {
+        self.accept_secs = secs.max(1);
+        self
+    }
+
     /// Thread-mode run: workers are OS threads behind real Unix-socket
     /// pairs. Instances are constructed here (factories are not `Send`)
     /// and move into their worker thread.
@@ -711,21 +1012,47 @@ impl ClusterEngine {
             }
         }
         let mut links = Vec::with_capacity(n_workers);
-        let mut handles = Vec::with_capacity(n_workers);
+        let mut handles: Vec<Option<std::thread::JoinHandle<Result<()>>>> =
+            Vec::with_capacity(n_workers);
         for owned in per_worker {
             let (c0, c1) = UnixStream::pair().context("cluster: socketpair")?;
             let (d0, d1) = UnixStream::pair().context("cluster: socketpair")?;
             let shape2 = shape.clone();
             let measure = self.measure_busy;
-            handles.push(std::thread::spawn(move || {
+            handles.push(Some(std::thread::spawn(move || {
                 serve(Sock::Unix(c1), Sock::Unix(d1), owned, shape2, measure)
-            }));
+            })));
             links.push(Link::new(Sock::Unix(c0), Sock::Unix(d0))?);
         }
+        // Recovery-mode respawn: reap the dead thread (its error already
+        // surfaced coordinator-side as the socket failure), rebuild the
+        // shard from the factories, serve it on fresh socket pairs. The
+        // replacement starts blank; drive() restores it from checkpoints.
+        let measure = self.measure_busy;
+        let mut respawn = |w: usize| -> Result<Link> {
+            if let Some(h) = handles[w].take() {
+                let _ = h.join();
+            }
+            let mut owned: Vec<(usize, usize, Box<dyn Processor>)> = Vec::new();
+            for (p, def) in topology.processors.iter().enumerate() {
+                for i in 0..def.parallelism {
+                    if worker_of(i, n_workers) == w {
+                        owned.push((p, i, (def.factory)(i)));
+                    }
+                }
+            }
+            let (c0, c1) = UnixStream::pair().context("cluster: socketpair")?;
+            let (d0, d1) = UnixStream::pair().context("cluster: socketpair")?;
+            let shape2 = shape.clone();
+            handles[w] = Some(std::thread::spawn(move || {
+                serve(Sock::Unix(c1), Sock::Unix(d1), owned, shape2, measure)
+            }));
+            Link::new(Sock::Unix(c0), Sock::Unix(d0))
+        };
         // drive() owns the links and drops them on return, EOF-ing the
         // worker reader threads if anything aborted early.
-        let result = self.drive(topology, entry, source, links);
-        for h in handles {
+        let result = self.drive(topology, entry, source, links, Some(&mut respawn));
+        for h in handles.into_iter().flatten() {
             match h.join() {
                 Ok(r) => r?,
                 Err(_) => crate::bail!("cluster: worker thread panicked"),
@@ -772,13 +1099,15 @@ impl ClusterEngine {
             (Listener::Unix(l, path.clone()), format!("unix:{}", path.display()))
         };
 
-        let mut children = Vec::with_capacity(n_workers);
-        for k in 0..n_workers {
+        // Worker stderr is piped so a startup or mid-run death can be
+        // diagnosed from the coordinator's error message. Workers print
+        // nothing in normal operation, so the pipe buffer never fills.
+        let spawn_worker = |spec: &str, k: usize| -> Result<std::process::Child> {
             let mut cmd = std::process::Command::new(&exe);
             cmd.arg("--cluster-worker")
                 .arg(&addr)
                 .arg("--cluster-spec")
-                .arg(spec_str)
+                .arg(spec)
                 .arg("--cluster-index")
                 .arg(k.to_string())
                 .arg("--cluster-workers")
@@ -786,7 +1115,12 @@ impl ClusterEngine {
             if self.measure_busy {
                 cmd.arg("--cluster-measure");
             }
-            children.push(cmd.spawn().context("cluster: spawn worker process")?);
+            cmd.stderr(std::process::Stdio::piped());
+            cmd.spawn().context("cluster: spawn worker process")
+        };
+        let mut children = Vec::with_capacity(n_workers);
+        for k in 0..n_workers {
+            children.push(spawn_worker(spec_str, k)?);
         }
 
         // Accept 2 connections per worker; each starts with a 2-byte
@@ -808,9 +1142,20 @@ impl ClusterEngine {
                 match got {
                     Ok(s) => return Ok(s),
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        for c in children.iter_mut() {
+                        for (k, c) in children.iter_mut().enumerate() {
                             if let Ok(Some(status)) = c.try_wait() {
-                                crate::bail!("cluster: worker exited during startup: {status}");
+                                // The process has exited, so draining the
+                                // pipe cannot block.
+                                let mut err = String::new();
+                                if let Some(mut pipe) = c.stderr.take() {
+                                    let _ = pipe.read_to_string(&mut err);
+                                }
+                                let err = err.trim();
+                                let sep = if err.is_empty() { "" } else { "; stderr: " };
+                                crate::bail!(
+                                    "cluster: worker {k} exited while the coordinator \
+                                     waited for its handshake ({status}){sep}{err}"
+                                );
                             }
                         }
                         if Instant::now() > deadline {
@@ -825,7 +1170,15 @@ impl ClusterEngine {
 
         let mut ctrl: Vec<Option<Sock>> = (0..n_workers).map(|_| None).collect();
         let mut data: Vec<Option<Sock>> = (0..n_workers).map(|_| None).collect();
-        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        // `SAMOA_CLUSTER_ACCEPT_SECS` overrides the builder value so a
+        // loaded CI runner can stretch the handshake window without a
+        // recompile.
+        let accept_secs = std::env::var("SAMOA_CLUSTER_ACCEPT_SECS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(self.accept_secs)
+            .max(1);
+        let deadline = Instant::now() + std::time::Duration::from_secs(accept_secs);
         let setup = (|| -> Result<()> {
             for _ in 0..2 * n_workers {
                 let mut s = accept(deadline, &mut children)?;
@@ -845,17 +1198,58 @@ impl ClusterEngine {
             }
             Ok(())
         })();
-        if let Listener::Unix(_, path) = &listener {
-            let _ = std::fs::remove_file(path);
+        // Recovery mode keeps the listener address connectable so a
+        // respawned worker can dial back in; otherwise the Unix path is
+        // removed as soon as the initial handshakes are in.
+        let recovery_on = self.checkpoint_every > 0;
+        if !recovery_on {
+            if let Listener::Unix(_, path) = &listener {
+                let _ = std::fs::remove_file(path);
+            }
         }
+
+        // Recovery-mode respawn: reap the dead child, spawn a replacement
+        // on the *fault-stripped* spec (an injected `die=` bomb must not
+        // re-arm — the restored event count is below the threshold, so a
+        // rearmed replacement would re-cross it during replay, forever),
+        // and take its two handshakes off the shared listener.
+        let stripped = spec::strip_fault(spec_str);
+        let mut respawn = |w: usize| -> Result<Link> {
+            let _ = children[w].wait();
+            children[w] = spawn_worker(&stripped, w)?;
+            let deadline = Instant::now() + std::time::Duration::from_secs(accept_secs);
+            let mut rc: Option<Sock> = None;
+            let mut rd: Option<Sock> = None;
+            for _ in 0..2 {
+                let mut s = accept(deadline, &mut children)?;
+                match &s {
+                    Sock::Unix(u) => u.set_nonblocking(false)?,
+                    Sock::Tcp(t) => t.set_nonblocking(false)?,
+                }
+                let mut hs = [0u8; 2];
+                s.read_exact(&mut hs)?;
+                crate::ensure!(
+                    hs[0] as usize == w,
+                    "cluster: handshake from unexpected worker {} during respawn of {w}",
+                    hs[0]
+                );
+                let slot = if hs[1] == 0 { &mut rc } else { &mut rd };
+                crate::ensure!(slot.is_none(), "cluster: duplicate lane from respawned {w}");
+                *slot = Some(s);
+            }
+            Link::new(rc.unwrap(), rd.unwrap())
+        };
 
         let result = setup.and_then(|()| {
             let mut links = Vec::with_capacity(n_workers);
             for (c, d) in ctrl.into_iter().zip(data) {
                 links.push(Link::new(c.unwrap(), d.unwrap())?);
             }
-            self.drive(&topology, entry, source, links)
+            self.drive(&topology, entry, source, links, Some(&mut respawn))
         });
+        if let Listener::Unix(_, path) = &listener {
+            let _ = std::fs::remove_file(path);
+        }
         for mut c in children {
             if result.is_err() {
                 let _ = c.kill();
@@ -875,6 +1269,7 @@ impl ClusterEngine {
         entry: StreamId,
         source: impl Iterator<Item = Event>,
         links: Vec<Link>,
+        mut respawn: Option<&mut dyn FnMut(usize) -> Result<Link>>,
     ) -> Result<(EngineMetrics, Vec<InstanceReport>)> {
         let shape: Vec<usize> = topology.processors.iter().map(|p| p.parallelism).collect();
         let n_workers = links.len();
@@ -890,15 +1285,51 @@ impl ClusterEngine {
             metrics,
             window: self.window.max(1),
             buf: Vec::new(),
+            recovery_on: self.checkpoint_every > 0,
+            replay_cap: self.replay_cap.max(1),
+            logs: (0..n_workers).map(|_| ReplayLog::default()).collect(),
+            store: super::checkpoint::CheckpointStore::new(),
+            dead: None,
+            respawned: vec![false; n_workers],
         };
         let started = Instant::now();
 
+        // A worker death surfaces as an IO error with `co.dead` naming
+        // the worker. In recovery mode the loop repairs it in place —
+        // once per worker per run — and retries the cascade; outside
+        // recovery mode (or during shutdown/collect, a documented
+        // non-goal) the error is fatal as before.
         for event in source {
             co.metrics.source_instances += 1;
             let now = co.metrics.source_instances;
             co.release_delayed(now);
             co.route_emission(entry, 0, event, now);
-            co.pump(now)?;
+            let ckpt = co.recovery_on && now % self.checkpoint_every == 0;
+            let step = |co: &mut Coordinator| {
+                co.pump(now)?;
+                if ckpt {
+                    co.checkpoint_round()?;
+                }
+                Ok(())
+            };
+            let mut res: Result<()> = step(&mut co);
+            while let Err(e) = res {
+                let w = match co.dead.take() {
+                    Some(w) => w,
+                    None => return Err(e),
+                };
+                if !co.recovery_on || co.respawned[w] {
+                    return Err(e);
+                }
+                let rs = match respawn {
+                    Some(ref mut rs) => rs,
+                    None => return Err(e),
+                };
+                co.respawned[w] = true;
+                co.recover_worker(w, &mut **rs, now)
+                    .with_context(|| format!("cluster: recovering dead worker {w}"))?;
+                res = step(&mut co);
+            }
         }
 
         // Flush delayed, then staged deterministic shutdown: per
@@ -919,7 +1350,9 @@ impl ClusterEngine {
                 codec::put_u16(&mut b, p as u16);
                 codec::put_u16(&mut b, i as u16);
                 link.send(&b, true, &mut co.metrics.cluster)?;
-                co.outstanding.push_back(Pending { worker: w, wseq, data: false });
+                let pend =
+                    Pending { worker: w, wseq, data: false, log_ref: None, discard: false };
+                co.outstanding.push_back(pend);
                 co.release_all_delayed();
                 co.pump(fin)?;
             }
@@ -1034,14 +1467,29 @@ pub mod spec {
     use crate::topology::{Grouping, TopologyBuilder};
 
     /// A sink that counts deliveries and emits nothing — the null
-    /// round-trip workload of the `samoa exp cluster` cost sweep.
+    /// round-trip workload of the `samoa exp cluster` cost sweep. With
+    /// `die_at` set (`die=`/`victim=` spec params) it panics on its Nth
+    /// delivery — the fault-injection workload of `samoa exp recovery`.
     struct NullSink {
         seen: u64,
+        die_at: Option<u64>,
+        /// One shot per `build()`: a thread-mode respawn reuses the same
+        /// factory in the same process, and the restored `seen` is below
+        /// `die_at`, so without this latch the replacement would re-cross
+        /// the threshold during replay and die forever. (Subprocess
+        /// respawns don't need it — the coordinator strips the fault from
+        /// the spec — but the latch makes both modes safe.)
+        fired: std::sync::Arc<std::sync::atomic::AtomicBool>,
     }
 
     impl Processor for NullSink {
         fn process(&mut self, _event: Event, _ctx: &mut Ctx) {
             self.seen += 1;
+            if self.die_at == Some(self.seen)
+                && !self.fired.swap(true, std::sync::atomic::Ordering::Relaxed)
+            {
+                panic!("null-sink: injected fault at event {}", self.seen);
+            }
         }
 
         fn name(&self) -> &'static str {
@@ -1050,6 +1498,21 @@ pub mod spec {
 
         fn report(&self) -> Vec<(&'static str, f64)> {
             vec![("seen", self.seen as f64)]
+        }
+
+        fn snapshot(&self) -> Option<Vec<u8>> {
+            use crate::engine::checkpoint::{encode_frame, TAG_META_BASE};
+            Some(encode_frame(&[(TAG_META_BASE, vec![self.seen as f64])]))
+        }
+
+        fn restore(&mut self, frame: &[u8]) -> Result<()> {
+            use crate::engine::checkpoint::{decode_frame, section, TAG_META_BASE};
+            let sections = decode_frame(frame)?;
+            let meta = section(&sections, TAG_META_BASE)
+                .ok_or_else(|| crate::anyhow!("null-sink frame: missing meta section"))?;
+            crate::ensure!(meta.len() == 1, "null-sink frame: bad meta length");
+            self.seen = meta[0] as u64;
+            Ok(())
         }
     }
 
@@ -1067,17 +1530,34 @@ pub mod spec {
         param(spec, key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// The spec with fault-injection params (`die=`, `victim=`) removed —
+    /// what the coordinator hands a *respawned* worker, so an injected
+    /// bomb cannot re-arm and re-fire during replay.
+    pub fn strip_fault(spec: &str) -> String {
+        spec.split(':')
+            .filter(|seg| !seg.starts_with("die=") && !seg.starts_with("victim="))
+            .collect::<Vec<_>>()
+            .join(":")
+    }
+
     /// Build the topology named by `spec`. Must be bit-deterministic
     /// given the spec string: the coordinator uses it for routing shape
     /// and every worker rebuilds it to own its instance shard.
     pub fn build(spec: &str) -> Result<(Topology, StreamId)> {
         let name = spec.split(':').next().unwrap_or("");
         match name {
-            // null:p=K — entry --shuffle--> sink×K, no emissions.
+            // null:p=K[:die=N:victim=I] — entry --shuffle--> sink×K, no
+            // emissions; instance I panics on its Nth delivery if die>0.
             "null" => {
                 let p = usize_param(spec, "p", 2);
+                let die = u64_param(spec, "die", 0);
+                let victim = usize_param(spec, "victim", 0);
                 let mut b = TopologyBuilder::new("cluster-null");
-                let sink = b.add_processor("sink", p, |_| Box::new(NullSink { seen: 0 }));
+                let fired = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+                let sink = b.add_processor("sink", p, move |i| {
+                    let die_at = (die > 0 && i == victim).then_some(die);
+                    Box::new(NullSink { seen: 0, die_at, fired: std::sync::Arc::clone(&fired) })
+                });
                 let entry = b.stream("entry", None, sink, Grouping::Shuffle);
                 Ok((b.build(), entry))
             }

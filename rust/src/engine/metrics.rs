@@ -85,6 +85,27 @@ impl ClusterMetrics {
     }
 }
 
+/// Fault-tolerance counters (threaded + cluster engines with
+/// checkpointing enabled; zero elsewhere). See [`crate::engine::checkpoint`]
+/// for the snapshot format these count.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryMetrics {
+    /// Checkpoint frames captured (one per instance per round).
+    pub checkpoints: u64,
+    /// Total encoded bytes of all captured checkpoint frames.
+    pub checkpoint_bytes: u64,
+    /// Injected or detected failures (killed tasks / dead workers).
+    pub kills: u64,
+    /// Instances rebuilt from a checkpoint (or fresh, when none existed).
+    pub restores: u64,
+    /// Events replayed from the bounded replay log after restores.
+    pub replayed: u64,
+    /// Events the bounded replay log had already evicted when a failure
+    /// hit — the "documented replay tolerance": a recovered run is
+    /// bit-identical iff this stays 0.
+    pub replay_dropped: u64,
+}
+
 /// Aggregated engine metrics, returned by every engine run.
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
@@ -100,6 +121,8 @@ pub struct EngineMetrics {
     pub flow: FlowControlMetrics,
     /// Socket-plane counters (cluster engine; default-zero elsewhere).
     pub cluster: ClusterMetrics,
+    /// Fault-tolerance counters (checkpointing engines; zero elsewhere).
+    pub recovery: RecoveryMetrics,
 }
 
 impl EngineMetrics {
@@ -114,6 +137,7 @@ impl EngineMetrics {
             wall_ns: 0,
             flow: FlowControlMetrics::default(),
             cluster: ClusterMetrics::default(),
+            recovery: RecoveryMetrics::default(),
         }
     }
 

@@ -102,13 +102,49 @@
 //! [`EngineMetrics`] (`flow`, `per_instance[..].peak_queue_events`);
 //! [`SimCostModel::c_stall_ns`] prices recorded stalls into the simtime
 //! makespan (a credit round-trip on a real DSPE).
+//!
+//! # Recovery model (threaded + cluster engines)
+//!
+//! SAMOA assumes the underlying SPE recovers failed operators; our
+//! engines implement that contract themselves via [`checkpoint`]:
+//!
+//! | engine | failure unit | detection | recovery path |
+//! |---|---|---|---|
+//! | [`ThreadedEngine`] | one task (processor instance) | fault injection (`with_fault`) | in-thread respawn + restore + replay |
+//! | [`ClusterEngine`] | one worker (process/thread) | socket error mid-run, exit status at spawn | respawn worker, `Restore` frames, re-drive log |
+//!
+//! * **Checkpoints** — with `with_checkpoints(every)` the engine
+//!   captures each instance's [`Processor::snapshot`] every `every`
+//!   source events, at a quiescent cut (the threaded engine snapshots a
+//!   task between deliveries; the cluster coordinator runs a snapshot
+//!   round at its source-loop quiescence barrier). Frames use the
+//!   [`checkpoint`] format: tagged f64 sections, sparse-compressed,
+//!   bounds-checked on decode.
+//! * **Replay** — each checkpoint clears a bounded per-instance replay
+//!   log (`with_replay_cap`); events delivered since the last
+//!   checkpoint are re-applied to the restored instance with emissions
+//!   *suppressed* (downstream already saw them — replaying them would
+//!   double-count). Recovery is bit-identical whenever the log covered
+//!   the whole delta; evictions are counted in
+//!   [`metrics::RecoveryMetrics::replay_dropped`] and make the run
+//!   approximate (the documented replay tolerance).
+//! * **Counters** — checkpoints/bytes/kills/restores/replayed/dropped
+//!   land in `EngineMetrics::recovery`; `samoa exp recovery` prices
+//!   checkpoint interval × kill rate against accuracy and throughput.
+//!
+//! [`LocalEngine`]/[`SimTimeEngine`] stay checkpoint-free: they are
+//! deterministic single-threaded references with nothing to kill.
+//!
+//! [`Processor::snapshot`]: crate::topology::processor::Processor::snapshot
 
 pub mod metrics;
+pub mod checkpoint;
 pub mod local;
 pub mod threaded;
 pub mod cluster;
 pub mod simtime;
 
+pub use checkpoint::CheckpointStore;
 pub use cluster::{ClusterEngine, ClusterRun, InstanceReport};
 pub use local::LocalEngine;
 pub use metrics::EngineMetrics;

@@ -84,6 +84,17 @@ use super::metrics::{EngineMetrics, FlowControlMetrics};
 /// Data-plane channel payload: one micro-batch of events.
 type Batch = Vec<Event>;
 
+/// Lock a mutex, recovering the inner value if a panicking holder
+/// poisoned it. A processor panic must surface as *that* panic (the
+/// runner joins the thread and the test harness prints it) — not as a
+/// cascade of secondary `PoisonError` unwraps from every other thread
+/// that touches the wake lock or the collection vector afterwards. The
+/// guarded values here (a generation counter, a result vector pushed as
+/// the final statement of a worker) are never left half-written.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Control-plane message: a control event, or the engine-internal
 /// terminate marker sent only after global post-shutdown quiescence.
 enum CtrlMsg {
@@ -153,6 +164,49 @@ struct FlowStats {
     grows: AtomicU64,
     shrinks: AtomicU64,
     steals: AtomicU64,
+}
+
+/// Engine-wide recovery counters (mirrors `RecoveryMetrics`). Updated by
+/// whichever thread runs the recovering task; read once at collection.
+#[derive(Default)]
+struct RecoveryShared {
+    checkpoints: AtomicU64,
+    checkpoint_bytes: AtomicU64,
+    kills: AtomicU64,
+    restores: AtomicU64,
+    replayed: AtomicU64,
+    replay_dropped: AtomicU64,
+}
+
+/// Per-task checkpoint/replay state. Present on every task when
+/// checkpointing is on, and on the fault target regardless.
+///
+/// The protocol: every delivered event (Shutdown excluded) is appended
+/// to a bounded replay log *before* it is processed; every
+/// `every` events the instance is snapshotted
+/// ([`crate::topology::Processor::snapshot`]) and the log cleared. An
+/// injected kill swaps in the pre-built `spare` instance, restores the
+/// last checkpoint frame into it, and replays the log — with emissions
+/// DISCARDED, because the killed instance already shipped everything it
+/// processed; re-emitting would double-deliver downstream. Recovery is
+/// bit-identical iff the log covered the whole delta (no
+/// `replay_dropped`).
+struct RecoveryState {
+    /// Checkpoint interval in processed events (0 = never checkpoint).
+    every: u64,
+    since_ckpt: u64,
+    /// Events processed by this task (the kill-trigger clock).
+    seen: u64,
+    /// Latest checkpoint frame (None until the first interval elapses).
+    ckpt: Option<Vec<u8>>,
+    replay: std::collections::VecDeque<Event>,
+    replay_cap: usize,
+    /// Fresh replacement instance, pre-built on the main thread from the
+    /// topology factory (and pre-seeded with any `with_restore` frame,
+    /// so a pre-first-checkpoint kill recovers to the seeded start).
+    spare: Option<Box<dyn crate::topology::Processor>>,
+    /// Kill after this many processed events (None once fired).
+    fault_after: Option<u64>,
 }
 
 /// Why a flush was requested — drives the adaptive batch size.
@@ -230,6 +284,18 @@ pub struct ThreadedEngine {
     /// Bench baseline only: deep-copy every broadcast delivery instead of
     /// the alloc-free shared clone (see `engine_throughput`).
     pub deep_copy_broadcast: bool,
+    /// Checkpoint every instance's state every N processed events
+    /// (0 = checkpointing off; see the module's recovery notes).
+    pub checkpoint_every: u64,
+    /// Bound of the per-task replay log, in events. Deltas that outgrow
+    /// it lose their oldest events (`recovery.replay_dropped`) and the
+    /// recovered run is no longer bit-identical.
+    pub replay_cap: usize,
+    /// Fault injection: (pid, iid, kill after N processed events).
+    fault: Option<(usize, usize, u64)>,
+    /// Checkpoint frames applied to instances at startup (rescale /
+    /// re-drive): (pid, iid, frame).
+    restore_frames: Vec<(usize, usize, Vec<u8>)>,
 }
 
 impl Default for ThreadedEngine {
@@ -240,6 +306,10 @@ impl Default for ThreadedEngine {
             adaptive_batch: true,
             workers: None,
             deep_copy_broadcast: false,
+            checkpoint_every: 0,
+            replay_cap: 4096,
+            fault: None,
+            restore_frames: Vec::new(),
         }
     }
 }
@@ -277,6 +347,36 @@ impl ThreadedEngine {
         self.workers = Some(n.max(1));
         self
     }
+
+    /// Checkpoint every instance every `every` processed events (0 = off).
+    pub fn with_checkpoints(mut self, every: u64) -> Self {
+        self.checkpoint_every = every;
+        self
+    }
+
+    /// Cap the per-task replay log (default 4096 events).
+    pub fn with_replay_cap(mut self, cap: usize) -> Self {
+        self.replay_cap = cap.max(1);
+        self
+    }
+
+    /// Inject a fault: kill instance `(pid, iid)` after it has processed
+    /// `after` events, then respawn it from the last checkpoint and
+    /// replay the delta. The run's `metrics.recovery` records the kill.
+    pub fn with_fault(mut self, pid: usize, iid: usize, after: u64) -> Self {
+        self.fault = Some((pid, iid, after.max(1)));
+        self
+    }
+
+    /// Seed instances with checkpoint frames before the run starts —
+    /// the restore half of a shard split/merge or a cross-engine
+    /// re-drive. Each entry is `(pid, iid, frame)`; frames come from
+    /// [`crate::topology::Processor::snapshot`] (possibly merged via
+    /// [`super::checkpoint::merge_shard_frames`]).
+    pub fn with_restore(mut self, frames: Vec<(usize, usize, Vec<u8>)>) -> Self {
+        self.restore_frames = frames;
+        self
+    }
 }
 
 /// Routing state shared by all worker threads.
@@ -299,19 +399,19 @@ impl Wake {
     }
 
     fn notify(&self) {
-        *self.generation.lock().unwrap() += 1;
+        *lock_unpoisoned(&self.generation) += 1;
         self.cv.notify_all();
     }
 
     fn current(&self) -> u64 {
-        *self.generation.lock().unwrap()
+        *lock_unpoisoned(&self.generation)
     }
 
     /// Block until the generation moves past `seen` or `timeout` expires.
     fn wait_past(&self, seen: u64, timeout: Duration) {
-        let mut g = self.generation.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.generation);
         while *g == seen {
-            let (g2, res) = self.cv.wait_timeout(g, timeout).unwrap();
+            let (g2, res) = self.cv.wait_timeout(g, timeout).unwrap_or_else(|e| e.into_inner());
             g = g2;
             if res.timed_out() {
                 return;
@@ -328,6 +428,7 @@ struct Router {
     stream_bytes: Vec<AtomicU64>,
     flow: Flow,
     stats: FlowStats,
+    recovery: RecoveryShared,
     arena: BatchArena,
     batch_cap: usize,
     adaptive: bool,
@@ -612,6 +713,78 @@ fn handle_one(
     router.flow.processed.fetch_add(1, Ordering::SeqCst);
 }
 
+/// `handle_one` plus the recovery protocol (see [`RecoveryState`]): log
+/// the event, process it, then run the checkpoint/kill schedule.
+#[allow(clippy::too_many_arguments)]
+fn handle_recovered(
+    proc_: &mut Box<dyn crate::topology::Processor>,
+    ctx: &mut Ctx,
+    router: &Router,
+    out: &mut OutBuffers,
+    busy_ns: &mut u64,
+    processed: &mut u64,
+    rec: &mut Option<RecoveryState>,
+    event: Event,
+) {
+    let active = match rec {
+        Some(r) => r.every > 0 || r.fault_after.is_some(),
+        None => false,
+    };
+    if !active || matches!(event, Event::Shutdown) {
+        handle_one(proc_, ctx, router, out, busy_ns, processed, event);
+        return;
+    }
+    let r = rec.as_mut().unwrap();
+    if r.replay.len() >= r.replay_cap {
+        r.replay.pop_front();
+        router.recovery.replay_dropped.fetch_add(1, Ordering::Relaxed);
+    }
+    r.replay.push_back(event.clone());
+    handle_one(proc_, ctx, router, out, busy_ns, processed, event);
+    r.seen += 1;
+    if r.fault_after == Some(r.seen) {
+        // Kill the instance mid-stream and bring up its replacement.
+        // Everything the dead instance processed has already been
+        // routed, so the replay below rebuilds *state only* — the
+        // scratch emissions are discarded, not re-routed.
+        r.fault_after = None;
+        router.recovery.kills.fetch_add(1, Ordering::Relaxed);
+        let mut fresh = r.spare.take().expect("fault target has no spare instance");
+        if let Some(frame) = &r.ckpt {
+            fresh
+                .restore(frame)
+                .expect("checkpoint frame rejected by respawned instance");
+        }
+        router.recovery.restores.fetch_add(1, Ordering::Relaxed);
+        for e in r.replay.iter() {
+            router.recovery.replayed.fetch_add(1, Ordering::Relaxed);
+            fresh.process(e.clone(), ctx);
+            ctx.take(); // already delivered pre-kill: suppress re-emission
+        }
+        *proc_ = fresh;
+        return;
+    }
+    if r.every > 0 {
+        r.since_ckpt += 1;
+        if r.since_ckpt >= r.every {
+            r.since_ckpt = 0;
+            if let Some(frame) = proc_.snapshot() {
+                router.recovery.checkpoints.fetch_add(1, Ordering::Relaxed);
+                router
+                    .recovery
+                    .checkpoint_bytes
+                    .fetch_add(frame.len() as u64, Ordering::Relaxed);
+                r.ckpt = Some(frame);
+                // Only a captured frame covers the logged delta; for a
+                // snapshot-less processor the log keeps accumulating so
+                // a kill replays the whole (bounded) history instead of
+                // silently losing everything before this boundary.
+                r.replay.clear();
+            }
+        }
+    }
+}
+
 /// A processor instance as a stealable unit of work (stealing mode).
 struct Task {
     pid: usize,
@@ -624,6 +797,7 @@ struct Task {
     busy_ns: u64,
     processed: u64,
     halted: bool,
+    rec: Option<RecoveryState>,
 }
 
 /// Control events drained per quantum before data is considered.
@@ -647,9 +821,9 @@ fn run_quantum(router: &Router, t: &mut Task) -> bool {
                 return true;
             }
             Ok(CtrlMsg::Event(e)) => {
-                handle_one(
+                handle_recovered(
                     &mut t.proc_, &mut t.ctx, router, &mut t.out, &mut t.busy_ns,
-                    &mut t.processed, e,
+                    &mut t.processed, &mut t.rec, e,
                 );
                 did = true;
             }
@@ -665,9 +839,9 @@ fn run_quantum(router: &Router, t: &mut Task) -> bool {
                     let mb = &router.mailboxes[t.pid][t.iid];
                     mb.depth.fetch_sub(batch.len() as i64, Ordering::SeqCst);
                     for e in batch.drain(..) {
-                        handle_one(
+                        handle_recovered(
                             &mut t.proc_, &mut t.ctx, router, &mut t.out, &mut t.busy_ns,
-                            &mut t.processed, e,
+                            &mut t.processed, &mut t.rec, e,
                         );
                     }
                     router.arena.put(batch);
@@ -750,6 +924,7 @@ impl ThreadedEngine {
                 shrinks: AtomicU64::new(0),
                 steals: AtomicU64::new(0),
             },
+            recovery: RecoveryShared::default(),
             arena: BatchArena::new(4 * n_instances + 32),
             batch_cap: batch,
             adaptive: self.adaptive_batch,
@@ -757,6 +932,52 @@ impl ThreadedEngine {
             deep_copy_broadcast: self.deep_copy_broadcast,
             wake: Wake::new(),
         });
+
+        // Startup restore frames (rescale / re-drive) and fault targets,
+        // all resolved on the main thread before any worker spawns.
+        let mut restore_map: std::collections::HashMap<(usize, usize), Vec<u8>> =
+            self.restore_frames.iter().cloned().map(|(p, i, f)| ((p, i), f)).collect();
+        // Build the per-instance recovery state (and its spare instance)
+        // on the main thread; `Processor: Send` lets it cross into the
+        // worker. Restore frames are applied to the primary *and* the
+        // spare, so a kill before the first checkpoint still recovers to
+        // the seeded start rather than a blank factory instance.
+        let mk_rec = |pid: usize,
+                      iid: usize,
+                      proc_: &mut Box<dyn crate::topology::Processor>,
+                      factory: &dyn Fn(usize) -> Box<dyn crate::topology::Processor>,
+                      restore_map: &mut std::collections::HashMap<(usize, usize), Vec<u8>>|
+         -> Option<RecoveryState> {
+            let frame = restore_map.remove(&(pid, iid));
+            if let Some(f) = &frame {
+                proc_.restore(f).expect("startup restore frame rejected");
+                router.recovery.restores.fetch_add(1, Ordering::Relaxed);
+            }
+            let fault_after = match self.fault {
+                Some((fp, fi, n)) if fp == pid && fi == iid => Some(n),
+                _ => None,
+            };
+            if self.checkpoint_every == 0 && fault_after.is_none() {
+                return None;
+            }
+            let spare = fault_after.map(|_| {
+                let mut s = factory(iid);
+                if let Some(f) = &frame {
+                    s.restore(f).expect("startup restore frame rejected by spare");
+                }
+                s
+            });
+            Some(RecoveryState {
+                every: self.checkpoint_every,
+                since_ckpt: 0,
+                seen: 0,
+                ckpt: None,
+                replay: std::collections::VecDeque::new(),
+                replay_cap: self.replay_cap,
+                spare,
+                fault_after,
+            })
+        };
 
         // Spawn execution: pinned threads or a stealing worker pool.
         let done: Arc<Mutex<Vec<(usize, usize, Box<dyn crate::topology::Processor>, u64, u64)>>> =
@@ -770,6 +991,8 @@ impl ThreadedEngine {
                     let rrow: Vec<_> = receivers[pid].drain(..).enumerate().collect();
                     for (iid, (drx, crx)) in rrow {
                         let mut proc_ = (pdef.factory)(iid);
+                        let mut rec =
+                            mk_rec(pid, iid, &mut proc_, &pdef.factory, &mut restore_map);
                         let router = Arc::clone(&router);
                         let done = Arc::clone(&done);
                         let par = pdef.parallelism;
@@ -820,9 +1043,9 @@ impl ThreadedEngine {
                                     match work {
                                         Work::Ctrl(CtrlMsg::Halt) => break 'outer,
                                         Work::Ctrl(CtrlMsg::Event(e)) => {
-                                            handle_one(
+                                            handle_recovered(
                                                 &mut proc_, &mut ctx, &router, &mut out,
-                                                &mut busy_ns, &mut processed, e,
+                                                &mut busy_ns, &mut processed, &mut rec, e,
                                             );
                                         }
                                         Work::Data(mut batch) => {
@@ -830,9 +1053,9 @@ impl ThreadedEngine {
                                             mb.depth
                                                 .fetch_sub(batch.len() as i64, Ordering::SeqCst);
                                             for e in batch.drain(..) {
-                                                handle_one(
+                                                handle_recovered(
                                                     &mut proc_, &mut ctx, &router, &mut out,
-                                                    &mut busy_ns, &mut processed, e,
+                                                    &mut busy_ns, &mut processed, &mut rec, e,
                                                 );
                                             }
                                             router.arena.put(batch);
@@ -840,7 +1063,7 @@ impl ThreadedEngine {
                                     }
                                 }
                                 router.flush_final(&mut out);
-                                done.lock().unwrap().push((pid, iid, proc_, busy_ns, processed));
+                                lock_unpoisoned(&done).push((pid, iid, proc_, busy_ns, processed));
                             })
                             .unwrap();
                         handles.push(handle);
@@ -852,10 +1075,12 @@ impl ThreadedEngine {
                 for (pid, pdef) in topology.processors.iter().enumerate() {
                     let rrow: Vec<_> = receivers[pid].drain(..).enumerate().collect();
                     for (iid, (drx, crx)) in rrow {
+                        let mut proc_ = (pdef.factory)(iid);
+                        let rec = mk_rec(pid, iid, &mut proc_, &pdef.factory, &mut restore_map);
                         tasks.push(Mutex::new(Task {
                             pid,
                             iid,
-                            proc_: (pdef.factory)(iid),
+                            proc_,
                             drx,
                             crx,
                             ctx: Ctx::new(iid, pdef.parallelism),
@@ -863,6 +1088,7 @@ impl ThreadedEngine {
                             busy_ns: 0,
                             processed: 0,
                             halted: false,
+                            rec,
                         }));
                     }
                 }
@@ -1015,20 +1241,28 @@ impl ThreadedEngine {
             arena_reuses: router.arena.reuses(),
             arena_allocs: router.arena.allocations(),
         };
+        metrics.recovery = super::metrics::RecoveryMetrics {
+            checkpoints: router.recovery.checkpoints.load(Ordering::Relaxed),
+            checkpoint_bytes: router.recovery.checkpoint_bytes.load(Ordering::Relaxed),
+            kills: router.recovery.kills.load(Ordering::Relaxed),
+            restores: router.recovery.restores.load(Ordering::Relaxed),
+            replayed: router.recovery.replayed.load(Ordering::Relaxed),
+            replay_dropped: router.recovery.replay_dropped.load(Ordering::Relaxed),
+        };
         let mut collect = collect;
         match slots_arc {
             Some(slots) => {
                 let slots = Arc::try_unwrap(slots)
                     .unwrap_or_else(|_| panic!("worker kept a task slot alive"));
                 for slot in slots {
-                    let t = slot.into_inner().unwrap();
+                    let t = slot.into_inner().unwrap_or_else(|e| e.into_inner());
                     metrics.per_instance[t.pid][t.iid].busy_ns = t.busy_ns;
                     metrics.per_instance[t.pid][t.iid].events_processed = t.processed;
                     collect(t.pid, t.iid, t.proc_.as_ref());
                 }
             }
             None => {
-                for (pid, iid, proc_, busy, processed) in done.lock().unwrap().iter() {
+                for (pid, iid, proc_, busy, processed) in lock_unpoisoned(&done).iter() {
                     metrics.per_instance[*pid][*iid].busy_ns = *busy;
                     metrics.per_instance[*pid][*iid].events_processed = *processed;
                     collect(*pid, *iid, proc_.as_ref());

@@ -48,6 +48,57 @@ impl ClassificationMeasure {
         self.correct as f64 / self.n as f64
     }
 
+    /// Flatten the whole measure into one checkpoint section
+    /// (`engine::checkpoint`): counters, shape, curve pairs, then the
+    /// confusion matrix row-major. Everything is either a small integer
+    /// (exact in f64) or an f64 already, so the round trip through
+    /// [`ClassificationMeasure::restore_payload`] is bit-exact.
+    pub fn state_payload(&self) -> Vec<f64> {
+        let mut p = vec![
+            self.n as f64,
+            self.correct as f64,
+            self.n_classes as f64,
+            self.window as f64,
+            self.curve.len() as f64,
+        ];
+        for (at, acc) in &self.curve {
+            p.push(*at as f64);
+            p.push(*acc);
+        }
+        for row in &self.confusion {
+            for &c in row {
+                p.push(c as f64);
+            }
+        }
+        p
+    }
+
+    /// Adopt a [`ClassificationMeasure::state_payload`] snapshot,
+    /// replacing all current state.
+    pub fn restore_payload(&mut self, p: &[f64]) -> crate::Result<()> {
+        crate::ensure!(p.len() >= 5, "measure restore: header truncated");
+        let n_classes = p[2] as usize;
+        let curve_len = p[4] as usize;
+        let need = 5 + 2 * curve_len + n_classes * n_classes;
+        crate::ensure!(p.len() == need, "measure restore: got {} f64s, need {need}", p.len());
+        self.n = p[0] as u64;
+        self.correct = p[1] as u64;
+        self.n_classes = n_classes;
+        self.window = (p[3] as u64).max(1);
+        self.curve = (0..curve_len)
+            .map(|i| (p[5 + 2 * i] as u64, p[6 + 2 * i]))
+            .collect();
+        let base = 5 + 2 * curve_len;
+        self.confusion = (0..n_classes)
+            .map(|i| {
+                (0..n_classes)
+                    .map(|j| p[base + i * n_classes + j] as u64)
+                    .collect()
+            })
+            .collect();
+        Ok(())
+    }
+
     /// Cohen's kappa from the confusion matrix.
     pub fn kappa(&self) -> f64 {
         let total: u64 = self.confusion.iter().flatten().sum();
@@ -120,6 +171,44 @@ impl RegressionMeasure {
             return 0.0;
         }
         (self.sq_sum / self.n as f64).sqrt()
+    }
+
+    /// Checkpoint section twin of
+    /// [`ClassificationMeasure::state_payload`]: counters, label range,
+    /// then `(at, mae, rmse)` curve triples. `abs_sum`/`sq_sum` are
+    /// carried as raw f64 words, so restore is bit-exact.
+    pub fn state_payload(&self) -> Vec<f64> {
+        let mut p = vec![
+            self.n as f64,
+            self.abs_sum,
+            self.sq_sum,
+            self.window as f64,
+            self.label_range,
+            self.curve.len() as f64,
+        ];
+        for (at, mae, rmse) in &self.curve {
+            p.push(*at as f64);
+            p.push(*mae);
+            p.push(*rmse);
+        }
+        p
+    }
+
+    /// Adopt a [`RegressionMeasure::state_payload`] snapshot.
+    pub fn restore_payload(&mut self, p: &[f64]) -> crate::Result<()> {
+        crate::ensure!(p.len() >= 6, "measure restore: header truncated");
+        let curve_len = p[5] as usize;
+        let need = 6 + 3 * curve_len;
+        crate::ensure!(p.len() == need, "measure restore: got {} f64s, need {need}", p.len());
+        self.n = p[0] as u64;
+        self.abs_sum = p[1];
+        self.sq_sum = p[2];
+        self.window = (p[3] as u64).max(1);
+        self.label_range = p[4];
+        self.curve = (0..curve_len)
+            .map(|i| (p[6 + 3 * i] as u64, p[7 + 3 * i], p[8 + 3 * i]))
+            .collect();
+        Ok(())
     }
 
     pub fn nmae(&self) -> f64 {

@@ -122,10 +122,21 @@ pub fn prequential_run_regression(
 
 /// Shared sink the topology evaluator publishes into (thread-safe: the
 /// threaded engine runs the evaluator on its own thread).
+///
+/// Every lock site recovers from poisoning: a panicking task (e.g. an
+/// injected fault in the threaded engine's recovery mode) must not turn
+/// the collect phase into a second, misleading `PoisonError` panic —
+/// the measures are plain counters, valid after any interrupted `add`,
+/// and the *original* panic is the failure that should surface.
 #[derive(Debug)]
 pub struct EvalSink {
     pub classification: Mutex<ClassificationMeasure>,
     pub regression: Mutex<RegressionMeasure>,
+}
+
+/// Lock recovering the value from a poisoned mutex (see [`EvalSink`]).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 impl EvalSink {
@@ -137,15 +148,15 @@ impl EvalSink {
     }
 
     pub fn accuracy(&self) -> f64 {
-        self.classification.lock().unwrap().accuracy()
+        lock_unpoisoned(&self.classification).accuracy()
     }
 
     pub fn mae(&self) -> f64 {
-        self.regression.lock().unwrap().mae()
+        lock_unpoisoned(&self.regression).mae()
     }
 
     pub fn rmse(&self) -> f64 {
-        self.regression.lock().unwrap().rmse()
+        lock_unpoisoned(&self.regression).rmse()
     }
 }
 
@@ -235,16 +246,16 @@ impl Processor for EvaluatorProcessor {
         if let Event::Prediction { truth, output, .. } = event {
             match (truth, output) {
                 (Label::Class(t), Output::Class(p)) => {
-                    self.sink.classification.lock().unwrap().add(t, Some(p));
+                    lock_unpoisoned(&self.sink.classification).add(t, Some(p));
                 }
                 (Label::Class(t), Output::None) => {
-                    self.sink.classification.lock().unwrap().add(t, None);
+                    lock_unpoisoned(&self.sink.classification).add(t, None);
                 }
                 (Label::Numeric(t), Output::Numeric(p)) => {
-                    self.sink.regression.lock().unwrap().add(t, p);
+                    lock_unpoisoned(&self.sink.regression).add(t, p);
                 }
                 (Label::Numeric(t), Output::None) => {
-                    self.sink.regression.lock().unwrap().add(t, 0.0);
+                    lock_unpoisoned(&self.sink.regression).add(t, 0.0);
                 }
                 _ => {}
             }
@@ -259,8 +270,8 @@ impl Processor for EvaluatorProcessor {
     /// (the cluster engine collects these from worker processes where
     /// the `Arc<EvalSink>` handle is unreachable).
     fn report(&self) -> Vec<(&'static str, f64)> {
-        let c = self.sink.classification.lock().unwrap();
-        let r = self.sink.regression.lock().unwrap();
+        let c = lock_unpoisoned(&self.sink.classification);
+        let r = lock_unpoisoned(&self.sink.regression);
         vec![
             ("n", c.n as f64),
             ("correct", c.correct as f64),
@@ -270,6 +281,30 @@ impl Processor for EvaluatorProcessor {
             ("mae", r.mae()),
             ("rmse", r.rmse()),
         ]
+    }
+
+    /// Two sections: the classification and regression measures'
+    /// flattened state. The sink is `Arc`-shared, so a respawned
+    /// evaluator's `restore` *rewinds* the shared measures to the
+    /// checkpoint cut and the engine's replay re-applies the delta —
+    /// the same convergence path as owned state.
+    fn snapshot(&self) -> Option<Vec<u8>> {
+        use crate::engine::checkpoint::{encode_frame, TAG_META_BASE};
+        let c = lock_unpoisoned(&self.sink.classification).state_payload();
+        let r = lock_unpoisoned(&self.sink.regression).state_payload();
+        Some(encode_frame(&[(TAG_META_BASE, c), (TAG_META_BASE + 1, r)]))
+    }
+
+    fn restore(&mut self, frame: &[u8]) -> crate::Result<()> {
+        use crate::engine::checkpoint::{decode_frame, section, TAG_META_BASE};
+        let sections = decode_frame(frame)?;
+        let c = section(&sections, TAG_META_BASE)
+            .ok_or_else(|| crate::anyhow!("evaluator restore: classification section missing"))?;
+        let r = section(&sections, TAG_META_BASE + 1)
+            .ok_or_else(|| crate::anyhow!("evaluator restore: regression section missing"))?;
+        lock_unpoisoned(&self.sink.classification).restore_payload(c)?;
+        lock_unpoisoned(&self.sink.regression).restore_payload(r)?;
+        Ok(())
     }
 }
 

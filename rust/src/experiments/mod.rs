@@ -15,6 +15,7 @@ pub mod preprocess_exps;
 pub mod sync_cost;
 pub mod flowcontrol;
 pub mod cluster_exp;
+pub mod recovery_exp;
 
 use crate::common::cli::Args;
 
@@ -40,6 +41,7 @@ pub fn run(id: &str, args: &Args) -> crate::Result<()> {
         "sync-cost" => sync_cost::sync_cost(args),
         "flowcontrol" => flowcontrol::flowcontrol(args),
         "cluster" => cluster_exp::cluster(args),
+        "recovery" => recovery_exp::recovery(args),
         "all" => {
             for e in ALL {
                 println!("\n================ {e} ================");
@@ -55,7 +57,7 @@ pub fn run(id: &str, args: &Args) -> crate::Result<()> {
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table3", "table4", "table5",
     "table6", "table7", "fig12", "fig13", "fig14", "preprocess", "sync-cost", "flowcontrol",
-    "cluster",
+    "cluster", "recovery",
 ];
 
 /// Markdown-ish table printer.

@@ -1,0 +1,201 @@
+//! `samoa exp recovery` — price the fault-tolerance layer: checkpoint
+//! interval × kill point against accuracy and throughput, on both
+//! engines that implement recovery (see the recovery-model section of
+//! [`crate::engine`]).
+//!
+//! Two parts:
+//!
+//! 1. **Threaded sweep** — the `sync` spec topology (pipeline shards +
+//!    StatsSync + Hoeffding tree + evaluator) on [`ThreadedEngine`],
+//!    killing one pipeline shard mid-stream via `with_fault` at a grid
+//!    of checkpoint intervals × kill points. Each row holds the
+//!    recovered run against the no-fault reference: Δn and Δaccuracy
+//!    are 0 whenever the replay log covered the whole delta
+//!    (`dropped = 0`); a tiny `--replay-cap` makes the loss visible.
+//! 2. **Cluster kill** — the `null` spec topology with an injected
+//!    worker death (`die=`/`victim=` spec params) on [`ClusterEngine`]:
+//!    the victim worker panics mid-run, the coordinator respawns it,
+//!    restores the held checkpoint and re-drives the replay log; the
+//!    row shows every delivery accounted for. Subprocess mode first,
+//!    thread-mode workers as fallback (same protocol, no exec).
+//!
+//! Knobs: `--n` instances (default 20000), `--p` parallelism (default
+//! 2), `--stream` twin (default elec — the sync spec needs a
+//! classification stream), `--seed`, `--replay-cap`, `--smoke` one kill
+//! per engine for CI.
+
+use crate::common::cli::Args;
+use crate::engine::cluster::{spec, ClusterEngine};
+use crate::engine::metrics::EngineMetrics;
+use crate::engine::threaded::ThreadedEngine;
+use crate::topology::Event;
+
+use super::print_table;
+
+/// Sum the `n`/`correct` pairs every evaluator instance reports — the
+/// collect-side twin of `ClusterRun::kv_sum`.
+#[derive(Default)]
+struct AccTally {
+    n: f64,
+    correct: f64,
+}
+
+impl AccTally {
+    fn add(&mut self, proc_: &dyn crate::topology::Processor) {
+        for (k, v) in proc_.report() {
+            match k {
+                "n" => self.n += v,
+                "correct" => self.correct += v,
+                _ => {}
+            }
+        }
+    }
+
+    fn accuracy(&self) -> f64 {
+        if self.n > 0.0 {
+            self.correct / self.n
+        } else {
+            0.0
+        }
+    }
+}
+
+fn source_of(stream: &str, seed: u64, n: u64) -> Box<dyn Iterator<Item = Event>> {
+    let mut s = crate::experiments::dataset_stream(stream, seed);
+    Box::new((0..n).map_while(move |id| s.next_instance().map(|inst| Event::Instance { id, inst })))
+}
+
+fn run_threaded(
+    eng: &ThreadedEngine,
+    spec_str: &str,
+    stream: &str,
+    seed: u64,
+    n: u64,
+) -> crate::Result<(EngineMetrics, AccTally)> {
+    let (topo, entry) = spec::build(spec_str)?;
+    let mut tally = AccTally::default();
+    let m = eng.run(&topo, entry, source_of(stream, seed, n), |_, _, pr| tally.add(pr));
+    Ok((m, tally))
+}
+
+pub fn recovery(args: &Args) -> crate::Result<()> {
+    let smoke = args.flag("smoke");
+    let n: u64 = args.u64("n", if smoke { 3_000 } else { 20_000 });
+    let p = args.usize("p", 2);
+    let stream = args.get_or("stream", "elec").to_string();
+    let seed = args.u64("seed", 42);
+    let replay_cap = args.usize("replay-cap", 65536);
+
+    // ------------------------------------------- 1. threaded sweep
+    // Kill one pipeline shard (pid 0, iid 0); under shuffle it sees
+    // about n/p deliveries, so kill points are fractions of that.
+    let spec_str = format!("sync:stream={stream}:p={p}:interval=64:seed={seed}");
+    let (ref_m, ref_tally) = run_threaded(&ThreadedEngine::default(), &spec_str, &stream, seed, n)?;
+    let per_shard = n / p as u64;
+    let intervals: &[u64] = if smoke { &[256] } else { &[256, 1024, 4096] };
+    let kill_ats: &[u64] = if smoke {
+        &[2]
+    } else {
+        &[4, 2] // divisors of per_shard: kill at 1/4 and 1/2 of the shard's stream
+    };
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for &interval in intervals {
+        for &frac in kill_ats {
+            let kill_at = (per_shard / frac).max(1);
+            let eng = ThreadedEngine::default()
+                .with_checkpoints(interval)
+                .with_replay_cap(replay_cap)
+                .with_fault(0, 0, kill_at);
+            let (m, tally) = run_threaded(&eng, &spec_str, &stream, seed, n)?;
+            crate::ensure!(m.recovery.kills == 1, "injected threaded fault did not fire");
+            let r = &m.recovery;
+            rows.push(vec![
+                interval.to_string(),
+                kill_at.to_string(),
+                r.checkpoints.to_string(),
+                r.replayed.to_string(),
+                r.replay_dropped.to_string(),
+                format!("{:.0}", tally.n),
+                format!("{:+.0}", tally.n - ref_tally.n),
+                format!("{:.4}", tally.accuracy()),
+                format!("{:+.4}", tally.accuracy() - ref_tally.accuracy()),
+                format!("{:.0}", m.wall_throughput()),
+            ]);
+        }
+    }
+    print_table(
+        &format!(
+            "threaded recovery sweep (sync topology, {n} inst, p={p}, \
+             reference acc {:.4}, {:.0} inst/s)",
+            ref_tally.accuracy(),
+            ref_m.wall_throughput()
+        ),
+        &[
+            "ckpt every",
+            "kill@",
+            "ckpts",
+            "replayed",
+            "dropped",
+            "n",
+            "Δn",
+            "acc",
+            "Δacc",
+            "inst/s",
+        ],
+        &rows,
+    );
+
+    // ------------------------------------------- 2. cluster kill
+    // One worker death per run: sink instance 0 (on worker 0) panics at
+    // its `die`th delivery; the coordinator detects the socket failure,
+    // respawns the worker and re-drives it from the held checkpoint.
+    let die = (per_shard / 2).max(1);
+    let cl_spec = format!("null:p={p}:die={die}:victim=0");
+    let intervals: &[u64] = if smoke { &[64] } else { &[64, 256, 1024] };
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for &interval in intervals {
+        let eng = ClusterEngine::new()
+            .with_workers(p)
+            .with_checkpoints(interval)
+            .with_replay_cap(replay_cap);
+        let make = || {
+            Box::new((0..n).map(|id| Event::Instance {
+                id,
+                inst: crate::core::instance::Instance::dense(
+                    vec![0.25; 8],
+                    crate::core::instance::Label::None,
+                ),
+            })) as Box<dyn Iterator<Item = Event>>
+        };
+        let (run, mode) = match eng.run_spec(&cl_spec, make()) {
+            Ok(run) => (run, "procs"),
+            Err(e) => {
+                eprintln!(
+                    "[recovery] subprocess mode failed for '{cl_spec}' ({e:#}); \
+                     falling back to worker threads"
+                );
+                let (topo, entry) = spec::build(&cl_spec)?;
+                (eng.run(&topo, entry, make())?, "threads")
+            }
+        };
+        let r = &run.metrics.recovery;
+        crate::ensure!(r.kills == 1, "injected cluster fault did not fire");
+        rows.push(vec![
+            interval.to_string(),
+            mode.to_string(),
+            die.to_string(),
+            r.checkpoints.to_string(),
+            r.replayed.to_string(),
+            r.replay_dropped.to_string(),
+            format!("{:.0}", run.kv_sum("seen")),
+            n.to_string(),
+            format!("{:.0}", run.metrics.wall_throughput()),
+        ]);
+    }
+    print_table(
+        &format!("cluster worker-death recovery (null topology, {n} inst, {p} workers)"),
+        &["ckpt every", "mode", "die@", "ckpts", "replayed", "dropped", "seen", "sent", "inst/s"],
+        &rows,
+    );
+    Ok(())
+}

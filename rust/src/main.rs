@@ -66,6 +66,11 @@ fn main() {
                  --tcp --threads --smoke (multi-process wire-cost sweep + VHT/StatsSync \
                  workloads over sockets, measured vs SimCostModel)"
             );
+            println!(
+                "exp recovery knobs: --n 20000 --p 2 --stream elec --seed 42 \
+                 --replay-cap 65536 --smoke (checkpoint interval × kill point vs \
+                 accuracy/throughput, threaded fault injection + cluster worker death)"
+            );
             Ok(())
         }
         "backend" => {

@@ -346,6 +346,72 @@ impl Processor for PipelineProcessor {
     fn as_any(&self) -> Option<&dyn std::any::Any> {
         Some(self)
     }
+
+    /// Checkpoint frame layout (tags per `engine::checkpoint`):
+    ///
+    /// * `stage` (one section per stateful stage) — the stage's full
+    ///   `stats_snapshot` vector; `restore` adopts it via `stats_apply`
+    ///   on the freshly built (empty-pending) pipeline, which is exact.
+    /// * `TAG_META_BASE` — `[emissions, gate_fires]`.
+    /// * `TAG_META_BASE + 1 + slot` — `[staleness, round, fired]` per
+    ///   sync slot, so a restored shard resumes its emission cadence and
+    ///   round ids where the checkpoint cut them.
+    ///
+    /// ADWIN gate windows are *not* captured: a restored gate restarts
+    /// empty, which can only delay (never corrupt) the next drift-gated
+    /// emission — the max-staleness backstop still bounds it.
+    fn snapshot(&self) -> Option<Vec<u8>> {
+        use crate::engine::checkpoint::{encode_frame, TAG_META_BASE};
+        let mut sections: Vec<(u32, Vec<f64>)> = self
+            .pipeline
+            .stateful_stages()
+            .into_iter()
+            .map(|stage| {
+                (stage as u32, self.pipeline.stats_snapshot(stage).unwrap_or_default())
+            })
+            .collect();
+        if let Some(sync) = self.sync.as_ref() {
+            sections.push((TAG_META_BASE, vec![sync.emissions as f64, sync.gate_fires as f64]));
+            for slot in 0..sync.stages.len() {
+                sections.push((
+                    TAG_META_BASE + 1 + slot as u32,
+                    vec![
+                        sync.staleness[slot] as f64,
+                        sync.rounds[slot] as f64,
+                        if sync.fired[slot] { 1.0 } else { 0.0 },
+                    ],
+                ));
+            }
+        }
+        Some(encode_frame(&sections))
+    }
+
+    fn restore(&mut self, frame: &[u8]) -> crate::Result<()> {
+        use crate::engine::checkpoint::{decode_frame, section, TAG_META_BASE};
+        let sections = decode_frame(frame)?;
+        for stage in self.pipeline.stateful_stages() {
+            let Some(payload) = section(&sections, stage as u32) else {
+                crate::bail!("pipeline restore: missing stage {stage} section");
+            };
+            self.pipeline.stats_apply(stage, payload);
+        }
+        if let Some(sync) = self.sync.as_mut() {
+            if let Some(meta) = section(&sections, TAG_META_BASE) {
+                crate::ensure!(meta.len() == 2, "pipeline restore: bad sync meta section");
+                sync.emissions = meta[0] as u64;
+                sync.gate_fires = meta[1] as u64;
+            }
+            for slot in 0..sync.stages.len() {
+                if let Some(s) = section(&sections, TAG_META_BASE + 1 + slot as u32) {
+                    crate::ensure!(s.len() == 3, "pipeline restore: bad sync slot section");
+                    sync.staleness[slot] = s[0] as u64;
+                    sync.rounds[slot] = s[1] as u64;
+                    sync.fired[slot] = s[2] != 0.0;
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Which learner rides behind the pipeline shards: a sequential

@@ -268,6 +268,58 @@ impl Processor for StatsSyncProcessor {
             ("skew_rounds", self.skew_rounds() as f64),
         ]
     }
+
+    /// Checkpoint = the master pipeline's full per-stage snapshots (the
+    /// merged statistics — every delta merged before the cut is in
+    /// there) plus the four diagnostic counters. Open-round *membership*
+    /// (which shards contributed to a round still open at the cut) is
+    /// deliberately not captured: restored rounds restart empty, so a
+    /// kill landing mid-round can shift later completed/skew round
+    /// classification — the master statistics themselves stay exact,
+    /// because replay re-merges only post-checkpoint deltas, each
+    /// exactly once.
+    fn snapshot(&self) -> Option<Vec<u8>> {
+        use crate::engine::checkpoint::{encode_frame, TAG_META_BASE};
+        let mut sections: Vec<(u32, Vec<f64>)> = self
+            .master
+            .stateful_stages()
+            .into_iter()
+            .map(|stage| (stage as u32, self.master.stats_snapshot(stage).unwrap_or_default()))
+            .collect();
+        sections.push((
+            TAG_META_BASE,
+            vec![
+                self.deltas_merged as f64,
+                self.broadcasts as f64,
+                self.completed_rounds as f64,
+                self.skew_rounds as f64,
+            ],
+        ));
+        Some(encode_frame(&sections))
+    }
+
+    fn restore(&mut self, frame: &[u8]) -> crate::Result<()> {
+        use crate::engine::checkpoint::{decode_frame, section, TAG_META_BASE};
+        let sections = decode_frame(frame)?;
+        for stage in self.master.stateful_stages() {
+            let Some(payload) = section(&sections, stage as u32) else {
+                crate::bail!("stats-sync restore: missing stage {stage} section");
+            };
+            self.master.stats_apply(stage, payload);
+        }
+        if let Some(meta) = section(&sections, TAG_META_BASE) {
+            crate::ensure!(meta.len() == 4, "stats-sync restore: bad counter section");
+            self.deltas_merged = meta[0] as u64;
+            self.broadcasts = meta[1] as u64;
+            self.completed_rounds = meta[2] as u64;
+            self.skew_rounds = meta[3] as u64;
+        }
+        for r in &mut self.rounds {
+            r.clear();
+            r.last_round.fill(None);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

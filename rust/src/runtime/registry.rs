@@ -41,26 +41,54 @@ pub fn force_backend(b: Backend) {
 }
 
 fn decide_backend() -> Backend {
-    match std::env::var("SAMOA_BACKEND").as_deref() {
+    // `xla` used to share the `auto` arm here, so an explicit request
+    // silently fell back to native when artifacts were absent or stale —
+    // the worst failure mode for a benchmark run. Explicit `xla` now
+    // aborts with the manifest diagnostic; only `auto` (and unset) keep
+    // the quiet fallback.
+    let explicit_xla = match std::env::var("SAMOA_BACKEND").as_deref() {
         Ok("native") => return Backend::Native,
-        Ok("xla") | Ok("auto") | Err(_) => {}
+        Ok("xla") => true,
+        Ok("auto") | Err(_) => false,
         Ok(other) => {
             eprintln!("[samoa] unknown SAMOA_BACKEND={other}, using auto");
+            false
         }
-    }
+    };
     match artifacts_dir() {
         Some(dir) => {
-            let manifest = std::fs::read_to_string(dir.join("manifest.txt")).ok();
+            let path = dir.join("manifest.txt");
+            let manifest = std::fs::read_to_string(&path).ok();
             match manifest.and_then(|t| Manifest::parse(&t)) {
                 Some(m) if m.compatible() => Backend::Xla,
+                Some(_) if explicit_xla => {
+                    panic!(
+                        "SAMOA_BACKEND=xla but {} has an incompatible shape set — \
+                         rebuild with `make artifacts`",
+                        path.display()
+                    );
+                }
                 Some(_) => {
                     eprintln!(
                         "[samoa] artifact manifest shape mismatch — rebuild with `make artifacts`; using native backend"
                     );
                     Backend::Native
                 }
+                None if explicit_xla => {
+                    panic!(
+                        "SAMOA_BACKEND=xla but {} is missing or unparsable — \
+                         run `make artifacts` first",
+                        path.display()
+                    );
+                }
                 None => Backend::Native,
             }
+        }
+        None if explicit_xla => {
+            panic!(
+                "SAMOA_BACKEND=xla but no artifacts directory was found \
+                 (set SAMOA_ARTIFACTS or run `make artifacts` at the repo root)"
+            );
         }
         None => Backend::Native,
     }

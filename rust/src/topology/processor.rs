@@ -75,6 +75,28 @@ pub trait Processor: Send {
     fn report(&self) -> Vec<(&'static str, f64)> {
         Vec::new()
     }
+
+    /// Serialize this instance's recoverable state into a checkpoint
+    /// frame (`engine::checkpoint` format). `None` — the default — marks
+    /// a stateless (or non-recoverable) processor: the engines skip it
+    /// during checkpoint rounds and a respawned replacement starts
+    /// fresh, rebuilding from the replayed delta alone.
+    ///
+    /// Contract with [`Processor::restore`]: for every state reachable
+    /// by `process`, `restore(snapshot())` on a freshly built instance
+    /// must reproduce the captured state bit-exactly (the
+    /// `checkpoint_roundtrip` suite pins this per impl).
+    fn snapshot(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Adopt a checkpoint frame previously produced by
+    /// [`Processor::snapshot`] on an instance of the same concrete type
+    /// and shape. Called on a freshly built instance before any replayed
+    /// events. Errors abort the recovery (the engine surfaces them).
+    fn restore(&mut self, _frame: &[u8]) -> crate::Result<()> {
+        Ok(())
+    }
 }
 
 /// Blanket helper so `Box<dyn Processor>` also implements `Processor`.
@@ -101,5 +123,13 @@ impl Processor for Box<dyn Processor> {
 
     fn report(&self) -> Vec<(&'static str, f64)> {
         (**self).report()
+    }
+
+    fn snapshot(&self) -> Option<Vec<u8>> {
+        (**self).snapshot()
+    }
+
+    fn restore(&mut self, frame: &[u8]) -> crate::Result<()> {
+        (**self).restore(frame)
     }
 }

@@ -1,0 +1,327 @@
+//! Checkpoint-frame and snapshot/restore roundtrip properties — the
+//! bit-identity contract the recovery layer (`engine::checkpoint` +
+//! `Processor::snapshot`/`restore`) rests on, probed at three layers
+//! with the same discipline as `codec_roundtrip.rs`:
+//!
+//! * the frame codec itself: NaN payload bits, `-0.0` vs `+0.0` under
+//!   the sparse form, re-encode byte-stability, every truncation and a
+//!   corrupted header rejected;
+//! * every `MergeableState` impl: `delta()` pushed through
+//!   `encode_frame`/`decode_frame` and adopted by a fresh instance via
+//!   `apply_delta` must reproduce the payload bits exactly;
+//! * every `Processor::snapshot` impl (pipeline shard, stats-sync,
+//!   evaluator, VHT model aggregator): snapshot → fresh factory build →
+//!   `restore` → re-snapshot must reproduce the frame byte-for-byte —
+//!   exactly what a respawn does before replaying the delta.
+
+use samoa::common::Rng;
+use samoa::core::instance::{Instance, Label};
+use samoa::core::Schema;
+use samoa::engine::checkpoint::{
+    decode_frame, encode_frame, merge_shard_frames, section, CheckpointStore, TAG_META_BASE,
+};
+use samoa::engine::cluster::spec;
+use samoa::engine::LocalEngine;
+use samoa::preprocess::merge::payloads_close;
+use samoa::preprocess::{
+    CountMinSketch, Discretizer, MergeableState, MinMaxScaler, MisraGries, Pipeline,
+    StandardScaler, Transform,
+};
+use samoa::topology::{Event, Processor};
+
+const DIM: usize = 3;
+
+fn schema() -> Schema {
+    Schema::classification("t", Schema::all_numeric(DIM), 2)
+}
+
+fn random_instance(rng: &mut Rng) -> Instance {
+    let vals: Vec<f32> = (0..DIM).map(|_| (rng.gaussian() * 5.0 + 1.0) as f32).collect();
+    Instance::dense(vals, Label::None)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Distinct quiet/signalling-style payload patterns plus the canonical
+/// NaN — all must survive the frame codec bit-for-bit.
+fn nan_patterns() -> Vec<f64> {
+    [0x7FF8_0000_0000_0001u64, 0x7FF8_DEAD_BEEF_0001, 0xFFF8_0000_0000_0042]
+        .iter()
+        .map(|&b| f64::from_bits(b))
+        .chain([f64::NAN])
+        .collect()
+}
+
+// Deterministic state builders, mirroring `merge_properties.rs`: the
+// transforms are not `Clone`, so "copies" are re-fed seeded streams.
+
+fn scaler(seed: u64, n: usize) -> StandardScaler {
+    let mut s = StandardScaler::new();
+    s.bind(&schema());
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        s.transform(random_instance(&mut rng)).unwrap();
+    }
+    s
+}
+
+fn minmax(seed: u64, n: usize) -> MinMaxScaler {
+    let mut s = MinMaxScaler::new();
+    s.bind(&schema());
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        s.transform(random_instance(&mut rng)).unwrap();
+    }
+    s
+}
+
+fn discretizer(warm_seed: u64, seed: u64, n: usize) -> Discretizer {
+    let mut d = Discretizer::with_resolution(4, 32, 64);
+    d.bind(&schema());
+    let mut wrng = Rng::new(warm_seed);
+    for _ in 0..32 {
+        d.transform(random_instance(&mut wrng)).unwrap();
+    }
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        d.transform(random_instance(&mut rng)).unwrap();
+    }
+    d
+}
+
+fn countmin(seed: u64, n: usize) -> CountMinSketch {
+    let mut cm = CountMinSketch::new(128, 4);
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        cm.add(rng.below(200) as u64, 1 + rng.below(3) as u64);
+    }
+    cm
+}
+
+fn misra_gries(seed: u64, n: usize) -> MisraGries {
+    let mut mg = MisraGries::new(12);
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        let x = if rng.below(2) == 0 { rng.below(4) as u64 } else { 10 + rng.below(400) as u64 };
+        mg.add(x);
+    }
+    mg
+}
+
+// --------------------------------------------------------- frame codec
+
+#[test]
+fn frame_preserves_every_bit_pattern_dense_and_sparse() {
+    let mut dense = nan_patterns();
+    dense.extend([0.0, -0.0, f64::INFINITY, f64::NEG_INFINITY, 5e-324, f64::MIN_POSITIVE, 1.5]);
+    // mostly zeros → stored in the sparse form; planted non-zeros must
+    // come back bit-identical, including -0.0 (whose bits are non-zero)
+    let mut sparse = vec![0.0; 300];
+    for (i, v) in nan_patterns().into_iter().enumerate() {
+        sparse[17 * (i + 1)] = v;
+    }
+    sparse[250] = -0.0;
+    sparse[299] = 5e-324;
+    let sections = vec![(0u32, dense), (3u32, sparse), (TAG_META_BASE, vec![42.0])];
+
+    let frame = encode_frame(&sections);
+    let back = decode_frame(&frame).unwrap();
+    assert_eq!(back.len(), sections.len());
+    for ((t0, p0), (t1, p1)) in sections.iter().zip(&back) {
+        assert_eq!(t0, t1);
+        assert_eq!(bits(p0), bits(p1), "tag {t0}: payload bits changed across the frame codec");
+    }
+    assert_eq!(encode_frame(&back), frame, "decode → re-encode must be byte-stable");
+}
+
+#[test]
+fn every_truncation_and_header_corruption_rejected() {
+    let sections = vec![
+        (0u32, vec![1.0, -2.5, 3.25]),
+        (1u32, {
+            let mut v = vec![0.0; 64];
+            v[5] = f64::NAN;
+            v[63] = -0.0;
+            v
+        }),
+        (TAG_META_BASE, vec![7.0, 0.0]),
+    ];
+    let frame = encode_frame(&sections);
+    assert!(decode_frame(&frame).is_ok());
+    for cut in 0..frame.len() {
+        assert!(decode_frame(&frame[..cut]).is_err(), "truncated frame (len {cut}) accepted");
+    }
+    let mut bad = frame.clone();
+    bad[0] ^= 0xFF;
+    assert!(decode_frame(&bad).is_err(), "frame with a wrong version byte accepted");
+}
+
+// --------------------------------------------------- MergeableState laws
+
+/// `delta()` → frame codec → `apply_delta` on a fresh instance must be
+/// bit-identical end to end (the shard-restore path of a rescale).
+fn assert_delta_roundtrips<T: MergeableState>(label: &str, orig: &T, fresh: &mut T) {
+    let d = orig.delta();
+    let sections = decode_frame(&encode_frame(&[(9, d.clone())])).unwrap();
+    let got = section(&sections, 9).unwrap();
+    assert_eq!(bits(&d), bits(got), "{label}: frame codec changed the delta payload bits");
+    fresh.apply_delta(got);
+    assert_eq!(
+        bits(&fresh.delta()),
+        bits(&d),
+        "{label}: snapshot → restore on a fresh instance is not bit-identical"
+    );
+}
+
+#[test]
+fn every_mergeable_state_restores_bit_identical() {
+    for seed in 0..6u64 {
+        let n = 300 + 37 * seed as usize;
+
+        let mut fresh = StandardScaler::new();
+        fresh.bind(&schema());
+        assert_delta_roundtrips("StandardScaler", &scaler(100 + seed, n), &mut fresh);
+
+        let mut fresh = MinMaxScaler::new();
+        fresh.bind(&schema());
+        assert_delta_roundtrips("MinMaxScaler", &minmax(200 + seed, n), &mut fresh);
+
+        let mut fresh = Discretizer::with_resolution(4, 32, 64);
+        fresh.bind(&schema());
+        assert_delta_roundtrips("Discretizer", &discretizer(7, 300 + seed, n), &mut fresh);
+
+        let mut fresh = CountMinSketch::new(128, 4);
+        assert_delta_roundtrips("CountMinSketch", &countmin(400 + seed, n), &mut fresh);
+
+        let mut fresh = MisraGries::new(12);
+        assert_delta_roundtrips("MisraGries", &misra_gries(500 + seed, n), &mut fresh);
+    }
+}
+
+// ----------------------------------------------- Processor::snapshot impls
+
+/// Run a spec topology on the local engine, snapshot every instance at
+/// the final drain, then do exactly what a respawn does: build a fresh
+/// instance from the topology factory, `restore` the frame, and demand
+/// the re-snapshot reproduce it byte-for-byte.
+fn snapshot_roundtrip_topology(spec_str: &str, stream: &str, n: u64, min_snaps: usize) {
+    let (topo, entry) = spec::build(spec_str).unwrap();
+    let mut src = samoa::experiments::dataset_stream(stream, 7);
+    let source =
+        (0..n).map_while(move |id| src.next_instance().map(|inst| Event::Instance { id, inst }));
+    let mut snaps: Vec<(usize, usize, Vec<u8>)> = Vec::new();
+    LocalEngine::new().run(&topo, entry, source, |procs| {
+        snaps.clear();
+        for (pid, col) in procs.iter().enumerate() {
+            for (iid, inst) in col.iter().enumerate() {
+                if let Some(frame) = inst.snapshot() {
+                    snaps.push((pid, iid, frame));
+                }
+            }
+        }
+    });
+    assert!(
+        snaps.len() >= min_snaps,
+        "{spec_str}: expected ≥{min_snaps} snapshotting instances, got {}",
+        snaps.len()
+    );
+    for (pid, iid, frame) in snaps {
+        decode_frame(&frame).unwrap_or_else(|e| {
+            panic!("{spec_str} pid {pid} iid {iid}: snapshot frame does not decode: {e}")
+        });
+        let mut fresh = (topo.processors[pid].factory)(iid);
+        fresh.restore(&frame).unwrap_or_else(|e| {
+            panic!("{spec_str} pid {pid} iid {iid} ({}): restore failed: {e}", fresh.name())
+        });
+        let again = fresh
+            .snapshot()
+            .unwrap_or_else(|| panic!("{spec_str} pid {pid} iid {iid}: restored instance is mute"));
+        assert_eq!(
+            again,
+            frame,
+            "{spec_str} pid {pid} iid {iid} ({}): restore → snapshot not byte-identical",
+            fresh.name()
+        );
+    }
+}
+
+#[test]
+fn sync_topology_snapshots_restore_byte_identical() {
+    // pipeline shards ×2 + evaluator + stats-sync all snapshot (the
+    // Hoeffding-tree learner intentionally does not — see engine docs)
+    snapshot_roundtrip_topology("sync:stream=elec:p=2:interval=64:seed=7", "elec", 1_500, 4);
+}
+
+#[test]
+fn vht_topology_snapshots_restore_byte_identical() {
+    // model aggregator (7 recovery counters) + evaluator
+    snapshot_roundtrip_topology("vht:stream=elec:p=2:seed=7", "elec", 1_200, 2);
+}
+
+// -------------------------------------------------- store + shard rescale
+
+#[test]
+fn checkpoint_store_tracks_latest_frame_per_instance() {
+    let mut store = CheckpointStore::new();
+    assert!(store.is_empty());
+    store.put(0, 0, vec![1, 2, 3]);
+    store.put(0, 1, vec![4]);
+    store.put(2, 0, vec![5, 6]);
+    store.put(0, 0, vec![9, 9]); // overwrite keeps only the latest frame
+    assert_eq!(store.len(), 3);
+    assert_eq!(store.get(0, 0), Some(&[9u8, 9][..]));
+    assert_eq!(store.get(1, 0), None);
+    let shards = store.instances_of(0);
+    assert_eq!(shards.len(), 2);
+    assert_eq!(shards[0], (0, &[9u8, 9][..]), "instances_of must come back in instance order");
+    assert_eq!(shards[1], (1, &[4u8][..]));
+    assert_eq!(store.bytes(), 5);
+}
+
+#[test]
+fn merge_shard_frames_pools_statistics_and_drops_meta() {
+    // three shards over disjoint seeded streams vs folding their deltas
+    // directly — merge_shard_frames must produce the same pooled moments
+    let shards: Vec<StandardScaler> =
+        (0..3u64).map(|k| scaler(900 + k, 200 + 50 * k as usize)).collect();
+    let frames: Vec<Vec<u8>> = shards
+        .iter()
+        .enumerate()
+        .map(|(k, s)| encode_frame(&[(0, s.delta()), (TAG_META_BASE, vec![k as f64])]))
+        .collect();
+    let mut expect = scaler(900, 200);
+    expect.merge(&shards[1]);
+    expect.merge(&shards[2]);
+
+    let mut fresh = StandardScaler::new();
+    fresh.bind(&schema());
+    let mut scratch = Pipeline::new().then(fresh);
+    let frame_refs: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
+    let merged = merge_shard_frames(&frame_refs, &mut scratch).unwrap();
+    let sections = decode_frame(&merged).unwrap();
+    assert!(
+        section(&sections, TAG_META_BASE).is_none(),
+        "per-shard meta counters must not survive a rescale"
+    );
+    let got = section(&sections, 0).unwrap();
+    assert!(
+        payloads_close(got, &expect.delta(), 1e-9),
+        "merged frame does not match the directly pooled statistics"
+    );
+
+    // the merged frame replicates to any number of new shards exactly
+    let mut new_shard = StandardScaler::new();
+    new_shard.bind(&schema());
+    new_shard.apply_delta(got);
+    assert_eq!(bits(&new_shard.delta()), bits(got));
+
+    // a shard frame missing its stage section is a hard error
+    let mut fresh = StandardScaler::new();
+    fresh.bind(&schema());
+    let mut scratch = Pipeline::new().then(fresh);
+    let bad = encode_frame(&[(TAG_META_BASE, vec![1.0])]);
+    assert!(merge_shard_frames(&[&bad], &mut scratch).is_err());
+    assert!(merge_shard_frames(&[], &mut scratch).is_err(), "empty merge set must be rejected");
+}

@@ -1,0 +1,280 @@
+//! Recovery equivalence: a killed-and-recovered run must be
+//! indistinguishable from an undisturbed one whenever the replay log
+//! covered the whole post-checkpoint delta (`replay_dropped == 0`) —
+//! the headline property of the checkpoint/restore layer, pinned here
+//! on both engines that implement it:
+//!
+//! * [`ThreadedEngine`] `with_fault`: kill one instance mid-stream at
+//!   and off checkpoint boundaries, demand byte-identical final
+//!   snapshots and exact delivery totals, in both pinned and stealing
+//!   modes; a deliberately tiny replay cap shows the documented loss
+//!   (`replay_dropped > 0`, totals short by exactly the dropped
+//!   events).
+//! * [`ClusterEngine`] worker death: an injected worker panic
+//!   (`die=`/`victim=` spec params) mid-run, coordinator respawn from
+//!   held checkpoints plus replay-log re-drive, every delivery
+//!   accounted for.
+//! * Rescale: two shard checkpoints merged via `merge_shard_frames`
+//!   and re-seeded into a wider topology through `with_restore`.
+
+use samoa::common::Rng;
+use samoa::core::instance::{Instance, Label};
+use samoa::core::Schema;
+use samoa::engine::checkpoint::{
+    decode_frame, encode_frame, merge_shard_frames, section, TAG_META_BASE,
+};
+use samoa::engine::cluster::{spec, ClusterEngine};
+use samoa::engine::ThreadedEngine;
+use samoa::preprocess::{Pipeline, StandardScaler, Transform};
+use samoa::topology::{Ctx, Event, Grouping, Processor, StreamId, Topology, TopologyBuilder};
+
+const DIM: usize = 3;
+
+fn schema() -> Schema {
+    Schema::classification("t", Schema::all_numeric(DIM), 2)
+}
+
+/// A shard processor with genuinely bit-sensitive f64 state: a running
+/// StandardScaler over everything it sees. Emits nothing, so runs are
+/// deterministic on the threaded engine and final snapshots can be
+/// compared byte-for-byte between a killed and an undisturbed run.
+struct StatShard {
+    scaler: StandardScaler,
+    seen: u64,
+}
+
+impl StatShard {
+    fn boxed() -> Box<dyn Processor> {
+        let mut scaler = StandardScaler::new();
+        scaler.bind(&schema());
+        Box::new(StatShard { scaler, seen: 0 })
+    }
+}
+
+impl Processor for StatShard {
+    fn process(&mut self, event: Event, _ctx: &mut Ctx) {
+        if let Event::Instance { inst, .. } = event {
+            self.seen += 1;
+            let _ = self.scaler.transform(inst);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "stat-shard"
+    }
+
+    fn report(&self) -> Vec<(&'static str, f64)> {
+        vec![("seen", self.seen as f64)]
+    }
+
+    fn snapshot(&self) -> Option<Vec<u8>> {
+        Some(encode_frame(&[(0, self.scaler.delta()), (TAG_META_BASE, vec![self.seen as f64])]))
+    }
+
+    fn restore(&mut self, frame: &[u8]) -> samoa::Result<()> {
+        let sections = decode_frame(frame)?;
+        if let Some(stage) = section(&sections, 0) {
+            self.scaler.apply_delta(stage);
+        }
+        // meta is absent in frames merged for a rescale: counters restart
+        self.seen = section(&sections, TAG_META_BASE).map_or(0, |m| m[0] as u64);
+        Ok(())
+    }
+}
+
+fn stat_topology(p: usize) -> (Topology, StreamId) {
+    let mut b = TopologyBuilder::new("stat-equiv");
+    let stat = b.add_processor("stat", p, |_| StatShard::boxed());
+    let entry = b.stream("entry", None, stat, Grouping::Shuffle);
+    (b.build(), entry)
+}
+
+/// Deterministic instance stream, built once and replayed per run.
+fn events(n: u64, seed: u64) -> Vec<Event> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            let vals: Vec<f32> = (0..DIM).map(|_| (rng.gaussian() * 5.0 + 1.0) as f32).collect();
+            Event::Instance { id, inst: Instance::dense(vals, Label::None) }
+        })
+        .collect()
+}
+
+/// Run the stat topology and collect `(pid, iid) → snapshot frame` plus
+/// the summed `seen` report.
+fn run_stat(
+    eng: &ThreadedEngine,
+    p: usize,
+    evs: &[Event],
+) -> (samoa::engine::metrics::EngineMetrics, Vec<((usize, usize), Vec<u8>)>, f64) {
+    let (topo, entry) = stat_topology(p);
+    let mut frames: Vec<((usize, usize), Vec<u8>)> = Vec::new();
+    let mut seen = 0.0;
+    let m = eng.run(&topo, entry, evs.iter().cloned(), |pid, iid, pr| {
+        if let Some(f) = pr.snapshot() {
+            frames.push(((pid, iid), f));
+        }
+        seen += pr.report().iter().find(|(k, _)| *k == "seen").map_or(0.0, |(_, v)| *v);
+    });
+    frames.sort_by_key(|(k, _)| *k);
+    (m, frames, seen)
+}
+
+// ------------------------------------------------------ threaded engine
+
+#[test]
+fn threaded_kill_and_recover_is_bit_identical_when_nothing_dropped() {
+    const N: u64 = 1_200; // p=2 shuffle → 600 deliveries per instance
+    const INTERVAL: u64 = 128;
+    let evs = events(N, 11);
+    let (_, ref_frames, ref_seen) = run_stat(&ThreadedEngine::default(), 2, &evs);
+    assert_eq!(ref_seen, N as f64);
+
+    // kill at a checkpoint boundary (the kill check runs before that
+    // boundary's snapshot, so the log still holds one full window) and
+    // mid-window; pinned and stealing schedulers
+    for (kill_at, expect_replayed) in [(512u64, 128u64), (500, 116)] {
+        for workers in [None, Some(2)] {
+            let mut eng = ThreadedEngine::default()
+                .with_checkpoints(INTERVAL)
+                .with_fault(0, 0, kill_at);
+            if let Some(w) = workers {
+                eng = eng.with_workers(w);
+            }
+            let (m, frames, seen) = run_stat(&eng, 2, &evs);
+            let label = format!("kill@{kill_at} workers={workers:?}");
+            assert_eq!(m.recovery.kills, 1, "{label}: fault did not fire");
+            assert_eq!(m.recovery.restores, 1, "{label}");
+            assert_eq!(m.recovery.replayed, expect_replayed, "{label}");
+            assert_eq!(m.recovery.replay_dropped, 0, "{label}");
+            assert!(m.recovery.checkpoints >= 6, "{label}: both instances checkpoint");
+            assert!(m.recovery.checkpoint_bytes > 0, "{label}");
+            assert_eq!(seen, N as f64, "{label}: every delivery must be accounted for");
+            assert_eq!(
+                frames, ref_frames,
+                "{label}: recovered state differs from the undisturbed run"
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_tiny_replay_cap_loses_exactly_the_dropped_events() {
+    const N: u64 = 1_200;
+    let evs = events(N, 11);
+    let (_, ref_frames, _) = run_stat(&ThreadedEngine::default(), 2, &evs);
+
+    // no checkpoints at all: the replacement starts from a blank factory
+    // instance plus whatever the 8-event log retained of its 300-event
+    // history — the loss is visible and exactly bounded
+    let eng = ThreadedEngine::default().with_fault(0, 0, 300).with_replay_cap(8);
+    let (m, frames, seen) = run_stat(&eng, 2, &evs);
+    assert_eq!(m.recovery.kills, 1);
+    assert_eq!(m.recovery.restores, 1);
+    assert_eq!(m.recovery.replayed, 8);
+    assert_eq!(m.recovery.replay_dropped, 292);
+    assert_eq!(seen, (N - 292) as f64, "totals must be short by exactly the dropped events");
+    assert_ne!(frames[0], ref_frames[0], "the truncated victim must diverge");
+    assert_eq!(frames[1], ref_frames[1], "the untouched shard must not");
+}
+
+#[test]
+fn threaded_null_spec_kill_keeps_exact_delivery_totals() {
+    const N: u64 = 1_600;
+    let (topo, entry) = spec::build("null:p=2").unwrap();
+    let source = (0..N).map(|id| Event::Instance {
+        id,
+        inst: Instance::dense(vec![0.5; 4], Label::None),
+    });
+    let eng = ThreadedEngine::default().with_checkpoints(128).with_fault(0, 0, 512);
+    let mut seen = 0.0;
+    let m = eng.run(&topo, entry, source, |_, _, pr| {
+        seen += pr.report().iter().find(|(k, _)| *k == "seen").map_or(0.0, |(_, v)| *v);
+    });
+    assert_eq!(m.recovery.kills, 1);
+    assert_eq!(m.recovery.restores, 1);
+    assert_eq!(m.recovery.replayed, 128);
+    assert_eq!(m.recovery.replay_dropped, 0);
+    assert_eq!(seen, N as f64);
+}
+
+// ------------------------------------------------------- cluster engine
+
+#[test]
+fn cluster_worker_death_recovers_every_delivery() {
+    const N: u64 = 1_600; // victim sink sees 800; dies on its 400th
+    let (topo, entry) = spec::build("null:p=2:die=400:victim=0").unwrap();
+    let source = (0..N).map(|id| Event::Instance {
+        id,
+        inst: Instance::dense(vec![0.25; 4], Label::None),
+    });
+    let eng = ClusterEngine::new().with_workers(2).with_checkpoints(64);
+    let run = eng.run(&topo, entry, source).expect("cluster run with injected death");
+    let r = &run.metrics.recovery;
+    assert_eq!(r.kills, 1, "injected worker death did not fire");
+    assert_eq!(r.restores, 1, "one held sink checkpoint should be re-shipped");
+    assert!(r.replayed > 0, "the post-checkpoint delta must be re-driven");
+    assert_eq!(r.replay_dropped, 0);
+    assert!(r.checkpoints > 0);
+    assert_eq!(run.kv_sum("seen"), N as f64, "every delivery must be accounted for");
+}
+
+#[test]
+fn cluster_without_checkpoints_reports_unrecovered_death() {
+    const N: u64 = 1_600;
+    let (topo, entry) = spec::build("null:p=2:die=200:victim=0").unwrap();
+    let source = (0..N).map(|id| Event::Instance {
+        id,
+        inst: Instance::dense(vec![0.25; 4], Label::None),
+    });
+    // recovery off (checkpoint_every == 0): the death surfaces as a hard
+    // engine error instead of a silent partial run
+    let err = ClusterEngine::new()
+        .with_workers(2)
+        .run(&topo, entry, source)
+        .expect_err("worker death with recovery off must fail the run");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("worker") || msg.contains("cluster"),
+        "error should point at the dead worker: {msg}"
+    );
+}
+
+// ------------------------------------------------------------- rescale
+
+#[test]
+fn rescale_merges_shard_checkpoints_into_a_wider_topology() {
+    const N: u64 = 1_200;
+    let evs = events(N, 11);
+    let (_, frames, _) = run_stat(&ThreadedEngine::default(), 2, &evs);
+    assert_eq!(frames.len(), 2);
+
+    let mut fresh = StandardScaler::new();
+    fresh.bind(&schema());
+    let mut scratch = Pipeline::new().then(fresh);
+    let shard_frames: Vec<&[u8]> = frames.iter().map(|(_, f)| f.as_slice()).collect();
+    let merged = merge_shard_frames(&shard_frames, &mut scratch).unwrap();
+    let pooled = decode_frame(&merged).unwrap();
+    let stage = section(&pooled, 0).unwrap();
+    assert_eq!(stage[0], N as f64, "pooled moments must count every instance once");
+
+    // seed all four shards of a p=4 topology with the merged state
+    let seeds: Vec<(usize, usize, Vec<u8>)> = (0..4).map(|i| (0, i, merged.clone())).collect();
+    let eng = ThreadedEngine::default().with_restore(seeds);
+    let (topo, entry) = stat_topology(4);
+    let mut frames4: Vec<Vec<u8>> = Vec::new();
+    let m = eng.run(&topo, entry, std::iter::empty(), |_, _, pr| {
+        if let Some(f) = pr.snapshot() {
+            frames4.push(f);
+        }
+    });
+    assert_eq!(m.recovery.restores, 4, "startup restores must be counted");
+    assert_eq!(frames4.len(), 4);
+    for f in &frames4 {
+        let sections = decode_frame(f).unwrap();
+        let got = section(&sections, 0).unwrap();
+        let b0: Vec<u64> = stage.iter().map(|x| x.to_bits()).collect();
+        let b1: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(b0, b1, "every new shard must adopt the pooled statistics exactly");
+    }
+}

@@ -103,9 +103,9 @@ def main():
     regressions = []
     if not baselines:
         msg = (
-            f"No committed baselines in {args.baseline_dir}/ yet — gate passes; "
-            "the trajectory is seeded when this run's BENCH_PR<k>.json is "
-            "committed on the main branch."
+            f"no baseline, seeding: {args.baseline_dir}/ holds no committed "
+            "BENCH_PR<k>.json yet — gate passes; the trajectory is seeded "
+            "when this run's BENCH_PR<k>.json is committed on the main branch."
         )
         print(msg)
         lines.append(msg)

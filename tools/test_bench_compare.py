@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Unit tests for the perf-trajectory gate (tools/bench_compare.py).
+
+Run directly (no pytest in the image):
+
+    python3 tools/test_bench_compare.py
+
+Covers the two boundary states the gate must not error on:
+  * an empty (or missing) baseline dir — "no baseline, seeding", exit 0;
+  * a single committed baseline file — trajectory table with one PR
+    column, the regression gate armed against it.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_compare.py")
+
+
+def write_current(path, rate):
+    rows = [
+        {"name": "tput/engine_throughput", "items_per_s": rate},
+        {"name": "other/ignored", "items_per_s": 1.0},
+        {"name": "tput/no_rate_row"},
+    ]
+    with open(path, "w", encoding="utf-8") as fh:
+        for row in rows:
+            fh.write(json.dumps(row) + "\n")
+
+
+def write_baseline(dirpath, pr, rate):
+    doc = {"results": [{"name": "tput/engine_throughput", "items_per_s": rate}]}
+    with open(os.path.join(dirpath, f"BENCH_PR{pr}.json"), "w", encoding="utf-8") as fh:
+        json.dump(doc, fh)
+
+
+def run_gate(current, baseline_dir, *extra):
+    cmd = [sys.executable, SCRIPT, "--current", current, "--baseline-dir", baseline_dir]
+    cmd += list(extra)
+    return subprocess.run(cmd, capture_output=True, text=True)
+
+
+class EmptyTrajectory(unittest.TestCase):
+    def test_empty_baseline_dir_seeds_and_passes(self):
+        with tempfile.TemporaryDirectory() as td:
+            current = os.path.join(td, "bench.jsonl")
+            write_current(current, 1e6)
+            perf = os.path.join(td, "perf")
+            os.mkdir(perf)
+            res = run_gate(current, perf)
+            self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+            self.assertIn("no baseline, seeding", res.stdout)
+
+    def test_missing_baseline_dir_seeds_and_passes(self):
+        with tempfile.TemporaryDirectory() as td:
+            current = os.path.join(td, "bench.jsonl")
+            write_current(current, 1e6)
+            res = run_gate(current, os.path.join(td, "does-not-exist"))
+            self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+            self.assertIn("no baseline, seeding", res.stdout)
+
+
+class SingleBaseline(unittest.TestCase):
+    def test_within_threshold_passes_with_trajectory_table(self):
+        with tempfile.TemporaryDirectory() as td:
+            current = os.path.join(td, "bench.jsonl")
+            write_current(current, 0.95e6)  # -5% vs baseline: inside the 15% gate
+            perf = os.path.join(td, "perf")
+            os.mkdir(perf)
+            write_baseline(perf, 5, 1e6)
+            res = run_gate(current, perf)
+            self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+            self.assertIn("PR5", res.stdout)
+            self.assertIn("tput/engine_throughput", res.stdout)
+            self.assertNotIn("REGRESSION", res.stdout)
+
+    def test_regression_fails_and_soft_mode_passes(self):
+        with tempfile.TemporaryDirectory() as td:
+            current = os.path.join(td, "bench.jsonl")
+            write_current(current, 0.5e6)  # -50%: well past the 15% gate
+            perf = os.path.join(td, "perf")
+            os.mkdir(perf)
+            write_baseline(perf, 5, 1e6)
+            res = run_gate(current, perf)
+            self.assertEqual(res.returncode, 1, res.stdout + res.stderr)
+            self.assertIn("REGRESSION", res.stdout)
+            soft = run_gate(current, perf, "--soft")
+            self.assertEqual(soft.returncode, 0, soft.stdout + soft.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main()
