@@ -56,7 +56,11 @@ pub fn record_json(name: &str, fields: &[(&str, f64)]) {
 /// mode exactly three reps run (median reported — shrunk workloads are
 /// fast enough that one rep is runner-jitter, which would flap the CI
 /// perf gate).
-pub fn bench<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
+///
+/// Returns the median-based throughput (items/s) so benches comparing
+/// two implementations of the same job (e.g. native vs SIMD kernels)
+/// can print speedup ratios; most callers ignore it.
+pub fn bench<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) -> f64 {
     let reps = if smoke_mode() { 3 } else { reps };
     let _ = f(); // warmup
     let mut times = Vec::with_capacity(reps);
@@ -86,4 +90,5 @@ pub fn bench<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
             ("items_per_s", tput),
         ],
     );
+    tput
 }

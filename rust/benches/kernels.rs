@@ -1,6 +1,13 @@
-//! Kernel micro-benchmarks: native rust vs AOT XLA artifact for the three
-//! criterion kernels (info gain, SDR, cluster assignment) — the §Perf L1
-//! evidence and the native/XLA crossover measurement.
+//! Kernel micro-benchmarks: native rust vs lane-unrolled SIMD (vs AOT
+//! XLA artifact where available) for the three criterion kernels — info
+//! gain, SDR, cluster assignment. The §Perf L1 evidence and the backend
+//! crossover measurement; rows are named `kern/…` so `BENCH_JSON` runs
+//! feed the CI perf-trajectory gate.
+//!
+//! The summary at the end prints the SIMD speedup per kernel. Info gain
+//! at the default 16×8 block shape carries a ≥ 1.5× target (PASS/WARN,
+//! report-only): that is the shape VHT actually evaluates, and the fused
+//! `Σ x·log2 x` lane pass is where the SIMD backend earns its probe win.
 
 mod bench_util;
 use bench_util::bench;
@@ -8,7 +15,7 @@ use bench_util::bench;
 use samoa::common::Rng;
 use samoa::core::criterion::VarStats;
 use samoa::core::observers::CounterBlock;
-use samoa::runtime::{cluster, gain, registry, sdr};
+use samoa::runtime::{cluster, gain, registry, sdr, xla};
 
 fn blocks(n: usize, seed: u64) -> Vec<CounterBlock> {
     let mut rng = Rng::new(seed);
@@ -24,20 +31,30 @@ fn blocks(n: usize, seed: u64) -> Vec<CounterBlock> {
 }
 
 fn main() {
-    println!(
-        "== kernel benches (backend availability: {:?}) ==",
-        registry::artifacts_dir().is_some()
-    );
+    let xla_ready = registry::artifacts_dir().is_some() && xla::AVAILABLE;
+    println!("== kernel benches (xla artifacts usable: {xla_ready:?}) ==");
 
+    // (label, native items/s, simd items/s), for the speedup summary
+    let mut pairs: Vec<(String, f64, f64)> = Vec::new();
+
+    let mut infogain_speedup_a256 = 0.0f64;
     for n in [64usize, 256, 1024] {
         let bs = blocks(n, 1);
         let refs: Vec<&CounterBlock> = bs.iter().collect();
-        bench(&format!("infogain native   A={n}"), 20, || {
+        let nat = bench(&format!("kern/infogain_native_a{n}"), 20, || {
             std::hint::black_box(gain::gains_native(&refs));
             n as u64
         });
-        if registry::artifacts_dir().is_some() {
-            bench(&format!("infogain xla      A={n}"), 20, || {
+        let sim = bench(&format!("kern/infogain_simd_a{n}"), 20, || {
+            std::hint::black_box(gain::gains_simd(&refs));
+            n as u64
+        });
+        pairs.push((format!("infogain 16x8 A={n}"), nat, sim));
+        if n == 256 {
+            infogain_speedup_a256 = sim / nat.max(1e-12);
+        }
+        if xla_ready {
+            bench(&format!("kern/infogain_xla_a{n}"), 20, || {
                 std::hint::black_box(gain::gains_xla(&refs).unwrap());
                 n as u64
             });
@@ -58,12 +75,17 @@ fn main() {
                 .collect()
         })
         .collect();
-    bench("sdr native        A=64 B=64", 20, || {
+    let nat = bench("kern/sdr_native_a64_b64", 20, || {
         std::hint::black_box(sdr::sdr_native(&attrs));
         64
     });
-    if registry::artifacts_dir().is_some() {
-        bench("sdr xla           A=64 B=64", 20, || {
+    let sim = bench("kern/sdr_simd_a64_b64", 20, || {
+        std::hint::black_box(sdr::sdr_simd(&attrs));
+        64
+    });
+    pairs.push(("sdr A=64 B=64".to_string(), nat, sim));
+    if xla_ready {
+        bench("kern/sdr_xla_a64_b64", 20, || {
             std::hint::black_box(sdr::sdr_xla(&attrs).unwrap());
             64
         });
@@ -73,14 +95,30 @@ fn main() {
     let pts: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
     let ctr: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32).collect();
     let w = vec![1f32; k];
-    bench("cluster native    N=128 K=128 D=64", 20, || {
+    let nat = bench("kern/cluster_native_n128_k128_d64", 20, || {
         std::hint::black_box(cluster::assign_native(&pts, &ctr, &w, d));
         n as u64
     });
-    if registry::artifacts_dir().is_some() {
-        bench("cluster xla       N=128 K=128 D=64", 20, || {
+    let sim = bench("kern/cluster_simd_n128_k128_d64", 20, || {
+        std::hint::black_box(cluster::assign_simd(&pts, &ctr, &w, d));
+        n as u64
+    });
+    pairs.push(("cluster N=128 K=128 D=64".to_string(), nat, sim));
+    if xla_ready {
+        bench("kern/cluster_xla_n128_k128_d64", 20, || {
             std::hint::black_box(cluster::assign_xla(&pts, &ctr, &w, d).unwrap());
             n as u64
         });
     }
+
+    println!("\n== simd vs native speedup ==");
+    for (label, nat, sim) in &pairs {
+        println!("{label:<28} simd/native = {:>5.2}x", sim / nat.max(1e-12));
+    }
+    let verdict = if infogain_speedup_a256 >= 1.5 { "PASS" } else { "WARN" };
+    println!(
+        "info-gain 16x8 A=256 speedup {:.2}x (target: >= 1.50x) -> {verdict}",
+        infogain_speedup_a256
+    );
+    println!("probe decision for this machine: {:?}", registry::backend_in_use());
 }

@@ -4,8 +4,9 @@
 //!
 //! Leaves hold one [`CounterBlock`] per attribute (the `n_ijk` of §6.1);
 //! every `grace_period` instances a leaf evaluates all attributes' split
-//! criterion — through [`crate::runtime::gain`], i.e. the XLA artifact or
-//! the native twin — applies the Hoeffding bound with tie-break τ
+//! criterion — through [`crate::runtime::gain`]'s batch entry point
+//! (native, SIMD or XLA, registry-selected) — applies the Hoeffding
+//! bound with tie-break τ
 //! (Alg. 4), and splits pre-pruned against the no-split scenario X∅.
 
 use crate::common::fxhash::FxHashMap;

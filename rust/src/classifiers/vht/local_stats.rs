@@ -4,7 +4,8 @@
 //! (leaf id, attribute id): this instance holds the counter blocks of the
 //! attributes key-routed to it. On `compute` it evaluates the split
 //! criterion of every attribute it tracks for the leaf — through
-//! [`crate::runtime::gain`] (XLA artifact or native twin) — and replies
+//! [`crate::runtime::gain`]'s batch-of-blocks entry point (native, SIMD
+//! or XLA artifact, registry-selected) — and replies
 //! with its local top-2 plus the winner's class distribution.
 
 use std::sync::Arc;

@@ -3,10 +3,11 @@
 //! within a boundary, periodically compressed into **macro-clusters** by
 //! weighted k-means (triggered every `macro_period` points, e.g. 10 000).
 //!
-//! The batch nearest-centroid assignment is the XLA `cluster` artifact
-//! ([`crate::runtime::cluster`]); the distributed form runs assignment on
-//! worker processors against broadcast centroid snapshots with the
-//! aggregator applying updates.
+//! The nearest-centroid distance scans — batch flush and the per-point
+//! worker path alike — go through the backend-selected kernel registry
+//! ([`crate::runtime::cluster::assign`]: native, SIMD or XLA artifact);
+//! the distributed form runs assignment on worker processors against
+//! broadcast centroid snapshots with the aggregator applying updates.
 
 use std::sync::Arc;
 
@@ -313,7 +314,9 @@ impl Processor for ClustreamWorker {
                             pt[a] = v;
                         }
                     }
-                    let res = rt_cluster::assign_native(
+                    // backend-selected single-point scan: the registry
+                    // routes this to the native, SIMD or XLA kernel
+                    let res = rt_cluster::assign(
                         &pt,
                         &self.snapshot_centers,
                         &self.snapshot_weights,

@@ -39,6 +39,25 @@
 //! value is that totals stay bit-identical to local while the bytes and
 //! nanoseconds in [`metrics::ClusterMetrics`] are real.
 //!
+//! # Criterion kernel backend (orthogonal to engine choice)
+//!
+//! Whatever engine runs the topology, the numeric hot loops inside the
+//! processors — VHT split gain, AMRules SDR, CluStream assignment — go
+//! through [`crate::runtime`]'s batch entry points, which pick one
+//! backend per process:
+//!
+//! | backend | selected when |
+//! |---|---|
+//! | `native` | `SAMOA_BACKEND=native`, or the probe finds SIMD not worth it |
+//! | `simd` | `SAMOA_BACKEND=simd`, or it wins the one-shot micro-probe under `auto` |
+//! | `xla` | `SAMOA_BACKEND=xla` with PJRT bindings + compiled artifacts present |
+//!
+//! The choice latches on first use and is engine-independent: every
+//! worker of a [`ClusterEngine`] run probes once in its own process and
+//! all backends agree to ≤ 1e-9 relative (winners bit-match), so golden
+//! equivalence across engines is unaffected. See [`crate::runtime`] for
+//! the full decision table and fallback rules.
+//!
 //! # Data-plane contract (all three engines)
 //!
 //! * **Clone-free broadcast**: `All`-grouped routing clones the event

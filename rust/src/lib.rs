@@ -19,9 +19,12 @@
 //!   rust through the PJRT CPU client ([`runtime`]).
 //!
 //! Python never runs on the request path: `make artifacts` produces
-//! `artifacts/*.hlo.txt` once; the rust binary is self-contained after that
-//! (and falls back to bit-compatible native implementations of each kernel
-//! when artifacts are absent).
+//! `artifacts/*.hlo.txt` once; the rust binary is self-contained after that.
+//! Builds without artifacts (or without PJRT bindings at all — the
+//! dependency-free default compiles against an in-tree stub) run the same
+//! kernels through [`runtime`]'s pure-rust backends: a scalar native twin
+//! and a lane-unrolled SIMD variant, selected per process by a one-shot
+//! micro-probe or pinned via `SAMOA_BACKEND=native|simd|xla|auto`.
 
 pub mod common;
 pub mod topology;

@@ -79,6 +79,8 @@ fn main() {
                 "artifacts dir: {:?}",
                 samoa::runtime::registry::artifacts_dir()
             );
+            println!("xla bindings compiled in: {}", samoa::runtime::xla::AVAILABLE);
+            println!("(pin with SAMOA_BACKEND=native|simd|xla|auto; auto micro-probes once)");
             Ok(())
         }
         _ => {
@@ -97,7 +99,8 @@ fn print_help() {
         "samoa-rs — Apache SAMOA reproduction (rust + JAX/Pallas)\n\n\
          USAGE:\n  samoa run --learner <l> --stream <s> [--instances N] [--p K] [--pipeline hash:64,scale,...]\n  \
          samoa exp <fig3..fig16|table3..table7|all> [--instances N --seeds K --p 2,4]\n  \
-         samoa list\n  samoa backend\n\nRun `samoa list` for learners/streams."
+         samoa list\n  samoa backend\n\nRun `samoa list` for learners/streams.\n\
+         SAMOA_BACKEND=native|simd|xla|auto pins the criterion kernel backend (`samoa backend` shows the decision)."
     );
 }
 

@@ -6,7 +6,8 @@
 //! * Ordered-rules mode (the paper's focus): first covering rule predicts
 //!   and is updated.
 //! * Expansion every `n_min` updates via the SDR criterion evaluated by
-//!   [`crate::runtime::sdr`] (XLA artifact or native twin) with the
+//!   [`crate::runtime::sdr`]'s batch-of-attributes entry point (native,
+//!   SIMD or XLA artifact, registry-selected) with the
 //!   Hoeffding-bound ratio test: expand when `ratio + ε < 1` or `ε < τ`.
 //! * Each rule monitors its absolute error with Page–Hinkley and is
 //!   evicted on drift; covered instances failing a z-score anomaly test

@@ -1,9 +1,16 @@
-//! CluStream nearest-centroid assignment: XLA artifact or native fallback.
+//! CluStream nearest-centroid assignment — batch-of-points entry point.
+//!
+//! [`assign`] is the single route CluStream (batch flush and the
+//! distributed worker processors) takes to the distance scan; the
+//! registry picks the scalar native twin, the lane-unrolled SIMD
+//! kernel, or the XLA artifact.
 
 use crate::Result;
 
 use super::registry::{self, Backend};
 use super::shapes::{CL_D, CL_K, CL_N};
+use super::simd;
+use super::xla;
 
 /// Assign each point to its nearest live centroid.
 ///
@@ -20,6 +27,7 @@ pub fn assign(
     debug_assert_eq!(centers.len(), k * d);
     match registry::backend_in_use() {
         Backend::Native => assign_native(points, centers, weights, d),
+        Backend::Simd => assign_simd(points, centers, weights, d),
         Backend::Xla if n <= CL_N && k <= CL_K && d <= CL_D => {
             match assign_xla(points, centers, weights, d) {
                 Ok(a) => a,
@@ -67,6 +75,39 @@ pub fn assign_native(
     out
 }
 
+/// SIMD brute-force assignment: the inner distance loop runs four f64
+/// lanes wide ([`simd::sqdist_lanes`]). Per-element rounding matches the
+/// native kernel (f32 difference, f64 square); only the accumulation
+/// order differs, so distances agree to ≤ 1e-9 relative and the winning
+/// index can move only between exactly (to that tolerance) tied
+/// centroids. Dead slots (`weight ≤ 0`) are skipped identically.
+pub fn assign_simd(
+    points: &[f32],
+    centers: &[f32],
+    weights: &[f32],
+    d: usize,
+) -> Vec<(usize, f64)> {
+    let n = points.len() / d;
+    let k = weights.len();
+    let mut out = Vec::with_capacity(n);
+    for p in 0..n {
+        let pv = &points[p * d..(p + 1) * d];
+        let mut best = (usize::MAX, f64::INFINITY);
+        for c in 0..k {
+            if weights[c] <= 0.0 {
+                continue;
+            }
+            let cv = &centers[c * d..(c + 1) * d];
+            let acc = simd::sqdist_lanes(pv, cv);
+            if acc < best.1 {
+                best = (c, acc);
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
 /// XLA path: single padded `[CL_N, CL_D] × [CL_K, CL_D]` invocation.
 pub fn assign_xla(
     points: &[f32],
@@ -100,6 +141,7 @@ pub fn assign_xla(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::common::Rng;
 
     #[test]
     fn native_picks_nearest() {
@@ -119,5 +161,42 @@ mod tests {
         let weights = [0.0, 1.0]; // exact-match centroid is dead
         let a = assign_native(&points, &centers, &weights, 2);
         assert_eq!(a[0].0, 1);
+    }
+
+    #[test]
+    fn simd_matches_native_across_dims() {
+        let mut rng = Rng::new(7);
+        for d in [1usize, 2, 3, 4, 5, 8, 17, 64] {
+            let (n, k) = (12usize, 9usize);
+            let points: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+            let centers: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32).collect();
+            let mut weights = vec![1f32; k];
+            weights[3] = 0.0; // one dead slot
+            let native = assign_native(&points, &centers, &weights, d);
+            let simd = assign_simd(&points, &centers, &weights, d);
+            for (p, (nv, sv)) in native.iter().zip(simd.iter()).enumerate() {
+                assert!(
+                    (nv.1 - sv.1).abs() <= 1e-9 * (1.0 + nv.1),
+                    "d={d} point {p}: native={nv:?} simd={sv:?}"
+                );
+                assert!(
+                    nv.0 == sv.0 || (native[p].1 - simd[p].1).abs() <= 1e-9 * (1.0 + native[p].1),
+                    "d={d} point {p}: winner differs off-tie: native={nv:?} simd={sv:?}"
+                );
+                assert_ne!(sv.0, 3, "dead slot won at point {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_skips_dead_slots_and_empty_centroids() {
+        let points = [0.0f32, 0.0];
+        let centers = [0.0f32, 0.0, 5.0, 5.0];
+        let weights = [0.0f32, 1.0];
+        let a = assign_simd(&points, &centers, &weights, 2);
+        assert_eq!(a[0].0, 1);
+        // no live centroid: sentinel result, same as native
+        let none = assign_simd(&points, &centers, &[0.0, 0.0], 2);
+        assert_eq!(none[0].0, usize::MAX);
     }
 }

@@ -1,10 +1,12 @@
-//! Split-criterion gains: XLA artifact or native fallback.
+//! Split-criterion gains: the batch-of-blocks kernel entry point.
 //!
-//! The local-statistics processor hands over the counter blocks of the
-//! attributes it tracks for one leaf; this module returns the information
-//! gain of each, chunking the blocks through the fixed-shape
-//! `infogain.hlo.txt` artifact (`[IG_A, IG_V, IG_C]`, zero-padded — padding
-//! attributes yield gain exactly 0 by kernel construction).
+//! The local-statistics processor (and the sequential Hoeffding tree)
+//! hands over the counter blocks of the attributes it tracks for one
+//! leaf; [`gains`] returns the information gain of each through the
+//! backend the registry selected: the scalar native twin, the
+//! lane-unrolled SIMD kernel, or the fixed-shape `infogain.hlo.txt` XLA
+//! artifact (`[IG_A, IG_V, IG_C]`, zero-padded — padding attributes
+//! yield gain exactly 0 by kernel construction).
 
 use crate::Result;
 
@@ -13,11 +15,18 @@ use crate::core::observers::CounterBlock;
 
 use super::registry::{self, Backend};
 use super::shapes::{IG_A, IG_C, IG_V};
+use super::simd;
+use super::xla;
 
-/// Information gain for each block, backend-selected.
+/// Information gain for each block, backend-selected. The single entry
+/// point for the VHT model aggregator / local-statistics processors and
+/// the sequential Hoeffding tree — callers never touch
+/// `criterion::info_gain` directly, so one registry decision covers
+/// every split evaluation in the process.
 pub fn gains(blocks: &[&CounterBlock]) -> Vec<f64> {
     match registry::backend_in_use() {
         Backend::Native => gains_native(blocks),
+        Backend::Simd => gains_simd(blocks),
         Backend::Xla => match gains_xla(blocks) {
             Ok(g) => g,
             Err(e) => {
@@ -32,6 +41,41 @@ pub fn gains(blocks: &[&CounterBlock]) -> Vec<f64> {
 /// Native path (also the oracle for the integration test).
 pub fn gains_native(blocks: &[&CounterBlock]) -> Vec<f64> {
     blocks.iter().map(|b| criterion::info_gain(b)).collect()
+}
+
+/// SIMD path: four-lane unrolled entropy over each block's rows.
+///
+/// Agrees with [`gains_native`] to ≤ 1e-9 relative with identical
+/// top-2 winners outside exact ties (`tests/runtime_vs_native.rs`).
+pub fn gains_simd(blocks: &[&CounterBlock]) -> Vec<f64> {
+    blocks.iter().map(|b| info_gain_simd(b)).collect()
+}
+
+/// Lane-unrolled information gain of one block.
+///
+/// Same EPS policy as the native twin (empty block ⇒ exactly 0, empty
+/// rows skipped, 0·log 0 = 0); uses the single-pass entropy identity
+/// `Σ_v (N_v/N)·H(row_v) = (Σ_v N_v·log2 N_v − Σ_vc x·log2 x)/N` so one
+/// fused sweep per row feeds the 4-wide `log2`.
+pub fn info_gain_simd(block: &CounterBlock) -> f64 {
+    let total = block.total() as f64;
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let h_before = simd::entropy_lanes(&block.class_counts());
+    let c = block.c() as usize;
+    let raw = block.raw();
+    // Σ_v (N_v·log2 N_v − Σ_c x·log2 x): the numerator of H(class|attr)·N
+    let mut h_after_num = 0.0f64;
+    for v in 0..block.v() as usize {
+        let row = &raw[v * c..(v + 1) * c];
+        let (nv, slog) = simd::sum_and_xlog2x(row);
+        if nv > 0.0 {
+            let log_nv = simd::log2_lanes([nv, 1.0, 1.0, 1.0])[0];
+            h_after_num += nv * log_nv - slog;
+        }
+    }
+    h_before - h_after_num / total
 }
 
 /// XLA path: chunk blocks into `[IG_A, IG_V, IG_C]` tensors.
@@ -53,7 +97,7 @@ pub fn gains_xla(blocks: &[&CounterBlock]) -> Result<Vec<f64>> {
             let lit = xla::Literal::vec1(&buf).reshape(&[IG_A as i64, IG_V as i64, IG_C as i64])?;
             let outs = rt.execute_tuple("infogain", &[lit])?;
             // outputs: (gain[IG_A], best_idx, best, second)
-            Ok(outs[0].to_vec::<f32>()?)
+            outs[0].to_vec::<f32>()
         })?;
         out.extend(gain_vec[..chunk.len()].iter().map(|&g| g as f64));
     }
@@ -61,7 +105,17 @@ pub fn gains_xla(blocks: &[&CounterBlock]) -> Result<Vec<f64>> {
 }
 
 /// Top-2 (index, gain) from a gain vector — shared by MA and LS logic.
+///
+/// Returns `(best_idx, best, second_idx, second)`. With fewer than two
+/// candidates the *true* best value is returned unclamped (a rounding-
+/// negative gain used to be floored to 0 here, hiding it from the
+/// caller's `best > 0` pre-pruning check); the missing runner-up
+/// reports index = best_idx and gain 0 — the no-split scenario it
+/// competes against. An empty slice yields `(0, 0.0, 0, 0.0)`.
 pub fn top2(gains: &[f64]) -> (usize, f64, usize, f64) {
+    if gains.is_empty() {
+        return (0, 0.0, 0, 0.0);
+    }
     let (mut bi, mut b, mut si, mut s) = (0usize, f64::NEG_INFINITY, 0usize, f64::NEG_INFINITY);
     for (i, &g) in gains.iter().enumerate() {
         if g > b {
@@ -75,7 +129,7 @@ pub fn top2(gains: &[f64]) -> (usize, f64, usize, f64) {
         }
     }
     if gains.len() < 2 {
-        (bi, b.max(0.0), bi, 0.0)
+        (bi, b, bi, 0.0)
     } else {
         (bi, b, si, s)
     }
@@ -106,6 +160,53 @@ mod tests {
     }
 
     #[test]
+    fn simd_gains_match_native_on_default_shape() {
+        let mut rng = Rng::new(2);
+        let blocks: Vec<CounterBlock> = (0..32).map(|_| random_block(&mut rng, 16, 8)).collect();
+        let refs: Vec<&CounterBlock> = blocks.iter().collect();
+        let native = gains_native(&refs);
+        let simd = gains_simd(&refs);
+        for (i, (n, s)) in native.iter().zip(simd.iter()).enumerate() {
+            assert!(
+                (n - s).abs() <= 1e-9 * (1.0 + n.abs()),
+                "block {i}: native={n} simd={s}"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_gain_degenerate_blocks() {
+        let empty = CounterBlock::new(16, 8);
+        assert_eq!(info_gain_simd(&empty), 0.0);
+        let mut pure = CounterBlock::new(16, 8);
+        for v in 0..16 {
+            pure.add(v, 2, 5.0);
+        }
+        assert!(info_gain_simd(&pure).abs() < 1e-10);
+        // perfect split: gain = H(class) = 1 bit
+        let mut b = CounterBlock::new(4, 2);
+        for v in 0..4 {
+            b.add(v, v % 2, 10.0);
+        }
+        assert!((info_gain_simd(&b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn forced_simd_backend_dispatches_to_simd_kernel() {
+        let _guard = registry::backend_test_lock();
+        let mut rng = Rng::new(3);
+        let blocks: Vec<CounterBlock> = (0..6).map(|_| random_block(&mut rng, 16, 8)).collect();
+        let refs: Vec<&CounterBlock> = blocks.iter().collect();
+        registry::force_backend(Backend::Simd);
+        let dispatched = gains(&refs);
+        assert_eq!(dispatched, gains_simd(&refs));
+        registry::force_backend(Backend::Native);
+        let dispatched = gains(&refs);
+        assert_eq!(dispatched, gains_native(&refs));
+        registry::reset_for_tests();
+    }
+
+    #[test]
     fn top2_basic() {
         let (bi, b, si, s) = top2(&[0.1, 0.9, 0.5]);
         assert_eq!((bi, si), (1, 2));
@@ -118,6 +219,22 @@ mod tests {
         assert_eq!(bi, 0);
         assert!((b - 0.4).abs() < 1e-12);
         assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn top2_single_negative_not_clamped() {
+        // regression: a single rounding-negative gain used to be floored
+        // to 0.0, making the caller's `best > 0` pre-pruning check see a
+        // phantom zero-gain candidate
+        let (bi, b, si, s) = top2(&[-1e-12]);
+        assert_eq!((bi, si), (0, 0));
+        assert_eq!(b, -1e-12);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn top2_empty() {
+        assert_eq!(top2(&[]), (0, 0.0, 0, 0.0));
     }
 
     #[test]

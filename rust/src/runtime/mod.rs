@@ -1,22 +1,59 @@
-//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
-//! and execute them from the request path — python is never involved.
+//! Criterion kernel runtime: one registry, three backends.
 //!
-//! The `xla` crate's handles wrap raw C pointers and are not `Send`/`Sync`,
-//! so the runtime is **thread-local**: each engine thread that evaluates a
-//! split criterion lazily builds its own `PjRtClient` and compiles the HLO
-//! text once (a few ms), then reuses the loaded executables for the life of
-//! the thread. Local-statistics processors call [`gain::gains`] /
-//! [`sdr::sdr_surfaces`] / [`cluster::assign`], which transparently choose:
+//! The per-leaf criterion math — info-gain scans over VHT counter
+//! blocks, AMRules SDR evaluation, CluStream distance scans — is where
+//! stream-learning throughput bottoms out (paper §Fig 8/9, Table 4), so
+//! all three hot loops run behind batch kernel entry points that a
+//! process-wide registry binds to one of three implementations:
 //!
-//! * the **XLA path** — artifacts found and `SAMOA_BACKEND` ∈ {auto, xla};
-//! * the **native path** — bit-compatible rust implementations in
-//!   [`crate::core::criterion`] (also the fallback on any runtime error).
+//! | backend  | implementation | selected when |
+//! |---|---|---|
+//! | `native` | scalar rust ([`crate::core::criterion`]) | `SAMOA_BACKEND=native`; or the `auto` micro-probe finds no SIMD win; or any XLA runtime error (permanent fallback) |
+//! | `simd`   | lane-unrolled rust ([`simd`], f64×4-style, no external crates) | `SAMOA_BACKEND=simd`; or `auto` when the one-shot micro-probe shows a ≥1.25× win on the default 16×8 block shape |
+//! | `xla`    | AOT artifacts via PJRT ([`registry::XlaThreadRuntime`]) | `SAMOA_BACKEND=xla` (fails loudly if impossible); or `auto` with compatible `artifacts/` in a build carrying real PJRT bindings ([`xla::AVAILABLE`]) |
 //!
-//! `SAMOA_ARTIFACTS` overrides the artifact directory (default: walk up
-//! from CWD looking for `artifacts/manifest.txt`).
+//! **Decision order** (`registry::backend_in_use`, latched process-wide
+//! on first use): explicit `SAMOA_BACKEND` always wins — `native` and
+//! `simd` bind directly, `xla` panics with a diagnostic when artifacts
+//! are missing/stale or the build only has the in-tree [`xla`] stub
+//! (silent fallback on an explicit request is the worst failure mode
+//! for a benchmark run). `auto` (or unset) prefers executable XLA
+//! artifacts, then runs the one-shot native-vs-SIMD micro-probe and
+//! falls back to native when lane kernels don't clearly win (small
+//! blocks, narrow targets). The decision sticks for the life of the
+//! process so every leaf evaluation in a run uses one backend; tests
+//! that need to re-decide use `registry::reset_for_tests` under
+//! `registry::backend_test_lock`.
+//!
+//! **Fallback rules**: any XLA runtime error force-latches native and
+//! logs once. The SIMD kernels have no failure mode (pure rust, any
+//! shape) and agree with native to ≤ 1e-9 relative with identical top-2
+//! winners outside exact ties (`tests/runtime_vs_native.rs` pins this
+//! on every run; the XLA legs additionally pin the artifacts when they
+//! exist).
+//!
+//! Entry points — the *batched* kernel API the algorithm layers call
+//! instead of `criterion::*` (VHT model aggregator + local statistics,
+//! the sequential Hoeffding tree, AMRules, CluStream):
+//!
+//! * [`gain::gains`]`(&[&CounterBlock]) -> Vec<f64>` and [`gain::top2`];
+//! * [`sdr::sdr_surfaces`]`(&[AttrBins]) -> Vec<Vec<f64>>`;
+//! * [`cluster::assign`]`(points, centers, weights, d)`.
+//!
+//! The XLA path loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them through the PJRT CPU
+//! client; its handles wrap raw C pointers and are not `Send`/`Sync`,
+//! so that runtime is **thread-local** (each engine thread compiles the
+//! HLO text once and reuses the executables). `SAMOA_ARTIFACTS`
+//! overrides the artifact directory (default: walk up from CWD looking
+//! for `artifacts/manifest.txt`). Dependency-free builds compile the
+//! same call sites against the in-tree [`xla`] stub, which reports
+//! itself unavailable to the registry and fails cleanly if reached.
 
 pub mod shapes;
 pub mod registry;
+pub mod simd;
+pub mod xla;
 pub mod gain;
 pub mod sdr;
 pub mod cluster;

@@ -1,53 +1,167 @@
-//! Thread-local artifact registry: PJRT client + compiled executables.
+//! Backend registry: the process-wide criterion-backend decision, plus
+//! the thread-local PJRT artifact cache for the XLA path.
+//!
+//! The decision order (see the table in [`super`]) is: an explicit
+//! `SAMOA_BACKEND` always wins (and `xla` fails loudly when it cannot
+//! run); `auto`/unset prefers executable XLA artifacts, then a one-shot
+//! micro-probe between the SIMD and native kernels, cached for the life
+//! of the process so every caller sees one consistent backend.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
 
 use crate::anyhow;
 use crate::common::error::{Context, Result};
 
 use super::shapes::Manifest;
+use super::xla;
 
 /// Which criterion backend is active.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
-    /// Pure-rust implementations (core::criterion).
+    /// Pure-rust scalar implementations (core::criterion).
     Native,
     /// AOT XLA artifacts through PJRT.
     Xla,
+    /// Lane-unrolled pure-rust kernels (runtime::simd) — no artifacts,
+    /// no external crates, selected when the micro-probe shows a win.
+    Simd,
 }
 
-// 0 = undecided, 1 = native, 2 = xla
+// 0 = undecided, 1 = native, 2 = xla, 3 = simd
 static BACKEND: AtomicU8 = AtomicU8::new(0);
 
+fn encode(b: Backend) -> u8 {
+    match b {
+        Backend::Native => 1,
+        Backend::Xla => 2,
+        Backend::Simd => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<Backend> {
+    match v {
+        1 => Some(Backend::Native),
+        2 => Some(Backend::Xla),
+        3 => Some(Backend::Simd),
+        _ => None,
+    }
+}
+
 /// Resolve (and cache) the global backend decision.
+///
+/// The first caller decides; concurrent first calls race the probe but
+/// only one result is latched (compare-exchange), so every subsequent
+/// call — on any thread — sees the same backend for the process life.
 pub fn backend_in_use() -> Backend {
-    match BACKEND.load(Ordering::Relaxed) {
-        1 => Backend::Native,
-        2 => Backend::Xla,
-        _ => {
-            let choice = decide_backend();
-            BACKEND.store(if choice == Backend::Xla { 2 } else { 1 }, Ordering::Relaxed);
-            choice
-        }
+    if let Some(b) = decode(BACKEND.load(Ordering::Acquire)) {
+        return b;
+    }
+    let choice = decide_backend();
+    match BACKEND.compare_exchange(0, encode(choice), Ordering::AcqRel, Ordering::Acquire) {
+        Ok(_) => choice,
+        // someone else latched first (or a test forced a backend
+        // mid-probe): their decision is the sticky one
+        Err(prev) => decode(prev).unwrap_or(choice),
     }
 }
 
 /// Force a backend (tests, benches, `--backend` CLI flag).
 pub fn force_backend(b: Backend) {
-    BACKEND.store(if b == Backend::Xla { 2 } else { 1 }, Ordering::Relaxed);
+    BACKEND.store(encode(b), Ordering::Release);
+}
+
+/// Reset the latched decision so the next [`backend_in_use`] re-decides.
+///
+/// Test-only by intent: the latch is process-global, so tests that
+/// [`force_backend`] would otherwise leak their choice into every test
+/// that runs after them in the same binary. Integration tests link the
+/// non-`cfg(test)` build of this crate, hence `pub` + `doc(hidden)`
+/// rather than `#[cfg(test)]`. Pair with [`backend_test_lock`].
+#[doc(hidden)]
+pub fn reset_for_tests() {
+    BACKEND.store(0, Ordering::Release);
+}
+
+/// Serialize tests that mutate the global backend latch.
+///
+/// `cargo test` runs tests on many threads of one binary; two tests
+/// calling [`force_backend`]/[`reset_for_tests`] concurrently would
+/// observe each other's half-configured state. Every such test takes
+/// this lock first (and restores the latch before dropping it), making
+/// backend tests order- and schedule-independent. Read-only tests that
+/// merely call the criterion wrappers need no lock: they are correct
+/// under every backend.
+#[doc(hidden)]
+pub fn backend_test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    match LOCK.lock() {
+        Ok(g) => g,
+        // a panicked backend test must not cascade into every later one
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Blocks × shape of the one-shot micro-probe: the default VHT counter
+/// block (16 bins × 8 classes), enough blocks to amortize call overhead.
+const PROBE_BLOCKS: usize = 64;
+/// SIMD must beat native by this factor to be selected under `auto`.
+/// The margin keeps the decision stable run-to-run (and, for the
+/// cluster engine, process-to-process): machines sitting exactly at the
+/// crossover would otherwise flap between backends on scheduler noise.
+const PROBE_MARGIN: f64 = 1.25;
+
+/// One-shot micro-probe: time the native and SIMD info-gain kernels on
+/// the default 16×8 block shape and pick SIMD only on a clear win —
+/// when blocks are too small (or the target too narrow) for the lane
+/// kernels to pay off, `auto` falls back to Native.
+fn probe_simd_vs_native() -> Backend {
+    use crate::core::observers::CounterBlock;
+    let mut rng = crate::common::Rng::new(0x5eed);
+    let blocks: Vec<CounterBlock> = (0..PROBE_BLOCKS)
+        .map(|_| {
+            let mut b = CounterBlock::new(16, 8);
+            for _ in 0..200 {
+                b.add(rng.below(16) as u32, rng.below(8) as u32, 1.0);
+            }
+            b
+        })
+        .collect();
+    let refs: Vec<&CounterBlock> = blocks.iter().collect();
+    // one warmup apiece (page in code, settle the branch predictor),
+    // then best-of-3 so a single preemption cannot decide the backend
+    std::hint::black_box(super::gain::gains_native(&refs));
+    std::hint::black_box(super::gain::gains_simd(&refs));
+    let mut best_native = u128::MAX;
+    let mut best_simd = u128::MAX;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        std::hint::black_box(super::gain::gains_native(&refs));
+        best_native = best_native.min(t0.elapsed().as_nanos());
+        let t0 = Instant::now();
+        std::hint::black_box(super::gain::gains_simd(&refs));
+        best_simd = best_simd.min(t0.elapsed().as_nanos());
+    }
+    if (best_simd as f64) * PROBE_MARGIN < best_native as f64 {
+        Backend::Simd
+    } else {
+        Backend::Native
+    }
 }
 
 fn decide_backend() -> Backend {
     // `xla` used to share the `auto` arm here, so an explicit request
     // silently fell back to native when artifacts were absent or stale —
     // the worst failure mode for a benchmark run. Explicit `xla` now
-    // aborts with the manifest diagnostic; only `auto` (and unset) keep
-    // the quiet fallback.
+    // aborts with a diagnostic; only `auto` (and unset) keep the quiet
+    // fallback. Explicit `native`/`simd` skip probing entirely.
     let explicit_xla = match std::env::var("SAMOA_BACKEND").as_deref() {
         Ok("native") => return Backend::Native,
+        Ok("simd") => return Backend::Simd,
         Ok("xla") => true,
         Ok("auto") | Err(_) => false,
         Ok(other) => {
@@ -55,6 +169,18 @@ fn decide_backend() -> Backend {
             false
         }
     };
+    if !xla::AVAILABLE {
+        if explicit_xla {
+            panic!(
+                "SAMOA_BACKEND=xla but this build carries only the in-tree XLA stub \
+                 (PJRT bindings not vendored) — use SAMOA_BACKEND=simd|native|auto, \
+                 or build with the real `xla` crate"
+            );
+        }
+        // auto: XLA can never execute here, so don't even look for
+        // artifacts — go straight to the native/simd probe
+        return probe_simd_vs_native();
+    }
     match artifacts_dir() {
         Some(dir) => {
             let path = dir.join("manifest.txt");
@@ -70,9 +196,9 @@ fn decide_backend() -> Backend {
                 }
                 Some(_) => {
                     eprintln!(
-                        "[samoa] artifact manifest shape mismatch — rebuild with `make artifacts`; using native backend"
+                        "[samoa] artifact manifest shape mismatch — rebuild with `make artifacts`; probing native/simd"
                     );
-                    Backend::Native
+                    probe_simd_vs_native()
                 }
                 None if explicit_xla => {
                     panic!(
@@ -81,7 +207,7 @@ fn decide_backend() -> Backend {
                         path.display()
                     );
                 }
-                None => Backend::Native,
+                None => probe_simd_vs_native(),
             }
         }
         None if explicit_xla => {
@@ -90,7 +216,7 @@ fn decide_backend() -> Backend {
                  (set SAMOA_ARTIFACTS or run `make artifacts` at the repo root)"
             );
         }
-        None => Backend::Native,
+        None => probe_simd_vs_native(),
     }
 }
 
@@ -150,7 +276,7 @@ impl XlaThreadRuntime {
     ) -> Result<Vec<xla::Literal>> {
         let exe = self.executable(name)?;
         let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple()?)
+        result.to_tuple()
     }
 }
 
@@ -186,8 +312,30 @@ mod tests {
 
     #[test]
     fn backend_decision_is_sticky() {
+        let _guard = backend_test_lock();
+        reset_for_tests();
         let b1 = backend_in_use();
         let b2 = backend_in_use();
         assert_eq!(b1, b2);
+        reset_for_tests();
+    }
+
+    #[test]
+    fn force_and_reset_are_observed() {
+        let _guard = backend_test_lock();
+        for b in [Backend::Simd, Backend::Native] {
+            force_backend(b);
+            assert_eq!(backend_in_use(), b);
+        }
+        reset_for_tests();
+        // a fresh decision never selects XLA in the stub build
+        assert_ne!(backend_in_use(), Backend::Xla);
+        reset_for_tests();
+    }
+
+    #[test]
+    fn probe_selects_native_or_simd() {
+        let b = probe_simd_vs_native();
+        assert!(b == Backend::Native || b == Backend::Simd);
     }
 }

@@ -1,11 +1,18 @@
-//! SDR surfaces for AMRules expansion: XLA artifact or native fallback.
+//! SDR surfaces for AMRules expansion — batch-of-attributes entry point.
+//!
+//! [`sdr_surfaces`] is the single route every AMRules learner variant
+//! (sequential, VAMR, HAMR) takes to evaluate candidate splits; the
+//! registry picks the scalar native twin, the lane-unrolled SIMD kernel,
+//! or the XLA artifact.
 
 use crate::Result;
 
-use crate::core::criterion::{self, VarStats};
+use crate::core::criterion::{self, VarStats, EPS};
 
 use super::registry::{self, Backend};
 use super::shapes::{SDR_A, SDR_B};
+use super::simd::LANES;
+use super::xla;
 
 /// Per-attribute candidate-split statistics: one `VarStats` per bin.
 pub type AttrBins = Vec<VarStats>;
@@ -14,6 +21,7 @@ pub type AttrBins = Vec<VarStats>;
 pub fn sdr_surfaces(attrs: &[AttrBins]) -> Vec<Vec<f64>> {
     match registry::backend_in_use() {
         Backend::Native => sdr_native(attrs),
+        Backend::Simd => sdr_simd(attrs),
         Backend::Xla => match sdr_xla(attrs) {
             Ok(s) => s,
             Err(e) => {
@@ -27,6 +35,82 @@ pub fn sdr_surfaces(attrs: &[AttrBins]) -> Vec<Vec<f64>> {
 
 pub fn sdr_native(attrs: &[AttrBins]) -> Vec<Vec<f64>> {
     attrs.iter().map(|bins| criterion::sdr_surface(bins)).collect()
+}
+
+/// SIMD path: four thresholds per step over the prefix-merged stats.
+pub fn sdr_simd(attrs: &[AttrBins]) -> Vec<Vec<f64>> {
+    attrs.iter().map(|bins| sdr_surface_simd(bins)).collect()
+}
+
+/// Lane-unrolled SDR surface over cumulative per-bin stats.
+///
+/// The prefix merge runs sequentially in the native accumulation order;
+/// the per-threshold `sdr(total, left, right)` evaluation — two
+/// divisions and two square roots per bin on the scalar path — then
+/// proceeds four thresholds at a time with the guards (`left.n ≤ 0` or
+/// `right.n ≤ 0` ⇒ 0) as branchless selects. Per-threshold the exact
+/// native operation sequence is preserved, so results match the scalar
+/// twin to the last ulp.
+pub fn sdr_surface_simd(bins: &[VarStats]) -> Vec<f64> {
+    let n_bins = bins.len();
+    if n_bins == 0 {
+        return Vec::new();
+    }
+    let total = bins.iter().fold(VarStats::default(), |a, b| a.merge(b));
+    // prefix (left-side) stats, native merge order
+    let mut ln = vec![0.0f64; n_bins];
+    let mut lsum = vec![0.0f64; n_bins];
+    let mut lsq = vec![0.0f64; n_bins];
+    let mut left = VarStats::default();
+    for (i, b) in bins.iter().enumerate() {
+        left = left.merge(b);
+        ln[i] = left.n;
+        lsum[i] = left.sum;
+        lsq[i] = left.sq;
+    }
+    let t_n = total.n.max(EPS);
+    let t_sd = total.sd();
+
+    // per-lane sd(): n/sum/sq → sqrt(max(sq/n' − mean², 0)), n' = max(n, EPS)
+    #[inline(always)]
+    fn sd_lanes(n: [f64; LANES], sum: [f64; LANES], sq: [f64; LANES]) -> [f64; LANES] {
+        let mut out = [0.0f64; LANES];
+        for i in 0..LANES {
+            let nc = n[i].max(EPS);
+            let mean = sum[i] / nc;
+            out[i] = (sq[i] / nc - mean * mean).max(0.0).sqrt();
+        }
+        out
+    }
+
+    let mut out = vec![0.0f64; n_bins];
+    let mut i = 0usize;
+    while i < n_bins {
+        let mut l_n = [0.0f64; LANES];
+        let mut l_sum = [0.0f64; LANES];
+        let mut l_sq = [0.0f64; LANES];
+        let mut r_n = [0.0f64; LANES];
+        let mut r_sum = [0.0f64; LANES];
+        let mut r_sq = [0.0f64; LANES];
+        let width = LANES.min(n_bins - i);
+        for k in 0..width {
+            l_n[k] = ln[i + k];
+            l_sum[k] = lsum[i + k];
+            l_sq[k] = lsq[i + k];
+            r_n[k] = total.n - l_n[k];
+            r_sum[k] = total.sum - l_sum[k];
+            r_sq[k] = total.sq - l_sq[k];
+        }
+        let l_sd = sd_lanes(l_n, l_sum, l_sq);
+        let r_sd = sd_lanes(r_n, r_sum, r_sq);
+        for k in 0..width {
+            let sdr = t_sd - (l_n[k] / t_n) * l_sd[k] - (r_n[k] / t_n) * r_sd[k];
+            // empty side ⇒ 0, the native guard, as a select
+            out[i + k] = if l_n[k] <= 0.0 || r_n[k] <= 0.0 { 0.0 } else { sdr };
+        }
+        i += width;
+    }
+    out
 }
 
 /// XLA path: chunk attributes into `[SDR_A, SDR_B, 3]` tensors.
@@ -49,11 +133,10 @@ pub fn sdr_xla(attrs: &[AttrBins]) -> Result<Vec<Vec<f64>>> {
             }
         }
         let flat = registry::with_runtime(|rt| {
-            let lit =
-                xla::Literal::vec1(&buf).reshape(&[SDR_A as i64, SDR_B as i64, 3])?;
+            let lit = xla::Literal::vec1(&buf).reshape(&[SDR_A as i64, SDR_B as i64, 3])?;
             let outs = rt.execute_tuple("sdr", &[lit])?;
             // outputs: (sdr[SDR_A, SDR_B], best_flat_idx, best, second)
-            Ok(outs[0].to_vec::<f32>()?)
+            outs[0].to_vec::<f32>()
         })?;
         for (i, bins) in chunk.iter().enumerate() {
             out.push(
@@ -70,6 +153,7 @@ pub fn sdr_xla(attrs: &[AttrBins]) -> Result<Vec<Vec<f64>>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::common::Rng;
 
     #[test]
     fn native_matches_direct_surface() {
@@ -79,5 +163,38 @@ mod tests {
         }
         let s = sdr_native(&[bins.clone()]);
         assert_eq!(s[0], criterion::sdr_surface(&bins));
+    }
+
+    #[test]
+    fn simd_surface_matches_native() {
+        let mut rng = Rng::new(5);
+        for bins_len in [1usize, 2, 3, 4, 5, 8, 17, 64] {
+            let bins: AttrBins = (0..bins_len)
+                .map(|_| {
+                    let mut s = VarStats::default();
+                    for _ in 0..rng.below(12) {
+                        s.add(rng.gaussian() * 4.0 - 1.0, 1.0);
+                    }
+                    s
+                })
+                .collect();
+            let native = criterion::sdr_surface(&bins);
+            let simd = sdr_surface_simd(&bins);
+            assert_eq!(native.len(), simd.len());
+            for (b, (n, s)) in native.iter().zip(simd.iter()).enumerate() {
+                assert!(
+                    (n - s).abs() <= 1e-9 * (1.0 + n.abs()),
+                    "bins={bins_len} bin {b}: native={n} simd={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_surface_empty_and_degenerate() {
+        assert!(sdr_surface_simd(&[]).is_empty());
+        // all-empty bins: every threshold has an empty side → all zeros
+        let empty = vec![VarStats::default(); 6];
+        assert_eq!(sdr_surface_simd(&empty), vec![0.0; 6]);
     }
 }

@@ -1,16 +1,26 @@
-//! Integration: the AOT XLA artifacts must agree with the native rust
-//! criterion implementations to float32 tolerance. This is the rust-side
-//! half of the correctness chain (python-side: pytest kernel-vs-ref).
+//! Integration: every non-native backend must agree with the native rust
+//! criterion implementations.
 //!
-//! Skips (with a note) when `artifacts/` has not been built.
+//! * **SIMD vs native** — property tests over random `CounterBlock` /
+//!   SDR / centroid inputs that run on every build, no artifacts needed:
+//!   ≤ 1e-9 relative agreement and exact top-2 winner agreement (or a
+//!   genuine tie within tolerance).
+//! * **XLA vs native** — float32-tolerance checks against the AOT
+//!   artifacts; skip (with a note) when `artifacts/` has not been built
+//!   or the build carries only the in-tree XLA stub.
 
 use samoa::common::Rng;
 use samoa::core::criterion::{self, VarStats};
 use samoa::core::observers::CounterBlock;
-use samoa::runtime::{cluster, gain, registry, sdr};
+use samoa::runtime::{cluster, gain, registry, sdr, xla};
 
 fn artifacts_available() -> bool {
-    registry::artifacts_dir().is_some()
+    registry::artifacts_dir().is_some() && xla::AVAILABLE
+}
+
+/// Relative agreement with an absolute floor (tiny gains near 0).
+fn close(n: f64, s: f64) -> bool {
+    (n - s).abs() <= 1e-9 * (1.0 + n.abs())
 }
 
 fn random_block(rng: &mut Rng, v: u32, c: u32, n: usize) -> CounterBlock {
@@ -21,10 +31,126 @@ fn random_block(rng: &mut Rng, v: u32, c: u32, n: usize) -> CounterBlock {
     b
 }
 
+/// Like [`random_block`] but with fractional (weighted-instance) counts.
+fn random_weighted_block(rng: &mut Rng, v: u32, c: u32, n: usize) -> CounterBlock {
+    let mut b = CounterBlock::new(v, c);
+    for _ in 0..n {
+        let w = rng.below(1000) as f32 / 250.0; // 0.000..3.996
+        b.add(rng.below(v as usize) as u32, rng.below(c as usize) as u32, w);
+    }
+    b
+}
+
+// ---------------------------------------------------------------------------
+// SIMD vs native — always run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn simd_gains_match_native_property() {
+    for seed in [1u64, 2, 3, 5, 8, 13] {
+        let mut rng = Rng::new(seed);
+        let mut blocks: Vec<CounterBlock> = Vec::new();
+        for (v, c) in [(16u32, 8u32), (5, 3), (32, 2), (2, 8)] {
+            for _ in 0..8 {
+                blocks.push(random_block(&mut rng, v, c, 50 + rng.below(400)));
+                blocks.push(random_weighted_block(&mut rng, v, c, 50 + rng.below(400)));
+            }
+        }
+        // exotic shapes: no counts at all, and a single populated class
+        blocks.push(CounterBlock::new(16, 8));
+        let mut pure = CounterBlock::new(16, 8);
+        for v in 0..16 {
+            pure.add(v, 2, 5.0);
+        }
+        blocks.push(pure);
+        let refs: Vec<&CounterBlock> = blocks.iter().collect();
+        let native = gain::gains_native(&refs);
+        let simd = gain::gains_simd(&refs);
+        assert_eq!(native.len(), simd.len());
+        for (i, (n, s)) in native.iter().zip(simd.iter()).enumerate() {
+            assert!(close(*n, *s), "seed={seed} block {i}: native={n} simd={s}");
+        }
+        // the split decision itself must not move between backends
+        let (ni, nb, _, n2) = gain::top2(&native);
+        let (si, sb, _, s2) = gain::top2(&simd);
+        assert!(
+            ni == si || close(nb, sb),
+            "seed={seed}: top-1 winner differs off-tie: native=({ni},{nb}) simd=({si},{sb})"
+        );
+        assert!(close(nb, sb) && close(n2, s2), "seed={seed}: top-2 gains diverged");
+    }
+}
+
+#[test]
+fn simd_sdr_surfaces_match_native_property() {
+    for seed in [21u64, 22, 23, 25, 28, 33] {
+        let mut rng = Rng::new(seed);
+        let attrs: Vec<Vec<VarStats>> = (0..40)
+            .map(|i| {
+                // bin counts straddling the 4-lane width, incl. 1 and odd sizes
+                let bins = [1usize, 2, 3, 5, 16, 64][i % 6];
+                (0..bins)
+                    .map(|_| {
+                        let mut s = VarStats::default();
+                        for _ in 0..rng.below(20) {
+                            s.add(rng.gaussian() * 3.0 + 1.0, 1.0);
+                        }
+                        s // some bins stay empty (below(20) can be 0)
+                    })
+                    .collect()
+            })
+            .collect();
+        let native = sdr::sdr_native(&attrs);
+        let simd = sdr::sdr_simd(&attrs);
+        assert_eq!(native.len(), simd.len());
+        for (a, (n, s)) in native.iter().zip(simd.iter()).enumerate() {
+            assert_eq!(n.len(), s.len());
+            for (b, (nv, sv)) in n.iter().zip(s.iter()).enumerate() {
+                assert!(close(*nv, *sv), "seed={seed} attr {a} bin {b}: native={nv} simd={sv}");
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_cluster_assign_matches_native_property() {
+    for seed in [41u64, 42, 43, 45, 48, 53] {
+        let mut rng = Rng::new(seed);
+        // d deliberately not lane-aligned; duplicate + dead centroids
+        for d in [3usize, 7, 13, 33] {
+            let (n, k) = (40usize, 12usize);
+            let points: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+            let mut centers: Vec<f32> = (0..k * d).map(|_| rng.gaussian() as f32).collect();
+            // centroid 5 duplicates centroid 1 exactly (a genuine tie)
+            let dup: Vec<f32> = centers[d..2 * d].to_vec();
+            centers[5 * d..6 * d].copy_from_slice(&dup);
+            let mut weights = vec![1f32; k];
+            weights[7] = 0.0; // dead slot
+            let native = cluster::assign_native(&points, &centers, &weights, d);
+            let simd = cluster::assign_simd(&points, &centers, &weights, d);
+            for (p, (nv, sv)) in native.iter().zip(simd.iter()).enumerate() {
+                assert!(
+                    close(nv.1, sv.1),
+                    "seed={seed} d={d} point {p}: native={nv:?} simd={sv:?}"
+                );
+                assert!(
+                    nv.0 == sv.0 || close(nv.1, sv.1),
+                    "seed={seed} d={d} point {p}: winner differs off-tie"
+                );
+                assert_ne!(sv.0, 7, "seed={seed} d={d}: dead slot won at point {p}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA vs native — need built artifacts + real PJRT bindings
+// ---------------------------------------------------------------------------
+
 #[test]
 fn xla_gains_match_native() {
     if !artifacts_available() {
-        eprintln!("skipping: artifacts/ not built");
+        eprintln!("skipping: artifacts/ not built or XLA stub build");
         return;
     }
     let mut rng = Rng::new(11);
@@ -47,7 +173,7 @@ fn xla_gains_match_native() {
 #[test]
 fn xla_gains_empty_and_pure_blocks() {
     if !artifacts_available() {
-        eprintln!("skipping: artifacts/ not built");
+        eprintln!("skipping: artifacts/ not built or XLA stub build");
         return;
     }
     let empty = CounterBlock::new(16, 8);
@@ -64,7 +190,7 @@ fn xla_gains_empty_and_pure_blocks() {
 #[test]
 fn xla_sdr_matches_native() {
     if !artifacts_available() {
-        eprintln!("skipping: artifacts/ not built");
+        eprintln!("skipping: artifacts/ not built or XLA stub build");
         return;
     }
     let mut rng = Rng::new(22);
@@ -100,7 +226,7 @@ fn xla_sdr_matches_native() {
 #[test]
 fn xla_cluster_matches_native() {
     if !artifacts_available() {
-        eprintln!("skipping: artifacts/ not built");
+        eprintln!("skipping: artifacts/ not built or XLA stub build");
         return;
     }
     let mut rng = Rng::new(33);

@@ -10,8 +10,10 @@ CI calls this after the smoke benches wrote their JSONL rows:
 
 Behavior:
   * the latest committed BENCH_PR<k>.json (highest k) is the baseline;
-  * rows are matched by exact bench name, filtered to --prefix (the
-    engine_throughput rows) and to rows that carry items_per_s;
+  * rows are matched by exact bench name, filtered to --prefix — a
+    comma-separated list of name prefixes (engine_throughput's tput/
+    rows, the kernel benches' kern/ rows) — and to rows that carry
+    items_per_s;
   * a row regressing by more than --max-regress (relative items/s)
     fails the job, listing every offender;
   * a trajectory table (every committed file + the current run) is
@@ -82,7 +84,9 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", required=True, help="bench JSONL of this run")
     ap.add_argument("--baseline-dir", default="perf")
-    ap.add_argument("--prefix", default="tput/", help="gate rows whose name starts with this")
+    ap.add_argument("--prefix", default="tput/",
+                    help="gate rows whose name starts with any of these "
+                         "comma-separated prefixes (e.g. 'tput/,kern/')")
     ap.add_argument("--max-regress", type=float, default=0.15)
     ap.add_argument("--summary", default=None, help="markdown summary file to append to")
     ap.add_argument("--soft", action="store_true",
@@ -91,11 +95,12 @@ def main():
                          "already-accepted regression)")
     args = ap.parse_args()
 
+    prefixes = tuple(p for p in args.prefix.split(",") if p)
     current = load_jsonl(args.current)
     gated = {
         name: row
         for name, row in current.items()
-        if name.startswith(args.prefix) and isinstance(row.get("items_per_s"), (int, float))
+        if name.startswith(prefixes) and isinstance(row.get("items_per_s"), (int, float))
     }
     baselines = load_baselines(args.baseline_dir)
 

@@ -8,7 +8,9 @@ Run directly (no pytest in the image):
 Covers the two boundary states the gate must not error on:
   * an empty (or missing) baseline dir — "no baseline, seeding", exit 0;
   * a single committed baseline file — trajectory table with one PR
-    column, the regression gate armed against it.
+    column, the regression gate armed against it;
+plus the multi-prefix gate ("tput/,kern/") that CI uses once the kernel
+benches joined the trajectory.
 """
 
 import json
@@ -21,19 +23,24 @@ import unittest
 SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_compare.py")
 
 
-def write_current(path, rate):
+def write_current(path, rate, kern_rate=None):
     rows = [
         {"name": "tput/engine_throughput", "items_per_s": rate},
         {"name": "other/ignored", "items_per_s": 1.0},
         {"name": "tput/no_rate_row"},
     ]
+    if kern_rate is not None:
+        rows.append({"name": "kern/infogain_simd_a256", "items_per_s": kern_rate})
     with open(path, "w", encoding="utf-8") as fh:
         for row in rows:
             fh.write(json.dumps(row) + "\n")
 
 
-def write_baseline(dirpath, pr, rate):
-    doc = {"results": [{"name": "tput/engine_throughput", "items_per_s": rate}]}
+def write_baseline(dirpath, pr, rate, kern_rate=None):
+    results = [{"name": "tput/engine_throughput", "items_per_s": rate}]
+    if kern_rate is not None:
+        results.append({"name": "kern/infogain_simd_a256", "items_per_s": kern_rate})
+    doc = {"results": results}
     with open(os.path.join(dirpath, f"BENCH_PR{pr}.json"), "w", encoding="utf-8") as fh:
         json.dump(doc, fh)
 
@@ -90,6 +97,50 @@ class SingleBaseline(unittest.TestCase):
             self.assertIn("REGRESSION", res.stdout)
             soft = run_gate(current, perf, "--soft")
             self.assertEqual(soft.returncode, 0, soft.stdout + soft.stderr)
+
+
+class MultiPrefix(unittest.TestCase):
+    def test_kern_rows_gated_only_with_multi_prefix(self):
+        with tempfile.TemporaryDirectory() as td:
+            current = os.path.join(td, "bench.jsonl")
+            # tput healthy, kern collapsed to -50%
+            write_current(current, 1e6, kern_rate=0.5e6)
+            perf = os.path.join(td, "perf")
+            os.mkdir(perf)
+            write_baseline(perf, 7, 1e6, kern_rate=1e6)
+            # default single prefix: the kern regression is invisible
+            res = run_gate(current, perf)
+            self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+            self.assertNotIn("kern/infogain_simd_a256", res.stdout)
+            # multi prefix (what CI passes): the kern regression fails the gate
+            res = run_gate(current, perf, "--prefix", "tput/,kern/")
+            self.assertEqual(res.returncode, 1, res.stdout + res.stderr)
+            self.assertIn("kern/infogain_simd_a256", res.stdout)
+            self.assertIn("REGRESSION", res.stdout)
+
+    def test_multi_prefix_all_healthy_passes_and_tabulates_both(self):
+        with tempfile.TemporaryDirectory() as td:
+            current = os.path.join(td, "bench.jsonl")
+            write_current(current, 1e6, kern_rate=2e6)  # kern improved
+            perf = os.path.join(td, "perf")
+            os.mkdir(perf)
+            write_baseline(perf, 7, 1e6, kern_rate=1e6)
+            res = run_gate(current, perf, "--prefix", "tput/,kern/")
+            self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+            self.assertIn("tput/engine_throughput", res.stdout)
+            self.assertIn("kern/infogain_simd_a256", res.stdout)
+            self.assertNotIn("REGRESSION", res.stdout)
+
+    def test_kern_row_missing_from_baseline_is_not_an_error(self):
+        # first run after the kernel benches land: baseline predates kern/
+        with tempfile.TemporaryDirectory() as td:
+            current = os.path.join(td, "bench.jsonl")
+            write_current(current, 1e6, kern_rate=1e6)
+            perf = os.path.join(td, "perf")
+            os.mkdir(perf)
+            write_baseline(perf, 7, 1e6)  # no kern rows yet
+            res = run_gate(current, perf, "--prefix", "tput/,kern/")
+            self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
 
 
 if __name__ == "__main__":
