@@ -25,9 +25,15 @@
 //! flushes on source idle instead of parking events in a 32-slot
 //! buffer).
 //!
-//! Every row lands in `BENCH_JSON` as `tput/...` — the rows the CI
-//! perf-trajectory gate (`tools/bench_compare.py`) diffs against the
-//! committed `perf/BENCH_PR*.json` history.
+//! **Section 4 — cluster data plane**: the relay topology (entry →
+//! fwd → key-grouped sinks) on the cluster engine with thread-mode
+//! workers (subprocess mode would re-exec this bench binary), comparing
+//! coordinator-routed delivery against both peer modes; rows are
+//! `clu/`-prefixed so the perf gate tracks the socket plane separately.
+//!
+//! Every row lands in `BENCH_JSON` as `tput/...` or `clu/...` — the
+//! rows the CI perf-trajectory gate (`tools/bench_compare.py`) diffs
+//! against the committed `perf/BENCH_PR*.json` history.
 
 mod bench_util;
 use bench_util::{bench, record_json, smoke_mode};
@@ -37,7 +43,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use samoa::core::instance::{Instance, Label};
-use samoa::engine::{LocalEngine, ThreadedEngine};
+use samoa::engine::cluster::spec as cluster_spec;
+use samoa::engine::{ClusterEngine, LocalEngine, PeerMode, ThreadedEngine};
 // the same deterministic spin load `samoa exp flowcontrol` sweeps
 use samoa::experiments::flowcontrol::Burn;
 use samoa::topology::{Ctx, Event, Grouping, Processor, TopologyBuilder};
@@ -136,6 +143,23 @@ fn run_flow(
     let m = eng.run(&topo, entry, source, |_, _, _| {});
     let tput = n as f64 / t0.elapsed().as_secs_f64().max(1e-12);
     (tput, m.flow.backpressure_stalls, m.max_peak_queue_events(), m.flow.steals)
+}
+
+/// One cluster-engine run of the relay spec with thread-mode workers;
+/// returns (events/sec, coordinator data frames, peer frames).
+fn run_cluster(workers: usize, peer: PeerMode, n: u64) -> (f64, u64, u64) {
+    let (topo, entry) = cluster_spec::build(&format!("relay:p={workers}")).expect("relay spec");
+    let eng = ClusterEngine::new().with_workers(workers).with_peer(peer);
+    let source = (0..n).map(|id| Event::Instance {
+        id,
+        inst: Instance::dense(vec![0.25; 8], Label::None),
+    });
+    let t0 = Instant::now();
+    let run = eng.run(&topo, entry, source).expect("cluster run");
+    let tput = n as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+    assert_eq!(run.kv_sum("seen"), n as f64, "relay sinks must see every instance");
+    let c = &run.metrics.cluster;
+    (tput, c.data_frames, c.peer_frames())
 }
 
 /// Sink that records per-event delivery latency against the send stamps.
@@ -340,4 +364,26 @@ fn main() {
          (target: lower) -> {}",
         if lat_ok { "PASS" } else { "FAIL" }
     );
+
+    // ------------------------------------------------------------------
+    println!("\n== engine_throughput 4: cluster data plane (relay, thread-mode workers) ==");
+    println!("(coordinator-routed vs peer worker links; frames from ClusterMetrics)");
+    let nc: u64 = if smoke_mode() { 2_000 } else { 10_000 };
+    for workers in [2usize, 4] {
+        for peer in [PeerMode::Off, PeerMode::Deterministic, PeerMode::Fast] {
+            let peer_label = match peer {
+                PeerMode::Off => "coord",
+                PeerMode::Deterministic => "peer-det",
+                PeerMode::Fast => "peer-fast",
+            };
+            let label = format!("clu/relay w={workers} {peer_label}");
+            let mut last = (0.0, 0, 0);
+            bench(&label, 2, || {
+                last = run_cluster(workers, peer, nc);
+                nc
+            });
+            let (_, data_frames, peer_frames) = last;
+            println!("  {label}: coord_data_frames={data_frames} peer_frames={peer_frames}");
+        }
+    }
 }

@@ -223,6 +223,96 @@ impl CheckpointStore {
     }
 }
 
+/// The link a logged delivery originally traveled on. With the cluster
+/// engine's peer data plane, deliveries reach a worker over several
+/// links — the coordinator's lanes plus one peer link per sending
+/// worker — and the replay log keys every entry by its origin so a
+/// re-drive after a worker death can account (and meter) per link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogOrigin {
+    /// Shipped by the coordinator (control or data lane).
+    Coordinator,
+    /// Shipped worker→worker by `sender`; the coordinator logged it
+    /// from the sender's reply descriptor (recovery mode ships the
+    /// payload in the descriptor precisely so this log stays complete).
+    Peer { sender: usize },
+}
+
+/// One logged delivery awaiting a checkpoint that covers it.
+#[derive(Clone, Debug)]
+pub struct ReplayEntry<T> {
+    pub item: T,
+    pub origin: LogOrigin,
+    /// The reply was consumed (and its emissions routed) pre-death; a
+    /// re-drive of this entry rebuilds receiver state only.
+    pub replied: bool,
+}
+
+/// Bounded replay log of one delivery *destination* (a cluster worker),
+/// holding every delivery since the destination's last checkpoint with
+/// its origin link. `base` is the absolute index of `entries.front()`
+/// and only grows, so a stale reference can never alias a newer entry
+/// after an overflow pop or a checkpoint clear.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayLog<T> {
+    entries: std::collections::VecDeque<ReplayEntry<T>>,
+    base: u64,
+}
+
+impl<T> ReplayLog<T> {
+    pub fn new() -> Self {
+        ReplayLog { entries: std::collections::VecDeque::new(), base: 0 }
+    }
+
+    /// Append an entry, evicting the oldest when `cap` is reached.
+    /// Returns the entry's absolute index and whether an eviction
+    /// happened (an eviction voids the bit-identical recovery guarantee
+    /// for this destination — count it in `replay_dropped`).
+    pub fn push(&mut self, item: T, origin: LogOrigin, cap: usize) -> (u64, bool) {
+        let mut dropped = false;
+        if self.entries.len() >= cap.max(1) {
+            self.entries.pop_front();
+            self.base += 1;
+            dropped = true;
+        }
+        let abs = self.base + self.entries.len() as u64;
+        self.entries.push_back(ReplayEntry { item, origin, replied: false });
+        (abs, dropped)
+    }
+
+    /// Mark the entry at absolute index `abs` as replied, if it is
+    /// still in the log (it may have been evicted or cleared).
+    pub fn mark_replied(&mut self, abs: u64) {
+        if abs >= self.base {
+            if let Some(entry) = self.entries.get_mut((abs - self.base) as usize) {
+                entry.replied = true;
+            }
+        }
+    }
+
+    /// A checkpoint at full quiescence covers every logged delivery:
+    /// clear them all (the base keeps growing).
+    pub fn clear_covered(&mut self) {
+        self.base += self.entries.len() as u64;
+        self.entries.clear();
+    }
+
+    /// Take every entry for a re-drive, advancing the base past them.
+    pub fn drain_for_redrive(&mut self) -> Vec<ReplayEntry<T>> {
+        let entries: Vec<ReplayEntry<T>> = self.entries.drain(..).collect();
+        self.base += entries.len() as u64;
+        entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 /// Rescale support: merge the per-shard stage sections of several
 /// pipeline-shard checkpoint frames into one frame whose stage payloads
 /// are the *merged* statistics, using `scratch` (a pipeline of the same

@@ -51,6 +51,37 @@
 //! own shutdown flush, and the delta/master counts of
 //! `tests/shard_skew_rounds.rs` are reproduced exactly.
 //!
+//! # Peer data plane (`with_peer`)
+//!
+//! By default every data delivery round-trips through the coordinator —
+//! full fidelity, but the coordinator is the bottleneck ROADMAP names.
+//! With [`ClusterEngine::with_peer`] the coordinator distributes a
+//! routing table (`FRAME_ROUTES`: groupings, delays, shard ownership)
+//! at startup and every worker pair opens a direct data socket. An
+//! emission whose stream a worker can route without global state — any
+//! data event on a delay-0 stream grouped Key/Direct/All, or Shuffle at
+//! parallelism 1 (the shuffle cursor is global) — ships worker→worker
+//! as a `FRAME_PEER` frame with a per-(sender,dest) sequence number,
+//! while the sender's reply carries a *descriptor* instead of the
+//! payload. The coordinator consumes descriptors in global send order,
+//! so it still runs the exact local-engine metrics and still owns the
+//! global delivery order: in `PeerMode::Deterministic` it assigns each
+//! peer delivery the destination's next `wseq` slot and announces
+//! `slot → sender` in out-of-band `FRAME_PEER_SCHED` tokens (they carry
+//! no slot themselves), and the receiver merges coordinator frames and
+//! per-sender peer FIFOs in contiguous slot order — bit-identical to
+//! the coordinator-routed order, hence to the local engine.
+//! `PeerMode::Fast` skips the slots: receivers process peer frames
+//! whenever their coordinator-frame stream stalls and reply by
+//! (sender, lseq) identity, conserving per-stream totals but relaxing
+//! the global order. Control events, delayed streams, source injection
+//! and the Shutdown/Collect/Snapshot/Restore protocol always stay on
+//! the coordinator lanes. A worker always flushes its peer links
+//! before its reply lane, so a consumed descriptor implies the peer
+//! frames are on the wire — even if the sender dies right after, the
+//! receiver still drains them (worker death degrades the respawned
+//! shard to coordinator routing; see `recover_worker`).
+//!
 //! # Deadlock freedom
 //!
 //! Workers always drain their sockets (a dedicated reader thread per
@@ -93,11 +124,12 @@ use crate::common::cli::Args;
 use crate::topology::builder::Topology;
 use crate::topology::codec::{self, Reader};
 use crate::topology::processor::{Ctx, Processor};
-use crate::topology::stream::Route;
+use crate::topology::stream::{Grouping, Route};
 use crate::topology::{Event, StreamId};
 use crate::{Context as _, Result};
 
-use super::metrics::{ClusterMetrics, EngineMetrics};
+use super::checkpoint::{LogOrigin, ReplayLog};
+use super::metrics::{ClusterMetrics, EngineMetrics, PeerLinkMetrics};
 
 // Frame kinds. Every frame is `[len: u32 LE][kind: u8][wseq: u64 LE]…`;
 // coordinator → worker kinds first, worker → coordinator kinds after.
@@ -125,6 +157,55 @@ type Delivery = (usize, usize, Event);
 #[inline]
 fn worker_of(iid: usize, n_workers: usize) -> usize {
     iid % n_workers
+}
+
+/// Routing mode of the worker↔worker data plane.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PeerMode {
+    /// Every delivery round-trips through the coordinator.
+    #[default]
+    Off,
+    /// Peer links on; the coordinator schedules each peer delivery's
+    /// global-order slot, so results stay bit-identical to the local
+    /// engine (and to peer-off cluster runs).
+    Deterministic,
+    /// Peer links on; receivers process peer deliveries whenever their
+    /// coordinator-frame stream stalls. Conserves per-stream totals but
+    /// relaxes the global order (learned models may differ).
+    Fast,
+}
+
+impl PeerMode {
+    /// Parse the `--peer` CLI knob: bare `--peer` (= "true") or
+    /// `--peer det` → deterministic, `--peer fast` → fast, absent → off.
+    pub fn parse(v: Option<&str>) -> Result<PeerMode> {
+        Ok(match v {
+            None | Some("off") => PeerMode::Off,
+            Some("fast") => PeerMode::Fast,
+            Some("true" | "det" | "deterministic" | "1" | "yes") => PeerMode::Deterministic,
+            Some(other) => crate::bail!("bad --peer mode '{other}' (expected det|fast|off)"),
+        })
+    }
+}
+
+/// Wire code of a grouping in the `FRAME_ROUTES` table.
+fn grouping_code(g: Grouping) -> u8 {
+    match g {
+        Grouping::Key => 0,
+        Grouping::Shuffle => 1,
+        Grouping::All => 2,
+        Grouping::Direct => 3,
+    }
+}
+
+fn grouping_from_code(c: u8) -> Result<Grouping> {
+    Ok(match c {
+        0 => Grouping::Key,
+        1 => Grouping::Shuffle,
+        2 => Grouping::All,
+        3 => Grouping::Direct,
+        other => crate::bail!("cluster: bad grouping code {other}"),
+    })
 }
 
 // ------------------------------------------------------------ transport
@@ -199,12 +280,26 @@ fn read_frame<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<()> {
 
 // ------------------------------------------------------------ worker side
 
-/// Frames received by a worker, keyed by `wseq`: the reorder buffer that
-/// merges the control and data lanes back into one deterministic order.
+/// Frames received by a worker, keyed by `wseq`, plus the peer-plane
+/// receive state: the reorder buffer that merges the control and data
+/// lanes (and, in peer mode, the worker↔worker links) back into one
+/// deterministic order.
 #[derive(Default)]
 struct Inbox {
     frames: BTreeMap<u64, Vec<u8>>,
-    /// A lane hit EOF or a read error: the coordinator hung up.
+    /// Deterministic peer mode: slot → sending worker, distributed by
+    /// the coordinator in out-of-band `FRAME_PEER_SCHED` tokens.
+    sched: BTreeMap<u64, u8>,
+    /// Per-sender FIFO of raw peer frames (self-deliveries included);
+    /// frame order on one link *is* delivery order.
+    peer_q: Vec<VecDeque<Vec<u8>>>,
+    /// Workers the coordinator announced dead (`FRAME_PEER_DOWN`): stop
+    /// peer-routing to them, their deliveries fall back to the
+    /// coordinator path.
+    down: Vec<bool>,
+    /// Peer links whose socket hit EOF (the sender exited or died).
+    peer_eof: Vec<bool>,
+    /// A coordinator lane hit EOF or a read error: the coordinator hung up.
     eof: bool,
 }
 
@@ -212,6 +307,8 @@ type SharedInbox = Arc<(Mutex<Inbox>, Condvar)>;
 
 /// Per-lane reader: drains the socket unconditionally (the worker-side
 /// half of the deadlock-freedom argument) into the shared inbox.
+/// Out-of-band peer-plane frames (their wseq field is 0 and they consume
+/// no slot) are routed to their own structures.
 fn reader_loop(sock: Sock, inbox: SharedInbox) {
     let mut r = BufReader::new(sock);
     let mut buf = Vec::new();
@@ -224,10 +321,295 @@ fn reader_loop(sock: Sock, inbox: SharedInbox) {
             cv.notify_all();
             return;
         }
-        let wseq = u64::from_le_bytes(buf[1..9].try_into().unwrap());
-        g.frames.insert(wseq, std::mem::take(&mut buf));
+        match buf[0] {
+            codec::FRAME_PEER_SCHED => match codec::decode_peer_sched(&buf) {
+                Ok(tokens) => g.sched.extend(tokens),
+                Err(_) => {
+                    // A corrupt schedule would stall the merge forever;
+                    // treat it like a hangup so the worker exits loudly.
+                    g.eof = true;
+                    cv.notify_all();
+                    return;
+                }
+            },
+            codec::FRAME_PEER_DOWN if buf.len() >= 10 => {
+                let w = buf[9] as usize;
+                if g.down.len() <= w {
+                    g.down.resize(w + 1, false);
+                }
+                g.down[w] = true;
+            }
+            _ => {
+                let wseq = u64::from_le_bytes(buf[1..9].try_into().unwrap());
+                g.frames.insert(wseq, std::mem::take(&mut buf));
+            }
+        }
         cv.notify_all();
     }
+}
+
+/// Reader of one incoming worker↔worker link: drains raw peer frames
+/// into the per-sender FIFO.
+fn peer_reader_loop(sock: Sock, sender: usize, inbox: SharedInbox) {
+    let mut r = BufReader::new(sock);
+    let mut buf = Vec::new();
+    loop {
+        let ok = read_frame(&mut r, &mut buf).is_ok() && !buf.is_empty();
+        let (lock, cv) = &*inbox;
+        let mut g = lock.lock().unwrap();
+        if !ok {
+            if let Some(flag) = g.peer_eof.get_mut(sender) {
+                *flag = true;
+            }
+            cv.notify_all();
+            return;
+        }
+        g.peer_q[sender].push_back(std::mem::take(&mut buf));
+        cv.notify_all();
+    }
+}
+
+/// How a worker's peer data plane comes up.
+enum PeerInit {
+    /// Peer mode off — also used for respawned replacement workers,
+    /// which are always degraded to coordinator routing.
+    Off,
+    /// Thread mode: the coordinator pre-connected the full mesh; entry
+    /// `j` is the duplex socket to worker `j` (`None` at our own index).
+    Mesh(Vec<Option<Sock>>),
+    /// Subprocess mode: we own a listener; on `FRAME_ROUTES` we dial
+    /// every lower-indexed peer and accept every higher-indexed one.
+    Listen(PeerListener),
+}
+
+enum PeerListener {
+    Unix(UnixListener, std::path::PathBuf),
+    Tcp(TcpListener),
+}
+
+/// Worker-side peer plane, live once `FRAME_ROUTES` is processed.
+struct PeerPlane {
+    /// 1 = deterministic (slot-scheduled), 2 = fast (opportunistic).
+    mode: u8,
+    /// Recovery runs ship the event payload inside reply descriptors so
+    /// the coordinator's replay log stays complete.
+    recovery: bool,
+    n_workers: usize,
+    /// Our worker index (self-deliveries skip the socket).
+    index: usize,
+    /// Per stream: destination pid, grouping, delay — the routing table.
+    streams: Vec<(usize, Grouping, u32)>,
+    /// Outgoing writer per destination worker (`None` at our own index).
+    writers: Vec<Option<BufWriter<Sock>>>,
+    /// Writers with unflushed frames since the last peer flush.
+    writer_dirty: Vec<bool>,
+    /// Writers that failed mid-run. Recovery mode tolerates this (the
+    /// coordinator reroutes the affected deliveries); otherwise fatal.
+    writer_dead: Vec<bool>,
+    /// Next sequence number per (us → dest) link.
+    lseq_out: Vec<u64>,
+    /// Expected next sequence number per (sender → us) link.
+    lseq_in: Vec<u64>,
+}
+
+/// Flush every dirtied peer writer. MUST run before any flush of the
+/// reply lane: once the coordinator consumes a reply descriptor, the
+/// matching peer frames have to be on the wire already — that is both
+/// the liveness argument (the receiver's scheduled slot is satisfiable)
+/// and what keeps the frames deliverable if this worker dies right
+/// after replying.
+fn flush_peer_writers(plane: &mut Option<PeerPlane>) -> Result<()> {
+    let Some(p) = plane else { return Ok(()) };
+    for d in 0..p.writers.len() {
+        if !p.writer_dirty[d] || p.writer_dead[d] {
+            continue;
+        }
+        p.writer_dirty[d] = false;
+        if let Some(w) = p.writers[d].as_mut() {
+            if let Err(e) = w.flush() {
+                if p.recovery {
+                    p.writer_dead[d] = true;
+                } else {
+                    return Err(e.into());
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Encode one delivery's emissions into the reply body `b`. Peer mode
+/// off: the legacy flat `[stream][key][event]` list. Peer mode on: a
+/// tagged list — tag 0 a full emission for the coordinator to route,
+/// tag 1 a descriptor for a delivery shipped worker→worker right here
+/// (one descriptor per destination instance, in local-engine fan-out
+/// order).
+fn encode_emissions(
+    b: &mut Vec<u8>,
+    emissions: &[(StreamId, u64, Event)],
+    plane: &mut Option<PeerPlane>,
+    shape: &[usize],
+    down: &[bool],
+    inbox: &SharedInbox,
+) -> Result<()> {
+    let Some(p) = plane.as_mut() else {
+        codec::put_u32(b, emissions.len() as u32);
+        for (s, k, e) in emissions {
+            codec::put_u32(b, s.0 as u32);
+            codec::put_u64(b, *k);
+            codec::encode_event(e, b);
+        }
+        return Ok(());
+    };
+    let n_pos = b.len();
+    codec::put_u32(b, 0); // item count, patched below
+    let mut items = 0u32;
+    for (s, k, e) in emissions {
+        let (dest, grouping, delay) = p.streams[s.0];
+        let par = shape[dest];
+        // Peer-eligible: data event, immediate stream, and a grouping we
+        // can route without global state (the shuffle cursor is global,
+        // so Shuffle qualifies only at parallelism 1).
+        let eligible = !e.is_control()
+            && delay == 0
+            && !matches!(grouping, Grouping::Shuffle if par > 1);
+        let dests: Vec<usize> = if eligible {
+            let mut rr = 0;
+            match grouping.route(*k, par, &mut rr) {
+                Route::One(i) => vec![i],
+                Route::All => (0..par).collect(),
+            }
+        } else {
+            Vec::new()
+        };
+        let routable = !dests.is_empty()
+            && dests.iter().all(|&t| {
+                let d = worker_of(t, p.n_workers);
+                !down.get(d).copied().unwrap_or(false) && !p.writer_dead[d]
+            });
+        if !routable {
+            codec::put_u8(b, 0);
+            codec::put_u32(b, s.0 as u32);
+            codec::put_u64(b, *k);
+            codec::encode_event(e, b);
+            items += 1;
+            continue;
+        }
+        let wire = e.wire_bytes() as u32;
+        for t in dests {
+            let d = worker_of(t, p.n_workers);
+            let lseq = p.lseq_out[d];
+            p.lseq_out[d] += 1;
+            let frame = codec::encode_peer_frame(lseq, dest as u16, t as u16, e);
+            let enc = frame.len() as u32;
+            if d == p.index {
+                // Self-link: straight into our own inbox, no socket.
+                let (lock, cv) = &**inbox;
+                let mut g = lock.lock().unwrap();
+                g.peer_q[d].push_back(frame);
+                cv.notify_all();
+            } else {
+                let w = p.writers[d].as_mut().expect("peer writer missing");
+                match write_frame(w, &frame) {
+                    Ok(()) => p.writer_dirty[d] = true,
+                    Err(err) if p.recovery => {
+                        // The destination died; the coordinator will
+                        // reroute this delivery from the descriptor.
+                        let _ = err;
+                        p.writer_dead[d] = true;
+                    }
+                    Err(err) => return Err(err.into()),
+                }
+            }
+            codec::put_u8(b, 1);
+            codec::put_u32(b, s.0 as u32);
+            codec::put_u16(b, t as u16);
+            codec::put_u32(b, wire);
+            codec::put_u32(b, enc);
+            if p.recovery {
+                codec::put_u8(b, 1);
+                codec::encode_event(e, b);
+            } else {
+                codec::put_u8(b, 0);
+            }
+            items += 1;
+        }
+    }
+    b[n_pos..n_pos + 4].copy_from_slice(&items.to_le_bytes());
+    Ok(())
+}
+
+/// Subprocess peer mesh: dial every lower-indexed worker's listener
+/// (sending our index as a 1-byte hello), accept one connection from
+/// every higher-indexed worker. Listeners are bound before the
+/// coordinator handshake, so dials always land in a live backlog — no
+/// ordering constraint between workers.
+fn connect_peer_mesh(
+    listener: &PeerListener,
+    index: usize,
+    n_workers: usize,
+    addrs: &[String],
+) -> Result<Vec<Option<Sock>>> {
+    crate::ensure!(addrs.len() == n_workers, "cluster worker: peer address table mismatch");
+    let mut socks: Vec<Option<Sock>> = (0..n_workers).map(|_| None).collect();
+    for (j, addr) in addrs.iter().enumerate().take(index) {
+        let mut s = if let Some(path) = addr.strip_prefix("unix:") {
+            Sock::Unix(UnixStream::connect(path).with_context(|| format!("peer dial {path}"))?)
+        } else if let Some(a) = addr.strip_prefix("tcp:") {
+            Sock::Tcp(TcpStream::connect(a).with_context(|| format!("peer dial {a}"))?)
+        } else {
+            crate::bail!("cluster worker: bad peer address {addr}")
+        };
+        s.write_all(&[index as u8])?;
+        s.flush()?;
+        socks[j] = Some(s);
+    }
+    let secs = std::env::var("SAMOA_CLUSTER_ACCEPT_SECS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(30)
+        .max(1);
+    let deadline = Instant::now() + std::time::Duration::from_secs(secs);
+    for _ in index + 1..n_workers {
+        let mut s = loop {
+            let got = match listener {
+                PeerListener::Unix(l, _) => {
+                    l.set_nonblocking(true)?;
+                    l.accept().map(|(s, _)| Sock::Unix(s))
+                }
+                PeerListener::Tcp(l) => {
+                    l.set_nonblocking(true)?;
+                    l.accept().map(|(s, _)| Sock::Tcp(s))
+                }
+            };
+            match got {
+                Ok(s) => break s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        crate::bail!("cluster worker {index}: timed out accepting peer links");
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        match &s {
+            Sock::Unix(u) => u.set_nonblocking(false)?,
+            Sock::Tcp(t) => t.set_nonblocking(false)?,
+        }
+        let mut hello = [0u8; 1];
+        s.read_exact(&mut hello)?;
+        let j = hello[0] as usize;
+        crate::ensure!(
+            j > index && j < n_workers && socks[j].is_none(),
+            "cluster worker {index}: unexpected peer hello from {j}"
+        );
+        socks[j] = Some(s);
+    }
+    if let PeerListener::Unix(_, path) = listener {
+        let _ = std::fs::remove_file(path);
+    }
+    Ok(socks)
 }
 
 /// One processor instance living on this worker.
@@ -239,15 +621,67 @@ struct Cell {
     busy_ns: u64,
 }
 
+/// One consumable unit popped from the worker's inbox.
+enum Fetched {
+    /// A coordinator frame (slot `next`).
+    Frame(Vec<u8>),
+    /// A peer delivery. `slot` is the coordinator-assigned global slot
+    /// in deterministic mode, `None` in fast mode.
+    Peer { sender: usize, frame: Vec<u8>, slot: Option<u64> },
+    /// Scheduled sender died without its frame arriving — protocol loss,
+    /// the worker bails and lets the coordinator's recovery see a death.
+    Dead(usize),
+    /// Coordinator hung up (normal after halt, or its run aborted).
+    Eof,
+}
+
+/// Pop the next consumable unit, or `None` if the worker must wait.
+/// Coordinator frames always win their slot; in deterministic mode a
+/// slot the schedule assigns to a peer is satisfied only by that
+/// sender's next frame, in fast mode any queued peer frame fills an
+/// idle moment.
+fn inbox_ready(g: &mut Inbox, next: u64, plane: Option<&PeerPlane>) -> Option<Fetched> {
+    if let Some(b) = g.frames.remove(&next) {
+        return Some(Fetched::Frame(b));
+    }
+    let p = plane?;
+    if p.mode == 1 {
+        let s = *g.sched.get(&next)? as usize;
+        if let Some(f) = g.peer_q[s].pop_front() {
+            g.sched.remove(&next);
+            return Some(Fetched::Peer { sender: s, frame: f, slot: Some(next) });
+        }
+        if g.peer_eof[s] {
+            return Some(Fetched::Dead(s));
+        }
+        None
+    } else {
+        for s in 0..g.peer_q.len() {
+            if let Some(f) = g.peer_q[s].pop_front() {
+                return Some(Fetched::Peer { sender: s, frame: f, slot: None });
+            }
+        }
+        None
+    }
+}
+
+fn peer_dirty(plane: &Option<PeerPlane>) -> bool {
+    plane.as_ref().is_some_and(|p| p.writer_dirty.iter().any(|&d| d))
+}
+
 /// Worker main loop, shared by thread-mode and subprocess-mode workers:
 /// merge lanes into `wseq` order, execute deliveries, reply with
-/// emissions, report state on collect, exit on halt.
+/// emissions, report state on collect, exit on halt. `index` is this
+/// worker's shard index; `peer_init` is how (or whether) the peer data
+/// plane comes up when `FRAME_ROUTES` arrives.
 fn serve(
     ctrl: Sock,
     data: Sock,
     owned: Vec<(usize, usize, Box<dyn Processor>)>,
     shape: Vec<usize>,
     measure_busy: bool,
+    index: usize,
+    peer_init: PeerInit,
 ) -> Result<()> {
     let inbox: SharedInbox = Arc::new((Mutex::new(Inbox::default()), Condvar::new()));
     let reply_sock = data.try_clone().context("cluster worker: clone data lane")?;
@@ -267,12 +701,15 @@ fn serve(
         }),
     ];
     let mut out = BufWriter::new(reply_sock);
+    let mut peer_init = Some(peer_init);
+    let mut peer_handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut peer_shut: Vec<Sock> = Vec::new();
 
     let mut cells: Vec<Cell> = owned
         .into_iter()
         .map(|(pid, iid, node)| Cell { pid, iid, node, processed: 0, busy_ns: 0 })
         .collect();
-    let index: HashMap<(usize, usize), usize> =
+    let index_map: HashMap<(usize, usize), usize> =
         cells.iter().enumerate().map(|(n, c)| ((c.pid, c.iid), n)).collect();
 
     // A panicking processor must not strand the coordinator: without the
@@ -283,44 +720,181 @@ fn serve(
     // coordinator's recovery path (`ClusterEngine::with_checkpoints`)
     // detects and repairs.
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
+        let mut plane: Option<PeerPlane> = None;
         let mut next: u64 = 0;
         let mut dirty = false;
         loop {
-            // Fetch frame `next`, flushing buffered replies before any
-            // blocking wait (never while holding the inbox lock: a flush
-            // may block on the socket and must not stall the readers).
-            let frame = loop {
+            // Fetch slot `next` (or, peer mode, whatever the schedule /
+            // fast rule allows), flushing buffered replies and peer
+            // writers before any blocking wait (never while holding the
+            // inbox lock: a flush may block on a socket and must not
+            // stall the readers).
+            let fetched = loop {
                 {
                     let mut g = inbox.0.lock().unwrap();
-                    if let Some(b) = g.frames.remove(&next) {
-                        break Some(b);
+                    if let Some(f) = inbox_ready(&mut g, next, plane.as_ref()) {
+                        break f;
                     }
                     if g.eof {
-                        break None;
+                        break Fetched::Eof;
+                    }
+                    if !dirty && !peer_dirty(&plane) {
+                        // Nothing buffered: sleep until a reader posts.
+                        drop(inbox.1.wait(g).unwrap());
+                        continue;
                     }
                 }
-                if dirty {
-                    out.flush()?;
-                    dirty = false;
+                flush_peer_writers(&mut plane)?;
+                out.flush()?;
+                dirty = false;
+            };
+            let frame = match fetched {
+                Fetched::Frame(b) => b,
+                Fetched::Eof => return Ok(()),
+                Fetched::Dead(s) => {
+                    crate::bail!(
+                        "cluster worker {index}: peer {s} died with scheduled frames missing"
+                    )
+                }
+                Fetched::Peer { sender, frame, slot } => {
+                    let (lseq, pid, iid, event) = codec::decode_peer_frame(&frame)?;
+                    {
+                        let p = plane.as_mut().expect("peer frame without peer plane");
+                        crate::ensure!(
+                            lseq == p.lseq_in[sender],
+                            "cluster worker {index}: peer link {sender} out of order \
+                             (got {lseq}, want {})",
+                            p.lseq_in[sender]
+                        );
+                        p.lseq_in[sender] += 1;
+                    }
+                    let (pid, iid) = (pid as usize, iid as usize);
+                    let Some(&n) = index_map.get(&(pid, iid)) else {
+                        crate::bail!(
+                            "cluster worker {index}: peer delivery for foreign instance \
+                             ({pid},{iid})"
+                        );
+                    };
+                    let cell = &mut cells[n];
+                    let mut ctx = Ctx::new(iid, shape[pid]);
+                    if measure_busy {
+                        let t0 = Instant::now();
+                        cell.node.process(event, &mut ctx);
+                        cell.busy_ns += t0.elapsed().as_nanos() as u64;
+                    } else {
+                        cell.node.process(event, &mut ctx);
+                    }
+                    cell.processed += 1;
+                    let emissions = ctx.take();
+                    let down = inbox.0.lock().unwrap().down.clone();
+                    let mut b = Vec::with_capacity(24 + 24 * emissions.len());
+                    match slot {
+                        Some(slot) => {
+                            // Deterministic: the delivery owns global slot
+                            // `slot`; reply exactly like a coordinator
+                            // delivery so the merge stays positional.
+                            codec::put_u8(&mut b, K_EMISSIONS);
+                            codec::put_u64(&mut b, slot);
+                            next += 1;
+                        }
+                        None => {
+                            // Fast: out-of-slot reply keyed (sender, lseq).
+                            codec::put_u8(&mut b, codec::FRAME_PEER_EMS);
+                            codec::put_u64(&mut b, lseq);
+                            codec::put_u8(&mut b, sender as u8);
+                        }
+                    }
+                    encode_emissions(&mut b, &emissions, &mut plane, &shape, &down, &inbox)?;
+                    flush_peer_writers(&mut plane)?;
+                    write_frame(&mut out, &b)?;
+                    dirty = true;
                     continue;
                 }
-                let g = inbox.0.lock().unwrap();
-                if !g.frames.contains_key(&next) && !g.eof {
-                    drop(inbox.1.wait(g).unwrap());
-                }
             };
-            // Coordinator hung up (normal after halt, or its run aborted).
-            let Some(frame) = frame else { return Ok(()) };
             next += 1;
 
             let mut r = Reader::new(&frame);
             let kind = r.u8()?;
             let wseq = r.u64()?;
             match kind {
+                codec::FRAME_ROUTES => {
+                    let mode = r.u8()?;
+                    let recovery = r.u8()? != 0;
+                    let n_workers = r.u16()? as usize;
+                    let n_streams = r.u32()? as usize;
+                    let mut streams = Vec::with_capacity(n_streams);
+                    for _ in 0..n_streams {
+                        let dest = r.u16()? as usize;
+                        let grouping = grouping_from_code(r.u8()?)?;
+                        let delay = r.u32()?;
+                        let _rr_seed = r.u64()?;
+                        streams.push((dest, grouping, delay));
+                    }
+                    let n_addr = r.u16()? as usize;
+                    let mut addrs = Vec::with_capacity(n_addr);
+                    for _ in 0..n_addr {
+                        let l = r.u16()? as usize;
+                        addrs.push(
+                            String::from_utf8(r.bytes(l)?.to_vec())
+                                .map_err(|_| crate::anyhow!("cluster: bad peer address"))?,
+                        );
+                    }
+                    let socks = match peer_init.take() {
+                        Some(PeerInit::Mesh(m)) => m,
+                        Some(PeerInit::Listen(l)) => {
+                            connect_peer_mesh(&l, index, n_workers, &addrs)?
+                        }
+                        Some(PeerInit::Off) | None => {
+                            crate::bail!(
+                                "cluster worker {index}: FRAME_ROUTES without peer transport"
+                            )
+                        }
+                    };
+                    crate::ensure!(
+                        socks.len() == n_workers,
+                        "cluster worker {index}: peer mesh size mismatch"
+                    );
+                    {
+                        let mut g = inbox.0.lock().unwrap();
+                        g.peer_q = (0..n_workers).map(|_| VecDeque::new()).collect();
+                        if g.down.len() < n_workers {
+                            g.down.resize(n_workers, false);
+                        }
+                        g.peer_eof = vec![false; n_workers];
+                    }
+                    let mut writers = Vec::with_capacity(n_workers);
+                    for (j, s) in socks.into_iter().enumerate() {
+                        let Some(s) = s else {
+                            writers.push(None);
+                            continue;
+                        };
+                        let rd = s.try_clone().context("cluster worker: clone peer link")?;
+                        peer_shut.push(s.try_clone().context("cluster worker: clone peer link")?);
+                        peer_handles.push(std::thread::spawn({
+                            let inbox = Arc::clone(&inbox);
+                            move || peer_reader_loop(rd, j, inbox)
+                        }));
+                        writers.push(Some(BufWriter::new(s)));
+                    }
+                    plane = Some(PeerPlane {
+                        mode,
+                        recovery,
+                        n_workers,
+                        index,
+                        streams,
+                        writers,
+                        writer_dirty: vec![false; n_workers],
+                        writer_dead: vec![false; n_workers],
+                        lseq_out: vec![0; n_workers],
+                        lseq_in: vec![0; n_workers],
+                    });
+                    // Slot-consuming, no reply: `wseq` is its position.
+                    let _ = wseq;
+                }
                 K_DELIVER | K_SHUTDOWN => {
                     let pid = r.u16()? as usize;
                     let iid = r.u16()? as usize;
-                    let Some(&n) = index.get(&(pid, iid)) else {
+                    let Some(&n) = index_map.get(&(pid, iid)) else {
                         crate::bail!("cluster worker: not my instance ({pid},{iid})");
                     };
                     let cell = &mut cells[n];
@@ -339,15 +913,16 @@ fn serve(
                         cell.node.on_shutdown(&mut ctx);
                     }
                     let emissions = ctx.take();
+                    let down = if plane.is_some() {
+                        inbox.0.lock().unwrap().down.clone()
+                    } else {
+                        Vec::new()
+                    };
                     let mut b = Vec::with_capacity(16 + 24 * emissions.len());
                     codec::put_u8(&mut b, K_EMISSIONS);
                     codec::put_u64(&mut b, wseq);
-                    codec::put_u32(&mut b, emissions.len() as u32);
-                    for (s, k, e) in &emissions {
-                        codec::put_u32(&mut b, s.0 as u32);
-                        codec::put_u64(&mut b, *k);
-                        codec::encode_event(e, &mut b);
-                    }
+                    encode_emissions(&mut b, &emissions, &mut plane, &shape, &down, &inbox)?;
+                    flush_peer_writers(&mut plane)?;
                     write_frame(&mut out, &b)?;
                     dirty = true;
                 }
@@ -373,6 +948,7 @@ fn serve(
                     let mut b = Vec::with_capacity(9);
                     codec::put_u8(&mut b, K_DONE);
                     codec::put_u64(&mut b, wseq);
+                    flush_peer_writers(&mut plane)?;
                     write_frame(&mut out, &b)?;
                     out.flush()?;
                     dirty = false;
@@ -392,6 +968,7 @@ fn serve(
                     let mut b = Vec::with_capacity(9);
                     codec::put_u8(&mut b, K_DONE);
                     codec::put_u64(&mut b, wseq);
+                    flush_peer_writers(&mut plane)?;
                     write_frame(&mut out, &b)?;
                     out.flush()?;
                     dirty = false;
@@ -401,7 +978,7 @@ fn serve(
                     let iid = r.u16()? as usize;
                     let n = r.u32()? as usize;
                     let frame = r.bytes(n)?;
-                    let Some(&c) = index.get(&(pid, iid)) else {
+                    let Some(&c) = index_map.get(&(pid, iid)) else {
                         crate::bail!("cluster worker: restore for foreign instance ({pid},{iid})");
                     };
                     cells[c].node.restore(frame).with_context(|| {
@@ -409,6 +986,7 @@ fn serve(
                     })?;
                 }
                 K_HALT => {
+                    flush_peer_writers(&mut plane)?;
                     out.flush()?;
                     return Ok(());
                 }
@@ -424,10 +1002,17 @@ fn serve(
             .unwrap_or_else(|| "unknown panic".to_string());
         Err(crate::anyhow!("cluster worker: processor panicked: {msg}"))
     });
-    // Teardown: close both lanes (no-op if the coordinator already did),
-    // then collect the readers — they exit on EOF.
+    // Teardown: close both lanes and every peer link (no-op for lanes
+    // the far side already closed), then collect the readers — they all
+    // exit on EOF.
     ctrl_shut.shutdown();
     data_shut.shutdown();
+    for s in &peer_shut {
+        s.shutdown();
+    }
+    for h in peer_handles {
+        let _ = h.join();
+    }
     for h in readers {
         let _ = h.join();
     }
@@ -447,6 +1032,17 @@ struct Link {
     wseq: u64,
     /// Un-replied data-lane deliveries (the backpressure window).
     inflight: usize,
+    /// Deterministic peer mode: slot tokens `(slot, sender)` assigned to
+    /// peer deliveries bound for this worker, not yet shipped.
+    /// Materialized into one out-of-band `FRAME_PEER_SCHED` control
+    /// frame by `flush` — the frame consumes no slot itself, otherwise
+    /// scheduling a slot would consume a slot and never terminate.
+    sched_pending: Vec<(u64, u8)>,
+    /// Fast peer mode: replies that arrived ahead of the pending entry
+    /// the coordinator is currently blocked on, keyed by reply identity
+    /// (`(0, wseq, 0)` for slot replies, `(1, sender, lseq)` for
+    /// out-of-slot peer replies). Deterministic mode never stashes.
+    stash: HashMap<(u8, u64, u64), Vec<u8>>,
 }
 
 impl Link {
@@ -462,6 +1058,8 @@ impl Link {
             data_dirty: false,
             wseq: 0,
             inflight: 0,
+            sched_pending: Vec::new(),
+            stash: HashMap::new(),
         })
     }
 
@@ -482,6 +1080,17 @@ impl Link {
     }
 
     fn flush(&mut self, cm: &mut ClusterMetrics) -> Result<()> {
+        if !self.sched_pending.is_empty() {
+            let b = codec::encode_peer_sched(&self.sched_pending);
+            self.sched_pending.clear();
+            let t0 = Instant::now();
+            write_frame(&mut self.ctrl, &b)?;
+            self.ctrl_dirty = true;
+            cm.ctrl_frames += 1;
+            cm.sched_frames += 1;
+            cm.tx_bytes += 4 + b.len() as u64;
+            cm.tx_ns += t0.elapsed().as_nanos() as u64;
+        }
         if self.ctrl_dirty || self.data_dirty {
             let t0 = Instant::now();
             if self.ctrl_dirty {
@@ -507,11 +1116,33 @@ impl Link {
     }
 }
 
+/// Identity of an emissions reply, the key the coordinator matches (and
+/// fast peer mode stashes) replies by: `(0, wseq, 0)` for slot replies,
+/// `(1, sender, lseq)` for out-of-slot peer replies.
+fn reply_id(buf: &[u8]) -> Result<(u8, u64, u64)> {
+    let mut r = Reader::new(buf);
+    match r.u8()? {
+        K_EMISSIONS => Ok((0, r.u64()?, 0)),
+        codec::FRAME_PEER_EMS => {
+            let lseq = r.u64()?;
+            let sender = r.u8()? as u64;
+            Ok((1, sender, lseq))
+        }
+        k => crate::bail!("cluster: unexpected reply kind {k}"),
+    }
+}
+
 /// One un-replied delivery, in global send order.
 struct Pending {
     worker: usize,
     wseq: u64,
     data: bool,
+    /// Peer delivery: the `(sender, receiver)` link whose in-flight
+    /// budget this entry holds (released when the reply lands).
+    link: Option<(usize, usize)>,
+    /// Fast peer mode: the `(sender, lseq)` reply identity expected for
+    /// this entry (deterministic replies are identified by `wseq`).
+    peer_key: Option<(u8, u64)>,
     /// Absolute replay-log index of this delivery (recovery mode only):
     /// the matching log entry is marked `replied` when the reply lands.
     log_ref: Option<u64>,
@@ -520,25 +1151,17 @@ struct Pending {
     discard: bool,
 }
 
-/// One logged delivery awaiting a checkpoint that covers it.
+/// One logged delivery awaiting a checkpoint that covers it. The log
+/// itself is the generic bounded [`ReplayLog`] from
+/// [`crate::engine::checkpoint`]; each entry carries a [`LogOrigin`] —
+/// coordinator-routed vs shipped over a worker↔worker link — and a
+/// `replied` flag (reply consumed pre-death ⇒ a re-drive rebuilds
+/// worker state without re-routing the emissions).
 struct LogEntry {
     pid: usize,
     iid: usize,
     event: Event,
     ctrl: bool,
-    /// The reply was consumed (and its emissions routed) pre-death; a
-    /// re-drive of this entry rebuilds worker state only.
-    replied: bool,
-}
-
-/// Bounded per-worker replay log: every delivery since the worker's last
-/// checkpoint. `base` is the absolute index of `entries.front()` and
-/// only grows, so a stale `Pending::log_ref` can never alias a newer
-/// entry after an overflow pop or a checkpoint clear.
-#[derive(Default)]
-struct ReplayLog {
-    entries: VecDeque<LogEntry>,
-    base: u64,
 }
 
 /// Final state of one processor instance, reported across the process
@@ -582,13 +1205,40 @@ impl ClusterRun {
     }
 }
 
+/// A peer delivery the coordinator knows about (from a reply descriptor)
+/// but does not carry: the event bytes travel worker→worker; the
+/// coordinator only sequences the delivery into the receiver's global
+/// order (deterministic mode) and releases its link budget.
+struct PeerMarker {
+    /// Sending worker.
+    sender: usize,
+    dest_pid: usize,
+    dest_iid: usize,
+    dest_worker: usize,
+    /// Per-(sender→dest_worker) sequence number, mirrored coordinator-side
+    /// from descriptor order (replies are consumed in global send order).
+    lseq: u64,
+    /// Recovery mode ships the payload in the descriptor so the replay
+    /// log stays complete and a dead receiver's deliveries can be
+    /// re-routed through the coordinator.
+    event: Option<Event>,
+}
+
+/// One unit of the coordinator's pending-delivery queue: a full delivery
+/// the coordinator routes itself, or a marker for one already shipped
+/// over a worker↔worker link.
+enum QItem {
+    Normal(Delivery),
+    Peer(PeerMarker),
+}
+
 /// Coordinator drive state, shared by both spawn modes.
 struct Coordinator<'a> {
     topology: &'a Topology,
     links: Vec<Link>,
     outstanding: VecDeque<Pending>,
     rr: Vec<usize>,
-    queue: VecDeque<Delivery>,
+    queue: VecDeque<QItem>,
     delayed: VecDeque<(u64, Delivery)>,
     metrics: EngineMetrics,
     window: usize,
@@ -597,13 +1247,27 @@ struct Coordinator<'a> {
     /// coordinator-held snapshot frames, and the death bookkeeping.
     recovery_on: bool,
     replay_cap: usize,
-    logs: Vec<ReplayLog>,
+    logs: Vec<ReplayLog<LogEntry>>,
     store: super::checkpoint::CheckpointStore,
     /// Worker whose socket just failed (set at the IO error site so the
     /// recovery path knows *who* died, not only that someone did).
     dead: Option<usize>,
     /// One respawn per worker per run; a second death is fatal.
     respawned: Vec<bool>,
+    /// Peer data plane mode (`ClusterEngine::with_peer`).
+    peer: PeerMode,
+    /// Workers degraded back to coordinator routing (respawned
+    /// replacements never get peer links; their replies are untagged).
+    peer_off: Vec<bool>,
+    /// Un-replied peer deliveries per (sender, receiver) link — the
+    /// per-link in-flight window (flat n×n, index `sender * n + recv`
+    /// via `peer_inflight[sender][recv]` as nested Vecs).
+    peer_inflight: Vec<Vec<usize>>,
+    /// Mirror of each sender's per-link sequence counter.
+    peer_lseq: Vec<Vec<u64>>,
+    /// Per-link traffic counters, flat n×n (`sender * n + recv`);
+    /// compacted into `EngineMetrics::cluster.peer_links` at run end.
+    peer_stats: Vec<PeerLinkMetrics>,
 }
 
 impl Coordinator<'_> {
@@ -623,7 +1287,7 @@ impl Coordinator<'_> {
             sm.events += 1;
             sm.bytes += bytes as u64;
             if def.delay == 0 || now == u64::MAX {
-                queue.push_back(d);
+                queue.push_back(QItem::Normal(d));
             } else {
                 delayed.push_back((now + def.delay as u64, d));
             }
@@ -656,30 +1320,61 @@ impl Coordinator<'_> {
     /// marks the worker dead (`self.dead`) before surfacing the error, so
     /// the recovery path in `drive` knows which shard to respawn.
     fn consume_pending(&mut self, pend: Pending, now: u64) -> Result<()> {
-        // Everything this reply causally depends on was sent to the same
-        // worker with a smaller wseq; make sure none of it is still
-        // sitting in our write buffers.
+        // Replies from a worker with a live peer plane use the tagged
+        // emission format; respawned replacements (and peer-off runs)
+        // use the legacy flat one.
+        let tagged = self.peer != PeerMode::Off && !self.peer_off[pend.worker];
+        let want: (u8, u64, u64) = match pend.peer_key {
+            Some((s, lseq)) => (1, s as u64, lseq),
+            None => (0, pend.wseq, 0),
+        };
         let mut buf = std::mem::take(&mut self.buf);
-        let io = self.links[pend.worker]
-            .flush(&mut self.metrics.cluster)
-            .and_then(|()| self.links[pend.worker].read_reply(&mut buf, &mut self.metrics.cluster));
-        if let Err(e) = io {
-            self.dead = Some(pend.worker);
-            self.buf = buf;
-            return Err(e);
+        if let Some(b) = self.links[pend.worker].stash.remove(&want) {
+            buf = b;
+        } else {
+            loop {
+                // Everything this reply causally depends on was sent to
+                // the same worker with a smaller wseq (including pending
+                // peer-schedule tokens); make sure none of it is still
+                // sitting in our write buffers.
+                let io = self.links[pend.worker].flush(&mut self.metrics.cluster).and_then(
+                    |()| self.links[pend.worker].read_reply(&mut buf, &mut self.metrics.cluster),
+                );
+                if let Err(e) = io {
+                    self.dead = Some(pend.worker);
+                    self.buf = buf;
+                    return Err(e);
+                }
+                let got = reply_id(&buf)?;
+                if got == want {
+                    break;
+                }
+                // Fast peer mode: the worker interleaves out-of-slot peer
+                // replies with slot replies; park whatever arrived ahead
+                // of the one this pending entry is blocked on.
+                self.links[pend.worker].stash.insert(got, std::mem::take(&mut buf));
+            }
         }
         {
             let mut r = Reader::new(&buf);
             let kind = r.u8()?;
-            crate::ensure!(kind == K_EMISSIONS, "cluster: expected emissions, got kind {kind}");
-            let wseq = r.u64()?;
-            crate::ensure!(
-                wseq == pend.wseq,
-                "cluster: reply out of order (got {wseq}, expected {})",
-                pend.wseq
-            );
+            if kind == K_EMISSIONS {
+                let wseq = r.u64()?;
+                crate::ensure!(
+                    wseq == pend.wseq,
+                    "cluster: reply out of order (got {wseq}, expected {})",
+                    pend.wseq
+                );
+            } else {
+                let _lseq = r.u64()?;
+                let _sender = r.u8()?;
+            }
             let n = r.u32()?;
             for _ in 0..n {
+                if tagged && r.u8()? == 1 {
+                    self.consume_descriptor(pend.worker, &mut r, pend.discard)?;
+                    continue;
+                }
                 let s = StreamId(r.u32()? as usize);
                 let k = r.u64()?;
                 let e = r.event()?;
@@ -690,16 +1385,70 @@ impl Coordinator<'_> {
         }
         self.buf = buf;
         if let Some(abs) = pend.log_ref {
-            let log = &mut self.logs[pend.worker];
-            if abs >= log.base {
-                if let Some(entry) = log.entries.get_mut((abs - log.base) as usize) {
-                    entry.replied = true;
-                }
+            self.logs[pend.worker].mark_replied(abs);
+        }
+        if let Some((a, b)) = pend.link {
+            if self.peer_inflight[a][b] > 0 {
+                self.peer_inflight[a][b] -= 1;
             }
         }
         if pend.data {
             self.links[pend.worker].inflight -= 1;
         }
+        Ok(())
+    }
+
+    /// Consume one tag-1 reply descriptor: a delivery the sender already
+    /// shipped over its worker↔worker link. Mirrors the local engine's
+    /// per-delivery stream metrics, mirrors the link's sequence counter,
+    /// accumulates link traffic, and enqueues a [`PeerMarker`] at
+    /// exactly the queue position the full delivery would have taken.
+    fn consume_descriptor(
+        &mut self,
+        sender: usize,
+        r: &mut Reader<'_>,
+        discard: bool,
+    ) -> Result<()> {
+        let stream = r.u32()? as usize;
+        let iid = r.u16()? as usize;
+        let wire = r.u32()? as u64;
+        let enc = r.u32()? as u64;
+        let event = if r.u8()? != 0 { Some(r.event()?) } else { None };
+        if discard {
+            // Replay of an already-consumed reply: the marker was
+            // enqueued (and everything counted) the first time around.
+            return Ok(());
+        }
+        let dest_pid = self.topology.streams[stream].to.0;
+        let n = self.links.len();
+        let dest_worker = worker_of(iid, n);
+        let sm = &mut self.metrics.streams[stream];
+        sm.events += 1;
+        sm.bytes += wire;
+        let st = &mut self.peer_stats[sender * n + dest_worker];
+        st.frames += 1;
+        st.bytes += 4 + enc;
+        st.wire_bytes += wire;
+        let lseq = self.peer_lseq[sender][dest_worker];
+        self.peer_lseq[sender][dest_worker] += 1;
+        if self.peer_off[dest_worker] {
+            // The destination died after the sender shipped this: the
+            // peer frame is gone with the dead socket, but recovery mode
+            // put the payload in the descriptor — reroute it ourselves.
+            let Some(e) = event else {
+                crate::bail!("cluster: peer delivery to dead worker {dest_worker} without payload");
+            };
+            self.queue.push_back(QItem::Normal((dest_pid, iid, e)));
+            return Ok(());
+        }
+        self.queue.push_back(QItem::Peer(PeerMarker {
+            sender,
+            dest_pid,
+            dest_iid: iid,
+            dest_worker,
+            lseq,
+            event,
+        }));
         Ok(())
     }
 
@@ -735,20 +1484,113 @@ impl Coordinator<'_> {
             self.links[w].inflight += 1;
         }
         let log_ref = if self.recovery_on {
-            let log = &mut self.logs[w];
-            if log.entries.len() >= self.replay_cap {
-                log.entries.pop_front();
-                log.base += 1;
+            let (abs, dropped) = self.logs[w].push(
+                LogEntry { pid: p, iid: i, event: e, ctrl },
+                LogOrigin::Coordinator,
+                self.replay_cap,
+            );
+            if dropped {
                 self.metrics.recovery.replay_dropped += 1;
             }
-            let abs = log.base + log.entries.len() as u64;
-            log.entries.push_back(LogEntry { pid: p, iid: i, event: e, ctrl, replied: false });
             Some(abs)
         } else {
             None
         };
-        self.outstanding
-            .push_back(Pending { worker: w, wseq, data: !ctrl, log_ref, discard: false });
+        self.outstanding.push_back(Pending {
+            worker: w,
+            wseq,
+            data: !ctrl,
+            link: None,
+            peer_key: None,
+            log_ref,
+            discard: false,
+        });
+        Ok(())
+    }
+
+    /// Sequence one peer-shipped delivery: block on the link's in-flight
+    /// window (and the receiver's slot window), then — deterministic
+    /// mode — assign the receiver's next global slot to the sender's
+    /// link via an out-of-band schedule token, or — fast mode — just
+    /// account for the expected out-of-slot reply. No event bytes move
+    /// here: they are already on (or through) the worker↔worker socket.
+    fn ship_marker(&mut self, m: PeerMarker, now: u64) -> Result<()> {
+        let (a, b) = (m.sender, m.dest_worker);
+        let n = self.links.len();
+        loop {
+            let link_full = self.peer_inflight[a][b] >= self.window;
+            let worker_full = self.links[b].inflight >= self.window;
+            if !link_full && !worker_full {
+                break;
+            }
+            if link_full {
+                self.metrics.flow.peer_link_stalls += 1;
+                self.peer_stats[a * n + b].stalls += 1;
+            } else {
+                self.metrics.flow.backpressure_stalls += 1;
+            }
+            let t0 = Instant::now();
+            if let Err(e) = self.consume_one(now) {
+                // Don't lose the marker: recovery re-enters pump and must
+                // find it at the head of the queue again.
+                self.queue.push_front(QItem::Peer(m));
+                return Err(e);
+            }
+            let ns = t0.elapsed().as_nanos() as u64;
+            if link_full {
+                self.metrics.flow.peer_link_stall_ns += ns;
+            } else {
+                self.metrics.flow.backpressure_stall_ns += ns;
+            }
+        }
+        let log_ref = if self.recovery_on {
+            let event = m
+                .event
+                .clone()
+                .ok_or_else(|| crate::anyhow!("cluster: recovery peer marker without payload"))?;
+            let (abs, dropped) = self.logs[b].push(
+                LogEntry { pid: m.dest_pid, iid: m.dest_iid, event, ctrl: false },
+                LogOrigin::Peer { sender: a },
+                self.replay_cap,
+            );
+            if dropped {
+                self.metrics.recovery.replay_dropped += 1;
+            }
+            Some(abs)
+        } else {
+            None
+        };
+        self.peer_inflight[a][b] += 1;
+        self.links[b].inflight += 1;
+        match self.peer {
+            PeerMode::Deterministic => {
+                let link = &mut self.links[b];
+                let slot = link.wseq;
+                link.wseq += 1;
+                link.sched_pending.push((slot, a as u8));
+                self.outstanding.push_back(Pending {
+                    worker: b,
+                    wseq: slot,
+                    data: true,
+                    link: Some((a, b)),
+                    peer_key: None,
+                    log_ref,
+                    discard: false,
+                });
+            }
+            PeerMode::Fast => {
+                self.outstanding.push_back(Pending {
+                    worker: b,
+                    wseq: 0,
+                    data: true,
+                    link: Some((a, b)),
+                    peer_key: Some((a as u8, m.lseq)),
+                    log_ref,
+                    discard: false,
+                });
+            }
+            PeerMode::Off => unreachable!("peer marker with peer mode off"),
+        }
         Ok(())
     }
 
@@ -756,8 +1598,11 @@ impl Coordinator<'_> {
     /// cross-process equivalent of the local engine's `drain`.
     fn pump(&mut self, now: u64) -> Result<()> {
         loop {
-            while let Some(d) = self.queue.pop_front() {
-                self.ship(d, now)?;
+            while let Some(item) = self.queue.pop_front() {
+                match item {
+                    QItem::Normal(d) => self.ship(d, now)?,
+                    QItem::Peer(m) => self.ship_marker(m, now)?,
+                }
             }
             if self.outstanding.is_empty() {
                 return Ok(());
@@ -769,14 +1614,15 @@ impl Coordinator<'_> {
     /// Release matured delayed deliveries (local-engine semantics).
     fn release_delayed(&mut self, now: u64) {
         while self.delayed.front().map_or(false, |(at, _)| *at <= now) {
-            self.queue.push_back(self.delayed.pop_front().unwrap().1);
+            let d = self.delayed.pop_front().unwrap().1;
+            self.queue.push_back(QItem::Normal(d));
         }
     }
 
     /// Release everything still delayed (shutdown flush).
     fn release_all_delayed(&mut self) {
         while let Some((_, d)) = self.delayed.pop_front() {
-            self.queue.push_back(d);
+            self.queue.push_back(QItem::Normal(d));
         }
     }
 
@@ -825,9 +1671,7 @@ impl Coordinator<'_> {
                     k => crate::bail!("cluster: unexpected snapshot reply kind {k}"),
                 }
             }
-            let log = &mut self.logs[w];
-            log.base += log.entries.len() as u64;
-            log.entries.clear();
+            self.logs[w].clear_covered();
         }
         self.buf = buf;
         Ok(())
@@ -848,12 +1692,60 @@ impl Coordinator<'_> {
         now: u64,
     ) -> Result<()> {
         self.metrics.recovery.kills += 1;
+        let n = self.links.len();
+        let peer_was_on = self.peer != PeerMode::Off && !self.peer_off[w];
+        if peer_was_on {
+            // Degrade w to coordinator routing BEFORE the drain below:
+            // descriptors consumed during it that target w must be
+            // rerouted from their payload, not turned into markers for
+            // frames that died with w's socket.
+            self.peer_off[w] = true;
+        }
         let outstanding: Vec<Pending> = self.outstanding.drain(..).collect();
         for pend in outstanding {
             if pend.worker == w {
                 continue; // no reply will ever come; the log entry stays unreplied
             }
             self.consume_pending(pend, now)?;
+        }
+        // w's dropped pendings never released their link budgets (live
+        // senders' budgets were released by the drain above — reset only
+        // the dead-receiver column, and only after the drain).
+        for a in 0..n {
+            self.peer_inflight[a][w] = 0;
+        }
+        if peer_was_on {
+            // Markers already queued for w reference peer frames that are
+            // gone; convert them in place — same global queue position, so
+            // the rerouted deliveries keep the local-engine order.
+            for item in self.queue.iter_mut() {
+                let QItem::Peer(m) = item else { continue };
+                if m.dest_worker != w {
+                    continue;
+                }
+                let Some(e) = m.event.take() else {
+                    crate::bail!("cluster: peer marker for dead worker {w} without payload");
+                };
+                *item = QItem::Normal((m.dest_pid, m.dest_iid, e));
+            }
+            // Tell the live senders to stop peer-routing to w (out of
+            // band: consumes no slot, like the schedule tokens).
+            let mut b = Vec::with_capacity(10);
+            codec::put_u8(&mut b, codec::FRAME_PEER_DOWN);
+            codec::put_u64(&mut b, 0);
+            codec::put_u8(&mut b, w as u8);
+            for x in 0..n {
+                if x == w || self.peer_off[x] {
+                    continue;
+                }
+                let io = self.links[x]
+                    .send(&b, true, &mut self.metrics.cluster)
+                    .and_then(|()| self.links[x].flush(&mut self.metrics.cluster));
+                if let Err(e) = io {
+                    self.dead = Some(x);
+                    return Err(e);
+                }
+            }
         }
         self.links[w] = respawn(w)?;
         let n_workers = self.links.len();
@@ -881,24 +1773,25 @@ impl Coordinator<'_> {
             link.send(&b, true, &mut self.metrics.cluster)?;
             self.metrics.recovery.restores += 1;
         }
-        let entries: Vec<LogEntry> = self.logs[w].entries.drain(..).collect();
-        self.logs[w].base += entries.len() as u64;
-        for entry in entries {
+        for entry in self.logs[w].drain_for_redrive() {
+            let LogEntry { pid, iid, event, ctrl } = entry.item;
             let link = &mut self.links[w];
             let wseq = link.wseq;
             link.wseq += 1;
-            let mut b = Vec::with_capacity(24 + entry.event.wire_bytes());
+            let mut b = Vec::with_capacity(24 + event.wire_bytes());
             codec::put_u8(&mut b, K_DELIVER);
             codec::put_u64(&mut b, wseq);
-            codec::put_u16(&mut b, entry.pid as u16);
-            codec::put_u16(&mut b, entry.iid as u16);
-            codec::encode_event(&entry.event, &mut b);
-            link.send(&b, entry.ctrl, &mut self.metrics.cluster)?;
+            codec::put_u16(&mut b, pid as u16);
+            codec::put_u16(&mut b, iid as u16);
+            codec::encode_event(&event, &mut b);
+            link.send(&b, ctrl, &mut self.metrics.cluster)?;
             self.metrics.recovery.replayed += 1;
             let pend = Pending {
                 worker: w,
                 wseq,
                 data: false, // inflight was never bumped for this re-send
+                link: None,
+                peer_key: None,
                 log_ref: None,
                 discard: entry.replied,
             };
@@ -933,6 +1826,9 @@ pub struct ClusterEngine {
     /// failing the run (overridable via `SAMOA_CLUSTER_ACCEPT_SECS` for
     /// loaded CI runners).
     pub accept_secs: u64,
+    /// Worker↔worker data plane (see the module docs): off, slot-
+    /// scheduled deterministic, or relaxed-order fast.
+    pub peer: PeerMode,
 }
 
 impl Default for ClusterEngine {
@@ -945,6 +1841,7 @@ impl Default for ClusterEngine {
             checkpoint_every: 0,
             replay_cap: 65536,
             accept_secs: 30,
+            peer: PeerMode::Off,
         }
     }
 }
@@ -993,6 +1890,16 @@ impl ClusterEngine {
         self
     }
 
+    /// Enable the worker↔worker data plane. [`PeerMode::Deterministic`]
+    /// keeps results bit-identical to the local engine (the coordinator
+    /// still sequences every delivery, but the event bytes travel
+    /// peer-to-peer); [`PeerMode::Fast`] also relaxes the cross-link
+    /// ordering at each receiver.
+    pub fn with_peer(mut self, mode: PeerMode) -> Self {
+        self.peer = mode;
+        self
+    }
+
     /// Thread-mode run: workers are OS threads behind real Unix-socket
     /// pairs. Instances are constructed here (factories are not `Send`)
     /// and move into their worker thread.
@@ -1011,23 +1918,47 @@ impl ClusterEngine {
                 per_worker[worker_of(i, n_workers)].push((p, i, (def.factory)(i)));
             }
         }
+        // Peer mode, thread flavor: pre-connect the full worker↔worker
+        // mesh with socket pairs; each worker receives its row (its own
+        // slot stays `None` — self-links never touch a socket).
+        let peer_on = self.peer != PeerMode::Off;
+        let mut mesh: Vec<Vec<Option<Sock>>> = if peer_on {
+            (0..n_workers).map(|_| (0..n_workers).map(|_| None).collect()).collect()
+        } else {
+            Vec::new()
+        };
+        if peer_on {
+            for i in 0..n_workers {
+                for j in i + 1..n_workers {
+                    let (a, b) = UnixStream::pair().context("cluster: peer socketpair")?;
+                    mesh[i][j] = Some(Sock::Unix(a));
+                    mesh[j][i] = Some(Sock::Unix(b));
+                }
+            }
+        }
         let mut links = Vec::with_capacity(n_workers);
         let mut handles: Vec<Option<std::thread::JoinHandle<Result<()>>>> =
             Vec::with_capacity(n_workers);
-        for owned in per_worker {
+        for (wi, owned) in per_worker.into_iter().enumerate() {
             let (c0, c1) = UnixStream::pair().context("cluster: socketpair")?;
             let (d0, d1) = UnixStream::pair().context("cluster: socketpair")?;
             let shape2 = shape.clone();
             let measure = self.measure_busy;
+            let pinit = if peer_on {
+                PeerInit::Mesh(std::mem::take(&mut mesh[wi]))
+            } else {
+                PeerInit::Off
+            };
             handles.push(Some(std::thread::spawn(move || {
-                serve(Sock::Unix(c1), Sock::Unix(d1), owned, shape2, measure)
+                serve(Sock::Unix(c1), Sock::Unix(d1), owned, shape2, measure, wi, pinit)
             })));
             links.push(Link::new(Sock::Unix(c0), Sock::Unix(d0))?);
         }
         // Recovery-mode respawn: reap the dead thread (its error already
         // surfaced coordinator-side as the socket failure), rebuild the
         // shard from the factories, serve it on fresh socket pairs. The
-        // replacement starts blank; drive() restores it from checkpoints.
+        // replacement starts blank — and always peer-less: the coordinator
+        // has already degraded this shard to coordinator routing.
         let measure = self.measure_busy;
         let mut respawn = |w: usize| -> Result<Link> {
             if let Some(h) = handles[w].take() {
@@ -1045,13 +1976,13 @@ impl ClusterEngine {
             let (d0, d1) = UnixStream::pair().context("cluster: socketpair")?;
             let shape2 = shape.clone();
             handles[w] = Some(std::thread::spawn(move || {
-                serve(Sock::Unix(c1), Sock::Unix(d1), owned, shape2, measure)
+                serve(Sock::Unix(c1), Sock::Unix(d1), owned, shape2, measure, w, PeerInit::Off)
             }));
             Link::new(Sock::Unix(c0), Sock::Unix(d0))
         };
         // drive() owns the links and drops them on return, EOF-ing the
         // worker reader threads if anything aborted early.
-        let result = self.drive(topology, entry, source, links, Some(&mut respawn));
+        let result = self.drive(topology, entry, source, links, Some(&mut respawn), &[]);
         for h in handles.into_iter().flatten() {
             match h.join() {
                 Ok(r) => r?,
@@ -1102,7 +2033,7 @@ impl ClusterEngine {
         // Worker stderr is piped so a startup or mid-run death can be
         // diagnosed from the coordinator's error message. Workers print
         // nothing in normal operation, so the pipe buffer never fills.
-        let spawn_worker = |spec: &str, k: usize| -> Result<std::process::Child> {
+        let spawn_worker = |spec: &str, k: usize, peer: bool| -> Result<std::process::Child> {
             let mut cmd = std::process::Command::new(&exe);
             cmd.arg("--cluster-worker")
                 .arg(&addr)
@@ -1115,12 +2046,16 @@ impl ClusterEngine {
             if self.measure_busy {
                 cmd.arg("--cluster-measure");
             }
+            if peer {
+                cmd.arg("--cluster-peer");
+            }
             cmd.stderr(std::process::Stdio::piped());
             cmd.spawn().context("cluster: spawn worker process")
         };
+        let peer_on = self.peer != PeerMode::Off;
         let mut children = Vec::with_capacity(n_workers);
         for k in 0..n_workers {
-            children.push(spawn_worker(spec_str, k)?);
+            children.push(spawn_worker(spec_str, k, peer_on)?);
         }
 
         // Accept 2 connections per worker; each starts with a 2-byte
@@ -1216,7 +2151,10 @@ impl ClusterEngine {
         let stripped = spec::strip_fault(spec_str);
         let mut respawn = |w: usize| -> Result<Link> {
             let _ = children[w].wait();
-            children[w] = spawn_worker(&stripped, w)?;
+            // Replacements are always peer-less (degraded to coordinator
+            // routing), so they never see FRAME_ROUTES and reply in the
+            // legacy untagged format.
+            children[w] = spawn_worker(&stripped, w, false)?;
             let deadline = Instant::now() + std::time::Duration::from_secs(accept_secs);
             let mut rc: Option<Sock> = None;
             let mut rd: Option<Sock> = None;
@@ -1241,11 +2179,30 @@ impl ClusterEngine {
         };
 
         let result = setup.and_then(|()| {
+            // Peer mode: each worker bound its own peer listener before
+            // handshaking and announced it with one FRAME_PEER_ADDR on
+            // the control lane; collect the address table to broadcast
+            // in FRAME_ROUTES. (The control lane's reverse direction is
+            // otherwise unused, so reading here races nothing.)
+            let mut peer_addrs: Vec<String> = Vec::with_capacity(n_workers);
+            if peer_on {
+                let mut fbuf = Vec::new();
+                for (k, c) in ctrl.iter_mut().enumerate() {
+                    let s = c.as_mut().expect("ctrl sock");
+                    read_frame(s, &mut fbuf)
+                        .with_context(|| format!("cluster: peer address from worker {k}"))?;
+                    crate::ensure!(
+                        fbuf.len() > 9 && fbuf[0] == codec::FRAME_PEER_ADDR,
+                        "cluster: worker {k} sent no peer address"
+                    );
+                    peer_addrs.push(String::from_utf8_lossy(&fbuf[9..]).into_owned());
+                }
+            }
             let mut links = Vec::with_capacity(n_workers);
             for (c, d) in ctrl.into_iter().zip(data) {
                 links.push(Link::new(c.unwrap(), d.unwrap())?);
             }
-            self.drive(&topology, entry, source, links, Some(&mut respawn))
+            self.drive(&topology, entry, source, links, Some(&mut respawn), &peer_addrs)
         });
         if let Listener::Unix(_, path) = &listener {
             let _ = std::fs::remove_file(path);
@@ -1270,6 +2227,7 @@ impl ClusterEngine {
         source: impl Iterator<Item = Event>,
         links: Vec<Link>,
         mut respawn: Option<&mut dyn FnMut(usize) -> Result<Link>>,
+        peer_addrs: &[String],
     ) -> Result<(EngineMetrics, Vec<InstanceReport>)> {
         let shape: Vec<usize> = topology.processors.iter().map(|p| p.parallelism).collect();
         let n_workers = links.len();
@@ -1287,12 +2245,59 @@ impl ClusterEngine {
             buf: Vec::new(),
             recovery_on: self.checkpoint_every > 0,
             replay_cap: self.replay_cap.max(1),
-            logs: (0..n_workers).map(|_| ReplayLog::default()).collect(),
+            logs: (0..n_workers).map(|_| ReplayLog::new()).collect(),
             store: super::checkpoint::CheckpointStore::new(),
             dead: None,
             respawned: vec![false; n_workers],
+            peer: self.peer,
+            peer_off: vec![false; n_workers],
+            peer_inflight: vec![vec![0; n_workers]; n_workers],
+            peer_lseq: vec![vec![0; n_workers]; n_workers],
+            peer_stats: (0..n_workers * n_workers)
+                .map(|k| PeerLinkMetrics {
+                    from: (k / n_workers) as u32,
+                    to: (k % n_workers) as u32,
+                    ..Default::default()
+                })
+                .collect(),
         };
         let started = Instant::now();
+
+        // Peer mode: broadcast the routing table as the very first frame
+        // on every link (slot 0, slot-consuming, no reply). Workers
+        // bring up their peer mesh on receipt; from then on, eligible
+        // emissions ship worker→worker and only reply descriptors cross
+        // the coordinator.
+        if self.peer != PeerMode::Off {
+            let mut b = Vec::with_capacity(32 + 19 * topology.streams.len());
+            codec::put_u8(&mut b, codec::FRAME_ROUTES);
+            codec::put_u64(&mut b, 0);
+            codec::put_u8(&mut b, if self.peer == PeerMode::Deterministic { 1 } else { 2 });
+            codec::put_u8(&mut b, u8::from(co.recovery_on));
+            codec::put_u16(&mut b, n_workers as u16);
+            codec::put_u32(&mut b, topology.streams.len() as u32);
+            for def in &topology.streams {
+                codec::put_u16(&mut b, def.to.0 as u16);
+                codec::put_u8(&mut b, grouping_code(def.grouping));
+                codec::put_u32(&mut b, def.delay as u32);
+                // rr-cursor seed, reserved: shuffle streams peer-route
+                // only at parallelism 1, where the cursor is irrelevant.
+                codec::put_u64(&mut b, 0);
+            }
+            codec::put_u16(&mut b, peer_addrs.len() as u16);
+            for a in peer_addrs {
+                codec::put_u16(&mut b, a.len() as u16);
+                b.extend_from_slice(a.as_bytes());
+            }
+            for w in 0..n_workers {
+                let link = &mut co.links[w];
+                let wseq = link.wseq;
+                link.wseq += 1;
+                crate::ensure!(wseq == 0, "cluster: FRAME_ROUTES must be the first frame");
+                link.send(&b, true, &mut co.metrics.cluster)?;
+                link.flush(&mut co.metrics.cluster)?;
+            }
+        }
 
         // A worker death surfaces as an IO error with `co.dead` naming
         // the worker. In recovery mode the loop repairs it in place —
@@ -1350,8 +2355,15 @@ impl ClusterEngine {
                 codec::put_u16(&mut b, p as u16);
                 codec::put_u16(&mut b, i as u16);
                 link.send(&b, true, &mut co.metrics.cluster)?;
-                let pend =
-                    Pending { worker: w, wseq, data: false, log_ref: None, discard: false };
+                let pend = Pending {
+                    worker: w,
+                    wseq,
+                    data: false,
+                    link: None,
+                    peer_key: None,
+                    log_ref: None,
+                    discard: false,
+                };
                 co.outstanding.push_back(pend);
                 co.release_all_delayed();
                 co.pump(fin)?;
@@ -1411,6 +2423,14 @@ impl ClusterEngine {
         }
 
         co.metrics.wall_ns = started.elapsed().as_nanos() as u64;
+        // Compact the flat n×n link counters down to the links that saw
+        // traffic (or stalls) — what `samoa exp cluster` tabulates.
+        co.metrics.cluster.peer_links = co
+            .peer_stats
+            .iter()
+            .filter(|l| l.frames > 0 || l.stalls > 0)
+            .cloned()
+            .collect();
         reports.sort_by_key(|r| (r.pid, r.iid));
         Ok((co.metrics, reports))
     }
@@ -1427,6 +2447,29 @@ pub fn worker_main(args: &Args) -> Result<()> {
     let index = args.usize("cluster-index", 0);
     let n_workers = args.usize("cluster-workers", 1).max(1);
     let measure = args.flag("cluster-measure");
+    let peer = args.flag("cluster-peer");
+
+    // Peer mode: bind our peer listener BEFORE handshaking with the
+    // coordinator, so every other worker's dial (triggered by the
+    // coordinator's FRAME_ROUTES, which can only follow our handshake)
+    // is guaranteed to land in a live backlog — no ordering deadlock.
+    let (pinit, peer_addr) = if peer {
+        if addr.starts_with("tcp:") {
+            let l = TcpListener::bind("127.0.0.1:0").context("cluster worker: bind peer tcp")?;
+            let a = format!("tcp:{}", l.local_addr()?);
+            (PeerInit::Listen(PeerListener::Tcp(l)), a)
+        } else {
+            let path = std::env::temp_dir()
+                .join(format!("samoa-peer-{}-{index}.sock", std::process::id()));
+            let _ = std::fs::remove_file(&path);
+            let l = UnixListener::bind(&path)
+                .with_context(|| format!("cluster worker: bind {}", path.display()))?;
+            let a = format!("unix:{}", path.display());
+            (PeerInit::Listen(PeerListener::Unix(l, path)), a)
+        }
+    } else {
+        (PeerInit::Off, String::new())
+    };
 
     let connect = |lane: u8| -> Result<Sock> {
         let mut s = if let Some(p) = addr.strip_prefix("unix:") {
@@ -1440,7 +2483,18 @@ pub fn worker_main(args: &Args) -> Result<()> {
         s.flush()?;
         Ok(s)
     };
-    let ctrl = connect(0)?;
+    let mut ctrl = connect(0)?;
+    if peer {
+        // Announce where our peer listener lives, straight after the
+        // control-lane handshake; the coordinator folds all addresses
+        // into the FRAME_ROUTES broadcast.
+        let mut b = Vec::with_capacity(9 + peer_addr.len());
+        codec::put_u8(&mut b, codec::FRAME_PEER_ADDR);
+        codec::put_u64(&mut b, 0);
+        b.extend_from_slice(peer_addr.as_bytes());
+        write_frame(&mut ctrl, &b)?;
+        ctrl.flush()?;
+    }
     let data = connect(1)?;
 
     let (topology, _entry) = spec::build(spec_str)?;
@@ -1453,7 +2507,7 @@ pub fn worker_main(args: &Args) -> Result<()> {
             }
         }
     }
-    serve(ctrl, data, owned, shape, measure)
+    serve(ctrl, data, owned, shape, measure, index, pinit)
 }
 
 pub mod spec {
@@ -1516,6 +2570,47 @@ pub mod spec {
         }
     }
 
+    /// Middle stage of the `relay` spec: forwards every instance keyed
+    /// by its id, so the downstream Key stream carries real peer-plane
+    /// traffic (unlike `null`, whose only stream is the entry Shuffle —
+    /// coordinator-routed by definition).
+    struct RelayFwd {
+        out: StreamId,
+        relayed: u64,
+    }
+
+    impl Processor for RelayFwd {
+        fn process(&mut self, e: Event, ctx: &mut Ctx) {
+            if let Event::Instance { id, inst } = e {
+                self.relayed += 1;
+                ctx.emit(self.out, id, Event::Instance { id, inst });
+            }
+        }
+
+        fn name(&self) -> &'static str {
+            "relay-fwd"
+        }
+
+        fn report(&self) -> Vec<(&'static str, f64)> {
+            vec![("relayed", self.relayed as f64)]
+        }
+
+        fn snapshot(&self) -> Option<Vec<u8>> {
+            use crate::engine::checkpoint::{encode_frame, TAG_META_BASE};
+            Some(encode_frame(&[(TAG_META_BASE, vec![self.relayed as f64])]))
+        }
+
+        fn restore(&mut self, frame: &[u8]) -> Result<()> {
+            use crate::engine::checkpoint::{decode_frame, section, TAG_META_BASE};
+            let sections = decode_frame(frame)?;
+            let meta = section(&sections, TAG_META_BASE)
+                .ok_or_else(|| crate::anyhow!("relay-fwd frame: missing meta section"))?;
+            crate::ensure!(meta.len() == 1, "relay-fwd frame: bad meta length");
+            self.relayed = meta[0] as u64;
+            Ok(())
+        }
+    }
+
     fn param(spec: &str, key: &str) -> Option<String> {
         spec.split(':').skip(1).find_map(|kv| {
             kv.split_once('=').and_then(|(k, v)| (k == key).then(|| v.to_string()))
@@ -1559,6 +2654,27 @@ pub mod spec {
                     Box::new(NullSink { seen: 0, die_at, fired: std::sync::Arc::clone(&fired) })
                 });
                 let entry = b.stream("entry", None, sink, Grouping::Shuffle);
+                Ok((b.build(), entry))
+            }
+            // relay:p=K[:die=N:victim=I] — entry --shuffle--> fwd(p=1)
+            // --key--> sink×K. The fwd→sink Key stream is peer-eligible,
+            // so under `--peer` this spec carries worker↔worker traffic
+            // (including to a dying victim — the recovery-smoke workload).
+            "relay" => {
+                let p = usize_param(spec, "p", 2);
+                let die = u64_param(spec, "die", 0);
+                let victim = usize_param(spec, "victim", 0);
+                let mut b = TopologyBuilder::new("cluster-relay");
+                let fired = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+                let fwd = b.add_processor("fwd", 1, |_| {
+                    Box::new(RelayFwd { out: StreamId(1), relayed: 0 })
+                });
+                let sink = b.add_processor("sink", p, move |i| {
+                    let die_at = (die > 0 && i == victim).then_some(die);
+                    Box::new(NullSink { seen: 0, die_at, fired: std::sync::Arc::clone(&fired) })
+                });
+                let entry = b.stream("entry", None, fwd, Grouping::Shuffle);
+                b.stream("fwd->sink", Some(fwd), sink, Grouping::Key);
                 Ok((b.build(), entry))
             }
             // vht:stream=S:p=K:seed=N — the paper's VHT classifier over a
@@ -1709,5 +2825,126 @@ mod tests {
             .expect("cluster run");
         assert_eq!(run.metrics.streams[1].events, 64);
         assert!(run.metrics.flow.backpressure_stalls > 0, "window=1 must stall");
+    }
+
+    /// Like `two_stage`, but the second hop is `Grouping::All`: every
+    /// forwarded event fans out to all three sinks at once, so a tiny
+    /// in-flight window provably stalls (three deliveries are queued
+    /// before any reply can be consumed).
+    fn fan_out() -> (Topology, StreamId) {
+        let mut b = TopologyBuilder::new("t");
+        let a = b.add_processor("a", 1, |_| {
+            Box::new(Forwarder { out: Some(StreamId(1)), seen: 0 })
+        });
+        let c = b.add_processor("c", 3, |_| Box::new(Forwarder { out: None, seen: 0 }));
+        let entry = b.stream("src", None, a, Grouping::Shuffle);
+        b.stream("a->c", Some(a), c, Grouping::All);
+        (b.build(), entry)
+    }
+
+    #[test]
+    fn peer_det_ships_worker_to_worker_bit_identically() {
+        let (topo, entry) = two_stage();
+        let local = super::super::LocalEngine::new().run(
+            &topo,
+            entry,
+            (0..257).map(inst_event),
+            |_| {},
+        );
+        let (topo2, entry2) = two_stage();
+        for workers in [1, 2, 4] {
+            let run = ClusterEngine::new()
+                .with_workers(workers)
+                .with_peer(PeerMode::Deterministic)
+                .run(&topo2, entry2, (0..257).map(inst_event))
+                .expect("peer cluster run");
+            for (s, (a, b)) in local.streams.iter().zip(&run.metrics.streams).enumerate() {
+                assert_eq!(a.events, b.events, "stream {s} events at workers={workers}");
+                assert_eq!(a.bytes, b.bytes, "stream {s} bytes at workers={workers}");
+            }
+            assert_eq!(run.kv(0, 0, "seen"), Some(257.0), "workers={workers}");
+            let downstream: f64 = (0..3).map(|i| run.kv(1, i, "seen").unwrap()).sum();
+            assert_eq!(downstream, 257.0, "workers={workers}");
+            // The a->c Key hop rides the peer plane: the coordinator's
+            // data lane carries exactly the 257 source injections.
+            assert_eq!(run.metrics.cluster.data_frames, 257, "workers={workers}");
+            assert_eq!(run.metrics.cluster.peer_frames(), 257, "workers={workers}");
+            assert!(!run.metrics.cluster.peer_links.is_empty(), "workers={workers}");
+            assert!(run.metrics.cluster.sched_frames > 0, "workers={workers}");
+            let link_frames: u64 =
+                run.metrics.cluster.peer_links.iter().map(|l| l.frames).sum();
+            assert_eq!(link_frames, 257, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn peer_fast_conserves_stream_totals() {
+        let (topo, entry) = two_stage();
+        let local = super::super::LocalEngine::new().run(
+            &topo,
+            entry,
+            (0..257).map(inst_event),
+            |_| {},
+        );
+        let (topo2, entry2) = two_stage();
+        for workers in [1, 2, 4] {
+            let run = ClusterEngine::new()
+                .with_workers(workers)
+                .with_peer(PeerMode::Fast)
+                .run(&topo2, entry2, (0..257).map(inst_event))
+                .expect("fast peer cluster run");
+            for (s, (a, b)) in local.streams.iter().zip(&run.metrics.streams).enumerate() {
+                assert_eq!(a.events, b.events, "stream {s} events at workers={workers}");
+                assert_eq!(a.bytes, b.bytes, "stream {s} bytes at workers={workers}");
+            }
+            let downstream: f64 = (0..3).map(|i| run.kv(1, i, "seen").unwrap()).sum();
+            assert_eq!(downstream, 257.0, "workers={workers}");
+            assert_eq!(run.metrics.cluster.peer_frames(), 257, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn peer_tiny_window_stalls_per_link_and_stays_exact() {
+        let (topo, entry) = fan_out();
+        let local = super::super::LocalEngine::new().run(
+            &topo,
+            entry,
+            (0..64).map(inst_event),
+            |_| {},
+        );
+        let (topo2, entry2) = fan_out();
+        let run = ClusterEngine::new()
+            .with_workers(2)
+            .with_window(1)
+            .with_peer(PeerMode::Deterministic)
+            .run(&topo2, entry2, (0..64).map(inst_event))
+            .expect("peer cluster run");
+        assert_eq!(run.metrics.streams[1].events, 192);
+        for (s, (a, b)) in local.streams.iter().zip(&run.metrics.streams).enumerate() {
+            assert_eq!(a.events, b.events, "stream {s} events");
+            assert_eq!(a.bytes, b.bytes, "stream {s} bytes");
+        }
+        // Each fan-out queues two markers for worker 0's self-link in one
+        // pump round; window=1 forces the second to wait for the first.
+        assert!(run.metrics.flow.peer_link_stalls > 0, "window=1 must stall peer links");
+        let link_stalls: u64 = run.metrics.cluster.peer_links.iter().map(|l| l.stalls).sum();
+        assert_eq!(link_stalls, run.metrics.flow.peer_link_stalls);
+    }
+
+    #[test]
+    fn relay_spec_carries_peer_traffic() {
+        let (topo, entry) = spec::build("relay:p=2").expect("relay spec");
+        let run = ClusterEngine::new()
+            .with_workers(2)
+            .with_peer(PeerMode::Deterministic)
+            .run(&topo, entry, (0..100).map(inst_event))
+            .expect("peer cluster run");
+        assert_eq!(run.kv(0, 0, "relayed"), Some(100.0));
+        let downstream: f64 = (0..2).map(|i| run.kv(1, i, "seen").unwrap()).sum();
+        assert_eq!(downstream, 100.0);
+        // entry injections are the only coordinator data-lane traffic;
+        // every fwd->sink delivery went worker->worker.
+        assert_eq!(run.metrics.cluster.data_frames, 100);
+        assert_eq!(run.metrics.cluster.peer_frames(), 100);
     }
 }

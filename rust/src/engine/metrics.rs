@@ -38,10 +38,39 @@ pub struct FlowControlMetrics {
     pub batch_shrinks: u64,
     /// Work-stealing mode: task quanta executed by a non-home worker.
     pub steals: u64,
+    /// Cluster peer mode: deliveries that found their worker↔worker
+    /// link's in-flight window full (the coordinator blocked on the
+    /// oldest outstanding reply before scheduling the slot).
+    pub peer_link_stalls: u64,
+    /// Wall time spent in those per-link stalls.
+    pub peer_link_stall_ns: u64,
     /// Batch buffers recycled through the arena (vs fresh allocations
     /// in `arena_allocs`).
     pub arena_reuses: u64,
     pub arena_allocs: u64,
+}
+
+/// One worker↔worker data link of the cluster engine's peer mode: who
+/// talks to whom, how much, and how often the link's in-flight window
+/// stalled the schedule. `from == to` is the self-link (a worker
+/// delivering to an instance it owns without a coordinator round trip;
+/// those frames never touch a socket but are counted for completeness).
+#[derive(Clone, Debug, Default)]
+pub struct PeerLinkMetrics {
+    /// Sending worker index.
+    pub from: u32,
+    /// Receiving worker index.
+    pub to: u32,
+    /// Peer delivery frames shipped over this link.
+    pub frames: u64,
+    /// Socket bytes of those frames (length prefix included).
+    pub bytes: u64,
+    /// Logical `Event::wire_bytes` of the shipped deliveries (the
+    /// quantity `StreamMetrics::bytes` counts — kept per link so the
+    /// framing overhead per link is `bytes - wire_bytes`).
+    pub wire_bytes: u64,
+    /// Deliveries on this link that hit the per-link in-flight window.
+    pub stalls: u64,
 }
 
 /// Socket-plane counters of the cluster engine (zero elsewhere). Unlike
@@ -71,17 +100,37 @@ pub struct ClusterMetrics {
     pub tx_ns: u64,
     /// Wall time the coordinator spent blocked reading replies.
     pub rx_ns: u64,
+    /// Peer mode: schedule frames (`FRAME_PEER_SCHED`) the coordinator
+    /// sent on control lanes (deterministic mode; each batches many slot
+    /// tokens). Counted inside `ctrl_frames` too — this splits them out.
+    pub sched_frames: u64,
+    /// Peer mode: one entry per worker↔worker link that carried
+    /// traffic, accumulated coordinator-side from the per-delivery
+    /// descriptors in worker replies. Empty when peer mode is off.
+    pub peer_links: Vec<PeerLinkMetrics>,
 }
 
 impl ClusterMetrics {
-    /// Total frames that crossed the wire in either direction.
+    /// Total frames that crossed the wire in either direction
+    /// (coordinator lanes only; peer-link frames are in `peer_frames`).
     pub fn total_frames(&self) -> u64 {
         self.data_frames + self.ctrl_frames + self.reply_frames
     }
 
-    /// Total socket bytes in either direction.
+    /// Total socket bytes in either direction (coordinator lanes only).
     pub fn total_bytes(&self) -> u64 {
         self.tx_bytes + self.rx_bytes
+    }
+
+    /// Peer delivery frames shipped worker↔worker across all links.
+    pub fn peer_frames(&self) -> u64 {
+        self.peer_links.iter().map(|l| l.frames).sum()
+    }
+
+    /// Socket bytes of all peer-link frames (self-link bytes included,
+    /// though those never cross a socket).
+    pub fn peer_bytes(&self) -> u64 {
+        self.peer_links.iter().map(|l| l.bytes).sum()
     }
 }
 

@@ -25,6 +25,7 @@
 //! | [`LocalEngine`] | none (sequential) | bit-exact, the golden reference | logical events/bytes per stream |
 //! | [`ThreadedEngine`] | shared-memory threads | per-edge FIFO; totals match local | real wall time, backpressure, steals |
 //! | [`ClusterEngine`] | OS processes over sockets | global order matches local (coordinator-sequenced) | real serialization + socket bytes/time |
+//! | [`ClusterEngine`] + `with_peer` | OS processes, worker↔worker data links | deterministic mode: bit-identical to local; fast mode: per-link FIFO, totals match | peer-lane frames/bytes/stalls per link |
 //! | [`SimTimeEngine`] | analytic p-worker schedule | inherits local | predicted makespan from a cost model |
 //!
 //! Rules of thumb: start on [`LocalEngine`] (every test pins against
@@ -34,10 +35,20 @@
 //! isolation — or to validate [`SimCostModel`]'s `c_msg_ns`/`c_byte_ns`
 //! against measured socket time (`samoa exp cluster`); use
 //! [`SimTimeEngine`] to extrapolate to worker counts the testbed does
-//! not have. The cluster engine routes every event through the
-//! coordinator, so it is a *fidelity* engine, not a speedup engine: its
-//! value is that totals stay bit-identical to local while the bytes and
-//! nanoseconds in [`metrics::ClusterMetrics`] are real.
+//! not have. By default the cluster engine routes every event through
+//! the coordinator, so it is a *fidelity* engine, not a speedup engine:
+//! its value is that totals stay bit-identical to local while the bytes
+//! and nanoseconds in [`metrics::ClusterMetrics`] are real.
+//! [`ClusterEngine::with_peer`] adds the peer data plane: eligible data
+//! deliveries (undelayed, key-routable) ship on direct worker↔worker
+//! sockets and only a small descriptor rides the reply lane, while the
+//! coordinator keeps global sequencing, control events, source
+//! injection and the quiescence barriers. [`cluster::PeerMode`]
+//! `::Deterministic` (the default for `--peer`) pins the receiver-side
+//! merge to coordinator-issued slot tokens, keeping runs bit-identical
+//! to [`LocalEngine`]; `::Fast` drops the tokens and guarantees only
+//! per-link FIFO plus conserved per-stream totals. Per-link traffic and
+//! window stalls land in [`metrics::PeerLinkMetrics`].
 //!
 //! # Criterion kernel backend (orthogonal to engine choice)
 //!
@@ -131,6 +142,7 @@
 //! |---|---|---|---|
 //! | [`ThreadedEngine`] | one task (processor instance) | fault injection (`with_fault`) | in-thread respawn + restore + replay |
 //! | [`ClusterEngine`] | one worker (process/thread) | socket error mid-run, exit status at spawn | respawn worker, `Restore` frames, re-drive log |
+//! | [`ClusterEngine`] + `with_peer` | one worker, peer links attached | same | as above, plus: outstanding peer descriptors re-routed from their logged payloads, queued peer deliveries converted to coordinator routing *in place* (global order preserved), `PeerDown` broadcast, and the respawned worker served coordinator-only for the rest of the run |
 //!
 //! * **Checkpoints** — with `with_checkpoints(every)` the engine
 //!   captures each instance's [`Processor::snapshot`] every `every`
@@ -164,7 +176,7 @@ pub mod cluster;
 pub mod simtime;
 
 pub use checkpoint::CheckpointStore;
-pub use cluster::{ClusterEngine, ClusterRun, InstanceReport};
+pub use cluster::{ClusterEngine, ClusterRun, InstanceReport, PeerMode};
 pub use local::LocalEngine;
 pub use metrics::EngineMetrics;
 pub use simtime::{SimCostModel, SimTimeEngine};

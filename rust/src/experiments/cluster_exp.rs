@@ -27,11 +27,14 @@
 //! `--window` (default 128), `--stream` twin for the workload rows
 //! (default elec), `--tcp` loopback TCP instead of Unix sockets,
 //! `--threads` worker threads instead of processes, `--smoke` tiny
-//! sweep for CI.
+//! sweep for CI, `--peer [det|fast]` worker↔worker data links (the
+//! workload table gains peer-lane columns and a per-link breakdown,
+//! and the `relay` row asserts that its key-routed hop left the
+//! coordinator's data lane entirely).
 
 use crate::common::cli::Args;
 use crate::core::instance::{Instance, Label};
-use crate::engine::cluster::{spec, ClusterEngine, ClusterRun};
+use crate::engine::cluster::{spec, ClusterEngine, ClusterRun, PeerMode};
 use crate::engine::simtime::SimCostModel;
 use crate::streams::StreamSource;
 use crate::topology::Event;
@@ -87,7 +90,11 @@ pub fn cluster(args: &Args) -> crate::Result<()> {
     let window = args.usize("window", 128);
     let stream_name = args.get_or("stream", "elec").to_string();
     let threads = args.flag("threads");
-    let mut eng = ClusterEngine::new().with_workers(workers).with_window(window);
+    let peer = PeerMode::parse(args.get("peer"))?;
+    let mut eng = ClusterEngine::new()
+        .with_workers(workers)
+        .with_window(window)
+        .with_peer(peer);
     if args.flag("tcp") {
         eng = eng.over_tcp();
     }
@@ -159,13 +166,22 @@ pub fn cluster(args: &Args) -> crate::Result<()> {
     // ------------------------------------------------ 2. workload rows
     let seed = args.u64("seed", 42);
     let specs = [
+        format!("relay:p={workers}"),
         format!("vht:stream={stream_name}:p={workers}:seed={seed}"),
         format!("sync:stream={stream_name}:p={workers}:interval=64:seed={seed}"),
     ];
     let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut link_rows: Vec<Vec<String>> = Vec::new();
     for spec_str in &specs {
+        let relay = spec_str.starts_with("relay");
         let name = stream_name.clone();
         let make = move || -> Box<dyn Iterator<Item = Event>> {
+            if relay {
+                return Box::new((0..n).map(move |id| Event::Instance {
+                    id,
+                    inst: Instance::dense(vec![0.25; 8], Label::None),
+                }));
+            }
             let mut s = crate::experiments::dataset_stream(&name, seed);
             Box::new(
                 (0..n).map_while(move |id| {
@@ -175,6 +191,35 @@ pub fn cluster(args: &Args) -> crate::Result<()> {
         };
         let (run, mode) = run_one(&eng, spec_str, threads, &make)?;
         let c = &run.metrics.cluster;
+        if relay {
+            let seen = run.kv_sum("seen");
+            crate::ensure!(
+                seen == n as f64,
+                "cluster relay: sinks saw {seen} of {n} instances"
+            );
+            if peer != PeerMode::Off {
+                // The acceptance probe for the peer plane: relay's only
+                // data-lane traffic is the source injection itself; every
+                // key-routed fwd→sink delivery ships worker→worker, and
+                // the per-link counters must be populated.
+                crate::ensure!(
+                    c.data_frames == n && c.peer_frames() == n && !c.peer_links.is_empty(),
+                    "cluster relay under --peer: key-routed deliveries must bypass the \
+                     coordinator (data frames {}, peer frames {})",
+                    c.data_frames,
+                    c.peer_frames()
+                );
+            }
+            for l in &c.peer_links {
+                link_rows.push(vec![
+                    format!("w{} -> w{}", l.from, l.to),
+                    l.frames.to_string(),
+                    format!("{:.1}", l.bytes as f64 / 1024.0),
+                    format!("{:.1}", l.wire_bytes as f64 / 1024.0),
+                    l.stalls.to_string(),
+                ]);
+            }
+        }
         let evald = run.kv_sum("n");
         let acc = if evald > 0.0 {
             format!("{:.4}", run.kv_sum("correct") / evald)
@@ -188,14 +233,41 @@ pub fn cluster(args: &Args) -> crate::Result<()> {
             format!("{:.0}", run.metrics.wall_throughput()),
             format!("{:.2}", c.total_bytes() as f64 / (1024.0 * 1024.0)),
             c.total_frames().to_string(),
-            run.metrics.flow.backpressure_stalls.to_string(),
+            c.data_frames.to_string(),
+            c.peer_frames().to_string(),
+            format!("{:.1}", c.peer_bytes() as f64 / 1024.0),
+            format!(
+                "{}+{}",
+                run.metrics.flow.backpressure_stalls, run.metrics.flow.peer_link_stalls
+            ),
             acc,
         ]);
     }
     print_table(
-        &format!("cluster workloads ({n} inst, {workers} workers, window {window})"),
-        &["spec", "mode", "wall s", "inst/s", "socket MB", "frames", "stalls", "accuracy"],
+        &format!(
+            "cluster workloads ({n} inst, {workers} workers, window {window}, peer {peer:?})"
+        ),
+        &[
+            "spec",
+            "mode",
+            "wall s",
+            "inst/s",
+            "socket MB",
+            "frames",
+            "coord data",
+            "peer frames",
+            "peer KB",
+            "stalls+link",
+            "accuracy",
+        ],
         &rows,
     );
+    if !link_rows.is_empty() {
+        print_table(
+            "peer links (relay workload)",
+            &["link", "frames", "socket KB", "wire KB", "stalls"],
+            &link_rows,
+        );
+    }
     Ok(())
 }

@@ -22,10 +22,14 @@
 //! Knobs: `--n` instances (default 20000), `--p` parallelism (default
 //! 2), `--stream` twin (default elec — the sync spec needs a
 //! classification stream), `--seed`, `--replay-cap`, `--smoke` one kill
-//! per engine for CI.
+//! per engine for CI, `--peer [det|fast]` kill the worker while
+//! worker↔worker links are live: the cluster leg switches to the
+//! `relay` spec (whose key-routed hop rides the peer plane — the
+//! victim hosts both the peer sender and a sink), and the recovered
+//! shard is degraded back to coordinator routing.
 
 use crate::common::cli::Args;
-use crate::engine::cluster::{spec, ClusterEngine};
+use crate::engine::cluster::{spec, ClusterEngine, PeerMode};
 use crate::engine::metrics::EngineMetrics;
 use crate::engine::threaded::ThreadedEngine;
 use crate::topology::Event;
@@ -149,15 +153,26 @@ pub fn recovery(args: &Args) -> crate::Result<()> {
     // One worker death per run: sink instance 0 (on worker 0) panics at
     // its `die`th delivery; the coordinator detects the socket failure,
     // respawns the worker and re-drives it from the held checkpoint.
+    // Under `--peer` the workload is `relay` (its key-routed hop carries
+    // live peer traffic, and worker 0 hosts the peer *sender* too), so
+    // the kill exercises the degradation path: outstanding descriptors
+    // rerouted from their payloads, markers converted in place, the
+    // respawned shard served coordinator-only.
+    let peer = PeerMode::parse(args.get("peer"))?;
     let die = (per_shard / 2).max(1);
-    let cl_spec = format!("null:p={p}:die={die}:victim=0");
+    let cl_spec = if peer == PeerMode::Off {
+        format!("null:p={p}:die={die}:victim=0")
+    } else {
+        format!("relay:p={p}:die={die}:victim=0")
+    };
     let intervals: &[u64] = if smoke { &[64] } else { &[64, 256, 1024] };
     let mut rows: Vec<Vec<String>> = Vec::new();
     for &interval in intervals {
         let eng = ClusterEngine::new()
             .with_workers(p)
             .with_checkpoints(interval)
-            .with_replay_cap(replay_cap);
+            .with_replay_cap(replay_cap)
+            .with_peer(peer);
         let make = || {
             Box::new((0..n).map(|id| Event::Instance {
                 id,
@@ -180,6 +195,12 @@ pub fn recovery(args: &Args) -> crate::Result<()> {
         };
         let r = &run.metrics.recovery;
         crate::ensure!(r.kills == 1, "injected cluster fault did not fire");
+        if peer != PeerMode::Off {
+            crate::ensure!(
+                run.metrics.cluster.peer_frames() > 0,
+                "cluster recovery under --peer: no worker↔worker traffic flowed before the kill"
+            );
+        }
         rows.push(vec![
             interval.to_string(),
             mode.to_string(),
@@ -192,8 +213,10 @@ pub fn recovery(args: &Args) -> crate::Result<()> {
             format!("{:.0}", run.metrics.wall_throughput()),
         ]);
     }
+    let cl_topology =
+        if peer == PeerMode::Off { "null topology" } else { "relay topology, peer links" };
     print_table(
-        &format!("cluster worker-death recovery (null topology, {n} inst, {p} workers)"),
+        &format!("cluster worker-death recovery ({cl_topology}, {n} inst, {p} workers)"),
         &["ckpt every", "mode", "die@", "ckpts", "replayed", "dropped", "seen", "sent", "inst/s"],
         &rows,
     );

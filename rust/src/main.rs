@@ -63,13 +63,15 @@ fn main() {
             );
             println!(
                 "exp cluster knobs: --n 20000 --workers 2 --window 128 --stream elec \
-                 --tcp --threads --smoke (multi-process wire-cost sweep + VHT/StatsSync \
-                 workloads over sockets, measured vs SimCostModel)"
+                 --tcp --threads --peer [det|fast] --smoke (multi-process wire-cost \
+                 sweep + relay/VHT/StatsSync workloads over sockets, measured vs \
+                 SimCostModel; --peer ships key-routed hops worker↔worker)"
             );
             println!(
                 "exp recovery knobs: --n 20000 --p 2 --stream elec --seed 42 \
-                 --replay-cap 65536 --smoke (checkpoint interval × kill point vs \
-                 accuracy/throughput, threaded fault injection + cluster worker death)"
+                 --replay-cap 65536 --peer [det|fast] --smoke (checkpoint interval × \
+                 kill point vs accuracy/throughput, threaded fault injection + cluster \
+                 worker death; --peer kills a worker with live peer links)"
             );
             Ok(())
         }

@@ -568,6 +568,94 @@ pub fn decode_event(buf: &[u8]) -> Result<(Event, usize)> {
     Ok((e, r.consumed()))
 }
 
+// --------------------------------------------------------- peer frames
+//
+// The cluster engine's peer data plane (worker↔worker links) reuses the
+// `[len: u32 LE][kind: u8][seq: u64 LE]…` frame shape of the
+// coordinator lanes. The payload-bearing kinds live here (rather than
+// as private constants in `engine::cluster`) so their encode/decode is
+// unit-testable without sockets: a peer frame arrives from another
+// *process* and must survive truncation and corruption exactly like an
+// event body.
+
+/// Coordinator → worker: routing table + peer mesh setup (first frame
+/// of a peer-mode run).
+pub const FRAME_ROUTES: u8 = 11;
+/// Coordinator → worker: slot schedule tokens (deterministic peer mode;
+/// out-of-band, `wseq` field is 0 and unused).
+pub const FRAME_PEER_SCHED: u8 = 12;
+/// Worker → worker: one peer-shipped delivery. The `wseq` slot of the
+/// frame layout carries the per-(sender, dest) link sequence number.
+pub const FRAME_PEER: u8 = 13;
+/// Worker → coordinator: reply to a peer delivery (relaxed/`fast` mode
+/// only; deterministic mode replies with the ordinary emissions kind
+/// keyed by the coordinator-assigned slot).
+pub const FRAME_PEER_EMS: u8 = 14;
+/// Worker → coordinator (control lane, right after the handshake): the
+/// address of this worker's peer listener (subprocess mode).
+pub const FRAME_PEER_ADDR: u8 = 15;
+/// Coordinator → worker: a peer was respawned after a death — stop
+/// shipping to it (out-of-band, like `FRAME_PEER_SCHED`).
+pub const FRAME_PEER_DOWN: u8 = 16;
+
+/// Encode one worker→worker peer delivery frame body:
+/// `[FRAME_PEER][lseq: u64][pid: u16][iid: u16][event]`.
+pub fn encode_peer_frame(lseq: u64, pid: u16, iid: u16, event: &Event) -> Vec<u8> {
+    let mut b = Vec::with_capacity(16 + event.wire_bytes());
+    put_u8(&mut b, FRAME_PEER);
+    put_u64(&mut b, lseq);
+    put_u16(&mut b, pid);
+    put_u16(&mut b, iid);
+    encode_event(event, &mut b);
+    b
+}
+
+/// Decode a peer delivery frame body. Rejects a wrong kind byte,
+/// truncation anywhere, and trailing garbage after the event.
+pub fn decode_peer_frame(buf: &[u8]) -> Result<(u64, u16, u16, Event)> {
+    let mut r = Reader::new(buf);
+    let kind = r.u8()?;
+    crate::ensure!(kind == FRAME_PEER, "peer frame: wrong kind {kind}");
+    let lseq = r.u64()?;
+    let pid = r.u16()?;
+    let iid = r.u16()?;
+    let event = r.event()?;
+    crate::ensure!(r.remaining() == 0, "peer frame: {} trailing bytes", r.remaining());
+    Ok((lseq, pid, iid, event))
+}
+
+/// Encode a schedule-token frame body:
+/// `[FRAME_PEER_SCHED][0: u64][n: u32][(slot: u64, sender: u8) × n]`.
+/// Tokens tell the receiving worker which of its upcoming delivery
+/// slots are filled by peer frames (and from which sender) instead of
+/// coordinator frames.
+pub fn encode_peer_sched(tokens: &[(u64, u8)]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(13 + 9 * tokens.len());
+    put_u8(&mut b, FRAME_PEER_SCHED);
+    put_u64(&mut b, 0);
+    put_u32(&mut b, tokens.len() as u32);
+    for &(slot, sender) in tokens {
+        put_u64(&mut b, slot);
+        put_u8(&mut b, sender);
+    }
+    b
+}
+
+/// Decode a schedule-token frame body.
+pub fn decode_peer_sched(buf: &[u8]) -> Result<Vec<(u64, u8)>> {
+    let mut r = Reader::new(buf);
+    let kind = r.u8()?;
+    crate::ensure!(kind == FRAME_PEER_SCHED, "peer sched: wrong kind {kind}");
+    let _zero = r.u64()?;
+    let n = r.len(9)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push((r.u64()?, r.u8()?));
+    }
+    crate::ensure!(r.remaining() == 0, "peer sched: {} trailing bytes", r.remaining());
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

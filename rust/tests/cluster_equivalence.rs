@@ -17,7 +17,7 @@ use samoa::classifiers::hoeffding_tree::{HTConfig, HoeffdingTree};
 use samoa::classifiers::vht::{self, VhtConfig};
 use samoa::core::model::Classifier;
 use samoa::core::Schema;
-use samoa::engine::{ClusterEngine, ClusterRun, EngineMetrics, LocalEngine};
+use samoa::engine::{ClusterEngine, ClusterRun, EngineMetrics, LocalEngine, PeerMode};
 use samoa::evaluation::prequential::{EvalSink, EvaluatorProcessor};
 use samoa::preprocess::processor::{build_prequential_topology_head, LearnerHead};
 use samoa::preprocess::{Pipeline, StandardScaler, SyncPolicy};
@@ -232,6 +232,169 @@ fn stats_sync_round_counts_bit_identical_to_local() {
         // the evaluator's report made it back over the collect phase
         let eval_n = run.kv(h2.evaluator.0, 0, "n");
         assert!(eval_n.is_some(), "{label}: evaluator report present");
+    }
+}
+
+// ------------------------------------------------------ peer data plane
+//
+// `with_peer(Deterministic)` ships eligible data deliveries on direct
+// worker↔worker links while the coordinator keeps sequencing slots; the
+// results must stay bit-identical to the local engine at every worker
+// count, for all three paper workloads. VHT is the sharpest probe: its
+// delayed feedback stream must stay coordinator-routed (delay > 0 is
+// peer-ineligible) while the attribute fan-out rides the peer links.
+
+#[test]
+fn vht_peer_det_bit_identical_to_local() {
+    let schema = RandomTreeGenerator::new(5, 5, 2, SEED).schema().clone();
+    let p = 2usize;
+    let config = vht_config(p);
+
+    let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = vht::build_topology(&schema, &config, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+    let local = LocalEngine::new().run(&topo, handles.entry, vht_source(N), |_| {});
+    let local_acc = sink.accuracy();
+
+    for workers in [1usize, 2, 4] {
+        let (topo2, h2) = vht::build_topology(&schema, &config, {
+            let schema = schema.clone();
+            move |_| {
+                let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+                Box::new(EvaluatorProcessor { sink })
+            }
+        });
+        let run = ClusterEngine::new()
+            .with_workers(workers)
+            .with_peer(PeerMode::Deterministic)
+            .run(&topo2, h2.entry, vht_source(N))
+            .expect("peer cluster run");
+
+        let label = format!("vht peer-det p={p} workers={workers}");
+        assert_streams_identical(&local, &run, &label);
+        assert_eq!(run.kv(h2.evaluator.0, 0, "accuracy"), Some(local_acc), "{label}: acc");
+        if workers > 1 {
+            assert!(run.metrics.cluster.peer_frames() > 0, "{label}: peer links carried data");
+            assert!(!run.metrics.cluster.peer_links.is_empty(), "{label}: per-link counters");
+        }
+    }
+}
+
+#[test]
+fn vamr_peer_det_bit_identical_to_local() {
+    let probe = ElectricityRegStream::with_limit(SEED, N);
+    let schema = probe.schema().clone();
+    let range = schema.label_range();
+    let p = 2usize;
+
+    let sink = EvalSink::new(0, range, u64::MAX);
+    let sink2 = Arc::clone(&sink);
+    let (topo, handles) = vamr::build_topology(&schema, &AMRulesConfig::default(), p, move |_| {
+        Box::new(EvaluatorProcessor { sink: Arc::clone(&sink2) })
+    });
+    let local = LocalEngine::new().run(&topo, handles.entry, amr_source(N), |_| {});
+    let local_rmse = sink.rmse();
+
+    for workers in [1usize, 2, 4] {
+        let (topo2, h2) =
+            vamr::build_topology(&schema, &AMRulesConfig::default(), p, move |_| {
+                let sink = EvalSink::new(0, range, u64::MAX);
+                Box::new(EvaluatorProcessor { sink })
+            });
+        let run = ClusterEngine::new()
+            .with_workers(workers)
+            .with_peer(PeerMode::Deterministic)
+            .run(&topo2, h2.entry, amr_source(N))
+            .expect("peer cluster run");
+
+        let label = format!("vamr peer-det p={p} workers={workers}");
+        assert_streams_identical(&local, &run, &label);
+        assert_eq!(run.kv(h2.evaluator.0, 0, "rmse"), Some(local_rmse), "{label}: rmse");
+    }
+}
+
+#[test]
+fn stats_sync_peer_det_bit_identical_to_local() {
+    let schema =
+        samoa::streams::waveform::WaveformGenerator::classification(SEED).schema().clone();
+    let p = 4usize;
+
+    let (topo, handles) = sync_topology(&schema, p);
+    let stats_pid = handles.stats.expect("sync topology has an aggregator").0;
+    let mut local_kv: Vec<(String, f64)> = Vec::new();
+    let local = LocalEngine::new().run(&topo, handles.entry, waveform_source(N), |instances| {
+        local_kv = instances[stats_pid][0]
+            .report()
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect();
+    });
+
+    for workers in [1usize, 2, 4] {
+        let (topo2, h2) = sync_topology(&schema, p);
+        let run = ClusterEngine::new()
+            .with_workers(workers)
+            .with_peer(PeerMode::Deterministic)
+            .run(&topo2, h2.entry, waveform_source(N))
+            .expect("peer cluster run");
+
+        let label = format!("sync peer-det p={p} workers={workers}");
+        assert_streams_identical(&local, &run, &label);
+        let stats2 = h2.stats.unwrap().0;
+        for (k, v) in &local_kv {
+            assert_eq!(run.kv(stats2, 0, k), Some(*v), "{label}: {k}");
+        }
+    }
+}
+
+#[test]
+fn vht_peer_fast_conserves_totals() {
+    // Fast mode drops the coordinator's slot tokens: each receiver
+    // merges peer frames in arrival order, so model-state equality is
+    // NOT promised — but every delivery still happens exactly once and
+    // the coordinator still meters per-stream totals in global send
+    // order, so those stay identical to local.
+    let schema = RandomTreeGenerator::new(5, 5, 2, SEED).schema().clone();
+    let config = vht_config(2);
+    let (topo, handles) = vht::build_topology(&schema, &config, {
+        let schema = schema.clone();
+        move |_| {
+            let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+            Box::new(EvaluatorProcessor { sink })
+        }
+    });
+    let local = LocalEngine::new().run(&topo, handles.entry, vht_source(N), |_| {});
+
+    for workers in [2usize, 4] {
+        let (topo2, h2) = vht::build_topology(&schema, &config, {
+            let schema = schema.clone();
+            move |_| {
+                let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+                Box::new(EvaluatorProcessor { sink })
+            }
+        });
+        let run = ClusterEngine::new()
+            .with_workers(workers)
+            .with_peer(PeerMode::Fast)
+            .run(&topo2, h2.entry, vht_source(N))
+            .expect("peer-fast cluster run");
+
+        let label = format!("vht peer-fast workers={workers}");
+        for (s, (a, b)) in local.streams.iter().zip(&run.metrics.streams).enumerate() {
+            assert_eq!(a.events, b.events, "{label}: stream {s} events");
+            assert_eq!(a.bytes, b.bytes, "{label}: stream {s} bytes");
+        }
+        assert_eq!(local.source_instances, run.metrics.source_instances, "{label}: sources");
+        assert!(run.metrics.cluster.peer_frames() > 0, "{label}: peer links carried data");
+        // the evaluator saw every prediction exactly once
+        let local_n: f64 = N as f64;
+        let eval_n = run.kv(h2.evaluator.0, 0, "n").unwrap_or(0.0);
+        assert!(
+            eval_n <= local_n && eval_n > 0.0,
+            "{label}: evaluator n = {eval_n} (local {local_n})"
+        );
     }
 }
 

@@ -7,7 +7,10 @@ use std::sync::Arc;
 
 use samoa::core::instance::{Instance, Label};
 use samoa::regressors::rule::{Feature, HeadSnapshot, Op, RuleSpec};
-use samoa::topology::codec::{decode_event, encode_event_vec};
+use samoa::topology::codec::{
+    decode_event, decode_peer_frame, decode_peer_sched, encode_event_vec, encode_peer_frame,
+    encode_peer_sched, FRAME_PEER, FRAME_PEER_SCHED,
+};
 use samoa::topology::{Event, Output};
 
 /// One exemplar per `Event` variant, exercising dense + sparse instance
@@ -218,6 +221,76 @@ fn oversized_length_prefixes_are_rejected_not_allocated() {
     bytes.push(1); // sparse values kind
     bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // n entries
     assert!(decode_event(&bytes).is_err());
+}
+
+#[test]
+fn peer_frame_roundtrips_every_variant() {
+    // The worker↔worker data plane wraps an arbitrary event in
+    // `[FRAME_PEER][lseq][pid][iid][event]`; header fields and payload
+    // must survive for every event shape, including extreme values.
+    for (i, e) in exemplars().iter().enumerate() {
+        let lseq = (i as u64) << 32 | 0xABCD;
+        let (pid, iid) = (i as u16, u16::MAX - i as u16);
+        let bytes = encode_peer_frame(lseq, pid, iid, e);
+        assert_eq!(bytes[0], FRAME_PEER);
+        let (l2, p2, i2, e2) =
+            decode_peer_frame(&bytes).unwrap_or_else(|err| panic!("decode {e:?}: {err}"));
+        assert_eq!((l2, p2, i2), (lseq, pid, iid));
+        assert_eq!(fingerprint(e), fingerprint(&e2));
+    }
+}
+
+#[test]
+fn peer_frame_truncation_corruption_and_trailing_bytes_are_rejected() {
+    let e = Event::Instance {
+        id: 42,
+        inst: Instance::dense(vec![1.0, -2.0, 3.0], Label::Class(1)),
+    };
+    let bytes = encode_peer_frame(7, 1, 2, &e);
+    // a peer frame crosses a process boundary: every truncation must
+    // error, never panic or decode short
+    for cut in 0..bytes.len() {
+        assert!(decode_peer_frame(&bytes[..cut]).is_err(), "truncation at {cut} must fail");
+    }
+    // wrong kind byte (e.g. a coordinator frame misrouted onto the link)
+    let mut wrong = bytes.clone();
+    wrong[0] = FRAME_PEER_SCHED;
+    assert!(decode_peer_frame(&wrong).is_err(), "wrong kind must fail");
+    // trailing garbage after the event is a framing bug, not padding
+    let mut long = bytes.clone();
+    long.push(0);
+    assert!(decode_peer_frame(&long).is_err(), "trailing byte must fail");
+}
+
+#[test]
+fn peer_sched_tokens_roundtrip_in_order() {
+    // The deterministic merge depends on token order: the receiver pops
+    // its slot map in wseq order, so decode must preserve encode order
+    // exactly (including duplicate senders and non-monotonic slots).
+    let tokens: Vec<(u64, u8)> =
+        vec![(0, 0), (5, 1), (3, 1), (u64::MAX, 255), (4, 0), (4, 2)];
+    let bytes = encode_peer_sched(&tokens);
+    assert_eq!(bytes[0], FRAME_PEER_SCHED);
+    assert_eq!(decode_peer_sched(&bytes).unwrap(), tokens);
+    // empty schedule frames are legal (a flush with no pending tokens)
+    assert_eq!(decode_peer_sched(&encode_peer_sched(&[])).unwrap(), Vec::<(u64, u8)>::new());
+}
+
+#[test]
+fn peer_sched_truncation_and_length_lies_are_rejected() {
+    let tokens: Vec<(u64, u8)> = (0..4u64).map(|s| (s, s as u8)).collect();
+    let bytes = encode_peer_sched(&tokens);
+    for cut in 0..bytes.len() {
+        assert!(decode_peer_sched(&bytes[..cut]).is_err(), "truncation at {cut} must fail");
+    }
+    // a count claiming more tokens than the buffer holds must fail on
+    // the validated length, not allocate or read past the end
+    let mut lie = bytes.clone();
+    lie[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(decode_peer_sched(&lie).is_err(), "oversized token count must fail");
+    let mut wrong = bytes.clone();
+    wrong[0] = FRAME_PEER;
+    assert!(decode_peer_sched(&wrong).is_err(), "wrong kind must fail");
 }
 
 #[test]
