@@ -30,6 +30,9 @@
 //! workers (subprocess mode would re-exec this bench binary), comparing
 //! coordinator-routed delivery against both peer modes; rows are
 //! `clu/`-prefixed so the perf gate tracks the socket plane separately.
+//! Additional `inj32` rows drive the same workload with pipelined
+//! source injection (32 events per quiescence barrier, shipped as
+//! `FRAME_INJECT` batches) and the peer-routed Shuffle variant.
 //!
 //! Every row lands in `BENCH_JSON` as `tput/...` or `clu/...` — the
 //! rows the CI perf-trajectory gate (`tools/bench_compare.py`) diffs
@@ -89,7 +92,7 @@ fn run(cfg: Config, n: u64) -> f64 {
         eng.deep_copy_broadcast = cfg.baseline;
         eng.run(&topo, entry, source, |_, _, _| {});
     } else {
-        let eng = LocalEngine { measure_busy: false, deep_copy_broadcast: cfg.baseline };
+        let eng = LocalEngine { deep_copy_broadcast: cfg.baseline, ..LocalEngine::default() };
         eng.run(&topo, entry, source, |_| {});
     }
     n as f64 / t0.elapsed().as_secs_f64().max(1e-12)
@@ -147,9 +150,22 @@ fn run_flow(
 
 /// One cluster-engine run of the relay spec with thread-mode workers;
 /// returns (events/sec, coordinator data frames, peer frames).
-fn run_cluster(workers: usize, peer: PeerMode, n: u64) -> (f64, u64, u64) {
-    let (topo, entry) = cluster_spec::build(&format!("relay:p={workers}")).expect("relay spec");
-    let eng = ClusterEngine::new().with_workers(workers).with_peer(peer);
+/// `inject` > 1 batches source events into FRAME_INJECT frames;
+/// `shuffle` swaps the fwd→sink hop to peer-routed Shuffle (`g=shuffle`).
+fn run_cluster(
+    workers: usize,
+    peer: PeerMode,
+    inject: usize,
+    shuffle: bool,
+    n: u64,
+) -> (f64, u64, u64) {
+    let g = if shuffle { ":g=shuffle" } else { "" };
+    let (topo, entry) =
+        cluster_spec::build(&format!("relay:p={workers}{g}")).expect("relay spec");
+    let eng = ClusterEngine::new()
+        .with_workers(workers)
+        .with_peer(peer)
+        .with_inject_window(inject);
     let source = (0..n).map(|id| Event::Instance {
         id,
         inst: Instance::dense(vec![0.25; 8], Label::None),
@@ -379,11 +395,34 @@ fn main() {
             let label = format!("clu/relay w={workers} {peer_label}");
             let mut last = (0.0, 0, 0);
             bench(&label, 2, || {
-                last = run_cluster(workers, peer, nc);
+                last = run_cluster(workers, peer, 1, false, nc);
                 nc
             });
             let (_, data_frames, peer_frames) = last;
             println!("  {label}: coord_data_frames={data_frames} peer_frames={peer_frames}");
         }
+    }
+
+    // Pipelined injection rows: same relay workload with the source
+    // batched 32 events per quiescence barrier, plus the peer-routed
+    // Shuffle variant (fwd→sink g=shuffle, routed by the workers'
+    // seeded rr cursors). Row names are additive — the PR-9 rows above
+    // keep their names so the perf gate tracks both regimes.
+    println!("\n(pipelined injection: inject window 32, deterministic peer links)");
+    for (workers, shuffle) in [(2usize, false), (4, false), (2, true)] {
+        let shape = if shuffle { "shuffle" } else { "relay" };
+        let label = format!("clu/{shape} w={workers} peer-det inj32");
+        let mut last = (0.0, 0, 0);
+        bench(&label, 2, || {
+            last = run_cluster(workers, PeerMode::Deterministic, 32, shuffle, nc);
+            nc
+        });
+        let (_, data_frames, peer_frames) = last;
+        println!("  {label}: coord_data_frames={data_frames} peer_frames={peer_frames}");
+        assert!(
+            data_frames <= nc.div_ceil(32),
+            "{label}: expected ≤ {} batched coordinator frames, got {data_frames}",
+            nc.div_ceil(32)
+        );
     }
 }

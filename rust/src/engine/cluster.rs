@@ -129,6 +129,7 @@ use crate::topology::{Event, StreamId};
 use crate::{Context as _, Result};
 
 use super::checkpoint::{LogOrigin, ReplayLog};
+use super::config::EngineConfig;
 use super::metrics::{ClusterMetrics, EngineMetrics, PeerLinkMetrics};
 
 // Frame kinds. Every frame is `[len: u32 LE][kind: u8][wseq: u64 LE]…`;
@@ -399,6 +400,14 @@ struct PeerPlane {
     index: usize,
     /// Per stream: destination pid, grouping, delay — the routing table.
     streams: Vec<(usize, Grouping, u32)>,
+    /// Per-stream round-robin cursors, seeded from FRAME_ROUTES. Only
+    /// advanced for peer-eligible shuffle streams; the coordinator
+    /// mirrors every advance from the reply descriptors.
+    rr: Vec<usize>,
+    /// Per-stream peer-route eligibility for shuffle at parallelism > 1
+    /// (set by the coordinator only for sole-emitter streams, where the
+    /// cursor mirror stays deterministic).
+    shuffle_ok: Vec<bool>,
     /// Outgoing writer per destination worker (`None` at our own index).
     writers: Vec<Option<BufWriter<Sock>>>,
     /// Writers with unflushed frames since the last peer flush.
@@ -443,7 +452,9 @@ fn flush_peer_writers(plane: &mut Option<PeerPlane>) -> Result<()> {
 /// tagged list — tag 0 a full emission for the coordinator to route,
 /// tag 1 a descriptor for a delivery shipped worker→worker right here
 /// (one descriptor per destination instance, in local-engine fan-out
-/// order).
+/// order), tag 2 a pre-routed shuffle emission whose rr cursor already
+/// advanced but whose peer link is down (the coordinator delivers it to
+/// the chosen instance without re-routing).
 fn encode_emissions(
     b: &mut Vec<u8>,
     emissions: &[(StreamId, u64, Event)],
@@ -468,14 +479,16 @@ fn encode_emissions(
         let (dest, grouping, delay) = p.streams[s.0];
         let par = shape[dest];
         // Peer-eligible: data event, immediate stream, and a grouping we
-        // can route without global state (the shuffle cursor is global,
-        // so Shuffle qualifies only at parallelism 1).
+        // can route locally. The shuffle cursor is global state; at
+        // parallelism > 1 it routes here only when the coordinator marked
+        // the stream `shuffle_ok` (sole emitter ⇒ the coordinator can
+        // mirror our cursor advances deterministically).
+        let shuffle_peer = matches!(grouping, Grouping::Shuffle) && par > 1;
         let eligible = !e.is_control()
             && delay == 0
-            && !matches!(grouping, Grouping::Shuffle if par > 1);
+            && (!shuffle_peer || p.shuffle_ok[s.0]);
         let dests: Vec<usize> = if eligible {
-            let mut rr = 0;
-            match grouping.route(*k, par, &mut rr) {
+            match grouping.route(*k, par, &mut p.rr[s.0]) {
                 Route::One(i) => vec![i],
                 Route::All => (0..par).collect(),
             }
@@ -488,10 +501,20 @@ fn encode_emissions(
                 !down.get(d).copied().unwrap_or(false) && !p.writer_dead[d]
             });
         if !routable {
-            codec::put_u8(b, 0);
-            codec::put_u32(b, s.0 as u32);
-            codec::put_u64(b, *k);
-            codec::encode_event(e, b);
+            if shuffle_peer && !dests.is_empty() {
+                // The cursor already advanced picking dests[0]; a tag-0
+                // fallback would make the coordinator advance it again.
+                // Ship the chosen destination as a pre-routed emission.
+                codec::put_u8(b, 2);
+                codec::put_u32(b, s.0 as u32);
+                codec::put_u16(b, dests[0] as u16);
+                codec::encode_event(e, b);
+            } else {
+                codec::put_u8(b, 0);
+                codec::put_u32(b, s.0 as u32);
+                codec::put_u64(b, *k);
+                codec::encode_event(e, b);
+            }
             items += 1;
             continue;
         }
@@ -823,11 +846,14 @@ fn serve(
                     let n_workers = r.u16()? as usize;
                     let n_streams = r.u32()? as usize;
                     let mut streams = Vec::with_capacity(n_streams);
+                    let mut rr_seeds = Vec::with_capacity(n_streams);
+                    let mut shuffle_ok = Vec::with_capacity(n_streams);
                     for _ in 0..n_streams {
                         let dest = r.u16()? as usize;
                         let grouping = grouping_from_code(r.u8()?)?;
                         let delay = r.u32()?;
-                        let _rr_seed = r.u64()?;
+                        rr_seeds.push(r.u64()? as usize);
+                        shuffle_ok.push(r.u8()? != 0);
                         streams.push((dest, grouping, delay));
                     }
                     let n_addr = r.u16()? as usize;
@@ -882,6 +908,8 @@ fn serve(
                         n_workers,
                         index,
                         streams,
+                        rr: rr_seeds,
+                        shuffle_ok,
                         writers,
                         writer_dirty: vec![false; n_workers],
                         writer_dead: vec![false; n_workers],
@@ -989,6 +1017,46 @@ fn serve(
                     flush_peer_writers(&mut plane)?;
                     out.flush()?;
                     return Ok(());
+                }
+                codec::FRAME_INJECT => {
+                    // Pipelined injection: a batch of deliveries in one
+                    // frame, answered with one FRAME_INJECT_EMS reply
+                    // carrying one emission group per delivery, in batch
+                    // order. The frame occupies a single wseq slot.
+                    let (fseq, batch) = codec::decode_inject_frame(&frame)?;
+                    debug_assert_eq!(fseq, wseq);
+                    let mut b = Vec::with_capacity(16 + 24 * batch.len());
+                    codec::put_u8(&mut b, codec::FRAME_INJECT_EMS);
+                    codec::put_u64(&mut b, wseq);
+                    codec::put_u32(&mut b, batch.len() as u32);
+                    for (pid, iid, event) in batch {
+                        let (pid, iid) = (pid as usize, iid as usize);
+                        let Some(&n) = index_map.get(&(pid, iid)) else {
+                            crate::bail!("cluster worker: not my instance ({pid},{iid})");
+                        };
+                        let cell = &mut cells[n];
+                        let mut ctx = Ctx::new(iid, shape[pid]);
+                        if measure_busy {
+                            let t0 = Instant::now();
+                            cell.node.process(event, &mut ctx);
+                            cell.busy_ns += t0.elapsed().as_nanos() as u64;
+                        } else {
+                            cell.node.process(event, &mut ctx);
+                        }
+                        cell.processed += 1;
+                        let emissions = ctx.take();
+                        // Fresh `down` per delivery: a peer may die while
+                        // the batch is mid-flight.
+                        let down = if plane.is_some() {
+                            inbox.0.lock().unwrap().down.clone()
+                        } else {
+                            Vec::new()
+                        };
+                        encode_emissions(&mut b, &emissions, &mut plane, &shape, &down, &inbox)?;
+                    }
+                    flush_peer_writers(&mut plane)?;
+                    write_frame(&mut out, &b)?;
+                    dirty = true;
                 }
                 k => crate::bail!("cluster worker: unknown frame kind {k}"),
             }
@@ -1122,7 +1190,7 @@ impl Link {
 fn reply_id(buf: &[u8]) -> Result<(u8, u64, u64)> {
     let mut r = Reader::new(buf);
     match r.u8()? {
-        K_EMISSIONS => Ok((0, r.u64()?, 0)),
+        K_EMISSIONS | codec::FRAME_INJECT_EMS => Ok((0, r.u64()?, 0)),
         codec::FRAME_PEER_EMS => {
             let lseq = r.u64()?;
             let sender = r.u8()? as u64;
@@ -1132,11 +1200,15 @@ fn reply_id(buf: &[u8]) -> Result<(u8, u64, u64)> {
     }
 }
 
-/// One un-replied delivery, in global send order.
+/// One un-replied delivery (or injection batch), in global send order.
 struct Pending {
     worker: usize,
     wseq: u64,
     data: bool,
+    /// Deliveries this entry covers in window and replay-log units: 1
+    /// everywhere except FRAME_INJECT batches, where it is the batch
+    /// run length (the reply carries that many emission groups).
+    count: usize,
     /// Peer delivery: the `(sender, receiver)` link whose in-flight
     /// budget this entry holds (released when the reply lands).
     link: Option<(usize, usize)>,
@@ -1242,6 +1314,10 @@ struct Coordinator<'a> {
     delayed: VecDeque<(u64, Delivery)>,
     metrics: EngineMetrics,
     window: usize,
+    /// Source-injection window (`EngineConfig::inject_window`): the pump
+    /// coalesces up to this many consecutive same-worker data deliveries
+    /// into one FRAME_INJECT batch. 1 = classic per-event shipping.
+    inject: usize,
     buf: Vec<u8>,
     /// Recovery mode (`with_checkpoints`): per-worker replay logs, the
     /// coordinator-held snapshot frames, and the death bookkeeping.
@@ -1358,7 +1434,7 @@ impl Coordinator<'_> {
         {
             let mut r = Reader::new(&buf);
             let kind = r.u8()?;
-            if kind == K_EMISSIONS {
+            if kind == K_EMISSIONS || kind == codec::FRAME_INJECT_EMS {
                 let wseq = r.u64()?;
                 crate::ensure!(
                     wseq == pend.wseq,
@@ -1369,23 +1445,29 @@ impl Coordinator<'_> {
                 let _lseq = r.u64()?;
                 let _sender = r.u8()?;
             }
-            let n = r.u32()?;
-            for _ in 0..n {
-                if tagged && r.u8()? == 1 {
-                    self.consume_descriptor(pend.worker, &mut r, pend.discard)?;
-                    continue;
+            if kind == codec::FRAME_INJECT_EMS {
+                // Batched reply: one emission group per delivery in the
+                // FRAME_INJECT batch, in batch order.
+                let groups = r.u32()? as usize;
+                crate::ensure!(
+                    groups == pend.count,
+                    "cluster: inject reply covers {groups} deliveries, expected {}",
+                    pend.count
+                );
+                for _ in 0..groups {
+                    self.consume_emission_group(pend.worker, &mut r, tagged, pend.discard, now)?;
                 }
-                let s = StreamId(r.u32()? as usize);
-                let k = r.u64()?;
-                let e = r.event()?;
-                if !pend.discard {
-                    self.route_emission(s, k, e, now);
-                }
+            } else {
+                self.consume_emission_group(pend.worker, &mut r, tagged, pend.discard, now)?;
             }
         }
         self.buf = buf;
         if let Some(abs) = pend.log_ref {
-            self.logs[pend.worker].mark_replied(abs);
+            // A batch's log entries are consecutive (logged in one go in
+            // `ship_injected`); the reply acknowledges all of them.
+            for k in 0..pend.count as u64 {
+                self.logs[pend.worker].mark_replied(abs + k);
+            }
         }
         if let Some((a, b)) = pend.link {
             if self.peer_inflight[a][b] > 0 {
@@ -1393,8 +1475,71 @@ impl Coordinator<'_> {
             }
         }
         if pend.data {
-            self.links[pend.worker].inflight -= 1;
+            self.links[pend.worker].inflight -= pend.count;
         }
+        Ok(())
+    }
+
+    /// Consume one emission group — the `[n][emission × n]` block that
+    /// follows a reply header — routing each emission exactly where the
+    /// local engine would.
+    fn consume_emission_group(
+        &mut self,
+        worker: usize,
+        r: &mut Reader<'_>,
+        tagged: bool,
+        discard: bool,
+        now: u64,
+    ) -> Result<()> {
+        let n = r.u32()?;
+        for _ in 0..n {
+            if tagged {
+                match r.u8()? {
+                    1 => {
+                        self.consume_descriptor(worker, r, discard)?;
+                        continue;
+                    }
+                    2 => {
+                        self.consume_prerouted(r, discard)?;
+                        continue;
+                    }
+                    0 => {}
+                    t => crate::bail!("cluster: unknown emission tag {t}"),
+                }
+            }
+            let s = StreamId(r.u32()? as usize);
+            let k = r.u64()?;
+            let e = r.event()?;
+            if !discard {
+                self.route_emission(s, k, e, now);
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume one tag-2 pre-routed emission: a shuffle delivery the
+    /// worker routed itself with its seeded rr cursor but could not ship
+    /// peer-to-peer (degraded or dead destination link). The destination
+    /// instance is already chosen, so the coordinator delivers directly —
+    /// re-routing would advance the shared cursor a second time.
+    fn consume_prerouted(&mut self, r: &mut Reader<'_>, discard: bool) -> Result<()> {
+        let stream = r.u32()? as usize;
+        let iid = r.u16()? as usize;
+        let e = r.event()?;
+        if discard {
+            // Replay of an already-consumed reply: counted and enqueued
+            // the first time around.
+            return Ok(());
+        }
+        let dest_pid = self.topology.streams[stream].to.0;
+        let sm = &mut self.metrics.streams[stream];
+        sm.events += 1;
+        sm.bytes += e.wire_bytes() as u64;
+        // Mirror the worker's cursor advance so a later degradation of
+        // the sender leaves the coordinator's fallback cursor in step.
+        self.rr[stream] = self.rr[stream].wrapping_add(1);
+        // Eligible streams have delay == 0, so this never buffers.
+        self.queue.push_back(QItem::Normal((dest_pid, iid, e)));
         Ok(())
     }
 
@@ -1431,6 +1576,13 @@ impl Coordinator<'_> {
         st.wire_bytes += wire;
         let lseq = self.peer_lseq[sender][dest_worker];
         self.peer_lseq[sender][dest_worker] += 1;
+        // Shuffle descriptors: the worker advanced its seeded rr cursor
+        // to pick this destination (Shuffle ⇒ Route::One ⇒ exactly one
+        // descriptor per emission). Mirror the advance so the coordinator
+        // cursor stays in step for degraded-sender fallback routing.
+        if matches!(self.topology.streams[stream].grouping, Grouping::Shuffle) {
+            self.rr[stream] = self.rr[stream].wrapping_add(1);
+        }
         if self.peer_off[dest_worker] {
             // The destination died after the sender shipped this: the
             // peer frame is gone with the dead socket, but recovery mode
@@ -1500,6 +1652,92 @@ impl Coordinator<'_> {
             worker: w,
             wseq,
             data: !ctrl,
+            count: 1,
+            link: None,
+            peer_key: None,
+            log_ref,
+            discard: false,
+        });
+        Ok(())
+    }
+
+    /// Ship one data delivery plus any consecutive same-worker data
+    /// deliveries at the head of the queue as one FRAME_INJECT batch
+    /// (pipelined injection, `inject_window > 1`). The whole batch costs
+    /// one wire frame and one reply round-trip; it occupies `count`
+    /// window slots and `count` replay-log entries, so backpressure and
+    /// recovery see exactly the same deliveries as per-event shipping.
+    fn ship_injected(&mut self, first: Delivery, now: u64) -> Result<()> {
+        let w = worker_of(first.1, self.links.len());
+        // Block on the window as `ship` does, but keep the head delivery
+        // re-queueable: recovery re-enters pump and must find it again.
+        while self.links[w].inflight >= self.window {
+            self.metrics.flow.backpressure_stalls += 1;
+            let t0 = Instant::now();
+            if let Err(e) = self.consume_one(now) {
+                self.queue.push_front(QItem::Normal(first));
+                return Err(e);
+            }
+            self.metrics.flow.backpressure_stall_ns += t0.elapsed().as_nanos() as u64;
+        }
+        // Gather the run: consecutive normal data deliveries for the
+        // same worker, up to the inject window and the free window slots.
+        let cap = self.inject.min(self.window - self.links[w].inflight).max(1);
+        let n_links = self.links.len();
+        let mut batch: Vec<(u16, u16, Event)> = vec![(first.0 as u16, first.1 as u16, first.2)];
+        while batch.len() < cap {
+            let same_run = matches!(
+                self.queue.front(),
+                Some(QItem::Normal((_, i, e))) if !e.is_control() && worker_of(*i, n_links) == w
+            );
+            if !same_run {
+                break;
+            }
+            let Some(QItem::Normal((p, i, e))) = self.queue.pop_front() else { unreachable!() };
+            batch.push((p as u16, i as u16, e));
+        }
+        if batch.len() == 1 {
+            // Run length 1: the plain per-event frame is smaller and
+            // keeps the legacy wire trace byte-identical.
+            let (p, i, e) = batch.pop().unwrap();
+            return self.ship((p as usize, i as usize, e), now);
+        }
+        let count = batch.len();
+        let link = &mut self.links[w];
+        let wseq = link.wseq;
+        link.wseq += 1;
+        let b = codec::encode_inject_frame(wseq, &batch);
+        if let Err(err) = link.send(&b, false, &mut self.metrics.cluster) {
+            self.dead = Some(w);
+            return Err(err);
+        }
+        self.links[w].inflight += count;
+        self.metrics.flow.inject_frames += 1;
+        self.metrics.flow.inject_events += count as u64;
+        let log_ref = if self.recovery_on {
+            // Log each delivery individually (consecutive abs indices);
+            // recovery re-drives survivors as ordinary per-event frames.
+            let mut base: Option<u64> = None;
+            for (p, i, e) in batch {
+                let (abs, dropped) = self.logs[w].push(
+                    LogEntry { pid: p as usize, iid: i as usize, event: e, ctrl: false },
+                    LogOrigin::Coordinator,
+                    self.replay_cap,
+                );
+                if dropped {
+                    self.metrics.recovery.replay_dropped += 1;
+                }
+                base.get_or_insert(abs);
+            }
+            base
+        } else {
+            None
+        };
+        self.outstanding.push_back(Pending {
+            worker: w,
+            wseq,
+            data: true,
+            count,
             link: None,
             peer_key: None,
             log_ref,
@@ -1572,6 +1810,7 @@ impl Coordinator<'_> {
                     worker: b,
                     wseq: slot,
                     data: true,
+                    count: 1,
                     link: Some((a, b)),
                     peer_key: None,
                     log_ref,
@@ -1583,6 +1822,7 @@ impl Coordinator<'_> {
                     worker: b,
                     wseq: 0,
                     data: true,
+                    count: 1,
                     link: Some((a, b)),
                     peer_key: Some((a as u8, m.lseq)),
                     log_ref,
@@ -1600,7 +1840,13 @@ impl Coordinator<'_> {
         loop {
             while let Some(item) = self.queue.pop_front() {
                 match item {
-                    QItem::Normal(d) => self.ship(d, now)?,
+                    QItem::Normal(d) => {
+                        if self.inject > 1 && !d.2.is_control() {
+                            self.ship_injected(d, now)?;
+                        } else {
+                            self.ship(d, now)?;
+                        }
+                    }
                     QItem::Peer(m) => self.ship_marker(m, now)?,
                 }
             }
@@ -1790,6 +2036,7 @@ impl Coordinator<'_> {
                 worker: w,
                 wseq,
                 data: false, // inflight was never bumped for this re-send
+                count: 1,
                 link: None,
                 peer_key: None,
                 log_ref: None,
@@ -1805,44 +2052,18 @@ impl Coordinator<'_> {
 
 /// Multi-process (or multi-thread-over-sockets) execution engine. See
 /// the module docs for the architecture and determinism contract.
+///
+/// All knobs live on the unified [`EngineConfig`]; the `with_*` methods
+/// below are thin forwarding wrappers kept for call-site compatibility
+/// (and `samoa exp` ergonomics). Build from a shared config with
+/// [`ClusterEngine::from_config`].
 pub struct ClusterEngine {
-    /// Worker shards to spread processor instances across.
-    pub workers: usize,
-    /// Max un-acknowledged data deliveries per worker before the
-    /// coordinator blocks (bounded-buffer backpressure at the socket).
-    pub window: usize,
-    /// Measure per-event `process()` wall time worker-side (reported
-    /// back in the collect phase).
-    pub measure_busy: bool,
-    /// Subprocess mode only: TCP loopback instead of Unix sockets.
-    pub tcp: bool,
-    /// Recovery mode: snapshot every worker every N source events and
-    /// keep per-worker replay logs, so a worker that dies mid-run is
-    /// respawned and re-driven instead of failing the run (0 = off).
-    pub checkpoint_every: u64,
-    /// Bound of each per-worker replay log, in deliveries.
-    pub replay_cap: usize,
-    /// Subprocess mode: seconds to wait for worker handshakes before
-    /// failing the run (overridable via `SAMOA_CLUSTER_ACCEPT_SECS` for
-    /// loaded CI runners).
-    pub accept_secs: u64,
-    /// Worker↔worker data plane (see the module docs): off, slot-
-    /// scheduled deterministic, or relaxed-order fast.
-    pub peer: PeerMode,
+    cfg: EngineConfig,
 }
 
 impl Default for ClusterEngine {
     fn default() -> Self {
-        ClusterEngine {
-            workers: 2,
-            window: 128,
-            measure_busy: false,
-            tcp: false,
-            checkpoint_every: 0,
-            replay_cap: 65536,
-            accept_secs: 30,
-            peer: PeerMode::Off,
-        }
+        ClusterEngine { cfg: EngineConfig::default() }
     }
 }
 
@@ -1851,18 +2072,50 @@ impl ClusterEngine {
         Self::default()
     }
 
+    /// Build from the unified [`EngineConfig`]. Reads `workers`,
+    /// `window`, `inject_window`, `checkpoint_every`, `replay_cap`,
+    /// `peer`, `accept_secs`, `tcp` and `measure_busy`; threaded-only
+    /// knobs (channels, batching, fault injection) do not apply here.
+    pub fn from_config(cfg: &EngineConfig) -> Self {
+        ClusterEngine { cfg: cfg.clone() }
+    }
+
+    /// Worker shards (`EngineConfig::workers`; `None` = 2 shards).
+    fn n_workers(&self) -> usize {
+        self.cfg.workers.unwrap_or(2).max(1)
+    }
+
     pub fn with_workers(mut self, n: usize) -> Self {
-        self.workers = n.max(1);
+        self.cfg.workers = Some(n.max(1));
         self
     }
 
+    /// Max un-acknowledged data deliveries per worker before the
+    /// coordinator blocks (bounded-buffer backpressure at the socket).
     pub fn with_window(mut self, n: usize) -> Self {
-        self.window = n.max(1);
+        self.cfg.window = n.max(1);
         self
     }
 
+    /// Pipelined source injection: up to `n` source events are injected
+    /// per quiescence barrier, and each batch's same-worker runs ship
+    /// as single `FRAME_INJECT` frames instead of per-event round
+    /// trips. 1 (the default) is the classic per-event pump.
+    pub fn with_inject_window(mut self, n: usize) -> Self {
+        self.cfg.inject_window = n.max(1);
+        self
+    }
+
+    /// Subprocess mode only: TCP loopback instead of Unix sockets.
     pub fn over_tcp(mut self) -> Self {
-        self.tcp = true;
+        self.cfg.tcp = true;
+        self
+    }
+
+    /// Measure per-event `process()` wall time worker-side (reported
+    /// back in the collect phase).
+    pub fn with_measure_busy(mut self, on: bool) -> Self {
+        self.cfg.measure_busy = on;
         self
     }
 
@@ -1871,7 +2124,7 @@ impl ClusterEngine {
     /// logs, so one worker death per worker is repaired in place
     /// instead of failing the run. 0 disables recovery.
     pub fn with_checkpoints(mut self, every: u64) -> Self {
-        self.checkpoint_every = every;
+        self.cfg.checkpoint_every = every;
         self
     }
 
@@ -1879,14 +2132,15 @@ impl ClusterEngine {
     /// covering checkpoint count in `recovery.replay_dropped` and void
     /// the bit-identical recovery guarantee for that worker.
     pub fn with_replay_cap(mut self, cap: usize) -> Self {
-        self.replay_cap = cap.max(1);
+        self.cfg.replay_cap = cap.max(1);
         self
     }
 
     /// Subprocess mode: seconds to wait for worker handshakes (spawn and
-    /// respawn) before failing the run.
+    /// respawn) before failing the run (overridable via
+    /// `SAMOA_CLUSTER_ACCEPT_SECS` for loaded CI runners).
     pub fn with_accept_timeout(mut self, secs: u64) -> Self {
-        self.accept_secs = secs.max(1);
+        self.cfg.accept_secs = secs.max(1);
         self
     }
 
@@ -1896,7 +2150,7 @@ impl ClusterEngine {
     /// peer-to-peer); [`PeerMode::Fast`] also relaxes the cross-link
     /// ordering at each receiver.
     pub fn with_peer(mut self, mode: PeerMode) -> Self {
-        self.peer = mode;
+        self.cfg.peer = mode;
         self
     }
 
@@ -1909,7 +2163,7 @@ impl ClusterEngine {
         entry: StreamId,
         source: impl Iterator<Item = Event>,
     ) -> Result<ClusterRun> {
-        let n_workers = self.workers.max(1);
+        let n_workers = self.n_workers();
         let shape: Vec<usize> = topology.processors.iter().map(|p| p.parallelism).collect();
         let mut per_worker: Vec<Vec<(usize, usize, Box<dyn Processor>)>> =
             (0..n_workers).map(|_| Vec::new()).collect();
@@ -1921,7 +2175,7 @@ impl ClusterEngine {
         // Peer mode, thread flavor: pre-connect the full worker↔worker
         // mesh with socket pairs; each worker receives its row (its own
         // slot stays `None` — self-links never touch a socket).
-        let peer_on = self.peer != PeerMode::Off;
+        let peer_on = self.cfg.peer != PeerMode::Off;
         let mut mesh: Vec<Vec<Option<Sock>>> = if peer_on {
             (0..n_workers).map(|_| (0..n_workers).map(|_| None).collect()).collect()
         } else {
@@ -1943,7 +2197,7 @@ impl ClusterEngine {
             let (c0, c1) = UnixStream::pair().context("cluster: socketpair")?;
             let (d0, d1) = UnixStream::pair().context("cluster: socketpair")?;
             let shape2 = shape.clone();
-            let measure = self.measure_busy;
+            let measure = self.cfg.measure_busy;
             let pinit = if peer_on {
                 PeerInit::Mesh(std::mem::take(&mut mesh[wi]))
             } else {
@@ -1959,7 +2213,7 @@ impl ClusterEngine {
         // shard from the factories, serve it on fresh socket pairs. The
         // replacement starts blank — and always peer-less: the coordinator
         // has already degraded this shard to coordinator routing.
-        let measure = self.measure_busy;
+        let measure = self.cfg.measure_busy;
         let mut respawn = |w: usize| -> Result<Link> {
             if let Some(h) = handles[w].take() {
                 let _ = h.join();
@@ -2003,14 +2257,14 @@ impl ClusterEngine {
         source: impl Iterator<Item = Event>,
     ) -> Result<ClusterRun> {
         let (topology, entry) = spec::build(spec_str)?;
-        let n_workers = self.workers.max(1);
+        let n_workers = self.n_workers();
         let exe = std::env::current_exe().context("cluster: locate samoa binary")?;
 
         enum Listener {
             Unix(UnixListener, std::path::PathBuf),
             Tcp(TcpListener),
         }
-        let (listener, addr) = if self.tcp {
+        let (listener, addr) = if self.cfg.tcp {
             let l = TcpListener::bind("127.0.0.1:0").context("cluster: bind tcp")?;
             let addr = format!("tcp:{}", l.local_addr()?);
             (Listener::Tcp(l), addr)
@@ -2043,7 +2297,7 @@ impl ClusterEngine {
                 .arg(k.to_string())
                 .arg("--cluster-workers")
                 .arg(n_workers.to_string());
-            if self.measure_busy {
+            if self.cfg.measure_busy {
                 cmd.arg("--cluster-measure");
             }
             if peer {
@@ -2052,7 +2306,7 @@ impl ClusterEngine {
             cmd.stderr(std::process::Stdio::piped());
             cmd.spawn().context("cluster: spawn worker process")
         };
-        let peer_on = self.peer != PeerMode::Off;
+        let peer_on = self.cfg.peer != PeerMode::Off;
         let mut children = Vec::with_capacity(n_workers);
         for k in 0..n_workers {
             children.push(spawn_worker(spec_str, k, peer_on)?);
@@ -2111,7 +2365,7 @@ impl ClusterEngine {
         let accept_secs = std::env::var("SAMOA_CLUSTER_ACCEPT_SECS")
             .ok()
             .and_then(|v| v.parse::<u64>().ok())
-            .unwrap_or(self.accept_secs)
+            .unwrap_or(self.cfg.accept_secs)
             .max(1);
         let deadline = Instant::now() + std::time::Duration::from_secs(accept_secs);
         let setup = (|| -> Result<()> {
@@ -2136,7 +2390,7 @@ impl ClusterEngine {
         // Recovery mode keeps the listener address connectable so a
         // respawned worker can dial back in; otherwise the Unix path is
         // removed as soon as the initial handshakes are in.
-        let recovery_on = self.checkpoint_every > 0;
+        let recovery_on = self.cfg.checkpoint_every > 0;
         if !recovery_on {
             if let Listener::Unix(_, path) = &listener {
                 let _ = std::fs::remove_file(path);
@@ -2241,15 +2495,16 @@ impl ClusterEngine {
             queue: VecDeque::new(),
             delayed: VecDeque::new(),
             metrics,
-            window: self.window.max(1),
+            window: self.cfg.window.max(1),
+            inject: self.cfg.inject_window.max(1),
             buf: Vec::new(),
-            recovery_on: self.checkpoint_every > 0,
-            replay_cap: self.replay_cap.max(1),
+            recovery_on: self.cfg.checkpoint_every > 0,
+            replay_cap: self.cfg.replay_cap.max(1),
             logs: (0..n_workers).map(|_| ReplayLog::new()).collect(),
             store: super::checkpoint::CheckpointStore::new(),
             dead: None,
             respawned: vec![false; n_workers],
-            peer: self.peer,
+            peer: self.cfg.peer,
             peer_off: vec![false; n_workers],
             peer_inflight: vec![vec![0; n_workers]; n_workers],
             peer_lseq: vec![vec![0; n_workers]; n_workers],
@@ -2268,21 +2523,36 @@ impl ClusterEngine {
         // bring up their peer mesh on receipt; from then on, eligible
         // emissions ship worker→worker and only reply descriptors cross
         // the coordinator.
-        if self.peer != PeerMode::Off {
-            let mut b = Vec::with_capacity(32 + 19 * topology.streams.len());
+        if self.cfg.peer != PeerMode::Off {
+            let mut b = Vec::with_capacity(32 + 20 * topology.streams.len());
             codec::put_u8(&mut b, codec::FRAME_ROUTES);
             codec::put_u64(&mut b, 0);
-            codec::put_u8(&mut b, if self.peer == PeerMode::Deterministic { 1 } else { 2 });
+            codec::put_u8(&mut b, if self.cfg.peer == PeerMode::Deterministic { 1 } else { 2 });
             codec::put_u8(&mut b, u8::from(co.recovery_on));
             codec::put_u16(&mut b, n_workers as u16);
             codec::put_u32(&mut b, topology.streams.len() as u32);
-            for def in &topology.streams {
+            for (s, def) in topology.streams.iter().enumerate() {
                 codec::put_u16(&mut b, def.to.0 as u16);
                 codec::put_u8(&mut b, grouping_code(def.grouping));
                 codec::put_u32(&mut b, def.delay as u32);
-                // rr-cursor seed, reserved: shuffle streams peer-route
-                // only at parallelism 1, where the cursor is irrelevant.
-                codec::put_u64(&mut b, 0);
+                // rr-cursor seed: workers route shuffle streams locally
+                // from this cursor; the coordinator mirrors every advance
+                // (descriptor replies + its own routes) so the seed is
+                // live, not reserved. Always 0 at startup today, but a
+                // respawn-era rebroadcast would carry the current value.
+                codec::put_u64(&mut b, co.rr[s] as u64);
+                // Peer-route eligibility: shuffle at parallelism > 1 is
+                // safe only when exactly one emitter feeds the stream
+                // (the coordinator's mirror cannot interleave multiple
+                // workers' cursor advances deterministically otherwise).
+                let sole_emitter =
+                    def.from.map_or(false, |p| topology.processors[p.0].parallelism == 1);
+                let par = topology.processors[def.to.0].parallelism;
+                let eligible = matches!(def.grouping, Grouping::Shuffle)
+                    && par > 1
+                    && def.delay == 0
+                    && sole_emitter;
+                codec::put_u8(&mut b, u8::from(eligible));
             }
             codec::put_u16(&mut b, peer_addrs.len() as u16);
             for a in peer_addrs {
@@ -2304,12 +2574,33 @@ impl ClusterEngine {
         // once per worker per run — and retries the cascade; outside
         // recovery mode (or during shutdown/collect, a documented
         // non-goal) the error is fatal as before.
-        for event in source {
-            co.metrics.source_instances += 1;
+        //
+        // Pipelined injection: up to `inject_window` source events are
+        // routed per quiescence barrier, so the pump sees runs of
+        // same-worker deliveries it can coalesce into FRAME_INJECT
+        // batches. At the default window of 1 this is exactly the
+        // classic inject-drain-inject loop.
+        let inject = self.cfg.inject_window.max(1);
+        let every = self.cfg.checkpoint_every;
+        let mut source = source;
+        loop {
+            let batch_start = co.metrics.source_instances;
+            let mut injected = 0usize;
+            while injected < inject {
+                let Some(event) = source.next() else { break };
+                co.metrics.source_instances += 1;
+                let now = co.metrics.source_instances;
+                co.release_delayed(now);
+                co.route_emission(entry, 0, event, now);
+                injected += 1;
+            }
+            if injected == 0 {
+                break;
+            }
             let now = co.metrics.source_instances;
-            co.release_delayed(now);
-            co.route_emission(entry, 0, event, now);
-            let ckpt = co.recovery_on && now % self.checkpoint_every == 0;
+            // Checkpoint when the batch crossed a multiple of `every`
+            // (reduces to `now % every == 0` at inject_window 1).
+            let ckpt = co.recovery_on && now / every > batch_start / every;
             let step = |co: &mut Coordinator| {
                 co.pump(now)?;
                 if ckpt {
@@ -2359,6 +2650,7 @@ impl ClusterEngine {
                     worker: w,
                     wseq,
                     data: false,
+                    count: 1,
                     link: None,
                     peer_key: None,
                     log_ref: None,
@@ -2656,7 +2948,7 @@ pub mod spec {
                 let entry = b.stream("entry", None, sink, Grouping::Shuffle);
                 Ok((b.build(), entry))
             }
-            // relay:p=K[:die=N:victim=I] — entry --shuffle--> fwd(p=1)
+            // relay:p=K[:die=N:victim=I][:g=key|shuffle] — entry --shuffle--> fwd(p=1)
             // --key--> sink×K. The fwd→sink Key stream is peer-eligible,
             // so under `--peer` this spec carries worker↔worker traffic
             // (including to a dying victim — the recovery-smoke workload).
@@ -2664,6 +2956,14 @@ pub mod spec {
                 let p = usize_param(spec, "p", 2);
                 let die = u64_param(spec, "die", 0);
                 let victim = usize_param(spec, "victim", 0);
+                // g=shuffle swaps the fwd→sink grouping: fwd has
+                // parallelism 1 (sole emitter), so the shuffle stream is
+                // peer-eligible via the seeded rr cursor under `--peer`.
+                let g = match param(spec, "g").as_deref() {
+                    None | Some("key") => Grouping::Key,
+                    Some("shuffle") => Grouping::Shuffle,
+                    Some(other) => crate::bail!("cluster spec: unknown relay grouping '{other}'"),
+                };
                 let mut b = TopologyBuilder::new("cluster-relay");
                 let fired = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
                 let fwd = b.add_processor("fwd", 1, |_| {
@@ -2674,7 +2974,7 @@ pub mod spec {
                     Box::new(NullSink { seen: 0, die_at, fired: std::sync::Arc::clone(&fired) })
                 });
                 let entry = b.stream("entry", None, fwd, Grouping::Shuffle);
-                b.stream("fwd->sink", Some(fwd), sink, Grouping::Key);
+                b.stream("fwd->sink", Some(fwd), sink, g);
                 Ok((b.build(), entry))
             }
             // vht:stream=S:p=K:seed=N — the paper's VHT classifier over a
@@ -2945,6 +3245,90 @@ mod tests {
         // entry injections are the only coordinator data-lane traffic;
         // every fwd->sink delivery went worker->worker.
         assert_eq!(run.metrics.cluster.data_frames, 100);
+        assert_eq!(run.metrics.cluster.peer_frames(), 100);
+    }
+
+    #[test]
+    fn inject_window_batches_data_frames_and_stays_exact() {
+        let (topo, entry) = two_stage();
+        let local = super::super::LocalEngine::new().with_inject_window(8).run(
+            &topo,
+            entry,
+            (0..257).map(inst_event),
+            |_| {},
+        );
+        let (topo2, entry2) = two_stage();
+        let run = ClusterEngine::new()
+            .with_workers(2)
+            .with_inject_window(8)
+            .run(&topo2, entry2, (0..257).map(inst_event))
+            .expect("cluster run");
+        for (s, (a, b)) in local.streams.iter().zip(&run.metrics.streams).enumerate() {
+            assert_eq!(a.events, b.events, "stream {s} events");
+            assert_eq!(a.bytes, b.bytes, "stream {s} bytes");
+        }
+        assert_eq!(run.kv(0, 0, "seen"), Some(257.0));
+        let downstream: f64 = (0..3).map(|i| run.kv(1, i, "seen").unwrap()).sum();
+        assert_eq!(downstream, 257.0);
+        // Per-event shipping would cost 514 data frames (257 source +
+        // 257 a->c); batching coalesces same-worker runs.
+        assert!(run.metrics.flow.inject_frames > 0, "expected FRAME_INJECT batches");
+        assert!(run.metrics.flow.inject_events > 0);
+        assert!(
+            run.metrics.cluster.data_frames < 514,
+            "batched run still shipped {} data frames",
+            run.metrics.cluster.data_frames
+        );
+    }
+
+    #[test]
+    fn relay_shuffle_peer_routes_with_seeded_cursor() {
+        // g=shuffle at p=2 with a sole emitter: the fwd worker routes
+        // via its seeded rr cursor and ships peer-to-peer; the split is
+        // the local engine's deterministic round-robin (50/50).
+        let (topo, entry) = spec::build("relay:p=2:g=shuffle").expect("relay spec");
+        let local = super::super::LocalEngine::new().run(
+            &topo,
+            entry,
+            (0..100).map(inst_event),
+            |_| {},
+        );
+        let (topo2, entry2) = spec::build("relay:p=2:g=shuffle").expect("relay spec");
+        let run = ClusterEngine::new()
+            .with_workers(2)
+            .with_peer(PeerMode::Deterministic)
+            .run(&topo2, entry2, (0..100).map(inst_event))
+            .expect("peer cluster run");
+        for (s, (a, b)) in local.streams.iter().zip(&run.metrics.streams).enumerate() {
+            assert_eq!(a.events, b.events, "stream {s} events");
+            assert_eq!(a.bytes, b.bytes, "stream {s} bytes");
+        }
+        assert_eq!(run.kv(0, 0, "relayed"), Some(100.0));
+        assert_eq!(run.kv(1, 0, "seen"), Some(50.0));
+        assert_eq!(run.kv(1, 1, "seen"), Some(50.0));
+        // The shuffle hop rides the peer plane, not the coordinator.
+        assert_eq!(run.metrics.cluster.data_frames, 100);
+        assert_eq!(run.metrics.cluster.peer_frames(), 100);
+    }
+
+    #[test]
+    fn inject_window_with_peer_shuffle_bounds_coordinator_frames() {
+        let (topo, entry) = spec::build("relay:p=2:g=shuffle").expect("relay spec");
+        let run = ClusterEngine::new()
+            .with_workers(2)
+            .with_peer(PeerMode::Deterministic)
+            .with_inject_window(8)
+            .run(&topo, entry, (0..100).map(inst_event))
+            .expect("peer cluster run");
+        let downstream: f64 = (0..2).map(|i| run.kv(1, i, "seen").unwrap()).sum();
+        assert_eq!(downstream, 100.0);
+        // All 100 source events target fwd instance 0 (one worker), so
+        // every injection barrier ships exactly one FRAME_INJECT batch:
+        // ceil(100/8) = 13 coordinator data frames for the whole run.
+        assert_eq!(run.metrics.cluster.data_frames, 13);
+        assert_eq!(run.metrics.flow.inject_frames, 13);
+        assert_eq!(run.metrics.flow.inject_events, 100);
+        // The fwd->sink deliveries still all flow worker->worker.
         assert_eq!(run.metrics.cluster.peer_frames(), 100);
     }
 }

@@ -1,0 +1,284 @@
+//! One configuration surface for every engine.
+//!
+//! Before this module each engine grew its own `with_*` knob set —
+//! `with_batch`/`with_workers` on [`super::ThreadedEngine`],
+//! `with_window`/`with_peer`/`with_accept_timeout` on
+//! [`super::ClusterEngine`], no-op parity stubs on [`super::LocalEngine`] —
+//! and every new knob had to be copied into three builders (plus a CLI
+//! parser). [`EngineConfig`] is the single owner of all of them: harness
+//! code builds one config, hands it to whichever engine it chose via
+//! `from_config`, and the engine reads the fields it understands while
+//! ignoring the rest. The per-engine `with_*` methods survive as thin
+//! forwarding wrappers, so existing call sites compile unchanged.
+//!
+//! [`EngineConfig::parse`] covers the spec-string path (`samoa exp
+//! cluster` CLI, scripted sweeps): a comma-separated `key=value` list
+//! such as `"workers=4,window=256,inject=32,peer=det,tcp"`.
+//!
+//! Knob ownership at a glance (✓ = read by that engine):
+//!
+//! | knob                | Local | Threaded | Cluster |
+//! |---------------------|-------|----------|---------|
+//! | `queue_capacity`    |       | ✓        |         |
+//! | `batch_size`/`adaptive_batch` | | ✓    |         |
+//! | `workers`           |       | ✓        | ✓       |
+//! | `window`            |       |          | ✓       |
+//! | `inject_window`     | ✓     |          | ✓       |
+//! | `checkpoint_every`  |       | ✓        | ✓       |
+//! | `replay_cap`        |       | ✓        | ✓       |
+//! | `fault`             |       | ✓        |         |
+//! | `restore_frames`    |       | ✓        |         |
+//! | `peer`              |       |          | ✓       |
+//! | `accept_secs`/`tcp` |       |          | ✓       |
+//! | `measure_busy`      | ✓     |          | ✓       |
+//! | `deep_copy_broadcast` | ✓   | ✓        |         |
+
+use super::cluster::PeerMode;
+use crate::Result;
+
+/// Unified engine configuration. Defaults mirror [`super::ClusterEngine`]
+/// where the engines historically disagreed (`replay_cap` 65536; the
+/// threaded engine's own `Default` keeps its 4096) and the local/threaded
+/// engines elsewhere. `workers: None` means "engine default": one thread
+/// per instance on the threaded engine, 2 shards on the cluster engine.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Threaded: bound of each data channel, in batches.
+    pub queue_capacity: usize,
+    /// Threaded: micro-batch size (cap, when `adaptive_batch`).
+    pub batch_size: usize,
+    /// Threaded: adapt per-edge batch sizes.
+    pub adaptive_batch: bool,
+    /// Threaded: work-stealing worker count. Cluster: worker shards.
+    /// `None` = engine default (pinned threads / 2 shards).
+    pub workers: Option<usize>,
+    /// Cluster: max un-acknowledged data deliveries per worker.
+    pub window: usize,
+    /// Local + cluster: source events injected per quiescence barrier.
+    /// 1 (default) reproduces the classic inject-drain-inject loop; the
+    /// cluster engine additionally coalesces each batch's same-worker
+    /// runs into `FRAME_INJECT` wire frames (pipelined injection).
+    pub inject_window: usize,
+    /// Checkpoint every N events (0 = recovery off).
+    pub checkpoint_every: u64,
+    /// Bound of each replay log, in deliveries.
+    pub replay_cap: usize,
+    /// Threaded: fault injection `(pid, iid, kill after N events)`.
+    pub fault: Option<(usize, usize, u64)>,
+    /// Threaded: checkpoint frames applied at startup (rescale seeding).
+    pub restore_frames: Vec<(usize, usize, Vec<u8>)>,
+    /// Cluster: worker↔worker data plane mode.
+    pub peer: PeerMode,
+    /// Cluster subprocess mode: handshake deadline in seconds.
+    pub accept_secs: u64,
+    /// Cluster subprocess mode: TCP loopback instead of Unix sockets.
+    pub tcp: bool,
+    /// Instrument `process()` calls with wall-clock timing.
+    pub measure_busy: bool,
+    /// Bench baseline only: deep-copy broadcast deliveries.
+    pub deep_copy_broadcast: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            queue_capacity: 1024,
+            batch_size: 32,
+            adaptive_batch: true,
+            workers: None,
+            window: 128,
+            inject_window: 1,
+            checkpoint_every: 0,
+            replay_cap: 65536,
+            fault: None,
+            restore_frames: Vec::new(),
+            peer: PeerMode::Off,
+            accept_secs: 30,
+            tcp: false,
+            measure_busy: false,
+            deep_copy_broadcast: false,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fixed data-plane micro-batch size (adaptation off; threaded).
+    pub fn with_batch(mut self, batch_size: usize) -> Self {
+        self.batch_size = batch_size.max(1);
+        self.adaptive_batch = false;
+        self
+    }
+
+    /// Adaptive micro-batching with the given cap (threaded).
+    pub fn with_adaptive_batch(mut self, cap: usize) -> Self {
+        self.batch_size = cap.max(1);
+        self.adaptive_batch = true;
+        self
+    }
+
+    /// Unbounded data channels (threaded bench baseline).
+    pub fn unbounded(mut self) -> Self {
+        self.queue_capacity = usize::MAX;
+        self
+    }
+
+    /// Worker count: stealing workers (threaded) or shards (cluster).
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = Some(n.max(1));
+        self
+    }
+
+    /// Cluster socket in-flight window.
+    pub fn with_window(mut self, n: usize) -> Self {
+        self.window = n.max(1);
+        self
+    }
+
+    /// Source-injection window: events injected per quiescence barrier
+    /// (local + cluster; 1 = classic per-event injection).
+    pub fn with_inject_window(mut self, n: usize) -> Self {
+        self.inject_window = n.max(1);
+        self
+    }
+
+    /// Checkpoint every `every` events (0 = recovery off).
+    pub fn with_checkpoints(mut self, every: u64) -> Self {
+        self.checkpoint_every = every;
+        self
+    }
+
+    /// Bound of each replay log.
+    pub fn with_replay_cap(mut self, cap: usize) -> Self {
+        self.replay_cap = cap.max(1);
+        self
+    }
+
+    /// Threaded fault injection: kill `(pid, iid)` after `after` events.
+    pub fn with_fault(mut self, pid: usize, iid: usize, after: u64) -> Self {
+        self.fault = Some((pid, iid, after.max(1)));
+        self
+    }
+
+    /// Threaded rescale seeding: checkpoint frames applied at startup.
+    pub fn with_restore(mut self, frames: Vec<(usize, usize, Vec<u8>)>) -> Self {
+        self.restore_frames = frames;
+        self
+    }
+
+    /// Cluster worker↔worker data plane mode.
+    pub fn with_peer(mut self, mode: PeerMode) -> Self {
+        self.peer = mode;
+        self
+    }
+
+    /// Cluster subprocess handshake deadline.
+    pub fn with_accept_timeout(mut self, secs: u64) -> Self {
+        self.accept_secs = secs.max(1);
+        self
+    }
+
+    /// Cluster subprocess mode over TCP loopback.
+    pub fn over_tcp(mut self) -> Self {
+        self.tcp = true;
+        self
+    }
+
+    /// Instrument `process()` calls with wall-clock timing.
+    pub fn with_measure_busy(mut self, on: bool) -> Self {
+        self.measure_busy = on;
+        self
+    }
+
+    /// Parse a comma-separated `key=value` spec, e.g.
+    /// `"workers=4,window=256,inject=32,peer=det,tcp"`. Bare `tcp`,
+    /// `busy` and `peer` tokens act as flags (`peer` alone = `peer=det`);
+    /// an empty string yields the default config. Unknown keys fail
+    /// loudly so a typo cannot silently fall back to a default.
+    pub fn parse(spec: &str) -> Result<EngineConfig> {
+        let mut cfg = EngineConfig::default();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (k, v) = match tok.split_once('=') {
+                Some((k, v)) => (k.trim(), Some(v.trim())),
+                None => (tok, None),
+            };
+            let uint = |v: Option<&str>| -> Result<u64> {
+                v.ok_or_else(|| crate::anyhow!("engine config: '{k}' needs a value"))?
+                    .parse::<u64>()
+                    .map_err(|_| crate::anyhow!("engine config: bad number in '{tok}'"))
+            };
+            match k {
+                "workers" => cfg.workers = Some((uint(v)? as usize).max(1)),
+                "window" => cfg.window = (uint(v)? as usize).max(1),
+                "inject" | "inject_window" => cfg.inject_window = (uint(v)? as usize).max(1),
+                "batch" => {
+                    cfg.batch_size = (uint(v)? as usize).max(1);
+                    cfg.adaptive_batch = false;
+                }
+                "adaptive" => {
+                    cfg.batch_size = (uint(v)? as usize).max(1);
+                    cfg.adaptive_batch = true;
+                }
+                "queue" => cfg.queue_capacity = (uint(v)? as usize).max(1),
+                "ckpt" | "checkpoint" => cfg.checkpoint_every = uint(v)?,
+                "replay" | "replay_cap" => cfg.replay_cap = (uint(v)? as usize).max(1),
+                "accept" => cfg.accept_secs = uint(v)?.max(1),
+                "peer" => cfg.peer = PeerMode::parse(Some(v.unwrap_or("det")))?,
+                "tcp" => cfg.tcp = true,
+                "busy" => cfg.measure_busy = true,
+                other => crate::bail!("engine config: unknown key '{other}' in '{spec}'"),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let cfg =
+            EngineConfig::parse("workers=4,window=256,inject=32,peer=fast,tcp,ckpt=64,replay=128")
+                .expect("parse");
+        assert_eq!(cfg.workers, Some(4));
+        assert_eq!(cfg.window, 256);
+        assert_eq!(cfg.inject_window, 32);
+        assert_eq!(cfg.peer, PeerMode::Fast);
+        assert!(cfg.tcp);
+        assert_eq!(cfg.checkpoint_every, 64);
+        assert_eq!(cfg.replay_cap, 128);
+    }
+
+    #[test]
+    fn parse_defaults_and_flags() {
+        let cfg = EngineConfig::parse("").expect("empty spec");
+        assert_eq!(cfg.inject_window, 1);
+        assert_eq!(cfg.workers, None);
+        assert_eq!(cfg.peer, PeerMode::Off);
+
+        let cfg = EngineConfig::parse("peer,busy").expect("flags");
+        assert_eq!(cfg.peer, PeerMode::Deterministic);
+        assert!(cfg.measure_busy);
+    }
+
+    #[test]
+    fn parse_rejects_typos() {
+        assert!(EngineConfig::parse("injekt=4").is_err());
+        assert!(EngineConfig::parse("workers").is_err());
+        assert!(EngineConfig::parse("window=abc").is_err());
+        assert!(EngineConfig::parse("peer=sideways").is_err());
+    }
+
+    #[test]
+    fn builder_clamps() {
+        let cfg = EngineConfig::new().with_inject_window(0).with_workers(0).with_window(0);
+        assert_eq!(cfg.inject_window, 1);
+        assert_eq!(cfg.workers, Some(1));
+        assert_eq!(cfg.window, 1);
+    }
+}

@@ -36,11 +36,19 @@ pub struct LocalEngine {
     /// `engine_throughput` bench uses this to report the before/after of
     /// the zero-copy data plane; leave `false` everywhere else.
     pub deep_copy_broadcast: bool,
+    /// Source events injected per quiescence barrier. 1 (default) is the
+    /// classic inject-drain-inject loop; `w > 1` routes a batch of `w`
+    /// source events (each stamped with its own source count so delayed
+    /// streams mature identically) before draining once — the golden
+    /// reference for the cluster engine's pipelined injection at the
+    /// same window. Delayed-stream release stays per event; only the
+    /// drain cadence coarsens.
+    pub inject_window: usize,
 }
 
 impl Default for LocalEngine {
     fn default() -> Self {
-        LocalEngine { measure_busy: false, deep_copy_broadcast: false }
+        LocalEngine { measure_busy: false, deep_copy_broadcast: false, inject_window: 1 }
     }
 }
 
@@ -86,6 +94,24 @@ impl LocalEngine {
         self
     }
 
+    /// Inject up to `n` source events per quiescence barrier.
+    pub fn with_inject_window(mut self, n: usize) -> Self {
+        self.inject_window = n.max(1);
+        self
+    }
+
+    /// Build from the unified [`super::EngineConfig`] (reads
+    /// `measure_busy`, `deep_copy_broadcast` and `inject_window`; the
+    /// sequential engine has no channels, workers or checkpoints, so the
+    /// remaining knobs do not apply).
+    pub fn from_config(cfg: &super::EngineConfig) -> Self {
+        LocalEngine {
+            measure_busy: cfg.measure_busy,
+            deep_copy_broadcast: cfg.deep_copy_broadcast,
+            inject_window: cfg.inject_window.max(1),
+        }
+    }
+
     /// Run `topology`, injecting `source` events on `entry`, and return
     /// engine metrics. `source` yields (key, event) pairs; each yielded
     /// event counts as one source instance for delay bookkeeping.
@@ -113,6 +139,8 @@ impl LocalEngine {
         let mut queue: VecDeque<Delivery> = VecDeque::new();
         let started = Instant::now();
 
+        let inject = self.inject_window.max(1);
+        let mut batched = 0usize;
         for event in source {
             metrics.source_instances += 1;
             let now = metrics.source_instances;
@@ -125,6 +153,15 @@ impl LocalEngine {
             self.route(
                 topology, &mut rt, &mut metrics, entry, 0, event, &mut queue, &mut delayed, now,
             );
+            batched += 1;
+            if batched >= inject {
+                self.drain(topology, &mut rt, &mut metrics, &mut queue, &mut delayed, now);
+                on_drain(&mut rt.instances);
+                batched = 0;
+            }
+        }
+        if batched > 0 {
+            let now = metrics.source_instances;
             self.drain(topology, &mut rt, &mut metrics, &mut queue, &mut delayed, now);
             on_drain(&mut rt.instances);
         }
@@ -321,6 +358,34 @@ mod tests {
             total = inst[0].iter().map(|p| p.mem_bytes()).sum();
         });
         assert_eq!(total, 40); // 10 events × 4 instances
+    }
+
+    #[test]
+    fn inject_window_coarsens_drain_cadence_only() {
+        let build = || {
+            let mut b = TopologyBuilder::new("t");
+            let a = b.add_processor("a", 1, |_| Box::new(Counter { seen: 0, out: None }));
+            let entry = b.stream("src", None, a, Grouping::Shuffle);
+            (b.build(), entry)
+        };
+
+        let (topo, entry) = build();
+        let mut drains = 0u32;
+        let m = LocalEngine::new().with_inject_window(8).run(
+            &topo,
+            entry,
+            (0..20).map(inst_event),
+            |_| drains += 1,
+        );
+        assert_eq!(m.source_instances, 20);
+        assert_eq!(m.streams[0].events, 20);
+        // Two full batches (8, 16), one partial (20), one post-shutdown.
+        assert_eq!(drains, 4);
+
+        let (topo, entry) = build();
+        let base = LocalEngine::new().run(&topo, entry, (0..20).map(inst_event), |_| {});
+        assert_eq!(base.streams[0].events, m.streams[0].events);
+        assert_eq!(base.streams[0].bytes, m.streams[0].bytes);
     }
 
     #[test]

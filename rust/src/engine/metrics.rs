@@ -44,6 +44,14 @@ pub struct FlowControlMetrics {
     pub peer_link_stalls: u64,
     /// Wall time spent in those per-link stalls.
     pub peer_link_stall_ns: u64,
+    /// Cluster pipelined injection (`with_inject_window` > 1): windowed
+    /// `FRAME_INJECT` frames shipped — each one replaces `inject_events /
+    /// inject_frames` per-event coordinator round trips on average.
+    pub inject_frames: u64,
+    /// Deliveries carried inside those injection frames. Every one still
+    /// holds a unit of the destination worker's in-flight window (the
+    /// credit-based backpressure contract is per event, not per frame).
+    pub inject_events: u64,
     /// Batch buffers recycled through the arena (vs fresh allocations
     /// in `arena_allocs`).
     pub arena_reuses: u64,

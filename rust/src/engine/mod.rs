@@ -50,6 +50,50 @@
 //! per-link FIFO plus conserved per-stream totals. Per-link traffic and
 //! window stalls land in [`metrics::PeerLinkMetrics`].
 //!
+//! Two injection/routing refinements ride on top of the peer plane:
+//!
+//! * **Pipelined source injection** (`with_inject_window(w)`, local +
+//!   cluster): up to `w` source events are injected between quiescence
+//!   barriers instead of one. On [`LocalEngine`] this only coarsens the
+//!   drain cadence (the golden reference for the same `w`); on
+//!   [`ClusterEngine`] the coordinator additionally coalesces each
+//!   batch's same-worker runs into single `FRAME_INJECT` wire frames, so
+//!   coordinator data round trips drop from `n` to as low as `n / w`
+//!   while every injected delivery still holds one unit of the
+//!   destination worker's credit window. Frame/event counts land in
+//!   [`metrics::FlowControlMetrics`] (`inject_frames`/`inject_events`).
+//!   `w = 1` (the default) is the classic per-event pump and is
+//!   bit-identical to runs that never heard of the knob.
+//! * **Peer-routed Shuffle streams**: a Shuffle-grouped stream with
+//!   destination parallelism > 1 is peer-eligible when its emitting
+//!   processor has parallelism 1 (the sole emitter's local round-robin
+//!   cursor *is* the global cursor). The Routes frame seeds each
+//!   worker's cursor and flags eligibility; workers then advance their
+//!   seeded cursors identically to the coordinator's mirror, so
+//!   deterministic mode stays bit-identical to [`LocalEngine`] while
+//!   shuffle traffic flows worker↔worker. Multi-emitter shuffles keep
+//!   the coordinator detour (their global cursor is inherently
+//!   coordinator state).
+//!
+//! # One configuration surface: [`EngineConfig`]
+//!
+//! All of the knobs above — and the threaded/recovery ones below — live
+//! on one builder, [`config::EngineConfig`], which every engine accepts
+//! via `from_config` (each engine reads the fields it understands and
+//! ignores the rest; see the ownership table in [`config`]):
+//!
+//! ```no_run
+//! use samoa::engine::{ClusterEngine, EngineConfig, ThreadedEngine};
+//! let cfg = EngineConfig::new().with_workers(4).with_inject_window(32);
+//! let clustered = ClusterEngine::from_config(&cfg);
+//! let threaded = ThreadedEngine::from_config(&cfg);
+//! ```
+//!
+//! [`EngineConfig::parse`] accepts the same surface as a comma-separated
+//! spec string (`"workers=4,window=256,inject=32,peer=det,tcp"`) for the
+//! CLI path. The historical per-engine `with_*` methods survive as thin
+//! wrappers over the same fields.
+//!
 //! # Criterion kernel backend (orthogonal to engine choice)
 //!
 //! Whatever engine runs the topology, the numeric hot loops inside the
@@ -158,7 +202,11 @@
 //!   double-count). Recovery is bit-identical whenever the log covered
 //!   the whole delta; evictions are counted in
 //!   [`metrics::RecoveryMetrics::replay_dropped`] and make the run
-//!   approximate (the documented replay tolerance).
+//!   approximate (the documented replay tolerance). Pipelined injection
+//!   changes nothing here: the coordinator logs every delivery inside a
+//!   `FRAME_INJECT` batch individually (marked replied together when the
+//!   batch reply lands), and recovery re-drives survivors as ordinary
+//!   per-event deliveries — replayed-batch accounting is exact.
 //! * **Counters** — checkpoints/bytes/kills/restores/replayed/dropped
 //!   land in `EngineMetrics::recovery`; `samoa exp recovery` prices
 //!   checkpoint interval × kill rate against accuracy and throughput.
@@ -170,6 +218,7 @@
 
 pub mod metrics;
 pub mod checkpoint;
+pub mod config;
 pub mod local;
 pub mod threaded;
 pub mod cluster;
@@ -177,6 +226,7 @@ pub mod simtime;
 
 pub use checkpoint::CheckpointStore;
 pub use cluster::{ClusterEngine, ClusterRun, InstanceReport, PeerMode};
+pub use config::EngineConfig;
 pub use local::LocalEngine;
 pub use metrics::EngineMetrics;
 pub use simtime::{SimCostModel, SimTimeEngine};

@@ -377,6 +377,27 @@ impl ThreadedEngine {
         self.restore_frames = frames;
         self
     }
+
+    /// Build from the unified [`super::EngineConfig`]. Reads every
+    /// threaded-engine knob (channels, batching, workers, checkpoints,
+    /// fault injection, restore frames); cluster-only fields (`window`,
+    /// `peer`, `inject_window`, sockets) do not apply here. Note the
+    /// config default `replay_cap` is the cluster-sized 65536, not this
+    /// engine's historical 4096 — a config-built engine gets the config's
+    /// value.
+    pub fn from_config(cfg: &super::EngineConfig) -> Self {
+        ThreadedEngine {
+            queue_capacity: cfg.queue_capacity,
+            batch_size: cfg.batch_size.max(1),
+            adaptive_batch: cfg.adaptive_batch,
+            workers: cfg.workers,
+            deep_copy_broadcast: cfg.deep_copy_broadcast,
+            checkpoint_every: cfg.checkpoint_every,
+            replay_cap: cfg.replay_cap.max(1),
+            fault: cfg.fault,
+            restore_frames: cfg.restore_frames.clone(),
+        }
+    }
 }
 
 /// Routing state shared by all worker threads.

@@ -24,17 +24,25 @@
 //! calibration identity.
 //!
 //! Knobs: `--n` instances (default 20000), `--workers` (default 2),
-//! `--window` (default 128), `--stream` twin for the workload rows
-//! (default elec), `--tcp` loopback TCP instead of Unix sockets,
-//! `--threads` worker threads instead of processes, `--smoke` tiny
-//! sweep for CI, `--peer [det|fast]` worker↔worker data links (the
-//! workload table gains peer-lane columns and a per-link breakdown,
-//! and the `relay` row asserts that its key-routed hop left the
-//! coordinator's data lane entirely).
+//! `--window` (default 128), `--inject` source-injection window
+//! (default 1; > 1 batches source events into `FRAME_INJECT` frames),
+//! `--stream` twin for the workload rows (default elec), `--tcp`
+//! loopback TCP instead of Unix sockets, `--threads` worker threads
+//! instead of processes, `--smoke` tiny sweep for CI, `--peer
+//! [det|fast]` worker↔worker data links (the workload table gains
+//! peer-lane columns and a per-link breakdown, and the `relay` row
+//! asserts that its key-routed hop left the coordinator's data lane
+//! entirely — with `--inject N` it additionally asserts the source
+//! events shipped in ≤ ⌈n/N⌉ coordinator round trips).
+//!
+//! All knobs funnel through one [`EngineConfig`] spec string
+//! (`workers=..,window=..,inject=..`), parsed by
+//! [`EngineConfig::parse`] — the same surface scripted sweeps use.
 
 use crate::common::cli::Args;
 use crate::core::instance::{Instance, Label};
 use crate::engine::cluster::{spec, ClusterEngine, ClusterRun, PeerMode};
+use crate::engine::EngineConfig;
 use crate::engine::simtime::SimCostModel;
 use crate::streams::StreamSource;
 use crate::topology::Event;
@@ -88,16 +96,19 @@ pub fn cluster(args: &Args) -> crate::Result<()> {
     let n: u64 = args.u64("n", if smoke { 4_000 } else { 20_000 });
     let workers = args.usize("workers", 2);
     let window = args.usize("window", 128);
+    let inject = args.usize("inject", 1);
     let stream_name = args.get_or("stream", "elec").to_string();
     let threads = args.flag("threads");
     let peer = PeerMode::parse(args.get("peer"))?;
-    let mut eng = ClusterEngine::new()
-        .with_workers(workers)
-        .with_window(window)
-        .with_peer(peer);
+    // Exercise the unified config surface end-to-end: compose the CLI
+    // knobs into one spec string and parse it back, exactly as a
+    // scripted sweep would.
+    let mut cfg_spec = format!("workers={workers},window={window},inject={inject}");
     if args.flag("tcp") {
-        eng = eng.over_tcp();
+        cfg_spec.push_str(",tcp");
     }
+    let cfg = EngineConfig::parse(&cfg_spec)?.with_peer(peer);
+    let eng = ClusterEngine::from_config(&cfg);
 
     // ---------------------------------------------- 1. wire-cost sweep
     let dims: &[usize] = if smoke { &[0, 64] } else { &[0, 16, 64, 256, 1024] };
@@ -203,12 +214,33 @@ pub fn cluster(args: &Args) -> crate::Result<()> {
                 // key-routed fwd→sink delivery ships worker→worker, and
                 // the per-link counters must be populated.
                 crate::ensure!(
-                    c.data_frames == n && c.peer_frames() == n && !c.peer_links.is_empty(),
+                    c.peer_frames() == n && !c.peer_links.is_empty(),
                     "cluster relay under --peer: key-routed deliveries must bypass the \
                      coordinator (data frames {}, peer frames {})",
                     c.data_frames,
                     c.peer_frames()
                 );
+                if inject <= 1 {
+                    crate::ensure!(
+                        c.data_frames == n,
+                        "cluster relay under --peer: expected one data frame per source \
+                         event, got {}",
+                        c.data_frames
+                    );
+                } else {
+                    // Pipelined injection: all n source events target fwd
+                    // instance 0, so they coalesce into windowed batches —
+                    // at most ⌈n/inject⌉ coordinator data round trips.
+                    crate::ensure!(
+                        c.data_frames <= n.div_ceil(inject as u64)
+                            && run.metrics.flow.inject_frames > 0,
+                        "cluster relay under --peer --inject {inject}: expected ≤ {} \
+                         batched data frames, got {} ({} inject frames)",
+                        n.div_ceil(inject as u64),
+                        c.data_frames,
+                        run.metrics.flow.inject_frames
+                    );
+                }
             }
             for l in &c.peer_links {
                 link_rows.push(vec![
@@ -245,7 +277,8 @@ pub fn cluster(args: &Args) -> crate::Result<()> {
     }
     print_table(
         &format!(
-            "cluster workloads ({n} inst, {workers} workers, window {window}, peer {peer:?})"
+            "cluster workloads ({n} inst, {workers} workers, window {window}, \
+             inject {inject}, peer {peer:?})"
         ),
         &[
             "spec",

@@ -26,7 +26,10 @@
 //! worker↔worker links are live: the cluster leg switches to the
 //! `relay` spec (whose key-routed hop rides the peer plane — the
 //! victim hosts both the peer sender and a sink), and the recovered
-//! shard is degraded back to coordinator routing.
+//! shard is degraded back to coordinator routing. `--inject N` drives
+//! the cluster leg with pipelined injection (the kill then lands with
+//! a `FRAME_INJECT` batch in flight, exercising batched replay), and
+//! `--tcp` runs the cluster leg over TCP loopback.
 
 use crate::common::cli::Args;
 use crate::engine::cluster::{spec, ClusterEngine, PeerMode};
@@ -165,14 +168,19 @@ pub fn recovery(args: &Args) -> crate::Result<()> {
     } else {
         format!("relay:p={p}:die={die}:victim=0")
     };
+    let inject = args.usize("inject", 1);
     let intervals: &[u64] = if smoke { &[64] } else { &[64, 256, 1024] };
     let mut rows: Vec<Vec<String>> = Vec::new();
     for &interval in intervals {
-        let eng = ClusterEngine::new()
+        let mut eng = ClusterEngine::new()
             .with_workers(p)
             .with_checkpoints(interval)
             .with_replay_cap(replay_cap)
+            .with_inject_window(inject)
             .with_peer(peer);
+        if args.flag("tcp") {
+            eng = eng.over_tcp();
+        }
         let make = || {
             Box::new((0..n).map(|id| Event::Instance {
                 id,

@@ -597,6 +597,17 @@ pub const FRAME_PEER_ADDR: u8 = 15;
 /// Coordinator → worker: a peer was respawned after a death — stop
 /// shipping to it (out-of-band, like `FRAME_PEER_SCHED`).
 pub const FRAME_PEER_DOWN: u8 = 16;
+/// Coordinator → worker: a windowed source-injection frame carrying a
+/// run of consecutive data deliveries for this worker in one round trip
+/// (pipelined injection; consumes exactly one `wseq` slot).
+pub const FRAME_INJECT: u8 = 17;
+/// Worker → coordinator: reply to a `FRAME_INJECT` frame — one emission
+/// group per injected event, in delivery order. Each group is encoded
+/// exactly like the body of an ordinary emissions reply (`[count: u32]`
+/// followed by flat or tagged entries, depending on peer mode), so the
+/// coordinator routes the batch bit-identically to the equivalent
+/// sequence of per-event replies.
+pub const FRAME_INJECT_EMS: u8 = 18;
 
 /// Encode one worker→worker peer delivery frame body:
 /// `[FRAME_PEER][lseq: u64][pid: u16][iid: u16][event]`.
@@ -654,6 +665,41 @@ pub fn decode_peer_sched(buf: &[u8]) -> Result<Vec<(u64, u8)>> {
     }
     crate::ensure!(r.remaining() == 0, "peer sched: {} trailing bytes", r.remaining());
     Ok(out)
+}
+
+/// Encode a windowed source-injection frame body:
+/// `[FRAME_INJECT][wseq: u64][n: u32][(pid: u16, iid: u16, event) × n]`.
+/// One frame carries a run of consecutive data deliveries bound for the
+/// same worker, in global delivery order; the worker processes them in
+/// order and answers with a single [`FRAME_INJECT_EMS`] reply.
+pub fn encode_inject_frame(wseq: u64, events: &[(u16, u16, Event)]) -> Vec<u8> {
+    let mut b =
+        Vec::with_capacity(13 + events.iter().map(|(_, _, e)| 4 + e.wire_bytes()).sum::<usize>());
+    put_u8(&mut b, FRAME_INJECT);
+    put_u64(&mut b, wseq);
+    put_u32(&mut b, events.len() as u32);
+    for (pid, iid, e) in events {
+        put_u16(&mut b, *pid);
+        put_u16(&mut b, *iid);
+        encode_event(e, &mut b);
+    }
+    b
+}
+
+/// Decode a windowed source-injection frame body. Rejects a wrong kind
+/// byte, truncation anywhere, and trailing garbage after the last event.
+pub fn decode_inject_frame(buf: &[u8]) -> Result<(u64, Vec<(u16, u16, Event)>)> {
+    let mut r = Reader::new(buf);
+    let kind = r.u8()?;
+    crate::ensure!(kind == FRAME_INJECT, "inject frame: wrong kind {kind}");
+    let wseq = r.u64()?;
+    let n = r.len(5)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push((r.u16()?, r.u16()?, r.event()?));
+    }
+    crate::ensure!(r.remaining() == 0, "inject frame: {} trailing bytes", r.remaining());
+    Ok((wseq, out))
 }
 
 #[cfg(test)]
@@ -733,5 +779,46 @@ mod tests {
         put_u32(&mut bytes, 0);
         put_u32(&mut bytes, u32::MAX);
         assert!(decode_event(&bytes).is_err());
+    }
+
+    #[test]
+    fn inject_frame_roundtrip() {
+        let events = vec![
+            (3u16, 1u16, Event::Instance {
+                id: 9,
+                inst: Instance::dense(vec![0.5, -1.0], Label::Class(1)),
+            }),
+            (3u16, 0u16, Event::Instance {
+                id: 10,
+                inst: Instance::sparse(vec![1, 4], vec![2.0, -0.5], 8, Label::None),
+            }),
+            (0u16, 2u16, Event::Shutdown),
+        ];
+        let frame = encode_inject_frame(41, &events);
+        let (wseq, decoded) = decode_inject_frame(&frame).expect("decode inject");
+        assert_eq!(wseq, 41);
+        assert_eq!(decoded.len(), events.len());
+        for ((ap, ai, ae), (bp, bi, be)) in events.iter().zip(&decoded) {
+            assert_eq!((ap, ai), (bp, bi));
+            assert_same(ae, be);
+        }
+    }
+
+    #[test]
+    fn inject_frame_rejects_corruption() {
+        let events = vec![(1u16, 0u16, Event::Instance {
+            id: 3,
+            inst: Instance::dense(vec![1.0], Label::None),
+        })];
+        let frame = encode_inject_frame(7, &events);
+        for cut in 0..frame.len() {
+            assert!(decode_inject_frame(&frame[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        let mut wrong_kind = frame.clone();
+        wrong_kind[0] = FRAME_PEER;
+        assert!(decode_inject_frame(&wrong_kind).is_err(), "wrong kind");
+        let mut trailing = frame;
+        trailing.push(0);
+        assert!(decode_inject_frame(&trailing).is_err(), "trailing byte");
     }
 }

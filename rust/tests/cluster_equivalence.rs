@@ -398,6 +398,133 @@ fn vht_peer_fast_conserves_totals() {
     }
 }
 
+// ------------------------------------- peer-routed Shuffle + injection
+//
+// The rr-cursor activation: a Shuffle stream with parallelism > 1 and a
+// sole emitter routes on the worker's seeded round-robin cursor and
+// ships peer-to-peer. Deterministic mode must reproduce the local
+// engine's round-robin split bit-for-bit at every worker count.
+
+fn relay_source(n: u64) -> impl Iterator<Item = Event> {
+    use samoa::core::instance::{Instance, Label};
+    (0..n).map(|id| Event::Instance { id, inst: Instance::dense(vec![0.25; 8], Label::None) })
+}
+
+#[test]
+fn relay_shuffle_peer_det_bit_identical_to_local() {
+    use samoa::engine::cluster::spec;
+    let n = 2_000u64;
+    for p in [2usize, 4] {
+        let spec_str = format!("relay:p={p}:g=shuffle");
+        let (topo, entry) = spec::build(&spec_str).expect("relay spec");
+        let mut local_seen: Vec<f64> = Vec::new();
+        let local = LocalEngine::new().run(&topo, entry, relay_source(n), |instances| {
+            local_seen = instances[1]
+                .iter()
+                .map(|s| s.report().iter().find(|(k, _)| *k == "seen").map_or(0.0, |(_, v)| *v))
+                .collect();
+        });
+        assert_eq!(local_seen.iter().sum::<f64>(), n as f64, "local shuffle lost events");
+
+        for workers in [1usize, 2, 4] {
+            let (topo2, entry2) = spec::build(&spec_str).expect("relay spec");
+            let run = ClusterEngine::new()
+                .with_workers(workers)
+                .with_peer(PeerMode::Deterministic)
+                .run(&topo2, entry2, relay_source(n))
+                .expect("peer cluster run");
+
+            let label = format!("relay shuffle p={p} workers={workers}");
+            assert_streams_identical(&local, &run, &label);
+            for (i, &seen) in local_seen.iter().enumerate() {
+                assert_eq!(run.kv(1, i, "seen"), Some(seen), "{label}: sink {i} rr split");
+            }
+            if workers > 1 {
+                assert!(
+                    run.metrics.cluster.peer_frames() > 0,
+                    "{label}: shuffle hop must ride the peer plane"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn vht_pipelined_injection_matches_local_at_same_window() {
+    // Pipelined injection changes the delivery interleaving, so the
+    // equivalence contract is cluster@w == local at the SAME injection
+    // window: both engines release the barrier every 8 source events.
+    let schema = RandomTreeGenerator::new(5, 5, 2, SEED).schema().clone();
+    let config = vht_config(2);
+    let (topo, handles) = vht::build_topology(&schema, &config, {
+        let schema = schema.clone();
+        move |_| {
+            let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+            Box::new(EvaluatorProcessor { sink })
+        }
+    });
+    let ev = handles.evaluator.0;
+    let mut local_acc = None;
+    let local = LocalEngine::new().with_inject_window(8).run(
+        &topo,
+        handles.entry,
+        vht_source(N),
+        |instances| {
+            local_acc = instances[ev][0]
+                .report()
+                .iter()
+                .find(|(k, _)| *k == "accuracy")
+                .map(|(_, v)| *v);
+        },
+    );
+
+    for workers in [1usize, 2, 4] {
+        let (topo2, h2) = vht::build_topology(&schema, &config, {
+            let schema = schema.clone();
+            move |_| {
+                let sink = EvalSink::new(schema.n_classes(), 1.0, u64::MAX);
+                Box::new(EvaluatorProcessor { sink })
+            }
+        });
+        let run = ClusterEngine::new()
+            .with_workers(workers)
+            .with_inject_window(8)
+            .run(&topo2, h2.entry, vht_source(N))
+            .expect("injected cluster run");
+
+        let label = format!("vht inject=8 workers={workers}");
+        assert_streams_identical(&local, &run, &label);
+        assert_eq!(run.kv(h2.evaluator.0, 0, "accuracy"), local_acc, "{label}: accuracy");
+        assert!(run.metrics.flow.inject_frames > 0, "{label}: FRAME_INJECT batches shipped");
+    }
+}
+
+#[test]
+fn worker_kill_recovers_with_pipelined_injection_in_flight() {
+    // A worker dies while FRAME_INJECT batches are in flight: the
+    // coordinator must skip the dead worker's batched pendings, re-drive
+    // their replay-log entries individually, and finish with every
+    // delivery accounted for. The engine is built through EngineConfig
+    // to exercise the unified surface end-to-end.
+    use samoa::engine::cluster::spec;
+    use samoa::engine::EngineConfig;
+    let n = 2_000u64;
+    let (topo, entry) = spec::build("relay:p=2:die=400:victim=0").expect("relay spec");
+    let cfg = EngineConfig::parse("workers=2,inject=8,ckpt=64").expect("config spec");
+    let run = ClusterEngine::from_config(&cfg)
+        .run(&topo, entry, relay_source(n))
+        .expect("recovering cluster run");
+
+    let r = &run.metrics.recovery;
+    assert_eq!(r.kills, 1, "injected worker death must fire");
+    assert!(r.replayed > 0, "replay log must re-drive the lost delta");
+    assert_eq!(r.replay_dropped, 0, "replay cap must cover the delta");
+    assert!(run.metrics.flow.inject_frames > 0, "kill must land with batches in flight");
+    let seen: f64 = (0..2).map(|i| run.kv(1, i, "seen").unwrap_or(0.0)).sum();
+    assert_eq!(seen, n as f64, "every delivery accounted for after recovery");
+    assert_eq!(run.kv(0, 0, "relayed"), Some(n as f64), "fwd state restored + replayed");
+}
+
 // ------------------------------------------- backpressure window (small)
 
 #[test]

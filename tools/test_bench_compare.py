@@ -9,8 +9,9 @@ Covers the two boundary states the gate must not error on:
   * an empty (or missing) baseline dir — "no baseline, seeding", exit 0;
   * a single committed baseline file — trajectory table with one PR
     column, the regression gate armed against it;
-plus the multi-prefix gate ("tput/,kern/,clu/") that CI uses once the
-kernel and cluster data-plane benches joined the trajectory.
+plus the multi-prefix gate ("tput/,kern/,clu/,fig/") that CI uses once
+the kernel, cluster data-plane and VHT-scaling benches joined the
+trajectory.
 """
 
 import json
@@ -23,7 +24,7 @@ import unittest
 SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_compare.py")
 
 
-def write_current(path, rate, kern_rate=None, clu_rate=None):
+def write_current(path, rate, kern_rate=None, clu_rate=None, fig_rate=None):
     rows = [
         {"name": "tput/engine_throughput", "items_per_s": rate},
         {"name": "other/ignored", "items_per_s": 1.0},
@@ -33,17 +34,21 @@ def write_current(path, rate, kern_rate=None, clu_rate=None):
         rows.append({"name": "kern/infogain_simd_a256", "items_per_s": kern_rate})
     if clu_rate is not None:
         rows.append({"name": "clu/relay w=2 peer-det", "items_per_s": clu_rate})
+    if fig_rate is not None:
+        rows.append({"name": "fig/vht_wok p=4", "items_per_s": fig_rate})
     with open(path, "w", encoding="utf-8") as fh:
         for row in rows:
             fh.write(json.dumps(row) + "\n")
 
 
-def write_baseline(dirpath, pr, rate, kern_rate=None, clu_rate=None):
+def write_baseline(dirpath, pr, rate, kern_rate=None, clu_rate=None, fig_rate=None):
     results = [{"name": "tput/engine_throughput", "items_per_s": rate}]
     if kern_rate is not None:
         results.append({"name": "kern/infogain_simd_a256", "items_per_s": kern_rate})
     if clu_rate is not None:
         results.append({"name": "clu/relay w=2 peer-det", "items_per_s": clu_rate})
+    if fig_rate is not None:
+        results.append({"name": "fig/vht_wok p=4", "items_per_s": fig_rate})
     doc = {"results": results}
     with open(os.path.join(dirpath, f"BENCH_PR{pr}.json"), "w", encoding="utf-8") as fh:
         json.dump(doc, fh)
@@ -162,6 +167,35 @@ class MultiPrefix(unittest.TestCase):
             os.mkdir(perf)
             write_baseline(perf, 9, 1e6)  # no clu rows yet
             res = run_gate(current, perf, "--prefix", "tput/,kern/,clu/")
+            self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+
+    def test_fig_rows_gated_only_with_fig_prefix(self):
+        # the VHT-scaling rows (fig/) gate exactly like tput/kern/clu
+        # once CI's prefix list includes them — and not before
+        with tempfile.TemporaryDirectory() as td:
+            current = os.path.join(td, "bench.jsonl")
+            # tput healthy, scaling bench collapsed to -50%
+            write_current(current, 1e6, fig_rate=0.5e6)
+            perf = os.path.join(td, "perf")
+            os.mkdir(perf)
+            write_baseline(perf, 10, 1e6, fig_rate=1e6)
+            res = run_gate(current, perf, "--prefix", "tput/,kern/,clu/")
+            self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
+            self.assertNotIn("fig/vht_wok p=4", res.stdout)
+            res = run_gate(current, perf, "--prefix", "tput/,kern/,clu/,fig/")
+            self.assertEqual(res.returncode, 1, res.stdout + res.stderr)
+            self.assertIn("fig/vht_wok p=4", res.stdout)
+            self.assertIn("REGRESSION", res.stdout)
+
+    def test_fig_row_missing_from_baseline_is_not_an_error(self):
+        # first run after the fig benches land: baseline predates fig/
+        with tempfile.TemporaryDirectory() as td:
+            current = os.path.join(td, "bench.jsonl")
+            write_current(current, 1e6, fig_rate=1e6)
+            perf = os.path.join(td, "perf")
+            os.mkdir(perf)
+            write_baseline(perf, 10, 1e6)  # no fig rows yet
+            res = run_gate(current, perf, "--prefix", "tput/,kern/,clu/,fig/")
             self.assertEqual(res.returncode, 0, res.stdout + res.stderr)
 
     def test_kern_row_missing_from_baseline_is_not_an_error(self):
